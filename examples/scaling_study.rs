@@ -1,0 +1,104 @@
+//! Scaling study — emits the Fig. 9 dataset: live strong-scaling
+//! measurements on the in-process testbed (reduced size) and the modeled
+//! projection at paper scale (256^3 cube, batch 256, sphere d=128, up to
+//! 1024 GPUs), as CSV on stdout.
+//!
+//! Run: `cargo run --release --example scaling_study > fig9.csv`
+
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{NonBatchedLoop, PencilPlan, PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::model::{fig9_row, grid_2d, Machine, Variant, Workload};
+use fftb::util::stats::bench;
+
+fn main() {
+    // ------------------------------------------------ live, reduced size
+    let n = 32usize;
+    let nb = 8usize;
+    let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+
+    println!("# section,live");
+    println!("p,slab1d_batched_s,slab1d_nonbatched_s,pencil2d_batched_s,planewave_s");
+    for p in [1usize, 2, 4, 8] {
+        let off2 = Arc::clone(&off);
+        let rows = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+            let backend = RustFftBackend::new();
+            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
+            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
+            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+
+            let input = phased(slab.input_len(), 3);
+            let t_slab = bench(2, 5, || {
+                let _ = slab.forward(&backend, input.clone());
+            })
+            .mean()
+            .as_secs_f64();
+            let t_loop = bench(1, 3, || {
+                let _ = looped.forward(&backend, input.clone());
+            })
+            .mean()
+            .as_secs_f64();
+            let pw_in = phased(pw.input_len(), 5);
+            let t_pw = bench(2, 5, || {
+                let _ = pw.forward(&backend, pw_in.clone());
+            })
+            .mean()
+            .as_secs_f64();
+
+            // 2D grid where the rank count factors.
+            let (p0, p1) = grid_2d(p);
+            let t_pencil = if p0 > 1 || p1 > 1 {
+                let g2 = ProcGrid::new(&[p0, p1], comm).unwrap();
+                let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2));
+                let pin = phased(pencil.input_len(), 6);
+                bench(2, 5, || {
+                    let _ = pencil.forward(&backend, pin.clone());
+                })
+                .mean()
+                .as_secs_f64()
+            } else {
+                t_slab
+            };
+            (t_slab, t_loop, t_pencil, t_pw)
+        });
+        let worst = |f: fn(&(f64, f64, f64, f64)) -> f64| {
+            rows.iter().map(f).fold(0.0, f64::max)
+        };
+        println!(
+            "{p},{:.6},{:.6},{:.6},{:.6}",
+            worst(|r| r.0),
+            worst(|r| r.1),
+            worst(|r| r.2),
+            worst(|r| r.3)
+        );
+    }
+
+    // ------------------------------------------- modeled, paper scale
+    let nn = 256usize;
+    let spec = SphereSpec::new([nn, nn, nn], 64.0, SphereKind::Centered);
+    let off = spec.offsets();
+    let w = Workload { shape: [nn, nn, nn], nb: 256, offsets: &off };
+    let m = Machine::perlmutter_a100();
+
+    println!("# section,modeled (perlmutter-a100 estimate)");
+    println!(
+        "p,{}",
+        Variant::all().map(|v| format!("{}_s", v.label())).join(",")
+    );
+    let mut p = 4;
+    while p <= 1024 {
+        let row = fig9_row(&w, p, &m);
+        println!(
+            "{p},{}",
+            row.iter().map(|t| format!("{t:.5}")).collect::<Vec<_>>().join(",")
+        );
+        p *= 2;
+    }
+}

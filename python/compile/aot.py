@@ -1,0 +1,75 @@
+"""AOT lowering: every L2 entry point -> HLO *text* + a JSON manifest.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids, which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage: `python -m compile.aot --out-dir ../artifacts` (from python/);
+`make artifacts` is the canonical entry and skips the build when inputs are
+unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # `{...}`, which the xla 0.5.1 text parser silently reads as zeros —
+    # the DFT matrices MUST be printed in full.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(n) for n in model.LINE_SIZES),
+        help="comma-separated line sizes to compile",
+    )
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"batch": args.batch, "entries": []}
+    for name, (fn, specs) in model.entries(sizes, args.batch).items():
+        text = lower_entry(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s.shape) for s in specs],
+            }
+        )
+        print(f"  lowered {name:>24} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} entries to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: batched 1D (zero-padded) DFT as MXU matmuls.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's per-GPU
+hot spot is cuFFT batched butterfly kernels. On TPU the natural shape of a
+batched line DFT for n <= ~256 is a dense contraction on the MXU systolic
+array: `(tile_b, m) @ (m, n)` with the (possibly sliced) DFT matrix resident
+in VMEM. Complex arithmetic runs on split re/im planes — four real matmuls —
+so the MXU sees plain f32 GEMMs.
+
+The same kernel implements the paper's *fused zero-pad + FFT* (Fig. 3):
+padding a length-m run to n at `offset` before an n-point DFT is exactly the
+(m x n) slice `W[offset:offset+m, :]` — so the padded elements never exist.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is estimated from the VMEM/MXU model in
+DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Batch tile: one program instance transforms TILE_B lines. Chosen so the
+# VMEM working set (tile panel + W + output, f32) stays far under 16 MiB:
+# 64*(2*256)*4 + 2*256*256*4 + 64*(2*256)*4 ~ 0.8 MiB at n=256.
+TILE_B = 64
+
+
+def _dft_kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    """One (TILE_B, m) panel x (m, n) DFT matrix -> (TILE_B, n) panel.
+
+    Complex multiply on split planes:
+        yr = xr @ wr - xi @ wi
+        yi = xr @ wi + xi @ wr
+    """
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    yr_ref[...] = jnp.dot(xr, wr, preferred_element_type=jnp.float32) - jnp.dot(
+        xi, wi, preferred_element_type=jnp.float32
+    )
+    yi_ref[...] = jnp.dot(xr, wi, preferred_element_type=jnp.float32) + jnp.dot(
+        xi, wr, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "offset", "forward"))
+def pad_dft_lines(x_ri, n: int, offset: int = 0, forward: bool = True):
+    """Batched fused pad+DFT of ri lines.
+
+    x_ri: (B, m, 2) float32, B a multiple of TILE_B (pad the tail tile with
+    zero lines upstream). Returns (B, n, 2). With m == n, offset == 0 this is
+    a plain batched DFT.
+    """
+    b, m, _ = x_ri.shape
+    assert b % TILE_B == 0, f"batch {b} must be a multiple of {TILE_B}"
+    assert offset + m <= n, "padded run exceeds line length"
+    w = ref.dft_pad_matrix(m, n, offset, forward)
+    wr = jnp.asarray(w.real, jnp.float32)
+    wi = jnp.asarray(w.imag, jnp.float32)
+    xr = x_ri[..., 0]
+    xi = x_ri[..., 1]
+
+    grid = (b // TILE_B,)
+    yr, yi = pl.pallas_call(
+        _dft_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, m), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=True,
+    )(xr, xi, wr, wi)
+    return jnp.stack([yr, yi], axis=-1)
+
+
+def dft_lines(x_ri, forward: bool = True):
+    """Plain batched DFT: (B, n, 2) -> (B, n, 2)."""
+    n = x_ri.shape[1]
+    return pad_dft_lines(x_ri, n=n, offset=0, forward=forward)
+
+
+def vmem_bytes(m: int, n: int, tile_b: int = TILE_B) -> int:
+    """VMEM working set of one program instance (f32)."""
+    return 4 * (2 * tile_b * m + 2 * m * n + 2 * tile_b * n)
+
+
+def mxu_flops(b: int, m: int, n: int) -> int:
+    """Real MACs issued to the MXU per call: 4 matmuls of (b, m) @ (m, n)."""
+    return 4 * 2 * b * m * n

@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Everything at the artifact boundary is float32 with a trailing re/im axis
+(`(..., 2)` "ri" layout): the rust `xla` crate has no complex NativeType, so
+complex never crosses the PJRT boundary. These helpers convert between the
+ri layout and jnp complex, and give the reference answers (`jnp.fft`) that
+every kernel and every AOT artifact is validated against.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Forward DFT uses exp(-2*pi*i/n) (numpy/paper convention); inverse is the
+# conjugate scaled by 1/n.
+
+
+def to_ri(c):
+    """complex (...,) -> float32 (..., 2)."""
+    return jnp.stack([jnp.real(c), jnp.imag(c)], axis=-1).astype(jnp.float32)
+
+
+def from_ri(x):
+    """float32 (..., 2) -> complex64 (...,)."""
+    return x[..., 0] + 1j * x[..., 1]
+
+
+def dft_matrix(n: int, forward: bool = True) -> np.ndarray:
+    """Dense DFT matrix W with W[j, k] = w_n^{jk}. y = x @ W matches
+    jnp.fft.fft(x) for row vectors x (complex128 for accuracy; cast where
+    consumed). The inverse matrix folds in the 1/n scale.
+    """
+    sign = -2j if forward else 2j
+    j = np.arange(n)
+    w = np.exp(sign * np.pi * np.outer(j, j) / n)
+    if not forward:
+        w = w / n
+    return w
+
+
+def dft_pad_matrix(m: int, n: int, offset: int, forward: bool = True) -> np.ndarray:
+    """The fused zero-pad + DFT operator (paper Fig. 3 insight, MXU form):
+
+    DFT_n of a length-n line that is zero outside `offset : offset+m` equals
+    the (m x n) slice W[offset:offset+m, :] applied to the m nonzeros —
+    the padding never materializes.
+    """
+    return dft_matrix(n, forward)[offset : offset + m, :]
+
+
+def fft_lines_ref(x_ri, forward: bool = True):
+    """Reference batched line FFT on ri data: (B, n, 2) -> (B, n, 2)."""
+    c = from_ri(x_ri)
+    y = jnp.fft.fft(c, axis=-1) if forward else jnp.fft.ifft(c, axis=-1)
+    return to_ri(y)
+
+
+def pad_fft_lines_ref(x_ri, n: int, offset: int, forward: bool = True):
+    """Reference fused pad+FFT: (B, m, 2) -> (B, n, 2)."""
+    c = from_ri(x_ri)
+    b, m = c.shape
+    z = jnp.zeros((b, n), dtype=c.dtype)
+    z = z.at[:, offset : offset + m].set(c)
+    y = jnp.fft.fft(z, axis=-1) if forward else jnp.fft.ifft(z, axis=-1)
+    return to_ri(y)
+
+
+def fft3d_ref(x_ri, forward: bool = True):
+    """Reference 3D FFT on ri data: (nx, ny, nz, 2), transform all 3 dims."""
+    c = from_ri(x_ri)
+    y = jnp.fft.fftn(c, axes=(0, 1, 2)) if forward else jnp.fft.ifftn(c, axes=(0, 1, 2))
+    return to_ri(y)

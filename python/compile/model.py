@@ -1,0 +1,107 @@
+"""L2: the per-rank local compute graphs, in JAX, calling the L1 kernels.
+
+The distributed FFTB plans (rust L3) hand every local transform to a
+backend as a contiguous batch of lines (see `rust/src/fftb/backend.rs`).
+The artifacts compiled here are exactly those batches:
+
+* ``fft{n}_{f,i}``   — batched line DFT, (B, n, 2) -> (B, n, 2), the hot
+  path of every plan stage. Dense MXU matmul for small n, four-step
+  factorization for large n.
+* ``padfft_{m}_{n}_{o}_{f}`` — fused zero-pad + DFT (the plane-wave staged
+  padding of Fig. 3), (B, m, 2) -> (B, n, 2).
+* ``slab_yz_{ny}_{nz}`` — a fused two-dimension local pipeline (FFT along
+  y then z of an (lx, ny, nz) slab), demonstrating stage fusion at the XLA
+  level: the transposes between the line batches fuse into the surrounding
+  copies instead of materializing in rust.
+
+Python runs ONCE at build time (`make artifacts`); none of this is on the
+request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dft_matmul, stockham
+
+# Artifact batch tile: every fft entry is compiled for this many lines.
+# The rust runtime loops full tiles and zero-pads the tail.
+BATCH = 64
+
+# Line lengths compiled by default: the FFT grid sizes of the paper's
+# experiments (256^3 cube, 128-diameter spheres) and the small sizes the
+# tests/examples use.
+LINE_SIZES = (8, 16, 32, 64, 128, 256)
+
+# Above this, the four-step factorization beats the dense matmul.
+FOUR_STEP_MIN = 128
+
+
+def factor_four_step(n: int):
+    """Pick n1*n2 = n with n1, n2 as square as possible (powers of 2)."""
+    n1 = 1
+    while n1 * n1 < n:
+        n1 *= 2
+    n2 = n // n1
+    assert n1 * n2 == n, f"n={n} not factorable as pow2 pair"
+    return n1, n2
+
+
+def fft_lines(x_ri, forward: bool = True):
+    """Batched line DFT, dispatching dense-matmul vs four-step by size."""
+    n = x_ri.shape[1]
+    if n >= FOUR_STEP_MIN and (n & (n - 1)) == 0:
+        n1, n2 = factor_four_step(n)
+        return stockham.four_step_dft_lines(x_ri, n1=n1, n2=n2, forward=forward)
+    return dft_matmul.dft_lines(x_ri, forward=forward)
+
+
+def pad_fft_lines(x_ri, n: int, offset: int, forward: bool = True):
+    """Fused zero-pad + DFT of batched runs (plane-wave z/y stages)."""
+    return dft_matmul.pad_dft_lines(x_ri, n=n, offset=offset, forward=forward)
+
+
+def slab_yz(x_ri, forward: bool = True):
+    """Local slab stage of the slab-pencil plan: FFT along y then z of an
+    (LX, ny, nz, 2) slab. The line batches run through the Pallas kernels;
+    XLA fuses the interleaving transposes.
+    """
+    lx, ny, nz, _ = x_ri.shape
+    # FFT along y: lines are (lx*nz, ny).
+    t = jnp.transpose(x_ri, (0, 2, 1, 3)).reshape(lx * nz, ny, 2)
+    t = fft_lines(t, forward)
+    t = t.reshape(lx, nz, ny, 2)
+    # FFT along z: lines are (lx*ny, nz).
+    t = jnp.transpose(t, (0, 2, 1, 3)).reshape(lx * ny, nz, 2)
+    t = fft_lines(t, forward)
+    return t.reshape(lx, ny, nz, 2)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point registry: name -> (function, example input shapes).
+# ---------------------------------------------------------------------------
+
+
+def entries(line_sizes=LINE_SIZES, batch=BATCH):
+    """All artifact entry points as {name: (fn, [input ShapeDtypeStructs])}."""
+    out = {}
+    f32 = jnp.float32
+    for n in line_sizes:
+        spec = jax.ShapeDtypeStruct((batch, n, 2), f32)
+        out[f"fft{n}_f"] = (lambda x, n=n: fft_lines(x, True), [spec])
+        out[f"fft{n}_i"] = (lambda x, n=n: fft_lines(x, False), [spec])
+    # One demonstration pad+FFT entry (m = n/2 run centred in the line, the
+    # d = n/2 sphere's largest column) per size, forward only.
+    for n in line_sizes:
+        m = n // 2
+        o = n // 4
+        spec = jax.ShapeDtypeStruct((batch, m, 2), f32)
+        out[f"padfft_{m}_{n}_{o}_f"] = (
+            lambda x, n=n, o=o: pad_fft_lines(x, n=n, offset=o, forward=True),
+            [spec],
+        )
+    # Fused local slab pipeline at a test-friendly size.
+    out["slab_yz_16_16"] = (
+        lambda x: slab_yz(x, True),
+        [jax.ShapeDtypeStruct((4, 16, 16, 2), f32)],
+    )
+    return out

@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal of the compile path: every artifact the
+rust runtime executes is one of these functions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dft_matmul, ref, stockham
+
+RTOL = 2e-4  # f32 kernels vs complex128-backed oracle
+ATOL = 1e-3
+
+
+def rand_ri(b, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((b, n, 2)).astype(np.float32)
+
+
+def assert_close(got, want, n):
+    scale = max(np.max(np.abs(want)), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL * scale
+    )
+
+
+# ---------------------------------------------------------------- dft_matmul
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64])
+@pytest.mark.parametrize("forward", [True, False])
+def test_dft_lines_matches_jnp_fft(n, forward):
+    x = rand_ri(dft_matmul.TILE_B, n, seed=n)
+    got = dft_matmul.dft_lines(x, forward=forward)
+    want = ref.fft_lines_ref(x, forward=forward)
+    assert_close(got, want, n)
+
+
+def test_dft_lines_multi_tile():
+    n = 16
+    x = rand_ri(3 * dft_matmul.TILE_B, n, seed=5)
+    got = dft_matmul.dft_lines(x, forward=True)
+    want = ref.fft_lines_ref(x, forward=True)
+    assert_close(got, want, n)
+
+
+def test_dft_lines_rejects_partial_tile():
+    with pytest.raises(AssertionError):
+        dft_matmul.dft_lines(rand_ri(dft_matmul.TILE_B + 1, 8))
+
+
+@pytest.mark.parametrize("m,n,o", [(4, 8, 0), (4, 8, 2), (8, 16, 4), (16, 32, 8)])
+def test_pad_dft_fuses_padding(m, n, o):
+    x = rand_ri(dft_matmul.TILE_B, m, seed=m + n + o)
+    got = dft_matmul.pad_dft_lines(x, n=n, offset=o, forward=True)
+    want = ref.pad_fft_lines_ref(x, n=n, offset=o, forward=True)
+    assert_close(got, want, n)
+
+
+def test_round_trip_forward_inverse():
+    n = 32
+    x = rand_ri(dft_matmul.TILE_B, n, seed=9)
+    y = dft_matmul.dft_lines(x, forward=True)
+    z = dft_matmul.dft_lines(np.asarray(y), forward=False)
+    np.testing.assert_allclose(np.asarray(z), x, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+    forward=st.booleans(),
+)
+def test_dft_lines_hypothesis_sweep(logn, seed, forward):
+    """Hypothesis sweep over shapes/directions against the oracle."""
+    n = 1 << logn
+    x = rand_ri(dft_matmul.TILE_B, n, seed=seed)
+    got = dft_matmul.dft_lines(x, forward=forward)
+    want = ref.fft_lines_ref(x, forward=forward)
+    assert_close(got, want, n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_exp=st.integers(1, 4),
+    n_exp=st.integers(3, 6),
+    seed=st.integers(0, 1000),
+    data=st.data(),
+)
+def test_pad_dft_hypothesis_sweep(m_exp, n_exp, seed, data):
+    m, n = 1 << m_exp, 1 << n_exp
+    if m > n:
+        m, n = n, m
+    o = data.draw(st.integers(0, n - m))
+    x = rand_ri(dft_matmul.TILE_B, m, seed=seed)
+    got = dft_matmul.pad_dft_lines(x, n=n, offset=o, forward=True)
+    want = ref.pad_fft_lines_ref(x, n=n, offset=o, forward=True)
+    assert_close(got, want, n)
+
+
+# ------------------------------------------------------------------ stockham
+
+
+@pytest.mark.parametrize("n1,n2", [(4, 4), (8, 8), (8, 16), (16, 16)])
+@pytest.mark.parametrize("forward", [True, False])
+def test_four_step_matches_jnp_fft(n1, n2, forward):
+    n = n1 * n2
+    x = rand_ri(stockham.TILE_B, n, seed=n)
+    got = stockham.four_step_dft_lines(x, n1=n1, n2=n2, forward=forward)
+    want = ref.fft_lines_ref(x, forward=forward)
+    assert_close(got, want, n)
+
+
+def test_four_step_equals_dense_matmul():
+    n1, n2 = 8, 8
+    n = n1 * n2
+    b = 64  # multiple of both TILE_Bs
+    x = rand_ri(b, n, seed=3)
+    a = stockham.four_step_dft_lines(x, n1=n1, n2=n2, forward=True)
+    d = dft_matmul.dft_lines(x, forward=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(d), rtol=1e-3, atol=1e-2)
+
+
+def test_four_step_mac_savings():
+    # The factorization must actually reduce MXU work.
+    b, n1, n2 = 64, 16, 16
+    n = n1 * n2
+    dense = dft_matmul.mxu_flops(b, n, n)
+    four = stockham.macs(b, n1, n2)
+    assert four * 4 < dense
+
+
+# ------------------------------------------------------------------- oracle
+
+
+def test_oracle_round_trip():
+    x = rand_ri(4, 16, seed=1)
+    y = ref.fft_lines_ref(x, forward=True)
+    z = ref.fft_lines_ref(np.asarray(y), forward=False)
+    np.testing.assert_allclose(np.asarray(z), x, rtol=1e-4, atol=1e-4)
+
+
+def test_dft_matrix_matches_fft():
+    n = 16
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+    got = x @ ref.dft_matrix(n, True)
+    want = np.fft.fft(x)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+    got_i = x @ ref.dft_matrix(n, False)
+    want_i = np.fft.ifft(x)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-10, atol=1e-10)

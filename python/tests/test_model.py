@@ -1,0 +1,85 @@
+"""L2 model-level tests: pipeline composition + AOT lowering shape checks."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand_ri(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape + (2,)).astype(np.float32)
+
+
+def test_fft_lines_dispatch_small_and_large():
+    for n in (16, 128):
+        b = model.BATCH
+        x = rand_ri((b, n), seed=n)
+        got = model.fft_lines(x, forward=True)
+        want = ref.fft_lines_ref(x, forward=True)
+        scale = float(np.max(np.abs(np.asarray(want))))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-3 * max(scale, 1.0)
+        )
+
+
+def test_factor_four_step():
+    assert model.factor_four_step(256) == (16, 16)
+    assert model.factor_four_step(128) == (16, 8)
+    assert model.factor_four_step(64) == (8, 8)
+
+
+def test_slab_yz_matches_fftn():
+    lx, ny, nz = 4, 16, 16
+    x = rand_ri((lx, ny, nz), seed=2)
+    got = np.asarray(model.slab_yz(x, forward=True))
+    c = ref.from_ri(x)
+    want = np.asarray(ref.to_ri(jnp.fft.fftn(c, axes=(1, 2))))
+    scale = max(np.max(np.abs(want)), 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-3 * scale)
+
+
+def test_entries_shapes_consistent():
+    es = model.entries(line_sizes=(8, 16), batch=model.BATCH)
+    assert "fft8_f" in es and "fft16_i" in es
+    fn, specs = es["fft8_f"]
+    out = jax.eval_shape(fn, *specs)
+    assert out.shape == (model.BATCH, 8, 2)
+    fn, specs = es["padfft_4_8_2_f"]
+    out = jax.eval_shape(fn, *specs)
+    assert out.shape == (model.BATCH, 8, 2)
+
+
+def test_aot_lowering_produces_hlo_text():
+    es = model.entries(line_sizes=(8,), batch=model.BATCH)
+    fn, specs = es["fft8_f"]
+    text = aot.lower_entry(fn, specs)
+    assert "HloModule" in text
+    assert "f32[64,8,2]" in text.replace(" ", "")
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        import sys
+
+        argv = sys.argv
+        sys.argv = ["aot", "--out-dir", d, "--sizes", "8,16"]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        import json
+
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        names = {e["name"] for e in manifest["entries"]}
+        assert {"fft8_f", "fft8_i", "fft16_f", "fft16_i"} <= names
+        for e in manifest["entries"]:
+            assert os.path.exists(os.path.join(d, e["file"]))

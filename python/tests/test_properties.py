@@ -1,0 +1,73 @@
+"""Property sweeps of the L1/L2 stack under hypothesis: transform axioms
+(linearity, Parseval, shift) must hold for the Pallas kernels, not just
+pointwise agreement with the oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import dft_matmul, ref
+
+
+def rand_ri(b, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((b, n, 2)).astype(np.float32)
+
+
+def to_c(x):
+    return np.asarray(x)[..., 0] + 1j * np.asarray(x)[..., 1]
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(2, 5), seed=st.integers(0, 10_000))
+def test_linearity(logn, seed):
+    n = 1 << logn
+    b = dft_matmul.TILE_B
+    x = rand_ri(b, n, seed)
+    y = rand_ri(b, n, seed + 1)
+    a = 0.73
+    fx = to_c(dft_matmul.dft_lines(x))
+    fy = to_c(dft_matmul.dft_lines(y))
+    fxy = to_c(dft_matmul.dft_lines((a * x + y).astype(np.float32)))
+    np.testing.assert_allclose(fxy, a * fx + fy, rtol=2e-3, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(2, 6), seed=st.integers(0, 10_000))
+def test_parseval(logn, seed):
+    n = 1 << logn
+    x = rand_ri(dft_matmul.TILE_B, n, seed)
+    fx = to_c(dft_matmul.dft_lines(x))
+    ex = np.sum(np.abs(to_c(x)) ** 2, axis=-1)
+    ef = np.sum(np.abs(fx) ** 2, axis=-1) / n
+    np.testing.assert_allclose(ef, ex, rtol=5e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(logn=st.integers(3, 5), seed=st.integers(0, 10_000), data=st.data())
+def test_shift_theorem(logn, seed, data):
+    n = 1 << logn
+    s = data.draw(st.integers(0, n - 1))
+    x = rand_ri(dft_matmul.TILE_B, n, seed)
+    shifted = np.roll(x, -s, axis=1)
+    fx = to_c(dft_matmul.dft_lines(x))
+    fs = to_c(dft_matmul.dft_lines(shifted))
+    k = np.arange(n)
+    phase = np.exp(2j * np.pi * s * k / n)
+    np.testing.assert_allclose(fs, fx * phase, rtol=5e-3, atol=2e-2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_model_fft_lines_round_trip(seed):
+    n = 64
+    x = rand_ri(model.BATCH, n, seed)
+    y = model.fft_lines(x, forward=True)
+    z = np.asarray(model.fft_lines(np.asarray(y), forward=False))
+    np.testing.assert_allclose(z, x, rtol=1e-3, atol=1e-3)
+
+
+def test_pad_matrix_is_dft_slice():
+    w = ref.dft_matrix(16, True)
+    p = ref.dft_pad_matrix(8, 16, 4, True)
+    np.testing.assert_allclose(p, w[4:12, :])

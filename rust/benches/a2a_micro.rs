@@ -1,0 +1,25 @@
+use fftb::comm::{alltoallv, run_world};
+use std::time::Instant;
+
+fn main() {
+    for p in [2usize, 4, 8] {
+        for kb in [16usize, 64, 256] {
+            let times = run_world(p, move |comm| {
+                let block = vec![0u8; kb * 1024 / p];
+                // warmup
+                for _ in 0..5 {
+                    let send: Vec<Vec<u8>> = (0..p).map(|_| block.clone()).collect();
+                    alltoallv(&comm, send);
+                }
+                let t0 = Instant::now();
+                let iters = 50;
+                for _ in 0..iters {
+                    let send: Vec<Vec<u8>> = (0..p).map(|_| block.clone()).collect();
+                    alltoallv(&comm, send);
+                }
+                t0.elapsed() / iters
+            });
+            println!("p={p} total={kb}KB per-rank: {:?}", times.iter().max().unwrap());
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Bench: §4.2 batching ablation — one aggregated alltoall per stage vs a
+//! loop of per-band exchanges.
+//!
+//! Live: messages, bytes and time on the in-process testbed. Modeled: the
+//! same comparison priced on Perlmutter at paper scale, where the latency
+//! term (nb * (p-1) * alpha) is what separates the dark- and light-blue
+//! lines of Fig. 9.
+
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{NonBatchedLoop, SlabPencilPlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::model::{project, Machine, Variant, Workload};
+use fftb::util::stats::{bench, fmt_duration};
+
+fn live() {
+    println!("== live: cube 32^3, nb=8 ==");
+    println!(
+        "{:>4} {:>10} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "p", "msgs-b", "msgs-nb", "bytes-b", "bytes-nb", "time-b", "time-nb"
+    );
+    let n = 32usize;
+    let nb = 8usize;
+    for p in [2usize, 4, 8] {
+        let rows = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let batched = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
+            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
+            let input = phased(batched.input_len(), 1);
+
+            let mut mb = (0u64, 0u64);
+            let tb = bench(2, 5, || {
+                let (_, tr) = batched.forward(&backend, input.clone());
+                mb = (tr.comm_messages(), tr.comm_bytes());
+            });
+            let mut ml = (0u64, 0u64);
+            let tl = bench(1, 3, || {
+                let (_, tr) = looped.forward(&backend, input.clone());
+                ml = (tr.comm_messages(), tr.comm_bytes());
+            });
+            (mb, ml, tb.mean(), tl.mean())
+        });
+        let r = &rows[0];
+        println!(
+            "{p:>4} {:>10} {:>10} {:>12} {:>12} {:>10} {:>10}",
+            r.0 .0,
+            r.1 .0,
+            r.0 .1,
+            r.1 .1,
+            fmt_duration(rows.iter().map(|r| r.2).max().unwrap()),
+            fmt_duration(rows.iter().map(|r| r.3).max().unwrap()),
+        );
+        // Invariants: same bytes, nb x messages.
+        assert_eq!(r.0 .1, r.1 .1, "batching must not change total bytes");
+        assert_eq!(r.1 .0, nb as u64 * r.0 .0, "loop sends nb x the messages");
+    }
+}
+
+fn modeled() {
+    println!();
+    println!("== modeled at paper scale (256^3, nb=256, perlmutter-a100) ==");
+    println!("{:>5} {:>12} {:>12} {:>8}", "p", "batched", "non-batched", "ratio");
+    let n = 256usize;
+    let spec = SphereSpec::new([n, n, n], 64.0, SphereKind::Centered);
+    let off = spec.offsets();
+    let w = Workload { shape: [n, n, n], nb: 256, offsets: &off };
+    let m = Machine::perlmutter_a100();
+    let mut prev_ratio = 0.0;
+    for p in [16usize, 64, 256, 1024] {
+        let tb = project(Variant::Slab1dBatched, &w, p, &m);
+        let tn = project(Variant::Slab1dNonBatched, &w, p, &m);
+        let ratio = tn / tb;
+        println!("{p:>5} {:>10.2}ms {:>10.2}ms {ratio:>7.1}x", tb * 1e3, tn * 1e3);
+        assert!(ratio > 1.0, "non-batched must lose at p={p}");
+        if p >= 64 {
+            assert!(ratio >= prev_ratio * 0.8, "gap should widen (or hold) with p");
+        }
+        prev_ratio = ratio;
+    }
+}
+
+fn main() {
+    live();
+    modeled();
+    println!("batching_ablation bench done");
+}

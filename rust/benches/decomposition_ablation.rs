@@ -1,0 +1,81 @@
+//! Bench: Fig. 1 ablation — slab-pencil (1 alltoall over p ranks) vs
+//! pencil-pencil (2 alltoalls over sqrt(p)-rank sub-communicators) at equal
+//! total rank counts.
+//!
+//! The trade: the pencil plan moves more total bytes in two rounds but each
+//! round spans fewer ranks (smaller latency factor at scale); the slab plan
+//! is one big exchange. On the latency-free in-process testbed the slab
+//! plan usually wins; the modeled section shows where the 2D grid pays off.
+
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{PencilPlan, SlabPencilPlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::model::{grid_2d, project, Machine, Variant, Workload};
+use fftb::util::stats::{bench, fmt_duration};
+
+fn main() {
+    println!("== live: slab (1D grid) vs pencil (2D grid), cube 32^3 nb=4 ==");
+    println!(
+        "{:>4} {:>8} {:>12} {:>12} {:>10} {:>10}",
+        "p", "grid", "bytes-slab", "bytes-pencil", "t-slab", "t-pencil"
+    );
+    let n = 32usize;
+    let nb = 4usize;
+    for p in [4usize, 8, 16] {
+        let (p0, p1) = grid_2d(p);
+        let rows = run_world(p, move |comm| {
+            let g1 = ProcGrid::new(&[p], comm.clone()).unwrap();
+            let g2 = ProcGrid::new(&[p0, p1], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&g1));
+            let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2));
+            let in1 = phased(slab.input_len(), 1);
+            let in2 = phased(pencil.input_len(), 2);
+
+            let mut b1 = 0u64;
+            let t1 = bench(2, 5, || {
+                let (_, tr) = slab.forward(&backend, in1.clone());
+                b1 = tr.comm_bytes();
+            });
+            let mut b2 = 0u64;
+            let t2 = bench(2, 5, || {
+                let (_, tr) = pencil.forward(&backend, in2.clone());
+                b2 = tr.comm_bytes();
+            });
+            (b1, b2, t1.mean(), t2.mean())
+        });
+        println!(
+            "{p:>4} {:>8} {:>12} {:>12} {:>10} {:>10}",
+            format!("{p0}x{p1}"),
+            rows[0].0,
+            rows[0].1,
+            fmt_duration(rows.iter().map(|r| r.2).max().unwrap()),
+            fmt_duration(rows.iter().map(|r| r.3).max().unwrap()),
+        );
+    }
+
+    println!();
+    println!("== modeled crossover at paper scale (256^3, nb=256) ==");
+    println!("{:>5} {:>12} {:>12} {:>10}", "p", "slab-1D", "pencil-2D", "winner");
+    let nn = 256usize;
+    let spec = SphereSpec::new([nn, nn, nn], 64.0, SphereKind::Centered);
+    let off = spec.offsets();
+    let w = Workload { shape: [nn, nn, nn], nb: 256, offsets: &off };
+    let m = Machine::perlmutter_a100();
+    for p in [16usize, 64, 256, 1024] {
+        let t1 = project(Variant::Slab1dBatched, &w, p, &m);
+        let t2 = project(Variant::Pencil2dBatched, &w, p, &m);
+        println!(
+            "{p:>5} {:>10.2}ms {:>10.2}ms {:>10}",
+            t1 * 1e3,
+            t2 * 1e3,
+            if t1 <= t2 { "slab" } else { "pencil" }
+        );
+    }
+    println!("decomposition_ablation bench done");
+}

@@ -1,0 +1,109 @@
+//! Bench: node-local line-FFT throughput — the L1/L3 hot path.
+//!
+//! Measures the rust Stockham substrate (the live executor backend) across
+//! line lengths, and the PJRT/Pallas artifact path when `artifacts/` exists.
+//! The rust numbers calibrate the performance model's compute rate; the
+//! comparison is also the §Perf baseline in EXPERIMENTS.md.
+//!
+//! Reported GFLOP/s uses the 5 n log2 n convention per complex line.
+
+use std::sync::Arc;
+
+use fftb::fft::batch::fft_flops;
+use fftb::fft::dft::Direction;
+use fftb::fftb::backend::{LocalFftBackend, RustFftBackend};
+use fftb::fftb::plan::testutil::phased;
+use fftb::runtime::{PjrtFftBackend, PjrtRuntime};
+use fftb::util::stats::bench;
+
+fn throughput(backend: &dyn LocalFftBackend, n: usize, nlines: usize) -> (f64, f64) {
+    let data0 = phased(n * nlines, n as u64);
+    let mut data = data0.clone();
+    let s = bench(3, 10, || {
+        data.copy_from_slice(&data0);
+        backend.fft_batch(&mut data, n, Direction::Forward);
+    });
+    let secs = s.mean().as_secs_f64();
+    let flops = nlines as f64 * fft_flops(n);
+    (flops / secs / 1e9, secs)
+}
+
+fn main() {
+    println!("== local batched line-FFT throughput (forward, 4096 lines) ==");
+    let rust = RustFftBackend::new();
+    let pjrt = PjrtRuntime::open("artifacts")
+        .ok()
+        .map(|rt| PjrtFftBackend::new(Arc::new(rt)));
+
+    println!(
+        "{:>6} {:>16} {:>16} {:>10}",
+        "n", "rust GF/s", "pjrt GF/s", "ratio"
+    );
+    for n in [16usize, 32, 64, 128, 256] {
+        let nlines = 4096;
+        let (gr, _) = throughput(&rust, n, nlines);
+        match &pjrt {
+            Some(pb) => {
+                let (gp, _) = throughput(pb, n, nlines);
+                println!("{n:>6} {gr:>16.2} {gp:>16.2} {:>10.2}", gr / gp);
+            }
+            None => println!("{n:>6} {gr:>16.2} {:>16} {:>10}", "n/a", "-"),
+        }
+    }
+    // Calibration line for the model (local_cpu machine description).
+    let (g64, _) = throughput(&rust, 64, 4096);
+    let (g256, _) = throughput(&rust, 256, 4096);
+    println!();
+    println!(
+        "model calibration: rust backend sustains {:.2} GF/s (n=64) / {:.2} GF/s (n=256)",
+        g64, g256
+    );
+
+    pack_ablation(&rust);
+    println!("local_fft bench done");
+}
+
+/// §Perf L3 iteration 4 evidence: strided-gather pack (the pre-optimization
+/// path, still used for scattered line subsets) vs the blocked-transpose
+/// panel pack now used by `backend_fft_dim` — same transform, same data.
+fn pack_ablation(rust: &RustFftBackend) {
+    use fftb::fftb::backend::{backend_fft_dim, fft_strided_lines};
+    println!();
+    println!("== pack ablation: strided gather vs blocked-transpose panel ==");
+    println!("{:>22} {:>12} {:>12} {:>8}", "shape(dim=1)", "gather", "panel", "speedup");
+    for (nb, n, rest) in [(8usize, 64usize, 64usize), (16, 128, 32), (4, 256, 64)] {
+        let shape = [nb, n, rest, 1];
+        let data0 = phased(nb * n * rest, 7);
+
+        // Old path: explicit start list + strided gather/scatter.
+        let mut d1 = data0.clone();
+        let mut starts = Vec::new();
+        for o in 0..rest {
+            for i in 0..nb {
+                starts.push(o * nb * n + i);
+            }
+        }
+        let t_gather = bench(2, 8, || {
+            d1.copy_from_slice(&data0);
+            fft_strided_lines(rust, &mut d1, n, nb, &starts, Direction::Forward);
+        });
+
+        // New path: backend_fft_dim (blocked transpose).
+        let mut d2 = data0.clone();
+        let t_panel = bench(2, 8, || {
+            d2.copy_from_slice(&data0);
+            backend_fft_dim(rust, &mut d2, &shape, 1, Direction::Forward);
+        });
+        // Same numerics.
+        let err = fftb::fft::complex::max_abs_diff(&d1, &d2);
+        assert!(err < 1e-12, "paths disagree: {err}");
+        let (tg, tp) = (t_gather.min().as_secs_f64(), t_panel.min().as_secs_f64());
+        println!(
+            "{:>22} {:>12} {:>12} {:>7.2}x",
+            format!("[{nb},{n},{rest}]"),
+            fftb::util::stats::fmt_duration(t_gather.min()),
+            fftb::util::stats::fmt_duration(t_panel.min()),
+            tg / tp
+        );
+    }
+}

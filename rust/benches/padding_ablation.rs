@@ -1,0 +1,71 @@
+//! Bench: §2.2 padding ablation — staged padding (Fig. 3) vs pad-to-cube
+//! (Fig. 2) on d = n/2 spheres.
+//!
+//! The paper: "the amount of data is increased by almost 16 times" when the
+//! sphere is padded up front. This bench measures, per size: the data
+//! blow-up, the bytes each approach puts on the wire, and wall time — and
+//! asserts the staged plan wins on all three.
+
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{PaddedSpherePlan, PlaneWavePlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::util::stats::{bench, fmt_duration};
+
+fn main() {
+    println!("== padding ablation: staged (Fig. 3) vs padded-cube (Fig. 2), d = n/2 ==");
+    println!(
+        "{:>5} {:>9} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "n", "blow-up", "staged B", "padded B", "B ratio", "staged t", "padded t", "t ratio"
+    );
+
+    let p = 4usize;
+    let nb = 4usize;
+    for n in [16usize, 32, 48] {
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = Arc::new(spec.offsets());
+        let blowup = (n * n * n) as f64 / off.total() as f64;
+
+        let off2 = Arc::clone(&off);
+        let rows = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let staged = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let padded = PaddedSpherePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let input = phased(staged.input_len(), 9);
+
+            let mut staged_bytes = 0u64;
+            let t_staged = bench(2, 5, || {
+                let (_, tr) = staged.forward(&backend, input.clone());
+                staged_bytes = tr.comm_bytes();
+            });
+            let mut padded_bytes = 0u64;
+            let t_padded = bench(2, 5, || {
+                let (_, tr) = padded.forward(&backend, input.clone());
+                padded_bytes = tr.comm_bytes();
+            });
+            (staged_bytes, padded_bytes, t_staged.mean(), t_padded.mean())
+        });
+
+        let sb = rows.iter().map(|r| r.0).max().unwrap();
+        let pb = rows.iter().map(|r| r.1).max().unwrap();
+        let st = rows.iter().map(|r| r.2).max().unwrap();
+        let pt = rows.iter().map(|r| r.3).max().unwrap();
+        println!(
+            "{n:>5} {blowup:>8.1}x {sb:>12} {pb:>12} {:>7.1}x {:>12} {:>12} {:>7.2}x",
+            pb as f64 / sb as f64,
+            fmt_duration(st),
+            fmt_duration(pt),
+            pt.as_secs_f64() / st.as_secs_f64()
+        );
+        // Paper claims: ~16x data blow-up; staged strictly cheaper.
+        assert!(blowup > 10.0 && blowup < 25.0, "blow-up {blowup} out of range");
+        assert!(sb * 3 < pb, "staged must move <1/3 the bytes");
+        assert!(st < pt, "staged must be faster end to end");
+    }
+    println!("padding_ablation bench done");
+}

@@ -1,0 +1,137 @@
+//! All-to-all exchanges — the data-movement primitive of every distributed
+//! FFT stage (paper §3.1: "typically, Fourier transforms required alltoall
+//! MPI collectives").
+//!
+//! `alltoallv` here uses the pairwise-exchange schedule (`p-1` rounds,
+//! partner `rank XOR round` generalized to non-powers of two), matching what
+//! Cray MPICH does for large messages; the message/byte counts it produces
+//! are what `crate::model::netmodel` prices. Self-blocks never touch the
+//! mailboxes.
+
+use super::communicator::Comm;
+use crate::fft::complex::{self, Complex};
+
+const T_A2A: u64 = 0x20;
+
+/// Exchange variable-size byte blocks: `send[j]` goes to rank `j`; returns
+/// `recv` where `recv[j]` came from rank `j`.
+pub fn alltoallv(comm: &Comm, send: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+    let p = comm.size();
+    assert_eq!(send.len(), p, "alltoallv: need one block per rank");
+    let me = comm.rank();
+    let mut recv: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+
+    let mut send = send;
+    // Self-block first.
+    recv[me] = std::mem::take(&mut send[me]);
+
+    // Pairwise exchange: in round s, talk to (me + s) % p / (me - s) % p.
+    // Posting the send before the recv keeps the schedule deadlock-free on
+    // the buffered mailboxes.
+    for s in 1..p {
+        let to = (me + s) % p;
+        let from = (me + p - s) % p;
+        comm.send_coll(to, T_A2A, std::mem::take(&mut send[to]));
+        recv[from] = comm.recv_coll(from, T_A2A);
+    }
+    recv
+}
+
+/// Typed alltoallv over complex blocks.
+pub fn alltoallv_complex(comm: &Comm, send: Vec<Vec<Complex>>) -> Vec<Vec<Complex>> {
+    let bytes: Vec<Vec<u8>> = send.iter().map(|b| complex::as_bytes(b).to_vec()).collect();
+    alltoallv(comm, bytes).into_iter().map(|b| complex::from_bytes(&b)).collect()
+}
+
+/// Regular alltoall: every block has the same `block` length in bytes.
+pub fn alltoall(comm: &Comm, send: &[u8], block: usize) -> Vec<u8> {
+    let p = comm.size();
+    assert_eq!(send.len(), block * p, "alltoall: send must be block*p bytes");
+    let blocks: Vec<Vec<u8>> =
+        (0..p).map(|j| send[j * block..(j + 1) * block].to_vec()).collect();
+    let recv = alltoallv(comm, blocks);
+    let mut out = Vec::with_capacity(block * p);
+    for b in recv {
+        assert_eq!(b.len(), block, "alltoall: peer sent wrong block size");
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::{run_world, run_world_with_stats};
+
+    #[test]
+    fn alltoallv_identity_pattern() {
+        // Rank r sends [r, j] to rank j; so rank j receives [r, j] from r.
+        let outs = run_world(4, |comm| {
+            let p = comm.size();
+            let send: Vec<Vec<u8>> =
+                (0..p).map(|j| vec![comm.rank() as u8, j as u8]).collect();
+            alltoallv(&comm, send)
+        });
+        for (j, recv) in outs.iter().enumerate() {
+            for (r, b) in recv.iter().enumerate() {
+                assert_eq!(b, &vec![r as u8, j as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoallv_variable_sizes() {
+        let outs = run_world(3, |comm| {
+            let p = comm.size();
+            // Block to rank j has length r + 2*j.
+            let send: Vec<Vec<u8>> =
+                (0..p).map(|j| vec![9u8; comm.rank() + 2 * j]).collect();
+            alltoallv(&comm, send)
+        });
+        for (j, recv) in outs.iter().enumerate() {
+            for (r, b) in recv.iter().enumerate() {
+                assert_eq!(b.len(), r + 2 * j);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_regular() {
+        let outs = run_world(4, |comm| {
+            let p = comm.size();
+            let send: Vec<u8> = (0..p).flat_map(|j| vec![(10 * comm.rank() + j) as u8; 2]).collect();
+            alltoall(&comm, &send, 2)
+        });
+        for (j, recv) in outs.iter().enumerate() {
+            for r in 0..4 {
+                assert_eq!(recv[2 * r], (10 * r + j) as u8);
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_accounting_excludes_self() {
+        let p = 4usize;
+        let block = 64usize;
+        let (_, (msgs, bytes)) = run_world_with_stats(p, |comm| {
+            let send: Vec<Vec<u8>> = (0..comm.size()).map(|_| vec![0u8; block]).collect();
+            alltoallv(&comm, send);
+        });
+        // Each rank sends p-1 remote blocks.
+        assert_eq!(msgs as usize, p * (p - 1));
+        assert_eq!(bytes as usize, p * (p - 1) * block);
+    }
+
+    #[test]
+    fn complex_alltoall_round_values() {
+        use crate::fft::complex::Complex;
+        let outs = run_world(2, |comm| {
+            let send: Vec<Vec<Complex>> = (0..2)
+                .map(|j| vec![Complex::new(comm.rank() as f64, j as f64)])
+                .collect();
+            alltoallv_complex(&comm, send)
+        });
+        assert_eq!(outs[0][1][0], crate::fft::complex::Complex::new(1.0, 0.0));
+        assert_eq!(outs[1][0][0], crate::fft::complex::Complex::new(0.0, 1.0));
+    }
+}

@@ -1,0 +1,242 @@
+//! Collectives over [`Comm`]: barrier, broadcast, gather/allgather,
+//! reductions. Tree-based where it matters; these run on tens of in-process
+//! ranks, so clarity beats micro-optimization — the *traffic* they generate
+//! is what the performance model consumes.
+
+use super::communicator::Comm;
+use crate::fft::complex::{self, Complex};
+
+const T_BARRIER_UP: u64 = 0x10;
+const T_BARRIER_DOWN: u64 = 0x11;
+const T_BCAST: u64 = 0x12;
+const T_GATHER: u64 = 0x13;
+const T_REDUCE: u64 = 0x14;
+
+/// Synchronize all ranks (gather-to-0 + broadcast).
+pub fn barrier(comm: &Comm) {
+    let p = comm.size();
+    if p == 1 {
+        return;
+    }
+    if comm.rank() == 0 {
+        for r in 1..p {
+            comm.recv_coll(r, T_BARRIER_UP);
+        }
+        for r in 1..p {
+            comm.send_coll(r, T_BARRIER_DOWN, Vec::new());
+        }
+    } else {
+        comm.send_coll(0, T_BARRIER_UP, Vec::new());
+        comm.recv_coll(0, T_BARRIER_DOWN);
+    }
+}
+
+/// Broadcast `data` from `root` to every rank (binomial tree).
+pub fn bcast(comm: &Comm, root: usize, data: &mut Vec<u8>) {
+    let p = comm.size();
+    if p == 1 {
+        return;
+    }
+    // Shift ranks so root is virtual rank 0.
+    let vrank = (comm.rank() + p - root) % p;
+    let mut mask = 1usize;
+    // Receive phase: find parent.
+    while mask < p {
+        if vrank & mask != 0 {
+            let parent = (vrank - mask + root) % p;
+            *data = comm.recv_coll(parent, T_BCAST);
+            break;
+        }
+        mask <<= 1;
+    }
+    // Send phase: forward to children below the found bit.
+    mask >>= 1;
+    while mask > 0 {
+        if vrank + mask < p {
+            let child = (vrank + mask + root) % p;
+            comm.send_coll(child, T_BCAST, data.clone());
+        }
+        mask >>= 1;
+    }
+}
+
+/// Gather variable-size byte blocks at `root`; returns `Some(blocks)` there.
+pub fn gatherv(comm: &Comm, root: usize, mine: &[u8]) -> Option<Vec<Vec<u8>>> {
+    let p = comm.size();
+    if comm.rank() == root {
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
+        out[root] = mine.to_vec();
+        for r in 0..p {
+            if r != root {
+                out[r] = comm.recv_coll(r, T_GATHER);
+            }
+        }
+        Some(out)
+    } else {
+        comm.send_coll(root, T_GATHER, mine.to_vec());
+        None
+    }
+}
+
+/// All-gather variable-size byte blocks (gather at 0 + bcast of the packed
+/// blocks).
+pub fn allgatherv(comm: &Comm, mine: &[u8]) -> Vec<Vec<u8>> {
+    let p = comm.size();
+    if p == 1 {
+        return vec![mine.to_vec()];
+    }
+    let gathered = gatherv(comm, 0, mine);
+    // Pack: [count, len_0.., bytes_0..]
+    let mut packed = Vec::new();
+    if comm.rank() == 0 {
+        let blocks = gathered.unwrap();
+        packed.extend_from_slice(&(p as u64).to_le_bytes());
+        for b in &blocks {
+            packed.extend_from_slice(&(b.len() as u64).to_le_bytes());
+        }
+        for b in &blocks {
+            packed.extend_from_slice(b);
+        }
+    }
+    bcast(comm, 0, &mut packed);
+    let mut lens = Vec::with_capacity(p);
+    for r in 0..p {
+        let o = 8 + 8 * r;
+        lens.push(u64::from_le_bytes(packed[o..o + 8].try_into().unwrap()) as usize);
+    }
+    let mut out = Vec::with_capacity(p);
+    let mut off = 8 + 8 * p;
+    for len in lens {
+        out.push(packed[off..off + len].to_vec());
+        off += len;
+    }
+    out
+}
+
+/// Element-wise sum-allreduce of an `f64` vector (gather-reduce at 0 +
+/// broadcast).
+pub fn allreduce_sum_f64(comm: &Comm, data: &mut [f64]) {
+    let p = comm.size();
+    if p == 1 {
+        return;
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    if comm.rank() == 0 {
+        let mut acc: Vec<f64> = data.to_vec();
+        for r in 1..p {
+            let b = comm.recv_coll(r, T_REDUCE);
+            for (i, c) in b.chunks_exact(8).enumerate() {
+                acc[i] += f64::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        data.copy_from_slice(&acc);
+    } else {
+        comm.send_coll(0, T_REDUCE, bytes.to_vec());
+    }
+    let mut buf: Vec<u8> = if comm.rank() == 0 {
+        unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        }
+        .to_vec()
+    } else {
+        Vec::new()
+    };
+    bcast(comm, 0, &mut buf);
+    for (i, c) in buf.chunks_exact(8).enumerate() {
+        data[i] = f64::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+/// Sum-allreduce of complex data (re/im pairs are plain f64 sums).
+pub fn allreduce_sum_complex(comm: &Comm, data: &mut [Complex]) {
+    let floats = complex::as_f64_slice_mut(data);
+    allreduce_sum_f64(comm, floats);
+}
+
+/// Max-allreduce of a single f64 (convergence checks in the DFT solver).
+pub fn allreduce_max_f64(comm: &Comm, value: f64) -> f64 {
+    let mut v = [value];
+    let p = comm.size();
+    if p == 1 {
+        return value;
+    }
+    if comm.rank() == 0 {
+        let mut m = value;
+        for r in 1..p {
+            let b = comm.recv_coll(r, T_REDUCE);
+            m = m.max(f64::from_le_bytes(b[0..8].try_into().unwrap()));
+        }
+        v[0] = m;
+    } else {
+        comm.send_coll(0, T_REDUCE, value.to_le_bytes().to_vec());
+    }
+    let mut buf = if comm.rank() == 0 { v[0].to_le_bytes().to_vec() } else { Vec::new() };
+    bcast(comm, 0, &mut buf);
+    f64::from_le_bytes(buf[0..8].try_into().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+
+    #[test]
+    fn barrier_completes() {
+        run_world(5, |comm| {
+            for _ in 0..3 {
+                barrier(&comm);
+            }
+        });
+    }
+
+    #[test]
+    fn bcast_from_each_root() {
+        for root in 0..4 {
+            let outs = run_world(4, move |comm| {
+                let mut data =
+                    if comm.rank() == root { vec![1u8, 2, 3, root as u8] } else { Vec::new() };
+                bcast(&comm, root, &mut data);
+                data
+            });
+            for o in outs {
+                assert_eq!(o, vec![1, 2, 3, root as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_variable_sizes() {
+        let outs = run_world(4, |comm| {
+            let mine = vec![comm.rank() as u8; comm.rank() + 1];
+            allgatherv(&comm, &mine)
+        });
+        for o in outs {
+            assert_eq!(o.len(), 4);
+            for (r, b) in o.iter().enumerate() {
+                assert_eq!(b, &vec![r as u8; r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum() {
+        let outs = run_world(4, |comm| {
+            let mut v = vec![comm.rank() as f64, 1.0];
+            allreduce_sum_f64(&comm, &mut v);
+            v
+        });
+        for o in outs {
+            assert_eq!(o, vec![6.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn allreduce_max() {
+        let outs = run_world(5, |comm| allreduce_max_f64(&comm, comm.rank() as f64 * 1.5));
+        for o in outs {
+            assert_eq!(o, 6.0);
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! In-process MPI-like communicator.
+//!
+//! The paper runs on MPI ranks across Perlmutter nodes; here every rank is a
+//! thread in one process, and messages move through [`Mailbox`]es. The API
+//! mirrors the MPI subset FFTB needs: point-to-point send/recv, communicator
+//! `split` (for the row/column communicators of 2D processing grids), and
+//! the collectives in [`super::collectives`] / [`super::alltoall`].
+//!
+//! Byte and message counters ([`CommStats`]) record exactly what crosses the
+//! "wire"; the performance model (`crate::model`) converts those counts into
+//! projected times on a real interconnect.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::mailbox::Mailbox;
+use crate::fft::complex::{self, Complex};
+
+/// Traffic counters, shared by every communicator derived from one world.
+#[derive(Default)]
+pub struct CommStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl CommStats {
+    pub fn record(&self, bytes: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.messages.load(Ordering::Relaxed), self.bytes.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.messages.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Shared state of a world of `p` ranks.
+pub struct WorldShared {
+    mailboxes: Vec<Arc<Mailbox>>,
+    next_context: AtomicU64,
+    pub stats: Arc<CommStats>,
+}
+
+impl WorldShared {
+    pub fn new(p: usize) -> Arc<Self> {
+        Arc::new(WorldShared {
+            mailboxes: (0..p).map(|_| Mailbox::new()).collect(),
+            // context 0 is the world communicator.
+            next_context: AtomicU64::new(1),
+            stats: Arc::new(CommStats::default()),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    fn alloc_contexts(&self, n: u64) -> u64 {
+        self.next_context.fetch_add(n, Ordering::SeqCst)
+    }
+}
+
+/// A communicator: an ordered group of world ranks plus a context id.
+#[derive(Clone)]
+pub struct Comm {
+    shared: Arc<WorldShared>,
+    /// `ranks[i]` = world rank of communicator rank `i`.
+    ranks: Arc<Vec<usize>>,
+    /// This thread's rank within the communicator.
+    rank: usize,
+    /// My world rank (== ranks[rank]).
+    world_rank: usize,
+    context: u64,
+}
+
+/// Reserved tag space for collectives (user tags must stay below this).
+pub const COLL_TAG_BASE: u64 = 1 << 60;
+
+impl Comm {
+    /// World communicator handle for `world_rank`.
+    pub fn world(shared: Arc<WorldShared>, world_rank: usize) -> Self {
+        let p = shared.size();
+        Comm {
+            shared,
+            ranks: Arc::new((0..p).collect()),
+            rank: world_rank,
+            world_rank,
+            context: 0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn world_rank(&self) -> usize {
+        self.world_rank
+    }
+
+    pub fn stats(&self) -> Arc<CommStats> {
+        Arc::clone(&self.shared.stats)
+    }
+
+    /// Send `bytes` to communicator rank `dst` with `tag`.
+    ///
+    /// Self-sends are allowed (buffered through the mailbox like MPI's
+    /// eager protocol).
+    pub fn send(&self, dst: usize, tag: u64, payload: Vec<u8>) {
+        assert!(dst < self.size(), "send: dst {dst} out of range (size {})", self.size());
+        assert!(tag < COLL_TAG_BASE, "user tag collides with collective tag space");
+        self.send_raw(dst, tag, payload);
+    }
+
+    fn send_raw(&self, dst: usize, tag: u64, payload: Vec<u8>) {
+        let world_dst = self.ranks[dst];
+        if world_dst != self.world_rank {
+            self.shared.stats.record(payload.len());
+        }
+        self.shared.mailboxes[world_dst].post((self.world_rank, self.context, tag), payload);
+    }
+
+    /// Blocking receive from communicator rank `src` with `tag`.
+    pub fn recv(&self, src: usize, tag: u64) -> Vec<u8> {
+        assert!(src < self.size(), "recv: src {src} out of range");
+        assert!(tag < COLL_TAG_BASE, "user tag collides with collective tag space");
+        self.recv_raw(src, tag)
+    }
+
+    fn recv_raw(&self, src: usize, tag: u64) -> Vec<u8> {
+        let world_src = self.ranks[src];
+        self.shared.mailboxes[self.world_rank].take((world_src, self.context, tag))
+    }
+
+    /// Internal send/recv with collective-reserved tags.
+    pub(crate) fn send_coll(&self, dst: usize, tag: u64, payload: Vec<u8>) {
+        self.send_raw(dst, COLL_TAG_BASE + tag, payload);
+    }
+
+    pub(crate) fn recv_coll(&self, src: usize, tag: u64) -> Vec<u8> {
+        self.recv_raw(src, COLL_TAG_BASE + tag)
+    }
+
+    /// Typed convenience: send a complex slice (copied).
+    pub fn send_complex(&self, dst: usize, tag: u64, data: &[Complex]) {
+        self.send(dst, tag, complex::as_bytes(data).to_vec());
+    }
+
+    /// Typed convenience: receive a complex vector.
+    pub fn recv_complex(&self, src: usize, tag: u64) -> Vec<Complex> {
+        complex::from_bytes(&self.recv(src, tag))
+    }
+
+    /// Collective: split into sub-communicators by `color`; ranks within a
+    /// group are ordered by `(key, parent_rank)`. Mirrors `MPI_Comm_split`.
+    pub fn split(&self, color: u64, key: u64) -> Comm {
+        const T_GATHER: u64 = 0xC0;
+        const T_SCATTER: u64 = 0xC1;
+        let p = self.size();
+
+        // Gather (color, key) at rank 0.
+        if self.rank == 0 {
+            let mut triples: Vec<(u64, u64, usize)> = vec![(color, key, 0)];
+            for r in 1..p {
+                let b = self.recv_coll(r, T_GATHER);
+                let c = u64::from_le_bytes(b[0..8].try_into().unwrap());
+                let k = u64::from_le_bytes(b[8..16].try_into().unwrap());
+                triples.push((c, k, r));
+            }
+            // Group by color.
+            let mut colors: Vec<u64> = triples.iter().map(|t| t.0).collect();
+            colors.sort_unstable();
+            colors.dedup();
+            let base_ctx = self.shared.alloc_contexts(colors.len() as u64);
+
+            // For each member: (context, group world-ranks, member new rank).
+            let mut replies: Vec<Option<(u64, Vec<usize>, usize)>> = vec![None; p];
+            for (ci, &c) in colors.iter().enumerate() {
+                let mut members: Vec<(u64, usize)> = triples
+                    .iter()
+                    .filter(|t| t.0 == c)
+                    .map(|t| (t.1, t.2))
+                    .collect();
+                members.sort_unstable();
+                let group_world: Vec<usize> =
+                    members.iter().map(|&(_, pr)| self.ranks[pr]).collect();
+                for (new_rank, &(_, parent_rank)) in members.iter().enumerate() {
+                    replies[parent_rank] =
+                        Some((base_ctx + ci as u64, group_world.clone(), new_rank));
+                }
+            }
+            // Scatter.
+            let mut my_reply = None;
+            for (r, rep) in replies.into_iter().enumerate() {
+                let (ctx, group, new_rank) = rep.expect("every rank belongs to a group");
+                if r == 0 {
+                    my_reply = Some((ctx, group, new_rank));
+                } else {
+                    let mut buf = Vec::with_capacity(16 + 8 * group.len());
+                    buf.extend_from_slice(&ctx.to_le_bytes());
+                    buf.extend_from_slice(&(new_rank as u64).to_le_bytes());
+                    for wr in &group {
+                        buf.extend_from_slice(&(*wr as u64).to_le_bytes());
+                    }
+                    self.send_coll(r, T_SCATTER, buf);
+                }
+            }
+            let (ctx, group, new_rank) = my_reply.unwrap();
+            Comm {
+                shared: Arc::clone(&self.shared),
+                ranks: Arc::new(group),
+                rank: new_rank,
+                world_rank: self.world_rank,
+                context: ctx,
+            }
+        } else {
+            let mut buf = Vec::with_capacity(16);
+            buf.extend_from_slice(&color.to_le_bytes());
+            buf.extend_from_slice(&key.to_le_bytes());
+            self.send_coll(0, T_GATHER, buf);
+            let b = self.recv_coll(0, T_SCATTER);
+            let ctx = u64::from_le_bytes(b[0..8].try_into().unwrap());
+            let new_rank = u64::from_le_bytes(b[8..16].try_into().unwrap()) as usize;
+            let group: Vec<usize> = b[16..]
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+                .collect();
+            Comm {
+                shared: Arc::clone(&self.shared),
+                ranks: Arc::new(group),
+                rank: new_rank,
+                world_rank: self.world_rank,
+                context: ctx,
+            }
+        }
+    }
+}
+
+/// Run `p` ranks as scoped threads; each gets the world communicator. The
+/// closure's return values are collected in rank order.
+pub fn run_world<T, F>(p: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Comm) -> T + Send + Sync,
+{
+    assert!(p >= 1, "world needs at least one rank");
+    let shared = WorldShared::new(p);
+    let results: Vec<Mutex<Option<T>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for r in 0..p {
+            let comm = Comm::world(Arc::clone(&shared), r);
+            let f = &f;
+            let slot = &results[r];
+            scope.spawn(move || {
+                let out = f(comm);
+                *slot.lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("rank thread panicked before producing output"))
+        .collect()
+}
+
+/// Like [`run_world`] but also returns the world traffic stats.
+pub fn run_world_with_stats<T, F>(p: usize, f: F) -> (Vec<T>, (u64, u64))
+where
+    T: Send,
+    F: Fn(Comm) -> T + Send + Sync,
+{
+    assert!(p >= 1);
+    let shared = WorldShared::new(p);
+    let stats = Arc::clone(&shared.stats);
+    let results: Vec<Mutex<Option<T>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for r in 0..p {
+            let comm = Comm::world(Arc::clone(&shared), r);
+            let f = &f;
+            let slot = &results[r];
+            scope.spawn(move || {
+                let out = f(comm);
+                *slot.lock().unwrap() = Some(out);
+            });
+        }
+    });
+    let outs = results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("rank thread panicked"))
+        .collect();
+    (outs, stats.snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_send_recv() {
+        let outs = run_world(4, |comm| {
+            let p = comm.size();
+            let next = (comm.rank() + 1) % p;
+            let prev = (comm.rank() + p - 1) % p;
+            comm.send(next, 1, vec![comm.rank() as u8]);
+            let got = comm.recv(prev, 1);
+            got[0] as usize
+        });
+        assert_eq!(outs, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn self_send_is_buffered() {
+        let outs = run_world(2, |comm| {
+            comm.send(comm.rank(), 5, vec![7, 8]);
+            comm.recv(comm.rank(), 5)
+        });
+        assert_eq!(outs[0], vec![7, 8]);
+    }
+
+    #[test]
+    fn split_rows_and_cols() {
+        // 2x3 grid: color by row, key by col.
+        let outs = run_world(6, |comm| {
+            let row = comm.rank() / 3;
+            let col = comm.rank() % 3;
+            let row_comm = comm.split(row as u64, col as u64);
+            let col_comm = comm.split(col as u64, row as u64);
+            // Exchange within row: sum of cols = 0+1+2 = 3.
+            row_comm.send((row_comm.rank() + 1) % 3, 2, vec![col as u8]);
+            let left = row_comm.recv((row_comm.rank() + 2) % 3, 2)[0];
+            (row_comm.size(), col_comm.size(), row_comm.rank(), col_comm.rank(), left)
+        });
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o.0, 3, "row comm size");
+            assert_eq!(o.1, 2, "col comm size");
+            assert_eq!(o.2, r % 3, "row rank = col index");
+            assert_eq!(o.3, r / 3, "col rank = row index");
+            assert_eq!(o.4 as usize, (r % 3 + 2) % 3, "left neighbour's col");
+        }
+    }
+
+    #[test]
+    fn stats_count_remote_bytes_only() {
+        let (_, (msgs, bytes)) = run_world_with_stats(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 0, vec![0u8; 100]);
+                comm.send(0, 1, vec![0u8; 50]); // self: not counted
+                comm.recv(0, 1);
+            } else {
+                comm.recv(0, 0);
+            }
+        });
+        assert_eq!(msgs, 1);
+        assert_eq!(bytes, 100);
+    }
+
+    #[test]
+    fn complex_round_trip_via_comm() {
+        use crate::fft::complex::Complex;
+        let outs = run_world(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_complex(1, 3, &[Complex::new(1.5, -0.5)]);
+                Vec::new()
+            } else {
+                comm.recv_complex(0, 3)
+            }
+        });
+        assert_eq!(outs[1], vec![crate::fft::complex::Complex::new(1.5, -0.5)]);
+    }
+}

@@ -1,0 +1,19 @@
+//! In-process MPI substrate.
+//!
+//! The paper's FFTB runs over MPI on Perlmutter; this module provides the
+//! same communication semantics with ranks as threads of one process (see
+//! DESIGN.md §3 for why this substitution preserves the paper's behaviour:
+//! the planner's message counts and byte volumes are exact, only wire time
+//! is modeled).
+
+pub mod alltoall;
+pub mod collectives;
+pub mod communicator;
+pub mod mailbox;
+
+pub use alltoall::{alltoall, alltoallv, alltoallv_complex};
+pub use collectives::{
+    allgatherv, allreduce_max_f64, allreduce_sum_complex, allreduce_sum_f64, barrier, bcast,
+    gatherv,
+};
+pub use communicator::{run_world, run_world_with_stats, Comm, CommStats, WorldShared};

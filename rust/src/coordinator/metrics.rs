@@ -1,0 +1,139 @@
+//! Metrics collection: aggregate [`ExecTrace`]s into table rows / CSV /
+//! JSON for the benches and EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use crate::fftb::plan::{ExecTrace, StageKind};
+use crate::util::json::Json;
+
+/// Aggregated view of one experiment configuration.
+#[derive(Clone, Debug)]
+pub struct MetricsSink {
+    pub label: String,
+    pub runs: Vec<ExecTrace>,
+}
+
+impl MetricsSink {
+    pub fn new(label: impl Into<String>) -> Self {
+        MetricsSink { label: label.into(), runs: Vec::new() }
+    }
+
+    pub fn record(&mut self, trace: ExecTrace) {
+        self.runs.push(trace);
+    }
+
+    pub fn mean_total(&self) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
+        self.runs.iter().map(|t| t.total_time()).sum::<Duration>() / self.runs.len() as u32
+    }
+
+    pub fn mean_comm(&self) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
+        self.runs
+            .iter()
+            .map(|t| {
+                t.stages
+                    .iter()
+                    .filter(|s| s.kind == StageKind::Comm)
+                    .map(|s| s.elapsed)
+                    .sum::<Duration>()
+            })
+            .sum::<Duration>()
+            / self.runs.len() as u32
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.runs.iter().map(|t| t.comm_bytes()).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.runs.iter().map(|t| t.comm_messages()).sum()
+    }
+
+    /// Measured local compute rate over the runs (flops/s), for calibrating
+    /// the performance model.
+    pub fn measured_flop_rate(&self) -> f64 {
+        let mut flops = 0.0;
+        let mut secs = 0.0;
+        for t in &self.runs {
+            for s in &t.stages {
+                if s.kind == StageKind::Compute {
+                    flops += s.flops;
+                    secs += s.elapsed.as_secs_f64();
+                }
+            }
+        }
+        if secs > 0.0 {
+            flops / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Measured pack/unpack bandwidth (B/s) over reshape stages. Uses the
+    /// byte totals the planner reports through comm stages as a proxy of
+    /// block size; reshape stages carry no byte annotation, so this returns
+    /// 0 when no comm stages exist.
+    pub fn one_line(&self) -> String {
+        format!(
+            "{:<34} {:>12?} total  {:>12?} comm  {:>12} B  {:>8} msgs",
+            self.label,
+            self.mean_total(),
+            self.mean_comm(),
+            self.total_bytes(),
+            self.total_messages()
+        )
+    }
+
+    /// JSON record for machine-readable bench output.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("label".to_string(), Json::Str(self.label.clone()));
+        obj.insert("runs".to_string(), Json::Num(self.runs.len() as f64));
+        obj.insert(
+            "mean_total_s".to_string(),
+            Json::Num(self.mean_total().as_secs_f64()),
+        );
+        obj.insert("mean_comm_s".to_string(), Json::Num(self.mean_comm().as_secs_f64()));
+        obj.insert("bytes".to_string(), Json::Num(self.total_bytes() as f64));
+        obj.insert("messages".to_string(), Json::Num(self.total_messages() as f64));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftb::plan::stages::StageKind;
+
+    fn trace(ms: u64, bytes: u64) -> ExecTrace {
+        let mut t = ExecTrace::default();
+        t.push("fft", StageKind::Compute, Duration::from_millis(ms), 0, 0, 1e6);
+        t.push("a2a", StageKind::Comm, Duration::from_millis(ms), bytes, 1, 0.0);
+        t
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = MetricsSink::new("test");
+        m.record(trace(10, 100));
+        m.record(trace(20, 200));
+        assert_eq!(m.total_bytes(), 300);
+        assert_eq!(m.total_messages(), 2);
+        assert_eq!(m.mean_comm(), Duration::from_millis(15));
+        assert!(m.measured_flop_rate() > 0.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut m = MetricsSink::new("x");
+        m.record(trace(5, 50));
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bytes").unwrap().as_f64(), Some(50.0));
+    }
+}

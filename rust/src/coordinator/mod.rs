@@ -1,0 +1,14 @@
+//! L3 service layer: a leader that coalesces transform requests into
+//! batched executions (the paper's batching contribution as a service),
+//! plus metrics collection for the benches.
+//!
+//! A DFT code's CG iteration produces many band-block transform requests;
+//! `BatchingDriver` is the component that aggregates them so every
+//! communication stage runs once per *batch*, not once per band — the
+//! difference between the dark- and light-blue lines of Fig. 9.
+
+pub mod driver;
+pub mod metrics;
+
+pub use driver::{BatchingDriver, TransformJob};
+pub use metrics::MetricsSink;

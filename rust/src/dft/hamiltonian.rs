@@ -1,0 +1,263 @@
+//! The Kohn-Sham-style Hamiltonian of the mini DFT app (paper Eq. 1):
+//! `H psi = 1/2 |G|^2 psi + FFT^-1[ V(r) * FFT[psi] ]`.
+//!
+//! The kinetic term is diagonal in the plane-wave basis; the local
+//! potential is diagonal in real space — so every application is exactly
+//! the batched sphere->cube->sphere transform pair the paper's plane-wave
+//! FFT serves (this module is the "integration with DFT codes" the paper
+//! lists as future work, §5).
+
+use std::sync::Arc;
+
+use crate::fft::complex::Complex;
+use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::grid::{cyclic, ProcGrid};
+use crate::fftb::plan::{ExecTrace, PlaneWavePlan};
+
+use super::lattice::Lattice;
+
+/// Per-rank Hamiltonian: plan + local kinetic array + local potential slab.
+pub struct Hamiltonian {
+    pub lattice: Lattice,
+    pub nb: usize,
+    pub plan: PlaneWavePlan,
+    /// Kinetic 1/2 |G|^2 per local packed plane wave.
+    kin: Vec<f64>,
+    /// Local potential V(r) on this rank's z-slab `[nx, ny, lzc]`.
+    vloc: Vec<f64>,
+    grid: Arc<ProcGrid>,
+}
+
+/// A local external potential: sum of Gaussian wells.
+#[derive(Clone, Debug)]
+pub struct GaussianWells {
+    /// (center in fractional coords, depth hartree, width bohr).
+    pub wells: Vec<([f64; 3], f64, f64)>,
+}
+
+impl GaussianWells {
+    /// One well in the middle of the cell — a hydrogen-ish toy atom.
+    pub fn single(depth: f64, width: f64) -> Self {
+        GaussianWells { wells: vec![([0.5, 0.5, 0.5], depth, width)] }
+    }
+
+    /// Two wells along the diagonal — a toy dimer.
+    pub fn dimer(depth: f64, width: f64, sep_frac: f64) -> Self {
+        let lo = 0.5 - sep_frac / 2.0;
+        let hi = 0.5 + sep_frac / 2.0;
+        GaussianWells {
+            wells: vec![
+                ([lo, 0.5, 0.5], depth, width),
+                ([hi, 0.5, 0.5], depth, width),
+            ],
+        }
+    }
+
+    /// Evaluate at fractional position (periodic images of the nearest
+    /// cell only — widths are small relative to the cell).
+    pub fn eval(&self, a: f64, frac: [f64; 3]) -> f64 {
+        let mut v = 0.0;
+        for (c, depth, width) in &self.wells {
+            let mut d2 = 0.0;
+            for k in 0..3 {
+                let mut d = (frac[k] - c[k]).abs();
+                if d > 0.5 {
+                    d = 1.0 - d; // minimum image
+                }
+                let d = d * a;
+                d2 += d * d;
+            }
+            v -= depth * (-d2 / (2.0 * width * width)).exp();
+        }
+        v
+    }
+}
+
+impl Hamiltonian {
+    /// Build on rank `grid.rank()` of a 1D processing grid.
+    pub fn new(
+        lattice: Lattice,
+        nb: usize,
+        potential: &GaussianWells,
+        grid: Arc<ProcGrid>,
+    ) -> Self {
+        assert_eq!(grid.ndim(), 1, "the mini DFT app runs on 1D grids");
+        let p = grid.size();
+        let r = grid.rank();
+        let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, Arc::clone(&grid));
+        let kin = lattice.local_kinetic(p, r);
+
+        // Potential on the local z-slab (z cyclic).
+        let n = lattice.n;
+        let lzc = cyclic::local_count(n, p, r);
+        let mut vloc = vec![0.0; n * n * lzc];
+        for lz in 0..lzc {
+            let gz = cyclic::local_to_global(lz, p, r);
+            for y in 0..n {
+                for x in 0..n {
+                    let frac =
+                        [x as f64 / n as f64, y as f64 / n as f64, gz as f64 / n as f64];
+                    vloc[x + n * (y + n * lz)] = potential.eval(lattice.a, frac);
+                }
+            }
+        }
+        Hamiltonian { lattice, nb, plan, kin, vloc, grid }
+    }
+
+    /// Local plane-wave count (per band).
+    pub fn n_local(&self) -> usize {
+        self.kin.len()
+    }
+
+    pub fn grid(&self) -> &Arc<ProcGrid> {
+        &self.grid
+    }
+
+    pub fn kinetic(&self) -> &[f64] {
+        &self.kin
+    }
+
+    /// Apply H to a band block `psi` (`[nb, n_local]`, batch fastest).
+    /// Returns `H psi` and the FFT traces (for the metrics report).
+    pub fn apply(
+        &self,
+        backend: &dyn LocalFftBackend,
+        psi: &[Complex],
+    ) -> (Vec<Complex>, Vec<ExecTrace>) {
+        let nb = self.nb;
+        assert_eq!(psi.len(), nb * self.kin.len());
+
+        // Potential term through the plane-wave transform pair.
+        let (mut cube, tr_f) = self.plan.forward(backend, psi.to_vec());
+        for (i, chunk) in cube.chunks_exact_mut(nb).enumerate() {
+            let v = self.vloc[i];
+            for c in chunk {
+                *c = c.scale(v);
+            }
+        }
+        let (mut hpsi, tr_i) = self.plan.inverse(backend, cube);
+
+        // Kinetic term, diagonal in G.
+        for (e, &t) in self.kin.iter().enumerate() {
+            for b in 0..nb {
+                let idx = b + nb * e;
+                hpsi[idx] += psi[idx].scale(t);
+            }
+        }
+        (hpsi, vec![tr_f, tr_i])
+    }
+
+    /// Density accumulation: `n(r) += sum_b |psi_b(r)|^2` on the local slab,
+    /// normalized so that the cell integral equals `nb` for orthonormal
+    /// bands (`sum_G |c|^2 = 1` maps to `1/vol sum_r |psi(r)|^2 dv = 1`).
+    pub fn density(&self, backend: &dyn LocalFftBackend, psi: &[Complex]) -> Vec<f64> {
+        let nb = self.nb;
+        let (cube, _) = self.plan.forward(backend, psi.to_vec());
+        let npts = cube.len() / nb;
+        let n3 = (self.lattice.n * self.lattice.n * self.lattice.n) as f64;
+        let cell_vol = self.lattice.a.powi(3);
+        // |psi(r)|^2 with psi(r) = sum_G c e^{igr}: plan.forward is the
+        // unnormalized DFT, so sum_r |psi(r)|^2 = n^3 sum_G |c|^2.
+        let scale = 1.0 / cell_vol; // integral dv = vol/n^3 per point
+        let _ = n3;
+        let mut rho = vec![0.0; npts];
+        for (i, chunk) in cube.chunks_exact(nb).enumerate() {
+            let s: f64 = chunk.iter().map(|c| c.norm_sqr()).sum();
+            rho[i] = s * scale;
+        }
+        rho
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fft::complex::ZERO;
+    use crate::fftb::backend::RustFftBackend;
+
+    fn setup(p: usize, f: impl Fn(&Hamiltonian, &RustFftBackend) + Send + Sync) {
+        run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let lat = Lattice::new(8.0, 16, 3.0);
+            let h = Hamiltonian::new(lat, 2, &GaussianWells::single(1.0, 1.5), grid);
+            let backend = RustFftBackend::new();
+            f(&h, &backend);
+        });
+    }
+
+    #[test]
+    fn free_particle_is_diagonal() {
+        // V = 0: H psi = kin * psi exactly.
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let lat = Lattice::new(8.0, 16, 3.0);
+            let none = GaussianWells { wells: vec![] };
+            let h = Hamiltonian::new(lat, 2, &none, grid);
+            let backend = RustFftBackend::new();
+            let npts = h.n_local();
+            let mut psi = vec![ZERO; 2 * npts];
+            for (i, v) in psi.iter_mut().enumerate() {
+                *v = Complex::new((i as f64 * 0.37).sin(), (i as f64 * 0.11).cos());
+            }
+            let (hpsi, _) = h.apply(&backend, &psi);
+            for e in 0..npts {
+                for b in 0..2 {
+                    let idx = b + 2 * e;
+                    let want = psi[idx].scale(h.kinetic()[e]);
+                    assert!(
+                        (hpsi[idx] - want).abs() < 1e-8 * (1.0 + want.abs()),
+                        "e={e} b={b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hamiltonian_is_hermitian_in_expectation() {
+        // <phi|H psi> == conj(<psi|H phi>) after global reduction.
+        use crate::comm::collectives::allreduce_sum_complex;
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm.clone()).unwrap();
+            let lat = Lattice::new(8.0, 16, 3.0);
+            let h = Hamiltonian::new(lat, 1, &GaussianWells::single(2.0, 1.0), grid);
+            let backend = RustFftBackend::new();
+            let npts = h.n_local();
+            let mk = |s: f64| -> Vec<Complex> {
+                (0..npts)
+                    .map(|i| Complex::new((i as f64 * s).sin(), (i as f64 * s * 0.5).cos()))
+                    .collect()
+            };
+            let psi = mk(0.17);
+            let phi = mk(0.29);
+            let (hpsi, _) = h.apply(&backend, &psi);
+            let (hphi, _) = h.apply(&backend, &phi);
+            let dot = |a: &[Complex], b: &[Complex]| -> Complex {
+                let mut s = [a.iter().zip(b).map(|(x, y)| x.conj() * *y).fold(ZERO, |u, v| u + v)];
+                allreduce_sum_complex(&comm, &mut s);
+                s[0]
+            };
+            let lhs = dot(&phi, &hpsi);
+            let rhs = dot(&psi, &hphi).conj();
+            assert!((lhs - rhs).abs() < 1e-7 * (1.0 + lhs.abs()), "{lhs:?} vs {rhs:?}");
+        });
+    }
+
+    #[test]
+    fn gaussian_well_is_negative_at_center() {
+        let w = GaussianWells::single(2.0, 1.0);
+        assert!(w.eval(8.0, [0.5, 0.5, 0.5]) < -1.9);
+        assert!(w.eval(8.0, [0.0, 0.0, 0.0]).abs() < 0.1);
+    }
+
+    #[test]
+    fn apply_shapes_and_traces() {
+        setup(2, |h, backend| {
+            let psi = vec![ZERO; 2 * h.n_local()];
+            let (hpsi, traces) = h.apply(backend, &psi);
+            assert_eq!(hpsi.len(), psi.len());
+            assert_eq!(traces.len(), 2); // forward + inverse
+        });
+    }
+}

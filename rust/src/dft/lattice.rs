@@ -1,0 +1,143 @@
+//! Supercell lattice + plane-wave basis enumeration (paper §2.2, Eq. 8-9).
+//!
+//! A cubic supercell of side `a` has reciprocal vectors `g = (2 pi / a) m`
+//! for integer triples `m`. The basis keeps `|g|^2 / 2 <= E_cut` (Eq. 9) —
+//! the `Wrapped` sphere over the FFT grid, with negative frequencies at the
+//! top of each axis.
+
+use std::sync::Arc;
+
+use crate::fftb::grid::cyclic;
+use crate::fftb::sphere::{OffsetArray, SphereKind, SphereSpec};
+
+/// A cubic supercell with its plane-wave cutoff and FFT grid.
+#[derive(Clone, Debug)]
+pub struct Lattice {
+    /// Cell side length (bohr).
+    pub a: f64,
+    /// FFT grid points per dimension.
+    pub n: usize,
+    /// Kinetic cutoff (hartree).
+    pub ecut: f64,
+    pub spec: SphereSpec,
+    pub offsets: Arc<OffsetArray>,
+}
+
+impl Lattice {
+    pub fn new(a: f64, n: usize, ecut: f64) -> Self {
+        // |g| = (2 pi / a) |m| <= sqrt(2 ecut)  =>  |m| <= sqrt(2 ecut) a/(2 pi)
+        let m_max = (2.0 * ecut).sqrt() * a / (2.0 * std::f64::consts::PI);
+        assert!(
+            2.0 * m_max < n as f64,
+            "FFT grid n={n} too small for ecut={ecut} (need > {})",
+            2.0 * m_max
+        );
+        let spec = SphereSpec::new([n, n, n], m_max, SphereKind::Wrapped);
+        let offsets = Arc::new(spec.offsets());
+        Lattice { a, n, ecut, spec, offsets }
+    }
+
+    /// Number of plane waves in the basis.
+    pub fn n_pw(&self) -> usize {
+        self.offsets.total()
+    }
+
+    /// Signed integer frequency of grid index `i`.
+    #[inline]
+    pub fn freq(&self, i: usize) -> i64 {
+        if i <= self.n / 2 {
+            i as i64
+        } else {
+            i as i64 - self.n as i64
+        }
+    }
+
+    /// Kinetic energy `|g|^2 / 2` of the plane wave at grid point (x, y, z).
+    pub fn kinetic(&self, x: usize, y: usize, z: usize) -> f64 {
+        let s = 2.0 * std::f64::consts::PI / self.a;
+        let (fx, fy, fz) = (self.freq(x) as f64, self.freq(y) as f64, self.freq(z) as f64);
+        0.5 * s * s * (fx * fx + fy * fy + fz * fz)
+    }
+
+    /// Kinetic energies of rank `r`'s local plane waves, in the packed
+    /// coefficient order of the plane-wave plan (y outer, local-x, z runs).
+    pub fn local_kinetic(&self, p: usize, r: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        let lnx = cyclic::local_count(self.n, p, r);
+        for y in 0..self.n {
+            for lx in 0..lnx {
+                let gx = cyclic::local_to_global(lx, p, r);
+                for &(z0, len) in self.offsets.col_runs(gx, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        out.push(self.kinetic(gx, y, z));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// All kinetic energies, ascending — the analytic spectrum of the
+    /// free-electron (V = 0) Hamiltonian, used to validate the eigensolver.
+    pub fn kinetic_spectrum(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.n_pw());
+        for y in 0..self.n {
+            for x in 0..self.n {
+                for &(z0, len) in self.offsets.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        out.push(self.kinetic(x, y, z));
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basis_counts_and_cutoff() {
+        let lat = Lattice::new(8.0, 16, 4.0);
+        assert!(lat.n_pw() > 0);
+        // Every retained G respects the cutoff.
+        for y in 0..16 {
+            for x in 0..16 {
+                for &(z0, len) in lat.offsets.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        assert!(lat.kinetic(x, y, z) <= lat.ecut * 1.0001);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_kinetic_partitions_spectrum() {
+        let lat = Lattice::new(8.0, 16, 4.0);
+        for p in [1usize, 2, 4] {
+            let mut all: Vec<f64> = (0..p).flat_map(|r| lat.local_kinetic(p, r)).collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let want = lat.kinetic_spectrum();
+            assert_eq!(all.len(), want.len());
+            for (a, b) in all.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn lowest_kinetic_is_zero() {
+        let lat = Lattice::new(10.0, 16, 3.0);
+        assert_eq!(lat.kinetic_spectrum()[0], 0.0); // G = 0
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn grid_must_hold_sphere() {
+        Lattice::new(20.0, 8, 10.0);
+    }
+}

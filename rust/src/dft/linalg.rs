@@ -1,0 +1,316 @@
+//! Small dense complex linear algebra for the all-band eigensolver:
+//! Hermitian Jacobi eigensolver, Cholesky factorization, triangular solves.
+//!
+//! Band counts are O(10-100), so classic O(n^3) kernels are ample; no LAPACK
+//! exists in the offline dependency set. Matrices are column-major
+//! `a[i + n*j]`.
+
+use crate::fft::complex::{Complex, ONE, ZERO};
+
+/// Column-major dense complex matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CMat {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub data: Vec<Complex>,
+}
+
+impl CMat {
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        CMat { n_rows, n_cols, data: vec![ZERO; n_rows * n_cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = CMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = ONE;
+        }
+        m
+    }
+
+    pub fn from_fn(n_rows: usize, n_cols: usize, f: impl Fn(usize, usize) -> Complex) -> Self {
+        let mut m = CMat::zeros(n_rows, n_cols);
+        for j in 0..n_cols {
+            for i in 0..n_rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.n_cols, other.n_rows);
+        let mut out = CMat::zeros(self.n_rows, other.n_cols);
+        for j in 0..other.n_cols {
+            for k in 0..self.n_cols {
+                let b = other[(k, j)];
+                if b == ZERO {
+                    continue;
+                }
+                for i in 0..self.n_rows {
+                    out[(i, j)] += self[(i, k)] * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Conjugate transpose.
+    pub fn dagger(&self) -> CMat {
+        CMat::from_fn(self.n_cols, self.n_rows, |i, j| self[(j, i)].conj())
+    }
+
+    /// Hermitian deviation `max |A - A^H|` (diagnostics).
+    pub fn hermiticity_err(&self) -> f64 {
+        assert_eq!(self.n_rows, self.n_cols);
+        let mut e: f64 = 0.0;
+        for j in 0..self.n_cols {
+            for i in 0..self.n_rows {
+                e = e.max((self[(i, j)] - self[(j, i)].conj()).abs());
+            }
+        }
+        e
+    }
+
+    pub fn max_abs_diff(&self, other: &CMat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for CMat {
+    type Output = Complex;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &Complex {
+        &self.data[i + self.n_rows * j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for CMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut Complex {
+        &mut self.data[i + self.n_rows * j]
+    }
+}
+
+/// Cholesky factorization `A = L L^H` of a Hermitian positive-definite
+/// matrix. Returns lower-triangular `L`; fails on non-PD input.
+pub fn cholesky(a: &CMat) -> Result<CMat, String> {
+    assert_eq!(a.n_rows, a.n_cols);
+    let n = a.n_rows;
+    let mut l = CMat::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)].re;
+        for k in 0..j {
+            d -= l[(j, k)].norm_sqr();
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(format!("matrix not positive definite at pivot {j} (d={d})"));
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = Complex::new(dj, 0.0);
+        for i in j + 1..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)].conj();
+            }
+            l[(i, j)] = s.scale(1.0 / dj);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L^H X = B` in place of B columns (L lower-triangular) — used to
+/// orthonormalize band blocks: `psi <- psi * (L^H)^{-1}` via X = B (L^H)^-1
+/// i.e. solving row systems. Here we provide the right-multiplication form:
+/// returns `B * (L^H)^{-1}`.
+pub fn right_solve_lh(b: &CMat, l: &CMat) -> CMat {
+    // X L^H = B, solve column by column of L^H (forward substitution on
+    // columns since L^H is upper triangular).
+    let n = l.n_rows;
+    assert_eq!(b.n_cols, n);
+    let mut x = b.clone();
+    for j in 0..n {
+        // X[:, j] = (B[:, j] - sum_{k<j} X[:, k] * L^H[k, j]) / L^H[j, j]
+        for k in 0..j {
+            let lkj = l[(j, k)].conj(); // L^H[k, j]
+            for i in 0..x.n_rows {
+                let sub = x[(i, k)] * lkj;
+                x[(i, j)] -= sub;
+            }
+        }
+        let d = 1.0 / l[(j, j)].re;
+        for i in 0..x.n_rows {
+            x[(i, j)] = x[(i, j)].scale(d);
+        }
+    }
+    x
+}
+
+/// Cyclic Jacobi eigensolver for a Hermitian matrix: returns (eigenvalues
+/// ascending, eigenvector matrix V with A V = V diag(w)).
+pub fn eigh_jacobi(a: &CMat, sweeps: usize) -> (Vec<f64>, CMat) {
+    assert_eq!(a.n_rows, a.n_cols);
+    let n = a.n_rows;
+    let mut m = a.clone();
+    let mut v = CMat::identity(n);
+
+    for _ in 0..sweeps {
+        let mut off: f64 = 0.0;
+        for j in 0..n {
+            for i in 0..j {
+                off = off.max(m[(i, j)].abs());
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                let g = apq.abs();
+                if g < 1e-300 {
+                    continue;
+                }
+                // Unitary 2x2 rotation J = P * R on the (p, q) block:
+                //   P = diag(1, e^{-i phi}) makes a_pq real (a_pq = g e^{i phi}),
+                //   R = [[c, -s], [s, c]] with tan(2 theta) = 2g / (a_pp - a_qq)
+                // zeroes the off-diagonal of the phased block.
+                // J = [[c, -s], [s e^{-i phi}, c e^{-i phi}]].
+                let phase = apq.scale(1.0 / g); // e^{i phi}
+                let alpha = m[(p, p)].re;
+                let beta = m[(q, q)].re;
+                let theta = 0.5 * (2.0 * g).atan2(alpha - beta);
+                let (s, c) = theta.sin_cos();
+                let jqp = phase.conj().scale(s); //  s e^{-i phi}
+                let jqq = phase.conj().scale(c); //  c e^{-i phi}
+
+                // Column update (A <- A J, V <- V J).
+                let col = |mat: &mut CMat, rows: usize| {
+                    for i in 0..rows {
+                        let xp = mat[(i, p)];
+                        let xq = mat[(i, q)];
+                        mat[(i, p)] = xp.scale(c) + xq * jqp;
+                        mat[(i, q)] = xq * jqq - xp.scale(s);
+                    }
+                };
+                col(&mut m, n);
+                col(&mut v, n);
+                // Row update (A <- J^H A):
+                //   row_p <- c row_p + s e^{i phi} row_q
+                //   row_q <- c e^{i phi} row_q - s row_p   (old values)
+                let jhpq = phase.scale(s);
+                let jhqq = phase.scale(c);
+                for j in 0..n {
+                    let xp = m[(p, j)];
+                    let xq = m[(q, j)];
+                    m[(p, j)] = xp.scale(c) + xq * jhpq;
+                    m[(q, j)] = xq * jhqq - xp.scale(s);
+                }
+            }
+        }
+    }
+    // Extract and sort.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)].re, i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let w: Vec<f64> = pairs.iter().map(|&(x, _)| x).collect();
+    let mut vs = CMat::zeros(n, n);
+    for (new_j, &(_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vs[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    (w, vs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hermitian_test_matrix(n: usize, seed: u64) -> CMat {
+        let mut p = crate::util::prng::Prng::new(seed);
+        let vals: Vec<Complex> = (0..n * n)
+            .map(|_| Complex::new(p.next_signed(), p.next_signed()))
+            .collect();
+        let b = CMat { n_rows: n, n_cols: n, data: vals };
+        // A = B^H B + n*I: Hermitian positive definite.
+        let mut a = b.dagger().matmul(&b);
+        for i in 0..n {
+            a[(i, i)] += Complex::new(n as f64, 0.0);
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = hermitian_test_matrix(4, 1);
+        let i = CMat::identity(4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = hermitian_test_matrix(6, 2);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.dagger());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = CMat::identity(3);
+        a[(2, 2)] = Complex::new(-1.0, 0.0);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn right_solve_inverts_lh() {
+        let a = hermitian_test_matrix(5, 3);
+        let l = cholesky(&a).unwrap();
+        let b = CMat::from_fn(3, 5, |i, j| Complex::new((i + 2 * j) as f64, j as f64));
+        let x = right_solve_lh(&b, &l);
+        // x * L^H == b
+        let rec = x.matmul(&l.dagger());
+        assert!(rec.max_abs_diff(&b) < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_diagonalizes() {
+        let a = hermitian_test_matrix(8, 4);
+        let (w, v) = eigh_jacobi(&a, 30);
+        // A V = V diag(w)
+        let av = a.matmul(&v);
+        let mut vd = v.clone();
+        for j in 0..8 {
+            for i in 0..8 {
+                vd[(i, j)] = vd[(i, j)].scale(w[j]);
+            }
+        }
+        assert!(av.max_abs_diff(&vd) < 1e-8, "err {}", av.max_abs_diff(&vd));
+        // V unitary.
+        let vhv = v.dagger().matmul(&v);
+        assert!(vhv.max_abs_diff(&CMat::identity(8)) < 1e-9);
+        // Ascending.
+        for k in 1..8 {
+            assert!(w[k] >= w[k - 1]);
+        }
+    }
+
+    #[test]
+    fn jacobi_known_eigenvalues() {
+        // [[2, i], [-i, 2]] has eigenvalues 1 and 3.
+        let mut a = CMat::zeros(2, 2);
+        a[(0, 0)] = Complex::new(2.0, 0.0);
+        a[(1, 1)] = Complex::new(2.0, 0.0);
+        a[(0, 1)] = Complex::new(0.0, 1.0);
+        a[(1, 0)] = Complex::new(0.0, -1.0);
+        let (w, _) = eigh_jacobi(&a, 20);
+        assert!((w[0] - 1.0).abs() < 1e-10);
+        assert!((w[1] - 3.0).abs() < 1e-10);
+    }
+}

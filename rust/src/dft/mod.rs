@@ -1,0 +1,20 @@
+//! Mini plane-wave DFT application — the downstream consumer the paper's
+//! plane-wave transform exists for (its §5 lists DFT-code integration as
+//! future work; this module is that integration, at toy scale).
+//!
+//! * [`lattice`] — supercell, plane-wave basis from E_cut (Eq. 8-9).
+//! * [`linalg`] — small dense complex algebra (Cholesky, Jacobi eigh).
+//! * [`hamiltonian`] — kinetic + local potential via the plane-wave plan.
+//! * [`eigensolver`] — all-band preconditioned steepest descent + Ritz.
+//! * [`scf`] — density build, charge checks, mixing.
+
+pub mod eigensolver;
+pub mod hamiltonian;
+pub mod lattice;
+pub mod linalg;
+pub mod scf;
+
+pub use eigensolver::{solve_bands, EigenOptions, EigenResult};
+pub use hamiltonian::{GaussianWells, Hamiltonian};
+pub use lattice::Lattice;
+pub use scf::{build_density, mix_density, Density};

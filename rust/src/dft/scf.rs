@@ -1,0 +1,129 @@
+//! SCF-lite: density construction, charge checks, linear mixing.
+//!
+//! The mini app is non-self-consistent by default (fixed external
+//! potential), but this module demonstrates the density pipeline a real
+//! plane-wave code runs after every eigensolve: one more batched
+//! plane-wave transform (the same red-line workload of Fig. 9) plus a
+//! reduction.
+
+use crate::comm::collectives::allreduce_sum_f64;
+use crate::comm::communicator::Comm;
+use crate::fft::complex::Complex;
+use crate::fftb::backend::LocalFftBackend;
+
+use super::hamiltonian::Hamiltonian;
+
+/// Electron density on this rank's z-slab, plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Density {
+    /// n(r) on the local slab `[nx, ny, lzc]`.
+    pub rho: Vec<f64>,
+    /// Cell integral of n(r) (should equal the band count for orthonormal
+    /// filled bands).
+    pub charge: f64,
+}
+
+/// Build the density from orthonormal bands.
+pub fn build_density(
+    h: &Hamiltonian,
+    backend: &dyn LocalFftBackend,
+    comm: &Comm,
+    psi: &[Complex],
+) -> Density {
+    let rho = h.density(backend, psi);
+    let n = h.lattice.n;
+    let dv = h.lattice.a.powi(3) / (n * n * n) as f64;
+    let mut charge = [rho.iter().sum::<f64>() * dv];
+    allreduce_sum_f64(comm, &mut charge);
+    Density { rho, charge: charge[0] }
+}
+
+/// Linear density mixing `rho <- (1-alpha) rho_old + alpha rho_new` —
+/// the stabilizer every SCF loop needs.
+pub fn mix_density(old: &mut [f64], new: &[f64], alpha: f64) {
+    assert_eq!(old.len(), new.len());
+    for (o, &n) in old.iter_mut().zip(new) {
+        *o = (1.0 - alpha) * *o + alpha * n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::dft::eigensolver::{orthonormalize, solve_bands, EigenOptions};
+    use crate::dft::hamiltonian::GaussianWells;
+    use crate::dft::lattice::Lattice;
+    use crate::fftb::backend::RustFftBackend;
+    use crate::fftb::grid::ProcGrid;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn orthonormal_bands_integrate_to_band_count() {
+        let p = 2;
+        let charges = run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+            let lat = Lattice::new(8.0, 12, 2.0);
+            let nb = 3;
+            let h = Hamiltonian::new(lat, nb, &GaussianWells::single(1.0, 1.5), grid);
+            let backend = RustFftBackend::new();
+            let mut psi = Prng::new(5 + comm.rank() as u64).complex_vec(nb * h.n_local());
+            orthonormalize(&comm, &mut psi, nb);
+            build_density(&h, &backend, &comm, &psi).charge
+        });
+        for c in charges {
+            assert!((c - 3.0).abs() < 1e-8, "charge {c}");
+        }
+    }
+
+    #[test]
+    fn density_nonnegative_and_peaked_at_well() {
+        let p = 2;
+        run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+            let lat = Lattice::new(8.0, 12, 2.0);
+            let nb = 1;
+            let h = Hamiltonian::new(
+                Lattice::new(8.0, 12, 2.0),
+                nb,
+                &GaussianWells::single(3.0, 1.2),
+                grid.clone(),
+            );
+            let _ = lat;
+            let backend = RustFftBackend::new();
+            let mut psi = Prng::new(9).complex_vec(nb * h.n_local());
+            solve_bands(
+                &h,
+                &backend,
+                &comm,
+                &mut psi,
+                &EigenOptions { max_iters: 150, tol: 1e-5, ..Default::default() },
+            );
+            let d = build_density(&h, &backend, &comm, &psi);
+            assert!(d.rho.iter().all(|&v| v >= -1e-12));
+            // The max density on the rank owning the cell center should be
+            // near the center column (x=y=n/2).
+            let n = h.lattice.n;
+            let (mut best, mut best_i) = (0.0, 0);
+            for (i, &v) in d.rho.iter().enumerate() {
+                if v > best {
+                    best = v;
+                    best_i = i;
+                }
+            }
+            if best > 0.01 {
+                let x = best_i % n;
+                let y = (best_i / n) % n;
+                assert!((x as i64 - (n / 2) as i64).abs() <= 2);
+                assert!((y as i64 - (n / 2) as i64).abs() <= 2);
+            }
+        });
+    }
+
+    #[test]
+    fn mixing_interpolates() {
+        let mut old = vec![1.0, 2.0];
+        mix_density(&mut old, &[3.0, 4.0], 0.5);
+        assert_eq!(old, vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Bluestein (chirp-z) FFT for arbitrary line lengths.
+//!
+//! Plane-wave DFT grids are not always powers of two (typical FFT grid
+//! pickers use 2^a 3^b 5^c sizes); Bluestein re-expresses an arbitrary-`n`
+//! DFT as a circular convolution of length `m >= 2n-1`, `m` a power of two,
+//! which the Stockham path then handles. This keeps the local-FFT substrate
+//! fully general without a mixed-radix codegen.
+
+use std::sync::Arc;
+
+use super::complex::{Complex, ZERO};
+use super::dft::Direction;
+use super::stockham::StockhamPlan;
+
+/// Precomputed Bluestein plan for one `(n, direction)`.
+pub struct BluesteinPlan {
+    n: usize,
+    dir: Direction,
+    m: usize,
+    /// Chirp `c[k] = exp(sign * i pi k^2 / n)` for `k in 0..n`.
+    chirp: Vec<Complex>,
+    /// Forward FFT (size m) of the zero-embedded conjugate chirp.
+    kernel_hat: Arc<Vec<Complex>>,
+    fwd: StockhamPlan,
+    inv: StockhamPlan,
+}
+
+impl BluesteinPlan {
+    pub fn new(n: usize, dir: Direction) -> Self {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let sign = dir.sign(); // -1 forward, +1 inverse
+        // chirp[k] = exp(sign * i * pi * k^2 / n); reduce k^2 mod 2n to keep
+        // the trig argument small (k^2 can overflow f64 precision otherwise).
+        let chirp: Vec<Complex> = (0..n)
+            .map(|k| {
+                let k2 = (k * k) % (2 * n);
+                Complex::expi(sign * std::f64::consts::PI * k2 as f64 / n as f64)
+            })
+            .collect();
+
+        // Convolution kernel b[k] = conj(chirp[|k|]) embedded circularly.
+        let mut b = vec![ZERO; m];
+        for k in 0..n {
+            let v = chirp[k].conj();
+            b[k] = v;
+            if k != 0 {
+                b[m - k] = v;
+            }
+        }
+        let fwd = StockhamPlan::new(m, Direction::Forward);
+        let inv = StockhamPlan::new(m, Direction::Inverse);
+        let mut scratch = vec![ZERO; m];
+        fwd.run(&mut b, &mut scratch);
+        BluesteinPlan { n, dir, m, chirp, kernel_hat: Arc::new(b), fwd, inv }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Scratch size needed by `run` (two m-buffers).
+    pub fn scratch_len(&self) -> usize {
+        2 * self.m
+    }
+
+    /// Transform one line in place. `scratch.len() >= self.scratch_len()`.
+    pub fn run(&self, line: &mut [Complex], scratch: &mut [Complex]) {
+        let (n, m) = (self.n, self.m);
+        assert_eq!(line.len(), n);
+        assert!(scratch.len() >= 2 * m);
+        if n == 1 {
+            return;
+        }
+        let (a, rest) = scratch.split_at_mut(m);
+        let fft_scratch = &mut rest[..m];
+
+        // a[k] = x[k] * chirp[k], zero-padded to m.
+        for k in 0..n {
+            a[k] = line[k] * self.chirp[k];
+        }
+        for v in a[n..].iter_mut() {
+            *v = ZERO;
+        }
+        // Circular convolution with the kernel via the power-of-two FFT.
+        self.fwd.run(a, fft_scratch);
+        for (v, h) in a.iter_mut().zip(self.kernel_hat.iter()) {
+            *v = *v * *h;
+        }
+        self.inv.run(a, fft_scratch);
+        // y[l] = chirp[l] * conv[l]; inverse direction also scales by 1/n.
+        let scale = if self.dir == Direction::Inverse { 1.0 / n as f64 } else { 1.0 };
+        for l in 0..n {
+            line[l] = (self.chirp[l] * a[l]).scale(scale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::max_abs_diff;
+    use crate::fft::dft::naive_dft;
+
+    fn phased(n: usize, seed: u64) -> Vec<Complex> {
+        (0..n)
+            .map(|i| {
+                let t = (i as f64 * 0.77 + seed as f64) * 1.91;
+                Complex::new((2.0 * t).cos(), t.sin())
+            })
+            .collect()
+    }
+
+    fn check(n: usize, dir: Direction) {
+        let x = phased(n, 11);
+        let want = naive_dft(&x, dir);
+        let plan = BluesteinPlan::new(n, dir);
+        let mut got = x.clone();
+        let mut scratch = vec![ZERO; plan.scratch_len()];
+        plan.run(&mut got, &mut scratch);
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-8 * (n as f64).max(1.0), "n={n} dir={dir:?} err={err}");
+    }
+
+    #[test]
+    fn matches_oracle_odd_and_composite() {
+        for n in [1usize, 2, 3, 5, 6, 7, 9, 10, 12, 15, 17, 30, 48, 60, 100, 120, 125] {
+            check(n, Direction::Forward);
+            check(n, Direction::Inverse);
+        }
+    }
+
+    #[test]
+    fn round_trip_prime() {
+        let n = 97;
+        let x = phased(n, 1);
+        let f = BluesteinPlan::new(n, Direction::Forward);
+        let b = BluesteinPlan::new(n, Direction::Inverse);
+        let mut y = x.clone();
+        let mut scratch = vec![ZERO; f.scratch_len().max(b.scratch_len())];
+        f.run(&mut y, &mut scratch);
+        b.run(&mut y, &mut scratch);
+        assert!(max_abs_diff(&x, &y) < 1e-9);
+    }
+}

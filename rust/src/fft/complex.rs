@@ -1,0 +1,267 @@
+//! Minimal complex arithmetic used throughout the FFT substrate.
+//!
+//! We deliberately avoid external crates: the whole repository builds
+//! offline against the vendored `xla` dependency tree only. `Complex` is
+//! `repr(C)` so slices of it can be reinterpreted as byte/f64 buffers when
+//! crossing the communicator or the PJRT boundary.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Double-precision complex number (the native element of the local FFT
+/// substrate and of all distributed tensors).
+#[derive(Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+pub const ONE: Complex = Complex { re: 1.0, im: 0.0 };
+
+impl Complex {
+    #[inline(always)]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    /// `exp(i * theta)` — unit phasor.
+    #[inline]
+    pub fn expi(theta: f64) -> Self {
+        let (s, c) = theta.sin_cos();
+        Complex { re: c, im: s }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> Self {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline(always)]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Multiply by `i` (90 degree rotation) without a full complex multiply.
+    #[inline(always)]
+    pub fn mul_i(self) -> Self {
+        Complex { re: -self.im, im: self.re }
+    }
+
+    /// Multiply by `-i`.
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Self {
+        Complex { re: self.im, im: -self.re }
+    }
+
+    /// Fused multiply-add: `self * b + c`.
+    #[inline(always)]
+    pub fn mul_add(self, b: Complex, c: Complex) -> Self {
+        Complex {
+            re: self.re * b.re - self.im * b.im + c.re,
+            im: self.re * b.im + self.im * b.re + c.im,
+        }
+    }
+}
+
+impl Add for Complex {
+    type Output = Complex;
+    #[inline(always)]
+    fn add(self, o: Complex) -> Complex {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for Complex {
+    type Output = Complex;
+    #[inline(always)]
+    fn sub(self, o: Complex) -> Complex {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for Complex {
+    type Output = Complex;
+    #[inline(always)]
+    fn mul(self, o: Complex) -> Complex {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Div for Complex {
+    type Output = Complex;
+    #[inline]
+    fn div(self, o: Complex) -> Complex {
+        let d = o.norm_sqr();
+        Complex {
+            re: (self.re * o.re + self.im * o.im) / d,
+            im: (self.im * o.re - self.re * o.im) / d,
+        }
+    }
+}
+
+impl Neg for Complex {
+    type Output = Complex;
+    #[inline(always)]
+    fn neg(self) -> Complex {
+        Complex { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for Complex {
+    #[inline(always)]
+    fn add_assign(&mut self, o: Complex) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for Complex {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: Complex) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for Complex {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: Complex) {
+        *self = *self * o;
+    }
+}
+
+impl Mul<f64> for Complex {
+    type Output = Complex;
+    #[inline(always)]
+    fn mul(self, s: f64) -> Complex {
+        self.scale(s)
+    }
+}
+
+impl fmt::Debug for Complex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({:+.6e}{:+.6e}i)", self.re, self.im)
+    }
+}
+
+impl fmt::Display for Complex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}{}i", self.re, if self.im < 0.0 { "-" } else { "+" }, self.im.abs())
+    }
+}
+
+impl From<f64> for Complex {
+    fn from(re: f64) -> Self {
+        Complex { re, im: 0.0 }
+    }
+}
+
+/// Maximum absolute element-wise error between two complex slices.
+pub fn max_abs_diff(a: &[Complex], b: &[Complex]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+}
+
+/// Relative L2 error `||a-b|| / max(||b||, eps)`.
+pub fn rel_l2_err(a: &[Complex], b: &[Complex]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_l2_err: length mismatch");
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (*x - *y).norm_sqr()).sum();
+    let den: f64 = b.iter().map(|y| y.norm_sqr()).sum();
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Reinterpret a complex slice as its raw `f64` storage (re,im interleaved).
+pub fn as_f64_slice(a: &[Complex]) -> &[f64] {
+    // SAFETY: Complex is repr(C) { f64, f64 } with no padding.
+    unsafe { std::slice::from_raw_parts(a.as_ptr() as *const f64, a.len() * 2) }
+}
+
+/// Reinterpret a mutable complex slice as its raw `f64` storage.
+pub fn as_f64_slice_mut(a: &mut [Complex]) -> &mut [f64] {
+    // SAFETY: Complex is repr(C) { f64, f64 } with no padding.
+    unsafe { std::slice::from_raw_parts_mut(a.as_mut_ptr() as *mut f64, a.len() * 2) }
+}
+
+/// Reinterpret a complex slice as raw bytes (for the communicator).
+pub fn as_bytes(a: &[Complex]) -> &[u8] {
+    // SAFETY: Complex is POD.
+    unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, std::mem::size_of_val(a)) }
+}
+
+/// Copy raw bytes back into a complex vector. Length must be a multiple of 16.
+pub fn from_bytes(bytes: &[u8]) -> Vec<Complex> {
+    assert_eq!(bytes.len() % std::mem::size_of::<Complex>(), 0);
+    let n = bytes.len() / std::mem::size_of::<Complex>();
+    let mut out = vec![ZERO; n];
+    // SAFETY: out has exactly bytes.len() bytes of POD storage.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_basics() {
+        let a = Complex::new(1.0, 2.0);
+        let b = Complex::new(3.0, -1.0);
+        assert_eq!(a + b, Complex::new(4.0, 1.0));
+        assert_eq!(a - b, Complex::new(-2.0, 3.0));
+        assert_eq!(a * b, Complex::new(5.0, 5.0));
+        let q = (a / b) * b;
+        assert!((q - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expi_is_unit_phasor() {
+        for k in 0..16 {
+            let t = k as f64 * std::f64::consts::PI / 8.0;
+            let p = Complex::expi(t);
+            assert!((p.abs() - 1.0).abs() < 1e-12);
+        }
+        let p = Complex::expi(std::f64::consts::PI / 2.0);
+        assert!((p - Complex::new(0.0, 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mul_i_matches_full_multiply() {
+        let a = Complex::new(0.3, -0.7);
+        assert!((a.mul_i() - a * Complex::new(0.0, 1.0)).abs() < 1e-15);
+        assert!((a.mul_neg_i() - a * Complex::new(0.0, -1.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn byte_round_trip() {
+        let v = vec![Complex::new(1.5, -2.5), Complex::new(0.0, 3.25)];
+        let b = as_bytes(&v);
+        let w = from_bytes(b);
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = Complex::new(3.0, 4.0);
+        assert_eq!(a.norm_sqr(), 25.0);
+        assert_eq!(a.abs(), 5.0);
+        assert_eq!(a.conj(), Complex::new(3.0, -4.0));
+        assert!((a * a.conj()).im.abs() < 1e-15);
+    }
+}

@@ -1,0 +1,226 @@
+//! Naive `O(n^2)` discrete Fourier transform — the correctness oracle.
+//!
+//! Every fast path in this repository (Stockham, Bluestein, the batched and
+//! distributed variants, and the Pallas/PJRT artifacts) is validated against
+//! this direct evaluation of Eq. (2)/(3) of the paper:
+//! `y[l] = sum_k  x[k] * w_n^{l k}`, `w_n = exp(-2 pi i / n)`.
+
+use super::complex::{Complex, ZERO};
+
+/// Transform direction. `Forward` uses the `exp(-2 pi i / n)` kernel (the
+/// paper's convention and numpy's); `Inverse` conjugates it and scales the
+/// result by `1/n` so that `idft(dft(x)) == x`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    /// Sign of the exponent: -1 forward, +1 inverse.
+    #[inline]
+    pub fn sign(self) -> f64 {
+        match self {
+            Direction::Forward => -1.0,
+            Direction::Inverse => 1.0,
+        }
+    }
+
+    pub fn flip(self) -> Self {
+        match self {
+            Direction::Forward => Direction::Inverse,
+            Direction::Inverse => Direction::Forward,
+        }
+    }
+}
+
+/// Direct `O(n^2)` DFT of a single line.
+pub fn naive_dft(input: &[Complex], dir: Direction) -> Vec<Complex> {
+    let n = input.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = dir.sign() * 2.0 * std::f64::consts::PI / n as f64;
+    let mut out = vec![ZERO; n];
+    for (l, o) in out.iter_mut().enumerate() {
+        let mut acc = ZERO;
+        for (k, &x) in input.iter().enumerate() {
+            // Reduce l*k mod n before the trig call: keeps the argument small
+            // and the oracle accurate for large n.
+            let lk = (l * k) % n;
+            acc += x * Complex::expi(base * lk as f64);
+        }
+        *o = acc;
+    }
+    if dir == Direction::Inverse {
+        let s = 1.0 / n as f64;
+        for o in out.iter_mut() {
+            *o = o.scale(s);
+        }
+    }
+    out
+}
+
+/// Naive DFT applied independently to `batch` contiguous lines of length `n`.
+pub fn naive_dft_batch(input: &[Complex], n: usize, dir: Direction) -> Vec<Complex> {
+    assert!(n > 0 && input.len() % n == 0, "batch input must be a multiple of n");
+    let mut out = Vec::with_capacity(input.len());
+    for line in input.chunks_exact(n) {
+        out.extend(naive_dft(line, dir));
+    }
+    out
+}
+
+/// Naive 3D DFT on a column-major tensor of shape `(n0, n1, n2)` —
+/// `index(i0,i1,i2) = i0 + n0*(i1 + n1*i2)`, `i0` fastest (the paper's
+/// storage convention, Section 2.1).
+pub fn naive_dft_3d(input: &[Complex], shape: [usize; 3], dir: Direction) -> Vec<Complex> {
+    let [n0, n1, n2] = shape;
+    assert_eq!(input.len(), n0 * n1 * n2);
+    let mut data = input.to_vec();
+
+    // Dim 0: contiguous lines.
+    for c in 0..n1 * n2 {
+        let line: Vec<Complex> = data[c * n0..(c + 1) * n0].to_vec();
+        data[c * n0..(c + 1) * n0].copy_from_slice(&naive_dft(&line, dir));
+    }
+    // Dim 1: stride n0.
+    let mut line = vec![ZERO; n1];
+    for i2 in 0..n2 {
+        for i0 in 0..n0 {
+            for i1 in 0..n1 {
+                line[i1] = data[i0 + n0 * (i1 + n1 * i2)];
+            }
+            let t = naive_dft(&line, dir);
+            for i1 in 0..n1 {
+                data[i0 + n0 * (i1 + n1 * i2)] = t[i1];
+            }
+        }
+    }
+    // Dim 2: stride n0*n1.
+    let mut line = vec![ZERO; n2];
+    for i1 in 0..n1 {
+        for i0 in 0..n0 {
+            for i2 in 0..n2 {
+                line[i2] = data[i0 + n0 * (i1 + n1 * i2)];
+            }
+            let t = naive_dft(&line, dir);
+            for i2 in 0..n2 {
+                data[i0 + n0 * (i1 + n1 * i2)] = t[i2];
+            }
+        }
+    }
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::max_abs_diff;
+
+    fn phased(n: usize, seed: u64) -> Vec<Complex> {
+        // Deterministic quasi-random data without a rand dependency.
+        (0..n)
+            .map(|i| {
+                let t = (i as f64 + seed as f64 * 0.37) * 2.39996;
+                Complex::new(t.sin(), (1.7 * t).cos())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dft_of_delta_is_ones() {
+        let mut x = vec![ZERO; 8];
+        x[0] = Complex::new(1.0, 0.0);
+        let y = naive_dft(&x, Direction::Forward);
+        for v in y {
+            assert!((v - Complex::new(1.0, 0.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dft_of_constant_is_delta() {
+        let x = vec![Complex::new(1.0, 0.0); 8];
+        let y = naive_dft(&x, Direction::Forward);
+        assert!((y[0] - Complex::new(8.0, 0.0)).abs() < 1e-12);
+        for v in &y[1..] {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        for n in [1usize, 2, 3, 5, 8, 12, 16] {
+            let x = phased(n, n as u64);
+            let y = naive_dft(&x, Direction::Forward);
+            let z = naive_dft(&y, Direction::Inverse);
+            assert!(max_abs_diff(&x, &z) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 16;
+        let x = phased(n, 3);
+        let y = naive_dft(&x, Direction::Forward);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() < 1e-9 * ex.max(1.0));
+    }
+
+    #[test]
+    fn pure_tone_lands_in_one_bin() {
+        let n = 16;
+        let k = 3;
+        let x: Vec<Complex> = (0..n)
+            .map(|i| Complex::expi(2.0 * std::f64::consts::PI * (k * i) as f64 / n as f64))
+            .collect();
+        let y = naive_dft(&x, Direction::Forward);
+        for (l, v) in y.iter().enumerate() {
+            if l == k {
+                assert!((v.abs() - n as f64).abs() < 1e-9);
+            } else {
+                assert!(v.abs() < 1e-9, "leakage at bin {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn dft_3d_separable_round_trip() {
+        let shape = [4usize, 3, 5];
+        let x = phased(shape.iter().product(), 7);
+        let y = naive_dft_3d(&x, shape, Direction::Forward);
+        let z = naive_dft_3d(&y, shape, Direction::Inverse);
+        assert!(max_abs_diff(&x, &z) < 1e-10);
+    }
+
+    #[test]
+    fn dft_3d_matches_dimension_order_independence() {
+        // 3D DFT of a separable product equals product of 1D DFTs.
+        let (n0, n1, n2) = (4usize, 4, 4);
+        let a = phased(n0, 1);
+        let b = phased(n1, 2);
+        let c = phased(n2, 3);
+        let mut x = vec![ZERO; n0 * n1 * n2];
+        for i2 in 0..n2 {
+            for i1 in 0..n1 {
+                for i0 in 0..n0 {
+                    x[i0 + n0 * (i1 + n1 * i2)] = a[i0] * b[i1] * c[i2];
+                }
+            }
+        }
+        let y = naive_dft_3d(&x, [n0, n1, n2], Direction::Forward);
+        let fa = naive_dft(&a, Direction::Forward);
+        let fb = naive_dft(&b, Direction::Forward);
+        let fc = naive_dft(&c, Direction::Forward);
+        for i2 in 0..n2 {
+            for i1 in 0..n1 {
+                for i0 in 0..n0 {
+                    let want = fa[i0] * fb[i1] * fc[i2];
+                    let got = y[i0 + n0 * (i1 + n1 * i2)];
+                    assert!((want - got).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}

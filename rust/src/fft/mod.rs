@@ -1,0 +1,30 @@
+//! Local FFT substrate (pure rust, no external math crates).
+//!
+//! This is the node-local compute layer the distributed FFTB planner builds
+//! on — the role cuFFT/FFTW play in the paper (§3.1 "Local Computation ...
+//! abstractions are replaced with actual function calls from off-the-shelf
+//! libraries"). It is also the oracle used to validate the Pallas/PJRT
+//! artifact path.
+//!
+//! * [`complex`] — `Complex` arithmetic and raw-byte reinterpretation.
+//! * [`dft`] — naive O(n^2) oracle + `Direction`.
+//! * [`twiddle`] — cached twiddle tables.
+//! * [`stockham`] — power-of-two Stockham autosort (radix 4/2).
+//! * [`bluestein`] — arbitrary-length chirp-z.
+//! * [`batch`] — unified plan + batched / strided application.
+//! * [`nd`] — column-major multi-dimensional transforms + transposes.
+
+pub mod batch;
+pub mod bluestein;
+pub mod complex;
+pub mod dft;
+pub mod nd;
+pub mod real;
+pub mod stockham;
+pub mod twiddle;
+
+pub use batch::{fft_flops, Fft1d, Fft1dRef};
+pub use complex::{Complex, ONE, ZERO};
+pub use dft::Direction;
+pub use real::{irfft, rfft, rfft_batch};
+pub use nd::{fft_2d, fft_3d, fft_dim, fft_nd, transpose_batch};

@@ -1,0 +1,140 @@
+//! Real-to-complex (RtoC) and complex-to-real transforms.
+//!
+//! Table 1 of the paper lists RtoC support as a distinguishing feature among
+//! distributed FFT packages (FFTE, heFFTe, FFTX offer it; the paper's FFTB
+//! is CtoC). Plane-wave densities and local potentials are real fields, so a
+//! production FFTB would want this — we provide it as the natural extension,
+//! using the classic two-for-one packing: a length-n real signal is folded
+//! into a length-n/2 complex signal, one complex FFT runs, and the spectrum
+//! is unpacked with a twiddle pass. Cost: one half-length complex FFT.
+
+use super::batch::Fft1d;
+use super::complex::{Complex, ZERO};
+use super::dft::Direction;
+use super::twiddle::twiddles;
+
+/// Forward RtoC: real input of even length `n` -> `n/2 + 1` complex bins
+/// (the non-negative frequencies; the rest follow by conjugate symmetry).
+pub fn rfft(input: &[f64]) -> Vec<Complex> {
+    let n = input.len();
+    assert!(n >= 2 && n % 2 == 0, "rfft requires even length >= 2, got {n}");
+    let h = n / 2;
+
+    // Pack: z[k] = x[2k] + i x[2k+1].
+    let mut z: Vec<Complex> =
+        (0..h).map(|k| Complex::new(input[2 * k], input[2 * k + 1])).collect();
+    Fft1d::new(h, Direction::Forward).run_batch_alloc(&mut z);
+
+    // Unpack: X[k] = E[k] + e^{-2 pi i k / n} O[k] where
+    // E[k] = (Z[k] + conj(Z[h-k]))/2, O[k] = (Z[k] - conj(Z[h-k]))/(2i).
+    let tw = twiddles(n, Direction::Forward);
+    let mut out = vec![ZERO; h + 1];
+    for k in 0..=h {
+        let zk = if k == h { z[0] } else { z[k] };
+        let zc = z[(h - k) % h].conj();
+        let e = (zk + zc).scale(0.5);
+        let o = (zk - zc).scale(0.5).mul_neg_i();
+        let w = if k == h { Complex::new(-1.0, 0.0) } else { tw[k] };
+        out[k] = e + w * o;
+    }
+    out
+}
+
+/// Inverse CtoR: `n/2 + 1` spectrum bins -> real signal of length `n`.
+/// Inverse of [`rfft`] (including the 1/n normalization).
+pub fn irfft(spectrum: &[Complex], n: usize) -> Vec<f64> {
+    assert_eq!(spectrum.len(), n / 2 + 1, "irfft needs n/2+1 bins");
+    assert!(n >= 2 && n % 2 == 0);
+    let h = n / 2;
+
+    // Re-pack: Z[k] = E[k] + i O[k] with E/O recovered from X.
+    let tw = twiddles(n, Direction::Inverse); // e^{+2 pi i k / n}
+    let mut z = vec![ZERO; h];
+    for (k, zk) in z.iter_mut().enumerate() {
+        let xk = spectrum[k];
+        let xc = spectrum[h - k].conj();
+        let e = (xk + xc).scale(0.5);
+        let o = (xk - xc).scale(0.5) * tw[k];
+        *zk = e + o.mul_i();
+    }
+    Fft1d::new(h, Direction::Inverse).run_batch_alloc(&mut z);
+
+    let mut out = vec![0.0; n];
+    for k in 0..h {
+        out[2 * k] = z[k].re;
+        out[2 * k + 1] = z[k].im;
+    }
+    out
+}
+
+/// Batched RtoC over contiguous real lines.
+pub fn rfft_batch(input: &[f64], n: usize) -> Vec<Complex> {
+    assert_eq!(input.len() % n, 0);
+    let mut out = Vec::with_capacity((input.len() / n) * (n / 2 + 1));
+    for line in input.chunks_exact(n) {
+        out.extend(rfft(line));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::naive_dft;
+
+    fn reals(n: usize, seed: u64) -> Vec<f64> {
+        (0..n).map(|i| ((i as f64 + seed as f64) * 1.318).sin()).collect()
+    }
+
+    #[test]
+    fn rfft_matches_complex_dft() {
+        for n in [2usize, 4, 8, 16, 32, 64, 20, 36] {
+            let x = reals(n, n as u64);
+            let xc: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let want = naive_dft(&xc, Direction::Forward);
+            let got = rfft(&x);
+            assert_eq!(got.len(), n / 2 + 1);
+            for k in 0..=n / 2 {
+                assert!(
+                    (got[k] - want[k]).abs() < 1e-9 * n as f64,
+                    "n={n} k={k}: {:?} vs {:?}",
+                    got[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        for n in [4usize, 8, 32, 48] {
+            let x = reals(n, 3);
+            let back = irfft(&rfft(&x), n);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn hermitian_symmetry_implicit() {
+        // Bin 0 and bin n/2 of a real signal must be purely real.
+        let x = reals(16, 7);
+        let s = rfft(&x);
+        assert!(s[0].im.abs() < 1e-12);
+        assert!(s[8].im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_shape() {
+        let x = reals(3 * 8, 1);
+        let s = rfft_batch(&x, 8);
+        assert_eq!(s.len(), 3 * 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "even length")]
+    fn odd_length_rejected() {
+        rfft(&[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Iterative Stockham autosort FFT for power-of-two sizes.
+//!
+//! The Stockham formulation is the natural fit for this codebase: it is
+//! out-of-place (ping-pong between two buffers), needs no bit-reversal pass,
+//! and every stage is a unit-stride sweep — the same access pattern the
+//! Pallas kernels use on the TPU side (`python/compile/kernels/stockham.py`),
+//! so the rust substrate and the artifact path share an algorithm.
+//!
+//! The radix-4 path (added in the performance pass, see EXPERIMENTS.md §Perf)
+//! halves the number of passes over the data; a single radix-2 stage fixes up
+//! odd powers of two.
+
+use std::sync::Arc;
+
+use super::complex::Complex;
+use super::dft::Direction;
+use super::twiddle::twiddles;
+
+/// Plan for a power-of-two Stockham FFT of one line length.
+pub struct StockhamPlan {
+    n: usize,
+    dir: Direction,
+    /// Full-size twiddle table `w_n^k`, indexed with stride per stage.
+    table: Arc<Vec<Complex>>,
+}
+
+impl StockhamPlan {
+    /// `n` must be a power of two (>= 1).
+    pub fn new(n: usize, dir: Direction) -> Self {
+        assert!(n.is_power_of_two(), "StockhamPlan requires a power-of-two size, got {n}");
+        StockhamPlan { n, dir, table: twiddles(n.max(1), dir) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.dir
+    }
+
+    /// Transform a single line in place; `scratch` must have length `n`.
+    ///
+    /// The inverse direction applies the conventional `1/n` scaling.
+    pub fn run(&self, line: &mut [Complex], scratch: &mut [Complex]) {
+        let n = self.n;
+        assert_eq!(line.len(), n);
+        assert!(scratch.len() >= n, "scratch too small: {} < {}", scratch.len(), n);
+        if n == 1 {
+            return;
+        }
+
+        // Ping-pong between `line` and `scratch`. `len` is the current
+        // sub-transform length, `s` the number of interleaved sub-transforms
+        // (the Stockham stride).
+        let mut src_is_line = true;
+        let mut len = n; // current DFT length handled by this stage
+        let mut s = 1usize; // stride / batch of interleaved transforms
+
+        // Radix-4 stages while the remaining length is divisible by 4.
+        while len % 4 == 0 {
+            {
+                let (src, dst): (&[Complex], &mut [Complex]) = if src_is_line {
+                    (&*line, &mut *scratch)
+                } else {
+                    (&*scratch, &mut *line)
+                };
+                self.radix4_stage(src, dst, len, s);
+            }
+            src_is_line = !src_is_line;
+            len /= 4;
+            s *= 4;
+        }
+        // One radix-2 stage if an odd power of two remains.
+        while len % 2 == 0 {
+            {
+                let (src, dst): (&[Complex], &mut [Complex]) = if src_is_line {
+                    (&*line, &mut *scratch)
+                } else {
+                    (&*scratch, &mut *line)
+                };
+                self.radix2_stage(src, dst, len, s);
+            }
+            src_is_line = !src_is_line;
+            len /= 2;
+            s *= 2;
+        }
+        debug_assert_eq!(len, 1);
+
+        if !src_is_line {
+            line.copy_from_slice(&scratch[..n]);
+        }
+        if self.dir == Direction::Inverse {
+            let inv = 1.0 / n as f64;
+            for v in line.iter_mut() {
+                *v = v.scale(inv);
+            }
+        }
+    }
+
+    /// One radix-2 Stockham stage: `len`-point DFTs, `s` interleaved copies.
+    #[inline]
+    fn radix2_stage(&self, src: &[Complex], dst: &mut [Complex], len: usize, s: usize) {
+        let m = len / 2;
+        let tw_stride = self.n / len; // table is for size n
+        for p in 0..m {
+            let w = self.table[p * tw_stride];
+            let src_a = p * s;
+            let src_b = (p + m) * s;
+            let dst_a = 2 * p * s;
+            let dst_b = (2 * p + 1) * s;
+            for q in 0..s {
+                let a = src[src_a + q];
+                let b = src[src_b + q];
+                dst[dst_a + q] = a + b;
+                dst[dst_b + q] = (a - b) * w;
+            }
+        }
+    }
+
+    /// One radix-4 Stockham stage (decimation in frequency).
+    #[inline]
+    fn radix4_stage(&self, src: &[Complex], dst: &mut [Complex], len: usize, s: usize) {
+        let m = len / 4;
+        let tw_stride = self.n / len;
+        let forward = self.dir == Direction::Forward;
+        for p in 0..m {
+            let w1 = self.table[p * tw_stride];
+            let w2 = self.table[2 * p * tw_stride];
+            let w3 = self.table[3 * p * tw_stride];
+            let s0 = p * s;
+            let s1 = (p + m) * s;
+            let s2 = (p + 2 * m) * s;
+            let s3 = (p + 3 * m) * s;
+            let d0 = 4 * p * s;
+            let d1 = (4 * p + 1) * s;
+            let d2 = (4 * p + 2) * s;
+            let d3 = (4 * p + 3) * s;
+            for q in 0..s {
+                let a = src[s0 + q];
+                let b = src[s1 + q];
+                let c = src[s2 + q];
+                let d = src[s3 + q];
+                let apc = a + c;
+                let amc = a - c;
+                let bpd = b + d;
+                // (b - d) * (-i) for forward, * (+i) for inverse.
+                let bmd_i = if forward { (b - d).mul_neg_i() } else { (b - d).mul_i() };
+                dst[d0 + q] = apc + bpd;
+                dst[d1 + q] = (amc + bmd_i) * w1;
+                dst[d2 + q] = (apc - bpd) * w2;
+                dst[d3 + q] = (amc - bmd_i) * w3;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::{max_abs_diff, ZERO};
+    use crate::fft::dft::naive_dft;
+
+    fn phased(n: usize, seed: u64) -> Vec<Complex> {
+        (0..n)
+            .map(|i| {
+                let t = (i as f64 + seed as f64 * 0.61) * 1.234;
+                Complex::new(t.sin(), (0.9 * t).cos())
+            })
+            .collect()
+    }
+
+    fn check(n: usize, dir: Direction) {
+        let x = phased(n, n as u64);
+        let want = naive_dft(&x, dir);
+        let plan = StockhamPlan::new(n, dir);
+        let mut got = x.clone();
+        let mut scratch = vec![ZERO; n];
+        plan.run(&mut got, &mut scratch);
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-9 * (n as f64), "n={n} dir={dir:?} err={err}");
+    }
+
+    #[test]
+    fn matches_oracle_all_pow2_up_to_1024() {
+        for log_n in 0..=10 {
+            check(1 << log_n, Direction::Forward);
+            check(1 << log_n, Direction::Inverse);
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        for n in [2usize, 8, 64, 256] {
+            let x = phased(n, 5);
+            let f = StockhamPlan::new(n, Direction::Forward);
+            let b = StockhamPlan::new(n, Direction::Inverse);
+            let mut y = x.clone();
+            let mut scratch = vec![ZERO; n];
+            f.run(&mut y, &mut scratch);
+            b.run(&mut y, &mut scratch);
+            assert!(max_abs_diff(&x, &y) < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        StockhamPlan::new(12, Direction::Forward);
+    }
+}

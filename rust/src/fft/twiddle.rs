@@ -1,0 +1,65 @@
+//! Twiddle-factor tables, cached process-wide.
+//!
+//! A table for size `n` holds `w_n^k = exp(sign * 2 pi i k / n)` for
+//! `k in 0..n`. Tables are built once per `(n, direction)` and shared via
+//! `Arc`, so repeated plan construction in the executor and the benches does
+//! not re-run `sin_cos`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use super::complex::Complex;
+use super::dft::Direction;
+
+static CACHE: Lazy<Mutex<HashMap<(usize, bool), Arc<Vec<Complex>>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Build (or fetch from cache) the full twiddle table for size `n`.
+pub fn twiddles(n: usize, dir: Direction) -> Arc<Vec<Complex>> {
+    let key = (n, dir == Direction::Forward);
+    if let Some(t) = CACHE.lock().unwrap().get(&key) {
+        return Arc::clone(t);
+    }
+    let base = dir.sign() * 2.0 * std::f64::consts::PI / n as f64;
+    let table: Vec<Complex> = (0..n).map(|k| Complex::expi(base * k as f64)).collect();
+    let arc = Arc::new(table);
+    CACHE.lock().unwrap().insert(key, Arc::clone(&arc));
+    arc
+}
+
+/// Number of distinct tables currently cached (used by tests/metrics).
+pub fn cache_len() -> usize {
+    CACHE.lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_table_values() {
+        let t = twiddles(4, Direction::Forward);
+        assert!((t[0] - Complex::new(1.0, 0.0)).abs() < 1e-15);
+        assert!((t[1] - Complex::new(0.0, -1.0)).abs() < 1e-15);
+        assert!((t[2] - Complex::new(-1.0, 0.0)).abs() < 1e-15);
+        assert!((t[3] - Complex::new(0.0, 1.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn inverse_is_conjugate() {
+        let f = twiddles(16, Direction::Forward);
+        let b = twiddles(16, Direction::Inverse);
+        for k in 0..16 {
+            assert!((f[k].conj() - b[k]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn cache_is_shared() {
+        let a = twiddles(32, Direction::Forward);
+        let b = twiddles(32, Direction::Forward);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,199 @@
+//! Local-FFT backend abstraction (paper §3.1: "The local computation is
+//! represented by the 1D or 2D Fourier transforms ... The abstractions are
+//! replaced with actual function calls from off-the-shelf libraries like
+//! FFTW, cuFFT and rocFFT").
+//!
+//! Here the two backends are the pure-rust substrate (`RustFft`) and the
+//! AOT-compiled Pallas/XLA artifacts executed through PJRT
+//! (`crate::runtime::PjrtBackend`). Plans hand every transform to a backend
+//! as a *contiguous batch of lines* — the same shape the artifacts are
+//! compiled for.
+
+use std::sync::Mutex;
+
+use crate::fft::batch::Fft1d;
+use crate::fft::complex::{Complex, ZERO};
+use crate::fft::dft::Direction;
+
+/// A provider of node-local batched 1D FFTs.
+///
+/// `data` holds `data.len() / n` contiguous lines of length `n`; all are
+/// transformed in place. Implementations must be thread-safe: one backend
+/// instance is shared by every rank thread.
+pub trait LocalFftBackend: Send + Sync {
+    fn fft_batch(&self, data: &mut [Complex], n: usize, dir: Direction);
+    fn name(&self) -> &str;
+
+    /// Floating-point work of a call, for roofline accounting.
+    fn flops(&self, total: usize, n: usize) -> f64 {
+        (total / n.max(1)) as f64 * crate::fft::batch::fft_flops(n)
+    }
+}
+
+/// Pure-rust backend: Stockham / Bluestein plans, cached per line length.
+pub struct RustFftBackend {
+    plans: Mutex<std::collections::HashMap<(usize, bool), std::sync::Arc<Fft1d>>>,
+}
+
+impl Default for RustFftBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RustFftBackend {
+    pub fn new() -> Self {
+        RustFftBackend { plans: Mutex::new(std::collections::HashMap::new()) }
+    }
+
+    fn plan(&self, n: usize, dir: Direction) -> std::sync::Arc<Fft1d> {
+        let key = (n, dir == Direction::Forward);
+        let mut plans = self.plans.lock().unwrap();
+        std::sync::Arc::clone(
+            plans.entry(key).or_insert_with(|| std::sync::Arc::new(Fft1d::new(n, dir))),
+        )
+    }
+}
+
+impl LocalFftBackend for RustFftBackend {
+    fn fft_batch(&self, data: &mut [Complex], n: usize, dir: Direction) {
+        assert_eq!(data.len() % n, 0, "fft_batch: data not a multiple of n");
+        let plan = self.plan(n, dir);
+        // Perf (EXPERIMENTS.md §Perf, L3 iteration 1): reuse the per-thread
+        // scratch buffer instead of allocating one per call — fft_batch is
+        // invoked once per stage per transform in the hot loop.
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<Complex>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SCRATCH.with(|s| {
+            let mut scratch = s.borrow_mut();
+            if scratch.len() < plan.scratch_len() {
+                scratch.resize(plan.scratch_len(), ZERO);
+            }
+            plan.run_batch(data, &mut scratch);
+        });
+    }
+
+    fn name(&self) -> &str {
+        "rust-stockham"
+    }
+}
+
+/// Gather strided lines into a contiguous buffer, run the backend batch
+/// transform, scatter back. `starts` lists the flat offset of each line's
+/// first element; elements step by `stride`.
+///
+/// This is the universal "pack + FFT + unpack" building block of every
+/// stage — the CPU analogue of the paper's GPU pack/rotate codelets.
+pub fn fft_strided_lines(
+    backend: &dyn LocalFftBackend,
+    data: &mut [Complex],
+    n: usize,
+    stride: usize,
+    starts: &[usize],
+    dir: Direction,
+) {
+    if starts.is_empty() || n == 0 {
+        return;
+    }
+    let mut buf = vec![ZERO; n * starts.len()];
+    for (l, &s) in starts.iter().enumerate() {
+        for k in 0..n {
+            buf[l * n + k] = data[s + k * stride];
+        }
+    }
+    backend.fft_batch(&mut buf, n, dir);
+    for (l, &s) in starts.iter().enumerate() {
+        for k in 0..n {
+            data[s + k * stride] = buf[l * n + k];
+        }
+    }
+}
+
+/// FFT along dimension `dim` of a column-major tensor via the backend
+/// (pack/unpack through contiguous line batches).
+pub fn backend_fft_dim(
+    backend: &dyn LocalFftBackend,
+    data: &mut [Complex],
+    shape: &[usize],
+    dim: usize,
+    dir: Direction,
+) {
+    let n = shape[dim];
+    if n <= 1 {
+        return;
+    }
+    let inner: usize = shape[..dim].iter().product();
+    let outer: usize = shape[dim + 1..].iter().product();
+    // Perf (EXPERIMENTS.md §Perf, L3 iteration 2): when the transformed
+    // dimension is innermost the lines are already contiguous and in
+    // order — skip the gather/scatter pack entirely.
+    if inner == 1 {
+        return backend.fft_batch(data, n, dir);
+    }
+    // Perf (§Perf, L3 iteration 4): each outer block is an (inner, n)
+    // column-major panel whose lines are its rows — pack/unpack is a
+    // blocked transpose (cache-tiled) instead of a strided gather.
+    let mut buf = vec![ZERO; inner * n * outer];
+    crate::fft::nd::transpose_batch(data, &mut buf, inner, n, outer);
+    backend.fft_batch(&mut buf, n, dir);
+    crate::fft::nd::transpose_batch(&buf, data, n, inner, outer);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::max_abs_diff;
+    use crate::fft::nd;
+
+    fn phased(n: usize, seed: u64) -> Vec<Complex> {
+        (0..n)
+            .map(|i| {
+                let t = (i as f64 + seed as f64) * 0.733;
+                Complex::new(t.sin(), t.cos())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn backend_batch_matches_substrate() {
+        let be = RustFftBackend::new();
+        let n = 16;
+        let mut a = phased(n * 4, 1);
+        let mut b = a.clone();
+        be.fft_batch(&mut a, n, Direction::Forward);
+        let plan = Fft1d::new(n, Direction::Forward);
+        plan.run_batch_alloc(&mut b);
+        assert!(max_abs_diff(&a, &b) < 1e-14);
+    }
+
+    #[test]
+    fn backend_fft_dim_matches_nd() {
+        let be = RustFftBackend::new();
+        let shape = [3usize, 8, 5, 4];
+        for dim in 0..4 {
+            let mut a = phased(shape.iter().product(), dim as u64);
+            let mut b = a.clone();
+            backend_fft_dim(&be, &mut a, &shape, dim, Direction::Forward);
+            nd::fft_dim(&mut b, &shape, dim, Direction::Forward);
+            assert!(max_abs_diff(&a, &b) < 1e-12, "dim={dim}");
+        }
+    }
+
+    #[test]
+    fn strided_lines_subset() {
+        // FFT only lines 0 and 2 of a 4-line buffer; others untouched.
+        let be = RustFftBackend::new();
+        let n = 8;
+        let data0 = phased(4 * n, 3);
+        let mut data = data0.clone();
+        let starts = vec![0usize, 2 * n];
+        fft_strided_lines(&be, &mut data, n, 1, &starts, Direction::Forward);
+        assert_eq!(&data[n..2 * n], &data0[n..2 * n]);
+        assert_eq!(&data[3 * n..], &data0[3 * n..]);
+        let mut want = data0[..n].to_vec();
+        be.fft_batch(&mut want, n, Direction::Forward);
+        assert!(max_abs_diff(&data[..n], &want) < 1e-14);
+    }
+}

@@ -1,0 +1,166 @@
+//! Bound domains — the paper's way of describing tensor extents
+//! (§3.2: "Each domain is defined by specifying the points corresponding to
+//! opposite corners of cuboid volume"; §3.3 adds an optional offset array
+//! for sphere data, Fig. 8 line 18).
+
+use std::sync::Arc;
+
+use super::error::{FftbError, Result};
+use super::sphere::OffsetArray;
+
+/// A bounded (hyper-)rectangular domain `[lower, upper]` (inclusive corners,
+/// like the C++ snippets in Fig. 6), optionally carrying a CSR offset array
+/// that restricts the last dimension (the compressed z of Fig. 7).
+#[derive(Clone, Debug)]
+pub struct Domain {
+    pub lower: Vec<i64>,
+    pub upper: Vec<i64>,
+    pub offsets: Option<Arc<OffsetArray>>,
+}
+
+impl Domain {
+    /// Plain cuboid domain.
+    pub fn new(lower: Vec<i64>, upper: Vec<i64>) -> Result<Domain> {
+        if lower.len() != upper.len() || lower.is_empty() {
+            return Err(FftbError::Shape("domain corners must have equal, nonzero rank".into()));
+        }
+        for (l, u) in lower.iter().zip(&upper) {
+            if l > u {
+                return Err(FftbError::Shape(format!("domain lower {l} > upper {u}")));
+            }
+        }
+        Ok(Domain { lower, upper, offsets: None })
+    }
+
+    /// Cuboid domain with a CSR offset array restricting the z dimension
+    /// (Fig. 8 line 18: `domain(point_in_lower, point_in_upper, offsets)`).
+    pub fn with_offsets(
+        lower: Vec<i64>,
+        upper: Vec<i64>,
+        offsets: Arc<OffsetArray>,
+    ) -> Result<Domain> {
+        let d = Domain::new(lower, upper)?;
+        if d.rank() != 3 {
+            return Err(FftbError::Shape("offset arrays require a 3D domain".into()));
+        }
+        let ext = d.extents();
+        if offsets.nx != ext[0] || offsets.ny != ext[1] || offsets.nz != ext[2] {
+            return Err(FftbError::Shape(format!(
+                "offset array grid ({}, {}, {}) does not match domain extents {:?}",
+                offsets.nx, offsets.ny, offsets.nz, ext
+            )));
+        }
+        Ok(Domain { offsets: Some(offsets), ..d })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.lower.len()
+    }
+
+    /// Extent (number of points) along each dimension.
+    pub fn extents(&self) -> Vec<usize> {
+        self.lower.iter().zip(&self.upper).map(|(l, u)| (u - l + 1) as usize).collect()
+    }
+
+    /// Total points of the *bounding box*.
+    pub fn volume(&self) -> usize {
+        self.extents().iter().product()
+    }
+
+    /// Points actually stored: the offset-array total if present, else the
+    /// full box.
+    pub fn stored_points(&self) -> usize {
+        match &self.offsets {
+            Some(off) => off.total(),
+            None => self.volume(),
+        }
+    }
+}
+
+/// Cross product of component domains (Fig. 8: `dom_in` is a vector of
+/// domains, "a larger domain obtained as a cross product between the
+/// composing domains"; order = memory order, first fastest).
+#[derive(Clone, Debug)]
+pub struct DomainList {
+    pub parts: Vec<Domain>,
+}
+
+impl DomainList {
+    pub fn new(parts: Vec<Domain>) -> Result<DomainList> {
+        if parts.is_empty() {
+            return Err(FftbError::Shape("empty domain list".into()));
+        }
+        if parts.iter().filter(|d| d.offsets.is_some()).count() > 1 {
+            return Err(FftbError::Shape("at most one component may carry offsets".into()));
+        }
+        Ok(DomainList { parts })
+    }
+
+    /// Dimension extents flattened in memory order.
+    pub fn extents(&self) -> Vec<usize> {
+        self.parts.iter().flat_map(|d| d.extents()).collect()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.parts.iter().map(|d| d.rank()).sum()
+    }
+
+    /// The offset array, if any component carries one.
+    pub fn offsets(&self) -> Option<&Arc<OffsetArray>> {
+        self.parts.iter().find_map(|d| d.offsets.as_ref())
+    }
+
+    /// Stored points of the whole cross product.
+    pub fn stored_points(&self) -> usize {
+        self.parts.iter().map(|d| d.stored_points()).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+    #[test]
+    fn extents_inclusive_corners() {
+        let d = Domain::new(vec![0, 0, 0], vec![255, 255, 255]).unwrap();
+        assert_eq!(d.extents(), vec![256, 256, 256]);
+        assert_eq!(d.volume(), 256 * 256 * 256);
+    }
+
+    #[test]
+    fn rejects_inverted_corners() {
+        assert!(Domain::new(vec![0, 5], vec![10, 3]).is_err());
+        assert!(Domain::new(vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn offsets_must_match_extents() {
+        let s = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+        let off = Arc::new(s.offsets());
+        assert!(Domain::with_offsets(vec![0, 0, 0], vec![7, 7, 7], off.clone()).is_ok());
+        assert!(Domain::with_offsets(vec![0, 0, 0], vec![15, 7, 7], off).is_err());
+    }
+
+    #[test]
+    fn cross_product_batch_plus_cube() {
+        // Fig. 8: batch domain [0,128] x 3D grid domain.
+        let b = Domain::new(vec![0], vec![127]).unwrap();
+        let c = Domain::new(vec![0, 0, 0], vec![63, 63, 63]).unwrap();
+        let dl = DomainList::new(vec![b, c]).unwrap();
+        assert_eq!(dl.extents(), vec![128, 64, 64, 64]);
+        assert_eq!(dl.rank(), 4);
+        assert_eq!(dl.stored_points(), 128 * 64 * 64 * 64);
+    }
+
+    #[test]
+    fn stored_points_uses_offsets() {
+        let s = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+        let total = s.offsets().total();
+        let off = Arc::new(s.offsets());
+        let b = Domain::new(vec![0], vec![3]).unwrap();
+        let c = Domain::with_offsets(vec![0, 0, 0], vec![7, 7, 7], off).unwrap();
+        let dl = DomainList::new(vec![b, c]).unwrap();
+        assert_eq!(dl.stored_points(), 4 * total);
+    }
+}

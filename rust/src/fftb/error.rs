@@ -1,0 +1,28 @@
+//! Error type of the FFTB API.
+//!
+//! The paper (§3.1): "The current FFTB implementation accepts some predefined
+//! patterns ... The framework will raise an exception if the provided
+//! patterns are not within the predefined list." `FftbError::Unsupported` is
+//! that exception.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum FftbError {
+    #[error("unsupported transform pattern: {0}")]
+    Unsupported(String),
+
+    #[error("layout string parse error: {0}")]
+    Layout(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("processing grid error: {0}")]
+    Grid(String),
+
+    #[error("artifact runtime error: {0}")]
+    Runtime(String),
+}
+
+pub type Result<T> = std::result::Result<T, FftbError>;

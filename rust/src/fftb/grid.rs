@@ -1,0 +1,204 @@
+//! Processing grids (paper §3.2, Fig. 6 lines 2-3).
+//!
+//! A `ProcGrid` arranges the ranks of a communicator into a 1D, 2D or 3D
+//! cartesian grid. Tensors declare which grid axis each of their dimensions
+//! is distributed over; the planner asks the grid for per-axis
+//! sub-communicators to run its alltoall stages in.
+
+use std::sync::Arc;
+
+use super::error::{FftbError, Result};
+use crate::comm::communicator::Comm;
+
+/// Cartesian processing grid over the ranks of `comm`.
+///
+/// Rank `r` has coordinates `coords` with axis 0 fastest-varying:
+/// `r = c0 + dims[0]*(c1 + dims[1]*c2)` — the same convention as the
+/// column-major tensors.
+#[derive(Clone)]
+pub struct ProcGrid {
+    dims: Vec<usize>,
+    comm: Comm,
+    coords: Vec<usize>,
+    /// Sub-communicator along each axis (varying that coordinate only).
+    axis_comms: Vec<Comm>,
+}
+
+impl ProcGrid {
+    /// Build a grid of shape `dims` over all ranks of `comm`.
+    /// `dims.iter().product()` must equal `comm.size()`.
+    pub fn new(dims: &[usize], comm: Comm) -> Result<Arc<Self>> {
+        if dims.is_empty() || dims.len() > 3 {
+            return Err(FftbError::Grid(format!(
+                "grids must be 1D, 2D or 3D, got {}D",
+                dims.len()
+            )));
+        }
+        let p: usize = dims.iter().product();
+        if p != comm.size() {
+            return Err(FftbError::Grid(format!(
+                "grid {:?} needs {} ranks, communicator has {}",
+                dims,
+                p,
+                comm.size()
+            )));
+        }
+        let r = comm.rank();
+        let mut coords = Vec::with_capacity(dims.len());
+        let mut rem = r;
+        for &d in dims {
+            coords.push(rem % d);
+            rem /= d;
+        }
+
+        // Axis communicator a: color = all other coordinates, key = own
+        // coordinate on a.
+        let mut axis_comms = Vec::with_capacity(dims.len());
+        for a in 0..dims.len() {
+            let mut color = 0u64;
+            let mut mult = 1u64;
+            for (i, (&d, &c)) in dims.iter().zip(&coords).enumerate() {
+                if i != a {
+                    color += c as u64 * mult;
+                    mult *= d as u64;
+                }
+            }
+            axis_comms.push(comm.split(color, coords[a] as u64));
+        }
+        Ok(Arc::new(ProcGrid { dims: dims.to_vec(), comm, coords, axis_comms }))
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn size(&self) -> usize {
+        self.comm.size()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    pub fn coords(&self) -> &[usize] {
+        &self.coords
+    }
+
+    /// Extent of one axis.
+    pub fn axis_len(&self, axis: usize) -> usize {
+        self.dims[axis]
+    }
+
+    /// My coordinate on one axis.
+    pub fn axis_coord(&self, axis: usize) -> usize {
+        self.coords[axis]
+    }
+
+    /// Sub-communicator spanning one axis (my row/column/fiber).
+    pub fn axis_comm(&self, axis: usize) -> &Comm {
+        &self.axis_comms[axis]
+    }
+
+    /// Whole-grid communicator.
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+}
+
+/// Elemental-cyclic distribution helpers (paper §3.2: "data in each
+/// dimension is distributed in a round robin fashion at the granularity of
+/// one element").
+pub mod cyclic {
+    /// Number of global indices `g < n` with `g % p == r`.
+    #[inline]
+    pub fn local_count(n: usize, p: usize, r: usize) -> usize {
+        debug_assert!(r < p);
+        (n + p - 1 - r) / p
+    }
+
+    /// Global index of local element `l` on rank `r`.
+    #[inline]
+    pub fn local_to_global(l: usize, p: usize, r: usize) -> usize {
+        l * p + r
+    }
+
+    /// Owner rank of global index `g`.
+    #[inline]
+    pub fn owner(g: usize, p: usize) -> usize {
+        g % p
+    }
+
+    /// Local index of global `g` on its owner.
+    #[inline]
+    pub fn global_to_local(g: usize, p: usize) -> usize {
+        g / p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+
+    #[test]
+    fn cyclic_partition_is_exact() {
+        for n in [1usize, 5, 16, 37] {
+            for p in [1usize, 2, 3, 4, 7] {
+                let total: usize = (0..p).map(|r| cyclic::local_count(n, p, r)).sum();
+                assert_eq!(total, n, "n={n} p={p}");
+                // Round trip for every global index.
+                for g in 0..n {
+                    let r = cyclic::owner(g, p);
+                    let l = cyclic::global_to_local(g, p);
+                    assert!(l < cyclic::local_count(n, p, r));
+                    assert_eq!(cyclic::local_to_global(l, p, r), g);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_coords_and_axis_comms_2d() {
+        let outs = run_world(6, |comm| {
+            let g = ProcGrid::new(&[2, 3], comm).unwrap();
+            (
+                g.coords().to_vec(),
+                g.axis_comm(0).size(),
+                g.axis_comm(1).size(),
+                g.axis_comm(0).rank(),
+                g.axis_comm(1).rank(),
+            )
+        });
+        for (r, (coords, s0, s1, r0, r1)) in outs.iter().enumerate() {
+            assert_eq!(coords, &vec![r % 2, r / 2]);
+            assert_eq!(*s0, 2);
+            assert_eq!(*s1, 3);
+            assert_eq!(*r0, r % 2, "axis-0 rank is axis-0 coord");
+            assert_eq!(*r1, r / 2, "axis-1 rank is axis-1 coord");
+        }
+    }
+
+    #[test]
+    fn grid_size_mismatch_rejected() {
+        run_world(4, |comm| {
+            assert!(ProcGrid::new(&[3], comm.clone()).is_err());
+            assert!(ProcGrid::new(&[2, 3], comm.clone()).is_err());
+            assert!(ProcGrid::new(&[2, 2], comm).is_ok());
+        });
+    }
+
+    #[test]
+    fn grid_3d_axis_comms() {
+        let outs = run_world(8, |comm| {
+            let g = ProcGrid::new(&[2, 2, 2], comm).unwrap();
+            (g.axis_comm(0).size(), g.axis_comm(1).size(), g.axis_comm(2).size())
+        });
+        for o in outs {
+            assert_eq!(o, (2, 2, 2));
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Layout strings — the paper's tensor-distribution notation (Fig. 6/8).
+//!
+//! A layout string lists the tensor dimensions *in memory order, fastest
+//! first* (the paper stores column-major; `"b x{0} y z"` means the batch
+//! dimension is fastest, then `x` — distributed over grid axis 0 — then `y`,
+//! then `z`). A trailing `{k}` marks elemental-cyclic distribution over
+//! grid axis `k`; dimensions without a marker are fully local.
+
+use super::error::{FftbError, Result};
+
+/// One dimension of a layout: its name and optional grid-axis mapping.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DimSpec {
+    pub name: String,
+    pub grid_axis: Option<usize>,
+}
+
+/// Parsed layout string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layout {
+    pub dims: Vec<DimSpec>,
+}
+
+impl Layout {
+    /// Parse `"b x{0} y z"` style strings.
+    pub fn parse(s: &str) -> Result<Layout> {
+        let mut dims = Vec::new();
+        for tok in s.split_whitespace() {
+            let (name, axis) = if let Some(open) = tok.find('{') {
+                if !tok.ends_with('}') {
+                    return Err(FftbError::Layout(format!("malformed token `{tok}`")));
+                }
+                let name = &tok[..open];
+                let axis_str = &tok[open + 1..tok.len() - 1];
+                let axis: usize = axis_str.parse().map_err(|_| {
+                    FftbError::Layout(format!("bad grid axis `{axis_str}` in `{tok}`"))
+                })?;
+                (name, Some(axis))
+            } else {
+                (tok, None)
+            };
+            if name.is_empty() {
+                return Err(FftbError::Layout(format!("empty dimension name in `{tok}`")));
+            }
+            if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(FftbError::Layout(format!("invalid dimension name `{name}`")));
+            }
+            if dims.iter().any(|d: &DimSpec| d.name == name) {
+                return Err(FftbError::Layout(format!("duplicate dimension `{name}`")));
+            }
+            dims.push(DimSpec { name: name.to_string(), grid_axis: axis });
+        }
+        if dims.is_empty() {
+            return Err(FftbError::Layout("layout string has no dimensions".into()));
+        }
+        // No two dimensions may share a grid axis.
+        let mut seen = Vec::new();
+        for d in &dims {
+            if let Some(a) = d.grid_axis {
+                if seen.contains(&a) {
+                    return Err(FftbError::Layout(format!(
+                        "grid axis {a} used by more than one dimension"
+                    )));
+                }
+                seen.push(a);
+            }
+        }
+        Ok(Layout { dims })
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Index of a dimension by name.
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.dims.iter().position(|d| d.name == name)
+    }
+
+    /// Names in memory order.
+    pub fn names(&self) -> Vec<&str> {
+        self.dims.iter().map(|d| d.name.as_str()).collect()
+    }
+
+    /// Distributed dimensions as `(dim_index, grid_axis)` pairs.
+    pub fn distributed(&self) -> Vec<(usize, usize)> {
+        self.dims
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.grid_axis.map(|a| (i, a)))
+            .collect()
+    }
+
+    /// Render back to the string form.
+    pub fn to_string_form(&self) -> String {
+        self.dims
+            .iter()
+            .map(|d| match d.grid_axis {
+                Some(a) => format!("{}{{{}}}", d.name, a),
+                None => d.name.clone(),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple() {
+        let l = Layout::parse("x{0} y z").unwrap();
+        assert_eq!(l.ndim(), 3);
+        assert_eq!(l.dims[0], DimSpec { name: "x".into(), grid_axis: Some(0) });
+        assert_eq!(l.dims[1], DimSpec { name: "y".into(), grid_axis: None });
+        assert_eq!(l.distributed(), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn parse_batched_planewave() {
+        let l = Layout::parse("b x{0} y z").unwrap();
+        assert_eq!(l.names(), vec!["b", "x", "y", "z"]);
+        assert_eq!(l.find("y"), Some(2));
+    }
+
+    #[test]
+    fn parse_two_axes() {
+        let l = Layout::parse("x y{0} z{1}").unwrap();
+        assert_eq!(l.distributed(), vec![(1, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn round_trip_string() {
+        for s in ["x{0} y z", "b x y{1} z{0}", "X Y Z{0}"] {
+            assert_eq!(Layout::parse(s).unwrap().to_string_form(), s);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Layout::parse("").is_err());
+        assert!(Layout::parse("x{").is_err());
+        assert!(Layout::parse("x{a}").is_err());
+        assert!(Layout::parse("x x").is_err());
+        assert!(Layout::parse("x{0} y{0}").is_err());
+        assert!(Layout::parse("x-y").is_err());
+    }
+}

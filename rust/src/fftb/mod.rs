@@ -1,0 +1,30 @@
+//! FFTB — the paper's flexible distributed FFT framework (core library).
+//!
+//! The module layout mirrors Fig. 4 of the paper:
+//!
+//! * API (green block): [`grid`], [`domain`], [`layout`], [`tensor`],
+//!   [`sphere`] — processing grids, bound domains (+ CSR offset arrays),
+//!   distribution strings, distributed tensors.
+//! * Intermediate block (yellow): [`plan`] — pattern-matches the tensor
+//!   distributions and stitches compute + communication stages.
+//! * Local computation (red): [`backend`] — pluggable batched-1D-FFT
+//!   providers (pure-rust substrate or PJRT artifacts).
+//! * Data movement (orange): `crate::comm` alltoalls, invoked by the plans.
+
+pub mod backend;
+pub mod domain;
+pub mod error;
+pub mod grid;
+pub mod layout;
+pub mod plan;
+pub mod sphere;
+pub mod tensor;
+
+pub use backend::{LocalFftBackend, RustFftBackend};
+pub use domain::{Domain, DomainList};
+pub use error::{FftbError, Result};
+pub use grid::ProcGrid;
+pub use layout::Layout;
+pub use plan::{ExecTrace, Fftb, FftbOptions, PlanKind};
+pub use sphere::{OffsetArray, SphereKind, SphereSpec};
+pub use tensor::DistTensor;

@@ -1,0 +1,395 @@
+//! The FFTB planner: from tensor descriptions to an executable distributed
+//! transform (paper §3.1, the yellow "intermediate" block: "analyses the
+//! distribution patterns of the input/output tensors and constructs the
+//! necessary compute and communicate stages").
+//!
+//! `Fftb::plan` is the rust rendering of the paper's constructor
+//! (Fig. 6 line 23):
+//!
+//! ```c++
+//! fftb fx = fftb(sizes, to, "X Y Z", ti, "x y z", g);
+//! ```
+//!
+//! Supported patterns (anything else raises [`FftbError::Unsupported`],
+//! exactly as the paper specifies):
+//!
+//! | input                      | output          | grid | plan |
+//! |----------------------------|-----------------|------|------|
+//! | dense  `[b] x{0} y z`      | `[B] X Y Z{0}`  | 1D   | slab-pencil |
+//! | dense  `[b] x y{0} z{1}`   | `[B] X{0} Y{1} Z` | 2D | pencil |
+//! | dense, 3D grid             | same as pencil  | 3D (folded) | pencil |
+//! | sphere `[b] x{0} y z` + offsets | `[B] X Y Z{0}` | 1D | plane-wave staged padding |
+
+pub mod batched;
+pub mod pencil;
+pub mod planewave;
+pub mod redistribute;
+pub mod slab_pencil;
+pub mod stages;
+pub mod testutil;
+
+use std::sync::Arc;
+
+use crate::fft::complex::Complex;
+use crate::fft::dft::Direction;
+use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::error::{FftbError, Result};
+use crate::fftb::grid::ProcGrid;
+use crate::fftb::tensor::DistTensor;
+
+pub use batched::NonBatchedLoop;
+pub use pencil::PencilPlan;
+pub use planewave::{PaddedSpherePlan, PlaneWavePlan};
+pub use slab_pencil::SlabPencilPlan;
+pub use stages::{ExecTrace, StageKind, StageTrace};
+
+/// The concrete stage pipeline the planner selected.
+pub enum PlanKind {
+    SlabPencil(SlabPencilPlan),
+    SlabPencilLoop(NonBatchedLoop),
+    Pencil(PencilPlan),
+    PlaneWave(PlaneWavePlan),
+    PaddedSphere(PaddedSpherePlan),
+}
+
+impl PlanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanKind::SlabPencil(_) => "slab-pencil (1D grid, batched)",
+            PlanKind::SlabPencilLoop(_) => "slab-pencil (1D grid, non-batched loop)",
+            PlanKind::Pencil(_) => "pencil-pencil (2D grid)",
+            PlanKind::PlaneWave(_) => "plane-wave staged padding (1D grid)",
+            PlanKind::PaddedSphere(_) => "sphere padded to cube + slab-pencil",
+        }
+    }
+}
+
+/// A constructed distributed Fourier transform (the paper's `fftb` object).
+pub struct Fftb {
+    pub kind: PlanKind,
+    pub sizes: [usize; 3],
+    pub nb: usize,
+}
+
+/// Planner options beyond what the tensor descriptions imply.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FftbOptions {
+    /// Run batched transforms as a loop of single transforms (the paper's
+    /// non-batched variants; only meaningful with a batch dimension).
+    pub force_non_batched: bool,
+    /// For sphere inputs: pad the whole sphere up front and run the dense
+    /// plan (the paper's Fig. 2 baseline) instead of staged padding.
+    pub pad_sphere_to_cube: bool,
+}
+
+impl Fftb {
+    /// Plan a transform of `sizes` from `input` to `output` (Fig. 6/8).
+    ///
+    /// `in_dims` / `out_dims` name the three transformed dimensions of each
+    /// tensor (e.g. `"x y z"` / `"X Y Z"`); a batch dimension, if any, is
+    /// whatever tensor dimension is not named.
+    pub fn plan(
+        sizes: [usize; 3],
+        output: &DistTensor,
+        out_dims: &str,
+        input: &DistTensor,
+        in_dims: &str,
+        grid: Arc<ProcGrid>,
+    ) -> Result<Fftb> {
+        Self::plan_opt(sizes, output, out_dims, input, in_dims, grid, FftbOptions::default())
+    }
+
+    pub fn plan_opt(
+        sizes: [usize; 3],
+        output: &DistTensor,
+        out_dims: &str,
+        input: &DistTensor,
+        in_dims: &str,
+        grid: Arc<ProcGrid>,
+        opts: FftbOptions,
+    ) -> Result<Fftb> {
+        let in_names: Vec<&str> = in_dims.split_whitespace().collect();
+        let out_names: Vec<&str> = out_dims.split_whitespace().collect();
+        if in_names.len() != 3 || out_names.len() != 3 {
+            return Err(FftbError::Unsupported(format!(
+                "only 3D transforms are supported (got `{in_dims}` -> `{out_dims}`)"
+            )));
+        }
+        // Locate the transformed dims in each tensor and derive the batch.
+        let mut batch_ext = 1usize;
+        let in_ext = input.global_extents();
+        for (i, d) in input.layout.dims.iter().enumerate() {
+            if !in_names.contains(&d.name.as_str()) {
+                batch_ext = batch_ext.checked_mul(in_ext[i]).unwrap();
+            }
+        }
+        for name in &in_names {
+            if input.layout.find(name).is_none() {
+                return Err(FftbError::Unsupported(format!(
+                    "input tensor has no dimension `{name}`"
+                )));
+            }
+        }
+        for name in &out_names {
+            if output.layout.find(name).is_none() {
+                return Err(FftbError::Unsupported(format!(
+                    "output tensor has no dimension `{name}`"
+                )));
+            }
+        }
+        let nb = batch_ext;
+
+        // Distribution signatures of the transformed dims: which of the
+        // three (by position in in_names) is on which grid axis.
+        let sig = |t: &DistTensor, names: &[&str]| -> Vec<Option<usize>> {
+            names
+                .iter()
+                .map(|n| t.layout.dims[t.layout.find(n).unwrap()].grid_axis)
+                .collect()
+        };
+        let in_sig = sig(input, &in_names);
+        let out_sig = sig(output, &out_names);
+
+        // Sphere input → plane-wave plan.
+        if input.is_sphere() {
+            if grid.ndim() != 1 {
+                return Err(FftbError::Unsupported(
+                    "plane-wave transforms require a 1D processing grid".into(),
+                ));
+            }
+            if in_sig != vec![Some(0), None, None] || out_sig != vec![None, None, Some(0)] {
+                return Err(FftbError::Unsupported(format!(
+                    "plane-wave pattern must distribute input x / output z on axis 0 \
+                     (got in={in_sig:?}, out={out_sig:?})"
+                )));
+            }
+            let off = Arc::clone(input.domains.offsets().unwrap());
+            let kind = if opts.pad_sphere_to_cube {
+                PlanKind::PaddedSphere(PaddedSpherePlan::new(off, nb, grid))
+            } else {
+                PlanKind::PlaneWave(PlaneWavePlan::new(off, nb, grid))
+            };
+            return Ok(Fftb { kind, sizes, nb });
+        }
+
+        // Dense cuboid patterns.
+        match grid.ndim() {
+            1 => {
+                if in_sig != vec![Some(0), None, None] || out_sig != vec![None, None, Some(0)] {
+                    return Err(FftbError::Unsupported(format!(
+                        "1D-grid pattern must be x{{0}} in / z{{0}} out \
+                         (got in={in_sig:?}, out={out_sig:?})"
+                    )));
+                }
+                let kind = if opts.force_non_batched && nb > 1 {
+                    PlanKind::SlabPencilLoop(NonBatchedLoop::new(sizes, nb, grid))
+                } else {
+                    PlanKind::SlabPencil(SlabPencilPlan::new(sizes, nb, grid))
+                };
+                Ok(Fftb { kind, sizes, nb })
+            }
+            2 => {
+                if in_sig != vec![None, Some(0), Some(1)]
+                    || out_sig != vec![Some(0), Some(1), None]
+                {
+                    return Err(FftbError::Unsupported(format!(
+                        "2D-grid pattern must be y{{0}} z{{1}} in / x{{0}} y{{1}} out \
+                         (got in={in_sig:?}, out={out_sig:?})"
+                    )));
+                }
+                Ok(Fftb { kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, grid)), sizes, nb })
+            }
+            3 => {
+                // Axis folding: run the pencil plan on the (d0*d1, d2) grid.
+                let folded = ProcGrid::new(
+                    &[grid.axis_len(0) * grid.axis_len(1), grid.axis_len(2)],
+                    grid.comm().clone(),
+                )?;
+                Ok(Fftb {
+                    kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, folded)),
+                    sizes,
+                    nb,
+                })
+            }
+            _ => Err(FftbError::Unsupported("grids beyond 3D are not supported".into())),
+        }
+    }
+
+    /// Execute the transform on this rank's local data.
+    pub fn execute(
+        &self,
+        backend: &dyn LocalFftBackend,
+        data: Vec<Complex>,
+        dir: Direction,
+    ) -> (Vec<Complex>, ExecTrace) {
+        match (&self.kind, dir) {
+            (PlanKind::SlabPencil(p), Direction::Forward) => p.forward(backend, data),
+            (PlanKind::SlabPencil(p), Direction::Inverse) => p.inverse(backend, data),
+            (PlanKind::SlabPencilLoop(p), Direction::Forward) => p.forward(backend, data),
+            (PlanKind::SlabPencilLoop(p), Direction::Inverse) => p.inverse(backend, data),
+            (PlanKind::Pencil(p), Direction::Forward) => p.forward(backend, data),
+            (PlanKind::Pencil(p), Direction::Inverse) => p.inverse(backend, data),
+            (PlanKind::PlaneWave(p), Direction::Forward) => p.forward(backend, data),
+            (PlanKind::PlaneWave(p), Direction::Inverse) => p.inverse(backend, data),
+            (PlanKind::PaddedSphere(p), Direction::Forward) => p.forward(backend, data),
+            (PlanKind::PaddedSphere(p), Direction::Inverse) => p.inverse(backend, data),
+        }
+    }
+
+    /// Local input buffer length expected by `execute(.., Forward)`.
+    pub fn input_len(&self) -> usize {
+        match &self.kind {
+            PlanKind::SlabPencil(p) => p.input_len(),
+            PlanKind::SlabPencilLoop(p) => p.input_len(),
+            PlanKind::Pencil(p) => p.input_len(),
+            PlanKind::PlaneWave(p) => p.input_len(),
+            PlanKind::PaddedSphere(p) => p.input_len(),
+        }
+    }
+
+    /// Local output buffer length produced by `execute(.., Forward)`.
+    pub fn output_len(&self) -> usize {
+        match &self.kind {
+            PlanKind::SlabPencil(p) => p.output_len(),
+            PlanKind::SlabPencilLoop(p) => p.output_len(),
+            PlanKind::Pencil(p) => p.output_len(),
+            PlanKind::PlaneWave(p) => p.output_len(),
+            PlanKind::PaddedSphere(p) => p.output_len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fftb::domain::{Domain, DomainList};
+    use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+    fn cube_tensors(
+        grid: &Arc<ProcGrid>,
+        n: usize,
+        in_layout: &str,
+        out_layout: &str,
+    ) -> (DistTensor, DistTensor) {
+        let d = || Domain::new(vec![0, 0, 0], vec![n as i64 - 1; 3]).unwrap();
+        let ti = DistTensor::zeros(DomainList::new(vec![d()]).unwrap(), in_layout, grid.clone())
+            .unwrap();
+        let to = DistTensor::zeros(DomainList::new(vec![d()]).unwrap(), out_layout, grid.clone())
+            .unwrap();
+        (ti, to)
+    }
+
+    #[test]
+    fn planner_selects_slab_pencil() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let (ti, to) = cube_tensors(&grid, 8, "x{0} y z", "X Y Z{0}");
+            let fx = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).unwrap();
+            assert!(matches!(fx.kind, PlanKind::SlabPencil(_)));
+            assert_eq!(fx.nb, 1);
+        });
+    }
+
+    #[test]
+    fn planner_selects_pencil_on_2d_grid() {
+        run_world(4, |comm| {
+            let grid = ProcGrid::new(&[2, 2], comm).unwrap();
+            let (ti, to) = cube_tensors(&grid, 8, "x y{0} z{1}", "X{0} Y{1} Z");
+            let fx = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).unwrap();
+            assert!(matches!(fx.kind, PlanKind::Pencil(_)));
+        });
+    }
+
+    #[test]
+    fn planner_folds_3d_grid() {
+        run_world(8, |comm| {
+            let grid = ProcGrid::new(&[2, 2, 2], comm).unwrap();
+            let (ti, to) = cube_tensors(&grid, 8, "x y{0} z{1}", "X{0} Y{1} Z");
+            let fx = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).unwrap();
+            assert!(matches!(fx.kind, PlanKind::Pencil(_)));
+        });
+    }
+
+    #[test]
+    fn planner_selects_planewave_for_sphere() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+            let off = Arc::new(spec.offsets());
+            let b = Domain::new(vec![0], vec![3]).unwrap();
+            let c = Domain::with_offsets(vec![0, 0, 0], vec![7, 7, 7], off).unwrap();
+            let ti = DistTensor::zeros(
+                DomainList::new(vec![b.clone(), c]).unwrap(),
+                "b x{0} y z",
+                grid.clone(),
+            )
+            .unwrap();
+            let co = Domain::new(vec![0, 0, 0], vec![7, 7, 7]).unwrap();
+            let to = DistTensor::zeros(
+                DomainList::new(vec![b, co]).unwrap(),
+                "B X Y Z{0}",
+                grid.clone(),
+            )
+            .unwrap();
+            let fx = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).unwrap();
+            assert!(matches!(fx.kind, PlanKind::PlaneWave(_)));
+            assert_eq!(fx.nb, 4);
+            assert_eq!(fx.input_len(), ti.local.len());
+            assert_eq!(fx.output_len(), to.local.len());
+        });
+    }
+
+    #[test]
+    fn planner_rejects_unknown_patterns() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            // Output distributed in y: not a predefined pattern.
+            let (ti, to) = cube_tensors(&grid, 8, "x{0} y z", "X Y{0} Z");
+            let e = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)));
+        });
+    }
+
+    #[test]
+    fn planner_rejects_missing_dimension_names() {
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let (ti, to) = cube_tensors(&grid, 4, "x y z", "X Y Z");
+            let e = Fftb::plan([4, 4, 4], &to, "X Y Z", &ti, "x y w", grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)));
+        });
+    }
+
+    #[test]
+    fn non_batched_option_changes_kind() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let b = Domain::new(vec![0], vec![3]).unwrap();
+            let c = Domain::new(vec![0, 0, 0], vec![7, 7, 7]).unwrap();
+            let ti = DistTensor::zeros(
+                DomainList::new(vec![b.clone(), c.clone()]).unwrap(),
+                "b x{0} y z",
+                grid.clone(),
+            )
+            .unwrap();
+            let to = DistTensor::zeros(
+                DomainList::new(vec![b, c]).unwrap(),
+                "B X Y Z{0}",
+                grid.clone(),
+            )
+            .unwrap();
+            let fx = Fftb::plan_opt(
+                [8, 8, 8],
+                &to,
+                "X Y Z",
+                &ti,
+                "x y z",
+                grid,
+                FftbOptions { force_non_batched: true, ..Default::default() },
+            )
+            .unwrap();
+            assert!(matches!(fx.kind, PlanKind::SlabPencilLoop(_)));
+        });
+    }
+}

@@ -1,0 +1,283 @@
+//! Pencil-pencil-pencil distributed 3D FFT on a 2D processing grid
+//! (paper Fig. 1b): three batches of 1D FFTs with two alltoall exchanges in
+//! the row/column sub-communicators.
+//!
+//! Input layout: `"b x y{0} z{1}"` — x dense, y cyclic over grid axis 0,
+//! z cyclic over grid axis 1. Local `[nb, nx, lyc0, lzc1]`.
+//!
+//! Forward stages:
+//! 1. `fft_x`    — x lines are complete locally,
+//! 2. `a2a_xy`   — row-comm alltoall trading the x split for a y split,
+//!    `fft_y`,
+//! 3. `a2a_yz`   — column-comm alltoall trading the y split for a z split,
+//!    `fft_z`.
+//!
+//! Output layout: `"b x{0} y{1} z"` — local `[nb, lxc0, lyc1, nz]`.
+//!
+//! 3D processing grids are supported by axis folding: a `(p0, p1, p2)` grid
+//! runs the pencil plan on the folded `(p0*p1, p2)` grid (see
+//! `Fftb::plan` in `plan/mod.rs`), which preserves the paper's API surface
+//! (Table 1: processing grid 1D/2D/3D) with the same communication volume.
+
+use std::sync::Arc;
+
+use crate::comm::alltoall::alltoallv_complex;
+use crate::comm::communicator::Comm;
+use crate::fft::complex::Complex;
+use crate::fft::dft::Direction;
+use crate::fftb::backend::{backend_fft_dim, LocalFftBackend};
+use crate::fftb::grid::{cyclic, ProcGrid};
+
+use super::redistribute::{merge_dim, split_dim};
+use super::stages::{ExecTrace, StageTimer};
+
+/// Batched pencil-decomposition 3D FFT plan on a 2D grid.
+pub struct PencilPlan {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub nb: usize,
+    grid: Arc<ProcGrid>,
+}
+
+impl PencilPlan {
+    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Self {
+        assert_eq!(grid.ndim(), 2, "pencil plan requires a 2D processing grid");
+        let (p0, p1) = (grid.axis_len(0), grid.axis_len(1));
+        assert!(
+            p0 <= shape[0] && p0 <= shape[1] && p1 <= shape[1] && p1 <= shape[2],
+            "pencil plan needs p0 <= min(nx, ny) and p1 <= min(ny, nz) \
+             (p0={p0}, p1={p1}, shape={shape:?})"
+        );
+        PencilPlan { nx: shape[0], ny: shape[1], nz: shape[2], nb, grid }
+    }
+
+    fn coords(&self) -> (usize, usize) {
+        (self.grid.axis_coord(0), self.grid.axis_coord(1))
+    }
+
+    fn sizes(&self) -> (usize, usize) {
+        (self.grid.axis_len(0), self.grid.axis_len(1))
+    }
+
+    /// Local input length `[nb, nx, lyc0, lzc1]`.
+    pub fn input_len(&self) -> usize {
+        let (p0, p1) = self.sizes();
+        let (r0, r1) = self.coords();
+        self.nb
+            * self.nx
+            * cyclic::local_count(self.ny, p0, r0)
+            * cyclic::local_count(self.nz, p1, r1)
+    }
+
+    /// Local output length `[nb, lxc0, lyc1, nz]`.
+    pub fn output_len(&self) -> usize {
+        let (p0, p1) = self.sizes();
+        let (r0, r1) = self.coords();
+        self.nb
+            * cyclic::local_count(self.nx, p0, r0)
+            * cyclic::local_count(self.ny, p1, r1)
+            * self.nz
+    }
+
+    pub fn forward(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        self.run(backend, input, Direction::Forward)
+    }
+
+    pub fn inverse(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        self.run(backend, input, Direction::Inverse)
+    }
+
+    fn exchange(
+        t: &mut StageTimer,
+        name: &'static str,
+        comm: &Comm,
+        blocks: Vec<Vec<Complex>>,
+    ) -> Vec<Vec<Complex>> {
+        let me = comm.rank();
+        t.comm(name, || {
+            let sent: u64 = blocks
+                .iter()
+                .enumerate()
+                .filter(|(s, _)| *s != me)
+                .map(|(_, b)| (b.len() * 16) as u64)
+                .sum();
+            let msgs = (comm.size() - 1) as u64;
+            (alltoallv_complex(comm, blocks), sent, msgs)
+        })
+    }
+
+    fn run(
+        &self,
+        backend: &dyn LocalFftBackend,
+        mut data: Vec<Complex>,
+        dir: Direction,
+    ) -> (Vec<Complex>, ExecTrace) {
+        let (p0, p1) = self.sizes();
+        let (r0, r1) = self.coords();
+        let row = self.grid.axis_comm(0);
+        let col = self.grid.axis_comm(1);
+        let lxc = cyclic::local_count(self.nx, p0, r0);
+        let lyc0 = cyclic::local_count(self.ny, p0, r0);
+        let lyc1 = cyclic::local_count(self.ny, p1, r1);
+        let lzc1 = cyclic::local_count(self.nz, p1, r1);
+        let mut trace = ExecTrace::default();
+        let mut t = StageTimer::new(&mut trace);
+        let lines = |total: usize, n: usize| backend.flops(total, n);
+
+        match dir {
+            Direction::Forward => {
+                assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
+                // 1. FFT x (dense locally).
+                let sh1 = [self.nb, self.nx, lyc0, lzc1];
+                t.compute("fft_x", lines(data.len(), self.nx), || {
+                    backend_fft_dim(backend, &mut data, &sh1, 1, dir);
+                });
+                // 2. Row alltoall: split x, merge y.
+                let blocks = t.reshape("pack_x", || split_dim(&data, sh1, 1, p0));
+                let recv = Self::exchange(&mut t, "a2a_xy", row, blocks);
+                let sh2 = [self.nb, lxc, self.ny, lzc1];
+                data = t.reshape("unpack_y", || merge_dim(&recv, sh2, 2, p0));
+                t.compute("fft_y", lines(data.len(), self.ny), || {
+                    backend_fft_dim(backend, &mut data, &sh2, 2, dir);
+                });
+                // 3. Column alltoall: split y, merge z.
+                let blocks = t.reshape("pack_y", || split_dim(&data, sh2, 2, p1));
+                let recv = Self::exchange(&mut t, "a2a_yz", col, blocks);
+                let sh3 = [self.nb, lxc, lyc1, self.nz];
+                data = t.reshape("unpack_z", || merge_dim(&recv, sh3, 3, p1));
+                t.compute("fft_z", lines(data.len(), self.nz), || {
+                    backend_fft_dim(backend, &mut data, &sh3, 3, dir);
+                });
+            }
+            Direction::Inverse => {
+                assert_eq!(data.len(), self.output_len(), "inverse: wrong input length");
+                let sh3 = [self.nb, lxc, lyc1, self.nz];
+                t.compute("ifft_z", lines(data.len(), self.nz), || {
+                    backend_fft_dim(backend, &mut data, &sh3, 3, dir);
+                });
+                let blocks = t.reshape("pack_z", || split_dim(&data, sh3, 3, p1));
+                let recv = Self::exchange(&mut t, "a2a_zy", col, blocks);
+                let sh2 = [self.nb, lxc, self.ny, lzc1];
+                data = t.reshape("unpack_y", || merge_dim(&recv, sh2, 2, p1));
+                t.compute("ifft_y", lines(data.len(), self.ny), || {
+                    backend_fft_dim(backend, &mut data, &sh2, 2, dir);
+                });
+                let blocks = t.reshape("pack_y", || split_dim(&data, sh2, 2, p0));
+                let recv = Self::exchange(&mut t, "a2a_yx", row, blocks);
+                let sh1 = [self.nb, self.nx, lyc0, lzc1];
+                data = t.reshape("unpack_x", || merge_dim(&recv, sh1, 1, p0));
+                t.compute("ifft_x", lines(data.len(), self.nx), || {
+                    backend_fft_dim(backend, &mut data, &sh1, 1, dir);
+                });
+            }
+        }
+        (data, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fft::complex::max_abs_diff;
+    use crate::fftb::backend::RustFftBackend;
+    use crate::fftb::plan::testutil::{gather_cube_xy, phased, scatter_cube_yz};
+
+    fn check(shape: [usize; 3], nb: usize, p0: usize, p1: usize) {
+        let [nx, ny, nz] = shape;
+        let global = phased(nb * nx * ny * nz, 17);
+        let mut want = global.clone();
+        let sh = [nb, nx, ny, nz];
+        for dim in 1..4 {
+            crate::fft::nd::fft_dim(&mut want, &sh, dim, Direction::Forward);
+        }
+        let outs = run_world(p0 * p1, |comm| {
+            let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
+            let plan = PencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = scatter_cube_yz(
+                &global,
+                nb,
+                shape,
+                p0,
+                grid.axis_coord(0),
+                p1,
+                grid.axis_coord(1),
+            );
+            let backend = RustFftBackend::new();
+            let (out, trace) = plan.forward(&backend, local);
+            assert_eq!(trace.stages.len(), 9);
+            out
+        });
+        let got = gather_cube_xy(&outs, nb, shape, p0, p1);
+        assert!(
+            max_abs_diff(&got, &want) < 1e-8 * (nx * ny * nz) as f64,
+            "shape={shape:?} nb={nb} grid=({p0},{p1})"
+        );
+    }
+
+    #[test]
+    fn matches_local_fft_various_grids() {
+        check([8, 8, 8], 1, 1, 1);
+        check([8, 8, 8], 1, 2, 2);
+        check([8, 8, 8], 2, 2, 3);
+        check([4, 6, 8], 1, 2, 2);
+        check([8, 8, 8], 1, 4, 2);
+        check([5, 6, 7], 2, 3, 2); // uneven everything
+    }
+
+    #[test]
+    fn round_trip_2d_grid() {
+        let shape = [8usize, 8, 8];
+        let nb = 2;
+        let (p0, p1) = (2usize, 2usize);
+        let global = phased(nb * 512, 23);
+        let errs = run_world(p0 * p1, |comm| {
+            let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
+            let plan = PencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = scatter_cube_yz(
+                &global,
+                nb,
+                shape,
+                p0,
+                grid.axis_coord(0),
+                p1,
+                grid.axis_coord(1),
+            );
+            let backend = RustFftBackend::new();
+            let (spec, _) = plan.forward(&backend, local.clone());
+            let (back, _) = plan.inverse(&backend, spec);
+            max_abs_diff(&back, &local)
+        });
+        for e in errs {
+            assert!(e < 1e-10);
+        }
+    }
+
+    #[test]
+    fn two_alltoalls_per_forward() {
+        let traces = run_world(4, |comm| {
+            let grid = ProcGrid::new(&[2, 2], comm).unwrap();
+            let plan = PencilPlan::new([4, 4, 4], 1, Arc::clone(&grid));
+            let local = vec![crate::fft::complex::ZERO; plan.input_len()];
+            let backend = RustFftBackend::new();
+            plan.forward(&backend, local).1
+        });
+        for tr in traces {
+            let comms = tr
+                .stages
+                .iter()
+                .filter(|s| s.kind == super::super::stages::StageKind::Comm)
+                .count();
+            assert_eq!(comms, 2);
+        }
+    }
+}

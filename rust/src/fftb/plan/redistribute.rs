@@ -1,0 +1,188 @@
+//! Pack/unpack helpers for the alltoall stages.
+//!
+//! Every distributed FFT stage exchanges one tensor dimension for another:
+//! the sending side *splits* a dense dimension by elemental-cyclic residue
+//! (one block per destination rank), the receiving side *merges* blocks back
+//! into a dense dimension. These are the CPU equivalents of the paper's
+//! "small codelets that pack and rotate the data locally on the GPU before
+//! communicating it over the network" (§4.1).
+//!
+//! Tensors are 4D `[nb, d1, d2, d3]`, column-major, batch fastest:
+//! `flat = b + nb*(i1 + d1*(i2 + d2*i3))`. Copies move whole `nb`-runs, so
+//! batching directly increases the contiguity of every pack/unpack — the
+//! mechanical reason batched transforms win in Fig. 9.
+
+use crate::fft::complex::{Complex, ZERO};
+use crate::fftb::grid::cyclic;
+
+/// Shape of a 4D local tensor.
+pub type Shape4 = [usize; 4];
+
+#[inline]
+pub fn volume(sh: Shape4) -> usize {
+    sh[0] * sh[1] * sh[2] * sh[3]
+}
+
+/// Split dimension `dim` (1, 2 or 3) by cyclic residue into `p` blocks.
+/// Block `s` keeps the indices `i ≡ s (mod p)` of `dim`, order preserved.
+pub fn split_dim(data: &[Complex], sh: Shape4, dim: usize, p: usize) -> Vec<Vec<Complex>> {
+    assert!((1..=3).contains(&dim), "cannot split the batch dimension");
+    assert_eq!(data.len(), volume(sh));
+    let [nb, d1, d2, d3] = sh;
+    let mut blocks: Vec<Vec<Complex>> = (0..p)
+        .map(|s| {
+            let mut bsh = sh;
+            bsh[dim] = cyclic::local_count(sh[dim], p, s);
+            Vec::with_capacity(volume(bsh))
+        })
+        .collect();
+    // Perf (EXPERIMENTS.md §Perf, L3 iteration 3): dim 3 splits whole
+    // contiguous (nb*d1*d2)-element planes — memcpy per plane instead of a
+    // per-element loop. This is the pack stage of every slab alltoall.
+    if dim == 3 {
+        let plane = nb * d1 * d2;
+        for i3 in 0..d3 {
+            blocks[i3 % p].extend_from_slice(&data[i3 * plane..(i3 + 1) * plane]);
+        }
+        return blocks;
+    }
+    // Iterate in destination-write order per block: (i3, i2, i1) outer to
+    // inner, nb contiguous. Pushing in this order yields each block already
+    // in canonical column-major order.
+    for i3 in 0..d3 {
+        for i2 in 0..d2 {
+            for i1 in 0..d1 {
+                let s = match dim {
+                    1 => i1 % p,
+                    2 => i2 % p,
+                    _ => i3 % p,
+                };
+                let src = nb * (i1 + d1 * (i2 + d2 * i3));
+                blocks[s].extend_from_slice(&data[src..src + nb]);
+            }
+        }
+    }
+    blocks
+}
+
+/// Merge `p` blocks into dense dimension `dim` of shape `sh_out`.
+/// Block `r` supplies the indices `i = j*p + r`. Inverse of [`split_dim`].
+pub fn merge_dim(blocks: &[Vec<Complex>], sh_out: Shape4, dim: usize, p: usize) -> Vec<Complex> {
+    assert!((1..=3).contains(&dim));
+    assert_eq!(blocks.len(), p);
+    let [nb, d1, d2, _d3] = sh_out;
+    let mut out = vec![ZERO; volume(sh_out)];
+    // Perf (§Perf, L3 iteration 3): dim-3 merges interleave whole
+    // contiguous planes — memcpy per plane (the unpack stage of the
+    // inverse slab alltoall).
+    if dim == 3 {
+        let plane = nb * d1 * d2;
+        for (r, block) in blocks.iter().enumerate() {
+            let b3 = cyclic::local_count(sh_out[3], p, r);
+            assert_eq!(block.len(), plane * b3, "merge_dim: block {r} has wrong size");
+            for (j3, src) in block.chunks_exact(plane).enumerate() {
+                let i3 = j3 * p + r;
+                out[i3 * plane..(i3 + 1) * plane].copy_from_slice(src);
+            }
+            let _ = b3;
+        }
+        return out;
+    }
+    // Walk each block in its canonical order and scatter.
+    for (r, block) in blocks.iter().enumerate() {
+        let mut bsh = sh_out;
+        bsh[dim] = cyclic::local_count(sh_out[dim], p, r);
+        assert_eq!(
+            block.len(),
+            volume(bsh),
+            "merge_dim: block {r} has wrong size (expected shape {bsh:?})"
+        );
+        let [_, b1, b2, b3] = bsh;
+        let mut src = 0;
+        for j3 in 0..b3 {
+            let i3 = if dim == 3 { j3 * p + r } else { j3 };
+            for j2 in 0..b2 {
+                let i2 = if dim == 2 { j2 * p + r } else { j2 };
+                for j1 in 0..b1 {
+                    let i1 = if dim == 1 { j1 * p + r } else { j1 };
+                    let dst = nb * (i1 + d1 * (i2 + d2 * i3));
+                    out[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
+                    src += nb;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract one batch entry `b` from a batch-fastest tensor (used by the
+/// non-batched variants that loop over single transforms).
+pub fn extract_band(data: &[Complex], nb: usize, b: usize) -> Vec<Complex> {
+    assert!(b < nb);
+    data.iter().skip(b).step_by(nb).copied().collect()
+}
+
+/// Write one batch entry back.
+pub fn insert_band(data: &mut [Complex], nb: usize, b: usize, band: &[Complex]) {
+    assert_eq!(data.len(), nb * band.len());
+    for (i, v) in band.iter().enumerate() {
+        data[b + nb * i] = *v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize) -> Vec<Complex> {
+        (0..n).map(|i| Complex::new(i as f64, -(i as f64) * 0.5)).collect()
+    }
+
+    #[test]
+    fn split_merge_round_trip_every_dim() {
+        let sh: Shape4 = [2, 5, 4, 6];
+        let data = seq(volume(sh));
+        for dim in 1..=3 {
+            for p in [1usize, 2, 3, 4] {
+                let blocks = split_dim(&data, sh, dim, p);
+                assert_eq!(blocks.len(), p);
+                let total: usize = blocks.iter().map(|b| b.len()).sum();
+                assert_eq!(total, data.len());
+                let back = merge_dim(&blocks, sh, dim, p);
+                assert_eq!(back, data, "dim={dim} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_block_sizes_are_cyclic_counts() {
+        let sh: Shape4 = [1, 7, 3, 2];
+        let data = seq(volume(sh));
+        let blocks = split_dim(&data, sh, 1, 3);
+        for (s, b) in blocks.iter().enumerate() {
+            assert_eq!(b.len(), cyclic::local_count(7, 3, s) * 3 * 2);
+        }
+    }
+
+    #[test]
+    fn split_dim1_values() {
+        // [nb=1, d1=4, d2=1, d3=1], p=2: block 0 = indices 0,2; block 1 = 1,3.
+        let data = seq(4);
+        let blocks = split_dim(&data, [1, 4, 1, 1], 1, 2);
+        assert_eq!(blocks[0], vec![data[0], data[2]]);
+        assert_eq!(blocks[1], vec![data[1], data[3]]);
+    }
+
+    #[test]
+    fn band_extract_insert_round_trip() {
+        let nb = 3;
+        let data = seq(nb * 5);
+        let mut rebuilt = vec![Complex::new(0.0, 0.0); data.len()];
+        for b in 0..nb {
+            let band = extract_band(&data, nb, b);
+            assert_eq!(band.len(), 5);
+            insert_band(&mut rebuilt, nb, b, &band);
+        }
+        assert_eq!(rebuilt, data);
+    }
+}

@@ -1,0 +1,281 @@
+//! Slab-pencil distributed 3D FFT on a 1D processing grid (paper Fig. 1a,
+//! Fig. 5/6): input distributed in `x`, output distributed in `z`.
+//!
+//! Forward stages (batched over `nb` transforms, batch fastest in memory):
+//!
+//! 1. `fft_yz`   — local FFTs along `y` and `z` (each rank owns full y/z for
+//!                 its cyclic x-pencils),
+//! 2. `a2a_xz`   — one alltoall exchanging the `x` split for a `z` split
+//!                 (blocks carry all `nb` bands at once — the batched
+//!                 aggregation of §4.2),
+//! 3. `fft_x`    — local FFT along the now-dense `x`.
+//!
+//! The inverse runs the mirror image. Local tensors are 4D
+//! `[nb, local_x, ny, nz]` / `[nb, nx, ny, local_z]`, column-major.
+
+use std::sync::Arc;
+
+use crate::comm::alltoall::alltoallv_complex;
+use crate::fft::complex::Complex;
+use crate::fft::dft::Direction;
+use crate::fftb::backend::{backend_fft_dim, LocalFftBackend};
+use crate::fftb::grid::{cyclic, ProcGrid};
+
+use super::redistribute::{merge_dim, split_dim};
+use super::stages::{ExecTrace, StageTimer};
+
+/// Plan for a batched slab-pencil 3D FFT of global shape `(nx, ny, nz)` on a
+/// 1D grid.
+pub struct SlabPencilPlan {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub nb: usize,
+    grid: Arc<ProcGrid>,
+}
+
+impl SlabPencilPlan {
+    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Self {
+        assert_eq!(grid.ndim(), 1, "slab-pencil requires a 1D processing grid");
+        let p = grid.size();
+        assert!(
+            p <= shape[0] && p <= shape[2],
+            "slab-pencil needs p <= nx and p <= nz (p={p}, shape={shape:?}); \
+             parallelize the batch dimension beyond that (see BatchedLoop)"
+        );
+        SlabPencilPlan { nx: shape[0], ny: shape[1], nz: shape[2], nb, grid }
+    }
+
+    fn p(&self) -> usize {
+        self.grid.size()
+    }
+
+    fn r(&self) -> usize {
+        self.grid.rank()
+    }
+
+    /// Local input length: `[nb, lxc, ny, nz]`.
+    pub fn input_len(&self) -> usize {
+        self.nb * cyclic::local_count(self.nx, self.p(), self.r()) * self.ny * self.nz
+    }
+
+    /// Local output length: `[nb, nx, ny, lzc]`.
+    pub fn output_len(&self) -> usize {
+        self.nb * self.nx * self.ny * cyclic::local_count(self.nz, self.p(), self.r())
+    }
+
+    /// Forward transform: consumes the x-distributed input, returns the
+    /// z-distributed spectrum and the per-rank execution trace.
+    pub fn forward(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        self.run(backend, input, Direction::Forward)
+    }
+
+    /// Inverse transform: consumes the z-distributed spectrum, returns the
+    /// x-distributed data.
+    pub fn inverse(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        self.run(backend, input, Direction::Inverse)
+    }
+
+    fn run(
+        &self,
+        backend: &dyn LocalFftBackend,
+        mut data: Vec<Complex>,
+        dir: Direction,
+    ) -> (Vec<Complex>, ExecTrace) {
+        let (p, r) = (self.p(), self.r());
+        let comm = self.grid.axis_comm(0);
+        let lxc = cyclic::local_count(self.nx, p, r);
+        let lzc = cyclic::local_count(self.nz, p, r);
+        let mut trace = ExecTrace::default();
+        let mut t = StageTimer::new(&mut trace);
+        let lines = |total: usize, n: usize| backend.flops(total, n);
+
+        match dir {
+            Direction::Forward => {
+                assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
+                let sh_in = [self.nb, lxc, self.ny, self.nz];
+                // 1. Local FFT along y and z.
+                t.compute(
+                    "fft_yz",
+                    lines(data.len(), self.ny) + lines(data.len(), self.nz),
+                    || {
+                        backend_fft_dim(backend, &mut data, &sh_in, 2, dir);
+                        backend_fft_dim(backend, &mut data, &sh_in, 3, dir);
+                    },
+                );
+                // 2. Alltoall: trade x split for z split.
+                let blocks = t.reshape("pack_z", || split_dim(&data, sh_in, 3, p));
+                let recv = t.comm("a2a_xz", || {
+                    let sent: u64 = blocks
+                        .iter()
+                        .enumerate()
+                        .filter(|(s, _)| *s != r)
+                        .map(|(_, b)| (b.len() * 16) as u64)
+                        .sum();
+                    (alltoallv_complex(comm, blocks), sent, (p - 1) as u64)
+                });
+                // Receiving block from rank q: shape [nb, lxc_q, ny, lzc_me];
+                // merge along dim 1 (x becomes dense).
+                let sh_out = [self.nb, self.nx, self.ny, lzc];
+                data = t.reshape("unpack_x", || merge_dim(&recv, sh_out, 1, p));
+                // 3. Local FFT along dense x.
+                t.compute("fft_x", lines(data.len(), self.nx), || {
+                    backend_fft_dim(backend, &mut data, &sh_out, 1, dir);
+                });
+            }
+            Direction::Inverse => {
+                assert_eq!(data.len(), self.output_len(), "inverse: wrong input length");
+                let sh_in = [self.nb, self.nx, self.ny, lzc];
+                t.compute("ifft_x", lines(data.len(), self.nx), || {
+                    backend_fft_dim(backend, &mut data, &sh_in, 1, dir);
+                });
+                let blocks = t.reshape("pack_x", || split_dim(&data, sh_in, 1, p));
+                let recv = t.comm("a2a_zx", || {
+                    let sent: u64 = blocks
+                        .iter()
+                        .enumerate()
+                        .filter(|(s, _)| *s != r)
+                        .map(|(_, b)| (b.len() * 16) as u64)
+                        .sum();
+                    (alltoallv_complex(comm, blocks), sent, (p - 1) as u64)
+                });
+                let sh_out = [self.nb, lxc, self.ny, self.nz];
+                data = t.reshape("unpack_z", || merge_dim(&recv, sh_out, 3, p));
+                t.compute(
+                    "ifft_yz",
+                    lines(data.len(), self.ny) + lines(data.len(), self.nz),
+                    || {
+                        backend_fft_dim(backend, &mut data, &sh_out, 2, dir);
+                        backend_fft_dim(backend, &mut data, &sh_out, 3, dir);
+                    },
+                );
+            }
+        }
+        (data, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fft::complex::{max_abs_diff, ZERO};
+    use crate::fft::nd::fft_nd;
+    use crate::fftb::backend::RustFftBackend;
+    use crate::fftb::plan::testutil::{gather_cube_z, phased, scatter_cube_x};
+
+    /// Distributed forward FFT must equal the local 4D reference
+    /// (FFT over dims 1..3 of [nb, nx, ny, nz]).
+    fn check(shape: [usize; 3], nb: usize, p: usize) {
+        let [nx, ny, nz] = shape;
+        let global: Vec<Complex> = phased(nb * nx * ny * nz, 42);
+        // Local oracle.
+        let mut want = global.clone();
+        let sh = [nb, nx, ny, nz];
+        for dim in 1..4 {
+            crate::fft::nd::fft_dim(&mut want, &sh, dim, Direction::Forward);
+        }
+
+        let got_slabs = run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
+            let backend = RustFftBackend::new();
+            let (out, trace) = plan.forward(&backend, local);
+            assert_eq!(trace.stages.len(), 5);
+            out
+        });
+        let got = gather_cube_z(&got_slabs, nb, shape, p);
+        assert!(
+            max_abs_diff(&got, &want) < 1e-8 * (nx * ny * nz) as f64,
+            "shape={shape:?} nb={nb} p={p}"
+        );
+    }
+
+    #[test]
+    fn matches_local_fft_various() {
+        check([8, 8, 8], 1, 1);
+        check([8, 8, 8], 1, 2);
+        check([8, 8, 8], 1, 4);
+        check([8, 4, 8], 2, 2);
+        check([16, 8, 8], 3, 4);
+        check([6, 5, 6], 2, 3); // non-pow2, uneven cyclic
+    }
+
+    #[test]
+    fn forward_inverse_round_trip() {
+        let shape = [8usize, 8, 8];
+        let nb = 2;
+        let p = 4;
+        let global = phased(nb * 512, 7);
+        let outs = run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
+            let backend = RustFftBackend::new();
+            let (spec, _) = plan.forward(&backend, local.clone());
+            let (back, _) = plan.inverse(&backend, spec);
+            max_abs_diff(&back, &local)
+        });
+        for e in outs {
+            assert!(e < 1e-10, "round-trip error {e}");
+        }
+    }
+
+    #[test]
+    fn trace_accounts_comm_volume() {
+        // p=2, each rank sends half its data (minus the self block).
+        let shape = [4usize, 4, 4];
+        let nb = 2;
+        let p = 2;
+        let traces = run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = vec![ZERO; plan.input_len()];
+            let backend = RustFftBackend::new();
+            let (_, trace) = plan.forward(&backend, local);
+            trace
+        });
+        for tr in traces {
+            // Local data = nb*2*4*4 = 64 elems; one of two z-residue blocks
+            // goes remote: 32 elems = 512 bytes.
+            assert_eq!(tr.comm_bytes(), 512);
+            assert_eq!(tr.comm_messages(), 1);
+        }
+    }
+
+    #[test]
+    fn too_many_ranks_rejected() {
+        let outs = run_world(4, |comm| {
+            let grid = ProcGrid::new(&[4], comm).unwrap();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                SlabPencilPlan::new([2, 8, 8], 1, grid)
+            }))
+            .is_err()
+        });
+        assert!(outs.iter().all(|&rejected| rejected));
+    }
+
+    #[test]
+    fn single_rank_equals_local_fft3() {
+        let shape = [8usize, 4, 2];
+        let x = phased(64, 3);
+        let outs = run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let plan = SlabPencilPlan::new(shape, 1, Arc::clone(&grid));
+            let backend = RustFftBackend::new();
+            plan.forward(&backend, x.clone()).0
+        });
+        let mut want = x;
+        fft_nd(&mut want, &shape, Direction::Forward);
+        assert!(max_abs_diff(&outs[0], &want) < 1e-10);
+    }
+}

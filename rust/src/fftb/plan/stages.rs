@@ -1,0 +1,169 @@
+//! Execution traces: what every stage did, how long it took, what it moved.
+//!
+//! Each distributed transform execution produces an [`ExecTrace`] per rank.
+//! The benches aggregate traces across ranks (max per stage ≈ the critical
+//! path) and the performance model (`crate::model`) re-prices the recorded
+//! communication volumes for a target machine — this is how the Fig. 9
+//! projections beyond the live thread count are produced.
+
+use std::time::Duration;
+
+/// What kind of work a stage did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    /// Local FFT compute (+ the pack/unpack around it).
+    Compute,
+    /// An alltoall exchange.
+    Comm,
+    /// Local data reshaping only (scatter/gather, padding, transposes).
+    Reshape,
+}
+
+/// One stage of one execution on one rank.
+#[derive(Clone, Debug)]
+pub struct StageTrace {
+    pub name: &'static str,
+    pub kind: StageKind,
+    pub elapsed: Duration,
+    /// Bytes this rank sent to *other* ranks in this stage (0 for compute).
+    pub bytes_sent: u64,
+    /// Number of point-to-point messages sent (0 for compute).
+    pub messages: u64,
+    /// Complex-FLOP estimate of local compute (0 for comm).
+    pub flops: f64,
+}
+
+/// Trace of one full transform execution on one rank.
+#[derive(Clone, Debug, Default)]
+pub struct ExecTrace {
+    pub stages: Vec<StageTrace>,
+}
+
+impl ExecTrace {
+    pub fn push(
+        &mut self,
+        name: &'static str,
+        kind: StageKind,
+        elapsed: Duration,
+        bytes_sent: u64,
+        messages: u64,
+        flops: f64,
+    ) {
+        self.stages.push(StageTrace { name, kind, elapsed, bytes_sent, messages, flops });
+    }
+
+    pub fn total_time(&self) -> Duration {
+        self.stages.iter().map(|s| s.elapsed).sum()
+    }
+
+    pub fn comm_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.bytes_sent).sum()
+    }
+
+    pub fn comm_messages(&self) -> u64 {
+        self.stages.iter().map(|s| s.messages).sum()
+    }
+
+    pub fn compute_flops(&self) -> f64 {
+        self.stages.iter().map(|s| s.flops).sum()
+    }
+
+    /// Merge per-rank traces into a critical-path view: per stage, the max
+    /// elapsed over ranks and the max bytes/messages (the slowest rank
+    /// gates an alltoall).
+    pub fn critical_path(traces: &[ExecTrace]) -> ExecTrace {
+        assert!(!traces.is_empty());
+        let nstages = traces[0].stages.len();
+        for t in traces {
+            assert_eq!(t.stages.len(), nstages, "ranks disagree on stage count");
+        }
+        let mut out = ExecTrace::default();
+        for i in 0..nstages {
+            let s0 = &traces[0].stages[i];
+            out.push(
+                s0.name,
+                s0.kind,
+                traces.iter().map(|t| t.stages[i].elapsed).max().unwrap(),
+                traces.iter().map(|t| t.stages[i].bytes_sent).max().unwrap(),
+                traces.iter().map(|t| t.stages[i].messages).max().unwrap(),
+                traces.iter().map(|t| t.stages[i].flops).fold(0.0, f64::max),
+            );
+        }
+        out
+    }
+
+    /// Short human-readable summary, one line per stage.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for st in &self.stages {
+            s.push_str(&format!(
+                "{:<24} {:?} {:>10.3?} {:>12} B {:>6} msgs {:>12.0} flops\n",
+                st.name, st.kind, st.elapsed, st.bytes_sent, st.messages, st.flops
+            ));
+        }
+        s
+    }
+}
+
+/// Helper to time a closure and record the stage in one call.
+pub struct StageTimer<'a> {
+    trace: &'a mut ExecTrace,
+}
+
+impl<'a> StageTimer<'a> {
+    pub fn new(trace: &'a mut ExecTrace) -> Self {
+        StageTimer { trace }
+    }
+
+    pub fn compute<R>(&mut self, name: &'static str, flops: f64, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.trace.push(name, StageKind::Compute, t0.elapsed(), 0, 0, flops);
+        r
+    }
+
+    pub fn reshape<R>(&mut self, name: &'static str, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.trace.push(name, StageKind::Reshape, t0.elapsed(), 0, 0, 0.0);
+        r
+    }
+
+    /// `f` must return (result, bytes_sent, messages).
+    pub fn comm<R>(&mut self, name: &'static str, f: impl FnOnce() -> (R, u64, u64)) -> R {
+        let t0 = std::time::Instant::now();
+        let (r, bytes, msgs) = f();
+        self.trace.push(name, StageKind::Comm, t0.elapsed(), bytes, msgs, 0.0);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_records_stages() {
+        let mut trace = ExecTrace::default();
+        let mut t = StageTimer::new(&mut trace);
+        let v = t.compute("fft_z", 100.0, || 42);
+        assert_eq!(v, 42);
+        t.comm("a2a", || ((), 1024, 3));
+        assert_eq!(trace.stages.len(), 2);
+        assert_eq!(trace.comm_bytes(), 1024);
+        assert_eq!(trace.comm_messages(), 3);
+        assert_eq!(trace.compute_flops(), 100.0);
+    }
+
+    #[test]
+    fn critical_path_takes_max() {
+        let mk = |ms: u64, bytes: u64| {
+            let mut t = ExecTrace::default();
+            t.push("s", StageKind::Comm, Duration::from_millis(ms), bytes, 1, 0.0);
+            t
+        };
+        let cp = ExecTrace::critical_path(&[mk(5, 10), mk(9, 3), mk(2, 7)]);
+        assert_eq!(cp.stages[0].elapsed, Duration::from_millis(9));
+        assert_eq!(cp.stages[0].bytes_sent, 10);
+    }
+}

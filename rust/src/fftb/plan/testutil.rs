@@ -1,0 +1,250 @@
+//! Scatter/gather helpers between a *global* batched cube and the per-rank
+//! local layouts of the distributed plans. Used by tests, examples and the
+//! benches to stage inputs and validate outputs against the single-node
+//! substrate. (Not a test-only module: the examples use it to build
+//! demonstration workloads.)
+//!
+//! Global cubes are `[nb, nx, ny, nz]` column-major, batch fastest.
+
+use crate::fft::complex::{Complex, ZERO};
+use crate::fftb::grid::cyclic;
+
+/// Deterministic quasi-random data (no rand dependency).
+pub fn phased(n: usize, seed: u64) -> Vec<Complex> {
+    (0..n)
+        .map(|i| {
+            let t = (i as f64 + 0.21 * seed as f64) * 1.618_033_9;
+            Complex::new((2.0 * t).sin(), (0.5 + t).cos())
+        })
+        .collect()
+}
+
+/// Extract rank `r`'s x-distributed slice `[nb, lxc, ny, nz]`.
+pub fn scatter_cube_x(
+    global: &[Complex],
+    nb: usize,
+    shape: [usize; 3],
+    p: usize,
+    r: usize,
+) -> Vec<Complex> {
+    let [nx, ny, nz] = shape;
+    assert_eq!(global.len(), nb * nx * ny * nz);
+    let lxc = cyclic::local_count(nx, p, r);
+    let mut out = Vec::with_capacity(nb * lxc * ny * nz);
+    for iz in 0..nz {
+        for iy in 0..ny {
+            for lx in 0..lxc {
+                let gx = cyclic::local_to_global(lx, p, r);
+                let src = nb * (gx + nx * (iy + ny * iz));
+                out.extend_from_slice(&global[src..src + nb]);
+            }
+        }
+    }
+    out
+}
+
+/// Assemble the global cube from all ranks' z-distributed slabs
+/// `[nb, nx, ny, lzc_r]`.
+pub fn gather_cube_z(
+    slabs: &[Vec<Complex>],
+    nb: usize,
+    shape: [usize; 3],
+    p: usize,
+) -> Vec<Complex> {
+    let [nx, ny, nz] = shape;
+    assert_eq!(slabs.len(), p);
+    let mut out = vec![ZERO; nb * nx * ny * nz];
+    for (r, slab) in slabs.iter().enumerate() {
+        let lzc = cyclic::local_count(nz, p, r);
+        assert_eq!(slab.len(), nb * nx * ny * lzc, "rank {r} slab size");
+        for lz in 0..lzc {
+            let gz = cyclic::local_to_global(lz, p, r);
+            for iy in 0..ny {
+                for ix in 0..nx {
+                    let src = nb * (ix + nx * (iy + ny * lz));
+                    let dst = nb * (ix + nx * (iy + ny * gz));
+                    out[dst..dst + nb].copy_from_slice(&slab[src..src + nb]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract rank `r`'s z-distributed slab `[nb, nx, ny, lzc]`.
+pub fn scatter_cube_z(
+    global: &[Complex],
+    nb: usize,
+    shape: [usize; 3],
+    p: usize,
+    r: usize,
+) -> Vec<Complex> {
+    let [nx, ny, nz] = shape;
+    assert_eq!(global.len(), nb * nx * ny * nz);
+    let lzc = cyclic::local_count(nz, p, r);
+    let mut out = Vec::with_capacity(nb * nx * ny * lzc);
+    for lz in 0..lzc {
+        let gz = cyclic::local_to_global(lz, p, r);
+        for iy in 0..ny {
+            for ix in 0..nx {
+                let src = nb * (ix + nx * (iy + ny * gz));
+                out.extend_from_slice(&global[src..src + nb]);
+            }
+        }
+    }
+    out
+}
+
+/// Assemble the global cube from all ranks' x-distributed slices.
+pub fn gather_cube_x(
+    slices: &[Vec<Complex>],
+    nb: usize,
+    shape: [usize; 3],
+    p: usize,
+) -> Vec<Complex> {
+    let [nx, ny, nz] = shape;
+    let mut out = vec![ZERO; nb * nx * ny * nz];
+    for (r, slice) in slices.iter().enumerate() {
+        let lxc = cyclic::local_count(nx, p, r);
+        assert_eq!(slice.len(), nb * lxc * ny * nz, "rank {r} slice size");
+        let mut src = 0;
+        for iz in 0..nz {
+            for iy in 0..ny {
+                for lx in 0..lxc {
+                    let gx = cyclic::local_to_global(lx, p, r);
+                    let dst = nb * (gx + nx * (iy + ny * iz));
+                    out[dst..dst + nb].copy_from_slice(&slice[src..src + nb]);
+                    src += nb;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract rank `(r0, r1)`'s slice `[nb, nx, lyc0, lzc1]` for the 2D-grid
+/// pencil plan (y cyclic over axis 0, z cyclic over axis 1).
+pub fn scatter_cube_yz(
+    global: &[Complex],
+    nb: usize,
+    shape: [usize; 3],
+    p0: usize,
+    r0: usize,
+    p1: usize,
+    r1: usize,
+) -> Vec<Complex> {
+    let [nx, ny, nz] = shape;
+    let lyc = cyclic::local_count(ny, p0, r0);
+    let lzc = cyclic::local_count(nz, p1, r1);
+    let mut out = Vec::with_capacity(nb * nx * lyc * lzc);
+    for lz in 0..lzc {
+        let gz = cyclic::local_to_global(lz, p1, r1);
+        for ly in 0..lyc {
+            let gy = cyclic::local_to_global(ly, p0, r0);
+            for ix in 0..nx {
+                let src = nb * (ix + nx * (gy + ny * gz));
+                out.extend_from_slice(&global[src..src + nb]);
+            }
+        }
+    }
+    out
+}
+
+/// Assemble the global cube from the pencil plan's outputs
+/// `[nb, lxc0, lyc1, nz]` (x cyclic over axis 0, y cyclic over axis 1).
+/// `slices[r]` comes from grid rank `r = r0 + p0*r1`.
+pub fn gather_cube_xy(
+    slices: &[Vec<Complex>],
+    nb: usize,
+    shape: [usize; 3],
+    p0: usize,
+    p1: usize,
+) -> Vec<Complex> {
+    let [nx, ny, nz] = shape;
+    assert_eq!(slices.len(), p0 * p1);
+    let mut out = vec![ZERO; nb * nx * ny * nz];
+    for r1 in 0..p1 {
+        for r0 in 0..p0 {
+            let slice = &slices[r0 + p0 * r1];
+            let lxc = cyclic::local_count(nx, p0, r0);
+            let lyc = cyclic::local_count(ny, p1, r1);
+            assert_eq!(slice.len(), nb * lxc * lyc * nz);
+            let mut src = 0;
+            for gz in 0..nz {
+                for ly in 0..lyc {
+                    let gy = cyclic::local_to_global(ly, p1, r1);
+                    for lx in 0..lxc {
+                        let gx = cyclic::local_to_global(lx, p0, r0);
+                        let dst = nb * (gx + nx * (gy + ny * gz));
+                        out[dst..dst + nb].copy_from_slice(&slice[src..src + nb]);
+                        src += nb;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_gather_x_round_trip() {
+        let shape = [5usize, 3, 4];
+        let nb = 2;
+        let global = phased(nb * 60, 1);
+        for p in [1usize, 2, 3] {
+            let slices: Vec<_> =
+                (0..p).map(|r| scatter_cube_x(&global, nb, shape, p, r)).collect();
+            let back = gather_cube_x(&slices, nb, shape, p);
+            assert_eq!(back, global, "p={p}");
+        }
+    }
+
+    #[test]
+    fn scatter_gather_z_round_trip() {
+        let shape = [4usize, 4, 6];
+        let nb = 3;
+        let global = phased(nb * 96, 2);
+        for p in [1usize, 2, 4] {
+            let slabs: Vec<_> =
+                (0..p).map(|r| scatter_cube_z(&global, nb, shape, p, r)).collect();
+            let back = gather_cube_z(&slabs, nb, shape, p);
+            assert_eq!(back, global, "p={p}");
+        }
+    }
+
+    #[test]
+    fn scatter_gather_2d_grid_round_trip() {
+        let shape = [4usize, 6, 6];
+        let nb = 1;
+        let global = phased(144, 3);
+        let (p0, p1) = (2usize, 3usize);
+        // Build xy-distributed slices by scattering with the output layout,
+        // then gather.
+        let mut slices = Vec::new();
+        for r1 in 0..p1 {
+            for r0 in 0..p0 {
+                // output layout [nb, lxc0, lyc1, nz]
+                let lxc = cyclic::local_count(shape[0], p0, r0);
+                let lyc = cyclic::local_count(shape[1], p1, r1);
+                let mut s = Vec::new();
+                for gz in 0..shape[2] {
+                    for ly in 0..lyc {
+                        let gy = cyclic::local_to_global(ly, p1, r1);
+                        for lx in 0..lxc {
+                            let gx = cyclic::local_to_global(lx, p0, r0);
+                            let src = nb * (gx + shape[0] * (gy + shape[1] * gz));
+                            s.extend_from_slice(&global[src..src + nb]);
+                        }
+                    }
+                }
+                slices.push(s);
+            }
+        }
+        let back = gather_cube_xy(&slices, nb, shape, p0, p1);
+        assert_eq!(back, global);
+    }
+}

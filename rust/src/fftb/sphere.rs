@@ -1,0 +1,437 @@
+//! Cut-off spheres and the CSR-like offset array (paper §2.2/§3.3, Fig. 7).
+//!
+//! Plane-wave wavefunctions keep only the Fourier coefficients with
+//! `|g|^2 / 2 <= E_cut` (Eq. 9). Projecting the retained points onto the
+//! xy-plane gives, for every `(x, y)` column, a small set of contiguous
+//! z-runs — "like a Compressed Sparse Row format because only the z
+//! dimension is compressed, while the x and y dimensions are kept as dense"
+//! (paper §3.3). `OffsetArray` is that structure; `SphereSpec` builds it for
+//! the two sphere conventions used in practice:
+//!
+//! * `Centered` — the literal sphere of Fig. 2/7, centered in the box
+//!   (each column is one contiguous run);
+//! * `Wrapped` — the physical G-space convention where negative frequencies
+//!   wrap to the top of the grid (up to two runs per column).
+
+use super::grid::cyclic;
+use crate::fft::complex::{Complex, ZERO};
+
+/// Sphere placement convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SphereKind {
+    Centered,
+    Wrapped,
+}
+
+/// One contiguous z-run: `z0..z0+len`.
+pub type Run = (u32, u32);
+
+/// CSR-like projection of a sphere onto the xy-plane (Fig. 7).
+///
+/// Columns are indexed `c = x + nx*y`. `col_ptr[c]..col_ptr[c+1]` indexes
+/// `runs`; `col_elem[c]` is the element offset of column `c` in the packed
+/// coefficient vector (elements ordered column-by-column, z ascending within
+/// a column).
+#[derive(Clone, Debug)]
+pub struct OffsetArray {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    col_ptr: Vec<u32>,
+    runs: Vec<Run>,
+    col_elem: Vec<u64>,
+}
+
+impl OffsetArray {
+    /// Build from a per-column list of z-runs (must be sorted, non-adjacent).
+    pub fn from_runs(nx: usize, ny: usize, nz: usize, per_col: Vec<Vec<Run>>) -> Self {
+        assert_eq!(per_col.len(), nx * ny);
+        let mut col_ptr = Vec::with_capacity(nx * ny + 1);
+        let mut col_elem = Vec::with_capacity(nx * ny + 1);
+        let mut runs = Vec::new();
+        let mut elems = 0u64;
+        col_ptr.push(0);
+        col_elem.push(0);
+        for col in &per_col {
+            let mut last_end: i64 = -1;
+            for &(z0, len) in col {
+                assert!(len > 0, "empty run");
+                assert!((z0 as usize) + (len as usize) <= nz, "run exceeds nz");
+                assert!(z0 as i64 > last_end, "runs must be sorted and non-adjacent");
+                last_end = z0 as i64 + len as i64 - 1;
+                elems += len as u64;
+                runs.push((z0, len));
+            }
+            col_ptr.push(runs.len() as u32);
+            col_elem.push(elems);
+        }
+        OffsetArray { nx, ny, nz, col_ptr, runs, col_elem }
+    }
+
+    /// Total number of retained points.
+    pub fn total(&self) -> usize {
+        *self.col_elem.last().unwrap() as usize
+    }
+
+    /// z-runs of column `(x, y)`.
+    pub fn col_runs(&self, x: usize, y: usize) -> &[Run] {
+        let c = x + self.nx * y;
+        &self.runs[self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize]
+    }
+
+    /// Packed-vector element offset of column `(x, y)`.
+    pub fn col_offset(&self, x: usize, y: usize) -> usize {
+        self.col_elem[x + self.nx * y] as usize
+    }
+
+    /// Number of retained z's in column `(x, y)`.
+    pub fn col_len(&self, x: usize, y: usize) -> usize {
+        let c = x + self.nx * y;
+        (self.col_elem[c + 1] - self.col_elem[c]) as usize
+    }
+
+    /// Is any point retained in column `(x, y)`?
+    pub fn col_nonempty(&self, x: usize, y: usize) -> bool {
+        self.col_len(x, y) > 0
+    }
+
+    /// All non-empty `(x, y)` columns — the projection disc.
+    pub fn disc_columns(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for y in 0..self.ny {
+            for x in 0..self.nx {
+                if self.col_nonempty(x, y) {
+                    out.push((x, y));
+                }
+            }
+        }
+        out
+    }
+
+    /// For each x: maximal runs of y with a non-empty column (the disc's
+    /// cross-section, used by the staged y-padding pass).
+    pub fn y_runs_per_x(&self) -> Vec<Vec<Run>> {
+        (0..self.nx)
+            .map(|x| {
+                runs_of(&(0..self.ny).map(|y| self.col_nonempty(x, y)).collect::<Vec<_>>())
+            })
+            .collect()
+    }
+
+    /// Maximal runs of x that have any non-empty column (staged x-padding).
+    pub fn x_runs(&self) -> Vec<Run> {
+        runs_of(
+            &(0..self.nx)
+                .map(|x| (0..self.ny).any(|y| self.col_nonempty(x, y)))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Restrict to the x's owned by rank `r` of a `p`-rank axis under the
+    /// elemental-cyclic distribution. Column `(lx, y)` of the result is
+    /// global column `(lx*p + r, y)`.
+    pub fn restrict_x_cyclic(&self, p: usize, r: usize) -> OffsetArray {
+        let lnx = cyclic::local_count(self.nx, p, r);
+        let per_col: Vec<Vec<Run>> = (0..self.ny)
+            .flat_map(|y| {
+                (0..lnx).map(move |lx| (cyclic::local_to_global(lx, p, r), y))
+            })
+            .map(|(gx, y)| self.col_runs(gx, y).to_vec())
+            .collect();
+        OffsetArray::from_runs(lnx, self.ny, self.nz, per_col)
+    }
+
+    /// Scatter a packed coefficient vector (batch fastest: element `e` of
+    /// band `b` at `b + nb*e`) into full z-columns laid out as
+    /// `(b, z, column)` — i.e. for each non-empty column a dense z-line of
+    /// `nb*nz`, zero-padded outside the runs. Returns the dense buffer and
+    /// the column order used.
+    pub fn scatter_z(&self, packed: &[Complex], nb: usize) -> (Vec<Complex>, Vec<(usize, usize)>) {
+        assert_eq!(packed.len(), nb * self.total());
+        let cols = self.disc_columns();
+        let mut out = vec![ZERO; nb * self.nz * cols.len()];
+        for (ci, &(x, y)) in cols.iter().enumerate() {
+            let mut e = self.col_offset(x, y);
+            let base = ci * nb * self.nz;
+            for &(z0, len) in self.col_runs(x, y) {
+                for z in z0 as usize..(z0 + len) as usize {
+                    let dst = base + nb * z;
+                    let src = nb * e;
+                    out[dst..dst + nb].copy_from_slice(&packed[src..src + nb]);
+                    e += 1;
+                }
+            }
+        }
+        (out, cols)
+    }
+
+    /// Inverse of [`scatter_z`]: gather the run elements of each dense
+    /// z-column back into packed order (truncation — the inverse transform's
+    /// final step).
+    pub fn gather_z(&self, dense: &[Complex], nb: usize) -> Vec<Complex> {
+        let cols = self.disc_columns();
+        assert_eq!(dense.len(), nb * self.nz * cols.len());
+        let mut out = vec![ZERO; nb * self.total()];
+        for (ci, &(x, y)) in cols.iter().enumerate() {
+            let mut e = self.col_offset(x, y);
+            let base = ci * nb * self.nz;
+            for &(z0, len) in self.col_runs(x, y) {
+                for z in z0 as usize..(z0 + len) as usize {
+                    let src = base + nb * z;
+                    let dst = nb * e;
+                    out[dst..dst + nb].copy_from_slice(&dense[src..src + nb]);
+                    e += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Maximal runs of `true` in a boolean mask.
+fn runs_of(mask: &[bool]) -> Vec<Run> {
+    let mut out = Vec::new();
+    let mut start: Option<usize> = None;
+    for (i, &m) in mask.iter().enumerate() {
+        match (m, start) {
+            (true, None) => start = Some(i),
+            (false, Some(s)) => {
+                out.push((s as u32, (i - s) as u32));
+                start = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some(s) = start {
+        out.push((s as u32, (mask.len() - s) as u32));
+    }
+    out
+}
+
+/// A cut-off sphere specification over an `n0 x n1 x n2` FFT grid.
+#[derive(Clone, Debug)]
+pub struct SphereSpec {
+    pub n: [usize; 3],
+    pub radius: f64,
+    pub kind: SphereKind,
+}
+
+impl SphereSpec {
+    pub fn new(n: [usize; 3], radius: f64, kind: SphereKind) -> Self {
+        SphereSpec { n, radius, kind }
+    }
+
+    /// Signed frequency of grid index `i` on a length-`n` axis.
+    fn freq(i: usize, n: usize, kind: SphereKind) -> f64 {
+        match kind {
+            SphereKind::Centered => i as f64 - (n / 2) as f64,
+            SphereKind::Wrapped => {
+                if i <= n / 2 {
+                    i as f64
+                } else {
+                    i as f64 - n as f64
+                }
+            }
+        }
+    }
+
+    /// Is grid point `(x, y, z)` inside the sphere?
+    pub fn contains(&self, x: usize, y: usize, z: usize) -> bool {
+        let fx = Self::freq(x, self.n[0], self.kind);
+        let fy = Self::freq(y, self.n[1], self.kind);
+        let fz = Self::freq(z, self.n[2], self.kind);
+        fx * fx + fy * fy + fz * fz <= self.radius * self.radius + 1e-9
+    }
+
+    /// Build the CSR offset array (Fig. 7).
+    pub fn offsets(&self) -> OffsetArray {
+        let [nx, ny, nz] = self.n;
+        let mut per_col = Vec::with_capacity(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                let mask: Vec<bool> = (0..nz).map(|z| self.contains(x, y, z)).collect();
+                per_col.push(runs_of(&mask));
+            }
+        }
+        // per_col is indexed c = x + nx*y: the inner loop above runs x
+        // fastest, matching OffsetArray's convention.
+        OffsetArray::from_runs(nx, ny, nz, per_col)
+    }
+
+    /// Sphere built from an energy cutoff (Eq. 9): `|g|^2/2 <= E_cut` with
+    /// `g` in grid units — radius `sqrt(2 E_cut)`.
+    pub fn from_ecut(n: [usize; 3], ecut: f64, kind: SphereKind) -> Self {
+        SphereSpec::new(n, (2.0 * ecut).sqrt(), kind)
+    }
+}
+
+/// Scatter a packed sphere into the full cube (the paper's Fig. 2 approach:
+/// "pad the entire sphere by embedding it into a cube"). Column-major cube
+/// `(x fastest)`, batch fastest within each element: `b + nb*(x + nx*(y + ny*z))`.
+pub fn sphere_to_cube(off: &OffsetArray, packed: &[Complex], nb: usize) -> Vec<Complex> {
+    assert_eq!(packed.len(), nb * off.total());
+    let (nx, ny, nz) = (off.nx, off.ny, off.nz);
+    let mut cube = vec![ZERO; nb * nx * ny * nz];
+    for y in 0..ny {
+        for x in 0..nx {
+            let mut e = off.col_offset(x, y);
+            for &(z0, len) in off.col_runs(x, y) {
+                for z in z0 as usize..(z0 + len) as usize {
+                    let dst = nb * (x + nx * (y + ny * z));
+                    let src = nb * e;
+                    cube[dst..dst + nb].copy_from_slice(&packed[src..src + nb]);
+                    e += 1;
+                }
+            }
+        }
+    }
+    cube
+}
+
+/// Gather the sphere elements back out of a full cube (truncation).
+pub fn cube_to_sphere(off: &OffsetArray, cube: &[Complex], nb: usize) -> Vec<Complex> {
+    let (nx, ny, nz) = (off.nx, off.ny, off.nz);
+    assert_eq!(cube.len(), nb * nx * ny * nz);
+    let mut packed = vec![ZERO; nb * off.total()];
+    for y in 0..ny {
+        for x in 0..nx {
+            let mut e = off.col_offset(x, y);
+            for &(z0, len) in off.col_runs(x, y) {
+                for z in z0 as usize..(z0 + len) as usize {
+                    let src = nb * (x + nx * (y + ny * z));
+                    let dst = nb * e;
+                    packed[dst..dst + nb].copy_from_slice(&cube[src..src + nb]);
+                    e += 1;
+                }
+            }
+        }
+    }
+    packed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centered_sphere_volume_ratio() {
+        // d = n/2 sphere in an n-cube: volume ratio ~ pi/48 ~ 0.0654
+        // (the paper's "data increased by almost 16 times").
+        let n = 32;
+        let s = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = s.offsets();
+        let ratio = off.total() as f64 / (n * n * n) as f64;
+        assert!(ratio > 0.04 && ratio < 0.09, "ratio={ratio}");
+        // Paper: cube is ~16x the sphere data.
+        let blowup = (n * n * n) as f64 / off.total() as f64;
+        assert!(blowup > 11.0 && blowup < 25.0, "blowup={blowup}");
+    }
+
+    #[test]
+    fn centered_columns_single_run() {
+        let s = SphereSpec::new([16, 16, 16], 4.0, SphereKind::Centered);
+        let off = s.offsets();
+        for y in 0..16 {
+            for x in 0..16 {
+                assert!(off.col_runs(x, y).len() <= 1);
+            }
+        }
+        assert!(off.total() > 0);
+    }
+
+    #[test]
+    fn wrapped_columns_at_most_two_runs() {
+        let s = SphereSpec::new([16, 16, 16], 5.0, SphereKind::Wrapped);
+        let off = s.offsets();
+        let mut saw_two = false;
+        for y in 0..16 {
+            for x in 0..16 {
+                let r = off.col_runs(x, y).len();
+                assert!(r <= 2, "column ({x},{y}) has {r} runs");
+                saw_two |= r == 2;
+            }
+        }
+        assert!(saw_two, "wrapped sphere should split some columns");
+    }
+
+    #[test]
+    fn offsets_match_contains() {
+        let s = SphereSpec::new([12, 10, 14], 3.7, SphereKind::Wrapped);
+        let off = s.offsets();
+        let mut count = 0;
+        for z in 0..14 {
+            for y in 0..10 {
+                for x in 0..12 {
+                    let inside = s.contains(x, y, z);
+                    let in_runs = off
+                        .col_runs(x, y)
+                        .iter()
+                        .any(|&(z0, len)| (z0 as usize..(z0 + len) as usize).contains(&z));
+                    assert_eq!(inside, in_runs, "({x},{y},{z})");
+                    count += inside as usize;
+                }
+            }
+        }
+        assert_eq!(count, off.total());
+    }
+
+    #[test]
+    fn cube_round_trip() {
+        let s = SphereSpec::new([8, 8, 8], 2.5, SphereKind::Centered);
+        let off = s.offsets();
+        let nb = 3;
+        let packed: Vec<Complex> = (0..nb * off.total())
+            .map(|i| Complex::new(i as f64, -(i as f64)))
+            .collect();
+        let cube = sphere_to_cube(&off, &packed, nb);
+        let back = cube_to_sphere(&off, &cube, nb);
+        assert_eq!(packed, back);
+        // Everything outside the sphere is zero.
+        let nonzero = cube.iter().filter(|v| v.re != 0.0 || v.im != 0.0).count();
+        assert!(nonzero <= nb * off.total());
+    }
+
+    #[test]
+    fn scatter_gather_z_round_trip() {
+        let s = SphereSpec::new([8, 8, 8], 2.9, SphereKind::Wrapped);
+        let off = s.offsets();
+        let nb = 2;
+        let packed: Vec<Complex> =
+            (0..nb * off.total()).map(|i| Complex::new(1.0 + i as f64, 0.5)).collect();
+        let (dense, cols) = off.scatter_z(&packed, nb);
+        assert_eq!(cols.len(), off.disc_columns().len());
+        let back = off.gather_z(&dense, nb);
+        assert_eq!(packed, back);
+    }
+
+    #[test]
+    fn restrict_x_cyclic_partitions_totals() {
+        let s = SphereSpec::new([16, 16, 16], 6.0, SphereKind::Centered);
+        let off = s.offsets();
+        for p in [1usize, 2, 3, 4] {
+            let total: usize = (0..p).map(|r| off.restrict_x_cyclic(p, r).total()).sum();
+            assert_eq!(total, off.total(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn disc_and_x_runs_consistent() {
+        let s = SphereSpec::new([16, 16, 16], 5.0, SphereKind::Centered);
+        let off = s.offsets();
+        let disc = off.disc_columns();
+        let yruns = off.y_runs_per_x();
+        let count: usize =
+            yruns.iter().map(|rs| rs.iter().map(|r| r.1 as usize).sum::<usize>()).sum();
+        assert_eq!(count, disc.len());
+        let xr = off.x_runs();
+        let xs: usize = xr.iter().map(|r| r.1 as usize).sum();
+        let disc_xs: std::collections::HashSet<usize> = disc.iter().map(|&(x, _)| x).collect();
+        assert_eq!(xs, disc_xs.len());
+    }
+
+    #[test]
+    fn ecut_radius() {
+        let s = SphereSpec::from_ecut([8, 8, 8], 8.0, SphereKind::Wrapped);
+        assert!((s.radius - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Distributed tensors (paper §3.2, Fig. 6 line 11 / Fig. 8 line 19):
+//! a domain list + a layout string + a processing grid, plus this rank's
+//! local slice of the data.
+
+use std::sync::Arc;
+
+use super::domain::DomainList;
+use super::error::{FftbError, Result};
+use super::grid::{cyclic, ProcGrid};
+use super::layout::Layout;
+use crate::fft::complex::{Complex, ZERO};
+
+/// A distributed tensor descriptor + this rank's local buffer.
+///
+/// Global element `(g_0, ..., g_{k-1})` (dimension order = layout order,
+/// first fastest in memory) lives on the rank whose grid coordinate on each
+/// distributed axis equals `g_i % grid.dims[axis]`, at local index
+/// `g_i / grid.dims[axis]` (elemental cyclic). Tensors with an offset array
+/// store only the sphere points (packed, see `sphere::OffsetArray`).
+#[derive(Clone)]
+pub struct DistTensor {
+    pub domains: DomainList,
+    pub layout: Layout,
+    pub grid: Arc<ProcGrid>,
+    /// Local data slice (dense tensors: column-major local box; sphere
+    /// tensors: packed coefficients of the locally-owned columns).
+    pub local: Vec<Complex>,
+}
+
+impl DistTensor {
+    /// Create a zero-initialized distributed tensor (the `tensor ti = ...`
+    /// constructor of Fig. 6/8).
+    pub fn zeros(domains: DomainList, layout_str: &str, grid: Arc<ProcGrid>) -> Result<Self> {
+        let layout = Layout::parse(layout_str)?;
+        if layout.ndim() != domains.rank() {
+            return Err(FftbError::Shape(format!(
+                "layout `{}` has {} dims but domains have rank {}",
+                layout.to_string_form(),
+                layout.ndim(),
+                domains.rank()
+            )));
+        }
+        for (_, axis) in layout.distributed() {
+            if axis >= grid.ndim() {
+                return Err(FftbError::Grid(format!(
+                    "layout references grid axis {axis} but grid is {}D",
+                    grid.ndim()
+                )));
+            }
+        }
+        let n = Self::local_len(&domains, &layout, &grid)?;
+        Ok(DistTensor { domains, layout, grid, local: vec![ZERO; n] })
+    }
+
+    /// Local extent of each dimension (dense part; sphere tensors return the
+    /// bounding-box extents with the compressed dimension reported as the
+    /// *packed* total divided across columns — use `local_len` for storage).
+    pub fn local_extents(&self) -> Vec<usize> {
+        Self::extents_on(&self.domains, &self.layout, &self.grid)
+    }
+
+    fn extents_on(domains: &DomainList, layout: &Layout, grid: &ProcGrid) -> Vec<usize> {
+        let glob = domains.extents();
+        layout
+            .dims
+            .iter()
+            .zip(glob)
+            .map(|(d, n)| match d.grid_axis {
+                Some(a) => cyclic::local_count(n, grid.axis_len(a), grid.axis_coord(a)),
+                None => n,
+            })
+            .collect()
+    }
+
+    /// Number of locally stored elements.
+    pub fn local_len(domains: &DomainList, layout: &Layout, grid: &ProcGrid) -> Result<usize> {
+        match domains.offsets() {
+            None => Ok(Self::extents_on(domains, layout, grid).iter().product()),
+            Some(off) => {
+                // Sphere tensors: supported distribution is over the x
+                // dimension (or fully local). Batch dims are dense.
+                let dist = layout.distributed();
+                if dist.len() > 1 {
+                    return Err(FftbError::Unsupported(
+                        "sphere tensors support at most one distributed dimension".into(),
+                    ));
+                }
+                // Dense (non-offset) dims contribute their full extent; the
+                // sphere contributes its packed local total.
+                let mut dense: usize = 1;
+                for part in &domains.parts {
+                    if part.offsets.is_none() {
+                        dense *= part.volume();
+                    }
+                }
+                match dist.first() {
+                    None => Ok(dense * off.total()),
+                    Some(&(dim, axis)) => {
+                        // The distributed dim must be the sphere's x.
+                        let name = &layout.dims[dim].name;
+                        if name != "x" {
+                            return Err(FftbError::Unsupported(format!(
+                                "sphere tensors must distribute `x`, got `{name}`"
+                            )));
+                        }
+                        let p = grid.axis_len(axis);
+                        let r = grid.axis_coord(axis);
+                        Ok(dense * off.restrict_x_cyclic(p, r).total())
+                    }
+                }
+            }
+        }
+    }
+
+    /// Global extents in layout order.
+    pub fn global_extents(&self) -> Vec<usize> {
+        self.domains.extents()
+    }
+
+    /// Does this tensor carry sphere offsets?
+    pub fn is_sphere(&self) -> bool {
+        self.domains.offsets().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fftb::domain::Domain;
+    use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+    #[test]
+    fn dense_tensor_local_extents() {
+        let outs = run_world(4, |comm| {
+            let grid = ProcGrid::new(&[4], comm).unwrap();
+            let d = Domain::new(vec![0, 0, 0], vec![15, 15, 15]).unwrap();
+            let t = DistTensor::zeros(
+                DomainList::new(vec![d]).unwrap(),
+                "x{0} y z",
+                grid,
+            )
+            .unwrap();
+            (t.local_extents(), t.local.len())
+        });
+        for (ext, len) in outs {
+            assert_eq!(ext, vec![4, 16, 16]);
+            assert_eq!(len, 4 * 16 * 16);
+        }
+    }
+
+    #[test]
+    fn uneven_cyclic_extents() {
+        let outs = run_world(3, |comm| {
+            let grid = ProcGrid::new(&[3], comm).unwrap();
+            let d = Domain::new(vec![0, 0, 0], vec![6, 4, 4]).unwrap(); // 7x5x5
+            let t = DistTensor::zeros(DomainList::new(vec![d]).unwrap(), "x{0} y z", grid)
+                .unwrap();
+            t.local_extents()[0]
+        });
+        assert_eq!(outs, vec![3, 2, 2]); // 7 = 3+2+2 cyclic
+    }
+
+    #[test]
+    fn sphere_tensor_partitions_points() {
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+        let total = spec.offsets().total();
+        let outs = run_world(2, move |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let off = Arc::new(spec.offsets());
+            let b = Domain::new(vec![0], vec![3]).unwrap();
+            let c = Domain::with_offsets(vec![0, 0, 0], vec![7, 7, 7], off).unwrap();
+            let t = DistTensor::zeros(
+                DomainList::new(vec![b, c]).unwrap(),
+                "b x{0} y z",
+                grid,
+            )
+            .unwrap();
+            t.local.len()
+        });
+        assert_eq!(outs.iter().sum::<usize>(), 4 * total);
+    }
+
+    #[test]
+    fn layout_rank_mismatch_rejected() {
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let d = Domain::new(vec![0, 0, 0], vec![7, 7, 7]).unwrap();
+            let r = DistTensor::zeros(DomainList::new(vec![d]).unwrap(), "x y", grid);
+            assert!(r.is_err());
+        });
+    }
+
+    #[test]
+    fn bad_grid_axis_rejected() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let d = Domain::new(vec![0, 0, 0], vec![7, 7, 7]).unwrap();
+            let r = DistTensor::zeros(DomainList::new(vec![d]).unwrap(), "x{1} y z", grid);
+            assert!(r.is_err());
+        });
+    }
+}

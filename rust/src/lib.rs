@@ -1,0 +1,15 @@
+//! FFTB-rs — flexible distributed multi-dimensional FFTs for plane-wave
+//! Density Functional Theory codes.
+//!
+//! Reproduction of Popovici et al., "Flexible Multi-Dimensional FFTs for
+//! Plane Wave Density Functional Theory Codes" (CS.DC 2024). See DESIGN.md
+//! for the full architecture and EXPERIMENTS.md for the measured results.
+
+pub mod comm;
+pub mod coordinator;
+pub mod dft;
+pub mod fft;
+pub mod fftb;
+pub mod model;
+pub mod runtime;
+pub mod util;

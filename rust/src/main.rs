@@ -1,0 +1,280 @@
+//! `fftb` — CLI launcher for the FFTB-rs distributed FFT framework.
+//!
+//! Subcommands (hand-rolled parsing: the offline dependency set has no clap):
+//!
+//! ```text
+//! fftb info                              # artifact manifest + capability table
+//! fftb transform [--n N] [--nb B] [--p P] [--sphere R] [--pjrt] [--iters K]
+//! fftb dft [--n N] [--bands B] [--p P] [--ecut E] [--iters K]
+//! fftb fig9 [--live-p P] [--live-n N] [--live-nb B]
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::dft::{solve_bands, EigenOptions, GaussianWells, Hamiltonian, Lattice};
+use fftb::fftb::backend::{LocalFftBackend, RustFftBackend};
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{ExecTrace, PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::model::{fig9_row, Machine, Variant, Workload};
+use fftb::runtime::{PjrtFftBackend, PjrtRuntime};
+use fftb::util::stats;
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn make_backend(use_pjrt: bool) -> Arc<dyn LocalFftBackend> {
+    if use_pjrt {
+        match PjrtRuntime::open("artifacts") {
+            Ok(rt) => {
+                eprintln!("backend: pjrt-pallas (artifacts/)");
+                return Arc::new(PjrtFftBackend::new(Arc::new(rt)));
+            }
+            Err(e) => eprintln!("warning: PJRT unavailable ({e:#}); falling back to rust"),
+        }
+    }
+    eprintln!("backend: rust-stockham");
+    Arc::new(RustFftBackend::new())
+}
+
+fn cmd_info() {
+    println!("FFTB-rs — flexible distributed FFTs for plane-wave DFT codes");
+    println!();
+    println!("Capability matrix (paper Table 1, FFTB row):");
+    println!("  transform type : CtoC (forward + inverse)");
+    println!("  input/output   : cuboid grids AND cut-off spheres (CSR offsets)");
+    println!("  processing grid: 1D (slab-pencil), 2D (pencil), 3D (folded pencil)");
+    println!("  batching       : batched alltoalls or per-band loop");
+    println!();
+    match PjrtRuntime::open("artifacts") {
+        Ok(rt) => {
+            println!(
+                "artifacts: {} entries, batch tile {}",
+                rt.manifest().entries.len(),
+                rt.manifest().batch
+            );
+            println!("  fft line sizes: {:?}", rt.manifest().fft_sizes());
+        }
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+}
+
+fn print_trace(label: &str, trace: &ExecTrace) {
+    println!("--- {label} ---");
+    print!("{}", trace.summary());
+    println!(
+        "total {:?}  comm {} B in {} msgs",
+        trace.total_time(),
+        trace.comm_bytes(),
+        trace.comm_messages()
+    );
+}
+
+fn cmd_transform(args: &Args) {
+    let n: usize = args.get("n", 64);
+    let nb: usize = args.get("nb", 4);
+    let p: usize = args.get("p", 4);
+    let iters: usize = args.get("iters", 3);
+    let sphere_r: f64 = args.get("sphere", 0.0);
+    let backend = make_backend(args.has("pjrt"));
+
+    if sphere_r > 0.0 {
+        println!("plane-wave transform: sphere r={sphere_r} in {n}^3, nb={nb}, p={p}");
+        let spec = SphereSpec::new([n, n, n], sphere_r, SphereKind::Centered);
+        let off = Arc::new(spec.offsets());
+        println!(
+            "sphere: {} points ({:.1}% of cube), disc {} columns",
+            off.total(),
+            100.0 * off.total() as f64 / (n * n * n) as f64,
+            off.disc_columns().len()
+        );
+        let backend = Arc::clone(&backend);
+        let traces = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid));
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            let mut last = None;
+            for _ in 0..iters {
+                let (_, tr) = plan.forward(backend.as_ref(), input.clone());
+                last = Some(tr);
+            }
+            last.unwrap()
+        });
+        print_trace("plane-wave forward (slowest rank)", &ExecTrace::critical_path(&traces));
+    } else {
+        println!("cuboid transform: {n}^3, nb={nb}, p={p} (slab-pencil)");
+        let backend = Arc::clone(&backend);
+        let traces = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            let mut last = None;
+            for _ in 0..iters {
+                let (spec, tr1) = plan.forward(backend.as_ref(), input.clone());
+                let (_, _tr2) = plan.inverse(backend.as_ref(), spec);
+                last = Some(tr1);
+            }
+            last.unwrap()
+        });
+        print_trace("forward (slowest rank)", &ExecTrace::critical_path(&traces));
+    }
+}
+
+fn cmd_dft(args: &Args) {
+    let n: usize = args.get("n", 16);
+    let nb: usize = args.get("bands", 4);
+    let p: usize = args.get("p", 2);
+    let ecut: f64 = args.get("ecut", 3.0);
+    let iters: usize = args.get("iters", 150);
+    let backend = make_backend(args.has("pjrt"));
+
+    println!("mini plane-wave DFT: grid {n}^3, ecut={ecut}, {nb} bands, {p} ranks");
+    let results = run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+        let lat = Lattice::new(10.0, n, ecut);
+        let npw = lat.n_pw();
+        let h = Hamiltonian::new(lat, nb, &GaussianWells::dimer(2.5, 1.2, 0.3), grid);
+        let mut psi =
+            fftb::util::prng::Prng::new(7 + comm.rank() as u64).complex_vec(nb * h.n_local());
+        let res = solve_bands(
+            &h,
+            backend.as_ref(),
+            &comm,
+            &mut psi,
+            &EigenOptions { max_iters: iters, tol: 1e-6, ..Default::default() },
+        );
+        let density = fftb::dft::build_density(&h, backend.as_ref(), &comm, &psi);
+        (res, npw, density.charge)
+    });
+    let (res, npw, charge) = &results[0];
+    println!("plane waves: {npw}");
+    println!("iterations : {}", res.iterations);
+    println!("charge     : {charge:.6} (expect {nb})");
+    for (b, (ev, rn)) in res.eigenvalues.iter().zip(&res.residuals).enumerate() {
+        println!("  band {b}: eps = {ev:+.6}  |r| = {rn:.2e}");
+    }
+}
+
+fn cmd_fig9(args: &Args) {
+    let live_p: usize = args.get("live-p", 8);
+    let live_n: usize = args.get("live-n", 32);
+    let live_nb: usize = args.get("live-nb", 8);
+
+    println!("# Fig. 9 — strong scaling, live (reduced size) + modeled (paper scale)");
+    println!("## live: cube {live_n}^3, nb={live_nb}, sphere d={}", live_n / 2);
+    let mut p = 1;
+    while p <= live_p {
+        let row = live_row(live_n, live_nb, p);
+        println!(
+            "p={p:>3}  slab-b {:>10}  slab-nb {:>10}  pw {:>10}",
+            stats::fmt_duration(row.0),
+            stats::fmt_duration(row.1),
+            stats::fmt_duration(row.2)
+        );
+        p *= 2;
+    }
+
+    println!("## modeled: cube 256^3, nb=256, sphere d=128, perlmutter-a100");
+    let spec = SphereSpec::new([256, 256, 256], 64.0, SphereKind::Centered);
+    let off = spec.offsets();
+    let w = Workload { shape: [256, 256, 256], nb: 256, offsets: &off };
+    let m = Machine::perlmutter_a100();
+    println!("p, {}", Variant::all().map(|v| v.label()).join(", "));
+    let mut p = 4;
+    while p <= 1024 {
+        let row = fig9_row(&w, p, &m);
+        println!(
+            "{p}, {}",
+            row.iter().map(|t| format!("{t:.4}")).collect::<Vec<_>>().join(", ")
+        );
+        p *= 2;
+    }
+}
+
+/// One live Fig. 9 row: (slab batched, slab non-batched, plane-wave).
+fn live_row(
+    n: usize,
+    nb: usize,
+    p: usize,
+) -> (std::time::Duration, std::time::Duration, std::time::Duration) {
+    use fftb::fftb::plan::NonBatchedLoop;
+    let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+    let times = run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let backend = RustFftBackend::new();
+        let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
+        let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
+        let pw = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid));
+
+        let input = phased(slab.input_len(), 3);
+        let s1 = fftb::util::stats::bench(1, 3, || {
+            let _ = slab.forward(&backend, input.clone());
+        });
+        let s2 = fftb::util::stats::bench(1, 2, || {
+            let _ = looped.forward(&backend, input.clone());
+        });
+        let pw_in = phased(pw.input_len(), 4);
+        let s3 = fftb::util::stats::bench(1, 3, || {
+            let _ = pw.forward(&backend, pw_in.clone());
+        });
+        (s1.mean(), s2.mean(), s3.mean())
+    });
+    (
+        times.iter().map(|t| t.0).max().unwrap(),
+        times.iter().map(|t| t.1).max().unwrap(),
+        times.iter().map(|t| t.2).max().unwrap(),
+    )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("info");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "info" => cmd_info(),
+        "transform" => cmd_transform(&args),
+        "dft" => cmd_dft(&args),
+        "fig9" => cmd_fig9(&args),
+        other => {
+            eprintln!("unknown subcommand `{other}`");
+            eprintln!("usage: fftb <info|transform|dft|fig9> [--flags]");
+            std::process::exit(2);
+        }
+    }
+}

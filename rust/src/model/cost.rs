@@ -1,0 +1,229 @@
+//! Exact per-stage cost counts for each plan variant.
+//!
+//! These formulas mirror the plan implementations stage by stage (and are
+//! tested against the live traces): flops from line counts, pack/unpack
+//! bytes from buffer sizes, alltoall bytes from the cyclic block split.
+//! `max` over ranks is taken by evaluating rank 0, which owns the ceil of
+//! every cyclic split.
+
+use crate::fft::batch::fft_flops;
+use crate::fftb::grid::cyclic;
+use crate::fftb::sphere::OffsetArray;
+
+pub const BYTES_PER_ELEM: f64 = 16.0; // f64 complex
+
+/// One stage's worth of priced work on the slowest rank.
+#[derive(Clone, Debug)]
+pub struct StageCost {
+    pub name: &'static str,
+    pub flops: f64,
+    /// Local bytes touched by pack/unpack/scatter around this stage.
+    pub touched_bytes: f64,
+    /// Bytes this rank puts on the wire (one alltoall), 0 for compute.
+    pub a2a_bytes: f64,
+    /// Number of alltoall invocations this stage performs (non-batched
+    /// variants loop; each invocation carries a2a_bytes / rounds).
+    pub rounds: usize,
+}
+
+impl StageCost {
+    fn compute(name: &'static str, flops: f64, touched: f64) -> Self {
+        StageCost { name, flops, touched_bytes: touched, a2a_bytes: 0.0, rounds: 0 }
+    }
+
+    fn comm(name: &'static str, bytes: f64, rounds: usize) -> Self {
+        StageCost { name, flops: 0.0, touched_bytes: 0.0, a2a_bytes: bytes, rounds }
+    }
+}
+
+/// Full variant cost: stage list + the communicator size each alltoall uses.
+#[derive(Clone, Debug)]
+pub struct PlanCost {
+    pub stages: Vec<StageCost>,
+    /// Ranks participating in each alltoall (1D grid: p; 2D: the axis size).
+    pub a2a_ranks: Vec<usize>,
+}
+
+impl PlanCost {
+    pub fn total_flops(&self) -> f64 {
+        self.stages.iter().map(|s| s.flops).sum()
+    }
+
+    pub fn total_a2a_bytes(&self) -> f64 {
+        self.stages.iter().map(|s| s.a2a_bytes).sum()
+    }
+}
+
+/// Batched slab-pencil forward on a 1D grid of `p` ranks.
+pub fn slab_pencil(shape: [usize; 3], nb: usize, p: usize, batched: bool) -> PlanCost {
+    let [nx, ny, nz] = shape;
+    let lxc = cyclic::local_count(nx, p, 0);
+    let lzc = cyclic::local_count(nz, p, 0);
+    let local = (nb * lxc * ny * nz) as f64;
+    let out_local = (nb * nx * ny * lzc) as f64;
+
+    let fft_yz = (nb * lxc * nz) as f64 * fft_flops(ny) + (nb * lxc * ny) as f64 * fft_flops(nz);
+    let fft_x = (nb * ny * lzc) as f64 * fft_flops(nx);
+    let a2a_bytes = local * BYTES_PER_ELEM * (p - 1) as f64 / p as f64;
+    let rounds = if batched { 1 } else { nb };
+
+    PlanCost {
+        stages: vec![
+            // pack/unpack touch the full local buffer twice (gather+scatter).
+            StageCost::compute("fft_yz", fft_yz, 4.0 * local * BYTES_PER_ELEM),
+            StageCost::compute("pack_z", 0.0, 2.0 * local * BYTES_PER_ELEM),
+            StageCost::comm("a2a_xz", a2a_bytes, rounds),
+            StageCost::compute("unpack_x", 0.0, 2.0 * out_local * BYTES_PER_ELEM),
+            StageCost::compute("fft_x", fft_x, 4.0 * out_local * BYTES_PER_ELEM),
+        ],
+        a2a_ranks: vec![p],
+    }
+}
+
+/// Pencil-pencil forward on a `p0 x p1` grid.
+pub fn pencil(shape: [usize; 3], nb: usize, p0: usize, p1: usize, batched: bool) -> PlanCost {
+    let [nx, ny, nz] = shape;
+    let lyc0 = cyclic::local_count(ny, p0, 0);
+    let lzc1 = cyclic::local_count(nz, p1, 0);
+    let lxc0 = cyclic::local_count(nx, p0, 0);
+    let lyc1 = cyclic::local_count(ny, p1, 0);
+
+    let v1 = (nb * nx * lyc0 * lzc1) as f64; // after stage 1
+    let v2 = (nb * lxc0 * ny * lzc1) as f64; // after first exchange
+    let v3 = (nb * lxc0 * lyc1 * nz) as f64; // after second exchange
+
+    let rounds = if batched { 1 } else { nb };
+    PlanCost {
+        stages: vec![
+            StageCost::compute(
+                "fft_x",
+                (nb * lyc0 * lzc1) as f64 * fft_flops(nx),
+                4.0 * v1 * BYTES_PER_ELEM,
+            ),
+            StageCost::comm("a2a_xy", v1 * BYTES_PER_ELEM * (p0 - 1) as f64 / p0 as f64, rounds),
+            StageCost::compute(
+                "fft_y",
+                (nb * lxc0 * lzc1) as f64 * fft_flops(ny),
+                (2.0 * v1 + 2.0 * v2 + 4.0 * v2) * BYTES_PER_ELEM,
+            ),
+            StageCost::comm("a2a_yz", v2 * BYTES_PER_ELEM * (p1 - 1) as f64 / p1 as f64, rounds),
+            StageCost::compute(
+                "fft_z",
+                (nb * lxc0 * lyc1) as f64 * fft_flops(nz),
+                (2.0 * v2 + 2.0 * v3 + 4.0 * v3) * BYTES_PER_ELEM,
+            ),
+        ],
+        a2a_ranks: vec![p0, p1],
+    }
+}
+
+/// Plane-wave staged-padding forward on a 1D grid, from the *real* offset
+/// array (exact disc/sphere counts).
+pub fn planewave(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
+    let (nx, ny, nz) = (off.nx, off.ny, off.nz);
+    let lzc = cyclic::local_count(nz, p, 0);
+    // Worst rank: rank 0 owns ceil of the x columns.
+    let local_off = off.restrict_x_cyclic(p, 0);
+    let my_cols = local_off.disc_columns().len() as f64;
+    let my_pts = local_off.total() as f64;
+    let disc_xs = off.x_runs().iter().map(|r| r.1 as usize).sum::<usize>() as f64;
+
+    let cyl = nb as f64 * my_cols * nz as f64; // dense z-columns
+    let slab = (nb * nx * ny * lzc) as f64;
+
+    PlanCost {
+        stages: vec![
+            StageCost::compute(
+                "pad_fft_z",
+                nb as f64 * my_cols * fft_flops(nz),
+                (2.0 * nb as f64 * my_pts + 4.0 * cyl) * BYTES_PER_ELEM,
+            ),
+            StageCost::comm("a2a_sphere", cyl * BYTES_PER_ELEM * (p - 1) as f64 / p as f64, 1),
+            StageCost::compute(
+                "pad_fft_y",
+                nb as f64 * disc_xs * lzc as f64 * fft_flops(ny),
+                (2.0 * cyl + 2.0 * slab + 4.0 * nb as f64 * disc_xs * (ny * lzc) as f64)
+                    * BYTES_PER_ELEM,
+            ),
+            StageCost::compute(
+                "fft_x",
+                (nb * ny * lzc) as f64 * fft_flops(nx),
+                4.0 * slab * BYTES_PER_ELEM,
+            ),
+        ],
+        a2a_ranks: vec![p],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+    #[test]
+    fn slab_flops_match_dense_3d_fft() {
+        // Summed over ranks, the flop count must equal nb full 3D FFTs
+        // (for divisible sizes).
+        let shape = [8usize, 8, 8];
+        let (nb, p) = (4usize, 4usize);
+        let per_rank = slab_pencil(shape, nb, p, true).total_flops();
+        let want = nb as f64
+            * (64.0 * fft_flops(8) + 64.0 * fft_flops(8) + 64.0 * fft_flops(8));
+        assert!((per_rank * p as f64 - want).abs() < 1e-6 * want);
+    }
+
+    #[test]
+    fn non_batched_same_bytes_more_rounds() {
+        let a = slab_pencil([16, 16, 16], 8, 4, true);
+        let b = slab_pencil([16, 16, 16], 8, 4, false);
+        assert_eq!(a.total_a2a_bytes(), b.total_a2a_bytes());
+        assert_eq!(a.stages[2].rounds, 1);
+        assert_eq!(b.stages[2].rounds, 8);
+    }
+
+    #[test]
+    fn pencil_has_two_exchanges() {
+        let c = pencil([16, 16, 16], 2, 2, 2, true);
+        let comm_stages: Vec<_> = c.stages.iter().filter(|s| s.a2a_bytes > 0.0).collect();
+        assert_eq!(comm_stages.len(), 2);
+        assert_eq!(c.a2a_ranks, vec![2, 2]);
+    }
+
+    #[test]
+    fn planewave_moves_fewer_bytes_than_slab() {
+        let n = 32;
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = spec.offsets();
+        let (nb, p) = (4usize, 4usize);
+        let pw = planewave(&off, nb, p);
+        let dense = slab_pencil([n, n, n], nb, p, true);
+        assert!(pw.total_a2a_bytes() < 0.4 * dense.total_a2a_bytes());
+        assert!(pw.total_flops() < 0.7 * dense.total_flops());
+    }
+
+    #[test]
+    fn cost_matches_live_trace_bytes() {
+        // The analytical a2a bytes must equal what the live plan reports.
+        use crate::comm::communicator::run_world;
+        use crate::fftb::backend::RustFftBackend;
+        use crate::fftb::grid::ProcGrid;
+        use crate::fftb::plan::testutil::phased;
+        use crate::fftb::plan::SlabPencilPlan;
+        use std::sync::Arc;
+
+        let shape = [8usize, 8, 8];
+        let (nb, p) = (2usize, 2usize);
+        let traces = run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = phased(plan.input_len(), 1);
+            let backend = RustFftBackend::new();
+            plan.forward(&backend, local).1
+        });
+        let model = slab_pencil(shape, nb, p, true);
+        let model_bytes = model.total_a2a_bytes();
+        for tr in traces {
+            assert_eq!(tr.comm_bytes() as f64, model_bytes);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Machine descriptions for the performance model.
+//!
+//! The live testbed is `p` threads in one process; the paper's testbed is
+//! Perlmutter (4x A100 per node, Slingshot-11 dragonfly). The model prices
+//! the *exact* per-stage flop/byte/message counts produced by the planner
+//! (see `super::cost`) on a described machine, which is how the Fig. 9
+//! series are projected beyond the live thread count (DESIGN.md §3).
+//!
+//! Constants for `perlmutter_a100` are drawn from public numbers: A100
+//! peak/effective FFT throughput, 1.55 TB/s HBM, ~22 GB/s per-GPU effective
+//! injection bandwidth (4 GPUs sharing 2x25 GB/s Slingshot NICs), and a
+//! few-microsecond MPI latency with an eager->rendezvous protocol switch.
+//! They are estimates — the reproduction claims *shape*, not absolute time.
+
+/// A machine to price stage counts on.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Effective local FFT throughput per rank, complex-FLOP/s.
+    pub fft_flops_per_sec: f64,
+    /// Effective local memory bandwidth per rank for pack/unpack, B/s.
+    pub mem_bw: f64,
+    /// Per-message latency of the interconnect (alpha), seconds.
+    pub alpha: f64,
+    /// Per-byte time (1/bandwidth) per rank (beta), s/B.
+    pub beta: f64,
+    /// Message size (bytes) below which the MPI alltoall switches algorithm
+    /// (the 64->128 GPU jump in the paper's light-blue line).
+    pub small_msg_threshold: usize,
+    /// Latency multiplier after the switch (protocol overhead).
+    pub small_msg_alpha_factor: f64,
+}
+
+impl Machine {
+    /// Perlmutter GPU-node estimate (per-GPU rank).
+    pub fn perlmutter_a100() -> Machine {
+        Machine {
+            name: "perlmutter-a100",
+            // cuFFT on A100 sustains O(1-2) TFLOP/s on batched C2C lines.
+            fft_flops_per_sec: 1.2e12,
+            mem_bw: 1.3e12,
+            alpha: 3.0e-6,
+            beta: 1.0 / 22.0e9,
+            small_msg_threshold: 8 * 1024,
+            small_msg_alpha_factor: 4.0,
+        }
+    }
+
+    /// The live in-process testbed (rank = one CPU thread). Calibrate with
+    /// [`Machine::calibrated`] from a measured trace for accurate absolute
+    /// numbers; these defaults are a modern server core.
+    pub fn local_cpu() -> Machine {
+        Machine {
+            name: "local-cpu-thread",
+            fft_flops_per_sec: 2.0e9,
+            mem_bw: 8.0e9,
+            alpha: 2.0e-7, // shared-memory mailbox
+            beta: 1.0 / 5.0e9,
+            small_msg_threshold: 0, // no protocol switch in-process
+            small_msg_alpha_factor: 1.0,
+        }
+    }
+
+    /// Replace the compute/memory rates with measured values (from a live
+    /// `ExecTrace`): flops/s over the compute stages and B/s over the
+    /// reshape stages.
+    pub fn calibrated(mut self, fft_flops_per_sec: f64, mem_bw: f64) -> Machine {
+        if fft_flops_per_sec.is_finite() && fft_flops_per_sec > 0.0 {
+            self.fft_flops_per_sec = fft_flops_per_sec;
+        }
+        if mem_bw.is_finite() && mem_bw > 0.0 {
+            self.mem_bw = mem_bw;
+        }
+        self
+    }
+
+    /// Time for one alltoall: each rank sends `bytes_per_rank` split into
+    /// `p - 1` messages (pairwise exchange), or the small-message algorithm
+    /// past the protocol switch.
+    pub fn alltoall_time(&self, p: usize, bytes_per_rank: f64) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let msgs = (p - 1) as f64;
+        let msg_size = bytes_per_rank / msgs;
+        let alpha = if (msg_size as usize) < self.small_msg_threshold {
+            self.alpha * self.small_msg_alpha_factor
+        } else {
+            self.alpha
+        };
+        msgs * alpha + bytes_per_rank * self.beta
+    }
+
+    /// Time for local compute of `flops` plus `touched_bytes` of pack/unpack
+    /// traffic (simple roofline: compute and memory do not overlap).
+    pub fn compute_time(&self, flops: f64, touched_bytes: f64) -> f64 {
+        flops / self.fft_flops_per_sec + touched_bytes / self.mem_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alltoall_latency_dominates_small_messages() {
+        let m = Machine::perlmutter_a100();
+        let p = 1024;
+        // 1 KiB per peer: latency bound.
+        let t_small = m.alltoall_time(p, 1024.0 * (p - 1) as f64);
+        // Same total bytes in one call with 1 MiB per peer.
+        let t_large = m.alltoall_time(p, 1024.0 * 1024.0 * (p - 1) as f64);
+        assert!(t_small > 0.01); // >10 ms of pure latency
+        assert!(t_large > t_small); // more bytes still costs more
+        // But per-byte, small messages are far worse:
+        let eff_small = (1024.0 * (p - 1) as f64) / t_small;
+        let eff_large = (1024.0 * 1024.0 * (p - 1) as f64) / t_large;
+        assert!(eff_large > 20.0 * eff_small);
+    }
+
+    #[test]
+    fn protocol_switch_raises_alpha() {
+        let m = Machine::perlmutter_a100();
+        let p = 128;
+        let just_above = (m.small_msg_threshold as f64 + 1.0) * (p - 1) as f64;
+        let just_below = (m.small_msg_threshold as f64 - 1.0) * (p - 1) as f64;
+        let t_above = m.alltoall_time(p, just_above);
+        let t_below = m.alltoall_time(p, just_below);
+        // Nearly the same bytes, but the switch makes the smaller one slower.
+        assert!(t_below > t_above);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(Machine::local_cpu().alltoall_time(1, 1e9), 0.0);
+    }
+}

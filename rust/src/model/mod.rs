@@ -1,0 +1,12 @@
+//! Performance model: prices the planner's exact stage counts on a described
+//! machine to project the paper's strong-scaling experiment (Fig. 9) beyond
+//! the live in-process rank count. See DESIGN.md §3 for the substitution
+//! argument and §4.5 for the module inventory.
+
+pub mod cost;
+pub mod machine;
+pub mod scaling;
+
+pub use cost::{PlanCost, StageCost};
+pub use machine::Machine;
+pub use scaling::{fig9_row, fold_ranks, grid_2d, project, Variant, Workload};

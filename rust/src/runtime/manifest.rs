@@ -1,0 +1,125 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: entry names, files, and input shapes.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (row-major dims), one per positional argument.
+    pub inputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Batch tile every fft entry was compiled for.
+    pub batch: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let batch = j
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing `batch`"))?;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing `entries`"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing `name`"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry `{name}` missing `file`"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            for shape in e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry `{name}` missing `inputs`"))?
+            {
+                let dims: Option<Vec<usize>> = shape
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect());
+                inputs.push(dims.ok_or_else(|| anyhow!("bad shape in `{name}`"))?);
+            }
+            entries.push(ManifestEntry { name, file, inputs });
+        }
+        Ok(Manifest { batch, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Line lengths with both forward and inverse fft entries present.
+    pub fn fft_sizes(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for e in &self.entries {
+            if let Some(rest) = e.name.strip_prefix("fft") {
+                if let Some(n) = rest.strip_suffix("_f").and_then(|s| s.parse::<usize>().ok()) {
+                    if self.entry(&format!("fft{n}_i")).is_some() {
+                        out.push(n);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "batch": 64,
+ "entries": [
+  {"name": "fft8_f", "file": "fft8_f.hlo.txt", "inputs": [[64, 8, 2]]},
+  {"name": "fft8_i", "file": "fft8_i.hlo.txt", "inputs": [[64, 8, 2]]},
+  {"name": "padfft_4_8_2_f", "file": "padfft_4_8_2_f.hlo.txt", "inputs": [[64, 4, 2]]}
+ ]
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entry("fft8_f").unwrap().inputs[0], vec![64, 8, 2]);
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn fft_sizes_requires_both_directions() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.fft_sizes(), vec![8]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"entries": []}"#).is_err());
+        assert!(Manifest::parse(r#"{"batch": 64}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

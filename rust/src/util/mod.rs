@@ -1,0 +1,6 @@
+//! Small dependency-free utilities: JSON (manifest/bench output), timing
+//! statistics, and a deterministic PRNG for the property-test harness.
+
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,94 @@
+//! Deterministic splitmix64/xoshiro-style PRNG.
+//!
+//! The offline build has no `rand`/`proptest`; this PRNG powers the
+//! hand-rolled property-test harness (`rust/tests/prop_*.rs`) and the
+//! workload generators in the benches. Deterministic seeding keeps every
+//! test and bench reproducible.
+
+/// splitmix64 — tiny, fast, good enough for test-data generation.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [-1, 1).
+    pub fn next_signed(&mut self) -> f64 {
+        2.0 * self.next_f64() - 1.0
+    }
+
+    /// Uniform integer in [0, bound).
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.next_below(xs.len())]
+    }
+
+    /// Random complex vector with components in [-1, 1).
+    pub fn complex_vec(&mut self, n: usize) -> Vec<crate::fft::complex::Complex> {
+        (0..n)
+            .map(|_| crate::fft::complex::Complex::new(self.next_signed(), self.next_signed()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut p = Prng::new(42);
+        for _ in 0..1000 {
+            let x = p.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_ints_cover_range() {
+        let mut p = Prng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..200 {
+            seen[p.next_below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

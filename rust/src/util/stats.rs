@@ -1,0 +1,97 @@
+//! Timing statistics for the hand-rolled bench harness (no criterion in the
+//! offline dependency set — `cargo bench` runs `harness = false` binaries
+//! built on this module).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of repeated timed runs.
+#[derive(Clone, Debug)]
+pub struct Samples {
+    pub times: Vec<Duration>,
+}
+
+impl Samples {
+    pub fn mean(&self) -> Duration {
+        if self.times.is_empty() {
+            return Duration::ZERO;
+        }
+        self.times.iter().sum::<Duration>() / self.times.len() as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        self.times.iter().min().copied().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn max(&self) -> Duration {
+        self.times.iter().max().copied().unwrap_or(Duration::ZERO)
+    }
+
+    /// Sample standard deviation in seconds.
+    pub fn stddev(&self) -> f64 {
+        if self.times.len() < 2 {
+            return 0.0;
+        }
+        let mean = self.mean().as_secs_f64();
+        let var: f64 = self
+            .times
+            .iter()
+            .map(|t| {
+                let d = t.as_secs_f64() - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / (self.times.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Run `f` with `warmup` untimed and `iters` timed iterations — the paper's
+/// methodology (§4.2: "a warmup phase of 10 iterations ... a hot phase of
+/// another 10 iterations, where we measure the execution time ... we take
+/// the average").
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    Samples { times }
+}
+
+/// Format a duration in engineering units.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.times.len(), 5);
+        assert!(s.mean() >= Duration::ZERO);
+        assert!(s.min() <= s.max());
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(7)).ends_with(" us"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: the PJRT artifact path (python AOT -> HLO text -> rust
+//! PJRT execute) against the pure-rust substrate, standalone and inside the
+//! distributed plans.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::sync::Arc;
+
+use fftb::fft::complex::{rel_l2_err, Complex};
+use fftb::fft::dft::Direction;
+use fftb::fftb::backend::{LocalFftBackend, RustFftBackend};
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::{gather_cube_z, phased, scatter_cube_x};
+use fftb::fftb::plan::SlabPencilPlan;
+use fftb::runtime::{PjrtFftBackend, PjrtRuntime};
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping PJRT integration tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(PjrtRuntime::open("artifacts").expect("open artifacts")))
+}
+
+#[test]
+fn manifest_lists_fft_sizes() {
+    let Some(rt) = runtime() else { return };
+    let sizes = rt.manifest().fft_sizes();
+    assert!(sizes.contains(&16), "sizes = {sizes:?}");
+    assert!(sizes.contains(&64));
+    assert!(sizes.contains(&256));
+}
+
+#[test]
+fn pjrt_backend_matches_rust_backend() {
+    let Some(rt) = runtime() else { return };
+    let pjrt = PjrtFftBackend::new(rt);
+    let rust = RustFftBackend::new();
+    for n in [16usize, 64, 128] {
+        for dir in [Direction::Forward, Direction::Inverse] {
+            // 3 full artifact tiles + a ragged tail.
+            let nlines = 3 * 64 + 17;
+            let mut a = phased(nlines * n, n as u64);
+            let mut b = a.clone();
+            pjrt.fft_batch(&mut a, n, dir);
+            rust.fft_batch(&mut b, n, dir);
+            let err = rel_l2_err(&a, &b);
+            assert!(err < 5e-4, "n={n} dir={dir:?} rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_falls_back_for_unknown_sizes() {
+    let Some(rt) = runtime() else { return };
+    let pjrt = PjrtFftBackend::new(rt);
+    let rust = RustFftBackend::new();
+    let n = 12; // no artifact for non-pow2
+    let mut a = phased(5 * n, 3);
+    let mut b = a.clone();
+    pjrt.fft_batch(&mut a, n, Direction::Forward);
+    rust.fft_batch(&mut b, n, Direction::Forward);
+    assert!(rel_l2_err(&a, &b) < 1e-12, "fallback should be bit-identical");
+    assert!(pjrt.fallback_lines.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert_eq!(pjrt.pjrt_lines.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn distributed_plan_runs_on_pjrt_backend() {
+    let Some(rt) = runtime() else { return };
+    let shape = [16usize, 16, 16];
+    let nb = 2;
+    let p = 2;
+    let global: Vec<Complex> = phased(nb * 16 * 16 * 16, 11);
+
+    // Oracle through the rust backend.
+    let mut want = global.clone();
+    let sh = [nb, 16, 16, 16];
+    for dim in 1..4 {
+        fftb::fft::nd::fft_dim(&mut want, &sh, dim, Direction::Forward);
+    }
+
+    let backend = Arc::new(PjrtFftBackend::new(rt));
+    let backend2 = Arc::clone(&backend);
+    let global2 = global.clone();
+    let outs = fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+        let local = scatter_cube_x(&global2, nb, shape, p, grid.rank());
+        let (out, _) = plan.forward(backend2.as_ref(), local);
+        out
+    });
+    let got = gather_cube_z(&outs, nb, shape, p);
+    let err = rel_l2_err(&got, &want);
+    assert!(err < 5e-4, "distributed PJRT vs rust oracle: rel err {err}");
+    assert!(backend.pjrt_lines.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn pad_fft_artifact_matches_substrate() {
+    // The fused pad+FFT artifact (Fig. 3 insight as an MXU matmul):
+    // padfft_8_16_4_f pads an 8-run at offset 4 into a 16-line and DFTs it.
+    let Some(rt) = runtime() else { return };
+    let (m, n, o) = (8usize, 16usize, 4usize);
+    let batch = rt.manifest().batch;
+    let lines = phased(batch * m, 5);
+    let mut input = Vec::with_capacity(batch * m * 2);
+    for c in &lines {
+        input.push(c.re as f32);
+        input.push(c.im as f32);
+    }
+    let out = rt.execute_f32(&format!("padfft_{m}_{n}_{o}_f"), &input).unwrap();
+    assert_eq!(out.len(), batch * n * 2);
+
+    // Oracle: scatter into padded lines, rust FFT.
+    let rust = RustFftBackend::new();
+    let mut padded = vec![fftb::fft::complex::ZERO; batch * n];
+    for l in 0..batch {
+        for k in 0..m {
+            padded[l * n + o + k] = lines[l * m + k];
+        }
+    }
+    rust.fft_batch(&mut padded, n, Direction::Forward);
+    let got: Vec<Complex> = out
+        .chunks_exact(2)
+        .map(|p| Complex::new(p[0] as f64, p[1] as f64))
+        .collect();
+    let err = rel_l2_err(&got, &padded);
+    assert!(err < 5e-4, "pad+FFT artifact rel err {err}");
+}

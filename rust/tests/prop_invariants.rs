@@ -1,0 +1,286 @@
+//! Property-based tests (hand-rolled harness: no proptest in the offline
+//! dependency set — `fftb::util::prng` drives randomized cases with
+//! deterministic seeds, so failures are reproducible by seed).
+//!
+//! Each property runs across a randomized family of sizes, rank counts,
+//! batch sizes and sphere radii.
+
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::fft::batch::Fft1d;
+use fftb::fft::complex::{max_abs_diff, Complex, ZERO};
+use fftb::fft::dft::{naive_dft, Direction};
+use fftb::fftb::grid::{cyclic, ProcGrid};
+use fftb::fftb::layout::Layout;
+use fftb::fftb::plan::testutil::{gather_cube_z, phased, scatter_cube_x};
+use fftb::fftb::plan::SlabPencilPlan;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::util::prng::Prng;
+
+const CASES: usize = 25;
+
+#[test]
+fn prop_fft_matches_naive_dft_any_size() {
+    let mut rng = Prng::new(0xF0F0);
+    for case in 0..CASES {
+        let n = 1 + rng.next_below(96);
+        let x = rng.complex_vec(n);
+        let dir = if rng.next_f64() < 0.5 { Direction::Forward } else { Direction::Inverse };
+        let want = naive_dft(&x, dir);
+        let plan = Fft1d::new(n, dir);
+        let mut got = x.clone();
+        plan.run_batch_alloc(&mut got);
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-8 * n as f64, "case {case}: n={n} dir={dir:?} err={err}");
+    }
+}
+
+#[test]
+fn prop_fft_round_trip_and_linearity() {
+    let mut rng = Prng::new(0xBEEF);
+    for case in 0..CASES {
+        let n = 2 + rng.next_below(64);
+        let x = rng.complex_vec(n);
+        let y = rng.complex_vec(n);
+        let a = Complex::new(rng.next_signed(), rng.next_signed());
+        let fwd = Fft1d::new(n, Direction::Forward);
+        let inv = Fft1d::new(n, Direction::Inverse);
+
+        // Round trip.
+        let mut rt = x.clone();
+        fwd.run_batch_alloc(&mut rt);
+        inv.run_batch_alloc(&mut rt);
+        assert!(max_abs_diff(&rt, &x) < 1e-9, "case {case}: round trip n={n}");
+
+        // Linearity: F(a x + y) = a F(x) + F(y).
+        let mut lhs: Vec<Complex> =
+            x.iter().zip(&y).map(|(xv, yv)| a * *xv + *yv).collect();
+        fwd.run_batch_alloc(&mut lhs);
+        let mut fx = x.clone();
+        fwd.run_batch_alloc(&mut fx);
+        let mut fy = y.clone();
+        fwd.run_batch_alloc(&mut fy);
+        let rhs: Vec<Complex> = fx.iter().zip(&fy).map(|(xv, yv)| a * *xv + *yv).collect();
+        assert!(max_abs_diff(&lhs, &rhs) < 1e-8 * n as f64, "case {case}: linearity n={n}");
+    }
+}
+
+#[test]
+fn prop_parseval() {
+    let mut rng = Prng::new(0x1234);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(128);
+        let x = rng.complex_vec(n);
+        let mut fx = x.clone();
+        Fft1d::new(n, Direction::Forward).run_batch_alloc(&mut fx);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let ef: f64 = fx.iter().map(|v| v.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((ex - ef).abs() < 1e-8 * ex.max(1.0), "n={n}");
+    }
+}
+
+#[test]
+fn prop_cyclic_distribution_partition() {
+    let mut rng = Prng::new(0x5555);
+    for _ in 0..100 {
+        let n = 1 + rng.next_below(500);
+        let p = 1 + rng.next_below(16);
+        let total: usize = (0..p).map(|r| cyclic::local_count(n, p, r)).sum();
+        assert_eq!(total, n);
+        let g = rng.next_below(n);
+        let owner = cyclic::owner(g, p);
+        let l = cyclic::global_to_local(g, p);
+        assert_eq!(cyclic::local_to_global(l, p, owner), g);
+        assert!(l < cyclic::local_count(n, p, owner));
+    }
+}
+
+#[test]
+fn prop_layout_parse_round_trip() {
+    let mut rng = Prng::new(0x777);
+    let names = ["x", "y", "z", "b", "w", "q1", "dim_a"];
+    for _ in 0..50 {
+        let ndim = 1 + rng.next_below(5);
+        let mut used = Vec::new();
+        let mut axes_used = Vec::new();
+        let mut toks = Vec::new();
+        for _ in 0..ndim {
+            let name = loop {
+                let c = *rng.choose(&names);
+                if !used.contains(&c) {
+                    break c;
+                }
+            };
+            used.push(name);
+            if rng.next_f64() < 0.4 {
+                let axis = loop {
+                    let a = rng.next_below(3);
+                    if !axes_used.contains(&a) {
+                        break a;
+                    }
+                };
+                axes_used.push(axis);
+                toks.push(format!("{name}{{{axis}}}"));
+            } else {
+                toks.push(name.to_string());
+            }
+        }
+        let s = toks.join(" ");
+        let l = Layout::parse(&s).expect("generated layouts must parse");
+        assert_eq!(l.to_string_form(), s);
+        assert_eq!(l.ndim(), ndim);
+    }
+}
+
+#[test]
+fn prop_sphere_offsets_consistent() {
+    let mut rng = Prng::new(0x9999);
+    for _ in 0..15 {
+        let n = 6 + 2 * rng.next_below(8); // 6..20
+        let radius = 1.0 + rng.next_f64() * (n as f64 / 2.0 - 1.0);
+        let kind = if rng.next_f64() < 0.5 { SphereKind::Centered } else { SphereKind::Wrapped };
+        let spec = SphereSpec::new([n, n, n], radius, kind);
+        let off = spec.offsets();
+
+        // total == brute-force count
+        let mut count = 0;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    count += spec.contains(x, y, z) as usize;
+                }
+            }
+        }
+        assert_eq!(count, off.total(), "n={n} r={radius} {kind:?}");
+
+        // x-restriction partitions the points for any p.
+        let p = 1 + rng.next_below(n.min(6));
+        let total: usize = (0..p).map(|r| off.restrict_x_cyclic(p, r).total()).sum();
+        assert_eq!(total, off.total());
+
+        // scatter/gather round trip with random batch.
+        let nb = 1 + rng.next_below(4);
+        let packed = rng.complex_vec(nb * off.total());
+        let (dense, _) = off.scatter_z(&packed, nb);
+        let back = off.gather_z(&dense, nb);
+        assert_eq!(packed, back);
+    }
+}
+
+#[test]
+fn prop_distributed_fft_equals_local() {
+    let mut rng = Prng::new(0xABCD);
+    for case in 0..8 {
+        let nx = 4 + 2 * rng.next_below(4);
+        let ny = 3 + rng.next_below(6);
+        let nz = 4 + 2 * rng.next_below(4);
+        let nb = 1 + rng.next_below(3);
+        let p = 1 + rng.next_below(nx.min(nz).min(4));
+        let shape = [nx, ny, nz];
+        let global = rng.complex_vec(nb * nx * ny * nz);
+
+        let mut want = global.clone();
+        let sh = [nb, nx, ny, nz];
+        for dim in 1..4 {
+            fftb::fft::nd::fft_dim(&mut want, &sh, dim, Direction::Forward);
+        }
+        let global2 = global.clone();
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let local = scatter_cube_x(&global2, nb, shape, p, grid.rank());
+            let backend = RustFftBackend::new();
+            plan.forward(&backend, local).0
+        });
+        let got = gather_cube_z(&outs, nb, shape, p);
+        let err = max_abs_diff(&got, &want);
+        assert!(
+            err < 1e-7 * (nx * ny * nz) as f64,
+            "case {case}: shape={shape:?} nb={nb} p={p} err={err}"
+        );
+    }
+}
+
+#[test]
+fn prop_batched_transform_is_band_separable() {
+    // Transforming a batch must equal transforming each band alone.
+    let mut rng = Prng::new(0xCAFE);
+    for _ in 0..5 {
+        let n = 4 + 2 * rng.next_below(3);
+        let nb = 2 + rng.next_below(3);
+        let p = 1 + rng.next_below(2);
+        let shape = [n, n, n];
+        let global = rng.complex_vec(nb * n * n * n);
+        let global2 = global.clone();
+        let ok = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let batched = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let single = SlabPencilPlan::new(shape, 1, Arc::clone(&grid));
+            let local = scatter_cube_x(&global2, nb, shape, p, grid.rank());
+            let (all, _) = batched.forward(&backend, local.clone());
+            let mut ok = true;
+            for b in 0..nb {
+                let band: Vec<Complex> =
+                    local.iter().skip(b).step_by(nb).copied().collect();
+                let (one, _) = single.forward(&backend, band);
+                let band_from_batch: Vec<Complex> =
+                    all.iter().skip(b).step_by(nb).copied().collect();
+                ok &= max_abs_diff(&one, &band_from_batch) < 1e-10;
+            }
+            ok
+        });
+        assert!(ok.iter().all(|&b| b));
+    }
+}
+
+#[test]
+fn prop_comm_alltoall_permutation() {
+    // Sending unique tokens: every token must arrive exactly once, at the
+    // right destination.
+    let mut rng = Prng::new(0xD00D);
+    for _ in 0..10 {
+        let p = 2 + rng.next_below(7);
+        let outs = run_world(p, move |comm| {
+            let me = comm.rank();
+            let send: Vec<Vec<u8>> = (0..p)
+                .map(|dst| vec![me as u8, dst as u8, (me * p + dst) as u8])
+                .collect();
+            fftb::comm::alltoallv(&comm, send)
+        });
+        for (dst, recv) in outs.iter().enumerate() {
+            for (src, block) in recv.iter().enumerate() {
+                assert_eq!(block, &vec![src as u8, dst as u8, (src * p + dst) as u8]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fft_shift_theorem() {
+    // F(x shifted by s)[k] = F(x)[k] * w^{sk} — catches index/twiddle bugs
+    // the round-trip test can't.
+    let mut rng = Prng::new(0x51F7);
+    for _ in 0..15 {
+        let n = 4 + rng.next_below(60);
+        let s = rng.next_below(n);
+        let x = rng.complex_vec(n);
+        let shifted: Vec<Complex> = (0..n).map(|i| x[(i + s) % n]).collect();
+        let plan = Fft1d::new(n, Direction::Forward);
+        let mut fx = x.clone();
+        plan.run_batch_alloc(&mut fx);
+        let mut fs = shifted;
+        plan.run_batch_alloc(&mut fs);
+        let mut want = vec![ZERO; n];
+        for k in 0..n {
+            let w = Complex::expi(-2.0 * std::f64::consts::PI * (s * k % n) as f64 / n as f64);
+            // shift by +s in time = multiply by w^{+sk}? F(x[i+s])[k] =
+            // F(x)[k] * e^{+2 pi i s k / n} with the e^{-2 pi i} kernel.
+            want[k] = fx[k] * w.conj();
+        }
+        let err = max_abs_diff(&fs, &want);
+        assert!(err < 1e-8 * n as f64, "n={n} s={s} err={err}");
+    }
+}
