@@ -1,0 +1,8 @@
+#!/usr/bin/env sh
+# Tier-1 verification: build and test the rust tree with the default
+# (dependency-free) feature set. Run from anywhere.
+set -eu
+cd "$(dirname "$0")/rust"
+cargo build --release
+cargo test -q
+echo "ci.sh: tier-1 OK"

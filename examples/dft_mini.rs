@@ -30,8 +30,13 @@ fn main() {
     let p = 4usize; // ranks
 
     let backend: Arc<dyn LocalFftBackend> = if use_pjrt {
-        let rt = PjrtRuntime::open("artifacts").expect("run `make artifacts` first");
-        Arc::new(PjrtFftBackend::new(Arc::new(rt)))
+        match PjrtRuntime::open("artifacts") {
+            Ok(rt) => Arc::new(PjrtFftBackend::new(Arc::new(rt))),
+            Err(e) => {
+                eprintln!("warning: PJRT unavailable ({e}); falling back to the rust backend");
+                Arc::new(RustFftBackend::new())
+            }
+        }
     } else {
         Arc::new(RustFftBackend::new())
     };

@@ -30,9 +30,9 @@ fn main() {
         let rows = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
             let backend = RustFftBackend::new();
-            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
-            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
-            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
 
             let input = phased(slab.input_len(), 3);
             let t_slab = bench(2, 5, || {
@@ -56,7 +56,7 @@ fn main() {
             let (p0, p1) = grid_2d(p);
             let t_pencil = if p0 > 1 || p1 > 1 {
                 let g2 = ProcGrid::new(&[p0, p1], comm).unwrap();
-                let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2));
+                let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2)).unwrap();
                 let pin = phased(pencil.input_len(), 6);
                 bench(2, 5, || {
                     let _ = pencil.forward(&backend, pin.clone());

@@ -29,8 +29,8 @@ fn live() {
         let rows = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
             let backend = RustFftBackend::new();
-            let batched = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
-            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
+            let batched = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
             let input = phased(batched.input_len(), 1);
 
             let mut mb = (0u64, 0u64);

@@ -32,8 +32,8 @@ fn main() {
             let g1 = ProcGrid::new(&[p], comm.clone()).unwrap();
             let g2 = ProcGrid::new(&[p0, p1], comm).unwrap();
             let backend = RustFftBackend::new();
-            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&g1));
-            let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2));
+            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&g1)).unwrap();
+            let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2)).unwrap();
             let in1 = phased(slab.input_len(), 1);
             let in2 = phased(pencil.input_len(), 2);
 

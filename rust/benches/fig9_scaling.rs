@@ -40,9 +40,9 @@ fn live_section() {
         let rows = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
             let backend = RustFftBackend::new();
-            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
-            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
-            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+            let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
             let input = phased(slab.input_len(), 3);
             let pw_in = phased(pw.input_len(), 5);
 
@@ -59,7 +59,7 @@ fn live_section() {
             let (p0, p1) = grid_2d(p);
             let t_pencil = if p > 1 {
                 let g2 = ProcGrid::new(&[p0, p1], comm).unwrap();
-                let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2));
+                let pencil = PencilPlan::new([n, n, n], nb, Arc::clone(&g2)).unwrap();
                 let pin = phased(pencil.input_len(), 6);
                 bench(3, 10, || {
                     let _ = pencil.forward(&backend, pin.clone());

@@ -34,8 +34,8 @@ fn main() {
         let rows = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
             let backend = RustFftBackend::new();
-            let staged = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
-            let padded = PaddedSpherePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let staged = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let padded = PaddedSpherePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
             let input = phased(staged.input_len(), 9);
 
             let mut staged_bytes = 0u64;

@@ -43,6 +43,58 @@ pub fn alltoallv_complex(comm: &Comm, send: Vec<Vec<Complex>>) -> Vec<Vec<Comple
     alltoallv(comm, bytes).into_iter().map(|b| complex::from_bytes(&b)).collect()
 }
 
+/// Flat-buffer alltoallv over complex elements — the allocation-free variant
+/// the plans drive from their precomputed communication schedules.
+///
+/// `send[send_offs[j]..send_offs[j + 1]]` goes to rank `j`; the block from
+/// rank `q` lands in `recv[recv_offs[q]..recv_offs[q + 1]]`. Both offset
+/// tables are plan-time constants (`len == p + 1`, prefix sums of the block
+/// extents), so the only per-call heap traffic is the wire copy through the
+/// mailboxes — the in-process stand-in for the NIC buffers.
+pub fn alltoallv_complex_flat(
+    comm: &Comm,
+    send: &[Complex],
+    send_offs: &[usize],
+    recv: &mut [Complex],
+    recv_offs: &[usize],
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(send_offs.len(), p + 1, "alltoallv_flat: need p+1 send offsets");
+    assert_eq!(recv_offs.len(), p + 1, "alltoallv_flat: need p+1 recv offsets");
+    assert_eq!(send.len(), send_offs[p], "alltoallv_flat: send buffer length");
+    assert_eq!(recv.len(), recv_offs[p], "alltoallv_flat: recv buffer length");
+
+    // Self block: straight copy, never touches the mailboxes.
+    let self_send = &send[send_offs[me]..send_offs[me + 1]];
+    let self_recv = &mut recv[recv_offs[me]..recv_offs[me + 1]];
+    assert_eq!(
+        self_send.len(),
+        self_recv.len(),
+        "alltoallv_flat: self block extents disagree"
+    );
+    self_recv.copy_from_slice(self_send);
+
+    // Pairwise exchange, same deadlock-free schedule as `alltoallv`.
+    for s in 1..p {
+        let to = (me + s) % p;
+        let from = (me + p - s) % p;
+        comm.send_coll(
+            to,
+            T_A2A,
+            complex::as_bytes(&send[send_offs[to]..send_offs[to + 1]]).to_vec(),
+        );
+        let bytes = comm.recv_coll(from, T_A2A);
+        let dst = &mut recv[recv_offs[from]..recv_offs[from + 1]];
+        assert_eq!(
+            bytes.len(),
+            std::mem::size_of_val(dst),
+            "alltoallv_flat: peer {from} sent a block of the wrong size"
+        );
+        complex::copy_from_bytes(&bytes, dst);
+    }
+}
+
 /// Regular alltoall: every block has the same `block` length in bytes.
 pub fn alltoall(comm: &Comm, send: &[u8], block: usize) -> Vec<u8> {
     let p = comm.size();
@@ -120,6 +172,48 @@ mod tests {
         // Each rank sends p-1 remote blocks.
         assert_eq!(msgs as usize, p * (p - 1));
         assert_eq!(bytes as usize, p * (p - 1) * block);
+    }
+
+    #[test]
+    fn flat_alltoall_matches_nested() {
+        use crate::fft::complex::{Complex, ZERO};
+        // Variable block sizes: rank r sends r + j + 1 elements to rank j.
+        let p = 3usize;
+        let outs = run_world(p, |comm| {
+            let me = comm.rank();
+            let blocks: Vec<Vec<Complex>> = (0..p)
+                .map(|j| {
+                    (0..me + j + 1)
+                        .map(|k| Complex::new((10 * me + j) as f64, k as f64))
+                        .collect()
+                })
+                .collect();
+            // Nested reference.
+            let want = alltoallv_complex(&comm, blocks.clone());
+
+            // Flat path with precomputed offsets.
+            let mut send_offs = vec![0usize];
+            let mut send = Vec::new();
+            for b in &blocks {
+                send.extend_from_slice(b);
+                send_offs.push(send.len());
+            }
+            // Block arriving from rank q has q + me + 1 elements.
+            let mut recv_offs = vec![0usize];
+            for q in 0..p {
+                recv_offs.push(recv_offs[q] + q + me + 1);
+            }
+            let mut recv = vec![ZERO; *recv_offs.last().unwrap()];
+            alltoallv_complex_flat(&comm, &send, &send_offs, &mut recv, &recv_offs);
+
+            let flat_as_blocks: Vec<Vec<Complex>> = (0..p)
+                .map(|q| recv[recv_offs[q]..recv_offs[q + 1]].to_vec())
+                .collect();
+            (want, flat_as_blocks)
+        });
+        for (want, got) in outs {
+            assert_eq!(want, got);
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod collectives;
 pub mod communicator;
 pub mod mailbox;
 
-pub use alltoall::{alltoall, alltoallv, alltoallv_complex};
+pub use alltoall::{alltoall, alltoallv, alltoallv_complex, alltoallv_complex_flat};
 pub use collectives::{
     allgatherv, allreduce_max_f64, allreduce_sum_complex, allreduce_sum_f64, barrier, bcast,
     gatherv,

@@ -59,16 +59,13 @@ impl BatchingDriver {
             return 0;
         }
         let nb = jobs.len();
-        let plan = SlabPencilPlan::new(self.shape, nb, Arc::clone(&self.grid));
+        let plan = SlabPencilPlan::new(self.shape, nb, Arc::clone(&self.grid))
+            .expect("driver shape/grid mismatch");
+        // Batched local lengths are nb x the single-band ones, so the
+        // per-band job length comes straight off the batched plan.
         let per_band = match dir {
-            Direction::Forward => {
-                let single = SlabPencilPlan::new(self.shape, 1, Arc::clone(&self.grid));
-                single.input_len()
-            }
-            Direction::Inverse => {
-                let single = SlabPencilPlan::new(self.shape, 1, Arc::clone(&self.grid));
-                single.output_len()
-            }
+            Direction::Forward => plan.input_len() / nb,
+            Direction::Inverse => plan.output_len() / nb,
         };
 
         // Interleave bands (batch fastest).
@@ -135,7 +132,7 @@ mod tests {
             assert_eq!(driver.traces[0].comm_messages(), (p - 1) as u64);
 
             // Each result equals the single-band plan's output.
-            let single = SlabPencilPlan::new(shape, 1, Arc::clone(&grid));
+            let single = SlabPencilPlan::new(shape, 1, Arc::clone(&grid)).unwrap();
             let mut ok = true;
             for (id, got) in &driver.completed {
                 let (want, _) = single.forward(&backend, bands[*id as usize].clone());

@@ -84,7 +84,8 @@ impl Hamiltonian {
         assert_eq!(grid.ndim(), 1, "the mini DFT app runs on 1D grids");
         let p = grid.size();
         let r = grid.rank();
-        let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, Arc::clone(&grid));
+        let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, Arc::clone(&grid))
+            .expect("lattice grid must satisfy the plane-wave plan constraints");
         let kin = lattice.local_kinetic(p, r);
 
         // Potential on the local z-slab (z cyclic).

@@ -203,6 +203,21 @@ pub fn as_bytes(a: &[Complex]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, std::mem::size_of_val(a)) }
 }
 
+/// Copy raw bytes into an existing complex slice (the allocation-free
+/// receive path of the flat alltoall). Byte length must equal the slice's
+/// storage size.
+pub fn copy_from_bytes(bytes: &[u8], out: &mut [Complex]) {
+    assert_eq!(
+        bytes.len(),
+        std::mem::size_of_val(out),
+        "copy_from_bytes: length mismatch"
+    );
+    // SAFETY: Complex is POD and `out` has exactly bytes.len() bytes.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+    }
+}
+
 /// Copy raw bytes back into a complex vector. Length must be a multiple of 16.
 pub fn from_bytes(bytes: &[u8]) -> Vec<Complex> {
     assert_eq!(bytes.len() % std::mem::size_of::<Complex>(), 0);

@@ -112,13 +112,33 @@ pub fn fft_strided_lines(
 }
 
 /// FFT along dimension `dim` of a column-major tensor via the backend
-/// (pack/unpack through contiguous line batches).
+/// (pack/unpack through contiguous line batches). Allocates its own
+/// transpose scratch — the convenience entry point for one-off transforms;
+/// the plans' hot paths use [`backend_fft_dim_ws`] with a reusable buffer.
 pub fn backend_fft_dim(
     backend: &dyn LocalFftBackend,
     data: &mut [Complex],
     shape: &[usize],
     dim: usize,
     dir: Direction,
+) {
+    let mut scratch = Vec::new();
+    let ctr = std::cell::Cell::new(0u64);
+    backend_fft_dim_ws(backend, data, shape, dim, dir, &mut scratch, &ctr);
+}
+
+/// [`backend_fft_dim`] with the transpose scratch routed through a
+/// caller-owned buffer (the plans' [`Workspace`](crate::fftb::plan::workspace::Workspace)),
+/// so steady-state executions perform no heap allocation here. Capacity
+/// growth of `scratch` is recorded into `ctr`.
+pub fn backend_fft_dim_ws(
+    backend: &dyn LocalFftBackend,
+    data: &mut [Complex],
+    shape: &[usize],
+    dim: usize,
+    dir: Direction,
+    scratch: &mut Vec<Complex>,
+    ctr: &std::cell::Cell<u64>,
 ) {
     let n = shape[dim];
     if n <= 1 {
@@ -135,10 +155,10 @@ pub fn backend_fft_dim(
     // Perf (§Perf, L3 iteration 4): each outer block is an (inner, n)
     // column-major panel whose lines are its rows — pack/unpack is a
     // blocked transpose (cache-tiled) instead of a strided gather.
-    let mut buf = vec![ZERO; inner * n * outer];
-    crate::fft::nd::transpose_batch(data, &mut buf, inner, n, outer);
-    backend.fft_batch(&mut buf, n, dir);
-    crate::fft::nd::transpose_batch(&buf, data, n, inner, outer);
+    crate::fftb::plan::workspace::ensure(scratch, inner * n * outer, ctr);
+    crate::fft::nd::transpose_batch(data, scratch, inner, n, outer);
+    backend.fft_batch(scratch, n, dir);
+    crate::fft::nd::transpose_batch(scratch, data, n, inner, outer);
 }
 
 #[cfg(test)]

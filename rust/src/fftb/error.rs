@@ -4,25 +4,46 @@
 //! patterns ... The framework will raise an exception if the provided
 //! patterns are not within the predefined list." `FftbError::Unsupported` is
 //! that exception.
+//!
+//! Display/Error are hand-implemented: the default build of this tree has
+//! zero external dependencies (no `thiserror` in the offline set).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FftbError {
-    #[error("unsupported transform pattern: {0}")]
     Unsupported(String),
-
-    #[error("layout string parse error: {0}")]
     Layout(String),
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("processing grid error: {0}")]
     Grid(String),
-
-    #[error("artifact runtime error: {0}")]
     Runtime(String),
 }
 
+impl fmt::Display for FftbError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FftbError::Unsupported(m) => write!(f, "unsupported transform pattern: {m}"),
+            FftbError::Layout(m) => write!(f, "layout string parse error: {m}"),
+            FftbError::Shape(m) => write!(f, "shape mismatch: {m}"),
+            FftbError::Grid(m) => write!(f, "processing grid error: {m}"),
+            FftbError::Runtime(m) => write!(f, "artifact runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FftbError {}
+
 pub type Result<T> = std::result::Result<T, FftbError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        let e = FftbError::Unsupported("bad sig".into());
+        assert_eq!(e.to_string(), "unsupported transform pattern: bad sig");
+        let e = FftbError::Runtime("no artifacts".into());
+        assert!(e.to_string().contains("artifact runtime error"));
+    }
+}

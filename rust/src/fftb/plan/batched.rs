@@ -6,27 +6,38 @@
 //! variant "loops 256 times around a distributed 3D Fourier transform"
 //! (paper): same total bytes, but `nb`x as many messages, each `nb`x
 //! smaller — which is exactly what falls off the latency cliff at scale.
+//!
+//! Band staging and the batch-wide output run through the loop's own
+//! [`Workspace`]; the inner single-band plan recycles each band vector, so
+//! steady-state loops allocate nothing either.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::fft::complex::Complex;
 use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::error::Result;
 use crate::fftb::grid::ProcGrid;
 
-use super::redistribute::{extract_band, insert_band};
+use super::redistribute::{extract_band_into, insert_band};
 use super::slab_pencil::SlabPencilPlan;
 use super::stages::ExecTrace;
+use super::workspace::{ensure, Workspace};
 
 /// Runs an `nb`-batched slab-pencil transform as `nb` independent
 /// single-band transforms, each with its own communication stages.
 pub struct NonBatchedLoop {
     pub nb: usize,
     single: SlabPencilPlan,
+    ws: Mutex<Workspace>,
 }
 
 impl NonBatchedLoop {
-    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Self {
-        NonBatchedLoop { nb, single: SlabPencilPlan::new(shape, 1, grid) }
+    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
+        Ok(NonBatchedLoop {
+            nb,
+            single: SlabPencilPlan::new(shape, 1, grid)?,
+            ws: Mutex::new(Workspace::new()),
+        })
     }
 
     pub fn input_len(&self) -> usize {
@@ -40,6 +51,7 @@ impl NonBatchedLoop {
     /// Accumulate iteration traces stage-by-stage so the trace shape matches
     /// the batched plan (5 stages), with summed time/bytes/messages.
     fn accumulate(total: &mut ExecTrace, it: ExecTrace) {
+        total.alloc_bytes += it.alloc_bytes;
         if total.stages.is_empty() {
             total.stages = it.stages;
         } else {
@@ -53,21 +65,50 @@ impl NonBatchedLoop {
         }
     }
 
+    fn run(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+        forward: bool,
+    ) -> (Vec<Complex>, ExecTrace) {
+        let (in_band, out_band) = if forward {
+            (self.single.input_len(), self.single.output_len())
+        } else {
+            (self.single.output_len(), self.single.input_len())
+        };
+        assert_eq!(input.len(), self.nb * in_band);
+
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let mut out = std::mem::take(&mut ws.out);
+        ensure(&mut out, self.nb * out_band, &ws.alloc);
+        let mut band = std::mem::take(&mut ws.work);
+        let mut trace = ExecTrace::default();
+        for b in 0..self.nb {
+            ensure(&mut band, in_band, &ws.alloc);
+            extract_band_into(&input, self.nb, b, &mut band);
+            let (res, tr) = if forward {
+                self.single.forward(backend, band)
+            } else {
+                self.single.inverse(backend, band)
+            };
+            insert_band(&mut out, self.nb, b, &res);
+            band = res; // recycle the single plan's output as the next band
+            Self::accumulate(&mut trace, tr);
+        }
+        ws.work = band;
+        ws.out = input; // the consumed input becomes the next output slot
+        trace.alloc_bytes += ws.allocated();
+        (out, trace)
+    }
+
     pub fn forward(
         &self,
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
-        assert_eq!(input.len(), self.input_len());
-        let mut out = vec![crate::fft::complex::ZERO; self.output_len()];
-        let mut trace = ExecTrace::default();
-        for b in 0..self.nb {
-            let band = extract_band(&input, self.nb, b);
-            let (res, tr) = self.single.forward(backend, band);
-            insert_band(&mut out, self.nb, b, &res);
-            Self::accumulate(&mut trace, tr);
-        }
-        (out, trace)
+        self.run(backend, input, true)
     }
 
     pub fn inverse(
@@ -75,16 +116,7 @@ impl NonBatchedLoop {
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
-        assert_eq!(input.len(), self.output_len());
-        let mut out = vec![crate::fft::complex::ZERO; self.input_len()];
-        let mut trace = ExecTrace::default();
-        for b in 0..self.nb {
-            let band = extract_band(&input, self.nb, b);
-            let (res, tr) = self.single.inverse(backend, band);
-            insert_band(&mut out, self.nb, b, &res);
-            Self::accumulate(&mut trace, tr);
-        }
-        (out, trace)
+        self.run(backend, input, false)
     }
 }
 
@@ -106,8 +138,8 @@ mod tests {
             let grid = ProcGrid::new(&[p], comm).unwrap();
             let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
             let backend = RustFftBackend::new();
-            let batched = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
-            let looped = NonBatchedLoop::new(shape, nb, Arc::clone(&grid));
+            let batched = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+            let looped = NonBatchedLoop::new(shape, nb, Arc::clone(&grid)).unwrap();
             let (a, tr_a) = batched.forward(&backend, local.clone());
             let (b, tr_b) = looped.forward(&backend, local);
             (max_abs_diff(&a, &b), tr_a.comm_messages(), tr_b.comm_messages())
@@ -129,7 +161,7 @@ mod tests {
             let grid = ProcGrid::new(&[p], comm).unwrap();
             let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
             let backend = RustFftBackend::new();
-            let plan = NonBatchedLoop::new(shape, nb, Arc::clone(&grid));
+            let plan = NonBatchedLoop::new(shape, nb, Arc::clone(&grid)).unwrap();
             let (spec, _) = plan.forward(&backend, local.clone());
             let (back, _) = plan.inverse(&backend, spec);
             max_abs_diff(&back, &local)

@@ -27,6 +27,7 @@ pub mod redistribute;
 pub mod slab_pencil;
 pub mod stages;
 pub mod testutil;
+pub mod workspace;
 
 use std::sync::Arc;
 
@@ -165,9 +166,9 @@ impl Fftb {
             }
             let off = Arc::clone(input.domains.offsets().unwrap());
             let kind = if opts.pad_sphere_to_cube {
-                PlanKind::PaddedSphere(PaddedSpherePlan::new(off, nb, grid))
+                PlanKind::PaddedSphere(PaddedSpherePlan::new(off, nb, grid)?)
             } else {
-                PlanKind::PlaneWave(PlaneWavePlan::new(off, nb, grid))
+                PlanKind::PlaneWave(PlaneWavePlan::new(off, nb, grid)?)
             };
             return Ok(Fftb { kind, sizes, nb });
         }
@@ -182,9 +183,9 @@ impl Fftb {
                     )));
                 }
                 let kind = if opts.force_non_batched && nb > 1 {
-                    PlanKind::SlabPencilLoop(NonBatchedLoop::new(sizes, nb, grid))
+                    PlanKind::SlabPencilLoop(NonBatchedLoop::new(sizes, nb, grid)?)
                 } else {
-                    PlanKind::SlabPencil(SlabPencilPlan::new(sizes, nb, grid))
+                    PlanKind::SlabPencil(SlabPencilPlan::new(sizes, nb, grid)?)
                 };
                 Ok(Fftb { kind, sizes, nb })
             }
@@ -197,16 +198,31 @@ impl Fftb {
                          (got in={in_sig:?}, out={out_sig:?})"
                     )));
                 }
-                Ok(Fftb { kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, grid)), sizes, nb })
+                Ok(Fftb { kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, grid)?), sizes, nb })
             }
             3 => {
+                // Same distribution contract as the 2D arm: the tensors must
+                // declare the pencil pattern. Silently folding a mismatched
+                // signature would produce a wrong layout, so validate first.
+                if in_sig != vec![None, Some(0), Some(1)]
+                    || out_sig != vec![Some(0), Some(1), None]
+                {
+                    return Err(FftbError::Unsupported(format!(
+                        "3D-grid (folded pencil) pattern must be y{{0}} z{{1}} in / \
+                         x{{0}} y{{1}} out (got in={in_sig:?}, out={out_sig:?})"
+                    )));
+                }
                 // Axis folding: run the pencil plan on the (d0*d1, d2) grid.
+                // NOTE: after folding, the *plan* defines the local layouts —
+                // size buffers with `input_len()`/`output_len()` (y is cyclic
+                // over the folded d0*d1 ranks, not over axis 0 of the declared
+                // 3D grid). `benches/table1_capabilities.rs` shows the usage.
                 let folded = ProcGrid::new(
                     &[grid.axis_len(0) * grid.axis_len(1), grid.axis_len(2)],
                     grid.comm().clone(),
                 )?;
                 Ok(Fftb {
-                    kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, folded)),
+                    kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, folded)?),
                     sizes,
                     nb,
                 })
@@ -337,6 +353,19 @@ mod tests {
             assert_eq!(fx.nb, 4);
             assert_eq!(fx.input_len(), ti.local.len());
             assert_eq!(fx.output_len(), to.local.len());
+        });
+    }
+
+    #[test]
+    fn planner_rejects_bad_3d_layout() {
+        run_world(8, |comm| {
+            let grid = ProcGrid::new(&[2, 2, 2], comm).unwrap();
+            // x distributed on axis 0 / z on axis 2 is NOT the folded pencil
+            // pattern — the planner used to fold it silently into a wrong
+            // layout; now it must refuse.
+            let (ti, to) = cube_tensors(&grid, 8, "x{0} y z{1}", "X{0} Y{1} Z");
+            let e = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)));
         });
     }
 

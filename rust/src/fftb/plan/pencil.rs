@@ -18,18 +18,24 @@
 //! runs the pencil plan on the folded `(p0*p1, p2)` grid (see
 //! `Fftb::plan` in `plan/mod.rs`), which preserves the paper's API surface
 //! (Table 1: processing grid 1D/2D/3D) with the same communication volume.
+//!
+//! All four exchanges (two per direction) have plan-time [`A2aSchedule`]s;
+//! execution ping-pongs between the caller's vector and the plan's
+//! [`Workspace`] flat buffers — zero steady-state allocation.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::alltoallv_complex;
+use crate::comm::alltoall::alltoallv_complex_flat;
 use crate::comm::communicator::Comm;
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
-use crate::fftb::backend::{backend_fft_dim, LocalFftBackend};
+use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
+use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 
-use super::redistribute::{merge_dim, split_dim};
+use super::redistribute::{merge_dim_from, split_dim_into, volume, A2aSchedule, Shape4};
 use super::stages::{ExecTrace, StageTimer};
+use super::workspace::{ensure, Workspace};
 
 /// Batched pencil-decomposition 3D FFT plan on a 2D grid.
 pub struct PencilPlan {
@@ -38,46 +44,71 @@ pub struct PencilPlan {
     pub nz: usize,
     pub nb: usize,
     grid: Arc<ProcGrid>,
+    /// `[nb, nx, lyc0, lzc1]` — input.
+    sh1: Shape4,
+    /// `[nb, lxc0, ny, lzc1]` — after the row exchange.
+    sh2: Shape4,
+    /// `[nb, lxc0, lyc1, nz]` — output.
+    sh3: Shape4,
+    /// Row exchange (axis 0): split x of sh1, merge y of sh2.
+    fwd_xy: A2aSchedule,
+    /// Column exchange (axis 1): split y of sh2, merge z of sh3.
+    fwd_yz: A2aSchedule,
+    /// Inverse column exchange: split z of sh3, merge y of sh2.
+    inv_zy: A2aSchedule,
+    /// Inverse row exchange: split y of sh2, merge x of sh1.
+    inv_yx: A2aSchedule,
+    ws: Mutex<Workspace>,
 }
 
 impl PencilPlan {
-    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Self {
+    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         assert_eq!(grid.ndim(), 2, "pencil plan requires a 2D processing grid");
         let (p0, p1) = (grid.axis_len(0), grid.axis_len(1));
-        assert!(
-            p0 <= shape[0] && p0 <= shape[1] && p1 <= shape[1] && p1 <= shape[2],
-            "pencil plan needs p0 <= min(nx, ny) and p1 <= min(ny, nz) \
-             (p0={p0}, p1={p1}, shape={shape:?})"
-        );
-        PencilPlan { nx: shape[0], ny: shape[1], nz: shape[2], nb, grid }
-    }
-
-    fn coords(&self) -> (usize, usize) {
-        (self.grid.axis_coord(0), self.grid.axis_coord(1))
-    }
-
-    fn sizes(&self) -> (usize, usize) {
-        (self.grid.axis_len(0), self.grid.axis_len(1))
+        if p0 > shape[0] || p0 > shape[1] || p1 > shape[1] || p1 > shape[2] {
+            return Err(FftbError::Unsupported(format!(
+                "pencil plan needs p0 <= min(nx, ny) and p1 <= min(ny, nz) \
+                 (p0={p0}, p1={p1}, shape={shape:?})"
+            )));
+        }
+        let [nx, ny, nz] = shape;
+        let (r0, r1) = (grid.axis_coord(0), grid.axis_coord(1));
+        let lxc = cyclic::local_count(nx, p0, r0);
+        let lyc0 = cyclic::local_count(ny, p0, r0);
+        let lyc1 = cyclic::local_count(ny, p1, r1);
+        let lzc1 = cyclic::local_count(nz, p1, r1);
+        let sh1 = [nb, nx, lyc0, lzc1];
+        let sh2 = [nb, lxc, ny, lzc1];
+        let sh3 = [nb, lxc, lyc1, nz];
+        let fwd_xy = A2aSchedule::for_split_merge(sh1, 1, sh2, 2, p0, r0);
+        let fwd_yz = A2aSchedule::for_split_merge(sh2, 2, sh3, 3, p1, r1);
+        let inv_zy = A2aSchedule::for_split_merge(sh3, 3, sh2, 2, p1, r1);
+        let inv_yx = A2aSchedule::for_split_merge(sh2, 2, sh1, 1, p0, r0);
+        Ok(PencilPlan {
+            nx,
+            ny,
+            nz,
+            nb,
+            grid,
+            sh1,
+            sh2,
+            sh3,
+            fwd_xy,
+            fwd_yz,
+            inv_zy,
+            inv_yx,
+            ws: Mutex::new(Workspace::new()),
+        })
     }
 
     /// Local input length `[nb, nx, lyc0, lzc1]`.
     pub fn input_len(&self) -> usize {
-        let (p0, p1) = self.sizes();
-        let (r0, r1) = self.coords();
-        self.nb
-            * self.nx
-            * cyclic::local_count(self.ny, p0, r0)
-            * cyclic::local_count(self.nz, p1, r1)
+        volume(self.sh1)
     }
 
     /// Local output length `[nb, lxc0, lyc1, nz]`.
     pub fn output_len(&self) -> usize {
-        let (p0, p1) = self.sizes();
-        let (r0, r1) = self.coords();
-        self.nb
-            * cyclic::local_count(self.nx, p0, r0)
-            * cyclic::local_count(self.ny, p1, r1)
-            * self.nz
+        volume(self.sh3)
     }
 
     pub fn forward(
@@ -96,23 +127,23 @@ impl PencilPlan {
         self.run(backend, input, Direction::Inverse)
     }
 
+    /// One scheduled exchange: size the flat recv buffer, run the flat
+    /// alltoall, record wire traffic.
+    #[allow(clippy::too_many_arguments)]
     fn exchange(
         t: &mut StageTimer,
         name: &'static str,
         comm: &Comm,
-        blocks: Vec<Vec<Complex>>,
-    ) -> Vec<Vec<Complex>> {
-        let me = comm.rank();
+        sched: &A2aSchedule,
+        send: &[Complex],
+        recv: &mut Vec<Complex>,
+        alloc: &std::cell::Cell<u64>,
+    ) {
         t.comm(name, || {
-            let sent: u64 = blocks
-                .iter()
-                .enumerate()
-                .filter(|(s, _)| *s != me)
-                .map(|(_, b)| (b.len() * 16) as u64)
-                .sum();
-            let msgs = (comm.size() - 1) as u64;
-            (alltoallv_complex(comm, blocks), sent, msgs)
-        })
+            ensure(&mut *recv, sched.recv_total(), alloc);
+            alltoallv_complex_flat(comm, send, &sched.send_offs, &mut *recv, &sched.recv_offs);
+            ((), sched.bytes_remote(), sched.msgs())
+        });
     }
 
     fn run(
@@ -121,14 +152,15 @@ impl PencilPlan {
         mut data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
-        let (p0, p1) = self.sizes();
-        let (r0, r1) = self.coords();
+        let (p0, p1) = (self.grid.axis_len(0), self.grid.axis_len(1));
         let row = self.grid.axis_comm(0);
         let col = self.grid.axis_comm(1);
-        let lxc = cyclic::local_count(self.nx, p0, r0);
-        let lyc0 = cyclic::local_count(self.ny, p0, r0);
-        let lyc1 = cyclic::local_count(self.ny, p1, r1);
-        let lzc1 = cyclic::local_count(self.nz, p1, r1);
+        let (sh1, sh2, sh3) = (self.sh1, self.sh2, self.sh3);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let Workspace { send, recv, fft, alloc, .. } = ws;
+        let alloc = &*alloc;
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
         let lines = |total: usize, n: usize| backend.flops(total, n);
@@ -137,49 +169,68 @@ impl PencilPlan {
             Direction::Forward => {
                 assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
                 // 1. FFT x (dense locally).
-                let sh1 = [self.nb, self.nx, lyc0, lzc1];
                 t.compute("fft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim(backend, &mut data, &sh1, 1, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);
                 });
                 // 2. Row alltoall: split x, merge y.
-                let blocks = t.reshape("pack_x", || split_dim(&data, sh1, 1, p0));
-                let recv = Self::exchange(&mut t, "a2a_xy", row, blocks);
-                let sh2 = [self.nb, lxc, self.ny, lzc1];
-                data = t.reshape("unpack_y", || merge_dim(&recv, sh2, 2, p0));
+                t.reshape("pack_x", || {
+                    ensure(&mut *send, self.fwd_xy.send_total(), alloc);
+                    split_dim_into(&data, sh1, 1, p0, &mut *send, &self.fwd_xy.send_offs);
+                });
+                Self::exchange(&mut t, "a2a_xy", row, &self.fwd_xy, &*send, &mut *recv, alloc);
+                t.reshape("unpack_y", || {
+                    ensure(&mut data, volume(sh2), alloc);
+                    merge_dim_from(&*recv, &self.fwd_xy.recv_offs, sh2, 2, p0, &mut data);
+                });
                 t.compute("fft_y", lines(data.len(), self.ny), || {
-                    backend_fft_dim(backend, &mut data, &sh2, 2, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
                 });
                 // 3. Column alltoall: split y, merge z.
-                let blocks = t.reshape("pack_y", || split_dim(&data, sh2, 2, p1));
-                let recv = Self::exchange(&mut t, "a2a_yz", col, blocks);
-                let sh3 = [self.nb, lxc, lyc1, self.nz];
-                data = t.reshape("unpack_z", || merge_dim(&recv, sh3, 3, p1));
+                t.reshape("pack_y", || {
+                    ensure(&mut *send, self.fwd_yz.send_total(), alloc);
+                    split_dim_into(&data, sh2, 2, p1, &mut *send, &self.fwd_yz.send_offs);
+                });
+                Self::exchange(&mut t, "a2a_yz", col, &self.fwd_yz, &*send, &mut *recv, alloc);
+                t.reshape("unpack_z", || {
+                    ensure(&mut data, volume(sh3), alloc);
+                    merge_dim_from(&*recv, &self.fwd_yz.recv_offs, sh3, 3, p1, &mut data);
+                });
                 t.compute("fft_z", lines(data.len(), self.nz), || {
-                    backend_fft_dim(backend, &mut data, &sh3, 3, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
                 });
             }
             Direction::Inverse => {
                 assert_eq!(data.len(), self.output_len(), "inverse: wrong input length");
-                let sh3 = [self.nb, lxc, lyc1, self.nz];
                 t.compute("ifft_z", lines(data.len(), self.nz), || {
-                    backend_fft_dim(backend, &mut data, &sh3, 3, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
                 });
-                let blocks = t.reshape("pack_z", || split_dim(&data, sh3, 3, p1));
-                let recv = Self::exchange(&mut t, "a2a_zy", col, blocks);
-                let sh2 = [self.nb, lxc, self.ny, lzc1];
-                data = t.reshape("unpack_y", || merge_dim(&recv, sh2, 2, p1));
+                t.reshape("pack_z", || {
+                    ensure(&mut *send, self.inv_zy.send_total(), alloc);
+                    split_dim_into(&data, sh3, 3, p1, &mut *send, &self.inv_zy.send_offs);
+                });
+                Self::exchange(&mut t, "a2a_zy", col, &self.inv_zy, &*send, &mut *recv, alloc);
+                t.reshape("unpack_y", || {
+                    ensure(&mut data, volume(sh2), alloc);
+                    merge_dim_from(&*recv, &self.inv_zy.recv_offs, sh2, 2, p1, &mut data);
+                });
                 t.compute("ifft_y", lines(data.len(), self.ny), || {
-                    backend_fft_dim(backend, &mut data, &sh2, 2, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
                 });
-                let blocks = t.reshape("pack_y", || split_dim(&data, sh2, 2, p0));
-                let recv = Self::exchange(&mut t, "a2a_yx", row, blocks);
-                let sh1 = [self.nb, self.nx, lyc0, lzc1];
-                data = t.reshape("unpack_x", || merge_dim(&recv, sh1, 1, p0));
+                t.reshape("pack_y", || {
+                    ensure(&mut *send, self.inv_yx.send_total(), alloc);
+                    split_dim_into(&data, sh2, 2, p0, &mut *send, &self.inv_yx.send_offs);
+                });
+                Self::exchange(&mut t, "a2a_yx", row, &self.inv_yx, &*send, &mut *recv, alloc);
+                t.reshape("unpack_x", || {
+                    ensure(&mut data, volume(sh1), alloc);
+                    merge_dim_from(&*recv, &self.inv_yx.recv_offs, sh1, 1, p0, &mut data);
+                });
                 t.compute("ifft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim(backend, &mut data, &sh1, 1, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);
                 });
             }
         }
+        trace.alloc_bytes = alloc.get();
         (data, trace)
     }
 }
@@ -202,7 +253,7 @@ mod tests {
         }
         let outs = run_world(p0 * p1, |comm| {
             let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
-            let plan = PencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = PencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = scatter_cube_yz(
                 &global,
                 nb,
@@ -242,7 +293,7 @@ mod tests {
         let global = phased(nb * 512, 23);
         let errs = run_world(p0 * p1, |comm| {
             let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
-            let plan = PencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = PencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = scatter_cube_yz(
                 &global,
                 nb,
@@ -266,7 +317,7 @@ mod tests {
     fn two_alltoalls_per_forward() {
         let traces = run_world(4, |comm| {
             let grid = ProcGrid::new(&[2, 2], comm).unwrap();
-            let plan = PencilPlan::new([4, 4, 4], 1, Arc::clone(&grid));
+            let plan = PencilPlan::new([4, 4, 4], 1, Arc::clone(&grid)).unwrap();
             let local = vec![crate::fft::complex::ZERO; plan.input_len()];
             let backend = RustFftBackend::new();
             plan.forward(&backend, local).1
@@ -279,5 +330,15 @@ mod tests {
                 .count();
             assert_eq!(comms, 2);
         }
+    }
+
+    #[test]
+    fn oversubscribed_grid_rejected() {
+        run_world(8, |comm| {
+            let grid = ProcGrid::new(&[4, 2], comm).unwrap();
+            // p0 = 4 > ny = 3.
+            let e = PencilPlan::new([8, 3, 8], 1, grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)));
+        });
     }
 }

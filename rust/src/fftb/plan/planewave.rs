@@ -20,17 +20,29 @@
 //! Output layout matches the slab-pencil plan: `[nb, nx, ny, lzc]`,
 //! z cyclic — so plane-wave and cuboid transforms compose downstream
 //! (density builds, potentials) identically.
+//!
+//! Everything shape-dependent is computed once at plan time: the
+//! `cols_of_rank(q)` tables for every rank (previously rebuilt inside each
+//! forward *and* inverse call), the alltoall block extents and flat-buffer
+//! offsets, and the disc x-extent. Execution routes all scratch — dense
+//! z-columns, panel buffers, flat send/recv staging, the output cube —
+//! through the plan's [`Workspace`], so the steady state of an SCF loop
+//! (alternating forward/inverse) allocates nothing.
 
-use std::sync::Arc;
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::alltoallv_complex;
-use crate::fft::complex::{Complex, ZERO};
+use crate::comm::alltoall::alltoallv_complex_flat;
+use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
-use crate::fftb::backend::{backend_fft_dim, LocalFftBackend};
+use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
+use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 use crate::fftb::sphere::OffsetArray;
 
+use super::redistribute::A2aSchedule;
 use super::stages::{ExecTrace, StageTimer};
+use super::workspace::{ensure, ensure_zeroed, Workspace};
 
 /// Batched plane-wave transform plan for one sphere on a 1D grid.
 pub struct PlaneWavePlan {
@@ -42,35 +54,87 @@ pub struct PlaneWavePlan {
     local_off: OffsetArray,
     /// Sorted distinct x's of the global disc (for the staged y pass).
     disc_xs: Vec<usize>,
+    /// Disc columns owned by each rank `q`, in q's local packing order
+    /// (y outer, local-x inner), as global `(gx, y)` pairs — precomputed
+    /// for all q so neither direction rebuilds them per execution.
+    cols_by_rank: Vec<Vec<(usize, usize)>>,
+    /// Number of disc columns this rank owns (`cols_by_rank[rank].len()`).
+    ncols: usize,
+    /// This rank's cyclic z-count.
+    lzc: usize,
+    /// Forward exchange: z-residue blocks of the owned columns out, this
+    /// rank's z-slab share of every rank's columns in.
+    fwd: A2aSchedule,
+    /// Inverse exchange (the forward schedule mirrored).
+    inv: A2aSchedule,
+    ws: Mutex<Workspace>,
 }
 
 impl PlaneWavePlan {
-    pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Self {
+    pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         assert_eq!(grid.ndim(), 1, "plane-wave plan requires a 1D processing grid");
         let p = grid.size();
-        assert!(
-            p <= offsets.nx && p <= offsets.nz,
-            "plane-wave plan needs p <= nx and p <= nz (p={p}, grid {}x{}x{})",
-            offsets.nx,
-            offsets.ny,
-            offsets.nz
-        );
-        let local_off = offsets.restrict_x_cyclic(p, grid.rank());
+        if p > offsets.nx || p > offsets.nz {
+            return Err(FftbError::Unsupported(format!(
+                "plane-wave plan needs p <= nx and p <= nz (p={p}, grid {}x{}x{})",
+                offsets.nx, offsets.ny, offsets.nz
+            )));
+        }
+        let r = grid.rank();
+        let local_off = offsets.restrict_x_cyclic(p, r);
         let mut disc_xs: Vec<usize> = offsets
             .x_runs()
             .iter()
             .flat_map(|&(x0, len)| x0 as usize..(x0 as usize + len as usize))
             .collect();
         disc_xs.sort_unstable();
-        PlaneWavePlan { offsets, nb, grid, local_off, disc_xs }
+
+        // cols_of_rank(q) for every q, once.
+        let cols_by_rank: Vec<Vec<(usize, usize)>> = (0..p)
+            .map(|q| {
+                let lnx = cyclic::local_count(offsets.nx, p, q);
+                let mut cols = Vec::new();
+                for y in 0..offsets.ny {
+                    for lx in 0..lnx {
+                        let gx = cyclic::local_to_global(lx, p, q);
+                        if offsets.col_nonempty(gx, y) {
+                            cols.push((gx, y));
+                        }
+                    }
+                }
+                cols
+            })
+            .collect();
+        let ncols = cols_by_rank[r].len();
+        let lzc = cyclic::local_count(offsets.nz, p, r);
+
+        // Forward: to rank s go, for each owned column, s's z residues.
+        let send_counts: Vec<usize> = (0..p)
+            .map(|s| nb * ncols * cyclic::local_count(offsets.nz, p, s))
+            .collect();
+        // From rank q arrive q's columns, this rank's z residues.
+        let recv_counts: Vec<usize> =
+            (0..p).map(|q| nb * cols_by_rank[q].len() * lzc).collect();
+        let fwd = A2aSchedule::new(send_counts, recv_counts, r);
+        let inv = fwd.reversed();
+
+        Ok(PlaneWavePlan {
+            offsets,
+            nb,
+            grid,
+            local_off,
+            disc_xs,
+            cols_by_rank,
+            ncols,
+            lzc,
+            fwd,
+            inv,
+            ws: Mutex::new(Workspace::new()),
+        })
     }
 
     fn p(&self) -> usize {
         self.grid.size()
-    }
-
-    fn r(&self) -> usize {
-        self.grid.rank()
     }
 
     /// Packed local input length (`nb` x locally-owned sphere points).
@@ -80,71 +144,58 @@ impl PlaneWavePlan {
 
     /// Dense local output length `[nb, nx, ny, lzc]`.
     pub fn output_len(&self) -> usize {
-        let lzc = cyclic::local_count(self.offsets.nz, self.p(), self.r());
-        self.nb * self.offsets.nx * self.offsets.ny * lzc
-    }
-
-    /// Disc columns owned by rank `q`, in q's local packing order
-    /// (y outer, local-x inner), as global `(gx, y)` pairs.
-    fn cols_of_rank(&self, q: usize) -> Vec<(usize, usize)> {
-        let p = self.p();
-        let lnx = cyclic::local_count(self.offsets.nx, p, q);
-        let mut cols = Vec::new();
-        for y in 0..self.offsets.ny {
-            for lx in 0..lnx {
-                let gx = cyclic::local_to_global(lx, p, q);
-                if self.offsets.col_nonempty(gx, y) {
-                    cols.push((gx, y));
-                }
-            }
-        }
-        cols
+        self.nb * self.offsets.nx * self.offsets.ny * self.lzc
     }
 
     /// FFT along y for the disc's x-extent only (the staged pad/truncate
     /// pass). Perf (EXPERIMENTS.md §Perf, L3 iteration 5): instead of a
     /// scalar gather per (b, y) element with stride nb*nx, copy
     /// nb-contiguous runs into an [nb, ny, n_panels] buffer and reuse the
-    /// cache-tiled panel path of `backend_fft_dim`.
+    /// cache-tiled panel path of `backend_fft_dim_ws`. The panel and
+    /// transpose buffers come from the workspace.
+    #[allow(clippy::too_many_arguments)]
     fn fft_y_disc(
         &self,
         backend: &dyn LocalFftBackend,
         cube: &mut [Complex],
-        lzc: usize,
         dir: Direction,
+        panel: &mut Vec<Complex>,
+        fft: &mut Vec<Complex>,
+        ctr: &Cell<u64>,
     ) {
         let (nx, ny) = (self.offsets.nx, self.offsets.ny);
         let nb = self.nb;
+        let lzc = self.lzc;
         let npanels = self.disc_xs.len() * lzc;
         if npanels == 0 {
             return;
         }
-        let mut buf = vec![ZERO; nb * ny * npanels];
-        let mut panel = 0;
+        ensure(&mut *panel, nb * ny * npanels, ctr);
+        let mut pi = 0;
         for lz in 0..lzc {
             for &x in &self.disc_xs {
                 let base = nb * (x + nx * ny * lz);
-                let dst0 = panel * nb * ny;
+                let dst0 = pi * nb * ny;
                 for k in 0..ny {
                     let src = base + k * nb * nx;
                     let dst = dst0 + k * nb;
-                    buf[dst..dst + nb].copy_from_slice(&cube[src..src + nb]);
+                    panel[dst..dst + nb].copy_from_slice(&cube[src..src + nb]);
                 }
-                panel += 1;
+                pi += 1;
             }
         }
-        backend_fft_dim(backend, &mut buf, &[nb, ny, npanels], 1, dir);
-        let mut panel = 0;
+        backend_fft_dim_ws(backend, &mut *panel, &[nb, ny, npanels], 1, dir, &mut *fft, ctr);
+        let mut pi = 0;
         for lz in 0..lzc {
             for &x in &self.disc_xs {
                 let base = nb * (x + nx * ny * lz);
-                let src0 = panel * nb * ny;
+                let src0 = pi * nb * ny;
                 for k in 0..ny {
                     let dst = base + k * nb * nx;
                     let src = src0 + k * nb;
-                    cube[dst..dst + nb].copy_from_slice(&buf[src..src + nb]);
+                    cube[dst..dst + nb].copy_from_slice(&panel[src..src + nb]);
                 }
-                panel += 1;
+                pi += 1;
             }
         }
     }
@@ -156,62 +207,75 @@ impl PlaneWavePlan {
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
         assert_eq!(input.len(), self.input_len(), "forward: wrong input length");
-        let (p, r) = (self.p(), self.r());
+        let p = self.p();
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
-        let lzc = cyclic::local_count(nz, p, r);
+        let (ncols, lzc) = (self.ncols, self.lzc);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let Workspace { send, recv, fft, work, panel, out, alloc } = ws;
+        let alloc = &*alloc;
+        let mut cube = std::mem::take(out);
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
         // 1. Scatter z-runs to dense columns + FFT z.
         //    Dense layout: [nb, nz, C_loc], one zero-padded line per disc col.
-        let (mut cylin, my_cols) = t.reshape("scatter_z", || self.local_off.scatter_z(&input, nb));
-        let ncols = my_cols.len();
-        t.compute("pad_fft_z", backend.flops(cylin.len(), nz), || {
-            backend_fft_dim(backend, &mut cylin, &[nb, nz, ncols], 1, Direction::Forward);
+        t.reshape("scatter_z", || {
+            ensure_zeroed(&mut *work, nb * nz * ncols, alloc);
+            self.local_off.scatter_z_into(&input, nb, &mut *work);
+        });
+        t.compute("pad_fft_z", backend.flops(nb * nz * ncols, nz), || {
+            backend_fft_dim_ws(
+                backend,
+                &mut *work,
+                &[nb, nz, ncols],
+                1,
+                Direction::Forward,
+                &mut *fft,
+                alloc,
+            );
         });
 
         // 2. Pack per-destination z-residue blocks and exchange.
         //    Block to s: for each column c, for each lz (gz = lz*p + s), nb-run.
-        let blocks = t.reshape("pack_cols", || {
-            let mut blocks: Vec<Vec<Complex>> = (0..p)
-                .map(|s| {
-                    Vec::with_capacity(nb * ncols * cyclic::local_count(nz, p, s))
-                })
-                .collect();
-            for (s, block) in blocks.iter_mut().enumerate() {
+        t.reshape("pack_cols", || {
+            ensure(&mut *send, self.fwd.send_total(), alloc);
+            for s in 0..p {
                 let lzc_s = cyclic::local_count(nz, p, s);
+                let mut cur = self.fwd.send_offs[s];
                 for c in 0..ncols {
                     let base = c * nb * nz;
                     for lz in 0..lzc_s {
                         let gz = cyclic::local_to_global(lz, p, s);
                         let src = base + nb * gz;
-                        block.extend_from_slice(&cylin[src..src + nb]);
+                        send[cur..cur + nb].copy_from_slice(&work[src..src + nb]);
+                        cur += nb;
                     }
                 }
             }
-            blocks
         });
-        drop(cylin);
-        let recv = t.comm("a2a_sphere", || {
-            let sent: u64 = blocks
-                .iter()
-                .enumerate()
-                .filter(|(s, _)| *s != r)
-                .map(|(_, b)| (b.len() * 16) as u64)
-                .sum();
-            (alltoallv_complex(comm, blocks), sent, (p - 1) as u64)
+        t.comm("a2a_sphere", || {
+            ensure(&mut *recv, self.fwd.recv_total(), alloc);
+            alltoallv_complex_flat(
+                comm,
+                &*send,
+                &self.fwd.send_offs,
+                &mut *recv,
+                &self.fwd.recv_offs,
+            );
+            ((), self.fwd.bytes_remote(), self.fwd.msgs())
         });
 
         // 3. Land the columns in a zeroed slab; FFT y over the disc x-extent.
-        let mut cube = t.reshape("unpack_cube", || {
-            let mut cube = vec![ZERO; nb * nx * ny * lzc];
-            for (q, block) in recv.iter().enumerate() {
-                let cols_q = self.cols_of_rank(q);
-                assert_eq!(block.len(), nb * cols_q.len() * lzc, "bad block from rank {q}");
+        t.reshape("unpack_cube", || {
+            ensure_zeroed(&mut cube, nb * nx * ny * lzc, alloc);
+            for (q, cols_q) in self.cols_by_rank.iter().enumerate() {
+                let block = &recv[self.fwd.recv_offs[q]..self.fwd.recv_offs[q + 1]];
                 let mut src = 0;
-                for &(gx, y) in &cols_q {
+                for &(gx, y) in cols_q {
                     for lz in 0..lzc {
                         let dst = nb * (gx + nx * (y + ny * lz));
                         cube[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
@@ -219,22 +283,31 @@ impl PlaneWavePlan {
                     }
                 }
             }
-            cube
         });
-        drop(recv);
 
         // y lines only where the disc has data: one line per (b, x in
         // disc_xs, lz); stride between y's is nb*nx.
-        let y_lines: f64 = (nb * self.disc_xs.len() * lzc) as f64
-            * crate::fft::batch::fft_flops(ny);
+        let y_lines: f64 =
+            (nb * self.disc_xs.len() * lzc) as f64 * crate::fft::batch::fft_flops(ny);
         t.compute("pad_fft_y", y_lines, || {
-            self.fft_y_disc(backend, &mut cube, lzc, Direction::Forward);
+            self.fft_y_disc(backend, &mut cube, Direction::Forward, &mut *panel, &mut *fft, alloc);
         });
 
         // 4. Dense FFT along x.
         t.compute("fft_x", backend.flops(cube.len(), nx), || {
-            backend_fft_dim(backend, &mut cube, &[nb, nx, ny, lzc], 1, Direction::Forward);
+            backend_fft_dim_ws(
+                backend,
+                &mut cube,
+                &[nb, nx, ny, lzc],
+                1,
+                Direction::Forward,
+                &mut *fft,
+                alloc,
+            );
         });
+        // The consumed input becomes the next inverse call's output slot.
+        *out = input;
+        trace.alloc_bytes = alloc.get();
         (cube, trace)
     }
 
@@ -246,82 +319,104 @@ impl PlaneWavePlan {
         mut cube: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
         assert_eq!(cube.len(), self.output_len(), "inverse: wrong input length");
-        let (p, r) = (self.p(), self.r());
+        let p = self.p();
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
-        let lzc = cyclic::local_count(nz, p, r);
+        let (ncols, lzc) = (self.ncols, self.lzc);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let Workspace { send, recv, fft, work, panel, out, alloc } = ws;
+        let alloc = &*alloc;
+        let mut packed = std::mem::take(out);
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
         // 1. Dense inverse FFT along x.
         t.compute("ifft_x", backend.flops(cube.len(), nx), || {
-            backend_fft_dim(backend, &mut cube, &[nb, nx, ny, lzc], 1, Direction::Inverse);
+            backend_fft_dim_ws(
+                backend,
+                &mut cube,
+                &[nb, nx, ny, lzc],
+                1,
+                Direction::Inverse,
+                &mut *fft,
+                alloc,
+            );
         });
 
         // 2. Inverse FFT along y, only the disc x-extent (the other lines
         //    would be truncated away anyway).
-        let y_lines: f64 = (nb * self.disc_xs.len() * lzc) as f64
-            * crate::fft::batch::fft_flops(ny);
+        let y_lines: f64 =
+            (nb * self.disc_xs.len() * lzc) as f64 * crate::fft::batch::fft_flops(ny);
         t.compute("trunc_ifft_y", y_lines, || {
-            self.fft_y_disc(backend, &mut cube, lzc, Direction::Inverse);
+            self.fft_y_disc(backend, &mut cube, Direction::Inverse, &mut *panel, &mut *fft, alloc);
         });
 
         // 3. Gather each owner's disc columns (my z residue) and exchange.
-        let blocks = t.reshape("pack_cols", || {
-            let mut blocks: Vec<Vec<Complex>> = Vec::with_capacity(p);
-            for q in 0..p {
-                let cols_q = self.cols_of_rank(q);
-                let mut block = Vec::with_capacity(nb * cols_q.len() * lzc);
-                for &(gx, y) in &cols_q {
+        t.reshape("pack_cols", || {
+            ensure(&mut *send, self.inv.send_total(), alloc);
+            for (q, cols_q) in self.cols_by_rank.iter().enumerate() {
+                let mut cur = self.inv.send_offs[q];
+                for &(gx, y) in cols_q {
                     for lz in 0..lzc {
                         let src = nb * (gx + nx * (y + ny * lz));
-                        block.extend_from_slice(&cube[src..src + nb]);
+                        send[cur..cur + nb].copy_from_slice(&cube[src..src + nb]);
+                        cur += nb;
                     }
                 }
-                blocks.push(block);
             }
-            blocks
         });
-        drop(cube);
-        let recv = t.comm("a2a_sphere", || {
-            let sent: u64 = blocks
-                .iter()
-                .enumerate()
-                .filter(|(s, _)| *s != r)
-                .map(|(_, b)| (b.len() * 16) as u64)
-                .sum();
-            (alltoallv_complex(comm, blocks), sent, (p - 1) as u64)
+        t.comm("a2a_sphere", || {
+            ensure(&mut *recv, self.inv.recv_total(), alloc);
+            alltoallv_complex_flat(
+                comm,
+                &*send,
+                &self.inv.send_offs,
+                &mut *recv,
+                &self.inv.recv_offs,
+            );
+            ((), self.inv.bytes_remote(), self.inv.msgs())
         });
 
         // 4. Merge z residues into dense local columns.
-        let my_cols = self.cols_of_rank(r);
-        let ncols = my_cols.len();
-        let mut cylin = t.reshape("unpack_cols", || {
-            let mut cylin = vec![ZERO; nb * nz * ncols];
-            for (s, block) in recv.iter().enumerate() {
+        t.reshape("unpack_cols", || {
+            ensure(&mut *work, nb * nz * ncols, alloc);
+            for s in 0..p {
                 let lzc_s = cyclic::local_count(nz, p, s);
-                assert_eq!(block.len(), nb * ncols * lzc_s, "bad block from rank {s}");
+                let block = &recv[self.inv.recv_offs[s]..self.inv.recv_offs[s + 1]];
                 let mut src = 0;
                 for c in 0..ncols {
                     let base = c * nb * nz;
                     for lz in 0..lzc_s {
                         let gz = cyclic::local_to_global(lz, p, s);
                         let dst = base + nb * gz;
-                        cylin[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
+                        work[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
                         src += nb;
                     }
                 }
             }
-            cylin
         });
-        drop(recv);
 
         // 5. Inverse FFT along z, truncate to the sphere runs.
-        t.compute("ifft_z", backend.flops(cylin.len(), nz), || {
-            backend_fft_dim(backend, &mut cylin, &[nb, nz, ncols], 1, Direction::Inverse);
+        t.compute("ifft_z", backend.flops(nb * nz * ncols, nz), || {
+            backend_fft_dim_ws(
+                backend,
+                &mut *work,
+                &[nb, nz, ncols],
+                1,
+                Direction::Inverse,
+                &mut *fft,
+                alloc,
+            );
         });
-        let packed = t.reshape("gather_z", || self.local_off.gather_z(&cylin, nb));
+        t.reshape("gather_z", || {
+            ensure(&mut packed, nb * self.local_off.total(), alloc);
+            self.local_off.gather_z_into(&*work, nb, &mut packed);
+        });
+        *out = cube;
+        trace.alloc_bytes = alloc.get();
         (packed, trace)
     }
 }
@@ -334,15 +429,15 @@ pub struct PaddedSpherePlan {
     pub nb: usize,
     slab: super::slab_pencil::SlabPencilPlan,
     local_off: OffsetArray,
-    grid: Arc<ProcGrid>,
+    ws: Mutex<Workspace>,
 }
 
 impl PaddedSpherePlan {
-    pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Self {
+    pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         let shape = [offsets.nx, offsets.ny, offsets.nz];
-        let slab = super::slab_pencil::SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+        let slab = super::slab_pencil::SlabPencilPlan::new(shape, nb, Arc::clone(&grid))?;
         let local_off = offsets.restrict_x_cyclic(grid.size(), grid.rank());
-        PaddedSpherePlan { offsets, nb, slab, local_off, grid }
+        Ok(PaddedSpherePlan { offsets, nb, slab, local_off, ws: Mutex::new(Workspace::new()) })
     }
 
     pub fn input_len(&self) -> usize {
@@ -361,31 +456,38 @@ impl PaddedSpherePlan {
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
         assert_eq!(input.len(), self.input_len());
-        let (p, r) = (self.grid.size(), self.grid.rank());
-        let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
-        let lxc = cyclic::local_count(nx, p, r);
+        let (lxc, ny, nz) = (self.local_off.nx, self.local_off.ny, self.local_off.nz);
         let mut trace = ExecTrace::default();
-        let mut t = StageTimer::new(&mut trace);
-        // Pad up front: local dense [nb, lxc, ny, nz].
-        let cube = t.reshape("pad_full", || {
-            let mut cube = vec![ZERO; nb * lxc * ny * nz];
-            for y in 0..ny {
-                for lx in 0..lxc {
-                    let mut e = self.local_off.col_offset(lx, y);
-                    for &(z0, len) in self.local_off.col_runs(lx, y) {
-                        for z in z0 as usize..(z0 + len) as usize {
-                            let dst = nb * (lx + lxc * (y + ny * z));
-                            let src = nb * e;
-                            cube[dst..dst + nb].copy_from_slice(&input[src..src + nb]);
-                            e += 1;
+        let cube = {
+            let mut guard = self.ws.lock().unwrap();
+            let ws = &mut *guard;
+            ws.begin();
+            let mut cube = std::mem::take(&mut ws.out);
+            let mut t = StageTimer::new(&mut trace);
+            // Pad up front: local dense [nb, lxc, ny, nz].
+            t.reshape("pad_full", || {
+                ensure_zeroed(&mut cube, nb * lxc * ny * nz, &ws.alloc);
+                for y in 0..ny {
+                    for lx in 0..lxc {
+                        let mut e = self.local_off.col_offset(lx, y);
+                        for &(z0, len) in self.local_off.col_runs(lx, y) {
+                            for z in z0 as usize..(z0 + len) as usize {
+                                let dst = nb * (lx + lxc * (y + ny * z));
+                                let src = nb * e;
+                                cube[dst..dst + nb].copy_from_slice(&input[src..src + nb]);
+                                e += 1;
+                            }
                         }
                     }
                 }
-            }
+            });
+            ws.out = input;
+            trace.alloc_bytes = ws.allocated();
             cube
-        });
+        };
         let (out, slab_trace) = self.slab.forward(backend, cube);
+        trace.alloc_bytes += slab_trace.alloc_bytes;
         trace.stages.extend(slab_trace.stages);
         (out, trace)
     }
@@ -399,9 +501,13 @@ impl PaddedSpherePlan {
         let (back, mut trace) = self.slab.inverse(backend, cube);
         let nb = self.nb;
         let (lxc, ny) = (self.local_off.nx, self.local_off.ny);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let mut packed = std::mem::take(&mut ws.out);
         let mut t = StageTimer::new(&mut trace);
-        let packed = t.reshape("trunc_full", || {
-            let mut packed = vec![ZERO; nb * self.local_off.total()];
+        t.reshape("trunc_full", || {
+            ensure(&mut packed, nb * self.local_off.total(), &ws.alloc);
             for y in 0..ny {
                 for lx in 0..lxc {
                     let mut e = self.local_off.col_offset(lx, y);
@@ -415,8 +521,9 @@ impl PaddedSpherePlan {
                     }
                 }
             }
-            packed
         });
+        ws.out = back;
+        trace.alloc_bytes += ws.allocated();
         (packed, trace)
     }
 }
@@ -477,7 +584,7 @@ mod tests {
         let packed2 = packed.clone();
         let outs = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let plan = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
             let local = scatter_sphere(&off2, &packed2, nb, p, grid.rank());
             let backend = RustFftBackend::new();
             let (out, _) = plan.forward(&backend, local);
@@ -510,7 +617,7 @@ mod tests {
         let packed2 = packed.clone();
         let errs = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let plan = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
             let local = scatter_sphere(&off2, &packed2, nb, p, grid.rank());
             let backend = RustFftBackend::new();
             let (cube, _) = plan.forward(&backend, local.clone());
@@ -536,9 +643,10 @@ mod tests {
             let grid = ProcGrid::new(&[p], comm).unwrap();
             let local = scatter_sphere(&off2, &packed2, nb, p, grid.rank());
             let backend = RustFftBackend::new();
-            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let pw = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
             let (a, tr_a) = pw.forward(&backend, local.clone());
-            let padded = PaddedSpherePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid));
+            let padded =
+                PaddedSpherePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
             let (b, tr_b) = padded.forward(&backend, local);
             // Identical numerics...
             assert!(max_abs_diff(&a, &b) < 1e-8);
@@ -562,5 +670,16 @@ mod tests {
         let off = Arc::new(spec.offsets());
         let disc_frac = off.disc_columns().len() as f64 / (n * n) as f64;
         assert!(disc_frac < 0.3, "disc fraction {disc_frac}");
+    }
+
+    #[test]
+    fn oversubscribed_grid_rejected() {
+        run_world(4, |comm| {
+            let grid = ProcGrid::new(&[4], comm).unwrap();
+            let spec = SphereSpec::new([2, 8, 8], 1.0, SphereKind::Centered);
+            let off = Arc::new(spec.offsets());
+            let e = PlaneWavePlan::new(off, 1, grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)));
+        });
     }
 }

@@ -1,4 +1,4 @@
-//! Pack/unpack helpers for the alltoall stages.
+//! Pack/unpack helpers and plan-time schedules for the alltoall stages.
 //!
 //! Every distributed FFT stage exchanges one tensor dimension for another:
 //! the sending side *splits* a dense dimension by elemental-cyclic residue
@@ -6,6 +6,13 @@
 //! into a dense dimension. These are the CPU equivalents of the paper's
 //! "small codelets that pack and rotate the data locally on the GPU before
 //! communicating it over the network" (§4.1).
+//!
+//! An [`A2aSchedule`] captures, at plan time, everything the exchange needs
+//! per execution: per-destination block extents and flat-buffer offsets for
+//! both the pack and the unpack side, plus the wire accounting the traces
+//! report. At execute time [`split_dim_into`]/[`merge_dim_from`] move data
+//! between the tensor and a single flat buffer per direction — no per-call
+//! `Vec<Vec<_>>` construction on the hot path.
 //!
 //! Tensors are 4D `[nb, d1, d2, d3]`, column-major, batch fastest:
 //! `flat = b + nb*(i1 + d1*(i2 + d2*i3))`. Copies move whole `nb`-runs, so
@@ -21,6 +28,92 @@ pub type Shape4 = [usize; 4];
 #[inline]
 pub fn volume(sh: Shape4) -> usize {
     sh[0] * sh[1] * sh[2] * sh[3]
+}
+
+/// Plan-time schedule of one alltoall exchange: block extents (in complex
+/// elements) and prefix-sum offsets for the flat send and receive buffers,
+/// plus the rank whose self-block bypasses the wire.
+pub struct A2aSchedule {
+    pub p: usize,
+    pub me: usize,
+    pub send_counts: Vec<usize>,
+    /// `send_offs[j]..send_offs[j+1]` is rank j's slice of the send buffer.
+    pub send_offs: Vec<usize>,
+    pub recv_counts: Vec<usize>,
+    pub recv_offs: Vec<usize>,
+}
+
+fn prefix_sums(counts: &[usize]) -> Vec<usize> {
+    let mut offs = Vec::with_capacity(counts.len() + 1);
+    let mut acc = 0usize;
+    offs.push(0);
+    for &c in counts {
+        acc += c;
+        offs.push(acc);
+    }
+    offs
+}
+
+impl A2aSchedule {
+    pub fn new(send_counts: Vec<usize>, recv_counts: Vec<usize>, me: usize) -> Self {
+        assert_eq!(send_counts.len(), recv_counts.len());
+        assert!(me < send_counts.len());
+        let send_offs = prefix_sums(&send_counts);
+        let recv_offs = prefix_sums(&recv_counts);
+        A2aSchedule { p: send_counts.len(), me, send_counts, send_offs, recv_counts, recv_offs }
+    }
+
+    /// Schedule for a cyclic split/merge exchange: this rank splits
+    /// `sh_send` along `dim_s` into `p` residue blocks, and receives blocks
+    /// that merge into `sh_recv` along `dim_r` (block from rank q has
+    /// `sh_recv[dim_r]` replaced by q's cyclic count — the same convention
+    /// [`merge_dim`] documents).
+    pub fn for_split_merge(
+        sh_send: Shape4,
+        dim_s: usize,
+        sh_recv: Shape4,
+        dim_r: usize,
+        p: usize,
+        me: usize,
+    ) -> Self {
+        let count = |sh: Shape4, dim: usize, r: usize| {
+            let mut bsh = sh;
+            bsh[dim] = cyclic::local_count(sh[dim], p, r);
+            volume(bsh)
+        };
+        let send_counts = (0..p).map(|s| count(sh_send, dim_s, s)).collect();
+        let recv_counts = (0..p).map(|q| count(sh_recv, dim_r, q)).collect();
+        Self::new(send_counts, recv_counts, me)
+    }
+
+    /// The mirror schedule (send and receive sides swapped) — the inverse
+    /// transform of an exchange whose block extents are direction-symmetric.
+    pub fn reversed(&self) -> A2aSchedule {
+        A2aSchedule::new(self.recv_counts.clone(), self.send_counts.clone(), self.me)
+    }
+
+    pub fn send_total(&self) -> usize {
+        self.send_offs[self.p]
+    }
+
+    pub fn recv_total(&self) -> usize {
+        self.recv_offs[self.p]
+    }
+
+    /// Bytes this rank puts on the wire (self block excluded).
+    pub fn bytes_remote(&self) -> u64 {
+        self.send_counts
+            .iter()
+            .enumerate()
+            .filter(|(s, _)| *s != self.me)
+            .map(|(_, &c)| (c * std::mem::size_of::<Complex>()) as u64)
+            .sum()
+    }
+
+    /// Point-to-point messages this rank sends.
+    pub fn msgs(&self) -> u64 {
+        (self.p - 1) as u64
+    }
 }
 
 /// Split dimension `dim` (1, 2 or 3) by cyclic residue into `p` blocks.
@@ -52,11 +145,7 @@ pub fn split_dim(data: &[Complex], sh: Shape4, dim: usize, p: usize) -> Vec<Vec<
     for i3 in 0..d3 {
         for i2 in 0..d2 {
             for i1 in 0..d1 {
-                let s = match dim {
-                    1 => i1 % p,
-                    2 => i2 % p,
-                    _ => i3 % p,
-                };
+                let s = if dim == 1 { i1 % p } else { i2 % p };
                 let src = nb * (i1 + d1 * (i2 + d2 * i3));
                 blocks[s].extend_from_slice(&data[src..src + nb]);
             }
@@ -65,30 +154,75 @@ pub fn split_dim(data: &[Complex], sh: Shape4, dim: usize, p: usize) -> Vec<Vec<
     blocks
 }
 
+/// [`split_dim`] into a preallocated flat buffer: block `s` is written at
+/// `out[offs[s]..offs[s+1]]` in the same canonical order. Destination
+/// positions are computed analytically, so the pack performs zero heap
+/// allocation.
+pub fn split_dim_into(
+    data: &[Complex],
+    sh: Shape4,
+    dim: usize,
+    p: usize,
+    out: &mut [Complex],
+    offs: &[usize],
+) {
+    assert!((1..=3).contains(&dim), "cannot split the batch dimension");
+    assert_eq!(data.len(), volume(sh));
+    assert_eq!(offs.len(), p + 1);
+    assert_eq!(out.len(), offs[p], "split_dim_into: flat buffer length");
+    let [nb, d1, d2, d3] = sh;
+    if dim == 3 {
+        let plane = nb * d1 * d2;
+        for i3 in 0..d3 {
+            let (s, j3) = (i3 % p, i3 / p);
+            let dst = offs[s] + j3 * plane;
+            out[dst..dst + plane].copy_from_slice(&data[i3 * plane..(i3 + 1) * plane]);
+        }
+        return;
+    }
+    // Per-destination extent of the split dim without a div per element:
+    // local_count(d, p, s) = d/p + (s < d%p).
+    let (base, rem) = (sh[dim] / p, sh[dim] % p);
+    let lc = |s: usize| base + usize::from(s < rem);
+    if dim == 1 {
+        for i3 in 0..d3 {
+            for i2 in 0..d2 {
+                let plane = d2 * i3 + i2;
+                let mut src = nb * d1 * plane;
+                let (mut s, mut j1) = (0usize, 0usize);
+                for _i1 in 0..d1 {
+                    let dst = offs[s] + nb * (j1 + lc(s) * plane);
+                    out[dst..dst + nb].copy_from_slice(&data[src..src + nb]);
+                    src += nb;
+                    s += 1;
+                    if s == p {
+                        s = 0;
+                        j1 += 1;
+                    }
+                }
+            }
+        }
+    } else {
+        for i3 in 0..d3 {
+            for i2 in 0..d2 {
+                let (s, j2) = (i2 % p, i2 / p);
+                let b2 = lc(s);
+                for i1 in 0..d1 {
+                    let dst = offs[s] + nb * (i1 + d1 * (j2 + b2 * i3));
+                    let src = nb * (i1 + d1 * (i2 + d2 * i3));
+                    out[dst..dst + nb].copy_from_slice(&data[src..src + nb]);
+                }
+            }
+        }
+    }
+}
+
 /// Merge `p` blocks into dense dimension `dim` of shape `sh_out`.
 /// Block `r` supplies the indices `i = j*p + r`. Inverse of [`split_dim`].
 pub fn merge_dim(blocks: &[Vec<Complex>], sh_out: Shape4, dim: usize, p: usize) -> Vec<Complex> {
     assert!((1..=3).contains(&dim));
     assert_eq!(blocks.len(), p);
-    let [nb, d1, d2, _d3] = sh_out;
     let mut out = vec![ZERO; volume(sh_out)];
-    // Perf (§Perf, L3 iteration 3): dim-3 merges interleave whole
-    // contiguous planes — memcpy per plane (the unpack stage of the
-    // inverse slab alltoall).
-    if dim == 3 {
-        let plane = nb * d1 * d2;
-        for (r, block) in blocks.iter().enumerate() {
-            let b3 = cyclic::local_count(sh_out[3], p, r);
-            assert_eq!(block.len(), plane * b3, "merge_dim: block {r} has wrong size");
-            for (j3, src) in block.chunks_exact(plane).enumerate() {
-                let i3 = j3 * p + r;
-                out[i3 * plane..(i3 + 1) * plane].copy_from_slice(src);
-            }
-            let _ = b3;
-        }
-        return out;
-    }
-    // Walk each block in its canonical order and scatter.
     for (r, block) in blocks.iter().enumerate() {
         let mut bsh = sh_out;
         bsh[dim] = cyclic::local_count(sh_out[dim], p, r);
@@ -97,22 +231,75 @@ pub fn merge_dim(blocks: &[Vec<Complex>], sh_out: Shape4, dim: usize, p: usize) 
             volume(bsh),
             "merge_dim: block {r} has wrong size (expected shape {bsh:?})"
         );
-        let [_, b1, b2, b3] = bsh;
-        let mut src = 0;
-        for j3 in 0..b3 {
-            let i3 = if dim == 3 { j3 * p + r } else { j3 };
-            for j2 in 0..b2 {
-                let i2 = if dim == 2 { j2 * p + r } else { j2 };
-                for j1 in 0..b1 {
-                    let i1 = if dim == 1 { j1 * p + r } else { j1 };
-                    let dst = nb * (i1 + d1 * (i2 + d2 * i3));
-                    out[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
-                    src += nb;
-                }
+        merge_block(block, sh_out, dim, p, r, &mut out);
+    }
+    out
+}
+
+/// [`merge_dim`] from a preallocated flat receive buffer: block `q` is read
+/// from `recv[offs[q]..offs[q+1]]` and scattered into `out` in place — no
+/// allocation on the unpack path.
+pub fn merge_dim_from(
+    recv: &[Complex],
+    offs: &[usize],
+    sh_out: Shape4,
+    dim: usize,
+    p: usize,
+    out: &mut [Complex],
+) {
+    assert!((1..=3).contains(&dim));
+    assert_eq!(offs.len(), p + 1);
+    assert_eq!(recv.len(), offs[p], "merge_dim_from: flat buffer length");
+    assert_eq!(out.len(), volume(sh_out), "merge_dim_from: output length");
+    for r in 0..p {
+        let block = &recv[offs[r]..offs[r + 1]];
+        let mut bsh = sh_out;
+        bsh[dim] = cyclic::local_count(sh_out[dim], p, r);
+        assert_eq!(
+            block.len(),
+            volume(bsh),
+            "merge_dim_from: block {r} has wrong size (expected shape {bsh:?})"
+        );
+        merge_block(block, sh_out, dim, p, r, out);
+    }
+}
+
+/// Scatter one canonical-order residue block into the dense tensor.
+fn merge_block(
+    block: &[Complex],
+    sh_out: Shape4,
+    dim: usize,
+    p: usize,
+    r: usize,
+    out: &mut [Complex],
+) {
+    let [nb, d1, d2, _d3] = sh_out;
+    // Perf (§Perf, L3 iteration 3): dim-3 merges interleave whole
+    // contiguous planes — memcpy per plane (the unpack stage of the
+    // inverse slab alltoall).
+    if dim == 3 {
+        let plane = nb * d1 * d2;
+        for (j3, src) in block.chunks_exact(plane).enumerate() {
+            let i3 = j3 * p + r;
+            out[i3 * plane..(i3 + 1) * plane].copy_from_slice(src);
+        }
+        return;
+    }
+    let mut bsh = sh_out;
+    bsh[dim] = cyclic::local_count(sh_out[dim], p, r);
+    let [_, b1, b2, b3] = bsh;
+    let mut src = 0;
+    for i3 in 0..b3 {
+        for j2 in 0..b2 {
+            let i2 = if dim == 2 { j2 * p + r } else { j2 };
+            for j1 in 0..b1 {
+                let i1 = if dim == 1 { j1 * p + r } else { j1 };
+                let dst = nb * (i1 + d1 * (i2 + d2 * i3));
+                out[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
+                src += nb;
             }
         }
     }
-    out
 }
 
 /// Extract one batch entry `b` from a batch-fastest tensor (used by the
@@ -120,6 +307,16 @@ pub fn merge_dim(blocks: &[Vec<Complex>], sh_out: Shape4, dim: usize, p: usize) 
 pub fn extract_band(data: &[Complex], nb: usize, b: usize) -> Vec<Complex> {
     assert!(b < nb);
     data.iter().skip(b).step_by(nb).copied().collect()
+}
+
+/// [`extract_band`] into a preallocated buffer (the loop variant's
+/// allocation-free band staging).
+pub fn extract_band_into(data: &[Complex], nb: usize, b: usize, out: &mut [Complex]) {
+    assert!(b < nb);
+    assert_eq!(data.len(), nb * out.len());
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = data[b + nb * i];
+    }
 }
 
 /// Write one batch entry back.
@@ -174,6 +371,54 @@ mod tests {
     }
 
     #[test]
+    fn flat_split_matches_nested() {
+        let sh: Shape4 = [2, 5, 4, 6];
+        let data = seq(volume(sh));
+        for dim in 1..=3 {
+            for p in [1usize, 2, 3, 4] {
+                let sched = A2aSchedule::for_split_merge(sh, dim, sh, dim, p, 0);
+                let nested = split_dim(&data, sh, dim, p);
+                let mut flat = vec![ZERO; sched.send_total()];
+                split_dim_into(&data, sh, dim, p, &mut flat, &sched.send_offs);
+                for (s, block) in nested.iter().enumerate() {
+                    assert_eq!(
+                        &flat[sched.send_offs[s]..sched.send_offs[s + 1]],
+                        &block[..],
+                        "dim={dim} p={p} block={s}"
+                    );
+                }
+                // Flat merge inverts the flat split.
+                let mut back = vec![ZERO; data.len()];
+                merge_dim_from(&flat, &sched.recv_offs, sh, dim, p, &mut back);
+                assert_eq!(back, data, "dim={dim} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_extents_match_split_blocks() {
+        let sh_send: Shape4 = [3, 5, 4, 7];
+        let sh_recv: Shape4 = [3, 6, 4, 5];
+        let p = 3;
+        let sched = A2aSchedule::for_split_merge(sh_send, 3, sh_recv, 1, p, 1);
+        let data = seq(volume(sh_send));
+        let blocks = split_dim(&data, sh_send, 3, p);
+        for (s, block) in blocks.iter().enumerate() {
+            assert_eq!(sched.send_counts[s], block.len());
+        }
+        assert_eq!(sched.send_total(), data.len());
+        assert_eq!(sched.recv_total(), volume(sh_recv));
+        // me=1 of 3 sends blocks 0 and 2 remotely.
+        let remote: usize = sched.send_counts[0] + sched.send_counts[2];
+        assert_eq!(sched.bytes_remote(), (remote * 16) as u64);
+        assert_eq!(sched.msgs(), 2);
+        // The reversed schedule swaps the two sides.
+        let rev = sched.reversed();
+        assert_eq!(rev.send_counts, sched.recv_counts);
+        assert_eq!(rev.recv_counts, sched.send_counts);
+    }
+
+    #[test]
     fn band_extract_insert_round_trip() {
         let nb = 3;
         let data = seq(nb * 5);
@@ -181,6 +426,9 @@ mod tests {
         for b in 0..nb {
             let band = extract_band(&data, nb, b);
             assert_eq!(band.len(), 5);
+            let mut band2 = vec![ZERO; 5];
+            extract_band_into(&data, nb, b, &mut band2);
+            assert_eq!(band, band2);
             insert_band(&mut rebuilt, nb, b, &band);
         }
         assert_eq!(rebuilt, data);

@@ -12,17 +12,27 @@
 //!
 //! The inverse runs the mirror image. Local tensors are 4D
 //! `[nb, local_x, ny, nz]` / `[nb, nx, ny, local_z]`, column-major.
+//!
+//! Communication schedules (block extents, flat-buffer offsets) are
+//! computed once at plan time; every execution packs into one flat send
+//! buffer, exchanges, and unpacks in place — with all scratch routed
+//! through the plan's [`Workspace`], steady-state executions perform zero
+//! heap allocation in the pack/unpack/FFT stages (`ExecTrace::alloc_bytes`
+//! reports any workspace growth).
 
 use std::sync::Arc;
+use std::sync::Mutex;
 
-use crate::comm::alltoall::alltoallv_complex;
+use crate::comm::alltoall::alltoallv_complex_flat;
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
-use crate::fftb::backend::{backend_fft_dim, LocalFftBackend};
+use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
+use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 
-use super::redistribute::{merge_dim, split_dim};
+use super::redistribute::{merge_dim_from, split_dim_into, volume, A2aSchedule, Shape4};
 use super::stages::{ExecTrace, StageTimer};
+use super::workspace::{ensure, Workspace};
 
 /// Plan for a batched slab-pencil 3D FFT of global shape `(nx, ny, nz)` on a
 /// 1D grid.
@@ -32,36 +42,61 @@ pub struct SlabPencilPlan {
     pub nz: usize,
     pub nb: usize,
     grid: Arc<ProcGrid>,
+    /// Local input shape `[nb, lxc, ny, nz]`.
+    sh_in: Shape4,
+    /// Local output shape `[nb, nx, ny, lzc]`.
+    sh_out: Shape4,
+    /// Forward exchange: split z of `sh_in`, merge x of `sh_out`.
+    fwd: A2aSchedule,
+    /// Inverse exchange: split x of `sh_out`, merge z of `sh_in`.
+    inv: A2aSchedule,
+    ws: Mutex<Workspace>,
 }
 
 impl SlabPencilPlan {
-    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Self {
+    pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         assert_eq!(grid.ndim(), 1, "slab-pencil requires a 1D processing grid");
         let p = grid.size();
-        assert!(
-            p <= shape[0] && p <= shape[2],
-            "slab-pencil needs p <= nx and p <= nz (p={p}, shape={shape:?}); \
-             parallelize the batch dimension beyond that (see BatchedLoop)"
-        );
-        SlabPencilPlan { nx: shape[0], ny: shape[1], nz: shape[2], nb, grid }
+        if p > shape[0] || p > shape[2] {
+            return Err(FftbError::Unsupported(format!(
+                "slab-pencil needs p <= nx and p <= nz (p={p}, shape={shape:?}); \
+                 parallelize the batch dimension beyond that (see BatchedLoop)"
+            )));
+        }
+        let r = grid.rank();
+        let [nx, ny, nz] = shape;
+        let lxc = cyclic::local_count(nx, p, r);
+        let lzc = cyclic::local_count(nz, p, r);
+        let sh_in = [nb, lxc, ny, nz];
+        let sh_out = [nb, nx, ny, lzc];
+        let fwd = A2aSchedule::for_split_merge(sh_in, 3, sh_out, 1, p, r);
+        let inv = A2aSchedule::for_split_merge(sh_out, 1, sh_in, 3, p, r);
+        Ok(SlabPencilPlan {
+            nx,
+            ny,
+            nz,
+            nb,
+            grid,
+            sh_in,
+            sh_out,
+            fwd,
+            inv,
+            ws: Mutex::new(Workspace::new()),
+        })
     }
 
     fn p(&self) -> usize {
         self.grid.size()
     }
 
-    fn r(&self) -> usize {
-        self.grid.rank()
-    }
-
     /// Local input length: `[nb, lxc, ny, nz]`.
     pub fn input_len(&self) -> usize {
-        self.nb * cyclic::local_count(self.nx, self.p(), self.r()) * self.ny * self.nz
+        volume(self.sh_in)
     }
 
     /// Local output length: `[nb, nx, ny, lzc]`.
     pub fn output_len(&self) -> usize {
-        self.nb * self.nx * self.ny * cyclic::local_count(self.nz, self.p(), self.r())
+        volume(self.sh_out)
     }
 
     /// Forward transform: consumes the x-distributed input, returns the
@@ -90,10 +125,14 @@ impl SlabPencilPlan {
         mut data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
-        let (p, r) = (self.p(), self.r());
+        let p = self.p();
         let comm = self.grid.axis_comm(0);
-        let lxc = cyclic::local_count(self.nx, p, r);
-        let lzc = cyclic::local_count(self.nz, p, r);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let Workspace { send, recv, fft, alloc, .. } = ws;
+        let alloc = &*alloc;
+        let (sh_in, sh_out) = (self.sh_in, self.sh_out);
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
         let lines = |total: usize, n: usize| backend.flops(total, n);
@@ -101,64 +140,79 @@ impl SlabPencilPlan {
         match dir {
             Direction::Forward => {
                 assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
-                let sh_in = [self.nb, lxc, self.ny, self.nz];
                 // 1. Local FFT along y and z.
                 t.compute(
                     "fft_yz",
                     lines(data.len(), self.ny) + lines(data.len(), self.nz),
                     || {
-                        backend_fft_dim(backend, &mut data, &sh_in, 2, dir);
-                        backend_fft_dim(backend, &mut data, &sh_in, 3, dir);
+                        backend_fft_dim_ws(backend, &mut data, &sh_in, 2, dir, &mut *fft, alloc);
+                        backend_fft_dim_ws(backend, &mut data, &sh_in, 3, dir, &mut *fft, alloc);
                     },
                 );
-                // 2. Alltoall: trade x split for z split.
-                let blocks = t.reshape("pack_z", || split_dim(&data, sh_in, 3, p));
-                let recv = t.comm("a2a_xz", || {
-                    let sent: u64 = blocks
-                        .iter()
-                        .enumerate()
-                        .filter(|(s, _)| *s != r)
-                        .map(|(_, b)| (b.len() * 16) as u64)
-                        .sum();
-                    (alltoallv_complex(comm, blocks), sent, (p - 1) as u64)
+                // 2. Alltoall: trade x split for z split. Pack into the flat
+                //    send buffer at the schedule's precomputed offsets.
+                t.reshape("pack_z", || {
+                    ensure(&mut *send, self.fwd.send_total(), alloc);
+                    split_dim_into(&data, sh_in, 3, p, &mut *send, &self.fwd.send_offs);
+                });
+                t.comm("a2a_xz", || {
+                    ensure(&mut *recv, self.fwd.recv_total(), alloc);
+                    alltoallv_complex_flat(
+                        comm,
+                        &*send,
+                        &self.fwd.send_offs,
+                        &mut *recv,
+                        &self.fwd.recv_offs,
+                    );
+                    ((), self.fwd.bytes_remote(), self.fwd.msgs())
                 });
                 // Receiving block from rank q: shape [nb, lxc_q, ny, lzc_me];
-                // merge along dim 1 (x becomes dense).
-                let sh_out = [self.nb, self.nx, self.ny, lzc];
-                data = t.reshape("unpack_x", || merge_dim(&recv, sh_out, 1, p));
+                // merge along dim 1 (x becomes dense) into the recycled
+                // caller vector.
+                t.reshape("unpack_x", || {
+                    ensure(&mut data, volume(sh_out), alloc);
+                    merge_dim_from(&*recv, &self.fwd.recv_offs, sh_out, 1, p, &mut data);
+                });
                 // 3. Local FFT along dense x.
                 t.compute("fft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim(backend, &mut data, &sh_out, 1, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh_out, 1, dir, &mut *fft, alloc);
                 });
             }
             Direction::Inverse => {
                 assert_eq!(data.len(), self.output_len(), "inverse: wrong input length");
-                let sh_in = [self.nb, self.nx, self.ny, lzc];
                 t.compute("ifft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim(backend, &mut data, &sh_in, 1, dir);
+                    backend_fft_dim_ws(backend, &mut data, &sh_out, 1, dir, &mut *fft, alloc);
                 });
-                let blocks = t.reshape("pack_x", || split_dim(&data, sh_in, 1, p));
-                let recv = t.comm("a2a_zx", || {
-                    let sent: u64 = blocks
-                        .iter()
-                        .enumerate()
-                        .filter(|(s, _)| *s != r)
-                        .map(|(_, b)| (b.len() * 16) as u64)
-                        .sum();
-                    (alltoallv_complex(comm, blocks), sent, (p - 1) as u64)
+                t.reshape("pack_x", || {
+                    ensure(&mut *send, self.inv.send_total(), alloc);
+                    split_dim_into(&data, sh_out, 1, p, &mut *send, &self.inv.send_offs);
                 });
-                let sh_out = [self.nb, lxc, self.ny, self.nz];
-                data = t.reshape("unpack_z", || merge_dim(&recv, sh_out, 3, p));
+                t.comm("a2a_zx", || {
+                    ensure(&mut *recv, self.inv.recv_total(), alloc);
+                    alltoallv_complex_flat(
+                        comm,
+                        &*send,
+                        &self.inv.send_offs,
+                        &mut *recv,
+                        &self.inv.recv_offs,
+                    );
+                    ((), self.inv.bytes_remote(), self.inv.msgs())
+                });
+                t.reshape("unpack_z", || {
+                    ensure(&mut data, volume(sh_in), alloc);
+                    merge_dim_from(&*recv, &self.inv.recv_offs, sh_in, 3, p, &mut data);
+                });
                 t.compute(
                     "ifft_yz",
                     lines(data.len(), self.ny) + lines(data.len(), self.nz),
                     || {
-                        backend_fft_dim(backend, &mut data, &sh_out, 2, dir);
-                        backend_fft_dim(backend, &mut data, &sh_out, 3, dir);
+                        backend_fft_dim_ws(backend, &mut data, &sh_in, 2, dir, &mut *fft, alloc);
+                        backend_fft_dim_ws(backend, &mut data, &sh_in, 3, dir, &mut *fft, alloc);
                     },
                 );
             }
         }
+        trace.alloc_bytes = alloc.get();
         (data, trace)
     }
 }
@@ -186,7 +240,7 @@ mod tests {
 
         let got_slabs = run_world(p, |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
             let backend = RustFftBackend::new();
             let (out, trace) = plan.forward(&backend, local);
@@ -218,7 +272,7 @@ mod tests {
         let global = phased(nb * 512, 7);
         let outs = run_world(p, |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
             let backend = RustFftBackend::new();
             let (spec, _) = plan.forward(&backend, local.clone());
@@ -238,7 +292,7 @@ mod tests {
         let p = 2;
         let traces = run_world(p, |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = vec![ZERO; plan.input_len()];
             let backend = RustFftBackend::new();
             let (_, trace) = plan.forward(&backend, local);
@@ -256,12 +310,18 @@ mod tests {
     fn too_many_ranks_rejected() {
         let outs = run_world(4, |comm| {
             let grid = ProcGrid::new(&[4], comm).unwrap();
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                SlabPencilPlan::new([2, 8, 8], 1, grid)
-            }))
-            .is_err()
+            SlabPencilPlan::new([2, 8, 8], 1, grid).is_err()
         });
         assert!(outs.iter().all(|&rejected| rejected));
+    }
+
+    #[test]
+    fn rejection_is_unsupported_error() {
+        run_world(4, |comm| {
+            let grid = ProcGrid::new(&[4], comm).unwrap();
+            let e = SlabPencilPlan::new([8, 8, 2], 1, grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)));
+        });
     }
 
     #[test]
@@ -270,7 +330,7 @@ mod tests {
         let x = phased(64, 3);
         let outs = run_world(1, |comm| {
             let grid = ProcGrid::new(&[1], comm).unwrap();
-            let plan = SlabPencilPlan::new(shape, 1, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new(shape, 1, Arc::clone(&grid)).unwrap();
             let backend = RustFftBackend::new();
             plan.forward(&backend, x.clone()).0
         });

@@ -37,6 +37,12 @@ pub struct StageTrace {
 #[derive(Clone, Debug, Default)]
 pub struct ExecTrace {
     pub stages: Vec<StageTrace>,
+    /// Bytes of heap storage newly acquired by the plan's reusable
+    /// [`Workspace`](super::workspace::Workspace) during this execution.
+    /// First executions grow their workspaces; steady-state executions must
+    /// report 0 here — the plan-once / execute-many property the paper's
+    /// design is built around (and what `tests/workspace_reuse.rs` asserts).
+    pub alloc_bytes: u64,
 }
 
 impl ExecTrace {
@@ -89,6 +95,7 @@ impl ExecTrace {
                 traces.iter().map(|t| t.stages[i].flops).fold(0.0, f64::max),
             );
         }
+        out.alloc_bytes = traces.iter().map(|t| t.alloc_bytes).max().unwrap();
         out
     }
 
@@ -100,6 +107,9 @@ impl ExecTrace {
                 "{:<24} {:?} {:>10.3?} {:>12} B {:>6} msgs {:>12.0} flops\n",
                 st.name, st.kind, st.elapsed, st.bytes_sent, st.messages, st.flops
             ));
+        }
+        if self.alloc_bytes > 0 {
+            s.push_str(&format!("(workspace grew by {} B this execution)\n", self.alloc_bytes));
         }
         s
     }
@@ -157,13 +167,15 @@ mod tests {
 
     #[test]
     fn critical_path_takes_max() {
-        let mk = |ms: u64, bytes: u64| {
+        let mk = |ms: u64, bytes: u64, alloc: u64| {
             let mut t = ExecTrace::default();
             t.push("s", StageKind::Comm, Duration::from_millis(ms), bytes, 1, 0.0);
+            t.alloc_bytes = alloc;
             t
         };
-        let cp = ExecTrace::critical_path(&[mk(5, 10), mk(9, 3), mk(2, 7)]);
+        let cp = ExecTrace::critical_path(&[mk(5, 10, 0), mk(9, 3, 64), mk(2, 7, 16)]);
         assert_eq!(cp.stages[0].elapsed, Duration::from_millis(9));
         assert_eq!(cp.stages[0].bytes_sent, 10);
+        assert_eq!(cp.alloc_bytes, 64, "slowest-allocating rank gates the view");
     }
 }

@@ -1,0 +1,118 @@
+//! Reusable per-plan scratch memory — the "preallocated exchange buffers"
+//! of P3DFFT-style persistent plans, rendered for this testbed.
+//!
+//! Every plan owns one `Workspace` behind a `Mutex` and routes all stage
+//! scratch through it: flat alltoall send/recv staging, the transpose
+//! buffer of `backend_fft_dim_ws`, the plane-wave panel buffer, and the
+//! result slot that recycles the caller's input vector. Buffers are sized
+//! with [`ensure`]/[`ensure_zeroed`], which record any *capacity growth*
+//! into the workspace's `alloc` cell — the number the plans publish as
+//! [`ExecTrace::alloc_bytes`](super::stages::ExecTrace). After the first
+//! execution every buffer has reached its high-water mark, so steady-state
+//! executions report zero: the plan-once / execute-many property the
+//! paper's SCF-loop workload depends on.
+
+use std::cell::Cell;
+
+use crate::fft::complex::{Complex, ZERO};
+
+/// Named scratch buffers of one plan. Fields are public so the plans can
+/// split-borrow them independently inside one execution (edition-2021
+/// disjoint closure captures).
+#[derive(Default)]
+pub struct Workspace {
+    /// Flat send staging for the alltoall pack stage.
+    pub send: Vec<Complex>,
+    /// Flat receive buffer for the alltoall.
+    pub recv: Vec<Complex>,
+    /// Transpose scratch for `backend_fft_dim_ws`.
+    pub fft: Vec<Complex>,
+    /// General stage scratch (dense z-columns, band staging, ...).
+    pub work: Vec<Complex>,
+    /// Panel buffer of the plane-wave staged-y pass.
+    pub panel: Vec<Complex>,
+    /// Result slot: holds a recycled vector the next execution returns;
+    /// refilled with the caller's consumed input (the swap that makes
+    /// alternating forward/inverse round trips buffer-neutral).
+    pub out: Vec<Complex>,
+    /// Bytes of capacity newly acquired since [`Workspace::begin`].
+    pub alloc: Cell<u64>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset the allocation counter at the start of one execution.
+    pub fn begin(&self) {
+        self.alloc.set(0);
+    }
+
+    /// Bytes allocated since the last [`Workspace::begin`].
+    pub fn allocated(&self) -> u64 {
+        self.alloc.get()
+    }
+}
+
+/// Size `buf` to exactly `len` elements, counting any capacity growth into
+/// `ctr`. Contents of elements the caller does not overwrite are
+/// unspecified (stale from the previous stage) — use [`ensure_zeroed`] when
+/// the stage relies on zero padding.
+pub fn ensure(buf: &mut Vec<Complex>, len: usize, ctr: &Cell<u64>) {
+    let cap0 = buf.capacity();
+    if buf.len() > len {
+        buf.truncate(len);
+    } else if buf.len() < len {
+        buf.resize(len, ZERO);
+    }
+    if buf.capacity() > cap0 {
+        let grown = (buf.capacity() - cap0) * std::mem::size_of::<Complex>();
+        ctr.set(ctr.get() + grown as u64);
+    }
+}
+
+/// Like [`ensure`] but the whole buffer is zero-filled (the memset every
+/// freshly `vec![ZERO; ..]`-allocated stage buffer paid anyway).
+pub fn ensure_zeroed(buf: &mut Vec<Complex>, len: usize, ctr: &Cell<u64>) {
+    ensure(buf, len, ctr);
+    buf.fill(ZERO);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_counts_growth_once() {
+        let ctr = Cell::new(0u64);
+        let mut buf = Vec::new();
+        ensure(&mut buf, 8, &ctr);
+        assert_eq!(buf.len(), 8);
+        let first = ctr.get();
+        assert!(first >= 8 * 16, "growth must be recorded");
+        // Shrink then regrow within capacity: no new bytes.
+        ensure(&mut buf, 2, &ctr);
+        ensure(&mut buf, 8, &ctr);
+        assert_eq!(ctr.get(), first, "steady-state resizes are free");
+        // Growing past capacity records again.
+        ensure(&mut buf, 4096, &ctr);
+        assert!(ctr.get() > first);
+    }
+
+    #[test]
+    fn ensure_zeroed_clears_stale_contents() {
+        let ctr = Cell::new(0u64);
+        let mut buf = vec![Complex::new(3.0, -1.0); 4];
+        ensure_zeroed(&mut buf, 4, &ctr);
+        assert!(buf.iter().all(|c| c.re == 0.0 && c.im == 0.0));
+    }
+
+    #[test]
+    fn workspace_begin_resets() {
+        let ws = Workspace::new();
+        ws.alloc.set(100);
+        ws.begin();
+        assert_eq!(ws.allocated(), 0);
+    }
+}

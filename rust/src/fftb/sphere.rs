@@ -147,44 +147,74 @@ impl OffsetArray {
     /// `nb*nz`, zero-padded outside the runs. Returns the dense buffer and
     /// the column order used.
     pub fn scatter_z(&self, packed: &[Complex], nb: usize) -> (Vec<Complex>, Vec<(usize, usize)>) {
-        assert_eq!(packed.len(), nb * self.total());
         let cols = self.disc_columns();
         let mut out = vec![ZERO; nb * self.nz * cols.len()];
-        for (ci, &(x, y)) in cols.iter().enumerate() {
-            let mut e = self.col_offset(x, y);
-            let base = ci * nb * self.nz;
-            for &(z0, len) in self.col_runs(x, y) {
-                for z in z0 as usize..(z0 + len) as usize {
-                    let dst = base + nb * z;
-                    let src = nb * e;
-                    out[dst..dst + nb].copy_from_slice(&packed[src..src + nb]);
-                    e += 1;
+        self.scatter_z_into(packed, nb, &mut out);
+        (out, cols)
+    }
+
+    /// [`scatter_z`] into a preallocated (zeroed) buffer — the plans'
+    /// allocation-free path. Column order is the disc order of
+    /// [`disc_columns`](Self::disc_columns); `out` must hold
+    /// `nb * nz * n_disc_columns` elements and is only written inside the
+    /// runs, so the caller must provide it zero-filled.
+    pub fn scatter_z_into(&self, packed: &[Complex], nb: usize, out: &mut [Complex]) {
+        assert_eq!(packed.len(), nb * self.total());
+        let mut ci = 0usize;
+        for y in 0..self.ny {
+            for x in 0..self.nx {
+                if !self.col_nonempty(x, y) {
+                    continue;
                 }
+                let mut e = self.col_offset(x, y);
+                let base = ci * nb * self.nz;
+                for &(z0, len) in self.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        let dst = base + nb * z;
+                        let src = nb * e;
+                        out[dst..dst + nb].copy_from_slice(&packed[src..src + nb]);
+                        e += 1;
+                    }
+                }
+                ci += 1;
             }
         }
-        (out, cols)
+        assert_eq!(out.len(), nb * self.nz * ci, "scatter_z_into: wrong dense length");
     }
 
     /// Inverse of [`scatter_z`]: gather the run elements of each dense
     /// z-column back into packed order (truncation — the inverse transform's
     /// final step).
     pub fn gather_z(&self, dense: &[Complex], nb: usize) -> Vec<Complex> {
-        let cols = self.disc_columns();
-        assert_eq!(dense.len(), nb * self.nz * cols.len());
         let mut out = vec![ZERO; nb * self.total()];
-        for (ci, &(x, y)) in cols.iter().enumerate() {
-            let mut e = self.col_offset(x, y);
-            let base = ci * nb * self.nz;
-            for &(z0, len) in self.col_runs(x, y) {
-                for z in z0 as usize..(z0 + len) as usize {
-                    let src = base + nb * z;
-                    let dst = nb * e;
-                    out[dst..dst + nb].copy_from_slice(&dense[src..src + nb]);
-                    e += 1;
+        self.gather_z_into(dense, nb, &mut out);
+        out
+    }
+
+    /// [`gather_z`] into a preallocated buffer (every packed element is
+    /// written) — the inverse plans' allocation-free truncation step.
+    pub fn gather_z_into(&self, dense: &[Complex], nb: usize, out: &mut [Complex]) {
+        assert_eq!(out.len(), nb * self.total());
+        let mut ci = 0usize;
+        for y in 0..self.ny {
+            for x in 0..self.nx {
+                if !self.col_nonempty(x, y) {
+                    continue;
                 }
+                let mut e = self.col_offset(x, y);
+                let base = ci * nb * self.nz;
+                for &(z0, len) in self.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        let src = base + nb * z;
+                        let dst = nb * e;
+                        out[dst..dst + nb].copy_from_slice(&dense[src..src + nb]);
+                        e += 1;
+                    }
+                }
+                ci += 1;
             }
         }
-        out
+        assert_eq!(dense.len(), nb * self.nz * ci, "gather_z_into: wrong dense length");
     }
 }
 

@@ -126,7 +126,7 @@ fn cmd_transform(args: &Args) {
         let backend = Arc::clone(&backend);
         let traces = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid));
+            let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
             let input = phased(plan.input_len(), grid.rank() as u64);
             let mut last = None;
             for _ in 0..iters {
@@ -141,7 +141,7 @@ fn cmd_transform(args: &Args) {
         let backend = Arc::clone(&backend);
         let traces = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
             let input = phased(plan.input_len(), grid.rank() as u64);
             let mut last = None;
             for _ in 0..iters {
@@ -238,9 +238,9 @@ fn live_row(
     let times = run_world(p, move |comm| {
         let grid = ProcGrid::new(&[p], comm).unwrap();
         let backend = RustFftBackend::new();
-        let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid));
-        let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid));
-        let pw = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid));
+        let slab = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+        let looped = NonBatchedLoop::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+        let pw = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
 
         let input = phased(slab.input_len(), 3);
         let s1 = fftb::util::stats::bench(1, 3, || {

@@ -215,7 +215,7 @@ mod tests {
         let (nb, p) = (2usize, 2usize);
         let traces = run_world(p, |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = phased(plan.input_len(), 1);
             let backend = RustFftBackend::new();
             plan.forward(&backend, local).1

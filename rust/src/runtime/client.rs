@@ -1,0 +1,116 @@
+//! The real PJRT client (`pjrt` feature). Requires the vendored `xla`
+//! crate in the build environment — see `rust/README.md`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id protos), and
+//! entries are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::fftb::error::{FftbError, Result};
+
+use super::manifest::Manifest;
+
+fn err(msg: String) -> FftbError {
+    FftbError::Runtime(msg)
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// A loaded artifact directory: PJRT CPU client + lazily compiled entries.
+///
+/// The `xla` wrapper types hold raw pointers and are not `Send`/`Sync`;
+/// the PJRT CPU client itself is thread-safe for compile/execute, and we
+/// additionally serialize every call through the `Mutex`, so sharing the
+/// runtime across rank threads is sound.
+pub struct PjrtRuntime {
+    dir: PathBuf,
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+}
+
+// SAFETY: all access to the non-Send xla handles goes through `inner`'s
+// mutex; the underlying PJRT CPU client supports concurrent use and we never
+// hand out raw handles.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Open `artifacts/` (reads `manifest.json`, creates the CPU client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .map_err(|e| err(format!("loading manifest from {}: {e}", dir.display())))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT cpu client: {e:?}")))?;
+        Ok(PjrtRuntime {
+            dir,
+            manifest,
+            inner: Mutex::new(Inner { client, execs: HashMap::new() }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.manifest.entry(name).is_some()
+    }
+
+    /// Execute entry `name` with one f32 input of the manifest's shape
+    /// (flattened, row-major); returns the flattened f32 output.
+    pub fn execute_f32(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| err(format!("no artifact entry named `{name}`")))?;
+        let shape = &entry.inputs[0];
+        let want: usize = shape.iter().product();
+        if input.len() != want {
+            return Err(err(format!(
+                "entry `{name}` expects {want} f32s (shape {shape:?}), got {}",
+                input.len()
+            )));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let file = self.dir.join(&entry.file);
+
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.execs.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(&file)
+                .map_err(|e| err(format!("parsing {}: {e:?}", file.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| err(format!("compiling {name}: {e:?}")))?;
+            inner.execs.insert(name.to_string(), exe);
+        }
+        let exe = inner.execs.get(name).unwrap();
+
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| err(format!("reshape input: {e:?}")))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| err(format!("executing {name}: {e:?}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err(format!("fetching result: {e:?}")))?;
+        // Entries are lowered with return_tuple=True -> 1-tuple.
+        let out = out.to_tuple1().map_err(|e| err(format!("untuple: {e:?}")))?;
+        out.to_vec::<f32>().map_err(|e| err(format!("to_vec: {e:?}")))
+    }
+
+    /// Number of compiled (cached) entries.
+    pub fn compiled_count(&self) -> usize {
+        self.inner.lock().unwrap().execs.len()
+    }
+}

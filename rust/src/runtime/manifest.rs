@@ -1,11 +1,17 @@
 //! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
 //! and the rust runtime: entry names, files, and input shapes.
+//!
+//! Errors surface as [`FftbError::Runtime`]; this module has no external
+//! dependencies, so it is available with or without the `pjrt` feature.
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::fftb::error::{FftbError, Result};
 use crate::util::json::Json;
+
+fn err(msg: String) -> FftbError {
+    FftbError::Runtime(msg)
+}
 
 #[derive(Clone, Debug)]
 pub struct ManifestEntry {
@@ -25,42 +31,42 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
-            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+            .map_err(|e| err(format!("reading {}: {e}", path.as_ref().display())))?;
         Self::parse(&text)
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let j = Json::parse(text).map_err(|e| err(format!("manifest JSON: {e}")))?;
         let batch = j
             .get("batch")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing `batch`"))?;
+            .ok_or_else(|| err("manifest missing `batch`".into()))?;
         let mut entries = Vec::new();
         for e in j
             .get("entries")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing `entries`"))?
+            .ok_or_else(|| err("manifest missing `entries`".into()))?
         {
             let name = e
                 .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("entry missing `name`"))?
+                .ok_or_else(|| err("entry missing `name`".into()))?
                 .to_string();
             let file = e
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("entry `{name}` missing `file`"))?
+                .ok_or_else(|| err(format!("entry `{name}` missing `file`")))?
                 .to_string();
             let mut inputs = Vec::new();
             for shape in e
                 .get("inputs")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("entry `{name}` missing `inputs`"))?
+                .ok_or_else(|| err(format!("entry `{name}` missing `inputs`")))?
             {
                 let dims: Option<Vec<usize>> = shape
                     .as_arr()
                     .map(|a| a.iter().filter_map(Json::as_usize).collect());
-                inputs.push(dims.ok_or_else(|| anyhow!("bad shape in `{name}`"))?);
+                inputs.push(dims.ok_or_else(|| err(format!("bad shape in `{name}`")))?);
             }
             entries.push(ManifestEntry { name, file, inputs });
         }

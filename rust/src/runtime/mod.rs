@@ -2,115 +2,23 @@
 //! `python/compile/aot.py`, compile it once on the PJRT CPU client, and
 //! execute it from the rust hot path. Python is never loaded at runtime.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* is the interchange
-//! format (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id protos), and
-//! entries are lowered with `return_tuple=True`, so results unwrap with
-//! `to_tuple1`.
+//! The real client needs the vendored `xla` crate, which the offline
+//! default build does not carry — it is gated behind the non-default
+//! `pjrt` cargo feature. With the feature off, [`PjrtRuntime::open`] is a
+//! stub that returns a clear [`FftbError::Runtime`](crate::fftb::FftbError)
+//! so every caller (CLI, benches, integration tests) degrades to the
+//! pure-rust backend instead of failing to compile. [`Manifest`] parsing
+//! and [`PjrtFftBackend`] are dependency-free and always available.
 
 pub mod backend;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
+mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
+mod client;
+
 pub use backend::PjrtFftBackend;
+pub use client::PjrtRuntime;
 pub use manifest::{Manifest, ManifestEntry};
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
-
-struct Inner {
-    client: xla::PjRtClient,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-/// A loaded artifact directory: PJRT CPU client + lazily compiled entries.
-///
-/// The `xla` wrapper types hold raw pointers and are not `Send`/`Sync`;
-/// the PJRT CPU client itself is thread-safe for compile/execute, and we
-/// additionally serialize every call through the `Mutex`, so sharing the
-/// runtime across rank threads is sound.
-pub struct PjrtRuntime {
-    dir: PathBuf,
-    manifest: Manifest,
-    inner: Mutex<Inner>,
-}
-
-// SAFETY: all access to the non-Send xla handles goes through `inner`'s
-// mutex; the underlying PJRT CPU client supports concurrent use and we never
-// hand out raw handles.
-unsafe impl Send for PjrtRuntime {}
-unsafe impl Sync for PjrtRuntime {}
-
-impl PjrtRuntime {
-    /// Open `artifacts/` (reads `manifest.json`, creates the CPU client).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(PjrtRuntime {
-            dir,
-            manifest,
-            inner: Mutex::new(Inner { client, execs: HashMap::new() }),
-        })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn has_entry(&self, name: &str) -> bool {
-        self.manifest.entry(name).is_some()
-    }
-
-    /// Execute entry `name` with one f32 input of the manifest's shape
-    /// (flattened, row-major); returns the flattened f32 output.
-    pub fn execute_f32(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
-        let entry = self
-            .manifest
-            .entry(name)
-            .ok_or_else(|| anyhow!("no artifact entry named `{name}`"))?;
-        let shape = &entry.inputs[0];
-        let want: usize = shape.iter().product();
-        if input.len() != want {
-            return Err(anyhow!(
-                "entry `{name}` expects {want} f32s (shape {shape:?}), got {}",
-                input.len()
-            ));
-        }
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let file = self.dir.join(&entry.file);
-
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.execs.contains_key(name) {
-            let proto = xla::HloModuleProto::from_text_file(&file)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", file.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            inner.execs.insert(name.to_string(), exe);
-        }
-        let exe = inner.execs.get(name).unwrap();
-
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
-        let result = exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
-        // Entries are lowered with return_tuple=True -> 1-tuple.
-        let out = out.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// Number of compiled (cached) entries.
-    pub fn compiled_count(&self) -> usize {
-        self.inner.lock().unwrap().execs.len()
-    }
-}

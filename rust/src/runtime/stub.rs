@@ -1,0 +1,45 @@
+//! Stub PJRT client used when the `pjrt` cargo feature is off (the default
+//! in the offline environment, which has no `xla` crate).
+//!
+//! Keeps the full `PjrtRuntime` surface so the CLI, benches and integration
+//! tests compile unchanged; [`PjrtRuntime::open`] always fails with a clear
+//! message, so every caller takes its documented fallback path (the
+//! pure-rust backend, or skipping the PJRT tests).
+
+use std::path::Path;
+
+use crate::fftb::error::{FftbError, Result};
+
+use super::manifest::Manifest;
+
+const MSG: &str = "built without the `pjrt` cargo feature; \
+     rebuild with `--features pjrt` (requires the vendored `xla` crate)";
+
+/// Placeholder runtime: can never be constructed, so the methods beyond
+/// [`PjrtRuntime::open`] exist only to satisfy the shared call sites.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Always fails: there is no PJRT client in this build.
+    pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(FftbError::Runtime(MSG.into()))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has_entry(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn execute_f32(&self, _name: &str, _input: &[f32]) -> Result<Vec<f32>> {
+        Err(FftbError::Runtime(MSG.into()))
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+}

@@ -15,6 +15,14 @@ use fftb::fftb::plan::SlabPencilPlan;
 use fftb::runtime::{PjrtFftBackend, PjrtRuntime};
 
 fn runtime() -> Option<Arc<PjrtRuntime>> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!(
+            "skipping PJRT integration tests: built without the `pjrt` feature \
+             (add the vendored `xla` crate to rust/Cargo.toml, then rebuild \
+             with `cargo test --features pjrt` — see rust/README.md)"
+        );
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping PJRT integration tests: run `make artifacts` first");
         return None;
@@ -85,7 +93,7 @@ fn distributed_plan_runs_on_pjrt_backend() {
     let global2 = global.clone();
     let outs = fftb::comm::run_world(p, move |comm| {
         let grid = ProcGrid::new(&[p], comm).unwrap();
-        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
         let local = scatter_cube_x(&global2, nb, shape, p, grid.rank());
         let (out, _) = plan.forward(backend2.as_ref(), local);
         out

@@ -189,7 +189,7 @@ fn prop_distributed_fft_equals_local() {
         let global2 = global.clone();
         let outs = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
-            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
             let local = scatter_cube_x(&global2, nb, shape, p, grid.rank());
             let backend = RustFftBackend::new();
             plan.forward(&backend, local).0
@@ -217,8 +217,8 @@ fn prop_batched_transform_is_band_separable() {
         let ok = run_world(p, move |comm| {
             let grid = ProcGrid::new(&[p], comm).unwrap();
             let backend = RustFftBackend::new();
-            let batched = SlabPencilPlan::new(shape, nb, Arc::clone(&grid));
-            let single = SlabPencilPlan::new(shape, 1, Arc::clone(&grid));
+            let batched = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+            let single = SlabPencilPlan::new(shape, 1, Arc::clone(&grid)).unwrap();
             let local = scatter_cube_x(&global2, nb, shape, p, grid.rank());
             let (all, _) = batched.forward(&backend, local.clone());
             let mut ok = true;

@@ -1,0 +1,160 @@
+//! The plan-once / execute-many property: every plan precomputes its
+//! communication schedules and owns reusable workspaces, so steady-state
+//! `execute()` calls perform zero heap allocation in the pack/unpack/FFT
+//! stages. `ExecTrace::alloc_bytes` records workspace growth per execution;
+//! these tests assert it is non-zero on the first call (the counter works)
+//! and exactly zero once the workspaces have reached their high-water mark
+//! — for all five plan kinds, through repeated forward/inverse round trips
+//! (the SCF-loop pattern Fig. 9 measures).
+
+use std::sync::Arc;
+
+use fftb::fft::complex::max_abs_diff;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{
+    ExecTrace, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlaneWavePlan, SlabPencilPlan,
+};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+
+const ROUND_TRIPS: usize = 3;
+
+/// Drive `forward`/`inverse` through `ROUND_TRIPS` alternating round trips,
+/// threading the returned buffers back in (the steady-state call pattern).
+/// Returns the per-call alloc_bytes, in call order.
+fn drive<F, I>(input: Vec<fftb::fft::complex::Complex>, mut forward: F, mut inverse: I) -> Vec<u64>
+where
+    F: FnMut(Vec<fftb::fft::complex::Complex>) -> (Vec<fftb::fft::complex::Complex>, ExecTrace),
+    I: FnMut(Vec<fftb::fft::complex::Complex>) -> (Vec<fftb::fft::complex::Complex>, ExecTrace),
+{
+    let original = input.clone();
+    let mut allocs = Vec::new();
+    let mut buf = input;
+    for it in 0..ROUND_TRIPS {
+        let (spec, tr_f) = forward(buf);
+        allocs.push(tr_f.alloc_bytes);
+        let (back, tr_i) = inverse(spec);
+        allocs.push(tr_i.alloc_bytes);
+        let err = max_abs_diff(&back, &original);
+        assert!(err < 1e-8, "round trip {it} drifted: err={err}");
+        buf = back;
+    }
+    allocs
+}
+
+/// First call must have grown the workspace; every call from the second
+/// round trip on must be allocation-free.
+fn assert_steady_state(allocs: &[u64], label: &str) {
+    assert!(allocs[0] > 0, "{label}: first execute should grow the workspace");
+    for (i, &a) in allocs.iter().enumerate().skip(2) {
+        assert_eq!(a, 0, "{label}: call {i} allocated {a} bytes in steady state");
+    }
+}
+
+#[test]
+fn slab_pencil_steady_state_is_allocation_free() {
+    let shape = [8usize, 8, 8];
+    let (nb, p) = (2usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p, |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "slab-pencil");
+        // Cube shapes: even the very first inverse reuses what the first
+        // forward grew.
+        assert_eq!(allocs[1], 0, "slab-pencil: first inverse should already be warm");
+    }
+}
+
+#[test]
+fn slab_pencil_repeated_forward_is_allocation_free() {
+    // Forward-only repetition (the bench pattern): caller hands a fresh
+    // input-sized vector every call; on cube shapes nothing grows after
+    // call one.
+    let shape = [8usize, 8, 8];
+    let (nb, p) = (2usize, 2usize);
+    fftb::comm::run_world(p, |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), 3);
+        for it in 0..3 {
+            let (_, tr) = plan.forward(&backend, input.clone());
+            if it > 0 {
+                assert_eq!(tr.alloc_bytes, 0, "forward #{it} allocated");
+            }
+        }
+    });
+}
+
+#[test]
+fn non_batched_loop_steady_state_is_allocation_free() {
+    let shape = [8usize, 8, 8];
+    let (nb, p) = (3usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p, |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = NonBatchedLoop::new(shape, nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "non-batched loop");
+    }
+}
+
+#[test]
+fn pencil_steady_state_is_allocation_free() {
+    let shape = [8usize, 8, 8];
+    let nb = 2usize;
+    let (p0, p1) = (2usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p0 * p1, |comm| {
+        let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
+        let plan = PencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "pencil");
+    }
+}
+
+#[test]
+fn planewave_steady_state_is_allocation_free() {
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (2usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "plane-wave");
+    }
+}
+
+#[test]
+fn padded_sphere_steady_state_is_allocation_free() {
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (2usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = PaddedSpherePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "padded-sphere");
+    }
+}
