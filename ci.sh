@@ -1,8 +1,11 @@
 #!/usr/bin/env sh
 # Tier-1 verification: build and test the rust tree with the default
-# (dependency-free) feature set. Run from anywhere.
+# (dependency-free) feature set, then build the docs with warnings as
+# errors (enforces the #![warn(missing_docs)] coverage of the comm and
+# fftb::plan trees). Run from anywhere.
 set -eu
 cd "$(dirname "$0")/rust"
 cargo build --release
 cargo test -q
-echo "ci.sh: tier-1 OK"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+echo "ci.sh: tier-1 OK (build + test + doc)"

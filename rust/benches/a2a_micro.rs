@@ -1,25 +1,111 @@
-use fftb::comm::{alltoallv, run_world};
-use std::time::Instant;
+//! Micro-bench: the pairwise exchange disciplines side by side.
+//!
+//! For each (p, payload) cell the same flat complex alltoallv runs with
+//! the fully serial schedule (round s blocks on its receive before round
+//! s+1's send is posted) and with the windowed overlapped pipeline
+//! (window = p-1: all receives pre-posted, sends run ahead of the waits),
+//! under a deterministic per-rank start skew modeling imbalanced pack
+//! times — the regime where serial rounds convoy.
+//!
+//! Reported per discipline: slowest-rank wall time per exchange and
+//! slowest-rank `ExecTrace::wait_ns` per exchange (time blocked in
+//! receive waits). Expected shape: the overlapped schedule shows lower
+//! time-in-wait at p >= 4, because a late rank's sends reach its partners
+//! in one burst instead of one round at a time.
+
+use std::time::{Duration, Instant};
+
+use fftb::comm::alltoall::{alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned};
+use fftb::comm::{barrier, run_world, CommTuning};
+use fftb::fft::complex::{Complex, ZERO};
+use fftb::fftb::plan::ExecTrace;
+
+const WARMUP: usize = 5;
+const ITERS: usize = 30;
+/// Per-rank start stagger in microseconds (rank r enters r*SKEW_US late).
+const SKEW_US: u64 = 100;
+
+fn busy_wait_us(us: u64) {
+    let t0 = Instant::now();
+    while (t0.elapsed().as_micros() as u64) < us {
+        std::hint::spin_loop();
+    }
+}
+
+fn fmt_us(d: Duration) -> String {
+    format!("{:.1}us", d.as_secs_f64() * 1e6)
+}
 
 fn main() {
+    println!("pairwise exchange: serial vs overlapped (window = p-1), skew {SKEW_US}us/rank");
+    println!(
+        "{:>4} {:>7} | {:>11} {:>12} | {:>11} {:>12} | {}",
+        "p", "total", "serial", "serial-wait", "overlap", "overlap-wait", "note"
+    );
     for p in [2usize, 4, 8] {
-        for kb in [16usize, 64, 256] {
-            let times = run_world(p, move |comm| {
-                let block = vec![0u8; kb * 1024 / p];
-                // warmup
-                for _ in 0..5 {
-                    let send: Vec<Vec<u8>> = (0..p).map(|_| block.clone()).collect();
-                    alltoallv(&comm, send);
-                }
-                let t0 = Instant::now();
-                let iters = 50;
-                for _ in 0..iters {
-                    let send: Vec<Vec<u8>> = (0..p).map(|_| block.clone()).collect();
-                    alltoallv(&comm, send);
-                }
-                t0.elapsed() / iters
+        for kb in [64usize, 256] {
+            let elems = (kb * 1024 / std::mem::size_of::<Complex>()) / p;
+            let rows = run_world(p, move |comm| {
+                let me = comm.rank();
+                let send: Vec<Complex> =
+                    (0..elems * p).map(|i| Complex::new(i as f64, me as f64)).collect();
+                let offs: Vec<usize> = (0..=p).map(|j| j * elems).collect();
+                let mut recv = vec![ZERO; elems * p];
+
+                let mut bench_discipline = |window: Option<usize>| -> (Duration, ExecTrace) {
+                    let mut trace = ExecTrace::default();
+                    let mut elapsed = Duration::ZERO;
+                    for it in 0..WARMUP + ITERS {
+                        barrier(&comm);
+                        // Deterministic start skew: rank r enters the
+                        // exchange r*SKEW_US later (imbalanced pack).
+                        busy_wait_us(me as u64 * SKEW_US);
+                        let t0 = Instant::now();
+                        let c = match window {
+                            None => alltoallv_complex_flat_serial(
+                                &comm, &send, &offs, &mut recv, &offs,
+                            ),
+                            Some(w) => alltoallv_complex_flat_tuned(
+                                &comm,
+                                &send,
+                                &offs,
+                                &mut recv,
+                                &offs,
+                                CommTuning::with_window(w),
+                            ),
+                        };
+                        if it >= WARMUP {
+                            elapsed += t0.elapsed();
+                            trace.wait_ns += c.wait_ns;
+                            trace.overlap_rounds += c.overlap_rounds;
+                        }
+                    }
+                    (elapsed / ITERS as u32, trace)
+                };
+
+                let (t_serial, tr_serial) = bench_discipline(None);
+                let (t_over, tr_over) = bench_discipline(Some((p - 1).max(1)));
+                (t_serial, tr_serial.wait_ns, t_over, tr_over.wait_ns)
             });
-            println!("p={p} total={kb}KB per-rank: {:?}", times.iter().max().unwrap());
+            // Slowest rank gates the exchange.
+            let t_serial = rows.iter().map(|r| r.0).max().unwrap();
+            let w_serial = rows.iter().map(|r| r.1).max().unwrap() / ITERS as u64;
+            let t_over = rows.iter().map(|r| r.2).max().unwrap();
+            let w_over = rows.iter().map(|r| r.3).max().unwrap() / ITERS as u64;
+            let note = if p >= 4 && w_over >= w_serial {
+                "overlap did not cut wait (timing noise?)"
+            } else {
+                ""
+            };
+            println!(
+                "{p:>4} {:>6}K | {:>11} {:>12} | {:>11} {:>12} | {note}",
+                kb,
+                fmt_us(t_serial),
+                fmt_us(Duration::from_nanos(w_serial)),
+                fmt_us(t_over),
+                fmt_us(Duration::from_nanos(w_over)),
+            );
         }
     }
+    println!("a2a_micro bench done");
 }

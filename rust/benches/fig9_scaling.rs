@@ -14,6 +14,7 @@
 use std::sync::Arc;
 
 use fftb::comm::communicator::run_world;
+use fftb::comm::CommTuning;
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::grid::ProcGrid;
 use fftb::fftb::plan::testutil::phased;
@@ -97,6 +98,63 @@ fn live_section() {
     }
 }
 
+/// Serial-vs-overlapped comparison on the hottest plan: the same batched
+/// slab-pencil forward with exchange window 1 (serial ordering) and
+/// window 4 (overlapped pipeline). `wait` is the slowest rank's
+/// `ExecTrace::wait_ns` per execution — the overlapped column should show
+/// less time-in-wait at p >= 4.
+fn overlap_section() {
+    let n = 32usize;
+    let nb = 8usize;
+    println!();
+    println!("== exchange overlap ablation: slab-pencil cube {n}^3, nb={nb} ==");
+    println!(
+        "{:>4} {:>14} {:>14} {:>14} {:>14}",
+        "p", "w=1 (serial)", "w=1 wait", "w=4 (overlap)", "w=4 wait"
+    );
+    for p in [2usize, 4, 8] {
+        let rows = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let input = phased(
+                SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap().input_len(),
+                7,
+            );
+            let run_window = |w: usize| {
+                let mut plan = SlabPencilPlan::new([n, n, n], nb, Arc::clone(&grid)).unwrap();
+                plan.set_tuning(CommTuning::with_window(w));
+                // Warm the workspaces, then measure.
+                let _ = plan.forward(&backend, input.clone());
+                let iters = 10usize;
+                let mut wait_ns = 0u64;
+                let t0 = std::time::Instant::now();
+                for _ in 0..iters {
+                    let (_, tr) = plan.forward(&backend, input.clone());
+                    wait_ns += tr.wait_ns;
+                }
+                (t0.elapsed() / iters as u32, wait_ns / iters as u64)
+            };
+            let (t1, w1) = run_window(1);
+            let (t4, w4) = run_window(4);
+            (t1, w1, t4, w4)
+        });
+        let t1 = rows.iter().map(|r| r.0).max().unwrap();
+        let w1 = rows.iter().map(|r| r.1).max().unwrap();
+        let t4 = rows.iter().map(|r| r.2).max().unwrap();
+        let w4 = rows.iter().map(|r| r.3).max().unwrap();
+        println!(
+            "{p:>4} {:>14} {:>14} {:>14} {:>14}",
+            fmt_duration(t1),
+            fmt_duration(std::time::Duration::from_nanos(w1)),
+            fmt_duration(t4),
+            fmt_duration(std::time::Duration::from_nanos(w4)),
+        );
+        if p >= 4 && w4 > w1 {
+            println!("     note: overlap did not cut wait at p={p} (timing noise?)");
+        }
+    }
+}
+
 fn modeled_section() {
     let n = 256usize;
     let spec = SphereSpec::new([n, n, n], 64.0, SphereKind::Centered);
@@ -142,6 +200,7 @@ fn modeled_section() {
 
 fn main() {
     live_section();
+    overlap_section();
     modeled_section();
     println!("fig9_scaling bench done");
 }

@@ -1,0 +1,246 @@
+//! Shared wire-buffer arena: size-classed recycled byte buffers backing the
+//! mailbox transport.
+//!
+//! Before this arena existed every message posted to a [`Mailbox`] allocated
+//! a fresh `Vec<u8>` — the last steady-state heap traffic left in the comm
+//! layer. Now every wire payload is a [`WireBuf`] checked out of one
+//! world-shared [`BufferArena`]: buffers live in power-of-two size classes,
+//! a checkout pops from the class free list (allocating only when the list
+//! is empty), and dropping a `WireBuf` returns its storage to the arena.
+//! After the first exchange has warmed every class touched by a schedule,
+//! repeated exchanges put zero new allocations on the wire — the comm-layer
+//! counterpart of the plans' reusable `Workspace`s.
+//!
+//! [`Mailbox`]: super::mailbox::Mailbox
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest size class in bytes (everything below rounds up to this).
+const MIN_CLASS_BYTES: usize = 64;
+/// log2 of [`MIN_CLASS_BYTES`].
+const MIN_CLASS_SHIFT: u32 = 6;
+/// Number of size classes (covers up to `2^(6 + 31)` bytes; the last class
+/// is open-ended).
+const NUM_CLASSES: usize = 32;
+/// Free buffers retained per class; checkins beyond this are dropped so a
+/// burst of giant messages cannot pin memory forever.
+const MAX_FREE_PER_CLASS: usize = 64;
+
+struct ArenaInner {
+    /// `classes[k]` holds free buffers whose capacity is at least
+    /// `2^(k + MIN_CLASS_SHIFT)` bytes.
+    classes: Vec<Mutex<Vec<Vec<u8>>>>,
+    minted: AtomicU64,
+    reused: AtomicU64,
+}
+
+/// World-shared pool of recycled wire buffers, size-classed by capacity.
+///
+/// A cheaply cloneable handle (the pool itself is reference-counted). One
+/// arena is owned by each
+/// [`WorldShared`](super::communicator::WorldShared) and shared by every
+/// communicator split from that world; all ranks (threads) check out of and
+/// recycle into the same free lists.
+#[derive(Clone)]
+pub struct BufferArena {
+    inner: Arc<ArenaInner>,
+}
+
+impl Default for BufferArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferArena {
+    /// Create an empty arena.
+    pub fn new() -> Self {
+        BufferArena {
+            inner: Arc::new(ArenaInner {
+                classes: (0..NUM_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+                minted: AtomicU64::new(0),
+                reused: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Size class that can *serve* a request of `len` bytes (ceiling class).
+    fn class_for_len(len: usize) -> usize {
+        let want = len.max(MIN_CLASS_BYTES).next_power_of_two();
+        ((want.trailing_zeros() - MIN_CLASS_SHIFT) as usize).min(NUM_CLASSES - 1)
+    }
+
+    /// Size class a buffer of `cap` capacity belongs to when recycled
+    /// (floor class), or `None` if it is too small to be worth keeping.
+    fn class_for_cap(cap: usize) -> Option<usize> {
+        if cap < MIN_CLASS_BYTES {
+            return None;
+        }
+        let k = (usize::BITS - 1 - cap.leading_zeros() - MIN_CLASS_SHIFT) as usize;
+        Some(k.min(NUM_CLASSES - 1))
+    }
+
+    /// Check out an *empty* buffer with capacity for at least `len` bytes.
+    /// Served from the class free list when possible; allocates otherwise.
+    pub fn checkout(&self, len: usize) -> WireBuf {
+        let k = Self::class_for_len(len);
+        let popped = self.inner.classes[k].lock().unwrap().pop();
+        let mut buf = match popped {
+            Some(b) => {
+                self.inner.reused.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.inner.minted.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(MIN_CLASS_BYTES << k)
+            }
+        };
+        buf.clear();
+        // Only reachable in the open-ended last class, whose residents may
+        // be smaller than the request.
+        if buf.capacity() < len {
+            buf.reserve(len);
+        }
+        WireBuf { buf: Some(buf), arena: self.clone() }
+    }
+
+    /// Wrap a caller-owned vector as a wire buffer (zero-copy send path);
+    /// its storage joins the arena when the receiver drops it.
+    pub fn adopt(&self, vec: Vec<u8>) -> WireBuf {
+        WireBuf { buf: Some(vec), arena: self.clone() }
+    }
+
+    /// Return a buffer's storage to its floor size class.
+    fn recycle(&self, buf: Vec<u8>) {
+        if let Some(k) = Self::class_for_cap(buf.capacity()) {
+            let mut free = self.inner.classes[k].lock().unwrap();
+            if free.len() < MAX_FREE_PER_CLASS {
+                free.push(buf);
+            }
+        }
+    }
+
+    /// `(minted, reused)` checkout counters: buffers allocated fresh vs.
+    /// served from a free list. In steady state only `reused` grows.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.inner.minted.load(Ordering::Relaxed), self.inner.reused.load(Ordering::Relaxed))
+    }
+}
+
+/// One wire payload: arena-backed byte storage that recycles itself into
+/// the [`BufferArena`] on drop.
+///
+/// Derefs to `[u8]` for readers; senders fill it with
+/// [`WireBuf::extend_from_slice`]. [`WireBuf::into_vec`] defuses the
+/// recycling and hands the storage to the caller (the boundary of the
+/// public `Vec<u8>` receive API).
+pub struct WireBuf {
+    /// `Some` until dropped or converted with [`WireBuf::into_vec`].
+    buf: Option<Vec<u8>>,
+    arena: BufferArena,
+}
+
+impl WireBuf {
+    /// Append `src`, growing only if the checkout capacity was exceeded.
+    pub fn extend_from_slice(&mut self, src: &[u8]) {
+        self.buf.as_mut().expect("WireBuf used after into_vec").extend_from_slice(src);
+    }
+
+    /// Payload length in bytes.
+    pub fn len(&self) -> usize {
+        self.buf.as_ref().map(|b| b.len()).unwrap_or(0)
+    }
+
+    /// Whether the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take the storage out, skipping arena recycling (used where the
+    /// public API hands a plain `Vec<u8>` to the caller).
+    pub fn into_vec(mut self) -> Vec<u8> {
+        self.buf.take().expect("WireBuf used after into_vec")
+    }
+}
+
+impl std::ops::Deref for WireBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.buf.as_deref().unwrap_or(&[])
+    }
+}
+
+impl std::fmt::Debug for WireBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WireBuf({} B)", self.len())
+    }
+}
+
+impl Drop for WireBuf {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.arena.recycle(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_recycles_capacity() {
+        let arena = BufferArena::new();
+        let mut b = arena.checkout(100);
+        b.extend_from_slice(&[7u8; 100]);
+        assert_eq!(b.len(), 100);
+        drop(b); // storage returns to the 128-byte class
+        let b2 = arena.checkout(90);
+        assert!(b2.is_empty(), "recycled buffers come back empty");
+        let (minted, reused) = arena.stats();
+        assert_eq!(minted, 1, "second checkout must reuse the first buffer");
+        assert_eq!(reused, 1);
+    }
+
+    #[test]
+    fn distinct_classes_do_not_mix() {
+        let arena = BufferArena::new();
+        drop(arena.checkout(64)); // class 0
+        let big = arena.checkout(1 << 20); // fresh mint, larger class
+        assert!(big.is_empty());
+        let (minted, _) = arena.stats();
+        assert_eq!(minted, 2);
+    }
+
+    #[test]
+    fn adopt_and_into_vec_round_trip() {
+        let arena = BufferArena::new();
+        let wb = arena.adopt(vec![1, 2, 3]);
+        assert_eq!(&wb[..], &[1, 2, 3]);
+        let v = wb.into_vec();
+        assert_eq!(v, vec![1, 2, 3]);
+        // into_vec defuses recycling: nothing joined the arena.
+        let (minted, reused) = arena.stats();
+        assert_eq!((minted, reused), (0, 0));
+    }
+
+    #[test]
+    fn zero_length_checkout_is_fine() {
+        let arena = BufferArena::new();
+        let b = arena.checkout(0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn steady_state_mints_nothing() {
+        let arena = BufferArena::new();
+        for _ in 0..10 {
+            let mut b = arena.checkout(256);
+            b.extend_from_slice(&[0u8; 256]);
+        }
+        let (minted, reused) = arena.stats();
+        assert_eq!(minted, 1);
+        assert_eq!(reused, 9);
+    }
+}

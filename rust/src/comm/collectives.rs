@@ -23,10 +23,10 @@ pub fn barrier(comm: &Comm) {
             comm.recv_coll(r, T_BARRIER_UP);
         }
         for r in 1..p {
-            comm.send_coll(r, T_BARRIER_DOWN, Vec::new());
+            comm.send_coll(r, T_BARRIER_DOWN, &[]);
         }
     } else {
-        comm.send_coll(0, T_BARRIER_UP, Vec::new());
+        comm.send_coll(0, T_BARRIER_UP, &[]);
         comm.recv_coll(0, T_BARRIER_DOWN);
     }
 }
@@ -44,7 +44,9 @@ pub fn bcast(comm: &Comm, root: usize, data: &mut Vec<u8>) {
     while mask < p {
         if vrank & mask != 0 {
             let parent = (vrank - mask + root) % p;
-            *data = comm.recv_coll(parent, T_BCAST);
+            let b = comm.recv_coll(parent, T_BCAST);
+            data.clear();
+            data.extend_from_slice(&b);
             break;
         }
         mask <<= 1;
@@ -54,7 +56,7 @@ pub fn bcast(comm: &Comm, root: usize, data: &mut Vec<u8>) {
     while mask > 0 {
         if vrank + mask < p {
             let child = (vrank + mask + root) % p;
-            comm.send_coll(child, T_BCAST, data.clone());
+            comm.send_coll(child, T_BCAST, data.as_slice());
         }
         mask >>= 1;
     }
@@ -68,12 +70,12 @@ pub fn gatherv(comm: &Comm, root: usize, mine: &[u8]) -> Option<Vec<Vec<u8>>> {
         out[root] = mine.to_vec();
         for r in 0..p {
             if r != root {
-                out[r] = comm.recv_coll(r, T_GATHER);
+                out[r] = comm.recv_coll(r, T_GATHER).into_vec();
             }
         }
         Some(out)
     } else {
-        comm.send_coll(root, T_GATHER, mine.to_vec());
+        comm.send_coll(root, T_GATHER, mine);
         None
     }
 }
@@ -133,7 +135,7 @@ pub fn allreduce_sum_f64(comm: &Comm, data: &mut [f64]) {
         }
         data.copy_from_slice(&acc);
     } else {
-        comm.send_coll(0, T_REDUCE, bytes.to_vec());
+        comm.send_coll(0, T_REDUCE, bytes);
     }
     let mut buf: Vec<u8> = if comm.rank() == 0 {
         unsafe {
@@ -170,7 +172,7 @@ pub fn allreduce_max_f64(comm: &Comm, value: f64) -> f64 {
         }
         v[0] = m;
     } else {
-        comm.send_coll(0, T_REDUCE, value.to_le_bytes().to_vec());
+        comm.send_coll(0, T_REDUCE, &value.to_le_bytes());
     }
     let mut buf = if comm.rank() == 0 { v[0].to_le_bytes().to_vec() } else { Vec::new() };
     bcast(comm, 0, &mut buf);

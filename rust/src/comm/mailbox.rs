@@ -1,7 +1,7 @@
 //! Point-to-point message transport between in-process ranks.
 //!
 //! Each rank owns one `Mailbox`: a mutex-protected map from `(source,
-//! context, tag)` to a FIFO of byte payloads, with a condvar for blocking
+//! context, tag)` to a FIFO of wire payloads, with a condvar for blocking
 //! receives. The `context` field namespaces sub-communicators (MPI's
 //! communicator context id), so a split communicator can never intercept
 //! traffic of its parent.
@@ -9,17 +9,21 @@
 //! This is deliberately a faithful *semantic* model of MPI two-sided
 //! messaging — ordered per (source, context, tag) channel, payload copied at
 //! the boundary — so byte counts measured here equal what an MPI alltoall
-//! would put on a real wire.
+//! would put on a real wire. Payloads are [`WireBuf`]s checked out of the
+//! world's shared [`BufferArena`](super::arena::BufferArena), so the
+//! modeled NIC buffers are recycled instead of reallocated per message.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
+
+use super::arena::WireBuf;
 
 /// Message routing key: (source rank in world, context id, user tag).
 pub type Key = (usize, u64, u64);
 
 #[derive(Default)]
 struct Inner {
-    queues: HashMap<Key, VecDeque<Vec<u8>>>,
+    queues: HashMap<Key, VecDeque<WireBuf>>,
 }
 
 /// One rank's receive endpoint.
@@ -30,19 +34,20 @@ pub struct Mailbox {
 }
 
 impl Mailbox {
+    /// Create an empty mailbox behind an `Arc` (shared with senders).
     pub fn new() -> Arc<Self> {
         Arc::new(Mailbox::default())
     }
 
     /// Deposit a message (called by the *sender* thread).
-    pub fn post(&self, key: Key, payload: Vec<u8>) {
+    pub fn post(&self, key: Key, payload: WireBuf) {
         let mut inner = self.inner.lock().unwrap();
         inner.queues.entry(key).or_default().push_back(payload);
         self.signal.notify_all();
     }
 
     /// Blocking receive of the next message matching `key`.
-    pub fn take(&self, key: Key) -> Vec<u8> {
+    pub fn take(&self, key: Key) -> WireBuf {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(q) = inner.queues.get_mut(&key) {
@@ -70,45 +75,67 @@ impl Mailbox {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::arena::BufferArena;
     use std::thread;
 
     #[test]
     fn post_take_fifo_order() {
+        let arena = BufferArena::new();
         let mb = Mailbox::new();
         let key = (0, 1, 7);
-        mb.post(key, vec![1]);
-        mb.post(key, vec![2]);
-        assert_eq!(mb.take(key), vec![1]);
-        assert_eq!(mb.take(key), vec![2]);
+        mb.post(key, arena.adopt(vec![1]));
+        mb.post(key, arena.adopt(vec![2]));
+        assert_eq!(mb.take(key).into_vec(), vec![1]);
+        assert_eq!(mb.take(key).into_vec(), vec![2]);
     }
 
     #[test]
     fn contexts_are_isolated() {
+        let arena = BufferArena::new();
         let mb = Mailbox::new();
-        mb.post((0, 1, 0), vec![1]);
-        mb.post((0, 2, 0), vec![2]);
-        assert_eq!(mb.take((0, 2, 0)), vec![2]);
-        assert_eq!(mb.take((0, 1, 0)), vec![1]);
+        mb.post((0, 1, 0), arena.adopt(vec![1]));
+        mb.post((0, 2, 0), arena.adopt(vec![2]));
+        assert_eq!(mb.take((0, 2, 0)).into_vec(), vec![2]);
+        assert_eq!(mb.take((0, 1, 0)).into_vec(), vec![1]);
     }
 
     #[test]
     fn blocking_take_wakes_on_post() {
+        let arena = BufferArena::new();
         let mb = Mailbox::new();
         let mb2 = Arc::clone(&mb);
-        let h = thread::spawn(move || mb2.take((3, 0, 9)));
+        let h = thread::spawn(move || mb2.take((3, 0, 9)).into_vec());
         thread::sleep(std::time::Duration::from_millis(20));
-        mb.post((3, 0, 9), vec![42]);
+        mb.post((3, 0, 9), arena.adopt(vec![42]));
         assert_eq!(h.join().unwrap(), vec![42]);
     }
 
     #[test]
     fn probe_and_pending() {
+        let arena = BufferArena::new();
         let mb = Mailbox::new();
         assert!(!mb.probe((0, 0, 0)));
-        mb.post((0, 0, 0), vec![9]);
+        mb.post((0, 0, 0), arena.adopt(vec![9]));
         assert!(mb.probe((0, 0, 0)));
         assert_eq!(mb.pending(), 1);
         mb.take((0, 0, 0));
         assert_eq!(mb.pending(), 0);
+    }
+
+    #[test]
+    fn taken_buffers_recycle_into_the_arena() {
+        let arena = BufferArena::new();
+        let mb = Mailbox::new();
+        for _ in 0..5 {
+            let mut b = arena.checkout(128);
+            b.extend_from_slice(&[3u8; 128]);
+            mb.post((1, 0, 0), b);
+            let got = mb.take((1, 0, 0));
+            assert_eq!(got.len(), 128);
+            // drop recycles
+        }
+        let (minted, reused) = arena.stats();
+        assert_eq!(minted, 1, "wire buffers must be recycled across messages");
+        assert_eq!(reused, 4);
     }
 }

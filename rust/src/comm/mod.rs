@@ -2,18 +2,39 @@
 //!
 //! The paper's FFTB runs over MPI on Perlmutter; this module provides the
 //! same communication semantics with ranks as threads of one process (see
-//! DESIGN.md §3 for why this substitution preserves the paper's behaviour:
-//! the planner's message counts and byte volumes are exact, only wire time
-//! is modeled).
+//! `docs/ARCHITECTURE.md` for the layer map and DESIGN.md §3 for why this
+//! substitution preserves the paper's behaviour: the planner's message
+//! counts and byte volumes are exact, only wire time is modeled).
+//!
+//! Layering inside the substrate, bottom up:
+//!
+//! * [`arena`] — the world-shared pool of size-classed, recycled wire
+//!   buffers ([`WireBuf`]); the modeled NIC memory.
+//! * [`mailbox`] — per-rank FIFO endpoints keyed by `(source, context,
+//!   tag)`.
+//! * [`communicator`] — MPI-like [`Comm`]: blocking `send`/`recv`,
+//!   nonblocking `isend`/`irecv` with [`Request`]/[`waitall`], and
+//!   `split`.
+//! * [`alltoall`] / [`collectives`] — the collectives the FFT plans drive,
+//!   including the windowed overlapped pairwise exchange tuned by
+//!   [`CommTuning`].
+#![warn(missing_docs)]
 
 pub mod alltoall;
+pub mod arena;
 pub mod collectives;
 pub mod communicator;
 pub mod mailbox;
 
-pub use alltoall::{alltoall, alltoallv, alltoallv_complex, alltoallv_complex_flat};
+pub use alltoall::{
+    alltoall, alltoall_into, alltoallv, alltoallv_complex, alltoallv_complex_flat,
+    alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned, A2aCounters, CommTuning,
+};
+pub use arena::{BufferArena, WireBuf};
 pub use collectives::{
     allgatherv, allreduce_max_f64, allreduce_sum_complex, allreduce_sum_f64, barrier, bcast,
     gatherv,
 };
-pub use communicator::{run_world, run_world_with_stats, Comm, CommStats, WorldShared};
+pub use communicator::{
+    run_world, run_world_with_stats, waitall, Comm, CommStats, Request, WorldShared,
+};

@@ -46,6 +46,17 @@ impl MetricsSink {
             / self.runs.len() as u32
     }
 
+    /// Mean time-in-wait per run (blocked in exchange receives; see
+    /// `ExecTrace::wait_ns`).
+    pub fn mean_wait(&self) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(
+            self.runs.iter().map(|t| t.wait_ns).sum::<u64>() / self.runs.len() as u64,
+        )
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.runs.iter().map(|t| t.comm_bytes()).sum()
     }
@@ -99,6 +110,7 @@ impl MetricsSink {
             Json::Num(self.mean_total().as_secs_f64()),
         );
         obj.insert("mean_comm_s".to_string(), Json::Num(self.mean_comm().as_secs_f64()));
+        obj.insert("mean_wait_s".to_string(), Json::Num(self.mean_wait().as_secs_f64()));
         obj.insert("bytes".to_string(), Json::Num(self.total_bytes() as f64));
         obj.insert("messages".to_string(), Json::Num(self.total_messages() as f64));
         Json::Obj(obj)

@@ -203,6 +203,15 @@ pub fn as_bytes(a: &[Complex]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, std::mem::size_of_val(a)) }
 }
 
+/// Reinterpret a mutable complex slice as raw bytes (the in-place receive
+/// target of the flat alltoall engine).
+pub fn as_bytes_mut(a: &mut [Complex]) -> &mut [u8] {
+    // SAFETY: Complex is POD, and every byte pattern is a valid f64 pair.
+    unsafe {
+        std::slice::from_raw_parts_mut(a.as_mut_ptr() as *mut u8, std::mem::size_of_val(a))
+    }
+}
+
 /// Copy raw bytes into an existing complex slice (the allocation-free
 /// receive path of the flat alltoall). Byte length must equal the slice's
 /// storage size.

@@ -13,6 +13,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::comm::alltoall::CommTuning;
 use crate::fft::complex::Complex;
 use crate::fftb::backend::LocalFftBackend;
 use crate::fftb::error::Result;
@@ -26,12 +27,15 @@ use super::workspace::{ensure, Workspace};
 /// Runs an `nb`-batched slab-pencil transform as `nb` independent
 /// single-band transforms, each with its own communication stages.
 pub struct NonBatchedLoop {
+    /// Batch count (independent single transforms per execution).
     pub nb: usize,
     single: SlabPencilPlan,
     ws: Mutex<Workspace>,
 }
 
 impl NonBatchedLoop {
+    /// Plan `nb` independent single-band slab-pencil transforms of `shape`
+    /// on the 1D `grid`.
     pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         Ok(NonBatchedLoop {
             nb,
@@ -40,10 +44,17 @@ impl NonBatchedLoop {
         })
     }
 
+    /// Override the exchange overlap knobs of the inner single-band plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.single.set_tuning(tuning);
+    }
+
+    /// Local input length (`nb` x the single-band input).
     pub fn input_len(&self) -> usize {
         self.nb * self.single.input_len()
     }
 
+    /// Local output length (`nb` x the single-band output).
     pub fn output_len(&self) -> usize {
         self.nb * self.single.output_len()
     }
@@ -52,6 +63,8 @@ impl NonBatchedLoop {
     /// the batched plan (5 stages), with summed time/bytes/messages.
     fn accumulate(total: &mut ExecTrace, it: ExecTrace) {
         total.alloc_bytes += it.alloc_bytes;
+        total.wait_ns += it.wait_ns;
+        total.overlap_rounds += it.overlap_rounds;
         if total.stages.is_empty() {
             total.stages = it.stages;
         } else {
@@ -103,6 +116,7 @@ impl NonBatchedLoop {
         (out, trace)
     }
 
+    /// Forward transform: `nb` single-band forward passes, traces summed.
     pub fn forward(
         &self,
         backend: &dyn LocalFftBackend,
@@ -111,6 +125,7 @@ impl NonBatchedLoop {
         self.run(backend, input, true)
     }
 
+    /// Inverse transform: `nb` single-band inverse passes, traces summed.
     pub fn inverse(
         &self,
         backend: &dyn LocalFftBackend,

@@ -19,6 +19,15 @@
 //! | dense  `[b] x y{0} z{1}`   | `[B] X{0} Y{1} Z` | 2D | pencil |
 //! | dense, 3D grid             | same as pencil  | 3D (folded) | pencil |
 //! | sphere `[b] x{0} y z` + offsets | `[B] X Y Z{0}` | 1D | plane-wave staged padding |
+//!
+//! Every plan precomputes its exchange schedules ([`A2aSchedule`]) and owns
+//! a reusable [`Workspace`](workspace::Workspace); at execute time the
+//! alltoalls run the windowed overlapped pipeline of
+//! [`crate::comm::alltoall`], tuned per plan via
+//! [`CommTuning`](crate::comm::CommTuning) (`FftbOptions::comm`, or
+//! `set_tuning` on a concrete plan). See `docs/ARCHITECTURE.md` for the
+//! plan-time vs execute-time contract.
+#![warn(missing_docs)]
 
 pub mod batched;
 pub mod pencil;
@@ -31,6 +40,7 @@ pub mod workspace;
 
 use std::sync::Arc;
 
+use crate::comm::alltoall::CommTuning;
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
 use crate::fftb::backend::LocalFftBackend;
@@ -41,19 +51,26 @@ use crate::fftb::tensor::DistTensor;
 pub use batched::NonBatchedLoop;
 pub use pencil::PencilPlan;
 pub use planewave::{PaddedSpherePlan, PlaneWavePlan};
+pub use redistribute::A2aSchedule;
 pub use slab_pencil::SlabPencilPlan;
 pub use stages::{ExecTrace, StageKind, StageTrace};
 
 /// The concrete stage pipeline the planner selected.
 pub enum PlanKind {
+    /// Batched slab-pencil on a 1D grid.
     SlabPencil(SlabPencilPlan),
+    /// Non-batched loop of single slab-pencil transforms.
     SlabPencilLoop(NonBatchedLoop),
+    /// Pencil decomposition on a 2D (or folded 3D) grid.
     Pencil(PencilPlan),
+    /// Plane-wave sphere transform with staged padding.
     PlaneWave(PlaneWavePlan),
+    /// Pad-to-cube baseline for sphere inputs.
     PaddedSphere(PaddedSpherePlan),
 }
 
 impl PlanKind {
+    /// Human-readable name of the selected pipeline.
     pub fn name(&self) -> &'static str {
         match self {
             PlanKind::SlabPencil(_) => "slab-pencil (1D grid, batched)",
@@ -67,8 +84,11 @@ impl PlanKind {
 
 /// A constructed distributed Fourier transform (the paper's `fftb` object).
 pub struct Fftb {
+    /// The concrete stage pipeline the planner selected.
     pub kind: PlanKind,
+    /// Global transform sizes `[nx, ny, nz]`.
     pub sizes: [usize; 3],
+    /// Batch count derived from the unnamed tensor dimension.
     pub nb: usize,
 }
 
@@ -81,6 +101,8 @@ pub struct FftbOptions {
     /// For sphere inputs: pad the whole sphere up front and run the dense
     /// plan (the paper's Fig. 2 baseline) instead of staged padding.
     pub pad_sphere_to_cube: bool,
+    /// Overlap knobs of the windowed exchanges (window size; default 2).
+    pub comm: CommTuning,
 }
 
 impl Fftb {
@@ -100,7 +122,23 @@ impl Fftb {
         Self::plan_opt(sizes, output, out_dims, input, in_dims, grid, FftbOptions::default())
     }
 
+    /// [`Fftb::plan`] with explicit [`FftbOptions`] (non-batched loops,
+    /// pad-to-cube baseline, exchange overlap tuning).
     pub fn plan_opt(
+        sizes: [usize; 3],
+        output: &DistTensor,
+        out_dims: &str,
+        input: &DistTensor,
+        in_dims: &str,
+        grid: Arc<ProcGrid>,
+        opts: FftbOptions,
+    ) -> Result<Fftb> {
+        let mut fx = Self::plan_inner(sizes, output, out_dims, input, in_dims, grid, opts)?;
+        fx.set_comm_tuning(opts.comm);
+        Ok(fx)
+    }
+
+    fn plan_inner(
         sizes: [usize; 3],
         output: &DistTensor,
         out_dims: &str,
@@ -228,6 +266,18 @@ impl Fftb {
                 })
             }
             _ => Err(FftbError::Unsupported("grids beyond 3D are not supported".into())),
+        }
+    }
+
+    /// Override the exchange overlap knobs (window size) of the selected
+    /// plan's alltoalls.
+    pub fn set_comm_tuning(&mut self, tuning: CommTuning) {
+        match &mut self.kind {
+            PlanKind::SlabPencil(p) => p.set_tuning(tuning),
+            PlanKind::SlabPencilLoop(p) => p.set_tuning(tuning),
+            PlanKind::Pencil(p) => p.set_tuning(tuning),
+            PlanKind::PlaneWave(p) => p.set_tuning(tuning),
+            PlanKind::PaddedSphere(p) => p.set_tuning(tuning),
         }
     }
 

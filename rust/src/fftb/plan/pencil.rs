@@ -25,7 +25,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::alltoallv_complex_flat;
+use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
 use crate::comm::communicator::Comm;
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
@@ -39,9 +39,13 @@ use super::workspace::{ensure, Workspace};
 
 /// Batched pencil-decomposition 3D FFT plan on a 2D grid.
 pub struct PencilPlan {
+    /// Global extent of the x dimension.
     pub nx: usize,
+    /// Global extent of the y dimension.
     pub ny: usize,
+    /// Global extent of the z dimension.
     pub nz: usize,
+    /// Batch count (transforms per execution).
     pub nb: usize,
     grid: Arc<ProcGrid>,
     /// `[nb, nx, lyc0, lzc1]` — input.
@@ -58,10 +62,14 @@ pub struct PencilPlan {
     inv_zy: A2aSchedule,
     /// Inverse row exchange: split y of sh2, merge x of sh1.
     inv_yx: A2aSchedule,
+    /// Overlap knobs of the windowed exchanges.
+    tuning: CommTuning,
     ws: Mutex<Workspace>,
 }
 
 impl PencilPlan {
+    /// Plan a batched pencil transform of `shape` with batch `nb` on the
+    /// 2D `grid`.
     pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         assert_eq!(grid.ndim(), 2, "pencil plan requires a 2D processing grid");
         let (p0, p1) = (grid.axis_len(0), grid.axis_len(1));
@@ -97,8 +105,14 @@ impl PencilPlan {
             fwd_yz,
             inv_zy,
             inv_yx,
+            tuning: CommTuning::default(),
             ws: Mutex::new(Workspace::new()),
         })
+    }
+
+    /// Override the exchange overlap knobs (window size) for this plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.tuning = tuning;
     }
 
     /// Local input length `[nb, nx, lyc0, lzc1]`.
@@ -111,6 +125,8 @@ impl PencilPlan {
         volume(self.sh3)
     }
 
+    /// Forward transform: consumes the yz-distributed input, returns the
+    /// xy-distributed spectrum and the per-rank execution trace.
     pub fn forward(
         &self,
         backend: &dyn LocalFftBackend,
@@ -119,6 +135,8 @@ impl PencilPlan {
         self.run(backend, input, Direction::Forward)
     }
 
+    /// Inverse transform: consumes the xy-distributed spectrum, returns
+    /// the yz-distributed data.
     pub fn inverse(
         &self,
         backend: &dyn LocalFftBackend,
@@ -127,8 +145,8 @@ impl PencilPlan {
         self.run(backend, input, Direction::Inverse)
     }
 
-    /// One scheduled exchange: size the flat recv buffer, run the flat
-    /// alltoall, record wire traffic.
+    /// One scheduled exchange: size the flat recv buffer, run the windowed
+    /// overlapped alltoall, record wire traffic and overlap counters.
     #[allow(clippy::too_many_arguments)]
     fn exchange(
         t: &mut StageTimer,
@@ -138,11 +156,19 @@ impl PencilPlan {
         send: &[Complex],
         recv: &mut Vec<Complex>,
         alloc: &std::cell::Cell<u64>,
+        tuning: CommTuning,
     ) {
-        t.comm(name, || {
+        t.comm_a2a(name, || {
             ensure(&mut *recv, sched.recv_total(), alloc);
-            alltoallv_complex_flat(comm, send, &sched.send_offs, &mut *recv, &sched.recv_offs);
-            ((), sched.bytes_remote(), sched.msgs())
+            let c = alltoallv_complex_flat_tuned(
+                comm,
+                send,
+                &sched.send_offs,
+                &mut *recv,
+                &sched.recv_offs,
+                tuning,
+            );
+            ((), sched.bytes_remote(), sched.msgs(), c)
         });
     }
 
@@ -177,7 +203,7 @@ impl PencilPlan {
                     ensure(&mut *send, self.fwd_xy.send_total(), alloc);
                     split_dim_into(&data, sh1, 1, p0, &mut *send, &self.fwd_xy.send_offs);
                 });
-                Self::exchange(&mut t, "a2a_xy", row, &self.fwd_xy, &*send, &mut *recv, alloc);
+                Self::exchange(&mut t, "a2a_xy", row, &self.fwd_xy, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_y", || {
                     ensure(&mut data, volume(sh2), alloc);
                     merge_dim_from(&*recv, &self.fwd_xy.recv_offs, sh2, 2, p0, &mut data);
@@ -190,7 +216,7 @@ impl PencilPlan {
                     ensure(&mut *send, self.fwd_yz.send_total(), alloc);
                     split_dim_into(&data, sh2, 2, p1, &mut *send, &self.fwd_yz.send_offs);
                 });
-                Self::exchange(&mut t, "a2a_yz", col, &self.fwd_yz, &*send, &mut *recv, alloc);
+                Self::exchange(&mut t, "a2a_yz", col, &self.fwd_yz, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_z", || {
                     ensure(&mut data, volume(sh3), alloc);
                     merge_dim_from(&*recv, &self.fwd_yz.recv_offs, sh3, 3, p1, &mut data);
@@ -208,7 +234,7 @@ impl PencilPlan {
                     ensure(&mut *send, self.inv_zy.send_total(), alloc);
                     split_dim_into(&data, sh3, 3, p1, &mut *send, &self.inv_zy.send_offs);
                 });
-                Self::exchange(&mut t, "a2a_zy", col, &self.inv_zy, &*send, &mut *recv, alloc);
+                Self::exchange(&mut t, "a2a_zy", col, &self.inv_zy, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_y", || {
                     ensure(&mut data, volume(sh2), alloc);
                     merge_dim_from(&*recv, &self.inv_zy.recv_offs, sh2, 2, p1, &mut data);
@@ -220,7 +246,7 @@ impl PencilPlan {
                     ensure(&mut *send, self.inv_yx.send_total(), alloc);
                     split_dim_into(&data, sh2, 2, p0, &mut *send, &self.inv_yx.send_offs);
                 });
-                Self::exchange(&mut t, "a2a_yx", row, &self.inv_yx, &*send, &mut *recv, alloc);
+                Self::exchange(&mut t, "a2a_yx", row, &self.inv_yx, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_x", || {
                     ensure(&mut data, volume(sh1), alloc);
                     merge_dim_from(&*recv, &self.inv_yx.recv_offs, sh1, 1, p0, &mut data);

@@ -32,7 +32,7 @@
 use std::cell::Cell;
 use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::alltoallv_complex_flat;
+use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
 use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
@@ -48,6 +48,7 @@ use super::workspace::{ensure, ensure_zeroed, Workspace};
 pub struct PlaneWavePlan {
     /// Global offset array of the cut-off sphere.
     pub offsets: Arc<OffsetArray>,
+    /// Batch count (transforms per execution).
     pub nb: usize,
     grid: Arc<ProcGrid>,
     /// This rank's restriction of the offset array (x cyclic).
@@ -67,10 +68,14 @@ pub struct PlaneWavePlan {
     fwd: A2aSchedule,
     /// Inverse exchange (the forward schedule mirrored).
     inv: A2aSchedule,
+    /// Overlap knobs of the windowed exchange.
+    tuning: CommTuning,
     ws: Mutex<Workspace>,
 }
 
 impl PlaneWavePlan {
+    /// Plan a batched plane-wave sphere transform for `offsets` with batch
+    /// `nb` on the 1D `grid`.
     pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         assert_eq!(grid.ndim(), 1, "plane-wave plan requires a 1D processing grid");
         let p = grid.size();
@@ -129,8 +134,14 @@ impl PlaneWavePlan {
             lzc,
             fwd,
             inv,
+            tuning: CommTuning::default(),
             ws: Mutex::new(Workspace::new()),
         })
+    }
+
+    /// Override the exchange overlap knobs (window size) for this plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.tuning = tuning;
     }
 
     fn p(&self) -> usize {
@@ -257,16 +268,17 @@ impl PlaneWavePlan {
                 }
             }
         });
-        t.comm("a2a_sphere", || {
+        t.comm_a2a("a2a_sphere", || {
             ensure(&mut *recv, self.fwd.recv_total(), alloc);
-            alltoallv_complex_flat(
+            let c = alltoallv_complex_flat_tuned(
                 comm,
                 &*send,
                 &self.fwd.send_offs,
                 &mut *recv,
                 &self.fwd.recv_offs,
+                self.tuning,
             );
-            ((), self.fwd.bytes_remote(), self.fwd.msgs())
+            ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
         });
 
         // 3. Land the columns in a zeroed slab; FFT y over the disc x-extent.
@@ -368,16 +380,17 @@ impl PlaneWavePlan {
                 }
             }
         });
-        t.comm("a2a_sphere", || {
+        t.comm_a2a("a2a_sphere", || {
             ensure(&mut *recv, self.inv.recv_total(), alloc);
-            alltoallv_complex_flat(
+            let c = alltoallv_complex_flat_tuned(
                 comm,
                 &*send,
                 &self.inv.send_offs,
                 &mut *recv,
                 &self.inv.recv_offs,
+                self.tuning,
             );
-            ((), self.inv.bytes_remote(), self.inv.msgs())
+            ((), self.inv.bytes_remote(), self.inv.msgs(), c)
         });
 
         // 4. Merge z residues into dense local columns.
@@ -425,7 +438,9 @@ impl PlaneWavePlan {
 /// sphere into the cube up front and run the ordinary batched slab-pencil
 /// transform — ~16x more data through every stage.
 pub struct PaddedSpherePlan {
+    /// Global offset array of the cut-off sphere.
     pub offsets: Arc<OffsetArray>,
+    /// Batch count (transforms per execution).
     pub nb: usize,
     slab: super::slab_pencil::SlabPencilPlan,
     local_off: OffsetArray,
@@ -433,6 +448,8 @@ pub struct PaddedSpherePlan {
 }
 
 impl PaddedSpherePlan {
+    /// Plan the pad-to-cube baseline for `offsets` with batch `nb` on the
+    /// 1D `grid`.
     pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         let shape = [offsets.nx, offsets.ny, offsets.nz];
         let slab = super::slab_pencil::SlabPencilPlan::new(shape, nb, Arc::clone(&grid))?;
@@ -440,10 +457,17 @@ impl PaddedSpherePlan {
         Ok(PaddedSpherePlan { offsets, nb, slab, local_off, ws: Mutex::new(Workspace::new()) })
     }
 
+    /// Override the exchange overlap knobs of the inner dense plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.slab.set_tuning(tuning);
+    }
+
+    /// Packed local input length (`nb` x locally-owned sphere points).
     pub fn input_len(&self) -> usize {
         self.nb * self.local_off.total()
     }
 
+    /// Dense local output length (the inner slab plan's output).
     pub fn output_len(&self) -> usize {
         self.slab.output_len()
     }
@@ -488,6 +512,8 @@ impl PaddedSpherePlan {
         };
         let (out, slab_trace) = self.slab.forward(backend, cube);
         trace.alloc_bytes += slab_trace.alloc_bytes;
+        trace.wait_ns += slab_trace.wait_ns;
+        trace.overlap_rounds += slab_trace.overlap_rounds;
         trace.stages.extend(slab_trace.stages);
         (out, trace)
     }

@@ -25,6 +25,7 @@ use crate::fftb::grid::cyclic;
 /// Shape of a 4D local tensor.
 pub type Shape4 = [usize; 4];
 
+/// Element count of a 4D shape.
 #[inline]
 pub fn volume(sh: Shape4) -> usize {
     sh[0] * sh[1] * sh[2] * sh[3]
@@ -34,12 +35,17 @@ pub fn volume(sh: Shape4) -> usize {
 /// elements) and prefix-sum offsets for the flat send and receive buffers,
 /// plus the rank whose self-block bypasses the wire.
 pub struct A2aSchedule {
+    /// Communicator size.
     pub p: usize,
+    /// This rank (its block bypasses the wire).
     pub me: usize,
+    /// Block extent (complex elements) sent to each rank.
     pub send_counts: Vec<usize>,
     /// `send_offs[j]..send_offs[j+1]` is rank j's slice of the send buffer.
     pub send_offs: Vec<usize>,
+    /// Block extent (complex elements) received from each rank.
     pub recv_counts: Vec<usize>,
+    /// `recv_offs[q]..recv_offs[q+1]` is rank q's slice of the recv buffer.
     pub recv_offs: Vec<usize>,
 }
 
@@ -55,6 +61,8 @@ fn prefix_sums(counts: &[usize]) -> Vec<usize> {
 }
 
 impl A2aSchedule {
+    /// Build a schedule from per-rank block extents (offsets are their
+    /// prefix sums).
     pub fn new(send_counts: Vec<usize>, recv_counts: Vec<usize>, me: usize) -> Self {
         assert_eq!(send_counts.len(), recv_counts.len());
         assert!(me < send_counts.len());
@@ -92,10 +100,12 @@ impl A2aSchedule {
         A2aSchedule::new(self.recv_counts.clone(), self.send_counts.clone(), self.me)
     }
 
+    /// Total flat send-buffer length (complex elements).
     pub fn send_total(&self) -> usize {
         self.send_offs[self.p]
     }
 
+    /// Total flat recv-buffer length (complex elements).
     pub fn recv_total(&self) -> usize {
         self.recv_offs[self.p]
     }

@@ -18,12 +18,14 @@
 //! buffer, exchanges, and unpacks in place — with all scratch routed
 //! through the plan's [`Workspace`], steady-state executions perform zero
 //! heap allocation in the pack/unpack/FFT stages (`ExecTrace::alloc_bytes`
-//! reports any workspace growth).
+//! reports any workspace growth). The exchange itself runs the windowed
+//! overlapped pipeline (`CommTuning`, default window 2; `set_tuning` to
+//! change), reporting its wait time through `ExecTrace::wait_ns`.
 
 use std::sync::Arc;
 use std::sync::Mutex;
 
-use crate::comm::alltoall::alltoallv_complex_flat;
+use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
 use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
@@ -37,9 +39,13 @@ use super::workspace::{ensure, Workspace};
 /// Plan for a batched slab-pencil 3D FFT of global shape `(nx, ny, nz)` on a
 /// 1D grid.
 pub struct SlabPencilPlan {
+    /// Global extent of the x dimension.
     pub nx: usize,
+    /// Global extent of the y dimension.
     pub ny: usize,
+    /// Global extent of the z dimension.
     pub nz: usize,
+    /// Batch count (transforms per execution).
     pub nb: usize,
     grid: Arc<ProcGrid>,
     /// Local input shape `[nb, lxc, ny, nz]`.
@@ -50,10 +56,14 @@ pub struct SlabPencilPlan {
     fwd: A2aSchedule,
     /// Inverse exchange: split x of `sh_out`, merge z of `sh_in`.
     inv: A2aSchedule,
+    /// Overlap knobs of the windowed exchange.
+    tuning: CommTuning,
     ws: Mutex<Workspace>,
 }
 
 impl SlabPencilPlan {
+    /// Plan a batched slab-pencil transform of `shape` with batch `nb` on
+    /// the 1D `grid`.
     pub fn new(shape: [usize; 3], nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
         assert_eq!(grid.ndim(), 1, "slab-pencil requires a 1D processing grid");
         let p = grid.size();
@@ -81,8 +91,14 @@ impl SlabPencilPlan {
             sh_out,
             fwd,
             inv,
+            tuning: CommTuning::default(),
             ws: Mutex::new(Workspace::new()),
         })
+    }
+
+    /// Override the exchange overlap knobs (window size) for this plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.tuning = tuning;
     }
 
     fn p(&self) -> usize {
@@ -155,16 +171,17 @@ impl SlabPencilPlan {
                     ensure(&mut *send, self.fwd.send_total(), alloc);
                     split_dim_into(&data, sh_in, 3, p, &mut *send, &self.fwd.send_offs);
                 });
-                t.comm("a2a_xz", || {
+                t.comm_a2a("a2a_xz", || {
                     ensure(&mut *recv, self.fwd.recv_total(), alloc);
-                    alltoallv_complex_flat(
+                    let c = alltoallv_complex_flat_tuned(
                         comm,
                         &*send,
                         &self.fwd.send_offs,
                         &mut *recv,
                         &self.fwd.recv_offs,
+                        self.tuning,
                     );
-                    ((), self.fwd.bytes_remote(), self.fwd.msgs())
+                    ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
                 });
                 // Receiving block from rank q: shape [nb, lxc_q, ny, lzc_me];
                 // merge along dim 1 (x becomes dense) into the recycled
@@ -187,16 +204,17 @@ impl SlabPencilPlan {
                     ensure(&mut *send, self.inv.send_total(), alloc);
                     split_dim_into(&data, sh_out, 1, p, &mut *send, &self.inv.send_offs);
                 });
-                t.comm("a2a_zx", || {
+                t.comm_a2a("a2a_zx", || {
                     ensure(&mut *recv, self.inv.recv_total(), alloc);
-                    alltoallv_complex_flat(
+                    let c = alltoallv_complex_flat_tuned(
                         comm,
                         &*send,
                         &self.inv.send_offs,
                         &mut *recv,
                         &self.inv.recv_offs,
+                        self.tuning,
                     );
-                    ((), self.inv.bytes_remote(), self.inv.msgs())
+                    ((), self.inv.bytes_remote(), self.inv.msgs(), c)
                 });
                 t.reshape("unpack_z", || {
                     ensure(&mut data, volume(sh_in), alloc);

@@ -5,8 +5,17 @@
 //! path) and the performance model (`crate::model`) re-prices the recorded
 //! communication volumes for a target machine — this is how the Fig. 9
 //! projections beyond the live thread count are produced.
+//!
+//! Besides the per-stage table, a trace carries two execution-wide overlap
+//! counters fed by the windowed alltoall ([`A2aCounters`]): `wait_ns`, the
+//! nanoseconds this rank spent blocked in receive waits, and
+//! `overlap_rounds`, how many exchange rounds were posted ahead of the
+//! serial schedule. `benches/a2a_micro.rs` prints them side by side for the
+//! serial and overlapped disciplines.
 
 use std::time::Duration;
+
+use crate::comm::alltoall::A2aCounters;
 
 /// What kind of work a stage did.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,8 +31,11 @@ pub enum StageKind {
 /// One stage of one execution on one rank.
 #[derive(Clone, Debug)]
 pub struct StageTrace {
+    /// Stage label (e.g. `"a2a_xz"`).
     pub name: &'static str,
+    /// What kind of work the stage did.
     pub kind: StageKind,
+    /// Wall-clock time of the stage on this rank.
     pub elapsed: Duration,
     /// Bytes this rank sent to *other* ranks in this stage (0 for compute).
     pub bytes_sent: u64,
@@ -36,6 +48,7 @@ pub struct StageTrace {
 /// Trace of one full transform execution on one rank.
 #[derive(Clone, Debug, Default)]
 pub struct ExecTrace {
+    /// Per-stage records, in execution order.
     pub stages: Vec<StageTrace>,
     /// Bytes of heap storage newly acquired by the plan's reusable
     /// [`Workspace`](super::workspace::Workspace) during this execution.
@@ -43,9 +56,17 @@ pub struct ExecTrace {
     /// report 0 here — the plan-once / execute-many property the paper's
     /// design is built around (and what `tests/workspace_reuse.rs` asserts).
     pub alloc_bytes: u64,
+    /// Nanoseconds this rank spent blocked waiting for exchange receives,
+    /// summed over every comm stage (see [`A2aCounters::wait_ns`]).
+    pub wait_ns: u64,
+    /// Exchange rounds posted ahead of the serial schedule, summed over
+    /// every comm stage (0 when the serial discipline — or `window == 1` —
+    /// ran; see [`A2aCounters::overlap_rounds`]).
+    pub overlap_rounds: u64,
 }
 
 impl ExecTrace {
+    /// Append one stage record.
     pub fn push(
         &mut self,
         name: &'static str,
@@ -58,25 +79,34 @@ impl ExecTrace {
         self.stages.push(StageTrace { name, kind, elapsed, bytes_sent, messages, flops });
     }
 
+    /// Total wall-clock time across all stages.
     pub fn total_time(&self) -> Duration {
         self.stages.iter().map(|s| s.elapsed).sum()
     }
 
+    /// Total bytes sent to other ranks.
     pub fn comm_bytes(&self) -> u64 {
         self.stages.iter().map(|s| s.bytes_sent).sum()
     }
 
+    /// Total point-to-point messages sent.
     pub fn comm_messages(&self) -> u64 {
         self.stages.iter().map(|s| s.messages).sum()
     }
 
+    /// Total complex-FLOP estimate of local compute.
     pub fn compute_flops(&self) -> f64 {
         self.stages.iter().map(|s| s.flops).sum()
     }
 
+    /// Time spent blocked in exchange waits, as a `Duration`.
+    pub fn wait_time(&self) -> Duration {
+        Duration::from_nanos(self.wait_ns)
+    }
+
     /// Merge per-rank traces into a critical-path view: per stage, the max
     /// elapsed over ranks and the max bytes/messages (the slowest rank
-    /// gates an alltoall).
+    /// gates an alltoall). The overlap counters also take the per-rank max.
     pub fn critical_path(traces: &[ExecTrace]) -> ExecTrace {
         assert!(!traces.is_empty());
         let nstages = traces[0].stages.len();
@@ -96,6 +126,8 @@ impl ExecTrace {
             );
         }
         out.alloc_bytes = traces.iter().map(|t| t.alloc_bytes).max().unwrap();
+        out.wait_ns = traces.iter().map(|t| t.wait_ns).max().unwrap();
+        out.overlap_rounds = traces.iter().map(|t| t.overlap_rounds).max().unwrap();
         out
     }
 
@@ -106,6 +138,13 @@ impl ExecTrace {
             s.push_str(&format!(
                 "{:<24} {:?} {:>10.3?} {:>12} B {:>6} msgs {:>12.0} flops\n",
                 st.name, st.kind, st.elapsed, st.bytes_sent, st.messages, st.flops
+            ));
+        }
+        if self.wait_ns > 0 || self.overlap_rounds > 0 {
+            s.push_str(&format!(
+                "(exchange waits: {:?}, {} rounds overlapped)\n",
+                self.wait_time(),
+                self.overlap_rounds
             ));
         }
         if self.alloc_bytes > 0 {
@@ -121,10 +160,12 @@ pub struct StageTimer<'a> {
 }
 
 impl<'a> StageTimer<'a> {
+    /// Wrap a trace for stage-by-stage recording.
     pub fn new(trace: &'a mut ExecTrace) -> Self {
         StageTimer { trace }
     }
 
+    /// Time a compute stage; `flops` is its complex-FLOP estimate.
     pub fn compute<R>(&mut self, name: &'static str, flops: f64, f: impl FnOnce() -> R) -> R {
         let t0 = std::time::Instant::now();
         let r = f();
@@ -132,6 +173,7 @@ impl<'a> StageTimer<'a> {
         r
     }
 
+    /// Time a local reshape stage (no traffic, no FLOPs).
     pub fn reshape<R>(&mut self, name: &'static str, f: impl FnOnce() -> R) -> R {
         let t0 = std::time::Instant::now();
         let r = f();
@@ -139,11 +181,27 @@ impl<'a> StageTimer<'a> {
         r
     }
 
-    /// `f` must return (result, bytes_sent, messages).
+    /// Time a comm stage; `f` must return (result, bytes_sent, messages).
     pub fn comm<R>(&mut self, name: &'static str, f: impl FnOnce() -> (R, u64, u64)) -> R {
         let t0 = std::time::Instant::now();
         let (r, bytes, msgs) = f();
         self.trace.push(name, StageKind::Comm, t0.elapsed(), bytes, msgs, 0.0);
+        r
+    }
+
+    /// Time an exchange stage that also reports overlap counters; `f` must
+    /// return (result, bytes_sent, messages, counters). The counters are
+    /// accumulated into the trace's `wait_ns` / `overlap_rounds`.
+    pub fn comm_a2a<R>(
+        &mut self,
+        name: &'static str,
+        f: impl FnOnce() -> (R, u64, u64, A2aCounters),
+    ) -> R {
+        let t0 = std::time::Instant::now();
+        let (r, bytes, msgs, c) = f();
+        self.trace.push(name, StageKind::Comm, t0.elapsed(), bytes, msgs, 0.0);
+        self.trace.wait_ns += c.wait_ns;
+        self.trace.overlap_rounds += c.overlap_rounds;
         r
     }
 }
@@ -166,16 +224,38 @@ mod tests {
     }
 
     #[test]
+    fn comm_a2a_accumulates_counters() {
+        let mut trace = ExecTrace::default();
+        let mut t = StageTimer::new(&mut trace);
+        t.comm_a2a("a2a_1", || {
+            ((), 10, 1, A2aCounters { wait_ns: 500, overlap_rounds: 3 })
+        });
+        t.comm_a2a("a2a_2", || {
+            ((), 20, 2, A2aCounters { wait_ns: 250, overlap_rounds: 2 })
+        });
+        assert_eq!(trace.wait_ns, 750);
+        assert_eq!(trace.overlap_rounds, 5);
+        assert_eq!(trace.comm_bytes(), 30);
+        assert_eq!(trace.wait_time(), Duration::from_nanos(750));
+    }
+
+    #[test]
     fn critical_path_takes_max() {
-        let mk = |ms: u64, bytes: u64, alloc: u64| {
+        let mk = |ms: u64, bytes: u64, alloc: u64, wait: u64| {
             let mut t = ExecTrace::default();
             t.push("s", StageKind::Comm, Duration::from_millis(ms), bytes, 1, 0.0);
             t.alloc_bytes = alloc;
+            t.wait_ns = wait;
             t
         };
-        let cp = ExecTrace::critical_path(&[mk(5, 10, 0), mk(9, 3, 64), mk(2, 7, 16)]);
+        let cp = ExecTrace::critical_path(&[
+            mk(5, 10, 0, 100),
+            mk(9, 3, 64, 900),
+            mk(2, 7, 16, 50),
+        ]);
         assert_eq!(cp.stages[0].elapsed, Duration::from_millis(9));
         assert_eq!(cp.stages[0].bytes_sent, 10);
         assert_eq!(cp.alloc_bytes, 64, "slowest-allocating rank gates the view");
+        assert_eq!(cp.wait_ns, 900, "longest-waiting rank gates the view");
     }
 }

@@ -40,6 +40,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Create an empty workspace (buffers grow on first use).
     pub fn new() -> Self {
         Self::default()
     }

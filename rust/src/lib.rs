@@ -2,8 +2,14 @@
 //! Density Functional Theory codes.
 //!
 //! Reproduction of Popovici et al., "Flexible Multi-Dimensional FFTs for
-//! Plane Wave Density Functional Theory Codes" (CS.DC 2024). See DESIGN.md
-//! for the full architecture and EXPERIMENTS.md for the measured results.
+//! Plane Wave Density Functional Theory Codes" (CS.DC 2024). See
+//! `docs/ARCHITECTURE.md` for the layer map and the plan-time vs
+//! execute-time contract, and EXPERIMENTS.md for the measured results.
+//!
+//! The crate README below doubles as the documented quickstart; its code
+//! block runs verbatim as a doctest under `cargo test -q`.
+//!
+#![doc = include_str!("../README.md")]
 
 pub mod comm;
 pub mod coordinator;

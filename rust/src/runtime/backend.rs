@@ -17,6 +17,8 @@ use crate::fftb::backend::{LocalFftBackend, RustFftBackend};
 
 use super::PjrtRuntime;
 
+/// [`LocalFftBackend`] that runs batched line FFTs through AOT-compiled
+/// PJRT artifacts, falling back to the rust substrate for uncovered sizes.
 pub struct PjrtFftBackend {
     rt: Arc<PjrtRuntime>,
     fallback: RustFftBackend,
@@ -27,6 +29,7 @@ pub struct PjrtFftBackend {
 }
 
 impl PjrtFftBackend {
+    /// Wrap an opened PJRT runtime.
     pub fn new(rt: Arc<PjrtRuntime>) -> Self {
         PjrtFftBackend {
             rt,
@@ -36,6 +39,7 @@ impl PjrtFftBackend {
         }
     }
 
+    /// The underlying PJRT runtime handle.
     pub fn runtime(&self) -> &Arc<PjrtRuntime> {
         &self.rt
     }

@@ -13,28 +13,35 @@ fn err(msg: String) -> FftbError {
     FftbError::Runtime(msg)
 }
 
+/// One AOT-compiled executable in the artifact manifest.
 #[derive(Clone, Debug)]
 pub struct ManifestEntry {
+    /// Entry name (e.g. `fft64_f`).
     pub name: String,
+    /// HLO text file relative to the manifest.
     pub file: String,
     /// Input shapes (row-major dims), one per positional argument.
     pub inputs: Vec<Vec<usize>>,
 }
 
+/// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
     /// Batch tile every fft entry was compiled for.
     pub batch: usize,
+    /// All compiled entries.
     pub entries: Vec<ManifestEntry>,
 }
 
 impl Manifest {
+    /// Load and parse a manifest file.
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .map_err(|e| err(format!("reading {}: {e}", path.as_ref().display())))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| err(format!("manifest JSON: {e}")))?;
         let batch = j
@@ -73,6 +80,7 @@ impl Manifest {
         Ok(Manifest { batch, entries })
     }
 
+    /// Look up an entry by name.
     pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
         self.entries.iter().find(|e| e.name == name)
     }

@@ -1,0 +1,154 @@
+//! The overlapped (windowed) exchange must be a pure *scheduling* change:
+//! bit-identical results to the serial schedule for every window size
+//! ({1, 2, p-1}), world size (including non-powers of two), and block
+//! pattern (including empty remote blocks) — with correctly reported
+//! overlap counters, and identical plan outputs when threaded through the
+//! five plan kinds via `set_tuning` / `FftbOptions::comm`.
+
+use std::sync::Arc;
+
+use fftb::comm::alltoall::{alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned};
+use fftb::comm::{run_world, CommTuning};
+use fftb::fft::complex::{Complex, ZERO};
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{NonBatchedLoop, PencilPlan, PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+
+/// Varied block extents with systematic empty blocks (both self and
+/// remote: extent 0 whenever `3r + 5j ≡ 0 (mod 7)`).
+fn block_len(r: usize, j: usize) -> usize {
+    (r * 3 + 5 * j) % 7
+}
+
+#[test]
+fn windowed_pipeline_is_bit_identical_to_serial() {
+    for p in [2usize, 3, 5, 6] {
+        let outs = run_world(p, move |comm| {
+            let me = comm.rank();
+            let mut send_offs = vec![0usize];
+            let mut send: Vec<Complex> = Vec::new();
+            for j in 0..p {
+                for k in 0..block_len(me, j) {
+                    send.push(Complex::new((me * 31 + j) as f64, k as f64 + 0.25));
+                }
+                send_offs.push(send.len());
+            }
+            let mut recv_offs = vec![0usize];
+            for q in 0..p {
+                recv_offs.push(recv_offs[q] + block_len(q, me));
+            }
+            let n = *recv_offs.last().unwrap();
+
+            let mut base = vec![ZERO; n];
+            let c0 =
+                alltoallv_complex_flat_serial(&comm, &send, &send_offs, &mut base, &recv_offs);
+            assert_eq!(c0.overlap_rounds, 0, "serial schedule never overlaps");
+
+            let mut results = Vec::new();
+            for w in [1usize, 2, p - 1] {
+                let mut out = vec![ZERO; n];
+                let c = alltoallv_complex_flat_tuned(
+                    &comm,
+                    &send,
+                    &send_offs,
+                    &mut out,
+                    &recv_offs,
+                    CommTuning::with_window(w.max(1)),
+                );
+                if w <= 1 || p == 2 {
+                    // Window 1 (or a 2-rank world, where any window clamps
+                    // to 1) keeps the serial ordering.
+                    assert_eq!(c.overlap_rounds, 0, "window {w} must not overlap at p={p}");
+                } else {
+                    // The pipeline stays full: every round but the first
+                    // is posted ahead of the serial schedule.
+                    assert_eq!(c.overlap_rounds as usize, p - 2, "window {w} at p={p}");
+                }
+                results.push(out);
+            }
+            (base, results)
+        });
+        for (base, results) in outs {
+            for got in results {
+                assert_eq!(base, got, "p={p}: windowed result differs from serial");
+            }
+        }
+    }
+}
+
+/// The plans' outputs must be bitwise invariant under the exchange window
+/// (the window changes when blocks move, never where they land), and the
+/// overlapped executions must report their counters.
+#[test]
+fn slab_pencil_outputs_invariant_under_window() {
+    let shape = [6usize, 5, 6]; // non-pow2, uneven cyclic counts
+    let (nb, p) = (2usize, 3usize);
+    run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let backend = RustFftBackend::new();
+        let run_with = |w: usize| {
+            let mut plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+            plan.set_tuning(CommTuning::with_window(w));
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            plan.forward(&backend, input)
+        };
+        let (base, tr1) = run_with(1);
+        assert_eq!(tr1.overlap_rounds, 0);
+        let (o2, tr2) = run_with(2);
+        assert!(tr2.overlap_rounds > 0, "windowed plan must overlap rounds");
+        let (of, _) = run_with(p - 1);
+        assert_eq!(base, o2, "window 2 output differs");
+        assert_eq!(base, of, "full-window output differs");
+    });
+}
+
+#[test]
+fn pencil_outputs_invariant_under_window() {
+    let shape = [8usize, 8, 8];
+    let nb = 1usize;
+    let (p0, p1) = (2usize, 3usize);
+    run_world(p0 * p1, move |comm| {
+        let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
+        let backend = RustFftBackend::new();
+        let run_with = |w: usize| {
+            let mut plan = PencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+            plan.set_tuning(CommTuning::with_window(w));
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            plan.forward(&backend, input).0
+        };
+        let base = run_with(1);
+        assert_eq!(base, run_with(2), "window 2 output differs");
+        assert_eq!(base, run_with(4), "window 4 output differs");
+    });
+}
+
+#[test]
+fn planewave_and_loop_outputs_invariant_under_window() {
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (2usize, 4usize);
+    run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let backend = RustFftBackend::new();
+
+        let pw_with = |w: usize| {
+            let mut plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+            plan.set_tuning(CommTuning::with_window(w));
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            plan.forward(&backend, input).0
+        };
+        let base = pw_with(1);
+        assert_eq!(base, pw_with(p - 1), "plane-wave output differs across windows");
+
+        let loop_with = |w: usize| {
+            let mut plan = NonBatchedLoop::new([8, 8, 8], nb, Arc::clone(&grid)).unwrap();
+            plan.set_tuning(CommTuning::with_window(w));
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            plan.forward(&backend, input).0
+        };
+        let lbase = loop_with(1);
+        assert_eq!(lbase, loop_with(p - 1), "loop output differs across windows");
+    });
+}

@@ -6,6 +6,11 @@
 //! and exactly zero once the workspaces have reached their high-water mark
 //! — for all five plan kinds, through repeated forward/inverse round trips
 //! (the SCF-loop pattern Fig. 9 measures).
+//!
+//! All five plans run the *overlapped* windowed exchange by default
+//! (window 2), so every assertion below already covers the overlapped
+//! path; the explicit window tests at the bottom pin the property for the
+//! serial-ordering (window 1) and full-window (p-1) extremes too.
 
 use std::sync::Arc;
 
@@ -139,6 +144,45 @@ fn planewave_steady_state_is_allocation_free() {
     });
     for allocs in &allocs_all {
         assert_steady_state(allocs, "plane-wave");
+    }
+}
+
+#[test]
+fn overlapped_full_window_stays_allocation_free() {
+    // The exchange window changes only message scheduling; no window size
+    // may reintroduce steady-state allocation.
+    let shape = [8usize, 8, 8];
+    let (nb, p) = (2usize, 4usize);
+    for window in [1usize, 3] {
+        let allocs_all = fftb::comm::run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let mut plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+            plan.set_tuning(fftb::comm::CommTuning::with_window(window));
+            let backend = RustFftBackend::new();
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+        });
+        for allocs in &allocs_all {
+            assert_steady_state(allocs, "slab-pencil (explicit window)");
+        }
+    }
+}
+
+#[test]
+fn overlapped_pencil_window_stays_allocation_free() {
+    let shape = [8usize, 8, 8];
+    let nb = 2usize;
+    let (p0, p1) = (2usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p0 * p1, |comm| {
+        let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
+        let mut plan = PencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+        plan.set_tuning(fftb::comm::CommTuning::with_window(3));
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "pencil (explicit window)");
     }
 }
 
