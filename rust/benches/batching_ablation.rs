@@ -9,9 +9,11 @@
 use std::sync::Arc;
 
 use fftb::comm::communicator::run_world;
+use fftb::coordinator::{BatchingDriver, TransformJob};
+use fftb::fft::dft::Direction;
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::grid::ProcGrid;
-use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::testutil::{phased, scatter_cube_x};
 use fftb::fftb::plan::{NonBatchedLoop, SlabPencilPlan};
 use fftb::fftb::sphere::{SphereKind, SphereSpec};
 use fftb::model::{project, Machine, Variant, Workload};
@@ -84,8 +86,69 @@ fn modeled() {
     }
 }
 
+/// Cached vs uncached flush: the driver's plan cache means only the first
+/// flush of a given batch size plans (and warms a workspace); every later
+/// flush reuses both. Prints the first-flush and steady-state flush times
+/// and asserts the cache contract (`plan_cache_hit`, zero steady-state
+/// workspace growth).
+fn cached_flush() {
+    println!();
+    println!("== cached vs uncached flush (driver plan cache) ==");
+    let n = 32usize;
+    let nb = 8usize;
+    let p = 4usize;
+    let rounds = 5usize;
+    let rows = run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let backend = RustFftBackend::new();
+        let mut driver = BatchingDriver::new([n, n, n], Arc::clone(&grid));
+        let bands: Vec<_> = (0..nb)
+            .map(|b| {
+                let g = phased(n * n * n, b as u64);
+                scatter_cube_x(&g, 1, [n, n, n], p, grid.rank())
+            })
+            .collect();
+        let mut first = std::time::Duration::ZERO;
+        let mut warm_best = std::time::Duration::MAX;
+        for round in 0..rounds {
+            for (i, b) in bands.iter().enumerate() {
+                driver.submit(TransformJob {
+                    id: i as u64,
+                    data: b.clone(),
+                    dir: Direction::Forward,
+                });
+            }
+            let t0 = std::time::Instant::now();
+            driver.flush(&backend, Direction::Forward);
+            let dt = t0.elapsed();
+            let tr = driver.drain_traces().pop().unwrap();
+            if round == 0 {
+                first = dt;
+                assert!(!tr.plan_cache_hit, "first flush must plan");
+            } else {
+                warm_best = warm_best.min(dt);
+                assert!(tr.plan_cache_hit, "flush {round} must hit the plan cache");
+                assert_eq!(tr.alloc_bytes, 0, "steady-state flush must not allocate");
+            }
+            driver.drain_completed();
+        }
+        let (hits, misses) = driver.plan_cache_stats();
+        assert_eq!((hits, misses), ((rounds - 1) as u64, 1));
+        (first, warm_best)
+    });
+    let first = rows.iter().map(|r| r.0).max().unwrap();
+    let warm = rows.iter().map(|r| r.1).max().unwrap();
+    println!(
+        "cube {n}^3, nb={nb}, p={p}: first flush {} (plans + cold workspaces), \
+         steady flush {}",
+        fmt_duration(first),
+        fmt_duration(warm)
+    );
+}
+
 fn main() {
     live();
     modeled();
+    cached_flush();
     println!("batching_ablation bench done");
 }

@@ -1,0 +1,123 @@
+//! Bench: tuner ablation — how good is the model-picked plan against the
+//! live-measured candidate set?
+//!
+//! For a dense cube and a sphere workload, every feasible decomposition is
+//! built (at its model-best window), executed, and timed; the table prints
+//! model-predicted seconds next to measured wall time. The assertions pin
+//! the tuner's value proposition: the model pick lands in the top tier of
+//! the measured set (top-2 for the cube, outright winner for the sphere,
+//! where staged padding vs pad-to-cube is a ~3x gap), and the spread
+//! between the best and worst candidate is what auto-tuning saves a user
+//! who would otherwise hand-pick blind.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fftb::comm::run_world;
+use fftb::fft::complex::ZERO;
+use fftb::fft::dft::Direction;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::sphere::{OffsetArray, SphereKind, SphereSpec};
+use fftb::model::Machine;
+use fftb::tuner::search::{self, TuneRequest};
+
+/// Execute every shortlisted candidate (one per decomposition, at its
+/// model-best window — `search::shortlist`, the same list the tuner's
+/// empirical mode measures) live; returns (label, window, predicted,
+/// measured critical-path wall time) in model order.
+fn measure(
+    shape: [usize; 3],
+    nb: usize,
+    p: usize,
+    sphere: Option<Arc<OffsetArray>>,
+) -> Vec<(String, usize, f64, Duration)> {
+    let req = TuneRequest { shape, nb, p, sphere };
+    let cands = search::shortlist(&req, &Machine::local_cpu(), usize::MAX);
+    assert!(!cands.is_empty(), "no feasible candidate for {shape:?} on p={p}");
+    let req2 = req.clone();
+    let cands2 = cands.clone();
+    let times = run_world(p, move |comm| {
+        let backend = RustFftBackend::new();
+        cands2
+            .iter()
+            .map(|cand| {
+                let plan = search::build(cand, &req2, &comm).expect("candidate must build");
+                // Warm the workspaces, then keep the fastest of 5.
+                let mut best = Duration::MAX;
+                for _ in 0..6 {
+                    let input = vec![ZERO; plan.input_len()];
+                    let t0 = std::time::Instant::now();
+                    let (out, _) = plan.execute(&backend, input, Direction::Forward);
+                    let dt = t0.elapsed();
+                    plan.recycle(out);
+                    if dt < best {
+                        best = dt;
+                    }
+                }
+                best
+            })
+            .collect::<Vec<_>>()
+    });
+    cands
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            // Critical path: slowest rank gates the exchange.
+            let wall = times.iter().map(|per_rank| per_rank[i]).max().unwrap();
+            (c.kind.label(), c.window, c.predicted, wall)
+        })
+        .collect()
+}
+
+fn print_table(title: &str, rows: &[(String, usize, f64, Duration)]) {
+    println!("== {title} ==");
+    println!("{:>20} {:>7} {:>12} {:>12}", "candidate", "window", "predicted", "measured");
+    for (label, window, predicted, wall) in rows {
+        println!(
+            "{label:>20} {window:>7} {:>10.3}ms {:>10.3}ms",
+            predicted * 1e3,
+            wall.as_secs_f64() * 1e3
+        );
+    }
+}
+
+fn cube() {
+    let (shape, nb, p) = ([32usize, 32, 32], 4usize, 4usize);
+    let rows = measure(shape, nb, p, None);
+    print_table("cube 32^3, nb=4, p=4 (model order)", &rows);
+
+    // Model pick = first row. Rank it inside the measured set.
+    let model_pick = rows[0].3;
+    let mut measured: Vec<Duration> = rows.iter().map(|r| r.3).collect();
+    measured.sort();
+    let top2 = measured[1.min(measured.len() - 1)];
+    assert!(
+        model_pick <= top2.mul_f64(1.25),
+        "model pick ({model_pick:?}) must sit in the measured top-2 (cutoff {top2:?})"
+    );
+    let spread = measured.last().unwrap().as_secs_f64() / measured[0].as_secs_f64();
+    println!("best/worst measured spread: {spread:.1}x");
+    assert!(spread > 1.0, "candidates must actually differ");
+}
+
+fn sphere() {
+    let n = 32usize;
+    let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (4usize, 4usize);
+    let rows = measure([n, n, n], nb, p, Some(off));
+    println!();
+    print_table("sphere d=n/2 in 32^3, nb=4, p=4 (model order)", &rows);
+    assert_eq!(rows[0].0, "plane-wave", "model must pick staged padding");
+    let winner = rows.iter().min_by_key(|r| r.3).unwrap();
+    assert_eq!(
+        winner.0, "plane-wave",
+        "staged padding must also win the measurement (got {winner:?})"
+    );
+}
+
+fn main() {
+    cube();
+    sphere();
+    println!("tuner_ablation bench done");
+}

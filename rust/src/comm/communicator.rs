@@ -177,6 +177,25 @@ impl Comm {
         self.world_rank
     }
 
+    /// Opaque identity of the communication domain this handle addresses:
+    /// world instance, split context, and member set. Handles obtained
+    /// from the same world/split see the same value; handles of different
+    /// worlds or different splits do not (while any plan built on a world
+    /// is alive, its `WorldShared` allocation is pinned, so the pointer
+    /// component cannot be reused). The tuner keys cached plans with this
+    /// so a plan built for one communicator is never served to another
+    /// same-sized one.
+    pub fn identity(&self) -> u64 {
+        use crate::util::fnv::fnv1a_word;
+        let mut h = crate::util::fnv::FNV_OFFSET;
+        h = fnv1a_word(h, Arc::as_ptr(&self.shared) as usize as u64);
+        h = fnv1a_word(h, self.context);
+        for &r in self.ranks.iter() {
+            h = fnv1a_word(h, r as u64);
+        }
+        h
+    }
+
     /// The world's wire traffic counters.
     pub fn stats(&self) -> Arc<CommStats> {
         Arc::clone(&self.shared.stats)
@@ -569,5 +588,24 @@ mod tests {
             }
         });
         assert_eq!(outs[1], vec![crate::fft::complex::Complex::new(1.5, -0.5)]);
+    }
+
+    #[test]
+    fn identity_distinguishes_splits_and_agrees_within() {
+        let outs = run_world(4, |comm| {
+            let row = comm.rank() / 2;
+            let sub = comm.split(row as u64, (comm.rank() % 2) as u64);
+            (comm.identity(), sub.identity())
+        });
+        // Every rank agrees on the world's identity.
+        assert!(outs.iter().all(|o| o.0 == outs[0].0));
+        // Members of one split agree; different splits (and the world)
+        // have different identities.
+        assert_eq!(outs[0].1, outs[1].1);
+        assert_eq!(outs[2].1, outs[3].1);
+        assert_ne!(outs[0].1, outs[2].1);
+        for o in &outs {
+            assert_ne!(o.0, o.1, "a split must not collide with its world");
+        }
     }
 }

@@ -6,19 +6,38 @@
 //! interleaved into one batch-fastest block, pushed through a batched
 //! slab-pencil plan (one alltoall per stage for the whole batch), and the
 //! results are handed back per job.
+//!
+//! Plans are drawn from a per-driver [`PlanCache`] keyed by
+//! `(shape, nb, window)` (direction-agnostic: one slab-pencil plan serves
+//! both directions): the first flush of a given batch size
+//! plans and warms a workspace, every later flush reuses both —
+//! `ExecTrace::plan_cache_hit` reports which happened, and steady-state
+//! flushes are allocation-free (`alloc_bytes == 0`) because the cached
+//! plan's workspace and slot pool survive between flushes. The flush path
+//! itself is allocation-lean: the queue partition and the interleave block
+//! run through driver-owned reusable buffers, and the batch output is
+//! recycled as the next flush's block. Results accumulate until the caller
+//! collects them with [`BatchingDriver::drain_completed`] (and traces with
+//! [`BatchingDriver::drain_traces`]).
 
 use std::sync::Arc;
 
+use crate::comm::alltoall::CommTuning;
 use crate::fft::complex::{Complex, ZERO};
 use crate::fft::dft::Direction;
 use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::error::Result;
 use crate::fftb::grid::ProcGrid;
-use crate::fftb::plan::{ExecTrace, SlabPencilPlan};
+use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, SlabPencilPlan};
+use crate::tuner::cache::{PlanCache, PlanKey};
 
 /// One queued single-band transform request.
 pub struct TransformJob {
+    /// Caller-chosen identifier, returned with the result.
     pub id: u64,
+    /// This rank's local slice of the band.
     pub data: Vec<Complex>,
+    /// Transform direction the job wants.
     pub dir: Direction,
 }
 
@@ -26,41 +45,126 @@ pub struct TransformJob {
 pub struct BatchingDriver {
     shape: [usize; 3],
     grid: Arc<ProcGrid>,
+    /// Identity of the grid's communicator, precomputed for the per-flush
+    /// plan-cache key.
+    comm_id: u64,
+    tuning: CommTuning,
     queue: Vec<TransformJob>,
-    /// Completed results by job id.
+    /// Reusable flush scratch: jobs taken this flush / jobs kept queued.
+    take_buf: Vec<TransformJob>,
+    keep_buf: Vec<TransformJob>,
+    /// Reusable interleave block (recycled from the previous flush output).
+    block: Vec<Complex>,
+    /// Memoized plans, keyed by `(comm_id, shape, nb, window)`; see
+    /// `plan_for` for why the key is direction-agnostic.
+    cache: PlanCache,
+    /// Completed results by job id (collect with `drain_completed`).
     pub completed: Vec<(u64, Vec<Complex>)>,
-    /// Traces of each flush (for the metrics sink).
+    /// Traces of each flush (collect with `drain_traces`).
     pub traces: Vec<ExecTrace>,
 }
 
 impl BatchingDriver {
+    /// A driver for batched slab-pencil transforms of `shape` on the 1D
+    /// `grid`, with the default exchange tuning.
     pub fn new(shape: [usize; 3], grid: Arc<ProcGrid>) -> Self {
-        BatchingDriver { shape, grid, queue: Vec::new(), completed: Vec::new(), traces: Vec::new() }
+        Self::with_tuning(shape, grid, CommTuning::default())
     }
 
+    /// [`BatchingDriver::new`] with explicit exchange overlap knobs for the
+    /// plans the driver builds.
+    pub fn with_tuning(shape: [usize; 3], grid: Arc<ProcGrid>, tuning: CommTuning) -> Self {
+        let comm_id = grid.comm().identity();
+        BatchingDriver {
+            shape,
+            grid,
+            comm_id,
+            tuning,
+            queue: Vec::new(),
+            take_buf: Vec::new(),
+            keep_buf: Vec::new(),
+            block: Vec::new(),
+            cache: PlanCache::new(),
+            completed: Vec::new(),
+            traces: Vec::new(),
+        }
+    }
+
+    /// Enqueue one job (same order on every rank).
     pub fn submit(&mut self, job: TransformJob) {
         self.queue.push(job);
     }
 
+    /// Number of jobs waiting for a flush.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// `(hits, misses)` of the driver's plan cache.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Take all completed `(id, result)` pairs, leaving the driver's
+    /// completed list empty — call after each flush round so results do
+    /// not accumulate unboundedly across an SCF run.
+    pub fn drain_completed(&mut self) -> Vec<(u64, Vec<Complex>)> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Take all flush traces accumulated since the last drain.
+    pub fn drain_traces(&mut self) -> Vec<ExecTrace> {
+        std::mem::take(&mut self.traces)
+    }
+
+    /// Fetch (or build and cache) the batched plan for `nb` bands. The key
+    /// is direction-agnostic (`dir: None`): a slab-pencil plan precomputes
+    /// both exchange schedules, so forward and inverse flushes of the same
+    /// batch size share one plan — and one warmed workspace.
+    fn plan_for(&mut self, nb: usize) -> Result<(Arc<Fftb>, bool)> {
+        // Static string keys: the per-flush lookup allocates nothing.
+        let key = PlanKey {
+            comm_id: self.comm_id,
+            sizes: self.shape,
+            signature: "driver:slab".into(),
+            kind: "slab-pencil".into(),
+            nb,
+            dir: None,
+            window: self.tuning.window,
+        };
+        let (shape, grid, tuning) = (self.shape, Arc::clone(&self.grid), self.tuning);
+        self.cache.get_or_insert(key, || {
+            let mut fx = Fftb {
+                kind: PlanKind::SlabPencil(SlabPencilPlan::new(shape, nb, grid)?),
+                sizes: shape,
+                nb,
+            };
+            fx.set_comm_tuning(tuning);
+            Ok(fx)
+        })
     }
 
     /// Flush all queued jobs of direction `dir` as ONE batched execution.
     /// Returns the number of jobs executed.
     pub fn flush(&mut self, backend: &dyn LocalFftBackend, dir: Direction) -> usize {
-        let jobs: Vec<TransformJob> = {
-            let (take, keep): (Vec<_>, Vec<_>) =
-                std::mem::take(&mut self.queue).into_iter().partition(|j| j.dir == dir);
-            self.queue = keep;
-            take
-        };
-        if jobs.is_empty() {
+        // Partition in one pass through reusable buffers (no per-flush
+        // vectors, stable job order).
+        self.take_buf.clear();
+        self.keep_buf.clear();
+        for job in self.queue.drain(..) {
+            if job.dir == dir {
+                self.take_buf.push(job);
+            } else {
+                self.keep_buf.push(job);
+            }
+        }
+        std::mem::swap(&mut self.queue, &mut self.keep_buf);
+        if self.take_buf.is_empty() {
             return 0;
         }
-        let nb = jobs.len();
-        let plan = SlabPencilPlan::new(self.shape, nb, Arc::clone(&self.grid))
-            .expect("driver shape/grid mismatch");
+        let nb = self.take_buf.len();
+        let (plan, cache_hit) =
+            self.plan_for(nb).expect("driver shape/grid mismatch");
         // Batched local lengths are nb x the single-band ones, so the
         // per-band job length comes straight off the batched plan.
         let per_band = match dir {
@@ -68,28 +172,33 @@ impl BatchingDriver {
             Direction::Inverse => plan.output_len() / nb,
         };
 
-        // Interleave bands (batch fastest).
-        let mut block = vec![ZERO; nb * per_band];
-        for (b, job) in jobs.iter().enumerate() {
+        // Interleave bands (batch fastest) into the reusable block. No
+        // clear first: the loop below writes every element, so stale
+        // contents never survive and the resize avoids a redundant memset.
+        let mut block = std::mem::take(&mut self.block);
+        block.resize(nb * per_band, ZERO);
+        for (b, job) in self.take_buf.iter().enumerate() {
             assert_eq!(job.data.len(), per_band, "job {b} has wrong local length");
             for (e, v) in job.data.iter().enumerate() {
                 block[b + nb * e] = *v;
             }
         }
-        let (out, trace) = match dir {
-            Direction::Forward => plan.forward(backend, block),
-            Direction::Inverse => plan.inverse(backend, block),
-        };
+        let (out, mut trace) = plan.execute(backend, block, dir);
+        trace.plan_cache_hit = cache_hit;
         self.traces.push(trace);
 
-        // De-interleave.
+        // De-interleave each band back into its own job's vector — the
+        // submitted storage becomes the result storage, so the flush path
+        // mints no per-band vectors.
         let out_per_band = out.len() / nb;
-        for (b, job) in jobs.into_iter().enumerate() {
-            let band: Vec<Complex> =
-                (0..out_per_band).map(|e| out[b + nb * e]).collect();
-            self.completed.push((job.id, band));
+        for (b, mut job) in self.take_buf.drain(..).enumerate() {
+            job.data.clear();
+            job.data.extend((0..out_per_band).map(|e| out[b + nb * e]));
+            self.completed.push((job.id, job.data));
         }
-        self.completed.len()
+        // The batch output becomes the next flush's interleave block.
+        self.block = out;
+        nb
     }
 }
 
@@ -130,6 +239,7 @@ mod tests {
             // One batched alltoall, not three.
             assert_eq!(driver.traces.len(), 1);
             assert_eq!(driver.traces[0].comm_messages(), (p - 1) as u64);
+            assert!(!driver.traces[0].plan_cache_hit, "first flush must plan");
 
             // Each result equals the single-band plan's output.
             let single = SlabPencilPlan::new(shape, 1, Arc::clone(&grid)).unwrap();
@@ -154,6 +264,110 @@ mod tests {
             driver.submit(TransformJob { id: 1, data: vec![ZERO; 64], dir: Direction::Inverse });
             driver.flush(&backend, Direction::Forward);
             assert_eq!(driver.pending(), 1, "inverse job stays queued");
+        });
+    }
+
+    #[test]
+    fn repeated_flushes_hit_the_plan_cache() {
+        let shape = [8usize, 8, 8];
+        let p = 2;
+        run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver = BatchingDriver::new(shape, Arc::clone(&grid));
+            let band = || {
+                let g = phased(512, 9);
+                scatter_cube_x(&g, 1, shape, p, grid.rank())
+            };
+            for round in 0..4 {
+                for i in 0..2u64 {
+                    driver.submit(TransformJob { id: i, data: band(), dir: Direction::Forward });
+                }
+                driver.flush(&backend, Direction::Forward);
+                let tr = driver.traces.last().unwrap();
+                if round == 0 {
+                    assert!(!tr.plan_cache_hit, "round 0 builds the plan");
+                } else {
+                    assert!(tr.plan_cache_hit, "round {round} must reuse the cached plan");
+                    assert_eq!(
+                        tr.alloc_bytes, 0,
+                        "round {round}: cached plan's workspace must be warm"
+                    );
+                }
+                driver.drain_completed();
+            }
+            let (hits, misses) = driver.plan_cache_stats();
+            assert_eq!(misses, 1);
+            assert_eq!(hits, 3);
+        });
+    }
+
+    #[test]
+    fn drain_completed_empties_and_returns_everything() {
+        let shape = [4usize, 4, 4];
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver = BatchingDriver::new(shape, Arc::clone(&grid));
+            for i in 0..3u64 {
+                driver.submit(TransformJob {
+                    id: i,
+                    data: phased(64, i),
+                    dir: Direction::Forward,
+                });
+            }
+            driver.flush(&backend, Direction::Forward);
+            let got = driver.drain_completed();
+            assert_eq!(got.len(), 3);
+            assert!(driver.completed.is_empty(), "drain must leave nothing behind");
+            let ids: Vec<u64> = got.iter().map(|(id, _)| *id).collect();
+            assert_eq!(ids, vec![0, 1, 2]);
+            assert_eq!(driver.drain_traces().len(), 1);
+            assert!(driver.traces.is_empty());
+        });
+    }
+
+    #[test]
+    fn forward_and_inverse_share_one_plan() {
+        let shape = [4usize, 4, 4];
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver = BatchingDriver::new(shape, Arc::clone(&grid));
+            for dir in [Direction::Forward, Direction::Inverse] {
+                for i in 0..2u64 {
+                    driver.submit(TransformJob { id: i, data: phased(64, i), dir });
+                }
+                driver.flush(&backend, dir);
+            }
+            assert_eq!(
+                driver.plan_cache_stats(),
+                (1, 1),
+                "an inverse flush must reuse the forward flush's plan"
+            );
+            assert!(driver.traces[1].plan_cache_hit);
+        });
+    }
+
+    #[test]
+    fn different_batch_sizes_are_distinct_cache_entries() {
+        let shape = [4usize, 4, 4];
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver = BatchingDriver::new(shape, Arc::clone(&grid));
+            for nb in [2usize, 3, 2] {
+                for i in 0..nb as u64 {
+                    driver.submit(TransformJob {
+                        id: i,
+                        data: phased(64, i),
+                        dir: Direction::Forward,
+                    });
+                }
+                driver.flush(&backend, Direction::Forward);
+            }
+            // nb=2 twice (miss + hit), nb=3 once (miss).
+            assert_eq!(driver.plan_cache_stats(), (1, 2));
         });
     }
 }

@@ -49,6 +49,16 @@ impl NonBatchedLoop {
         self.single.set_tuning(tuning);
     }
 
+    /// Return a finished batch-wide output buffer to the loop's slot pool.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        self.ws.lock().unwrap().slots.recycle(buf);
+    }
+
+    /// Rank count of the 1D processing grid the inner plan runs on.
+    pub fn grid_size(&self) -> usize {
+        self.single.grid_size()
+    }
+
     /// Local input length (`nb` x the single-band input).
     pub fn input_len(&self) -> usize {
         self.nb * self.single.input_len()
@@ -94,8 +104,7 @@ impl NonBatchedLoop {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let mut out = std::mem::take(&mut ws.out);
-        ensure(&mut out, self.nb * out_band, &ws.alloc);
+        let mut out = ws.slots.take(self.nb * out_band, &ws.alloc);
         let mut band = std::mem::take(&mut ws.work);
         let mut trace = ExecTrace::default();
         for b in 0..self.nb {
@@ -111,7 +120,7 @@ impl NonBatchedLoop {
             Self::accumulate(&mut trace, tr);
         }
         ws.work = band;
-        ws.out = input; // the consumed input becomes the next output slot
+        ws.slots.recycle(input); // the consumed input's storage joins the pool
         trace.alloc_bytes += ws.allocated();
         (out, trace)
     }

@@ -103,6 +103,22 @@ pub struct FftbOptions {
     pub pad_sphere_to_cube: bool,
     /// Overlap knobs of the windowed exchanges (window size; default 2).
     pub comm: CommTuning,
+    /// Let the tuner pick the exchange window from the cost model instead
+    /// of taking `comm.window` (see [`FftbOptions::auto`]). The tensors
+    /// still pin the decomposition; use [`Fftb::plan_auto`] to free that
+    /// too.
+    pub auto_window: bool,
+}
+
+impl FftbOptions {
+    /// Options with automatic exchange-window selection: the planner prices
+    /// the selected plan's exchanges on
+    /// [`Machine::local_cpu`](crate::model::Machine::local_cpu) across the
+    /// window ladder and keeps the cheapest — deterministic across ranks
+    /// (the model prices worst-rank stage counts, not this rank's).
+    pub fn auto() -> Self {
+        FftbOptions { auto_window: true, ..Default::default() }
+    }
 }
 
 impl Fftb {
@@ -134,8 +150,40 @@ impl Fftb {
         opts: FftbOptions,
     ) -> Result<Fftb> {
         let mut fx = Self::plan_inner(sizes, output, out_dims, input, in_dims, grid, opts)?;
-        fx.set_comm_tuning(opts.comm);
+        let tuning = if opts.auto_window {
+            let m = crate::model::Machine::local_cpu();
+            CommTuning::with_window(crate::tuner::search::auto_window_for(&fx, &m))
+        } else {
+            opts.comm
+        };
+        fx.set_comm_tuning(tuning);
         Ok(fx)
+    }
+
+    /// Fully automatic planning: pick the decomposition (slab-pencil vs
+    /// pencil grid factorizations vs plane-wave staged padding for sphere
+    /// workloads) *and* the exchange window from the tuner's cost model,
+    /// build the plan on a grid of the tuner's choosing over `comm`, and
+    /// serve repeats from the tuner's [`PlanCache`](crate::tuner::PlanCache).
+    ///
+    /// Pass a `backend` to enable the tuner's empirical mode
+    /// (`Tuner::empirical_top_k`: the model's shortlist is executed once
+    /// and the measured winner kept); with `None`, the model's pick is
+    /// trusted outright and `empirical_top_k` has no effect.
+    ///
+    /// Collective over `comm`; every rank must call with identical
+    /// arguments and every rank gets the same choice (see
+    /// [`Tuner::plan_auto`](crate::tuner::Tuner::plan_auto), which this
+    /// forwards to, for the wisdom interplay).
+    pub fn plan_auto(
+        sizes: [usize; 3],
+        nb: usize,
+        sphere: Option<Arc<crate::fftb::sphere::OffsetArray>>,
+        comm: &crate::comm::communicator::Comm,
+        tuner: &mut crate::tuner::Tuner,
+        backend: Option<&dyn LocalFftBackend>,
+    ) -> Result<crate::tuner::TunedPlan> {
+        tuner.plan_auto(sizes, nb, sphere, comm, backend)
     }
 
     fn plan_inner(
@@ -321,6 +369,21 @@ impl Fftb {
             PlanKind::Pencil(p) => p.output_len(),
             PlanKind::PlaneWave(p) => p.output_len(),
             PlanKind::PaddedSphere(p) => p.output_len(),
+        }
+    }
+
+    /// Return a finished buffer to the selected plan's slot pool so later
+    /// executions reuse its storage. This is what keeps *forward-only*
+    /// call patterns (e.g. repeated G→r sphere transforms whose outputs
+    /// the caller consumes) allocation-free: without it the plan must mint
+    /// a fresh output per call.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        match &self.kind {
+            PlanKind::SlabPencil(p) => p.recycle(buf),
+            PlanKind::SlabPencilLoop(p) => p.recycle(buf),
+            PlanKind::Pencil(p) => p.recycle(buf),
+            PlanKind::PlaneWave(p) => p.recycle(buf),
+            PlanKind::PaddedSphere(p) => p.recycle(buf),
         }
     }
 }

@@ -115,6 +115,17 @@ impl PencilPlan {
         self.tuning = tuning;
     }
 
+    /// Return a finished output buffer to the plan's slot pool so repeated
+    /// executions reuse its storage.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        self.ws.lock().unwrap().slots.recycle(buf);
+    }
+
+    /// `(p0, p1)` extents of the 2D processing grid this plan runs on.
+    pub fn grid_dims(&self) -> (usize, usize) {
+        (self.grid.axis_len(0), self.grid.axis_len(1))
+    }
+
     /// Local input length `[nb, nx, lyc0, lzc1]`.
     pub fn input_len(&self) -> usize {
         volume(self.sh1)
@@ -185,7 +196,7 @@ impl PencilPlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, alloc, .. } = ws;
+        let Workspace { send, recv, fft, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
@@ -205,8 +216,9 @@ impl PencilPlan {
                 });
                 Self::exchange(&mut t, "a2a_xy", row, &self.fwd_xy, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_y", || {
-                    ensure(&mut data, volume(sh2), alloc);
-                    merge_dim_from(&*recv, &self.fwd_xy.recv_offs, sh2, 2, p0, &mut data);
+                    let mut mid = slots.take(volume(sh2), alloc);
+                    merge_dim_from(&*recv, &self.fwd_xy.recv_offs, sh2, 2, p0, &mut mid);
+                    slots.recycle(std::mem::replace(&mut data, mid));
                 });
                 t.compute("fft_y", lines(data.len(), self.ny), || {
                     backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
@@ -218,8 +230,9 @@ impl PencilPlan {
                 });
                 Self::exchange(&mut t, "a2a_yz", col, &self.fwd_yz, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_z", || {
-                    ensure(&mut data, volume(sh3), alloc);
-                    merge_dim_from(&*recv, &self.fwd_yz.recv_offs, sh3, 3, p1, &mut data);
+                    let mut out = slots.take(volume(sh3), alloc);
+                    merge_dim_from(&*recv, &self.fwd_yz.recv_offs, sh3, 3, p1, &mut out);
+                    slots.recycle(std::mem::replace(&mut data, out));
                 });
                 t.compute("fft_z", lines(data.len(), self.nz), || {
                     backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
@@ -236,8 +249,9 @@ impl PencilPlan {
                 });
                 Self::exchange(&mut t, "a2a_zy", col, &self.inv_zy, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_y", || {
-                    ensure(&mut data, volume(sh2), alloc);
-                    merge_dim_from(&*recv, &self.inv_zy.recv_offs, sh2, 2, p1, &mut data);
+                    let mut mid = slots.take(volume(sh2), alloc);
+                    merge_dim_from(&*recv, &self.inv_zy.recv_offs, sh2, 2, p1, &mut mid);
+                    slots.recycle(std::mem::replace(&mut data, mid));
                 });
                 t.compute("ifft_y", lines(data.len(), self.ny), || {
                     backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
@@ -248,8 +262,9 @@ impl PencilPlan {
                 });
                 Self::exchange(&mut t, "a2a_yx", row, &self.inv_yx, &*send, &mut *recv, alloc, self.tuning);
                 t.reshape("unpack_x", || {
-                    ensure(&mut data, volume(sh1), alloc);
-                    merge_dim_from(&*recv, &self.inv_yx.recv_offs, sh1, 1, p0, &mut data);
+                    let mut out = slots.take(volume(sh1), alloc);
+                    merge_dim_from(&*recv, &self.inv_yx.recv_offs, sh1, 1, p0, &mut out);
+                    slots.recycle(std::mem::replace(&mut data, out));
                 });
                 t.compute("ifft_x", lines(data.len(), self.nx), || {
                     backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);

@@ -144,7 +144,20 @@ impl PlaneWavePlan {
         self.tuning = tuning;
     }
 
+    /// Return a finished output buffer (typically a dense cube the caller
+    /// is done with) to the plan's slot pool — this is what makes
+    /// *forward-only* sphere transforms allocation-free in steady state:
+    /// without it the plan must mint a fresh output cube per call.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        self.ws.lock().unwrap().slots.recycle(buf);
+    }
+
     fn p(&self) -> usize {
+        self.grid.size()
+    }
+
+    /// Rank count of the 1D processing grid this plan runs on.
+    pub fn grid_size(&self) -> usize {
         self.grid.size()
     }
 
@@ -226,9 +239,9 @@ impl PlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, work, panel, out, alloc } = ws;
+        let Workspace { send, recv, fft, work, panel, slots, alloc } = ws;
         let alloc = &*alloc;
-        let mut cube = std::mem::take(out);
+        let mut cube = Vec::new();
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
@@ -281,9 +294,10 @@ impl PlaneWavePlan {
             ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
         });
 
-        // 3. Land the columns in a zeroed slab; FFT y over the disc x-extent.
+        // 3. Land the columns in a zeroed slab (a pooled output slot); FFT y
+        //    over the disc x-extent.
         t.reshape("unpack_cube", || {
-            ensure_zeroed(&mut cube, nb * nx * ny * lzc, alloc);
+            cube = slots.take_zeroed(nb * nx * ny * lzc, alloc);
             for (q, cols_q) in self.cols_by_rank.iter().enumerate() {
                 let block = &recv[self.fwd.recv_offs[q]..self.fwd.recv_offs[q + 1]];
                 let mut src = 0;
@@ -317,8 +331,8 @@ impl PlaneWavePlan {
                 alloc,
             );
         });
-        // The consumed input becomes the next inverse call's output slot.
-        *out = input;
+        // The consumed input's storage joins the pool for later calls.
+        slots.recycle(input);
         trace.alloc_bytes = alloc.get();
         (cube, trace)
     }
@@ -339,9 +353,9 @@ impl PlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, work, panel, out, alloc } = ws;
+        let Workspace { send, recv, fft, work, panel, slots, alloc } = ws;
         let alloc = &*alloc;
-        let mut packed = std::mem::take(out);
+        let mut packed = Vec::new();
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
@@ -425,10 +439,10 @@ impl PlaneWavePlan {
             );
         });
         t.reshape("gather_z", || {
-            ensure(&mut packed, nb * self.local_off.total(), alloc);
+            packed = slots.take(nb * self.local_off.total(), alloc);
             self.local_off.gather_z_into(&*work, nb, &mut packed);
         });
-        *out = cube;
+        slots.recycle(cube);
         trace.alloc_bytes = alloc.get();
         (packed, trace)
     }
@@ -462,6 +476,28 @@ impl PaddedSpherePlan {
         self.slab.set_tuning(tuning);
     }
 
+    /// Return a finished output buffer for reuse. Routed by the buffer's
+    /// *length* (outputs come back with their content length intact):
+    /// buffers of the dense output length — forward outputs, and inverse
+    /// outputs of the degenerate full-cube sphere — circulate through the
+    /// inner slab plan's pool (where the truncation stage also draws in
+    /// that degenerate case); ordinary packed inverse outputs refill the
+    /// wrapper's own pool, which serves the truncation stage. Capacity
+    /// would misroute here: on uneven splits a packed buffer can be
+    /// *larger* than the local cube.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        if buf.len() == self.output_len() {
+            self.slab.recycle(buf);
+        } else {
+            self.ws.lock().unwrap().slots.recycle(buf);
+        }
+    }
+
+    /// Rank count of the 1D processing grid the inner dense plan runs on.
+    pub fn grid_size(&self) -> usize {
+        self.slab.grid_size()
+    }
+
     /// Packed local input length (`nb` x locally-owned sphere points).
     pub fn input_len(&self) -> usize {
         self.nb * self.local_off.total()
@@ -487,11 +523,17 @@ impl PaddedSpherePlan {
             let mut guard = self.ws.lock().unwrap();
             let ws = &mut *guard;
             ws.begin();
-            let mut cube = std::mem::take(&mut ws.out);
+            let mut cube = Vec::new();
             let mut t = StageTimer::new(&mut trace);
-            // Pad up front: local dense [nb, lxc, ny, nz].
+            // Pad up front: local dense [nb, lxc, ny, nz]. The cube comes
+            // from the *inner slab plan's* pool — that is where the
+            // consumed cube and caller-recycled outputs land, so
+            // cube-sized storage circulates through one pool.
             t.reshape("pad_full", || {
-                ensure_zeroed(&mut cube, nb * lxc * ny * nz, &ws.alloc);
+                let (mut c, grew) = self.slab.take_pooled(nb * lxc * ny * nz);
+                ws.alloc.set(ws.alloc.get() + grew);
+                c.fill(crate::fft::complex::ZERO);
+                cube = c;
                 for y in 0..ny {
                     for lx in 0..lxc {
                         let mut e = self.local_off.col_offset(lx, y);
@@ -506,7 +548,17 @@ impl PaddedSpherePlan {
                     }
                 }
             });
-            ws.out = input;
+            // Consumed-input routing mirrors `recycle`: a degenerate
+            // full-cube sphere's packed input is cube-length and belongs
+            // to the slab pool (where pad_full and the degenerate
+            // trunc_full draw); ordinary packed inputs refill the
+            // wrapper's pool. (`self.recycle` would re-lock `ws` — route
+            // inline.)
+            if input.len() == self.slab.output_len() {
+                self.slab.recycle(input);
+            } else {
+                ws.slots.recycle(input);
+            }
             trace.alloc_bytes = ws.allocated();
             cube
         };
@@ -530,10 +582,20 @@ impl PaddedSpherePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let mut packed = std::mem::take(&mut ws.out);
+        let mut packed = Vec::new();
         let mut t = StageTimer::new(&mut trace);
         t.reshape("trunc_full", || {
-            ensure(&mut packed, nb * self.local_off.total(), &ws.alloc);
+            let packed_len = nb * self.local_off.total();
+            // Degenerate full-cube spheres: packed buffers are cube-length
+            // and live in the slab pool (see `recycle`); otherwise the
+            // wrapper's own pool serves the truncation stage.
+            packed = if packed_len == self.output_len() {
+                let (buf, grew) = self.slab.take_pooled(packed_len);
+                ws.alloc.set(ws.alloc.get() + grew);
+                buf
+            } else {
+                ws.slots.take(packed_len, &ws.alloc)
+            };
             for y in 0..ny {
                 for lx in 0..lxc {
                     let mut e = self.local_off.col_offset(lx, y);
@@ -548,7 +610,8 @@ impl PaddedSpherePlan {
                 }
             }
         });
-        ws.out = back;
+        // Cube-sized storage belongs to the inner slab plan's pool.
+        self.slab.recycle(back);
         trace.alloc_bytes += ws.allocated();
         (packed, trace)
     }

@@ -101,7 +101,30 @@ impl SlabPencilPlan {
         self.tuning = tuning;
     }
 
+    /// Return a finished output buffer to the plan's slot pool so repeated
+    /// executions reuse its storage (keeps forward-only call patterns
+    /// allocation-free).
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        self.ws.lock().unwrap().slots.recycle(buf);
+    }
+
+    /// Check out a buffer from this plan's slot pool. Crate-internal: the
+    /// padded-sphere wrapper stages its full cube here so that cube-sized
+    /// storage circulates through *one* pool (the consumed cube and
+    /// caller-recycled outputs land in this plan's pool too). Returns the
+    /// buffer and the bytes of fresh allocation the take caused.
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        let ctr = std::cell::Cell::new(0u64);
+        let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+        (buf, ctr.get())
+    }
+
     fn p(&self) -> usize {
+        self.grid.size()
+    }
+
+    /// Rank count of the 1D processing grid this plan runs on.
+    pub fn grid_size(&self) -> usize {
         self.grid.size()
     }
 
@@ -146,7 +169,7 @@ impl SlabPencilPlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, alloc, .. } = ws;
+        let Workspace { send, recv, fft, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let (sh_in, sh_out) = (self.sh_in, self.sh_out);
         let mut trace = ExecTrace::default();
@@ -184,11 +207,12 @@ impl SlabPencilPlan {
                     ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
                 });
                 // Receiving block from rank q: shape [nb, lxc_q, ny, lzc_me];
-                // merge along dim 1 (x becomes dense) into the recycled
-                // caller vector.
+                // merge along dim 1 (x becomes dense) into a pooled output
+                // slot; the consumed caller vector joins the pool.
                 t.reshape("unpack_x", || {
-                    ensure(&mut data, volume(sh_out), alloc);
-                    merge_dim_from(&*recv, &self.fwd.recv_offs, sh_out, 1, p, &mut data);
+                    let mut out = slots.take(volume(sh_out), alloc);
+                    merge_dim_from(&*recv, &self.fwd.recv_offs, sh_out, 1, p, &mut out);
+                    slots.recycle(std::mem::replace(&mut data, out));
                 });
                 // 3. Local FFT along dense x.
                 t.compute("fft_x", lines(data.len(), self.nx), || {
@@ -217,8 +241,9 @@ impl SlabPencilPlan {
                     ((), self.inv.bytes_remote(), self.inv.msgs(), c)
                 });
                 t.reshape("unpack_z", || {
-                    ensure(&mut data, volume(sh_in), alloc);
-                    merge_dim_from(&*recv, &self.inv.recv_offs, sh_in, 3, p, &mut data);
+                    let mut out = slots.take(volume(sh_in), alloc);
+                    merge_dim_from(&*recv, &self.inv.recv_offs, sh_in, 3, p, &mut out);
+                    slots.recycle(std::mem::replace(&mut data, out));
                 });
                 t.compute(
                     "ifft_yz",

@@ -63,6 +63,11 @@ pub struct ExecTrace {
     /// every comm stage (0 when the serial discipline — or `window == 1` —
     /// ran; see [`A2aCounters::overlap_rounds`]).
     pub overlap_rounds: u64,
+    /// Whether the plan that produced this execution was served from a
+    /// [`PlanCache`](crate::tuner::cache::PlanCache) rather than built
+    /// fresh. Set by the caching layer (e.g. the batching driver), not by
+    /// the plans themselves; `false` for directly-executed plans.
+    pub plan_cache_hit: bool,
 }
 
 impl ExecTrace {
@@ -128,6 +133,8 @@ impl ExecTrace {
         out.alloc_bytes = traces.iter().map(|t| t.alloc_bytes).max().unwrap();
         out.wait_ns = traces.iter().map(|t| t.wait_ns).max().unwrap();
         out.overlap_rounds = traces.iter().map(|t| t.overlap_rounds).max().unwrap();
+        // A cache hit only counts if *every* rank was served from cache.
+        out.plan_cache_hit = traces.iter().all(|t| t.plan_cache_hit);
         out
     }
 

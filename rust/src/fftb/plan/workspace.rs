@@ -4,17 +4,101 @@
 //! Every plan owns one `Workspace` behind a `Mutex` and routes all stage
 //! scratch through it: flat alltoall send/recv staging, the transpose
 //! buffer of `backend_fft_dim_ws`, the plane-wave panel buffer, and the
-//! result slot that recycles the caller's input vector. Buffers are sized
-//! with [`ensure`]/[`ensure_zeroed`], which record any *capacity growth*
+//! size-classed [`SlotPool`] of output buffers. Buffers are sized with
+//! [`ensure`]/[`ensure_zeroed`], which record any *capacity growth*
 //! into the workspace's `alloc` cell — the number the plans publish as
 //! [`ExecTrace::alloc_bytes`](super::stages::ExecTrace). After the first
 //! execution every buffer has reached its high-water mark, so steady-state
 //! executions report zero: the plan-once / execute-many property the
 //! paper's SCF-loop workload depends on.
+//!
+//! The slot pool closes the two residual allocation corners of the single
+//! recycled result slot this module used to carry: non-cube shapes with
+//! unequal local input/output extents no longer regrow the caller's vector
+//! on every direction change (each size class keeps its own buffers), and
+//! forward-only sphere transforms become allocation-free once the caller
+//! returns finished cubes through `Fftb::recycle` (the pool is where they
+//! land).
 
 use std::cell::Cell;
 
 use crate::fft::complex::{Complex, ZERO};
+
+/// Free output buffers retained per size class; recycles beyond this are
+/// dropped so a burst of oversized outputs cannot pin memory forever.
+const MAX_SLOTS_PER_CLASS: usize = 4;
+/// Smallest capacity class, in elements (everything below rounds up).
+const MIN_CLASS_ELEMS: usize = 16;
+
+/// Size-classed pool of recycled output buffers — the plan-side counterpart
+/// of the comm layer's [`BufferArena`](crate::comm::arena::BufferArena).
+///
+/// Plans draw every vector they *return* from here ([`SlotPool::take`]) and
+/// feed every vector they *consume* back in ([`SlotPool::recycle`]), so
+/// buffers circulate between input and output roles across calls and
+/// direction changes. Classes are power-of-two capacities: a request is
+/// served by its ceiling class or any larger one, allocating (and counting
+/// into the workspace's `alloc` cell) only when every fitting class is
+/// empty.
+#[derive(Default)]
+pub struct SlotPool {
+    /// Free buffers, kept sorted by capacity (ascending) for best-fit pops.
+    free: Vec<Vec<Complex>>,
+}
+
+impl SlotPool {
+    /// Ceiling power-of-two capacity class serving a request of `len`.
+    fn class_for(len: usize) -> usize {
+        len.max(MIN_CLASS_ELEMS).next_power_of_two()
+    }
+
+    /// Check out a buffer resized to exactly `len` elements, preferring the
+    /// smallest free buffer whose capacity already fits (contents are
+    /// unspecified). Allocation — a fresh buffer or growth of a recycled
+    /// one — is recorded into `ctr`.
+    pub fn take(&mut self, len: usize, ctr: &Cell<u64>) -> Vec<Complex> {
+        let pos = self.free.iter().position(|b| b.capacity() >= len);
+        let mut buf = match pos {
+            Some(i) => self.free.remove(i),
+            None => Vec::new(),
+        };
+        ensure(&mut buf, len, ctr);
+        buf
+    }
+
+    /// Like [`SlotPool::take`] but the returned buffer is zero-filled.
+    pub fn take_zeroed(&mut self, len: usize, ctr: &Cell<u64>) -> Vec<Complex> {
+        let mut buf = self.take(len, ctr);
+        buf.fill(ZERO);
+        buf
+    }
+
+    /// Return a finished buffer's storage to the pool. Buffers beyond
+    /// `MAX_SLOTS_PER_CLASS` in the same capacity class are dropped.
+    pub fn recycle(&mut self, buf: Vec<Complex>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let class = Self::class_for(buf.capacity());
+        let in_class =
+            self.free.iter().filter(|b| Self::class_for(b.capacity()) == class).count();
+        if in_class >= MAX_SLOTS_PER_CLASS {
+            return;
+        }
+        let at = self.free.partition_point(|b| b.capacity() < buf.capacity());
+        self.free.insert(at, buf);
+    }
+
+    /// Number of free buffers currently pooled (test/diagnostic hook).
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Whether the pool currently holds no free buffers.
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+}
 
 /// Named scratch buffers of one plan. Fields are public so the plans can
 /// split-borrow them independently inside one execution (edition-2021
@@ -31,10 +115,10 @@ pub struct Workspace {
     pub work: Vec<Complex>,
     /// Panel buffer of the plane-wave staged-y pass.
     pub panel: Vec<Complex>,
-    /// Result slot: holds a recycled vector the next execution returns;
-    /// refilled with the caller's consumed input (the swap that makes
-    /// alternating forward/inverse round trips buffer-neutral).
-    pub out: Vec<Complex>,
+    /// Size-classed pool of output buffers: every vector a plan returns is
+    /// taken from here and every vector it consumes is recycled into it,
+    /// so buffers circulate across calls and direction changes.
+    pub slots: SlotPool,
     /// Bytes of capacity newly acquired since [`Workspace::begin`].
     pub alloc: Cell<u64>,
 }
@@ -115,5 +199,65 @@ mod tests {
         ws.alloc.set(100);
         ws.begin();
         assert_eq!(ws.allocated(), 0);
+    }
+
+    #[test]
+    fn slot_pool_reuses_recycled_capacity() {
+        let ctr = Cell::new(0u64);
+        let mut pool = SlotPool::default();
+        let a = pool.take(100, &ctr);
+        let first = ctr.get();
+        assert!(first > 0, "fresh take must allocate");
+        pool.recycle(a);
+        let b = pool.take(90, &ctr);
+        assert_eq!(b.len(), 90);
+        assert_eq!(ctr.get(), first, "recycled capacity serves smaller takes for free");
+    }
+
+    #[test]
+    fn slot_pool_best_fit_prefers_smallest_fitting() {
+        let ctr = Cell::new(0u64);
+        let mut pool = SlotPool::default();
+        let small = pool.take(64, &ctr);
+        let big = pool.take(4096, &ctr);
+        let (small_cap, big_cap) = (small.capacity(), big.capacity());
+        pool.recycle(big);
+        pool.recycle(small);
+        let got = pool.take(32, &ctr);
+        assert!(got.capacity() <= small_cap, "best fit must not hand out the big slot");
+        pool.recycle(got);
+        let got = pool.take(2048, &ctr);
+        assert!(got.capacity() >= 2048 && got.capacity() <= big_cap);
+    }
+
+    #[test]
+    fn slot_pool_two_classes_alternate_freely() {
+        // The non-cube corner: alternating takes of two different sizes must
+        // stop allocating once each class holds one buffer.
+        let ctr = Cell::new(0u64);
+        let mut pool = SlotPool::default();
+        let a = pool.take(72, &ctr);
+        let b = pool.take(600, &ctr);
+        pool.recycle(a);
+        pool.recycle(b);
+        let warm = ctr.get();
+        for _ in 0..5 {
+            let a = pool.take(72, &ctr);
+            let b = pool.take(600, &ctr);
+            pool.recycle(b);
+            pool.recycle(a);
+        }
+        assert_eq!(ctr.get(), warm, "steady-state alternation must not allocate");
+    }
+
+    #[test]
+    fn slot_pool_bounds_retained_buffers() {
+        let ctr = Cell::new(0u64);
+        let mut pool = SlotPool::default();
+        let bufs: Vec<_> = (0..10).map(|_| pool.take(256, &ctr)).collect();
+        for b in bufs {
+            pool.recycle(b);
+        }
+        assert!(pool.len() <= MAX_SLOTS_PER_CLASS, "pool retained {} buffers", pool.len());
     }
 }

@@ -40,6 +40,8 @@ pub struct OffsetArray {
     col_ptr: Vec<u32>,
     runs: Vec<Run>,
     col_elem: Vec<u64>,
+    /// Structural fingerprint, computed once at construction.
+    print: u64,
 }
 
 impl OffsetArray {
@@ -65,12 +67,31 @@ impl OffsetArray {
             col_ptr.push(runs.len() as u32);
             col_elem.push(elems);
         }
-        OffsetArray { nx, ny, nz, col_ptr, runs, col_elem }
+        // Structural fingerprint over extents, column pointers and runs,
+        // computed once here so key construction is O(1) per request.
+        let mut print =
+            crate::util::fnv::fnv1a_words([nx as u64, ny as u64, nz as u64]);
+        for &ptr in &col_ptr {
+            print = crate::util::fnv::fnv1a_word(print, ptr as u64);
+        }
+        for &(z0, len) in &runs {
+            print = crate::util::fnv::fnv1a_word(print, ((z0 as u64) << 32) | len as u64);
+        }
+        OffsetArray { nx, ny, nz, col_ptr, runs, col_elem, print }
     }
 
     /// Total number of retained points.
     pub fn total(&self) -> usize {
         *self.col_elem.last().unwrap() as usize
+    }
+
+    /// Order-sensitive FNV-1a fingerprint of the full run structure (grid
+    /// extents, column pointers, z-runs). Two offset arrays describing
+    /// different spheres practically never collide, even when they retain
+    /// the same number of points — the tuner keys its plan cache and
+    /// wisdom entries with this.
+    pub fn fingerprint(&self) -> u64 {
+        self.print
     }
 
     /// z-runs of column `(x, y)`.

@@ -18,4 +18,5 @@ pub mod fft;
 pub mod fftb;
 pub mod model;
 pub mod runtime;
+pub mod tuner;
 pub mod util;

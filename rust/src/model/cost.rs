@@ -155,6 +155,23 @@ pub fn planewave(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
     }
 }
 
+/// Pad-to-cube baseline for sphere inputs (paper Fig. 2): scatter the
+/// packed sphere into the full local cube slice, then run the dense batched
+/// slab-pencil transform on everything, padding included.
+pub fn padded_sphere(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
+    let shape = [off.nx, off.ny, off.nz];
+    let mut c = slab_pencil(shape, nb, p, true);
+    // The up-front pad touches the packed points (read) and the full local
+    // cube (zero + write) on the worst rank.
+    let local_off = off.restrict_x_cyclic(p, 0);
+    let lxc = cyclic::local_count(off.nx, p, 0);
+    let pad_touched = (nb as f64 * local_off.total() as f64
+        + 2.0 * (nb * lxc * off.ny * off.nz) as f64)
+        * BYTES_PER_ELEM;
+    c.stages.insert(0, StageCost::compute("pad_full", 0.0, pad_touched));
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +216,22 @@ mod tests {
         let dense = slab_pencil([n, n, n], nb, p, true);
         assert!(pw.total_a2a_bytes() < 0.4 * dense.total_a2a_bytes());
         assert!(pw.total_flops() < 0.7 * dense.total_flops());
+    }
+
+    #[test]
+    fn padded_sphere_costs_more_than_planewave() {
+        let n = 32;
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = spec.offsets();
+        let (nb, p) = (4usize, 4usize);
+        let padded = padded_sphere(&off, nb, p);
+        let pw = planewave(&off, nb, p);
+        assert!(padded.total_a2a_bytes() > pw.total_a2a_bytes());
+        assert!(padded.total_flops() > pw.total_flops());
+        // Same wire volume as the dense cube plan, plus the pad stage.
+        let dense = slab_pencil([n, n, n], nb, p, true);
+        assert_eq!(padded.total_a2a_bytes(), dense.total_a2a_bytes());
+        assert_eq!(padded.stages.len(), dense.stages.len() + 1);
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod scaling;
 
 pub use cost::{PlanCost, StageCost};
 pub use machine::Machine;
-pub use scaling::{fig9_row, fold_ranks, grid_2d, project, Variant, Workload};
+pub use scaling::{fig9_row, fold_ranks, grid_2d, price_stages, project, Variant, Workload};

@@ -80,20 +80,44 @@ pub fn grid_2d(p: usize) -> (usize, usize) {
     (p0, p / p0)
 }
 
+/// Price a stage table on `m`: compute stages through the roofline, comm
+/// stages through the windowed alltoall model, non-batched rounds
+/// serialized. `window == 1` is the serial pricing the Fig. 9 projections
+/// use; the tuner's candidate search prices its window ladder through the
+/// same walk, so the two layers can never diverge.
+pub fn price_stages(cost: &PlanCost, m: &Machine, window: usize) -> f64 {
+    let mut t = 0.0;
+    let mut comm_idx = 0;
+    for s in &cost.stages {
+        // Comm stages are identified by `rounds > 0` (StageCost::comm sets
+        // it >= 1, compute stages 0) — NOT by nonzero bytes: a degenerate
+        // single-rank exchange (e.g. the first alltoall of a pencil 1xN
+        // grid) carries zero bytes but must still consume its a2a_ranks
+        // slot, or every later exchange is priced on the wrong rank count.
+        if s.rounds > 0 {
+            let pc = cost.a2a_ranks[comm_idx];
+            comm_idx += 1;
+            let per_round = s.a2a_bytes / s.rounds as f64;
+            t += s.rounds as f64 * m.alltoall_time_windowed(pc, per_round, window);
+        } else {
+            t += m.compute_time(s.flops, s.touched_bytes);
+        }
+    }
+    t
+}
+
 /// Projected execution time (seconds) of one batched transform.
 pub fn project(variant: Variant, w: &Workload, p: usize, m: &Machine) -> f64 {
     let n = w.shape[0];
-    let (cost, comm_p): (PlanCost, Vec<usize>) = match variant {
+    let cost: PlanCost = match variant {
         Variant::Slab1dBatched | Variant::Slab1dNonBatched | Variant::PlaneWave => {
             let (px, pg) = fold_ranks(p, n, w.nb);
             let nb_group = (w.nb + pg - 1) / pg;
-            let c = match variant {
+            match variant {
                 Variant::PlaneWave => cost::planewave(w.offsets, nb_group, px),
                 Variant::Slab1dBatched => cost::slab_pencil(w.shape, nb_group, px, true),
                 _ => cost::slab_pencil(w.shape, nb_group, px, false),
-            };
-            let ranks = c.a2a_ranks.clone();
-            (c, ranks)
+            }
         }
         Variant::Pencil2dBatched | Variant::Pencil2dNonBatched => {
             // 2D grids fold the excess into the second axis up to ny*nz use;
@@ -102,25 +126,10 @@ pub fn project(variant: Variant, w: &Workload, p: usize, m: &Machine) -> f64 {
             let pg = (p / (p0 * p1)).max(1).min(w.nb.max(1));
             let nb_group = (w.nb + pg - 1) / pg;
             let batched = variant == Variant::Pencil2dBatched;
-            let c = cost::pencil(w.shape, nb_group, p0, p1, batched);
-            let ranks = c.a2a_ranks.clone();
-            (c, ranks)
+            cost::pencil(w.shape, nb_group, p0, p1, batched)
         }
     };
-
-    let mut t = 0.0;
-    let mut comm_idx = 0;
-    for s in &cost.stages {
-        if s.a2a_bytes > 0.0 {
-            let pc = comm_p[comm_idx];
-            comm_idx += 1;
-            let per_round = s.a2a_bytes / s.rounds.max(1) as f64;
-            t += s.rounds.max(1) as f64 * m.alltoall_time(pc, per_round);
-        } else {
-            t += m.compute_time(s.flops, s.touched_bytes);
-        }
-    }
-    t
+    price_stages(&cost, m, 1)
 }
 
 /// One Fig. 9 row: times for all five variants at one GPU count.
@@ -141,6 +150,26 @@ mod tests {
         // Fig. 9: 256^3 cube, batch 256, sphere diameter 128.
         let n = 256usize;
         (SphereSpec::new([n, n, n], 64.0, SphereKind::Centered), [n, n, n], 256)
+    }
+
+    #[test]
+    fn degenerate_pencil_axis_does_not_desync_pricing() {
+        // pencil 1xN: the first exchange is a single-rank no-op (zero
+        // bytes) but must still consume its a2a_ranks slot, so the second
+        // (real) exchange is priced over N ranks — not over 1, which would
+        // make the whole decomposition look communication-free.
+        let m = Machine::perlmutter_a100();
+        let p = 8usize;
+        let one_by_p = cost::pencil([32, 32, 32], 4, 1, p, true);
+        let t = price_stages(&one_by_p, &m, 1);
+        // Lower bound: the priced time must at least cover the second
+        // exchange's bytes on the wire.
+        let real_a2a = &one_by_p.stages[3];
+        assert!(real_a2a.a2a_bytes > 0.0, "second exchange moves real bytes");
+        assert!(
+            t > real_a2a.a2a_bytes * m.beta,
+            "pricing must include the 1xN grid's real exchange"
+        );
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! The plan cache: plan-once / execute-many, extended to the layer that
+//! *requests* plans.
+//!
+//! Individual plans already amortize their own setup (schedules, workspaces)
+//! across executions, but a coordinator that re-plans per request — the
+//! `BatchingDriver::flush` pattern — pays the planning cost and a cold
+//! workspace every time. A [`PlanCache`] memoizes constructed [`Fftb`]
+//! objects behind a [`PlanKey`], so repeated requests with the same shape,
+//! distribution signature, plan kind, batch count, direction and exchange
+//! window return the *same* plan object — schedules, warmed workspaces,
+//! slot pools and all. `ExecTrace::plan_cache_hit` reports whether an
+//! execution's plan came from here.
+//!
+//! The cache is per-rank state (each rank thread owns its driver); SPMD
+//! correctness follows from all ranks issuing the same request sequence,
+//! the usual driver contract.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::fftb::error::Result;
+use crate::fftb::plan::Fftb;
+
+/// Everything that distinguishes one cached plan from another.
+///
+/// Mirrors the planner inputs: the communicator the plan's grid was built
+/// over ([`Comm::identity`](crate::comm::communicator::Comm::identity) —
+/// a plan is bound to its mailboxes, so two same-sized communicators must
+/// never share one), global shape, a canonical distribution signature
+/// string (e.g. `"x{0} y z -> X Y Z{0}"` or a driver-chosen tag), the
+/// plan-kind label, batch count, direction (`None` when one plan serves
+/// both directions), and the exchange window it was tuned with. The
+/// string fields are `Cow` so fixed-key callers (the batching driver's
+/// per-flush lookup) build keys without heap allocation.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PlanKey {
+    /// Identity of the communication domain the plan executes over.
+    pub comm_id: u64,
+    /// Global transform sizes `[nx, ny, nz]`.
+    pub sizes: [usize; 3],
+    /// Canonical distribution signature of the request.
+    pub signature: Cow<'static, str>,
+    /// Plan-kind label (e.g. `"slab-pencil"`, `"pencil:2x4"`).
+    pub kind: Cow<'static, str>,
+    /// Batch count.
+    pub nb: usize,
+    /// Direction discriminant: `None` = direction-agnostic, `Some(0)` =
+    /// forward, `Some(1)` = inverse.
+    pub dir: Option<u8>,
+    /// Exchange window the plan's `CommTuning` carries.
+    pub window: usize,
+}
+
+/// Memoized `Fftb` plans keyed by [`PlanKey`], with hit/miss accounting.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: BTreeMap<PlanKey, Arc<Fftb>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    /// Create an empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the plan for `key`, building it with `build` on a miss.
+    /// Returns the shared plan handle and whether it was a cache hit.
+    /// A failing `build` is not cached; the error propagates.
+    pub fn get_or_insert(
+        &mut self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<Fftb>,
+    ) -> Result<(Arc<Fftb>, bool)> {
+        if let Some(plan) = self.plans.get(&key) {
+            self.hits += 1;
+            return Ok((Arc::clone(plan), true));
+        }
+        let plan = Arc::new(build()?);
+        self.misses += 1;
+        self.plans.insert(key, Arc::clone(&plan));
+        Ok((plan, false))
+    }
+
+    /// Install an already-built plan under `key` (the empirical tuning path
+    /// measures candidates before caching the winner). Replaces any
+    /// previous resident.
+    pub fn insert(&mut self, key: PlanKey, plan: Arc<Fftb>) {
+        self.plans.insert(key, plan);
+    }
+
+    /// Look up a plan without building on miss.
+    pub fn get(&mut self, key: &PlanKey) -> Option<Arc<Fftb>> {
+        match self.plans.get(key) {
+            Some(p) => {
+                self.hits += 1;
+                Some(Arc::clone(p))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Number of distinct plans currently cached.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Whether the cache holds no plans.
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// `(hits, misses)` counters since construction (or the last clear).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Drop every cached plan and reset the counters.
+    pub fn clear(&mut self) {
+        self.plans.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fftb::grid::ProcGrid;
+    use crate::fftb::plan::{PlanKind, SlabPencilPlan};
+
+    fn key(nb: usize, dir: Option<u8>, window: usize) -> PlanKey {
+        PlanKey {
+            comm_id: 7,
+            sizes: [8, 8, 8],
+            signature: "slab".into(),
+            kind: "slab-pencil".into(),
+            nb,
+            dir,
+            window,
+        }
+    }
+
+    fn build_slab(nb: usize, grid: &std::sync::Arc<ProcGrid>) -> Result<Fftb> {
+        Ok(Fftb {
+            kind: PlanKind::SlabPencil(SlabPencilPlan::new([8, 8, 8], nb, Arc::clone(grid))?),
+            sizes: [8, 8, 8],
+            nb,
+        })
+    }
+
+    #[test]
+    fn hit_returns_same_plan_object() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let mut cache = PlanCache::new();
+            let (a, hit_a) = cache.get_or_insert(key(2, None, 2), || build_slab(2, &grid)).unwrap();
+            let (b, hit_b) = cache.get_or_insert(key(2, None, 2), || build_slab(2, &grid)).unwrap();
+            assert!(!hit_a, "first request must miss");
+            assert!(hit_b, "second request must hit");
+            assert!(Arc::ptr_eq(&a, &b), "hit must return the same plan");
+            assert_eq!(cache.stats(), (1, 1));
+            assert_eq!(cache.len(), 1);
+        });
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let mut cache = PlanCache::new();
+            cache.get_or_insert(key(2, None, 2), || build_slab(2, &grid)).unwrap();
+            let (_, hit) = cache.get_or_insert(key(3, None, 2), || build_slab(3, &grid)).unwrap();
+            assert!(!hit, "different nb is a different plan");
+            let (_, hit) = cache.get_or_insert(key(2, Some(0), 2), || build_slab(2, &grid)).unwrap();
+            assert!(!hit, "different direction is a different plan");
+            let (_, hit) = cache.get_or_insert(key(2, None, 4), || build_slab(2, &grid)).unwrap();
+            assert!(!hit, "different window is a different plan");
+            let other_comm = PlanKey { comm_id: 8, ..key(2, None, 2) };
+            let (_, hit) = cache.get_or_insert(other_comm, || build_slab(2, &grid)).unwrap();
+            assert!(!hit, "a different communicator is a different plan");
+            assert_eq!(cache.len(), 5);
+        });
+    }
+
+    #[test]
+    fn failed_build_is_not_cached() {
+        let mut cache = PlanCache::new();
+        let e = cache.get_or_insert(key(1, None, 2), || {
+            Err(crate::fftb::error::FftbError::Unsupported("nope".into()))
+        });
+        assert!(e.is_err());
+        assert!(cache.is_empty(), "errors must not be memoized");
+    }
+}

@@ -1,0 +1,215 @@
+//! Machine calibration: refine the cost model's constants from timed
+//! micro-runs on the actual host.
+//!
+//! [`Machine::local_cpu`] ships plausible defaults for "a modern server
+//! core", but the candidate ranking is only as good as the constants it
+//! prices with. [`calibrate_local`] measures the four model constants with
+//! small probes:
+//!
+//! * `fft_flops_per_sec` — batched power-of-two line FFTs through the live
+//!   [`LocalFftBackend`] (the same kernels the plans run),
+//! * `mem_bw` — a pack-shaped buffer copy (read + write streams),
+//! * `alpha` / `beta` — a two-rank flat exchange through the existing
+//!   nonblocking engine at a small and a large message size; the latency
+//!   is the small-message time, the per-byte rate comes from the delta.
+//!
+//! Calibration spawns its own micro-world, so call it **before** entering
+//! SPMD execution and share the resulting [`Machine`] with every rank —
+//! identical constants are what make the ranking deterministic across
+//! ranks. Inside an SPMD region, use [`measure_candidates`] (the tuner's
+//! *empirical* mode): it executes already-built candidate plans once per
+//! rank, reduces each timing to the cross-rank critical path, and every
+//! rank deterministically keeps the measured winner.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
+use crate::comm::collectives::allreduce_max_f64;
+use crate::comm::communicator::{run_world, Comm};
+use crate::fft::complex::{Complex, ZERO};
+use crate::fft::dft::Direction;
+use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::plan::Fftb;
+use crate::model::machine::Machine;
+
+/// Measured model constants, applied to a base [`Machine`] with
+/// [`Calibration::apply`] and persisted through the wisdom file.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Calibration {
+    /// Effective local FFT throughput, complex-FLOP/s.
+    pub fft_flops_per_sec: f64,
+    /// Effective pack/unpack memory bandwidth, B/s.
+    pub mem_bw: f64,
+    /// Per-message exchange latency, seconds.
+    pub alpha: f64,
+    /// Per-byte exchange time, s/B.
+    pub beta: f64,
+}
+
+impl Calibration {
+    /// Overwrite `base`'s rate constants with the measured ones (guarding
+    /// against non-finite or non-positive probes, which keep the default).
+    pub fn apply(&self, mut base: Machine) -> Machine {
+        base = base.calibrated(self.fft_flops_per_sec, self.mem_bw);
+        if self.alpha.is_finite() && self.alpha > 0.0 {
+            base.alpha = self.alpha;
+        }
+        if self.beta.is_finite() && self.beta > 0.0 {
+            base.beta = self.beta;
+        }
+        base
+    }
+}
+
+/// Median-of-runs wall time of `f`, in seconds.
+fn timed(runs: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+/// Measure local FFT throughput: `lines` batched length-`n` line FFTs
+/// through `backend`, converted via the model's own flop formula.
+fn measure_fft(backend: &dyn LocalFftBackend) -> f64 {
+    let (n, lines) = (64usize, 256usize);
+    let mut buf = vec![Complex::new(1.0, 0.5); n * lines];
+    let secs = timed(5, || {
+        backend.fft_batch(&mut buf, n, Direction::Forward);
+    });
+    let flops = backend.flops(n * lines, n);
+    flops / secs.max(1e-9)
+}
+
+/// Measure pack-shaped memory bandwidth: copy a buffer (one read + one
+/// write stream per element).
+fn measure_mem_bw() -> f64 {
+    let elems = 1usize << 18; // 4 MiB of complex
+    let src = vec![Complex::new(0.25, -0.75); elems];
+    let mut dst = vec![ZERO; elems];
+    let secs = timed(5, || {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&mut dst);
+    });
+    let bytes = 2.0 * (elems * std::mem::size_of::<Complex>()) as f64;
+    bytes / secs.max(1e-9)
+}
+
+/// Measure `alpha`/`beta` with a two-rank flat exchange through the
+/// nonblocking engine at two message sizes.
+fn measure_exchange() -> (f64, f64) {
+    let small = 64usize; // elements per block
+    let large = 1usize << 15;
+    let times = run_world(2, move |comm| {
+        let mut t = [0.0f64; 2];
+        for (i, &n) in [small, large].iter().enumerate() {
+            let send = vec![Complex::new(1.0, -1.0); 2 * n];
+            let mut recv = vec![ZERO; 2 * n];
+            let offs = vec![0usize, n, 2 * n];
+            t[i] = timed(5, || {
+                alltoallv_complex_flat_tuned(
+                    &comm,
+                    &send,
+                    &offs,
+                    &mut recv,
+                    &offs,
+                    CommTuning::serial(),
+                );
+            });
+        }
+        t
+    });
+    // Critical path over the two ranks.
+    let t_small = times.iter().map(|t| t[0]).fold(0.0, f64::max);
+    let t_large = times.iter().map(|t| t[1]).fold(0.0, f64::max);
+    let alpha = t_small.max(1e-9);
+    let dbytes = ((large - small) * std::mem::size_of::<Complex>()) as f64;
+    let beta = ((t_large - t_small) / dbytes).max(1e-15);
+    (alpha, beta)
+}
+
+/// Run every probe and return the measured constants. Spawns a private
+/// two-rank world for the exchange probe — call before SPMD execution.
+pub fn calibrate_local(backend: &dyn LocalFftBackend) -> Calibration {
+    let (alpha, beta) = measure_exchange();
+    Calibration { fft_flops_per_sec: measure_fft(backend), mem_bw: measure_mem_bw(), alpha, beta }
+}
+
+/// [`calibrate_local`] applied to [`Machine::local_cpu`] in one call.
+pub fn calibrated_local_machine(backend: &dyn LocalFftBackend) -> Machine {
+    calibrate_local(backend).apply(Machine::local_cpu())
+}
+
+/// Empirical mode: execute each candidate plan twice (forward, zero
+/// input) — the first run warms its workspaces, only the second is timed,
+/// so the measurement reflects the steady-state execute-many regime the
+/// tuner optimizes for, not one-time setup. Each timing is reduced to the
+/// cross-rank max (the critical path); returns `(index, seconds)` of the
+/// measured winner. Collective — every rank must call with plans built
+/// from the same ranked list; the allreduce makes the winner (and its
+/// time) identical everywhere.
+pub fn measure_candidates(
+    plans: &[Arc<Fftb>],
+    backend: &dyn LocalFftBackend,
+    comm: &Comm,
+) -> (usize, f64) {
+    assert!(!plans.is_empty(), "measure_candidates needs at least one plan");
+    let mut best = (f64::INFINITY, 0usize);
+    for (i, plan) in plans.iter().enumerate() {
+        // Warm-up: grows workspaces and slot pools, untimed.
+        let (warm, _) = plan.execute(backend, vec![ZERO; plan.input_len()], Direction::Forward);
+        plan.recycle(warm);
+        let input = vec![ZERO; plan.input_len()];
+        let t0 = Instant::now();
+        let (out, _) = plan.execute(backend, input, Direction::Forward);
+        let mine = t0.elapsed().as_secs_f64();
+        plan.recycle(out);
+        let worst = allreduce_max_f64(comm, mine);
+        if worst < best.0 {
+            best = (worst, i);
+        }
+    }
+    (best.1, best.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftb::backend::RustFftBackend;
+
+    #[test]
+    fn calibration_produces_sane_constants() {
+        let backend = RustFftBackend::new();
+        let c = calibrate_local(&backend);
+        // Very loose bounds: a working host is somewhere within 1e6x of a
+        // modern core on every axis.
+        assert!(c.fft_flops_per_sec > 1e6 && c.fft_flops_per_sec < 1e14);
+        assert!(c.mem_bw > 1e6 && c.mem_bw < 1e14);
+        assert!(c.alpha > 0.0 && c.alpha < 1.0);
+        assert!(c.beta > 0.0 && c.beta < 1e-3);
+    }
+
+    #[test]
+    fn apply_overrides_base_machine() {
+        let c = Calibration { fft_flops_per_sec: 1e9, mem_bw: 2e9, alpha: 1e-6, beta: 1e-10 };
+        let m = c.apply(Machine::local_cpu());
+        assert_eq!(m.fft_flops_per_sec, 1e9);
+        assert_eq!(m.mem_bw, 2e9);
+        assert_eq!(m.alpha, 1e-6);
+        assert_eq!(m.beta, 1e-10);
+        // Bad probes keep the defaults.
+        let bad = Calibration { fft_flops_per_sec: f64::NAN, mem_bw: -1.0, alpha: 0.0, beta: 1e-10 };
+        let m2 = bad.apply(Machine::local_cpu());
+        let base = Machine::local_cpu();
+        assert_eq!(m2.fft_flops_per_sec, base.fft_flops_per_sec);
+        assert_eq!(m2.mem_bw, base.mem_bw);
+        assert_eq!(m2.alpha, base.alpha);
+        assert_eq!(m2.beta, 1e-10);
+    }
+}

@@ -1,0 +1,228 @@
+//! The autotuning planner — the planning brain between the coordinator
+//! layer and `fftb::plan`.
+//!
+//! The paper's core pitch is *flexibility*: one framework that picks the
+//! right decomposition (slab-pencil vs pencil vs batched plane-wave
+//! spheres) for each workload instead of hand-coding per application. The
+//! `model` layer has always been able to *price* every plan kind on a
+//! described machine; this subsystem is what finally consumes those prices:
+//!
+//! * [`cache`] — [`PlanCache`]: memoized `Fftb` objects keyed by
+//!   `(shape, signature, kind, nb, direction, window)`, extending
+//!   plan-once / execute-many to the layer that requests plans.
+//! * [`search`] — feasible-candidate enumeration (all decompositions ×
+//!   grid factorizations × exchange windows) and deterministic model-based
+//!   ranking.
+//! * [`calibrate`] — timed micro-runs that refine the cost model's
+//!   constants to the actual host, plus the *empirical* mode that executes
+//!   the top-k model candidates once and keeps the measured winner.
+//! * [`wisdom`] — FFTW-style persisted tuning records (calibration +
+//!   per-request winners) through `util::json`.
+//!
+//! [`Tuner`] composes the four; [`Fftb::plan_auto`] is the one-call entry
+//! point (`FftbOptions::auto()` is the lighter variant that only frees the
+//! exchange window when the tensors have already pinned the decomposition).
+//!
+//! ## SPMD determinism
+//!
+//! Every rank runs the same tuning logic on rank-independent inputs: the
+//! model prices the *worst-rank* stage counts (rank 0 owns the ceiling of
+//! every cyclic split), so ranking is pure arithmetic that agrees across
+//! ranks without communication. The empirical mode does communicate — its
+//! per-candidate timings are allreduced to the cross-rank critical path —
+//! and therefore also agrees. `tests/tuner.rs` pins both properties.
+#![warn(missing_docs)]
+
+pub mod cache;
+pub mod calibrate;
+pub mod search;
+pub mod wisdom;
+
+use std::sync::Arc;
+
+use crate::comm::communicator::Comm;
+use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::error::{FftbError, Result};
+use crate::fftb::plan::Fftb;
+use crate::fftb::sphere::OffsetArray;
+use crate::model::machine::Machine;
+
+pub use cache::{PlanCache, PlanKey};
+pub use calibrate::{calibrate_local, calibrated_local_machine, Calibration};
+pub use search::{Candidate, CandidateKind, TuneRequest};
+pub use wisdom::{Wisdom, WisdomEntry};
+
+/// The result of one auto-planning call: the (shared, possibly cached)
+/// plan plus how the tuner arrived at it.
+pub struct TunedPlan {
+    /// The constructed (or cache-served) plan.
+    pub plan: Arc<Fftb>,
+    /// The winning candidate (decomposition + window + seconds).
+    pub choice: Candidate,
+    /// Whether the plan object came out of the [`PlanCache`].
+    pub cache_hit: bool,
+    /// Whether the decision came from persisted [`Wisdom`] rather than a
+    /// fresh search.
+    pub from_wisdom: bool,
+    /// Whether the decision was confirmed by live measurement (empirical
+    /// mode) in this call.
+    pub measured: bool,
+}
+
+/// The autotuning planner: a machine description to price candidates on,
+/// a plan cache, persisted wisdom, and the empirical-mode knob.
+pub struct Tuner {
+    /// Machine the cost model prices candidates on.
+    pub machine: Machine,
+    /// Memoized plans (see [`PlanCache`]).
+    pub cache: PlanCache,
+    /// Persisted winners and calibration (see [`Wisdom`]).
+    pub wisdom: Wisdom,
+    /// When `> 1` and a backend is supplied to [`Tuner::plan_auto`], the
+    /// top-k model candidates are executed once and the measured winner is
+    /// kept (the paper-style "try the shortlist" mode). `0` or `1` trusts
+    /// the model outright.
+    pub empirical_top_k: usize,
+}
+
+impl Tuner {
+    /// A tuner pricing on the given machine, empty cache and wisdom.
+    pub fn new(machine: Machine) -> Self {
+        Tuner { machine, cache: PlanCache::new(), wisdom: Wisdom::new(), empirical_top_k: 0 }
+    }
+
+    /// A tuner for the live in-process testbed ([`Machine::local_cpu`]).
+    pub fn local() -> Self {
+        Self::new(Machine::local_cpu())
+    }
+
+    /// A tuner whose machine constants come from stored wisdom when the
+    /// file carries a calibration record (falling back to `base`'s
+    /// constants otherwise).
+    pub fn with_wisdom(base: Machine, wisdom: Wisdom) -> Self {
+        let machine = match &wisdom.calibration {
+            Some(c) => c.apply(base),
+            None => base,
+        };
+        Tuner { machine, cache: PlanCache::new(), wisdom, empirical_top_k: 0 }
+    }
+
+    /// Run the calibration micro-probes ([`calibrate_local`]) and fold the
+    /// measured constants into this tuner's machine and wisdom. Spawns a
+    /// private two-rank world — call *before* SPMD execution. Previously
+    /// remembered winners are dropped: they were ranked with the old
+    /// constants and would otherwise pin stale decisions (wisdom files are
+    /// machine-specific for the same reason — load them only on the host
+    /// that wrote them).
+    pub fn calibrate(&mut self, backend: &dyn LocalFftBackend) -> Calibration {
+        let c = calibrate_local(backend);
+        self.machine = c.apply(self.machine.clone());
+        self.wisdom.calibration = Some(c);
+        self.wisdom.clear_entries();
+        c
+    }
+
+    /// Pick, build and cache the best plan for a workload with zero
+    /// user-supplied `PlanKind` or window.
+    ///
+    /// `sphere` selects the sphere candidate set (plane-wave staged padding
+    /// vs pad-to-cube); `None` the dense cuboid set. `backend` enables the
+    /// empirical mode when [`Tuner::empirical_top_k`] asks for it.
+    /// Collective over `comm` (grid construction splits communicators; the
+    /// empirical mode allreduces timings): every rank must call with
+    /// identical arguments, and every rank returns the same choice.
+    pub fn plan_auto(
+        &mut self,
+        shape: [usize; 3],
+        nb: usize,
+        sphere: Option<Arc<OffsetArray>>,
+        comm: &Comm,
+        backend: Option<&dyn LocalFftBackend>,
+    ) -> Result<TunedPlan> {
+        if let Some(off) = &sphere {
+            if shape != [off.nx, off.ny, off.nz] {
+                return Err(FftbError::Unsupported(format!(
+                    "sphere offsets describe a {}x{}x{} grid but the requested shape \
+                     is {shape:?}",
+                    off.nx, off.ny, off.nz
+                )));
+            }
+        }
+        let req = TuneRequest { shape, nb, p: comm.size(), sphere };
+        let sig = req.signature();
+
+        let mut prebuilt: Option<Arc<Fftb>> = None;
+        let mut measured = false;
+        // Live critical-path seconds when the empirical mode ran; the
+        // wisdom record falls back to the model prediction otherwise.
+        let mut measured_seconds: Option<f64> = None;
+        let (choice, from_wisdom) =
+            match self.wisdom.lookup(&sig).and_then(WisdomEntry::candidate) {
+                Some(c) => (c, true),
+                None => {
+                    let ranked = search::rank_candidates(&req, &self.machine);
+                    if ranked.is_empty() {
+                        return Err(FftbError::Unsupported(format!(
+                            "no feasible decomposition for shape {shape:?} on p={}",
+                            req.p
+                        )));
+                    }
+                    // Empirical mode measures one candidate per distinct
+                    // decomposition, at its model-best window (see
+                    // search::shortlist) — but only when there genuinely
+                    // is more than one decomposition to compare.
+                    let mut short = Vec::new();
+                    if backend.is_some() && self.empirical_top_k > 1 {
+                        short = search::shortlist_of(&ranked, self.empirical_top_k);
+                    }
+                    let choice = match backend {
+                        Some(be) if short.len() > 1 => {
+                            let plans = short
+                                .iter()
+                                .map(|c| search::build(c, &req, comm).map(Arc::new))
+                                .collect::<Result<Vec<_>>>()?;
+                            let (win, secs) = calibrate::measure_candidates(&plans, be, comm);
+                            measured = true;
+                            measured_seconds = Some(secs);
+                            prebuilt = Some(Arc::clone(&plans[win]));
+                            short.swap_remove(win)
+                        }
+                        _ => ranked.into_iter().next().unwrap(),
+                    };
+                    (choice, false)
+                }
+            };
+
+        if !from_wisdom {
+            self.wisdom.record(
+                sig.clone(),
+                WisdomEntry {
+                    kind: choice.kind.label(),
+                    window: choice.window,
+                    seconds: measured_seconds.unwrap_or(choice.predicted),
+                    measured,
+                },
+            );
+        }
+
+        let key = PlanKey {
+            comm_id: comm.identity(),
+            sizes: shape,
+            signature: sig.into(),
+            kind: choice.kind.label().into(),
+            nb,
+            dir: None,
+            window: choice.window,
+        };
+        let (plan, cache_hit) = match prebuilt {
+            Some(plan) => {
+                // Built fresh this call during measurement: install it
+                // without touching the hit/miss counters.
+                self.cache.insert(key, Arc::clone(&plan));
+                (plan, false)
+            }
+            None => self.cache.get_or_insert(key, || search::build(&choice, &req, comm))?,
+        };
+        Ok(TunedPlan { plan, choice, cache_hit, from_wisdom, measured })
+    }
+}

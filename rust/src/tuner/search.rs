@@ -1,0 +1,452 @@
+//! Candidate enumeration and model-based ranking — the part of the tuner
+//! that answers "which decomposition, on which grid factorization, with
+//! which exchange window?".
+//!
+//! For a [`TuneRequest`] the search enumerates every plan the framework
+//! could run (slab-pencil and its non-batched loop on a 1D grid, every
+//! pencil factorization `p0 x p1 = p` of the rank count, plane-wave staged
+//! padding and the pad-to-cube baseline for sphere inputs), crossed with
+//! the exchange-window ladder `{1, 2, 4, ...}`. Each candidate is priced by
+//! the exact stage counts of [`model::cost`](crate::model::cost) on a
+//! [`Machine`] — the windowed alltoall model
+//! ([`Machine::alltoall_time_windowed`]) prices the overlap knob — and the
+//! result is a deterministically ordered ranking: pure arithmetic on
+//! rank-independent inputs, so every rank of an SPMD program computes the
+//! *same* list and picks the same winner without communicating.
+
+use std::sync::Arc;
+
+use crate::comm::alltoall::CommTuning;
+use crate::comm::communicator::Comm;
+use crate::fftb::error::{FftbError, Result};
+use crate::fftb::grid::ProcGrid;
+use crate::fftb::plan::{
+    Fftb, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlaneWavePlan, PlanKind, SlabPencilPlan,
+};
+use crate::fftb::sphere::OffsetArray;
+use crate::model::cost::{self, PlanCost};
+use crate::model::machine::Machine;
+
+/// One decomposition the planner could select (before window crossing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CandidateKind {
+    /// Batched slab-pencil on a 1D grid of all `p` ranks.
+    SlabPencil,
+    /// Non-batched loop of single slab-pencil transforms (1D grid).
+    SlabPencilLoop,
+    /// Pencil decomposition on a `p0 x p1` grid.
+    Pencil {
+        /// Grid extent along axis 0 (splits x/y).
+        p0: usize,
+        /// Grid extent along axis 1 (splits y/z).
+        p1: usize,
+    },
+    /// Plane-wave staged padding for sphere inputs (1D grid).
+    PlaneWave,
+    /// Pad-to-cube baseline for sphere inputs (1D grid).
+    PaddedSphere,
+}
+
+impl CandidateKind {
+    /// Stable label, also used as the plan-cache / wisdom kind key.
+    pub fn label(&self) -> String {
+        match self {
+            CandidateKind::SlabPencil => "slab-pencil".into(),
+            CandidateKind::SlabPencilLoop => "slab-pencil-loop".into(),
+            CandidateKind::Pencil { p0, p1 } => format!("pencil:{p0}x{p1}"),
+            CandidateKind::PlaneWave => "plane-wave".into(),
+            CandidateKind::PaddedSphere => "padded-sphere".into(),
+        }
+    }
+
+    /// Parse a [`CandidateKind::label`] back (wisdom deserialization).
+    pub fn from_label(s: &str) -> Option<CandidateKind> {
+        match s {
+            "slab-pencil" => Some(CandidateKind::SlabPencil),
+            "slab-pencil-loop" => Some(CandidateKind::SlabPencilLoop),
+            "plane-wave" => Some(CandidateKind::PlaneWave),
+            "padded-sphere" => Some(CandidateKind::PaddedSphere),
+            _ => {
+                let rest = s.strip_prefix("pencil:")?;
+                let (a, b) = rest.split_once('x')?;
+                Some(CandidateKind::Pencil { p0: a.parse().ok()?, p1: b.parse().ok()? })
+            }
+        }
+    }
+}
+
+/// A tuning question: what to transform, over how many ranks.
+#[derive(Clone)]
+pub struct TuneRequest {
+    /// Global transform sizes `[nx, ny, nz]`.
+    pub shape: [usize; 3],
+    /// Batch count.
+    pub nb: usize,
+    /// Total rank count the plan must run on.
+    pub p: usize,
+    /// Offset array of the cut-off sphere for sphere workloads; `None`
+    /// selects the dense cuboid candidate set.
+    pub sphere: Option<Arc<OffsetArray>>,
+}
+
+impl TuneRequest {
+    /// Canonical string form — the wisdom key and the cache signature.
+    /// Sphere requests carry the offset array's structural fingerprint, so
+    /// two different spheres with the same point count never share a plan
+    /// or a wisdom entry.
+    pub fn signature(&self) -> String {
+        let [nx, ny, nz] = self.shape;
+        let sphere = match &self.sphere {
+            Some(off) => format!("sphere:{}:{:016x}", off.total(), off.fingerprint()),
+            None => "dense".into(),
+        };
+        format!("{nx}x{ny}x{nz}|nb={}|p={}|{sphere}", self.nb, self.p)
+    }
+}
+
+/// One priced candidate: decomposition + window + predicted seconds.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// The decomposition.
+    pub kind: CandidateKind,
+    /// Exchange window (`CommTuning::window`) the prediction assumed.
+    pub window: usize,
+    /// Model-predicted execution time, seconds.
+    pub predicted: f64,
+}
+
+/// The exchange-window ladder for `p` ranks: powers of two up to the round
+/// count `p - 1`, with the full window appended (e.g. `p = 8` gives
+/// `[1, 2, 4, 7]`).
+pub fn windows(p: usize) -> Vec<usize> {
+    let msgs = p.saturating_sub(1).max(1);
+    let mut out = Vec::new();
+    let mut w = 1usize;
+    while w < msgs {
+        out.push(w);
+        w *= 2;
+    }
+    out.push(msgs);
+    out
+}
+
+/// All ordered factorizations `p0 * p1 == p` (includes the degenerate
+/// `1 x p` and `p x 1` grids).
+pub fn factorizations(p: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for p0 in 1..=p {
+        if p % p0 == 0 {
+            out.push((p0, p / p0));
+        }
+    }
+    out
+}
+
+/// Enumerate every *feasible* decomposition for `req`, mirroring the
+/// feasibility checks of the concrete plan constructors (so nothing the
+/// search returns can fail to build).
+pub fn enumerate(req: &TuneRequest) -> Vec<CandidateKind> {
+    let [nx, ny, nz] = req.shape;
+    let p = req.p;
+    let mut out = Vec::new();
+    if let Some(off) = &req.sphere {
+        // Sphere workloads: 1D-grid plans only (the paper's pattern). The
+        // offsets must describe the requested cube — the plans are built
+        // (and priced) from the offsets' own extents, so a mismatched
+        // request has no feasible candidate rather than a surprise
+        // constructor failure downstream.
+        if req.shape == [off.nx, off.ny, off.nz] && p <= nx && p <= nz {
+            out.push(CandidateKind::PlaneWave);
+            out.push(CandidateKind::PaddedSphere);
+        }
+        return out;
+    }
+    if p <= nx && p <= nz {
+        out.push(CandidateKind::SlabPencil);
+        if req.nb > 1 {
+            out.push(CandidateKind::SlabPencilLoop);
+        }
+    }
+    for (p0, p1) in factorizations(p) {
+        if p0 <= nx.min(ny) && p1 <= ny.min(nz) {
+            out.push(CandidateKind::Pencil { p0, p1 });
+        }
+    }
+    out
+}
+
+/// Exact stage counts of one candidate (the `model::cost` table it is
+/// priced from).
+pub fn stage_cost(kind: CandidateKind, req: &TuneRequest) -> PlanCost {
+    match kind {
+        CandidateKind::SlabPencil => cost::slab_pencil(req.shape, req.nb, req.p, true),
+        CandidateKind::SlabPencilLoop => cost::slab_pencil(req.shape, req.nb, req.p, false),
+        CandidateKind::Pencil { p0, p1 } => cost::pencil(req.shape, req.nb, p0, p1, true),
+        CandidateKind::PlaneWave => {
+            cost::planewave(req.sphere.as_ref().expect("sphere request"), req.nb, req.p)
+        }
+        CandidateKind::PaddedSphere => {
+            cost::padded_sphere(req.sphere.as_ref().expect("sphere request"), req.nb, req.p)
+        }
+    }
+}
+
+/// Price one `(kind, window)` pair on `m` through the same stage walk the
+/// Fig. 9 projections use ([`price_stages`](crate::model::scaling::price_stages)).
+pub fn predict(kind: CandidateKind, window: usize, req: &TuneRequest, m: &Machine) -> f64 {
+    crate::model::scaling::price_stages(&stage_cost(kind, req), m, window)
+}
+
+/// Enumerate, cross with the window ladder, price, and sort: cheapest
+/// first, ties broken by the (total) ordering on kind then window so the
+/// ranking is deterministic across ranks. The (window-independent) stage
+/// table is derived once per decomposition, not once per rung.
+pub fn rank_candidates(req: &TuneRequest, m: &Machine) -> Vec<Candidate> {
+    let mut out: Vec<Candidate> = Vec::new();
+    let ladder = windows(req.p);
+    for kind in enumerate(req) {
+        let cost = stage_cost(kind, req);
+        for &window in &ladder {
+            out.push(Candidate {
+                kind,
+                window,
+                predicted: crate::model::scaling::price_stages(&cost, m, window),
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        a.predicted
+            .total_cmp(&b.predicted)
+            .then_with(|| a.kind.cmp(&b.kind))
+            .then_with(|| a.window.cmp(&b.window))
+    });
+    out
+}
+
+/// The measurement shortlist: the first (cheapest) candidate per distinct
+/// *decomposition*, in rank order, capped at `cap`. Window rungs of one
+/// kind execute near-identically (the windowed exchange is bit-identical
+/// and close in time), so measuring them would compare a plan against
+/// itself — the empirical mode and `benches/tuner_ablation.rs` both
+/// measure over this list instead.
+pub fn shortlist(req: &TuneRequest, m: &Machine, cap: usize) -> Vec<Candidate> {
+    shortlist_of(&rank_candidates(req, m), cap)
+}
+
+/// [`shortlist`] over an already-computed [`rank_candidates`] list (the
+/// tuner has one in hand; no point re-enumerating and re-pricing).
+pub fn shortlist_of(ranked: &[Candidate], cap: usize) -> Vec<Candidate> {
+    let mut out: Vec<Candidate> = Vec::new();
+    if cap == 0 {
+        return out;
+    }
+    for c in ranked {
+        if !out.iter().any(|s| s.kind == c.kind) {
+            out.push(c.clone());
+        }
+        if out.len() == cap {
+            break;
+        }
+    }
+    out
+}
+
+/// The model's pick: the cheapest candidate, or an `Unsupported` error when
+/// no decomposition is feasible for the request.
+pub fn best(req: &TuneRequest, m: &Machine) -> Result<Candidate> {
+    rank_candidates(req, m).into_iter().next().ok_or_else(|| {
+        FftbError::Unsupported(format!(
+            "no feasible decomposition for shape {:?} on p={}",
+            req.shape, req.p
+        ))
+    })
+}
+
+/// Build the concrete [`Fftb`] for a chosen candidate: construct the grid
+/// it wants over `comm`, run the matching plan constructor, and set the
+/// window. Used by `Tuner::plan_auto` and the empirical measurement pass.
+pub fn build(cand: &Candidate, req: &TuneRequest, comm: &Comm) -> Result<Fftb> {
+    let kind = match cand.kind {
+        CandidateKind::SlabPencil => {
+            let grid = ProcGrid::new(&[req.p], comm.clone())?;
+            PlanKind::SlabPencil(SlabPencilPlan::new(req.shape, req.nb, grid)?)
+        }
+        CandidateKind::SlabPencilLoop => {
+            let grid = ProcGrid::new(&[req.p], comm.clone())?;
+            PlanKind::SlabPencilLoop(NonBatchedLoop::new(req.shape, req.nb, grid)?)
+        }
+        CandidateKind::Pencil { p0, p1 } => {
+            let grid = ProcGrid::new(&[p0, p1], comm.clone())?;
+            PlanKind::Pencil(PencilPlan::new(req.shape, req.nb, grid)?)
+        }
+        CandidateKind::PlaneWave => {
+            let grid = ProcGrid::new(&[req.p], comm.clone())?;
+            let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
+            PlanKind::PlaneWave(PlaneWavePlan::new(off, req.nb, grid)?)
+        }
+        CandidateKind::PaddedSphere => {
+            let grid = ProcGrid::new(&[req.p], comm.clone())?;
+            let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
+            PlanKind::PaddedSphere(PaddedSpherePlan::new(off, req.nb, grid)?)
+        }
+    };
+    let mut fx = Fftb { kind, sizes: req.shape, nb: req.nb };
+    fx.set_comm_tuning(CommTuning::with_window(cand.window));
+    Ok(fx)
+}
+
+/// Pick the cheapest exchange window for an already-constructed plan (the
+/// `FftbOptions::auto()` path, where the tensors have pinned the
+/// decomposition and only the window is free). Deterministic across ranks:
+/// pricing uses the rank-0 worst-rank stage counts of `model::cost`.
+pub fn auto_window_for(fx: &Fftb, m: &Machine) -> usize {
+    let (kind, p, sphere) = match &fx.kind {
+        PlanKind::SlabPencil(pl) => (CandidateKind::SlabPencil, pl.grid_size(), None),
+        PlanKind::SlabPencilLoop(pl) => (CandidateKind::SlabPencilLoop, pl.grid_size(), None),
+        PlanKind::Pencil(pl) => {
+            (CandidateKind::Pencil { p0: pl.grid_dims().0, p1: pl.grid_dims().1 },
+             pl.grid_dims().0 * pl.grid_dims().1,
+             None)
+        }
+        PlanKind::PlaneWave(pl) => {
+            (CandidateKind::PlaneWave, pl.grid_size(), Some(Arc::clone(&pl.offsets)))
+        }
+        PlanKind::PaddedSphere(pl) => {
+            (CandidateKind::PaddedSphere, pl.grid_size(), Some(Arc::clone(&pl.offsets)))
+        }
+    };
+    let req = TuneRequest { shape: fx.sizes, nb: fx.nb, p, sphere };
+    let cost = stage_cost(kind, &req);
+    let mut best = (f64::INFINITY, 1usize);
+    for w in windows(p) {
+        let t = crate::model::scaling::price_stages(&cost, m, w);
+        // Strict `<`: ties keep the narrower window (deterministic).
+        if t < best.0 {
+            best = (t, w);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+    fn dense(shape: [usize; 3], nb: usize, p: usize) -> TuneRequest {
+        TuneRequest { shape, nb, p, sphere: None }
+    }
+
+    #[test]
+    fn window_ladder_shapes() {
+        assert_eq!(windows(2), vec![1]);
+        assert_eq!(windows(4), vec![1, 2, 3]);
+        assert_eq!(windows(8), vec![1, 2, 4, 7]);
+        assert_eq!(windows(1), vec![1]);
+    }
+
+    #[test]
+    fn enumerate_respects_feasibility() {
+        // Prime p on a shape that rules out the 1D-grid plans entirely.
+        let req = dense([4, 8, 8], 1, 7);
+        let cands = enumerate(&req);
+        assert!(!cands.contains(&CandidateKind::SlabPencil), "7 > nx=4");
+        assert!(cands.contains(&CandidateKind::Pencil { p0: 1, p1: 7 }));
+        assert!(!cands.contains(&CandidateKind::Pencil { p0: 7, p1: 1 }), "p0=7 > nx=4");
+        // Every enumerated pencil factorization must satisfy the plan's
+        // own constructor bounds.
+        for c in &cands {
+            if let CandidateKind::Pencil { p0, p1 } = c {
+                assert!(*p0 <= 4 && *p1 <= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn sphere_requests_get_sphere_candidates_only() {
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+        let req = TuneRequest {
+            shape: [8, 8, 8],
+            nb: 2,
+            p: 2,
+            sphere: Some(Arc::new(spec.offsets())),
+        };
+        let cands = enumerate(&req);
+        assert_eq!(cands, vec![CandidateKind::PlaneWave, CandidateKind::PaddedSphere]);
+    }
+
+    #[test]
+    fn mismatched_sphere_shape_has_no_candidates() {
+        // The plans are built from the offsets' own extents; a request
+        // whose shape disagrees must have an empty feasible set instead of
+        // a surprise constructor failure.
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+        let req = TuneRequest {
+            shape: [16, 16, 16],
+            nb: 1,
+            p: 2,
+            sphere: Some(Arc::new(spec.offsets())),
+        };
+        assert!(enumerate(&req).is_empty());
+        assert!(best(&req, &Machine::local_cpu()).is_err());
+    }
+
+    #[test]
+    fn planewave_ranks_first_for_spheres() {
+        let n = 32;
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let req = TuneRequest {
+            shape: [n, n, n],
+            nb: 4,
+            p: 4,
+            sphere: Some(Arc::new(spec.offsets())),
+        };
+        let ranked = rank_candidates(&req, &Machine::local_cpu());
+        assert!(!ranked.is_empty());
+        assert_eq!(ranked[0].kind, CandidateKind::PlaneWave, "staged padding must win");
+    }
+
+    #[test]
+    fn batched_outranks_non_batched_loop() {
+        let req = dense([16, 16, 16], 8, 4);
+        let m = Machine::perlmutter_a100();
+        let batched = predict(CandidateKind::SlabPencil, 2, &req, &m);
+        let looped = predict(CandidateKind::SlabPencilLoop, 2, &req, &m);
+        assert!(batched < looped, "batched {batched} must beat looped {looped}");
+    }
+
+    #[test]
+    fn ranking_is_deterministic() {
+        let req = dense([16, 16, 16], 4, 8);
+        let m = Machine::local_cpu();
+        let a = rank_candidates(&req, &m);
+        let b = rank_candidates(&req, &m);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.window, y.window);
+            assert_eq!(x.predicted.to_bits(), y.predicted.to_bits());
+        }
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for kind in [
+            CandidateKind::SlabPencil,
+            CandidateKind::SlabPencilLoop,
+            CandidateKind::Pencil { p0: 3, p1: 5 },
+            CandidateKind::PlaneWave,
+            CandidateKind::PaddedSphere,
+        ] {
+            assert_eq!(CandidateKind::from_label(&kind.label()), Some(kind));
+        }
+        assert_eq!(CandidateKind::from_label("nonsense"), None);
+    }
+
+    #[test]
+    fn infeasible_request_is_unsupported() {
+        // p larger than every dimension: nothing fits.
+        let req = dense([2, 2, 2], 1, 64);
+        assert!(matches!(best(&req, &Machine::local_cpu()), Err(FftbError::Unsupported(_))));
+    }
+}

@@ -1,0 +1,247 @@
+//! FFTW-style persisted tuning wisdom: calibration constants and per-request
+//! winners, serialized through `util::json` so they survive process
+//! restarts.
+//!
+//! A [`Wisdom`] holds an optional machine [`Calibration`] record and a map
+//! from request signatures
+//! ([`TuneRequest::signature`](crate::tuner::search::TuneRequest::signature))
+//! to the candidate that won for that request — decomposition label, window, and the
+//! predicted (or, in empirical mode, measured) seconds. `Tuner::plan_auto`
+//! consults it before searching and records every fresh decision into it;
+//! [`Wisdom::save`] / [`Wisdom::load`] move it through a JSON file.
+//!
+//! The format is versioned (`"version": 1`); unknown or malformed entries
+//! are rejected loudly at load so a stale file never silently steers the
+//! planner.
+
+use std::collections::BTreeMap;
+
+use crate::tuner::calibrate::Calibration;
+use crate::tuner::search::{Candidate, CandidateKind};
+use crate::util::json::Json;
+
+/// Current on-disk format version.
+const VERSION: f64 = 1.0;
+
+/// One remembered winner for one request signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WisdomEntry {
+    /// Winning decomposition, as its [`CandidateKind::label`].
+    pub kind: String,
+    /// Winning exchange window.
+    pub window: usize,
+    /// Predicted (model mode) or measured (empirical mode) seconds.
+    pub seconds: f64,
+    /// Whether `seconds` came from a live measurement.
+    pub measured: bool,
+}
+
+impl WisdomEntry {
+    /// The entry as a buildable candidate, or `None` if the stored label
+    /// no longer parses (e.g. written by a newer version).
+    pub fn candidate(&self) -> Option<Candidate> {
+        Some(Candidate {
+            kind: CandidateKind::from_label(&self.kind)?,
+            window: self.window,
+            predicted: self.seconds,
+        })
+    }
+}
+
+/// Persisted tuning state: calibration + per-request winners.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Wisdom {
+    /// Measured machine constants, if a calibration has been recorded.
+    pub calibration: Option<Calibration>,
+    entries: BTreeMap<String, WisdomEntry>,
+}
+
+impl Wisdom {
+    /// Empty wisdom (no calibration, no winners).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up the remembered winner for a request signature.
+    pub fn lookup(&self, signature: &str) -> Option<&WisdomEntry> {
+        self.entries.get(signature)
+    }
+
+    /// Record (or overwrite) the winner for a request signature.
+    pub fn record(&mut self, signature: String, entry: WisdomEntry) {
+        self.entries.insert(signature, entry);
+    }
+
+    /// Drop every remembered winner, keeping the calibration record. Call
+    /// when the machine constants change (re-calibration): the entries
+    /// were ranked with the old constants and would otherwise pin stale
+    /// choices forever.
+    pub fn clear_entries(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Number of remembered winners.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether any winners are remembered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Json::Num(VERSION));
+        if let Some(c) = &self.calibration {
+            let mut m = BTreeMap::new();
+            m.insert("fft_flops_per_sec".into(), Json::Num(c.fft_flops_per_sec));
+            m.insert("mem_bw".into(), Json::Num(c.mem_bw));
+            m.insert("alpha".into(), Json::Num(c.alpha));
+            m.insert("beta".into(), Json::Num(c.beta));
+            root.insert("calibration".into(), Json::Obj(m));
+        }
+        let mut entries = BTreeMap::new();
+        for (sig, e) in &self.entries {
+            let mut m = BTreeMap::new();
+            m.insert("kind".into(), Json::Str(e.kind.clone()));
+            m.insert("window".into(), Json::Num(e.window as f64));
+            m.insert("seconds".into(), Json::Num(e.seconds));
+            m.insert("measured".into(), Json::Bool(e.measured));
+            entries.insert(sig.clone(), Json::Obj(m));
+        }
+        root.insert("entries".into(), Json::Obj(entries));
+        Json::Obj(root)
+    }
+
+    /// Parse the versioned JSON document back.
+    pub fn from_json(j: &Json) -> Result<Wisdom, String> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "wisdom: missing version".to_string())?;
+        if version != VERSION {
+            return Err(format!("wisdom: unsupported version {version}"));
+        }
+        let calibration = match j.get("calibration") {
+            None => None,
+            Some(c) => {
+                let f = |k: &str| {
+                    c.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| format!("wisdom: calibration missing `{k}`"))
+                };
+                Some(Calibration {
+                    fft_flops_per_sec: f("fft_flops_per_sec")?,
+                    mem_bw: f("mem_bw")?,
+                    alpha: f("alpha")?,
+                    beta: f("beta")?,
+                })
+            }
+        };
+        let mut entries = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("entries") {
+            for (sig, e) in map {
+                let kind = e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("wisdom: entry `{sig}` missing kind"))?
+                    .to_string();
+                if CandidateKind::from_label(&kind).is_none() {
+                    return Err(format!("wisdom: entry `{sig}` has unknown kind `{kind}`"));
+                }
+                let window = e
+                    .get("window")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("wisdom: entry `{sig}` missing window"))?;
+                let seconds = e
+                    .get("seconds")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("wisdom: entry `{sig}` missing seconds"))?;
+                let measured = matches!(e.get("measured"), Some(Json::Bool(true)));
+                entries.insert(sig.clone(), WisdomEntry { kind, window, seconds, measured });
+            }
+        } else if j.get("entries").is_some() {
+            return Err("wisdom: `entries` must be an object".into());
+        }
+        Ok(Wisdom { calibration, entries })
+    }
+
+    /// Write the wisdom file (creates or truncates `path`).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Read a wisdom file written by [`Wisdom::save`].
+    pub fn load(path: &std::path::Path) -> Result<Wisdom, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("wisdom: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Wisdom {
+        let mut w = Wisdom::new();
+        w.calibration = Some(Calibration {
+            fft_flops_per_sec: 2.5e9,
+            mem_bw: 9.5e9,
+            alpha: 3.25e-7,
+            beta: 2.5e-10,
+        });
+        w.record(
+            "16x16x16|nb=4|p=8|dense".into(),
+            WisdomEntry { kind: "pencil:2x4".into(), window: 4, seconds: 0.0125, measured: false },
+        );
+        w.record(
+            "32x32x32|nb=8|p=4|sphere:4169".into(),
+            WisdomEntry { kind: "plane-wave".into(), window: 2, seconds: 0.5, measured: true },
+        );
+        w
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let w = sample();
+        let text = w.to_json().to_string();
+        let back = Wisdom::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, w);
+        assert_eq!(back.lookup("16x16x16|nb=4|p=8|dense").unwrap().window, 4);
+        assert!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().measured);
+        let cand = back.lookup("16x16x16|nb=4|p=8|dense").unwrap().candidate().unwrap();
+        assert_eq!(cand.kind, crate::tuner::search::CandidateKind::Pencil { p0: 2, p1: 4 });
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let w = sample();
+        let path = std::env::temp_dir().join("fftb_wisdom_test.json");
+        w.save(&path).unwrap();
+        let back = Wisdom::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn bad_documents_are_rejected() {
+        assert!(Wisdom::from_json(&Json::parse("{}").unwrap()).is_err(), "missing version");
+        assert!(
+            Wisdom::from_json(&Json::parse(r#"{"version": 99}"#).unwrap()).is_err(),
+            "future version"
+        );
+        let bad_kind = r#"{"version": 1, "entries": {"k": {"kind": "warp-drive", "window": 1, "seconds": 1}}}"#;
+        assert!(Wisdom::from_json(&Json::parse(bad_kind).unwrap()).is_err(), "unknown kind");
+    }
+
+    #[test]
+    fn empty_wisdom_round_trips() {
+        let w = Wisdom::new();
+        let back = Wisdom::from_json(&Json::parse(&w.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, w);
+        assert!(back.is_empty());
+        assert!(back.calibration.is_none());
+    }
+}

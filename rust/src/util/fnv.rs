@@ -1,0 +1,37 @@
+//! FNV-1a hashing over `u64` words — the one fingerprinting scheme shared
+//! by [`Comm::identity`](crate::comm::communicator::Comm::identity) and
+//! [`OffsetArray::fingerprint`](crate::fftb::sphere::OffsetArray::fingerprint),
+//! so communicator identities and sphere fingerprints stay provably
+//! consistent with each other.
+
+/// FNV-1a offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Fold one little-endian `u64` word into the running hash `h`.
+pub fn fnv1a_word(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash a sequence of `u64` words from the offset basis.
+pub fn fnv1a_words(words: impl IntoIterator<Item = u64>) -> u64 {
+    words.into_iter().fold(FNV_OFFSET, fnv1a_word)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_and_content_sensitive() {
+        assert_ne!(fnv1a_words([1, 2]), fnv1a_words([2, 1]));
+        assert_ne!(fnv1a_words([1, 2]), fnv1a_words([1, 3]));
+        assert_eq!(fnv1a_words([1, 2]), fnv1a_words([1, 2]));
+        assert_ne!(fnv1a_words([]), fnv1a_words([0]));
+    }
+}

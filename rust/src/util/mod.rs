@@ -1,6 +1,8 @@
 //! Small dependency-free utilities: JSON (manifest/bench output), timing
-//! statistics, and a deterministic PRNG for the property-test harness.
+//! statistics, FNV-1a fingerprinting, and a deterministic PRNG for the
+//! property-test harness.
 
+pub mod fnv;
 pub mod json;
 pub mod prng;
 pub mod stats;

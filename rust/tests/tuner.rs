@@ -1,0 +1,228 @@
+//! Integration tests of the autotuning planner subsystem (`fftb::tuner`):
+//! plan-cache hit/miss semantics, SPMD determinism (all ranks derive the
+//! same candidate from identical inputs, with and without live
+//! measurement), wisdom round-trips through `util::json`, and the
+//! regression that `plan_auto` never picks an infeasible pencil
+//! factorization — prime rank counts included.
+
+use std::sync::Arc;
+
+use fftb::comm::run_world;
+use fftb::fft::complex::{max_abs_diff, ZERO};
+use fftb::fft::dft::Direction;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::plan::{Fftb, FftbOptions, PlanKind};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::tuner::{Calibration, Tuner, Wisdom};
+
+/// Run one auto-planned transform end to end and return what the tuner
+/// chose plus proof of execution (output length).
+fn auto_roundtrip(
+    shape: [usize; 3],
+    nb: usize,
+    sphere: Option<Arc<fftb::fftb::sphere::OffsetArray>>,
+    p: usize,
+) -> Vec<(String, usize, usize)> {
+    run_world(p, move |comm| {
+        let mut tuner = Tuner::local();
+        let backend = RustFftBackend::new();
+        let tuned = Fftb::plan_auto(shape, nb, sphere.clone(), &comm, &mut tuner, None)
+            .expect("plan_auto must find a feasible plan");
+        let input = vec![ZERO; tuned.plan.input_len()];
+        let (out, _) = tuned.plan.execute(&backend, input, Direction::Forward);
+        let out_len = out.len();
+        tuned.plan.recycle(out);
+        (tuned.choice.kind.label(), tuned.choice.window, out_len)
+    })
+}
+
+#[test]
+fn plan_auto_cube_all_ranks_agree() {
+    let outs = auto_roundtrip([8, 8, 8], 2, None, 4);
+    let first = outs[0].clone();
+    for (r, o) in outs.iter().enumerate() {
+        assert_eq!((&o.0, o.1), (&first.0, first.1), "rank {r} disagrees with rank 0");
+        assert!(o.2 > 0, "rank {r} produced no output");
+    }
+}
+
+#[test]
+fn plan_auto_noncube_all_ranks_agree() {
+    // nx < p rules the 1D-grid plans out; the tuner must fall back to a
+    // feasible pencil factorization.
+    let outs = auto_roundtrip([4, 8, 16], 2, None, 6);
+    let first = outs[0].clone();
+    for o in &outs {
+        assert_eq!((&o.0, o.1), (&first.0, first.1));
+    }
+    assert!(first.0.starts_with("pencil:"), "expected a pencil plan, got {}", first.0);
+}
+
+#[test]
+fn plan_auto_prime_p_never_picks_infeasible_factorization() {
+    // p = 7 is prime: the only pencil factorizations are 1x7 and 7x1, and
+    // with nx = 4 the 7x1 grid (and every 1D-grid plan) is infeasible.
+    // plan_auto must still return a working plan on every rank.
+    let outs = auto_roundtrip([4, 8, 8], 1, None, 7);
+    for o in &outs {
+        assert_eq!(o.0, "pencil:1x7");
+    }
+}
+
+#[test]
+fn plan_auto_sphere_picks_planewave() {
+    let n = 16;
+    let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+    let outs = auto_roundtrip([n, n, n], 2, Some(off), 2);
+    for o in &outs {
+        assert_eq!(o.0, "plane-wave", "staged padding must beat pad-to-cube");
+    }
+}
+
+#[test]
+fn distinct_spheres_never_share_plans_or_wisdom() {
+    // Two different offset arrays (centered vs wrapped conventions) can
+    // retain similar or equal point counts; the structural fingerprint in
+    // the request signature must keep their plans and wisdom apart.
+    let n = 8usize;
+    let c = Arc::new(SphereSpec::new([n, n, n], 3.0, SphereKind::Centered).offsets());
+    let w = Arc::new(SphereSpec::new([n, n, n], 3.0, SphereKind::Wrapped).offsets());
+    assert_ne!(c.fingerprint(), w.fingerprint(), "different spheres, different prints");
+    run_world(2, move |comm| {
+        let mut tuner = Tuner::local();
+        let a = tuner.plan_auto([n, n, n], 1, Some(Arc::clone(&c)), &comm, None).unwrap();
+        let b = tuner.plan_auto([n, n, n], 1, Some(Arc::clone(&w)), &comm, None).unwrap();
+        assert!(!b.cache_hit, "a different sphere must not be served the cached plan");
+        assert!(!b.from_wisdom, "nor the other sphere's wisdom entry");
+        assert!(!Arc::ptr_eq(&a.plan, &b.plan));
+    });
+}
+
+#[test]
+fn plan_auto_repeat_hits_cache_and_wisdom() {
+    run_world(2, |comm| {
+        let mut tuner = Tuner::local();
+        let a = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        assert!(!a.cache_hit, "first call must build");
+        assert!(!a.from_wisdom, "first call must search");
+        let b = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        assert!(b.cache_hit, "second call must be served from the plan cache");
+        assert!(b.from_wisdom, "second call must reuse the recorded decision");
+        assert!(Arc::ptr_eq(&a.plan, &b.plan), "cache hit must return the same plan");
+        assert_eq!(a.choice.kind, b.choice.kind);
+        assert_eq!(a.choice.window, b.choice.window);
+        // A different batch count is a different plan.
+        let c = tuner.plan_auto([8, 8, 8], 3, None, &comm, None).unwrap();
+        assert!(!c.cache_hit);
+    });
+}
+
+#[test]
+fn wisdom_survives_a_restart() {
+    // First process life: tune, save wisdom. Second life: load wisdom,
+    // same request — decision comes from the file, no fresh search.
+    let path = std::env::temp_dir().join("fftb_tuner_wisdom_roundtrip.json");
+    let saved: Vec<Wisdom> = run_world(2, |comm| {
+        let mut tuner = Tuner::local();
+        // A hand-written calibration record (the live probes are exercised
+        // by the unit tests in tuner::calibrate).
+        tuner.wisdom.calibration = Some(Calibration {
+            fft_flops_per_sec: 3.0e9,
+            mem_bw: 1.0e10,
+            alpha: 2.0e-7,
+            beta: 2.0e-10,
+        });
+        tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        tuner.wisdom.clone()
+    });
+    saved[0].save(&path).unwrap();
+    let loaded = Wisdom::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, saved[0]);
+    assert!(loaded.calibration.is_some(), "calibration must persist");
+
+    let outs = run_world(2, move |comm| {
+        let mut tuner = Tuner::with_wisdom(fftb::model::Machine::local_cpu(), loaded.clone());
+        let tuned = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        (tuned.from_wisdom, tuned.choice.kind.label(), tuned.choice.window)
+    });
+    let first: Vec<_> = run_world(2, |comm| {
+        let mut tuner = Tuner::local();
+        let t = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        (t.choice.kind.label(), t.choice.window)
+    });
+    for o in &outs {
+        assert!(o.0, "decision must come from loaded wisdom");
+        assert_eq!((&o.1, o.2), (&first[0].0, first[0].1), "wisdom must reproduce the choice");
+    }
+}
+
+#[test]
+fn empirical_mode_all_ranks_agree() {
+    let outs = run_world(4, |comm| {
+        let mut tuner = Tuner::local();
+        tuner.empirical_top_k = 3;
+        let backend = RustFftBackend::new();
+        let tuned = tuner
+            .plan_auto([8, 8, 8], 2, None, &comm, Some(&backend))
+            .expect("empirical plan_auto must succeed");
+        assert!(tuned.measured, "empirical mode must measure");
+        // The winner must execute.
+        let input = vec![ZERO; tuned.plan.input_len()];
+        let (out, _) = tuned.plan.execute(&backend, input, Direction::Forward);
+        tuned.plan.recycle(out);
+        // Re-request: the measured decision is wisdom now, no re-measuring.
+        let again = tuner.plan_auto([8, 8, 8], 2, None, &comm, Some(&backend)).unwrap();
+        assert!(again.from_wisdom && !again.measured);
+        (tuned.choice.kind.label(), tuned.choice.window)
+    });
+    for o in &outs {
+        assert_eq!(o, &outs[0], "empirical winners must agree across ranks");
+    }
+}
+
+#[test]
+fn auto_window_options_match_default_numerics() {
+    // FftbOptions::auto() frees only the window; the windowed exchange is
+    // bit-identical across windows, so the auto plan must agree exactly
+    // with the default plan.
+    let n = 8usize;
+    let p = 2usize;
+    let errs = run_world(p, move |comm| {
+        let grid = fftb::fftb::grid::ProcGrid::new(&[p], comm).unwrap();
+        let dom = || {
+            fftb::fftb::domain::Domain::new(vec![0, 0, 0], vec![n as i64 - 1; 3]).unwrap()
+        };
+        let mk = |layout: &str| {
+            fftb::fftb::tensor::DistTensor::zeros(
+                fftb::fftb::domain::DomainList::new(vec![dom()]).unwrap(),
+                layout,
+                Arc::clone(&grid),
+            )
+            .unwrap()
+        };
+        let (ti, to) = (mk("x{0} y z"), mk("X Y Z{0}"));
+        let auto = Fftb::plan_opt(
+            [n, n, n],
+            &to,
+            "X Y Z",
+            &ti,
+            "x y z",
+            Arc::clone(&grid),
+            FftbOptions::auto(),
+        )
+        .unwrap();
+        assert!(matches!(auto.kind, PlanKind::SlabPencil(_)));
+        let plain =
+            Fftb::plan([n, n, n], &to, "X Y Z", &ti, "x y z", Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = fftb::fftb::plan::testutil::phased(auto.input_len(), 11);
+        let (a, _) = auto.execute(&backend, input.clone(), Direction::Forward);
+        let (b, _) = plain.execute(&backend, input, Direction::Forward);
+        max_abs_diff(&a, &b)
+    });
+    for e in errs {
+        assert_eq!(e, 0.0, "window choice must never change results");
+    }
+}

@@ -187,6 +187,121 @@ fn overlapped_pencil_window_stays_allocation_free() {
 }
 
 #[test]
+fn noncube_unequal_extents_alternating_is_allocation_free() {
+    // [5, 4, 6] on p = 2: local input and output extents differ on every
+    // rank (ceil vs floor of the cyclic splits). The single recycled result
+    // slot used to regrow the caller's vector once per direction change;
+    // the size-classed slot pool keeps one buffer per class instead.
+    let shape = [5usize, 4, 6];
+    let (nb, p) = (2usize, 2usize);
+    let allocs_all = fftb::comm::run_world(p, |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+        assert_ne!(
+            plan.input_len(),
+            plan.output_len(),
+            "shape chosen to have unequal local extents"
+        );
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        drive(input, |v| plan.forward(&backend, v), |v| plan.inverse(&backend, v))
+    });
+    for allocs in &allocs_all {
+        assert_steady_state(allocs, "slab-pencil (non-cube, unequal extents)");
+    }
+}
+
+#[test]
+fn forward_only_sphere_with_recycle_is_allocation_free() {
+    // The forward-only G→r pattern: the caller consumes each dense cube
+    // and hands the storage back via `recycle`. The pool then serves every
+    // later forward without minting a cube (previously impossible: the
+    // caller kept the output, so the plan re-minted per call).
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (2usize, 2usize);
+    fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        for it in 0..4 {
+            let (cube, tr) = plan.forward(&backend, input.clone());
+            if it > 0 {
+                assert_eq!(tr.alloc_bytes, 0, "forward #{it} allocated with recycling on");
+            }
+            plan.recycle(cube);
+        }
+    });
+}
+
+#[test]
+fn forward_only_padded_sphere_with_recycle_is_allocation_free() {
+    // Same contract for the pad-to-cube baseline: its cube-sized storage
+    // circulates through the inner slab plan's pool, where recycled
+    // outputs land.
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (2usize, 2usize);
+    fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = PaddedSpherePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        for it in 0..4 {
+            let (cube, tr) = plan.forward(&backend, input.clone());
+            if it > 0 {
+                assert_eq!(tr.alloc_bytes, 0, "forward #{it} allocated with recycling on");
+            }
+            plan.recycle(cube);
+        }
+    });
+}
+
+#[test]
+fn inverse_only_padded_sphere_with_recycle_is_allocation_free() {
+    // The r→G-only pattern on the baseline plan: packed outputs recycled
+    // by the caller must serve the truncation stage of later inverses.
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+    let (nb, p) = (2usize, 2usize);
+    fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = PaddedSpherePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let cube = phased(plan.output_len(), grid.rank() as u64);
+        for it in 0..4 {
+            let (packed, tr) = plan.inverse(&backend, cube.clone());
+            if it > 0 {
+                assert_eq!(tr.alloc_bytes, 0, "inverse #{it} allocated with recycling on");
+            }
+            plan.recycle(packed);
+        }
+    });
+}
+
+#[test]
+fn forward_only_noncube_with_recycle_is_allocation_free() {
+    // Same recycling contract on a dense plan whose output is *larger*
+    // than its input on some ranks.
+    let shape = [5usize, 4, 6];
+    let (nb, p) = (2usize, 2usize);
+    fftb::comm::run_world(p, |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+        let backend = RustFftBackend::new();
+        let input = phased(plan.input_len(), grid.rank() as u64);
+        for it in 0..4 {
+            let (out, tr) = plan.forward(&backend, input.clone());
+            if it > 0 {
+                assert_eq!(tr.alloc_bytes, 0, "forward #{it} allocated with recycling on");
+            }
+            plan.recycle(out);
+        }
+    });
+}
+
+#[test]
 fn padded_sphere_steady_state_is_allocation_free() {
     let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
     let off = Arc::new(spec.offsets());
