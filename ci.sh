@@ -1,15 +1,19 @@
 #!/usr/bin/env sh
 # Tier-1 verification: build and test the rust tree with the default
-# (dependency-free) feature set (the test lane includes the tuner
-# integration tests in tests/tuner.rs), compile every bench harness
-# (cargo bench --no-run: benches otherwise only build on demand and can
-# rot), then build the docs with warnings as errors (enforces the
-# #![warn(missing_docs)] coverage of the comm, fftb::plan and tuner
-# trees). Run from anywhere.
+# (dependency-free) feature set (the unit/integration lane includes the
+# tuner integration tests in tests/tuner.rs; doc examples are split into
+# their own explicit lane so each doctest runs exactly once: cargo test
+# --doc covers the README quickstarts, the docs/TUNING.md walkthroughs
+# included into the tuner rustdoc, and all rustdoc examples), compile
+# every bench harness (cargo bench --no-run: benches otherwise only build
+# on demand and can rot), then build the docs with warnings as errors
+# (enforces the #![warn(missing_docs)] coverage of the comm, fftb::plan,
+# tuner, coordinator and model trees). Run from anywhere.
 set -eu
 cd "$(dirname "$0")/rust"
 cargo build --release
-cargo test -q
+cargo test -q --lib --bins --tests
+cargo test --doc -q
 cargo bench --no-run --quiet
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
-echo "ci.sh: tier-1 OK (build + test + bench-compile + doc)"
+echo "ci.sh: tier-1 OK (build + test + doctest + bench-compile + doc)"

@@ -1,11 +1,21 @@
 //! Micro-bench: the pairwise exchange disciplines side by side.
 //!
-//! For each (p, payload) cell the same flat complex alltoallv runs with
-//! the fully serial schedule (round s blocks on its receive before round
-//! s+1's send is posted) and with the windowed overlapped pipeline
-//! (window = p-1: all receives pre-posted, sends run ahead of the waits),
-//! under a deterministic per-rank start skew modeling imbalanced pack
-//! times — the regime where serial rounds convoy.
+//! Section 1 — serial vs overlapped: for each (p, payload) cell the same
+//! flat complex alltoallv runs with the fully serial schedule (round s
+//! blocks on its receive before round s+1's send is posted) and with the
+//! windowed overlapped pipeline (window = p-1: all receives pre-posted,
+//! sends run ahead of the waits), under a deterministic per-rank start
+//! skew modeling imbalanced pack times — the regime where serial rounds
+//! convoy.
+//!
+//! Section 2 — fused vs pre-packed: the full pack → exchange → unpack of
+//! a slab-style split/merge runs once as the monolithic three-phase path
+//! (`split_dim_into`, flat windowed exchange, `merge_dim_from`) and once
+//! through the fused engine (`SplitMergeKernel` packing each destination
+//! into its wire buffer as its round posts, unpacking as each wait
+//! completes). Reported: slowest-rank wall time per full exchange and the
+//! fused path's overlapped pack+unpack nanoseconds — the work the
+//! monolithic path serializes before/after the wire.
 //!
 //! Reported per discipline: slowest-rank wall time per exchange and
 //! slowest-rank `ExecTrace::wait_ns` per exchange (time blocked in
@@ -18,7 +28,9 @@ use std::time::{Duration, Instant};
 use fftb::comm::alltoall::{alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned};
 use fftb::comm::{barrier, run_world, CommTuning};
 use fftb::fft::complex::{Complex, ZERO};
-use fftb::fftb::plan::ExecTrace;
+use fftb::fftb::grid::cyclic;
+use fftb::fftb::plan::redistribute::{merge_dim_from, split_dim_into, volume};
+use fftb::fftb::plan::{fused_exchange, A2aSchedule, ExecTrace, SplitMergeKernel};
 
 const WARMUP: usize = 5;
 const ITERS: usize = 30;
@@ -34,6 +46,92 @@ fn busy_wait_us(us: u64) {
 
 fn fmt_us(d: Duration) -> String {
     format!("{:.1}us", d.as_secs_f64() * 1e6)
+}
+
+/// Fused vs pre-packed full exchange (pack + wire + unpack) on a
+/// slab-style split/merge, window 2, with the same per-rank start skew.
+fn fused_section() {
+    println!();
+    println!("fused vs pre-packed exchange (slab split/merge, window 2), skew {SKEW_US}us/rank");
+    println!(
+        "{:>4} {:>7} | {:>11} | {:>11} {:>14} | {}",
+        "p", "n", "pre-packed", "fused", "fused-overlap", "note"
+    );
+    for p in [2usize, 4, 8] {
+        for n in [16usize, 32] {
+            let (nb, ny) = (2usize, n);
+            let rows = run_world(p, move |comm| {
+                let me = comm.rank();
+                let lxc = cyclic::local_count(n, p, me);
+                let lzc = cyclic::local_count(n, p, me);
+                let sh_in = [nb, lxc, ny, n];
+                let sh_out = [nb, n, ny, lzc];
+                let sched = A2aSchedule::for_split_merge(sh_in, 3, sh_out, 1, p, me);
+                let data: Vec<Complex> =
+                    (0..volume(sh_in)).map(|i| Complex::new(i as f64, me as f64)).collect();
+                let tuning = CommTuning::with_window(2);
+
+                // Pre-packed: monolithic pack -> flat exchange -> merge.
+                let mut send = vec![ZERO; sched.send_total()];
+                let mut recv = vec![ZERO; sched.recv_total()];
+                let mut out = vec![ZERO; volume(sh_out)];
+                let mut t_pre = Duration::ZERO;
+                for it in 0..WARMUP + ITERS {
+                    barrier(&comm);
+                    busy_wait_us(me as u64 * SKEW_US);
+                    let t0 = Instant::now();
+                    split_dim_into(&data, sh_in, 3, p, &mut send, &sched.send_offs);
+                    let _ = alltoallv_complex_flat_tuned(
+                        &comm,
+                        &send,
+                        &sched.send_offs,
+                        &mut recv,
+                        &sched.recv_offs,
+                        tuning,
+                    );
+                    merge_dim_from(&recv, &sched.recv_offs, sh_out, 1, p, &mut out);
+                    if it >= WARMUP {
+                        t_pre += t0.elapsed();
+                    }
+                }
+                let want = out.clone();
+
+                // Fused: per-destination kernels inside the windowed engine.
+                let mut t_fused = Duration::ZERO;
+                let mut overlap_ns = 0u64;
+                for it in 0..WARMUP + ITERS {
+                    barrier(&comm);
+                    busy_wait_us(me as u64 * SKEW_US);
+                    let t0 = Instant::now();
+                    let c = {
+                        let mut k =
+                            SplitMergeKernel::new(&sched, &data, sh_in, 3, &mut out, sh_out, 1);
+                        fused_exchange(&comm, &mut k, tuning)
+                    };
+                    if it >= WARMUP {
+                        t_fused += t0.elapsed();
+                        overlap_ns += c.pack_overlap_ns + c.unpack_overlap_ns;
+                    }
+                }
+                assert_eq!(out, want, "fused exchange must be bit-identical");
+                (t_pre / ITERS as u32, t_fused / ITERS as u32, overlap_ns / ITERS as u64)
+            });
+            let t_pre = rows.iter().map(|r| r.0).max().unwrap();
+            let t_fused = rows.iter().map(|r| r.1).max().unwrap();
+            let overlap = rows.iter().map(|r| r.2).max().unwrap();
+            let note = if p >= 4 && t_fused > t_pre {
+                "fused did not win (timing noise?)"
+            } else {
+                ""
+            };
+            println!(
+                "{p:>4} {n:>6}^ | {:>11} | {:>11} {:>14} | {note}",
+                fmt_us(t_pre),
+                fmt_us(t_fused),
+                fmt_us(Duration::from_nanos(overlap)),
+            );
+        }
+    }
 }
 
 fn main() {
@@ -107,5 +205,6 @@ fn main() {
             );
         }
     }
+    fused_section();
     println!("a2a_micro bench done");
 }

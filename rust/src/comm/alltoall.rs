@@ -7,8 +7,7 @@
 //! MPICH does for large messages; the message/byte counts it produces are
 //! what `crate::model::netmodel` prices.
 //!
-//! Two execution disciplines are provided for the flat-buffer variant the
-//! plans drive:
+//! Two execution disciplines are provided for the flat-buffer variant:
 //!
 //! * **serial** ([`alltoallv_complex_flat_serial`]) — round `s` blocks on
 //!   its receive before round `s+1`'s send is even posted. One slow rank
@@ -20,13 +19,29 @@
 //!   the wire (and the partners) chew on rounds `s+1..s+window`. Self
 //!   blocks never touch the mailboxes in either discipline.
 //!
-//! Both report [`A2aCounters`]: nanoseconds spent blocked in waits and how
-//! many rounds were posted ahead of the serial schedule — the numbers
-//! `ExecTrace` surfaces as `wait_ns` / `overlap_rounds` and
-//! `benches/a2a_micro.rs` prints side by side.
+//! The windowed engine itself is **fused** ([`alltoallv_fused`]): instead
+//! of taking a pre-packed flat buffer, it drives per-destination
+//! [`FusedBlocks`] pack/unpack movers round by round — destination block
+//! `s + window` is packed *directly into its recycled wire buffer* after
+//! the wait for round `s` completes (while rounds `s+1..s+window` are
+//! still in flight), and each received block is unpacked as its own wait
+//! completes instead of after a full-exchange barrier. The first send
+//! therefore leaves after packing **one** block, not all `p`; see
+//! `docs/ARCHITECTURE.md` ("The exchange pipeline") for the timeline. The
+//! flat-buffer variants are thin [`FusedBlocks`] adapters over the same
+//! engine, and the plan layer bridges its `PackKernel` trait
+//! (`fftb::plan::stages`) to it, so one engine serves every caller.
+//!
+//! All disciplines report [`A2aCounters`]: nanoseconds spent blocked in
+//! waits, rounds posted ahead of the serial schedule, and the pack/unpack
+//! nanoseconds that ran *overlapped* with in-flight rounds — the numbers
+//! `ExecTrace` surfaces as `wait_ns` / `overlap_rounds` /
+//! `pack_overlap_ns` / `unpack_overlap_ns` and `benches/a2a_micro.rs`
+//! prints side by side.
 
 use std::time::Instant;
 
+use super::arena::WireBuf;
 use super::communicator::Comm;
 use crate::fft::complex::{self, Complex};
 
@@ -74,40 +89,119 @@ pub struct A2aCounters {
     /// Rounds whose send was posted ahead of the serial schedule (0 for
     /// the serial discipline and for `window == 1`).
     pub overlap_rounds: u64,
+    /// Nanoseconds spent in per-destination pack movers for every round
+    /// after the first send was posted — pack work that ran while the
+    /// exchange was already in flight. 0 for a 2-rank world (one remote
+    /// round), for the serial ordering (`window == 1`, where no round of
+    /// this rank is outstanding when the next pack runs — matching how
+    /// the cost model prices window 1 as hiding nothing), and for the
+    /// pre-packed serial baseline.
+    pub pack_overlap_ns: u64,
+    /// Nanoseconds spent unpacking received blocks while later rounds were
+    /// still outstanding (every round but the last). 0 for a 2-rank world,
+    /// for the serial ordering (`window == 1`), and for the barrier-style
+    /// unpack of the serial baseline.
+    pub unpack_overlap_ns: u64,
 }
 
-/// The windowed pairwise exchange over flat byte buffers. `soff`/`roff`
-/// map block index `j` (0..=p) to byte offsets into `send`/`recv`; block
-/// `j` of `send` goes to rank `j`, and rank `q`'s block lands at
-/// `recv[roff(q)..roff(q + 1)]`.
+/// Per-destination block movers driven by the fused windowed engine
+/// ([`alltoallv_fused`]): block sizes for wire-buffer checkout, a `pack`
+/// that appends one destination's block to its wire buffer, and an
+/// `unpack` that lands one received block.
 ///
-/// Discipline: all `p - 1` receives are posted as `irecv`s up front; sends
-/// are primed `window` rounds deep, and after the wait for round `s`
-/// completes the send for round `s + window` is posted — so while this
-/// rank blocks on round `s`, rounds `s+1..s+window` are already moving.
-/// The offset maps are plan-time constants and the wire buffers come from
-/// the world's shared arena, so steady-state exchanges allocate nothing.
-fn exchange_flat<FS, FR>(
+/// This is the comm-layer face of the contract; plans implement the
+/// `PackKernel` trait (`fftb::plan::stages`), which bridges here, so the
+/// comm layer stays plan-agnostic. Invariants the engine asserts:
+/// `pack(dest, out)` must append exactly `send_bytes(dest)` bytes, and the
+/// block handed to `unpack(src, ..)` always has `recv_bytes(src)` bytes.
+pub trait FusedBlocks {
+    /// Bytes of the block headed to rank `dest` (0 allowed).
+    fn send_bytes(&self, dest: usize) -> usize;
+    /// Bytes expected from rank `src` (0 allowed).
+    fn recv_bytes(&self, src: usize) -> usize;
+    /// Append rank `dest`'s packed block to `out`, in the destination's
+    /// canonical element order.
+    fn pack(&mut self, dest: usize, out: &mut WireBuf);
+    /// Land the block received from rank `src`.
+    fn unpack(&mut self, src: usize, block: &[u8]);
+    /// Move rank `me`'s self block end to end without wire staging, when
+    /// the implementation can (flat buffers: one memcpy). Return `false`
+    /// (the default) to have the engine route it as
+    /// `pack` → arena staging buffer → `unpack`.
+    fn self_move(&mut self, me: usize) -> bool {
+        let _ = me;
+        false
+    }
+}
+
+/// Pack round `round`'s destination block straight into a recycled wire
+/// buffer and post it. With a window of two or more, pack time for every
+/// round after the first counts as overlapped: at least one earlier round
+/// is still in flight while this block is being packed. At window 1 (the
+/// serial ordering) nothing of this rank is outstanding, so nothing is
+/// charged — mirroring the cost model, which prices window 1 as hiding
+/// no pack time.
+fn pack_and_send(
     comm: &Comm,
-    send: &[u8],
-    recv: &mut [u8],
-    soff: FS,
-    roff: FR,
+    blocks: &mut dyn FusedBlocks,
+    me: usize,
+    p: usize,
+    round: usize,
+    w: usize,
+    c: &mut A2aCounters,
+) {
+    let to = (me + round) % p;
+    let n = blocks.send_bytes(to);
+    let mut buf = comm.arena().checkout(n);
+    let t0 = Instant::now();
+    blocks.pack(to, &mut buf);
+    if w > 1 && round > 1 {
+        c.pack_overlap_ns += t0.elapsed().as_nanos() as u64;
+    }
+    assert_eq!(buf.len(), n, "alltoall: pack for rank {to} produced the wrong block size");
+    comm.send_coll_buf(to, T_A2A, buf);
+}
+
+/// The fused windowed pairwise exchange — the one engine behind every
+/// alltoall variant in this module.
+///
+/// Discipline: all `p - 1` receives are logically posted up front; sends
+/// are primed [`CommTuning::window`] rounds deep, each packed by
+/// `blocks.pack` *directly into its recycled wire buffer* immediately
+/// before posting (the first send leaves after packing one block, not all
+/// `p`). After the wait for round `s` completes, its block is unpacked in
+/// place by `blocks.unpack` — while rounds `s+1..s+window` are still in
+/// flight — and the send for round `s + window` is packed and posted. The
+/// self block moves through an arena staging buffer and never touches the
+/// mailboxes. Wire buffers come from the world's shared arena and block
+/// geometry is a plan-time constant, so steady-state exchanges allocate
+/// nothing.
+///
+/// `window == 1` reproduces the serial schedule's ordering (pack `s`, send
+/// `s`, wait `s`, unpack `s`); results are bit-identical for every window
+/// because the window changes only *when* blocks move, never where they
+/// land.
+pub fn alltoallv_fused(
+    comm: &Comm,
+    blocks: &mut dyn FusedBlocks,
     tuning: CommTuning,
-) -> A2aCounters
-where
-    FS: Fn(usize) -> usize,
-    FR: Fn(usize) -> usize,
-{
+) -> A2aCounters {
     let p = comm.size();
     let me = comm.rank();
     let mut c = A2aCounters::default();
 
-    // Self block: straight copy, never touches the mailboxes.
-    let (s0, s1) = (soff(me), soff(me + 1));
-    let (r0, r1) = (roff(me), roff(me + 1));
-    assert_eq!(s1 - s0, r1 - r0, "alltoall: self block extents disagree");
-    recv[r0..r1].copy_from_slice(&send[s0..s1]);
+    // Self block: moved directly when the implementation can, otherwise
+    // packed into an arena staging buffer and landed right away — never
+    // touches the mailboxes either way.
+    let n_self = blocks.send_bytes(me);
+    assert_eq!(n_self, blocks.recv_bytes(me), "alltoall: self block extents disagree");
+    if !blocks.self_move(me) {
+        let mut staging = comm.arena().checkout(n_self);
+        blocks.pack(me, &mut staging);
+        assert_eq!(staging.len(), n_self, "alltoall: self pack produced the wrong block size");
+        blocks.unpack(me, &staging);
+        // The staging buffer returns to the shared arena on drop.
+    }
     if p == 1 {
         return c;
     }
@@ -122,42 +216,108 @@ where
     // materialized at its wait site — identical semantics, and the engine
     // stays allocation-free (no request array).
 
-    // Prime the send window: rounds 1..=w.
+    // Prime the send window: rounds 1..=w, each packed into its wire
+    // buffer at post time.
     let mut posted = 0usize;
     while posted < w {
         posted += 1;
-        let to = (me + posted) % p;
-        let _ = comm.isend_coll(to, T_A2A, &send[soff(to)..soff(to + 1)]);
+        pack_and_send(comm, blocks, me, p, posted, w, &mut c);
         if posted > 1 {
             c.overlap_rounds += 1;
         }
     }
 
-    // Drain: wait for round s's payload, land it, top the window back up.
+    // Drain: wait for round s's payload, unpack it in place, top the
+    // window back up with a freshly packed send.
     for s in 1..p {
         let from = (me + p - s) % p;
         let req = comm.irecv_coll(from, T_A2A);
         let t0 = Instant::now();
         let buf = req.wait().expect("irecv requests always carry a payload");
         c.wait_ns += t0.elapsed().as_nanos() as u64;
-        let (d0, d1) = (roff(from), roff(from + 1));
         assert_eq!(
             buf.len(),
-            d1 - d0,
+            blocks.recv_bytes(from),
             "alltoall: peer {from} sent a block of the wrong size"
         );
-        recv[d0..d1].copy_from_slice(&buf);
+        let t1 = Instant::now();
+        blocks.unpack(from, &buf);
+        if w > 1 && s < rounds {
+            // Later rounds of this rank are still outstanding: this
+            // unpack overlapped the exchange instead of running after a
+            // barrier. (At window 1 nothing of ours is in flight here.)
+            c.unpack_overlap_ns += t1.elapsed().as_nanos() as u64;
+        }
         drop(buf); // the wire buffer returns to the shared arena
         if posted < rounds {
             posted += 1;
-            let to = (me + posted) % p;
-            let _ = comm.isend_coll(to, T_A2A, &send[soff(to)..soff(to + 1)]);
+            pack_and_send(comm, blocks, me, p, posted, w, &mut c);
             if w > 1 {
                 c.overlap_rounds += 1;
             }
         }
     }
     c
+}
+
+/// [`FusedBlocks`] adapter for pre-packed flat byte buffers: pack is a
+/// straight copy out of `send[soff(j)..soff(j+1)]`, unpack a straight copy
+/// into `recv[roff(q)..roff(q+1)]`.
+struct FlatBlocks<'a, FS, FR> {
+    send: &'a [u8],
+    recv: &'a mut [u8],
+    soff: FS,
+    roff: FR,
+}
+
+impl<FS, FR> FusedBlocks for FlatBlocks<'_, FS, FR>
+where
+    FS: Fn(usize) -> usize,
+    FR: Fn(usize) -> usize,
+{
+    fn send_bytes(&self, dest: usize) -> usize {
+        (self.soff)(dest + 1) - (self.soff)(dest)
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        (self.roff)(src + 1) - (self.roff)(src)
+    }
+
+    fn pack(&mut self, dest: usize, out: &mut WireBuf) {
+        out.extend_from_slice(&self.send[(self.soff)(dest)..(self.soff)(dest + 1)]);
+    }
+
+    fn unpack(&mut self, src: usize, block: &[u8]) {
+        self.recv[(self.roff)(src)..(self.roff)(src + 1)].copy_from_slice(block);
+    }
+
+    fn self_move(&mut self, me: usize) -> bool {
+        let (s0, s1) = ((self.soff)(me), (self.soff)(me + 1));
+        let (r0, r1) = ((self.roff)(me), (self.roff)(me + 1));
+        self.recv[r0..r1].copy_from_slice(&self.send[s0..s1]);
+        true
+    }
+}
+
+/// The windowed pairwise exchange over flat byte buffers — a
+/// [`FlatBlocks`] adapter over [`alltoallv_fused`]. `soff`/`roff` map
+/// block index `j` (0..=p) to byte offsets into `send`/`recv`; block `j`
+/// of `send` goes to rank `j`, and rank `q`'s block lands at
+/// `recv[roff(q)..roff(q + 1)]`.
+fn exchange_flat<FS, FR>(
+    comm: &Comm,
+    send: &[u8],
+    recv: &mut [u8],
+    soff: FS,
+    roff: FR,
+    tuning: CommTuning,
+) -> A2aCounters
+where
+    FS: Fn(usize) -> usize,
+    FR: Fn(usize) -> usize,
+{
+    let mut blocks = FlatBlocks { send, recv, soff, roff };
+    alltoallv_fused(comm, &mut blocks, tuning)
 }
 
 fn validate_flat(

@@ -16,8 +16,9 @@
 //!   nonblocking `isend`/`irecv` with [`Request`]/[`waitall`], and
 //!   `split`.
 //! * [`alltoall`] / [`collectives`] — the collectives the FFT plans drive,
-//!   including the windowed overlapped pairwise exchange tuned by
-//!   [`CommTuning`].
+//!   including the *fused* windowed overlapped pairwise exchange
+//!   ([`alltoallv_fused`]) that packs each destination block straight into
+//!   its recycled wire buffer round by round, tuned by [`CommTuning`].
 #![warn(missing_docs)]
 
 pub mod alltoall;
@@ -28,7 +29,8 @@ pub mod mailbox;
 
 pub use alltoall::{
     alltoall, alltoall_into, alltoallv, alltoallv_complex, alltoallv_complex_flat,
-    alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned, A2aCounters, CommTuning,
+    alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned, alltoallv_fused, A2aCounters,
+    CommTuning, FusedBlocks,
 };
 pub use arena::{BufferArena, WireBuf};
 pub use collectives::{

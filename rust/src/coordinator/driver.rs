@@ -10,7 +10,13 @@
 //! Plans are drawn from a per-driver [`PlanCache`] keyed by
 //! `(shape, nb, window)` (direction-agnostic: one slab-pencil plan serves
 //! both directions): the first flush of a given batch size
-//! plans and warms a workspace, every later flush reuses both —
+//! plans and warms a workspace, every later flush reuses both. The
+//! exchange window is either fixed at construction
+//! ([`BatchingDriver::with_tuning`]) or resolved per batch size through
+//! the tuner's cost model ([`BatchingDriver::with_auto_window`] →
+//! [`search::auto_window`](crate::tuner::search::auto_window)), so a
+//! 2-job flush and a 64-job flush each get the window the model prefers
+//! for their message sizes —
 //! `ExecTrace::plan_cache_hit` reports which happened, and steady-state
 //! flushes are allocation-free (`alloc_bytes == 0`) because the cached
 //! plan's workspace and slot pool survive between flushes. The flush path
@@ -29,7 +35,9 @@ use crate::fftb::backend::LocalFftBackend;
 use crate::fftb::error::Result;
 use crate::fftb::grid::ProcGrid;
 use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, SlabPencilPlan};
+use crate::model::machine::Machine;
 use crate::tuner::cache::{PlanCache, PlanKey};
+use crate::tuner::search::{self, CandidateKind, TuneRequest};
 
 /// One queued single-band transform request.
 pub struct TransformJob {
@@ -49,6 +57,10 @@ pub struct BatchingDriver {
     /// plan-cache key.
     comm_id: u64,
     tuning: CommTuning,
+    /// When set, the exchange window is resolved per batch size through
+    /// `tuner::search::auto_window` on this machine description instead of
+    /// taking `tuning.window`.
+    auto_machine: Option<Machine>,
     queue: Vec<TransformJob>,
     /// Reusable flush scratch: jobs taken this flush / jobs kept queued.
     take_buf: Vec<TransformJob>,
@@ -80,6 +92,7 @@ impl BatchingDriver {
             grid,
             comm_id,
             tuning,
+            auto_machine: None,
             queue: Vec::new(),
             take_buf: Vec::new(),
             keep_buf: Vec::new(),
@@ -87,6 +100,33 @@ impl BatchingDriver {
             cache: PlanCache::new(),
             completed: Vec::new(),
             traces: Vec::new(),
+        }
+    }
+
+    /// A driver that resolves its exchange window through the tuner's cost
+    /// model instead of a fixed `CommTuning`: every flush prices the
+    /// batched slab-pencil stage table for its *actual* batch size on
+    /// `machine` ([`search::auto_window`]) and plans with the cheapest
+    /// window. Deterministic across ranks (worst-rank stage counts), and
+    /// the resolved window is part of the plan-cache key, so a batch size
+    /// whose optimum differs gets its own plan.
+    pub fn with_auto_window(shape: [usize; 3], grid: Arc<ProcGrid>, machine: Machine) -> Self {
+        let mut d = Self::new(shape, grid);
+        d.auto_machine = Some(machine);
+        d
+    }
+
+    /// The exchange window a flush of `nb` jobs will use: the model's pick
+    /// when the driver was built with [`BatchingDriver::with_auto_window`],
+    /// the fixed `CommTuning::window` otherwise.
+    pub fn window_for(&self, nb: usize) -> usize {
+        match &self.auto_machine {
+            Some(m) => search::auto_window(
+                CandidateKind::SlabPencil,
+                &TuneRequest { shape: self.shape, nb, p: self.grid.size(), sphere: None },
+                m,
+            ),
+            None => self.tuning.window,
         }
     }
 
@@ -120,8 +160,11 @@ impl BatchingDriver {
     /// Fetch (or build and cache) the batched plan for `nb` bands. The key
     /// is direction-agnostic (`dir: None`): a slab-pencil plan precomputes
     /// both exchange schedules, so forward and inverse flushes of the same
-    /// batch size share one plan — and one warmed workspace.
+    /// batch size share one plan — and one warmed workspace. The window
+    /// (fixed or model-resolved, see [`BatchingDriver::window_for`]) is
+    /// part of the key.
     fn plan_for(&mut self, nb: usize) -> Result<(Arc<Fftb>, bool)> {
+        let window = self.window_for(nb);
         // Static string keys: the per-flush lookup allocates nothing.
         let key = PlanKey {
             comm_id: self.comm_id,
@@ -130,16 +173,16 @@ impl BatchingDriver {
             kind: "slab-pencil".into(),
             nb,
             dir: None,
-            window: self.tuning.window,
+            window,
         };
-        let (shape, grid, tuning) = (self.shape, Arc::clone(&self.grid), self.tuning);
+        let (shape, grid) = (self.shape, Arc::clone(&self.grid));
         self.cache.get_or_insert(key, || {
             let mut fx = Fftb {
                 kind: PlanKind::SlabPencil(SlabPencilPlan::new(shape, nb, grid)?),
                 sizes: shape,
                 nb,
             };
-            fx.set_comm_tuning(tuning);
+            fx.set_comm_tuning(CommTuning::with_window(window));
             Ok(fx)
         })
     }
@@ -347,6 +390,49 @@ mod tests {
             );
             assert!(driver.traces[1].plan_cache_hit);
         });
+    }
+
+    #[test]
+    fn auto_window_driver_resolves_through_the_tuner() {
+        use crate::model::machine::Machine;
+        use crate::tuner::search::{self, CandidateKind, TuneRequest};
+
+        let shape = [8usize, 8, 8];
+        let p = 2;
+        let outs = run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver =
+                BatchingDriver::with_auto_window(shape, Arc::clone(&grid), Machine::local_cpu());
+            // The resolved window must be exactly the tuner's window-only
+            // search for the same request.
+            let nb = 3usize;
+            let want = search::auto_window(
+                CandidateKind::SlabPencil,
+                &TuneRequest { shape, nb, p, sphere: None },
+                &Machine::local_cpu(),
+            );
+            assert_eq!(driver.window_for(nb), want);
+
+            // And flushes still work end-to-end, hitting the cache on
+            // repeats of the same batch size.
+            for _ in 0..2 {
+                for i in 0..nb as u64 {
+                    let g = phased(512, i);
+                    driver.submit(TransformJob {
+                        id: i,
+                        data: scatter_cube_x(&g, 1, shape, p, grid.rank()),
+                        dir: Direction::Forward,
+                    });
+                }
+                assert_eq!(driver.flush(&backend, Direction::Forward), nb);
+                driver.drain_completed();
+            }
+            driver.plan_cache_stats()
+        });
+        for (hits, misses) in outs {
+            assert_eq!((hits, misses), (1, 1), "second flush must reuse the plan");
+        }
     }
 
     #[test]

@@ -9,19 +9,24 @@ use crate::util::json::Json;
 /// Aggregated view of one experiment configuration.
 #[derive(Clone, Debug)]
 pub struct MetricsSink {
+    /// Configuration label printed in tables and JSON records.
     pub label: String,
+    /// Per-run traces recorded so far, in call order.
     pub runs: Vec<ExecTrace>,
 }
 
 impl MetricsSink {
+    /// An empty sink for the configuration named `label`.
     pub fn new(label: impl Into<String>) -> Self {
         MetricsSink { label: label.into(), runs: Vec::new() }
     }
 
+    /// Record one execution's trace.
     pub fn record(&mut self, trace: ExecTrace) {
         self.runs.push(trace);
     }
 
+    /// Mean wall-clock time per run, summed over all stages.
     pub fn mean_total(&self) -> Duration {
         if self.runs.is_empty() {
             return Duration::ZERO;
@@ -29,6 +34,7 @@ impl MetricsSink {
         self.runs.iter().map(|t| t.total_time()).sum::<Duration>() / self.runs.len() as u32
     }
 
+    /// Mean time per run spent in comm stages.
     pub fn mean_comm(&self) -> Duration {
         if self.runs.is_empty() {
             return Duration::ZERO;
@@ -57,10 +63,12 @@ impl MetricsSink {
         )
     }
 
+    /// Total bytes sent to other ranks over all recorded runs.
     pub fn total_bytes(&self) -> u64 {
         self.runs.iter().map(|t| t.comm_bytes()).sum()
     }
 
+    /// Total point-to-point messages sent over all recorded runs.
     pub fn total_messages(&self) -> u64 {
         self.runs.iter().map(|t| t.comm_messages()).sum()
     }
@@ -85,10 +93,8 @@ impl MetricsSink {
         }
     }
 
-    /// Measured pack/unpack bandwidth (B/s) over reshape stages. Uses the
-    /// byte totals the planner reports through comm stages as a proxy of
-    /// block size; reshape stages carry no byte annotation, so this returns
-    /// 0 when no comm stages exist.
+    /// One human-readable table row: label, mean total/comm time, wire
+    /// bytes and message count.
     pub fn one_line(&self) -> String {
         format!(
             "{:<34} {:>12?} total  {:>12?} comm  {:>12} B  {:>8} msgs",

@@ -6,6 +6,7 @@
 //! `BatchingDriver` is the component that aggregates them so every
 //! communication stage runs once per *batch*, not once per band — the
 //! difference between the dark- and light-blue lines of Fig. 9.
+#![warn(missing_docs)]
 
 pub mod driver;
 pub mod metrics;

@@ -9,7 +9,11 @@
 //!
 //! Band staging and the batch-wide output run through the loop's own
 //! [`Workspace`]; the inner single-band plan recycles each band vector, so
-//! steady-state loops allocate nothing either.
+//! steady-state loops allocate nothing either. Each inner transform drives
+//! the fused windowed exchange of its `SlabPencilPlan` (per-destination
+//! pack kernels, `CommTuning` forwarded through `set_tuning`), and the
+//! loop's accumulated trace sums the per-iteration overlap counters
+//! (`wait_ns`, `overlap_rounds`, `pack_overlap_ns`, `unpack_overlap_ns`).
 
 use std::sync::{Arc, Mutex};
 
@@ -75,6 +79,8 @@ impl NonBatchedLoop {
         total.alloc_bytes += it.alloc_bytes;
         total.wait_ns += it.wait_ns;
         total.overlap_rounds += it.overlap_rounds;
+        total.pack_overlap_ns += it.pack_overlap_ns;
+        total.unpack_overlap_ns += it.unpack_overlap_ns;
         if total.stages.is_empty() {
             total.stages = it.stages;
         } else {

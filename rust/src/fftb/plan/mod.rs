@@ -22,11 +22,14 @@
 //!
 //! Every plan precomputes its exchange schedules ([`A2aSchedule`]) and owns
 //! a reusable [`Workspace`](workspace::Workspace); at execute time the
-//! alltoalls run the windowed overlapped pipeline of
-//! [`crate::comm::alltoall`], tuned per plan via
+//! alltoalls run the *fused* windowed overlapped pipeline of
+//! [`crate::comm::alltoall`] — per-destination [`PackKernel`]s pack each
+//! block straight into its recycled wire buffer as its round posts and
+//! unpack each received block as its wait completes — tuned per plan via
 //! [`CommTuning`](crate::comm::CommTuning) (`FftbOptions::comm`, or
-//! `set_tuning` on a concrete plan). See `docs/ARCHITECTURE.md` for the
-//! plan-time vs execute-time contract.
+//! `set_tuning` on a concrete plan). See `docs/ARCHITECTURE.md` ("The
+//! exchange pipeline") for the timeline and the plan-time vs execute-time
+//! contract.
 #![warn(missing_docs)]
 
 pub mod batched;
@@ -51,9 +54,9 @@ use crate::fftb::tensor::DistTensor;
 pub use batched::NonBatchedLoop;
 pub use pencil::PencilPlan;
 pub use planewave::{PaddedSpherePlan, PlaneWavePlan};
-pub use redistribute::A2aSchedule;
+pub use redistribute::{A2aSchedule, SplitMergeKernel};
 pub use slab_pencil::SlabPencilPlan;
-pub use stages::{ExecTrace, StageKind, StageTrace};
+pub use stages::{fused_exchange, ExecTrace, PackKernel, StageKind, StageTrace};
 
 /// The concrete stage pipeline the planner selected.
 pub enum PlanKind {

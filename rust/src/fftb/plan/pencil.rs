@@ -19,13 +19,18 @@
 //! `Fftb::plan` in `plan/mod.rs`), which preserves the paper's API surface
 //! (Table 1: processing grid 1D/2D/3D) with the same communication volume.
 //!
-//! All four exchanges (two per direction) have plan-time [`A2aSchedule`]s;
-//! execution ping-pongs between the caller's vector and the plan's
-//! [`Workspace`] flat buffers — zero steady-state allocation.
+//! All four exchanges (two per direction) have plan-time [`A2aSchedule`]s
+//! and run **fused**: each destination's residue block is packed by a
+//! [`SplitMergeKernel`] straight into its recycled wire buffer as its
+//! round posts, and each received block merges into the next stage tensor
+//! as its wait completes — no monolithic pack/unpack stages around the
+//! exchange, zero steady-state allocation (buffers ping-pong through the
+//! plan's [`Workspace`] slot pool).
 
+use std::cell::Cell;
 use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
+use crate::comm::alltoall::CommTuning;
 use crate::comm::communicator::Comm;
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
@@ -33,9 +38,9 @@ use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
 use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 
-use super::redistribute::{merge_dim_from, split_dim_into, volume, A2aSchedule, Shape4};
-use super::stages::{ExecTrace, StageTimer};
-use super::workspace::{ensure, Workspace};
+use super::redistribute::{volume, A2aSchedule, Shape4, SplitMergeKernel};
+use super::stages::{fused_exchange, ExecTrace, StageTimer};
+use super::workspace::{SlotPool, Workspace};
 
 /// Batched pencil-decomposition 3D FFT plan on a 2D grid.
 pub struct PencilPlan {
@@ -156,29 +161,41 @@ impl PencilPlan {
         self.run(backend, input, Direction::Inverse)
     }
 
-    /// One scheduled exchange: size the flat recv buffer, run the windowed
-    /// overlapped alltoall, record wire traffic and overlap counters.
+    /// One fused scheduled exchange: take the destination tensor from the
+    /// slot pool, drive the [`SplitMergeKernel`] (split `dim_src` of
+    /// `data`, merge `dim_dst` of the new tensor) through the fused
+    /// windowed engine, swap the new tensor in and recycle the old one.
+    /// Records wire traffic and overlap counters.
     #[allow(clippy::too_many_arguments)]
     fn exchange(
         t: &mut StageTimer,
         name: &'static str,
         comm: &Comm,
         sched: &A2aSchedule,
-        send: &[Complex],
-        recv: &mut Vec<Complex>,
-        alloc: &std::cell::Cell<u64>,
+        data: &mut Vec<Complex>,
+        sh_src: Shape4,
+        dim_src: usize,
+        sh_dst: Shape4,
+        dim_dst: usize,
+        slots: &mut SlotPool,
+        alloc: &Cell<u64>,
         tuning: CommTuning,
     ) {
         t.comm_a2a(name, || {
-            ensure(&mut *recv, sched.recv_total(), alloc);
-            let c = alltoallv_complex_flat_tuned(
-                comm,
-                send,
-                &sched.send_offs,
-                &mut *recv,
-                &sched.recv_offs,
-                tuning,
-            );
+            let mut out = slots.take(volume(sh_dst), alloc);
+            let c = {
+                let mut k = SplitMergeKernel::new(
+                    sched,
+                    &data[..],
+                    sh_src,
+                    dim_src,
+                    &mut out,
+                    sh_dst,
+                    dim_dst,
+                );
+                fused_exchange(comm, &mut k, tuning)
+            };
+            slots.recycle(std::mem::replace(data, out));
             ((), sched.bytes_remote(), sched.msgs(), c)
         });
     }
@@ -189,14 +206,13 @@ impl PencilPlan {
         mut data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
-        let (p0, p1) = (self.grid.axis_len(0), self.grid.axis_len(1));
         let row = self.grid.axis_comm(0);
         let col = self.grid.axis_comm(1);
         let (sh1, sh2, sh3) = (self.sh1, self.sh2, self.sh3);
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, slots, alloc, .. } = ws;
+        let Workspace { fft, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
@@ -209,31 +225,19 @@ impl PencilPlan {
                 t.compute("fft_x", lines(data.len(), self.nx), || {
                     backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);
                 });
-                // 2. Row alltoall: split x, merge y.
-                t.reshape("pack_x", || {
-                    ensure(&mut *send, self.fwd_xy.send_total(), alloc);
-                    split_dim_into(&data, sh1, 1, p0, &mut *send, &self.fwd_xy.send_offs);
-                });
-                Self::exchange(&mut t, "a2a_xy", row, &self.fwd_xy, &*send, &mut *recv, alloc, self.tuning);
-                t.reshape("unpack_y", || {
-                    let mut mid = slots.take(volume(sh2), alloc);
-                    merge_dim_from(&*recv, &self.fwd_xy.recv_offs, sh2, 2, p0, &mut mid);
-                    slots.recycle(std::mem::replace(&mut data, mid));
-                });
+                // 2. Fused row alltoall: split x, merge y.
+                Self::exchange(
+                    &mut t, "a2a_xy", row, &self.fwd_xy, &mut data, sh1, 1, sh2, 2, slots,
+                    alloc, self.tuning,
+                );
                 t.compute("fft_y", lines(data.len(), self.ny), || {
                     backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
                 });
-                // 3. Column alltoall: split y, merge z.
-                t.reshape("pack_y", || {
-                    ensure(&mut *send, self.fwd_yz.send_total(), alloc);
-                    split_dim_into(&data, sh2, 2, p1, &mut *send, &self.fwd_yz.send_offs);
-                });
-                Self::exchange(&mut t, "a2a_yz", col, &self.fwd_yz, &*send, &mut *recv, alloc, self.tuning);
-                t.reshape("unpack_z", || {
-                    let mut out = slots.take(volume(sh3), alloc);
-                    merge_dim_from(&*recv, &self.fwd_yz.recv_offs, sh3, 3, p1, &mut out);
-                    slots.recycle(std::mem::replace(&mut data, out));
-                });
+                // 3. Fused column alltoall: split y, merge z.
+                Self::exchange(
+                    &mut t, "a2a_yz", col, &self.fwd_yz, &mut data, sh2, 2, sh3, 3, slots,
+                    alloc, self.tuning,
+                );
                 t.compute("fft_z", lines(data.len(), self.nz), || {
                     backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
                 });
@@ -243,29 +247,17 @@ impl PencilPlan {
                 t.compute("ifft_z", lines(data.len(), self.nz), || {
                     backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
                 });
-                t.reshape("pack_z", || {
-                    ensure(&mut *send, self.inv_zy.send_total(), alloc);
-                    split_dim_into(&data, sh3, 3, p1, &mut *send, &self.inv_zy.send_offs);
-                });
-                Self::exchange(&mut t, "a2a_zy", col, &self.inv_zy, &*send, &mut *recv, alloc, self.tuning);
-                t.reshape("unpack_y", || {
-                    let mut mid = slots.take(volume(sh2), alloc);
-                    merge_dim_from(&*recv, &self.inv_zy.recv_offs, sh2, 2, p1, &mut mid);
-                    slots.recycle(std::mem::replace(&mut data, mid));
-                });
+                Self::exchange(
+                    &mut t, "a2a_zy", col, &self.inv_zy, &mut data, sh3, 3, sh2, 2, slots,
+                    alloc, self.tuning,
+                );
                 t.compute("ifft_y", lines(data.len(), self.ny), || {
                     backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
                 });
-                t.reshape("pack_y", || {
-                    ensure(&mut *send, self.inv_yx.send_total(), alloc);
-                    split_dim_into(&data, sh2, 2, p0, &mut *send, &self.inv_yx.send_offs);
-                });
-                Self::exchange(&mut t, "a2a_yx", row, &self.inv_yx, &*send, &mut *recv, alloc, self.tuning);
-                t.reshape("unpack_x", || {
-                    let mut out = slots.take(volume(sh1), alloc);
-                    merge_dim_from(&*recv, &self.inv_yx.recv_offs, sh1, 1, p0, &mut out);
-                    slots.recycle(std::mem::replace(&mut data, out));
-                });
+                Self::exchange(
+                    &mut t, "a2a_yx", row, &self.inv_yx, &mut data, sh2, 2, sh1, 1, slots,
+                    alloc, self.tuning,
+                );
                 t.compute("ifft_x", lines(data.len(), self.nx), || {
                     backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);
                 });
@@ -306,7 +298,8 @@ mod tests {
             );
             let backend = RustFftBackend::new();
             let (out, trace) = plan.forward(&backend, local);
-            assert_eq!(trace.stages.len(), 9);
+            // fft_x, fused a2a_xy, fft_y, fused a2a_yz, fft_z.
+            assert_eq!(trace.stages.len(), 5);
             out
         });
         let got = gather_cube_xy(&outs, nb, shape, p0, p1);

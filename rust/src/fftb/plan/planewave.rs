@@ -23,17 +23,23 @@
 //!
 //! Everything shape-dependent is computed once at plan time: the
 //! `cols_of_rank(q)` tables for every rank (previously rebuilt inside each
-//! forward *and* inverse call), the alltoall block extents and flat-buffer
-//! offsets, and the disc x-extent. Execution routes all scratch — dense
-//! z-columns, panel buffers, flat send/recv staging, the output cube —
-//! through the plan's [`Workspace`], so the steady state of an SCF loop
-//! (alternating forward/inverse) allocates nothing.
+//! forward *and* inverse call), the alltoall block extents, and the disc
+//! x-extent. The exchange runs **fused**: `SphereFwdKernel` /
+//! `SphereInvKernel` (this module's `PackKernel` implementations) pack
+//! each destination's z-residue columns straight into a recycled wire
+//! buffer as that round posts, and land each received block as its wait
+//! completes — no monolithic pack/unpack stages, no flat send/recv
+//! staging at all. Execution routes all scratch — dense
+//! z-columns, panel buffers, the output cube — through the plan's
+//! [`Workspace`], so the steady state of an SCF loop (alternating
+//! forward/inverse) allocates nothing.
 
 use std::cell::Cell;
 use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
-use crate::fft::complex::Complex;
+use crate::comm::alltoall::CommTuning;
+use crate::comm::arena::WireBuf;
+use crate::fft::complex::{self, Complex};
 use crate::fft::dft::Direction;
 use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
 use crate::fftb::error::{FftbError, Result};
@@ -41,8 +47,11 @@ use crate::fftb::grid::{cyclic, ProcGrid};
 use crate::fftb::sphere::OffsetArray;
 
 use super::redistribute::A2aSchedule;
-use super::stages::{ExecTrace, StageTimer};
+use super::stages::{fused_exchange, ExecTrace, PackKernel, StageTimer};
 use super::workspace::{ensure, ensure_zeroed, Workspace};
+
+/// Bytes per complex element on the wire.
+const ELEM: usize = std::mem::size_of::<Complex>();
 
 /// Batched plane-wave transform plan for one sphere on a 1D grid.
 pub struct PlaneWavePlan {
@@ -71,6 +80,110 @@ pub struct PlaneWavePlan {
     /// Overlap knobs of the windowed exchange.
     tuning: CommTuning,
     ws: Mutex<Workspace>,
+}
+
+/// Fused pack/unpack movers of the forward sphere exchange (`G`-sphere →
+/// `r`-cube): destination `s`'s z-residues are packed straight from the
+/// dense z-columns as round `s` posts, and each source rank's disc columns
+/// land in the zeroed output slab as that round's wait completes.
+struct SphereFwdKernel<'a> {
+    plan: &'a PlaneWavePlan,
+    /// Dense z-columns `[nb, nz, ncols]` (after `pad_fft_z`).
+    work: &'a [Complex],
+    /// Zeroed output slab `[nb, nx, ny, lzc]` the columns land in.
+    cube: &'a mut [Complex],
+}
+
+impl PackKernel for SphereFwdKernel<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.plan.fwd.send_counts[dest] * ELEM
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.plan.fwd.recv_counts[src] * ELEM
+    }
+
+    fn pack(&mut self, s: usize, out: &mut WireBuf) {
+        let p = self.plan.p();
+        let (nb, nz) = (self.plan.nb, self.plan.offsets.nz);
+        let lzc_s = cyclic::local_count(nz, p, s);
+        for c in 0..self.plan.ncols {
+            let base = c * nb * nz;
+            for lz in 0..lzc_s {
+                let gz = cyclic::local_to_global(lz, p, s);
+                let src = base + nb * gz;
+                out.extend_from_slice(complex::as_bytes(&self.work[src..src + nb]));
+            }
+        }
+    }
+
+    fn unpack(&mut self, q: usize, block: &[u8]) {
+        let (nb, nx, ny) = (self.plan.nb, self.plan.offsets.nx, self.plan.offsets.ny);
+        let lzc = self.plan.lzc;
+        let mut src = 0usize;
+        for &(gx, y) in &self.plan.cols_by_rank[q] {
+            for lz in 0..lzc {
+                let dst = nb * (gx + nx * (y + ny * lz));
+                complex::copy_from_bytes(
+                    &block[src..src + nb * ELEM],
+                    &mut self.cube[dst..dst + nb],
+                );
+                src += nb * ELEM;
+            }
+        }
+    }
+}
+
+/// Fused movers of the inverse sphere exchange (`r`-cube → `G`-sphere):
+/// destination rank `q`'s disc columns (this rank's z-slab share) are
+/// gathered from the cube as round `q` posts; each source rank's
+/// z-residues merge into the dense z-columns as its wait completes.
+struct SphereInvKernel<'a> {
+    plan: &'a PlaneWavePlan,
+    /// The z-distributed cube (after the truncating y pass).
+    cube: &'a [Complex],
+    /// Dense z-columns `[nb, nz, ncols]` being reassembled.
+    work: &'a mut [Complex],
+}
+
+impl PackKernel for SphereInvKernel<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.plan.inv.send_counts[dest] * ELEM
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.plan.inv.recv_counts[src] * ELEM
+    }
+
+    fn pack(&mut self, q: usize, out: &mut WireBuf) {
+        let (nb, nx, ny) = (self.plan.nb, self.plan.offsets.nx, self.plan.offsets.ny);
+        let lzc = self.plan.lzc;
+        for &(gx, y) in &self.plan.cols_by_rank[q] {
+            for lz in 0..lzc {
+                let src = nb * (gx + nx * (y + ny * lz));
+                out.extend_from_slice(complex::as_bytes(&self.cube[src..src + nb]));
+            }
+        }
+    }
+
+    fn unpack(&mut self, s: usize, block: &[u8]) {
+        let p = self.plan.p();
+        let (nb, nz) = (self.plan.nb, self.plan.offsets.nz);
+        let lzc_s = cyclic::local_count(nz, p, s);
+        let mut src = 0usize;
+        for c in 0..self.plan.ncols {
+            let base = c * nb * nz;
+            for lz in 0..lzc_s {
+                let gz = cyclic::local_to_global(lz, p, s);
+                let dst = base + nb * gz;
+                complex::copy_from_bytes(
+                    &block[src..src + nb * ELEM],
+                    &mut self.work[dst..dst + nb],
+                );
+                src += nb * ELEM;
+            }
+        }
+    }
 }
 
 impl PlaneWavePlan {
@@ -231,7 +344,6 @@ impl PlaneWavePlan {
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
         assert_eq!(input.len(), self.input_len(), "forward: wrong input length");
-        let p = self.p();
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
@@ -239,7 +351,7 @@ impl PlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, work, panel, slots, alloc } = ws;
+        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut cube = Vec::new();
         let mut trace = ExecTrace::default();
@@ -263,52 +375,22 @@ impl PlaneWavePlan {
             );
         });
 
-        // 2. Pack per-destination z-residue blocks and exchange.
-        //    Block to s: for each column c, for each lz (gz = lz*p + s), nb-run.
-        t.reshape("pack_cols", || {
-            ensure(&mut *send, self.fwd.send_total(), alloc);
-            for s in 0..p {
-                let lzc_s = cyclic::local_count(nz, p, s);
-                let mut cur = self.fwd.send_offs[s];
-                for c in 0..ncols {
-                    let base = c * nb * nz;
-                    for lz in 0..lzc_s {
-                        let gz = cyclic::local_to_global(lz, p, s);
-                        let src = base + nb * gz;
-                        send[cur..cur + nb].copy_from_slice(&work[src..src + nb]);
-                        cur += nb;
-                    }
-                }
-            }
-        });
-        t.comm_a2a("a2a_sphere", || {
-            ensure(&mut *recv, self.fwd.recv_total(), alloc);
-            let c = alltoallv_complex_flat_tuned(
-                comm,
-                &*send,
-                &self.fwd.send_offs,
-                &mut *recv,
-                &self.fwd.recv_offs,
-                self.tuning,
-            );
-            ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
+        // 2. Stage the zeroed slab the received columns land in (a pooled
+        //    output slot; the zero fill is the padding memset).
+        t.reshape("stage_cube", || {
+            cube = slots.take_zeroed(nb * nx * ny * lzc, alloc);
         });
 
-        // 3. Land the columns in a zeroed slab (a pooled output slot); FFT y
-        //    over the disc x-extent.
-        t.reshape("unpack_cube", || {
-            cube = slots.take_zeroed(nb * nx * ny * lzc, alloc);
-            for (q, cols_q) in self.cols_by_rank.iter().enumerate() {
-                let block = &recv[self.fwd.recv_offs[q]..self.fwd.recv_offs[q + 1]];
-                let mut src = 0;
-                for &(gx, y) in cols_q {
-                    for lz in 0..lzc {
-                        let dst = nb * (gx + nx * (y + ny * lz));
-                        cube[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
-                        src += nb;
-                    }
-                }
-            }
+        // 3. Fused exchange: destination s's z-residue block (for each
+        //    column c, each lz with gz = lz*p + s, one nb-run) is packed
+        //    into its wire buffer as round s posts; each rank's columns
+        //    land in the slab as that round's wait completes.
+        t.comm_a2a("a2a_sphere", || {
+            let c = {
+                let mut k = SphereFwdKernel { plan: self, work: &work[..], cube: &mut cube[..] };
+                fused_exchange(comm, &mut k, self.tuning)
+            };
+            ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
         });
 
         // y lines only where the disc has data: one line per (b, x in
@@ -345,7 +427,6 @@ impl PlaneWavePlan {
         mut cube: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
         assert_eq!(cube.len(), self.output_len(), "inverse: wrong input length");
-        let p = self.p();
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
@@ -353,7 +434,7 @@ impl PlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, work, panel, slots, alloc } = ws;
+        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut packed = Vec::new();
         let mut trace = ExecTrace::default();
@@ -380,50 +461,21 @@ impl PlaneWavePlan {
             self.fft_y_disc(backend, &mut cube, Direction::Inverse, &mut *panel, &mut *fft, alloc);
         });
 
-        // 3. Gather each owner's disc columns (my z residue) and exchange.
-        t.reshape("pack_cols", || {
-            ensure(&mut *send, self.inv.send_total(), alloc);
-            for (q, cols_q) in self.cols_by_rank.iter().enumerate() {
-                let mut cur = self.inv.send_offs[q];
-                for &(gx, y) in cols_q {
-                    for lz in 0..lzc {
-                        let src = nb * (gx + nx * (y + ny * lz));
-                        send[cur..cur + nb].copy_from_slice(&cube[src..src + nb]);
-                        cur += nb;
-                    }
-                }
-            }
-        });
-        t.comm_a2a("a2a_sphere", || {
-            ensure(&mut *recv, self.inv.recv_total(), alloc);
-            let c = alltoallv_complex_flat_tuned(
-                comm,
-                &*send,
-                &self.inv.send_offs,
-                &mut *recv,
-                &self.inv.recv_offs,
-                self.tuning,
-            );
-            ((), self.inv.bytes_remote(), self.inv.msgs(), c)
+        // 3. Stage the dense-column buffer the merge lands in (every
+        //    element is overwritten by the unpacks, so plain `ensure`).
+        t.reshape("stage_cols", || {
+            ensure(&mut *work, nb * nz * ncols, alloc);
         });
 
-        // 4. Merge z residues into dense local columns.
-        t.reshape("unpack_cols", || {
-            ensure(&mut *work, nb * nz * ncols, alloc);
-            for s in 0..p {
-                let lzc_s = cyclic::local_count(nz, p, s);
-                let block = &recv[self.inv.recv_offs[s]..self.inv.recv_offs[s + 1]];
-                let mut src = 0;
-                for c in 0..ncols {
-                    let base = c * nb * nz;
-                    for lz in 0..lzc_s {
-                        let gz = cyclic::local_to_global(lz, p, s);
-                        let dst = base + nb * gz;
-                        work[dst..dst + nb].copy_from_slice(&block[src..src + nb]);
-                        src += nb;
-                    }
-                }
-            }
+        // 4. Fused exchange: each owner's disc columns (my z residue) are
+        //    gathered from the cube as that round posts; each rank's
+        //    z-residues merge into the dense columns as its wait completes.
+        t.comm_a2a("a2a_sphere", || {
+            let c = {
+                let mut k = SphereInvKernel { plan: self, cube: &cube[..], work: &mut work[..] };
+                fused_exchange(comm, &mut k, self.tuning)
+            };
+            ((), self.inv.bytes_remote(), self.inv.msgs(), c)
         });
 
         // 5. Inverse FFT along z, truncate to the sphere runs.
@@ -566,6 +618,8 @@ impl PaddedSpherePlan {
         trace.alloc_bytes += slab_trace.alloc_bytes;
         trace.wait_ns += slab_trace.wait_ns;
         trace.overlap_rounds += slab_trace.overlap_rounds;
+        trace.pack_overlap_ns += slab_trace.pack_overlap_ns;
+        trace.unpack_overlap_ns += slab_trace.unpack_overlap_ns;
         trace.stages.extend(slab_trace.stages);
         (out, trace)
     }

@@ -10,17 +10,29 @@
 //! An [`A2aSchedule`] captures, at plan time, everything the exchange needs
 //! per execution: per-destination block extents and flat-buffer offsets for
 //! both the pack and the unpack side, plus the wire accounting the traces
-//! report. At execute time [`split_dim_into`]/[`merge_dim_from`] move data
-//! between the tensor and a single flat buffer per direction — no per-call
-//! `Vec<Vec<_>>` construction on the hot path.
+//! report. At execute time the plans drive [`SplitMergeKernel`] — the
+//! shared [`PackKernel`] of every cyclic split/merge exchange — through the
+//! fused windowed engine: destination block `s` is packed by
+//! [`pack_block_bytes`] straight into its recycled wire buffer when round
+//! `s` posts, and each received block is landed by [`unpack_block_bytes`]
+//! as its wait completes. The monolithic
+//! [`split_dim_into`]/[`merge_dim_from`] pair remains as the pre-packed
+//! flat-buffer path (and the bit-identity reference the fused tests
+//! compare against).
 //!
 //! Tensors are 4D `[nb, d1, d2, d3]`, column-major, batch fastest:
 //! `flat = b + nb*(i1 + d1*(i2 + d2*i3))`. Copies move whole `nb`-runs, so
 //! batching directly increases the contiguity of every pack/unpack — the
 //! mechanical reason batched transforms win in Fig. 9.
 
-use crate::fft::complex::{Complex, ZERO};
+use crate::comm::arena::WireBuf;
+use crate::fft::complex::{self, Complex, ZERO};
 use crate::fftb::grid::cyclic;
+
+use super::stages::PackKernel;
+
+/// Bytes per complex element on the wire.
+const ELEM: usize = std::mem::size_of::<Complex>();
 
 /// Shape of a 4D local tensor.
 pub type Shape4 = [usize; 4];
@@ -312,6 +324,193 @@ fn merge_block(
     }
 }
 
+/// Append destination `s`'s residue block of dimension `dim` to a wire
+/// buffer, as raw bytes in canonical block order — the per-destination
+/// twin of [`split_dim_into`] (bit-identical bytes to that destination's
+/// slice of the flat send buffer). This is the pack side of the fused
+/// exchange: it runs right before round `s`'s send posts, not inside a
+/// monolithic pre-pack.
+pub fn pack_block_bytes(
+    data: &[Complex],
+    sh: Shape4,
+    dim: usize,
+    p: usize,
+    s: usize,
+    out: &mut WireBuf,
+) {
+    assert!((1..=3).contains(&dim), "cannot pack the batch dimension");
+    assert!(s < p);
+    assert_eq!(data.len(), volume(sh));
+    let [nb, d1, d2, d3] = sh;
+    match dim {
+        // Whole contiguous planes (the slab exchanges): memcpy per plane.
+        3 => {
+            let plane = nb * d1 * d2;
+            let mut i3 = s;
+            while i3 < d3 {
+                out.extend_from_slice(complex::as_bytes(&data[i3 * plane..(i3 + 1) * plane]));
+                i3 += p;
+            }
+        }
+        // Whole contiguous rows of nb*d1 elements.
+        2 => {
+            let row = nb * d1;
+            for i3 in 0..d3 {
+                let mut i2 = s;
+                while i2 < d2 {
+                    let src = row * (i2 + d2 * i3);
+                    out.extend_from_slice(complex::as_bytes(&data[src..src + row]));
+                    i2 += p;
+                }
+            }
+        }
+        // nb-contiguous runs, stride p along dim 1.
+        _ => {
+            for i3 in 0..d3 {
+                for i2 in 0..d2 {
+                    let base = nb * d1 * (i2 + d2 * i3);
+                    let mut i1 = s;
+                    while i1 < d1 {
+                        let src = base + nb * i1;
+                        out.extend_from_slice(complex::as_bytes(&data[src..src + nb]));
+                        i1 += p;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter the block received from rank `r` — raw bytes in canonical block
+/// order — into dense dimension `dim` of `out`: the byte-source twin of
+/// the per-block scatter inside [`merge_dim_from`], and the unpack side of
+/// the fused exchange (runs as round `r`'s wait completes, straight off
+/// the wire buffer).
+pub fn unpack_block_bytes(
+    block: &[u8],
+    sh_out: Shape4,
+    dim: usize,
+    p: usize,
+    r: usize,
+    out: &mut [Complex],
+) {
+    assert!((1..=3).contains(&dim));
+    assert!(r < p);
+    assert_eq!(out.len(), volume(sh_out), "unpack_block_bytes: output length");
+    let [nb, d1, d2, d3] = sh_out;
+    let mut bsh = sh_out;
+    bsh[dim] = cyclic::local_count(sh_out[dim], p, r);
+    assert_eq!(
+        block.len(),
+        volume(bsh) * ELEM,
+        "unpack_block_bytes: block from rank {r} has the wrong size (expected shape {bsh:?})"
+    );
+    match dim {
+        3 => {
+            let plane = nb * d1 * d2;
+            let mut src = 0usize;
+            let mut i3 = r;
+            while i3 < d3 {
+                complex::copy_from_bytes(
+                    &block[src..src + plane * ELEM],
+                    &mut out[i3 * plane..(i3 + 1) * plane],
+                );
+                src += plane * ELEM;
+                i3 += p;
+            }
+        }
+        2 => {
+            let row = nb * d1;
+            let mut src = 0usize;
+            for i3 in 0..d3 {
+                let mut i2 = r;
+                while i2 < d2 {
+                    let dst = row * (i2 + d2 * i3);
+                    complex::copy_from_bytes(
+                        &block[src..src + row * ELEM],
+                        &mut out[dst..dst + row],
+                    );
+                    src += row * ELEM;
+                    i2 += p;
+                }
+            }
+        }
+        _ => {
+            let mut src = 0usize;
+            for i3 in 0..d3 {
+                for i2 in 0..d2 {
+                    let base = nb * d1 * (i2 + d2 * i3);
+                    let mut i1 = r;
+                    while i1 < d1 {
+                        let dst = base + nb * i1;
+                        complex::copy_from_bytes(
+                            &block[src..src + nb * ELEM],
+                            &mut out[dst..dst + nb],
+                        );
+                        src += nb * ELEM;
+                        i1 += p;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The [`PackKernel`] of every cyclic split/merge exchange — shared by the
+/// slab-pencil plan (and everything stacked on it: the non-batched loop,
+/// the pad-to-cube baseline) and both exchanges of the pencil plan. Packs
+/// destination residue blocks straight out of the source tensor
+/// ([`pack_block_bytes`]) and merges each received block into the dense
+/// destination dimension of the output tensor ([`unpack_block_bytes`]) as
+/// its wait completes.
+pub struct SplitMergeKernel<'a> {
+    sched: &'a A2aSchedule,
+    src: &'a [Complex],
+    sh_src: Shape4,
+    dim_src: usize,
+    dst: &'a mut [Complex],
+    sh_dst: Shape4,
+    dim_dst: usize,
+}
+
+impl<'a> SplitMergeKernel<'a> {
+    /// Kernel for one exchange: split `dim_src` of `src` (shape `sh_src`)
+    /// into `sched.p` residue blocks, merge received blocks into `dim_dst`
+    /// of `dst` (shape `sh_dst`). `sched` must be the plan-time schedule of
+    /// this exact exchange (its block extents size the wire buffers).
+    pub fn new(
+        sched: &'a A2aSchedule,
+        src: &'a [Complex],
+        sh_src: Shape4,
+        dim_src: usize,
+        dst: &'a mut [Complex],
+        sh_dst: Shape4,
+        dim_dst: usize,
+    ) -> Self {
+        assert_eq!(src.len(), volume(sh_src), "split-merge kernel: source length");
+        assert_eq!(dst.len(), volume(sh_dst), "split-merge kernel: destination length");
+        SplitMergeKernel { sched, src, sh_src, dim_src, dst, sh_dst, dim_dst }
+    }
+}
+
+impl PackKernel for SplitMergeKernel<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.sched.send_counts[dest] * ELEM
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.sched.recv_counts[src] * ELEM
+    }
+
+    fn pack(&mut self, dest: usize, out: &mut WireBuf) {
+        pack_block_bytes(self.src, self.sh_src, self.dim_src, self.sched.p, dest, out);
+    }
+
+    fn unpack(&mut self, src: usize, block: &[u8]) {
+        unpack_block_bytes(block, self.sh_dst, self.dim_dst, self.sched.p, src, self.dst);
+    }
+}
+
 /// Extract one batch entry `b` from a batch-fastest tensor (used by the
 /// non-batched variants that loop over single transforms).
 pub fn extract_band(data: &[Complex], nb: usize, b: usize) -> Vec<Complex> {
@@ -426,6 +625,55 @@ mod tests {
         let rev = sched.reversed();
         assert_eq!(rev.send_counts, sched.recv_counts);
         assert_eq!(rev.recv_counts, sched.send_counts);
+    }
+
+    #[test]
+    fn per_block_pack_matches_monolithic_split() {
+        // The fused pack must produce, per destination, exactly the bytes
+        // the monolithic split writes into that destination's slice of the
+        // flat send buffer — this is the bit-identity anchor of the fused
+        // exchange.
+        use crate::comm::arena::BufferArena;
+        let sh: Shape4 = [2, 5, 4, 6];
+        let data = seq(volume(sh));
+        let arena = BufferArena::new();
+        for dim in 1..=3 {
+            for p in [1usize, 2, 3, 4] {
+                let sched = A2aSchedule::for_split_merge(sh, dim, sh, dim, p, 0);
+                let mut flat = vec![ZERO; sched.send_total()];
+                split_dim_into(&data, sh, dim, p, &mut flat, &sched.send_offs);
+                for s in 0..p {
+                    let mut buf = arena.checkout(sched.send_counts[s] * ELEM);
+                    pack_block_bytes(&data, sh, dim, p, s, &mut buf);
+                    assert_eq!(
+                        &buf[..],
+                        crate::fft::complex::as_bytes(
+                            &flat[sched.send_offs[s]..sched.send_offs[s + 1]]
+                        ),
+                        "dim={dim} p={p} block={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_unpack_inverts_per_block_pack() {
+        use crate::comm::arena::BufferArena;
+        let sh: Shape4 = [3, 4, 5, 6];
+        let data = seq(volume(sh));
+        let arena = BufferArena::new();
+        for dim in 1..=3 {
+            for p in [1usize, 2, 3] {
+                let mut back = vec![ZERO; data.len()];
+                for r in 0..p {
+                    let mut buf = arena.checkout(0);
+                    pack_block_bytes(&data, sh, dim, p, r, &mut buf);
+                    unpack_block_bytes(&buf, sh, dim, p, r, &mut back);
+                }
+                assert_eq!(back, data, "dim={dim} p={p}");
+            }
+        }
     }
 
     #[test]

@@ -13,28 +13,32 @@
 //! The inverse runs the mirror image. Local tensors are 4D
 //! `[nb, local_x, ny, nz]` / `[nb, nx, ny, local_z]`, column-major.
 //!
-//! Communication schedules (block extents, flat-buffer offsets) are
-//! computed once at plan time; every execution packs into one flat send
-//! buffer, exchanges, and unpacks in place — with all scratch routed
-//! through the plan's [`Workspace`], steady-state executions perform zero
-//! heap allocation in the pack/unpack/FFT stages (`ExecTrace::alloc_bytes`
-//! reports any workspace growth). The exchange itself runs the windowed
+//! Communication schedules (block extents) are computed once at plan time;
+//! every execution drives the exchange through a fused
+//! [`SplitMergeKernel`]: destination block `s`'s z-residues are packed
+//! straight into a recycled wire buffer when round `s` posts (no
+//! monolithic pre-pack gating the first send), and each received block
+//! merges into the output tensor as its wait completes. With all scratch
+//! routed through the plan's [`Workspace`] slot pool, steady-state
+//! executions perform zero heap allocation (`ExecTrace::alloc_bytes`
+//! reports any workspace growth). The exchange runs the fused windowed
 //! overlapped pipeline (`CommTuning`, default window 2; `set_tuning` to
-//! change), reporting its wait time through `ExecTrace::wait_ns`.
+//! change), reporting wait and overlapped pack/unpack time through
+//! `ExecTrace::wait_ns` / `pack_overlap_ns` / `unpack_overlap_ns`.
 
 use std::sync::Arc;
 use std::sync::Mutex;
 
-use crate::comm::alltoall::{alltoallv_complex_flat_tuned, CommTuning};
+use crate::comm::alltoall::CommTuning;
 use crate::fft::complex::Complex;
 use crate::fft::dft::Direction;
 use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
 use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 
-use super::redistribute::{merge_dim_from, split_dim_into, volume, A2aSchedule, Shape4};
-use super::stages::{ExecTrace, StageTimer};
-use super::workspace::{ensure, Workspace};
+use super::redistribute::{volume, A2aSchedule, Shape4, SplitMergeKernel};
+use super::stages::{fused_exchange, ExecTrace, StageTimer};
+use super::workspace::Workspace;
 
 /// Plan for a batched slab-pencil 3D FFT of global shape `(nx, ny, nz)` on a
 /// 1D grid.
@@ -119,10 +123,6 @@ impl SlabPencilPlan {
         (buf, ctr.get())
     }
 
-    fn p(&self) -> usize {
-        self.grid.size()
-    }
-
     /// Rank count of the 1D processing grid this plan runs on.
     pub fn grid_size(&self) -> usize {
         self.grid.size()
@@ -164,12 +164,11 @@ impl SlabPencilPlan {
         mut data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
-        let p = self.p();
         let comm = self.grid.axis_comm(0);
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { send, recv, fft, slots, alloc, .. } = ws;
+        let Workspace { fft, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let (sh_in, sh_out) = (self.sh_in, self.sh_out);
         let mut trace = ExecTrace::default();
@@ -188,31 +187,22 @@ impl SlabPencilPlan {
                         backend_fft_dim_ws(backend, &mut data, &sh_in, 3, dir, &mut *fft, alloc);
                     },
                 );
-                // 2. Alltoall: trade x split for z split. Pack into the flat
-                //    send buffer at the schedule's precomputed offsets.
-                t.reshape("pack_z", || {
-                    ensure(&mut *send, self.fwd.send_total(), alloc);
-                    split_dim_into(&data, sh_in, 3, p, &mut *send, &self.fwd.send_offs);
-                });
+                // 2. Fused alltoall: trade x split for z split. Each
+                //    destination's z-residue block is packed into its wire
+                //    buffer as its round posts; the block from rank q
+                //    ([nb, lxc_q, ny, lzc_me]) merges along dim 1 into a
+                //    pooled output slot as its wait completes. The consumed
+                //    caller vector joins the pool.
                 t.comm_a2a("a2a_xz", || {
-                    ensure(&mut *recv, self.fwd.recv_total(), alloc);
-                    let c = alltoallv_complex_flat_tuned(
-                        comm,
-                        &*send,
-                        &self.fwd.send_offs,
-                        &mut *recv,
-                        &self.fwd.recv_offs,
-                        self.tuning,
-                    );
-                    ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
-                });
-                // Receiving block from rank q: shape [nb, lxc_q, ny, lzc_me];
-                // merge along dim 1 (x becomes dense) into a pooled output
-                // slot; the consumed caller vector joins the pool.
-                t.reshape("unpack_x", || {
                     let mut out = slots.take(volume(sh_out), alloc);
-                    merge_dim_from(&*recv, &self.fwd.recv_offs, sh_out, 1, p, &mut out);
+                    let c = {
+                        let mut k = SplitMergeKernel::new(
+                            &self.fwd, &data, sh_in, 3, &mut out, sh_out, 1,
+                        );
+                        fused_exchange(comm, &mut k, self.tuning)
+                    };
                     slots.recycle(std::mem::replace(&mut data, out));
+                    ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
                 });
                 // 3. Local FFT along dense x.
                 t.compute("fft_x", lines(data.len(), self.nx), || {
@@ -224,26 +214,16 @@ impl SlabPencilPlan {
                 t.compute("ifft_x", lines(data.len(), self.nx), || {
                     backend_fft_dim_ws(backend, &mut data, &sh_out, 1, dir, &mut *fft, alloc);
                 });
-                t.reshape("pack_x", || {
-                    ensure(&mut *send, self.inv.send_total(), alloc);
-                    split_dim_into(&data, sh_out, 1, p, &mut *send, &self.inv.send_offs);
-                });
                 t.comm_a2a("a2a_zx", || {
-                    ensure(&mut *recv, self.inv.recv_total(), alloc);
-                    let c = alltoallv_complex_flat_tuned(
-                        comm,
-                        &*send,
-                        &self.inv.send_offs,
-                        &mut *recv,
-                        &self.inv.recv_offs,
-                        self.tuning,
-                    );
-                    ((), self.inv.bytes_remote(), self.inv.msgs(), c)
-                });
-                t.reshape("unpack_z", || {
                     let mut out = slots.take(volume(sh_in), alloc);
-                    merge_dim_from(&*recv, &self.inv.recv_offs, sh_in, 3, p, &mut out);
+                    let c = {
+                        let mut k = SplitMergeKernel::new(
+                            &self.inv, &data, sh_out, 1, &mut out, sh_in, 3,
+                        );
+                        fused_exchange(comm, &mut k, self.tuning)
+                    };
                     slots.recycle(std::mem::replace(&mut data, out));
+                    ((), self.inv.bytes_remote(), self.inv.msgs(), c)
                 });
                 t.compute(
                     "ifft_yz",
@@ -287,7 +267,8 @@ mod tests {
             let local = scatter_cube_x(&global, nb, shape, p, grid.rank());
             let backend = RustFftBackend::new();
             let (out, trace) = plan.forward(&backend, local);
-            assert_eq!(trace.stages.len(), 5);
+            // fft_yz, fused a2a_xz (pack + exchange + unpack), fft_x.
+            assert_eq!(trace.stages.len(), 3);
             out
         });
         let got = gather_cube_z(&got_slabs, nb, shape, p);

@@ -1,4 +1,5 @@
-//! Execution traces: what every stage did, how long it took, what it moved.
+//! Execution traces and the fused-exchange contract between the plans and
+//! the comm layer.
 //!
 //! Each distributed transform execution produces an [`ExecTrace`] per rank.
 //! The benches aggregate traces across ranks (max per stage ≈ the critical
@@ -6,25 +7,98 @@
 //! communication volumes for a target machine — this is how the Fig. 9
 //! projections beyond the live thread count are produced.
 //!
-//! Besides the per-stage table, a trace carries two execution-wide overlap
-//! counters fed by the windowed alltoall ([`A2aCounters`]): `wait_ns`, the
-//! nanoseconds this rank spent blocked in receive waits, and
+//! Besides the per-stage table, a trace carries execution-wide overlap
+//! counters fed by the fused windowed alltoall ([`A2aCounters`]):
+//! `wait_ns`, the nanoseconds this rank spent blocked in receive waits;
 //! `overlap_rounds`, how many exchange rounds were posted ahead of the
-//! serial schedule. `benches/a2a_micro.rs` prints them side by side for the
-//! serial and overlapped disciplines.
+//! serial schedule; and `pack_overlap_ns` / `unpack_overlap_ns`, the
+//! pack/unpack nanoseconds that ran while other rounds were in flight.
+//! `benches/a2a_micro.rs` prints them side by side for the serial,
+//! pre-packed and fused disciplines.
+//!
+//! [`PackKernel`] is the plan-side contract of the fused exchange: a plan
+//! hands the engine per-destination pack and unpack movers instead of
+//! monolithic pre-packed buffers, so destination block `s + window` is
+//! packed straight into its recycled wire buffer after the wait for round
+//! `s` completes, and each received block is unpacked as its own wait
+//! completes. [`fused_exchange`] bridges a `PackKernel` to the comm
+//! layer's [`FusedBlocks`]-driven engine
+//! ([`alltoallv_fused`](crate::comm::alltoall::alltoallv_fused)).
 
 use std::time::Duration;
 
-use crate::comm::alltoall::A2aCounters;
+use crate::comm::alltoall::{alltoallv_fused, A2aCounters, CommTuning, FusedBlocks};
+use crate::comm::arena::WireBuf;
+use crate::comm::communicator::Comm;
+
+/// Per-destination pack/unpack movers of one exchange — what a plan gives
+/// the fused windowed engine instead of a monolithic pre-packed buffer.
+///
+/// Contract (asserted by the engine):
+///
+/// * `pack(dest, out)` appends **exactly** `send_bytes(dest)` bytes to
+///   `out`, in the destination's canonical element order — the same order
+///   the old monolithic pack wrote that destination's slice of the flat
+///   send buffer, so fused and pre-packed exchanges are bit-identical.
+/// * `unpack(src, block)` consumes a block of **exactly**
+///   `recv_bytes(src)` bytes and lands it; it must tolerate any call
+///   order (blocks arrive round by round, and the self block lands first).
+/// * Both must be pure data movement: no allocation, no communication —
+///   the engine calls them on the critical path between waits.
+pub trait PackKernel {
+    /// Bytes of the block headed to rank `dest` (0 allowed).
+    fn send_bytes(&self, dest: usize) -> usize;
+    /// Bytes expected from rank `src` (0 allowed).
+    fn recv_bytes(&self, src: usize) -> usize;
+    /// Append rank `dest`'s packed block to `out` (canonical order).
+    fn pack(&mut self, dest: usize, out: &mut WireBuf);
+    /// Land the block received from rank `src`.
+    fn unpack(&mut self, src: usize, block: &[u8]);
+}
+
+/// Adapter bridging a [`PackKernel`] to the comm layer's [`FusedBlocks`]
+/// driver interface (kept separate so the comm layer stays plan-agnostic).
+struct KernelBlocks<'a>(&'a mut dyn PackKernel);
+
+impl FusedBlocks for KernelBlocks<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.0.send_bytes(dest)
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.0.recv_bytes(src)
+    }
+
+    fn pack(&mut self, dest: usize, out: &mut WireBuf) {
+        self.0.pack(dest, out);
+    }
+
+    fn unpack(&mut self, src: usize, block: &[u8]) {
+        self.0.unpack(src, block);
+    }
+}
+
+/// Run one fused exchange: drive `kernel`'s per-destination pack/unpack
+/// movers through the windowed engine over `comm`. Results are
+/// bit-identical for every window size; the returned counters report wait
+/// time and how much pack/unpack work overlapped in-flight rounds.
+pub fn fused_exchange(
+    comm: &Comm,
+    kernel: &mut dyn PackKernel,
+    tuning: CommTuning,
+) -> A2aCounters {
+    alltoallv_fused(comm, &mut KernelBlocks(kernel), tuning)
+}
 
 /// What kind of work a stage did.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StageKind {
-    /// Local FFT compute (+ the pack/unpack around it).
+    /// Local FFT compute.
     Compute,
-    /// An alltoall exchange.
+    /// An alltoall exchange, including the per-destination pack/unpack
+    /// fused into its rounds.
     Comm,
-    /// Local data reshaping only (scatter/gather, padding, transposes).
+    /// Local data reshaping only (scatter/gather, padding, staging).
     Reshape,
 }
 
@@ -63,6 +137,15 @@ pub struct ExecTrace {
     /// every comm stage (0 when the serial discipline — or `window == 1` —
     /// ran; see [`A2aCounters::overlap_rounds`]).
     pub overlap_rounds: u64,
+    /// Nanoseconds spent packing destination blocks while the exchange was
+    /// already in flight, summed over every comm stage (see
+    /// [`A2aCounters::pack_overlap_ns`]). 0 for the serial ordering
+    /// (`window == 1`) and 2-rank worlds.
+    pub pack_overlap_ns: u64,
+    /// Nanoseconds spent unpacking received blocks while later rounds were
+    /// still outstanding, summed over every comm stage (see
+    /// [`A2aCounters::unpack_overlap_ns`]).
+    pub unpack_overlap_ns: u64,
     /// Whether the plan that produced this execution was served from a
     /// [`PlanCache`](crate::tuner::cache::PlanCache) rather than built
     /// fresh. Set by the caching layer (e.g. the batching driver), not by
@@ -133,6 +216,8 @@ impl ExecTrace {
         out.alloc_bytes = traces.iter().map(|t| t.alloc_bytes).max().unwrap();
         out.wait_ns = traces.iter().map(|t| t.wait_ns).max().unwrap();
         out.overlap_rounds = traces.iter().map(|t| t.overlap_rounds).max().unwrap();
+        out.pack_overlap_ns = traces.iter().map(|t| t.pack_overlap_ns).max().unwrap();
+        out.unpack_overlap_ns = traces.iter().map(|t| t.unpack_overlap_ns).max().unwrap();
         // A cache hit only counts if *every* rank was served from cache.
         out.plan_cache_hit = traces.iter().all(|t| t.plan_cache_hit);
         out
@@ -152,6 +237,13 @@ impl ExecTrace {
                 "(exchange waits: {:?}, {} rounds overlapped)\n",
                 self.wait_time(),
                 self.overlap_rounds
+            ));
+        }
+        if self.pack_overlap_ns > 0 || self.unpack_overlap_ns > 0 {
+            s.push_str(&format!(
+                "(fused pack/unpack overlapped: {:?} / {:?})\n",
+                Duration::from_nanos(self.pack_overlap_ns),
+                Duration::from_nanos(self.unpack_overlap_ns)
             ));
         }
         if self.alloc_bytes > 0 {
@@ -198,7 +290,8 @@ impl<'a> StageTimer<'a> {
 
     /// Time an exchange stage that also reports overlap counters; `f` must
     /// return (result, bytes_sent, messages, counters). The counters are
-    /// accumulated into the trace's `wait_ns` / `overlap_rounds`.
+    /// accumulated into the trace's `wait_ns` / `overlap_rounds` /
+    /// `pack_overlap_ns` / `unpack_overlap_ns`.
     pub fn comm_a2a<R>(
         &mut self,
         name: &'static str,
@@ -209,6 +302,8 @@ impl<'a> StageTimer<'a> {
         self.trace.push(name, StageKind::Comm, t0.elapsed(), bytes, msgs, 0.0);
         self.trace.wait_ns += c.wait_ns;
         self.trace.overlap_rounds += c.overlap_rounds;
+        self.trace.pack_overlap_ns += c.pack_overlap_ns;
+        self.trace.unpack_overlap_ns += c.unpack_overlap_ns;
         r
     }
 }
@@ -235,13 +330,35 @@ mod tests {
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
         t.comm_a2a("a2a_1", || {
-            ((), 10, 1, A2aCounters { wait_ns: 500, overlap_rounds: 3 })
+            (
+                (),
+                10,
+                1,
+                A2aCounters {
+                    wait_ns: 500,
+                    overlap_rounds: 3,
+                    pack_overlap_ns: 40,
+                    unpack_overlap_ns: 7,
+                },
+            )
         });
         t.comm_a2a("a2a_2", || {
-            ((), 20, 2, A2aCounters { wait_ns: 250, overlap_rounds: 2 })
+            (
+                (),
+                20,
+                2,
+                A2aCounters {
+                    wait_ns: 250,
+                    overlap_rounds: 2,
+                    pack_overlap_ns: 60,
+                    unpack_overlap_ns: 3,
+                },
+            )
         });
         assert_eq!(trace.wait_ns, 750);
         assert_eq!(trace.overlap_rounds, 5);
+        assert_eq!(trace.pack_overlap_ns, 100);
+        assert_eq!(trace.unpack_overlap_ns, 10);
         assert_eq!(trace.comm_bytes(), 30);
         assert_eq!(trace.wait_time(), Duration::from_nanos(750));
     }

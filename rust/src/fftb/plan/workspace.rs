@@ -2,9 +2,13 @@
 //! of P3DFFT-style persistent plans, rendered for this testbed.
 //!
 //! Every plan owns one `Workspace` behind a `Mutex` and routes all stage
-//! scratch through it: flat alltoall send/recv staging, the transpose
-//! buffer of `backend_fft_dim_ws`, the plane-wave panel buffer, and the
-//! size-classed [`SlotPool`] of output buffers. Buffers are sized with
+//! scratch through it: the transpose buffer of `backend_fft_dim_ws`, the
+//! plane-wave panel and dense-column buffers, and the size-classed
+//! [`SlotPool`] of output buffers. (Flat alltoall send/recv staging is
+//! gone: the fused exchange packs each destination block straight into a
+//! recycled wire buffer from the comm layer's
+//! [`BufferArena`](crate::comm::arena::BufferArena) and unpacks straight
+//! off the received one.) Buffers are sized with
 //! [`ensure`]/[`ensure_zeroed`], which record any *capacity growth*
 //! into the workspace's `alloc` cell — the number the plans publish as
 //! [`ExecTrace::alloc_bytes`](super::stages::ExecTrace). After the first
@@ -105,10 +109,6 @@ impl SlotPool {
 /// disjoint closure captures).
 #[derive(Default)]
 pub struct Workspace {
-    /// Flat send staging for the alltoall pack stage.
-    pub send: Vec<Complex>,
-    /// Flat receive buffer for the alltoall.
-    pub recv: Vec<Complex>,
     /// Transpose scratch for `backend_fft_dim_ws`.
     pub fft: Vec<Complex>,
     /// General stage scratch (dense z-columns, band staging, ...).

@@ -5,22 +5,40 @@
 //! bytes from buffer sizes, alltoall bytes from the cyclic block split.
 //! `max` over ranks is taken by evaluating rank 0, which owns the ceil of
 //! every cyclic split.
+//!
+//! Since the exchanges run *fused* (per-destination pack kernels inside
+//! the windowed engine), the pack/unpack memory traffic of each exchange
+//! is carried on the comm stage itself as [`StageCost::fused_bytes`] —
+//! priced by [`Machine::alltoall_time_fused`], which hides all but a
+//! `1/window` fraction of it behind the waits. At window 1 that prices
+//! identically to the old separate pack/unpack compute stages, so the
+//! Fig. 9 projections are unchanged while the tuner's window search sees
+//! the fusion benefit.
+//!
+//! [`Machine::alltoall_time_fused`]: super::machine::Machine::alltoall_time_fused
 
 use crate::fft::batch::fft_flops;
 use crate::fftb::grid::cyclic;
 use crate::fftb::sphere::OffsetArray;
 
-pub const BYTES_PER_ELEM: f64 = 16.0; // f64 complex
+/// Bytes per complex element (f64 re + f64 im).
+pub const BYTES_PER_ELEM: f64 = 16.0;
 
 /// One stage's worth of priced work on the slowest rank.
 #[derive(Clone, Debug)]
 pub struct StageCost {
+    /// Stage label, matching the live trace's stage names.
     pub name: &'static str,
+    /// Complex-FLOP count of local compute in this stage (0 for comm).
     pub flops: f64,
-    /// Local bytes touched by pack/unpack/scatter around this stage.
+    /// Local bytes touched by reshapes/scatters around this stage.
     pub touched_bytes: f64,
     /// Bytes this rank puts on the wire (one alltoall), 0 for compute.
     pub a2a_bytes: f64,
+    /// Local pack/unpack bytes fused into this exchange's rounds (0 for
+    /// compute stages): moved per destination inside the windowed engine,
+    /// so all but a `1/window` fraction hides behind the waits.
+    pub fused_bytes: f64,
     /// Number of alltoall invocations this stage performs (non-batched
     /// variants loop; each invocation carries a2a_bytes / rounds).
     pub rounds: usize,
@@ -28,27 +46,37 @@ pub struct StageCost {
 
 impl StageCost {
     fn compute(name: &'static str, flops: f64, touched: f64) -> Self {
-        StageCost { name, flops, touched_bytes: touched, a2a_bytes: 0.0, rounds: 0 }
+        StageCost {
+            name,
+            flops,
+            touched_bytes: touched,
+            a2a_bytes: 0.0,
+            fused_bytes: 0.0,
+            rounds: 0,
+        }
     }
 
-    fn comm(name: &'static str, bytes: f64, rounds: usize) -> Self {
-        StageCost { name, flops: 0.0, touched_bytes: 0.0, a2a_bytes: bytes, rounds }
+    fn comm_fused(name: &'static str, bytes: f64, rounds: usize, fused_bytes: f64) -> Self {
+        StageCost { name, flops: 0.0, touched_bytes: 0.0, a2a_bytes: bytes, fused_bytes, rounds }
     }
 }
 
 /// Full variant cost: stage list + the communicator size each alltoall uses.
 #[derive(Clone, Debug)]
 pub struct PlanCost {
+    /// Per-stage cost rows, in execution order.
     pub stages: Vec<StageCost>,
     /// Ranks participating in each alltoall (1D grid: p; 2D: the axis size).
     pub a2a_ranks: Vec<usize>,
 }
 
 impl PlanCost {
+    /// Total complex-FLOP count over all stages.
     pub fn total_flops(&self) -> f64 {
         self.stages.iter().map(|s| s.flops).sum()
     }
 
+    /// Total bytes this rank puts on the wire over all exchanges.
     pub fn total_a2a_bytes(&self) -> f64 {
         self.stages.iter().map(|s| s.a2a_bytes).sum()
     }
@@ -67,13 +95,13 @@ pub fn slab_pencil(shape: [usize; 3], nb: usize, p: usize, batched: bool) -> Pla
     let a2a_bytes = local * BYTES_PER_ELEM * (p - 1) as f64 / p as f64;
     let rounds = if batched { 1 } else { nb };
 
+    // Pack and unpack each touch their full tensor twice (gather+scatter);
+    // fused into the exchange, that traffic rides on the comm stage.
+    let fused = (2.0 * local + 2.0 * out_local) * BYTES_PER_ELEM;
     PlanCost {
         stages: vec![
-            // pack/unpack touch the full local buffer twice (gather+scatter).
             StageCost::compute("fft_yz", fft_yz, 4.0 * local * BYTES_PER_ELEM),
-            StageCost::compute("pack_z", 0.0, 2.0 * local * BYTES_PER_ELEM),
-            StageCost::comm("a2a_xz", a2a_bytes, rounds),
-            StageCost::compute("unpack_x", 0.0, 2.0 * out_local * BYTES_PER_ELEM),
+            StageCost::comm_fused("a2a_xz", a2a_bytes, rounds, fused),
             StageCost::compute("fft_x", fft_x, 4.0 * out_local * BYTES_PER_ELEM),
         ],
         a2a_ranks: vec![p],
@@ -93,6 +121,8 @@ pub fn pencil(shape: [usize; 3], nb: usize, p0: usize, p1: usize, batched: bool)
     let v3 = (nb * lxc0 * lyc1 * nz) as f64; // after second exchange
 
     let rounds = if batched { 1 } else { nb };
+    // Each exchange's pack (2x its source tensor) and unpack (2x its
+    // destination tensor) are fused into the exchange itself.
     PlanCost {
         stages: vec![
             StageCost::compute(
@@ -100,17 +130,27 @@ pub fn pencil(shape: [usize; 3], nb: usize, p0: usize, p1: usize, batched: bool)
                 (nb * lyc0 * lzc1) as f64 * fft_flops(nx),
                 4.0 * v1 * BYTES_PER_ELEM,
             ),
-            StageCost::comm("a2a_xy", v1 * BYTES_PER_ELEM * (p0 - 1) as f64 / p0 as f64, rounds),
+            StageCost::comm_fused(
+                "a2a_xy",
+                v1 * BYTES_PER_ELEM * (p0 - 1) as f64 / p0 as f64,
+                rounds,
+                (2.0 * v1 + 2.0 * v2) * BYTES_PER_ELEM,
+            ),
             StageCost::compute(
                 "fft_y",
                 (nb * lxc0 * lzc1) as f64 * fft_flops(ny),
-                (2.0 * v1 + 2.0 * v2 + 4.0 * v2) * BYTES_PER_ELEM,
+                4.0 * v2 * BYTES_PER_ELEM,
             ),
-            StageCost::comm("a2a_yz", v2 * BYTES_PER_ELEM * (p1 - 1) as f64 / p1 as f64, rounds),
+            StageCost::comm_fused(
+                "a2a_yz",
+                v2 * BYTES_PER_ELEM * (p1 - 1) as f64 / p1 as f64,
+                rounds,
+                (2.0 * v2 + 2.0 * v3) * BYTES_PER_ELEM,
+            ),
             StageCost::compute(
                 "fft_z",
                 (nb * lxc0 * lyc1) as f64 * fft_flops(nz),
-                (2.0 * v2 + 2.0 * v3 + 4.0 * v3) * BYTES_PER_ELEM,
+                4.0 * v3 * BYTES_PER_ELEM,
             ),
         ],
         a2a_ranks: vec![p0, p1],
@@ -138,12 +178,20 @@ pub fn planewave(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
                 nb as f64 * my_cols * fft_flops(nz),
                 (2.0 * nb as f64 * my_pts + 4.0 * cyl) * BYTES_PER_ELEM,
             ),
-            StageCost::comm("a2a_sphere", cyl * BYTES_PER_ELEM * (p - 1) as f64 / p as f64, 1),
+            // The landing of received columns into the slab (2x the moved
+            // cylinder volume — the traffic the old model carried in
+            // pad_fft_y's touched bytes) is fused into the exchange, so
+            // window-1 pricing stays exactly the old sum.
+            StageCost::comm_fused(
+                "a2a_sphere",
+                cyl * BYTES_PER_ELEM * (p - 1) as f64 / p as f64,
+                1,
+                2.0 * cyl * BYTES_PER_ELEM,
+            ),
             StageCost::compute(
                 "pad_fft_y",
                 nb as f64 * disc_xs * lzc as f64 * fft_flops(ny),
-                (2.0 * cyl + 2.0 * slab + 4.0 * nb as f64 * disc_xs * (ny * lzc) as f64)
-                    * BYTES_PER_ELEM,
+                (2.0 * slab + 4.0 * nb as f64 * disc_xs * (ny * lzc) as f64) * BYTES_PER_ELEM,
             ),
             StageCost::compute(
                 "fft_x",
@@ -194,8 +242,10 @@ mod tests {
         let a = slab_pencil([16, 16, 16], 8, 4, true);
         let b = slab_pencil([16, 16, 16], 8, 4, false);
         assert_eq!(a.total_a2a_bytes(), b.total_a2a_bytes());
-        assert_eq!(a.stages[2].rounds, 1);
-        assert_eq!(b.stages[2].rounds, 8);
+        // Stage list mirrors the fused live pipeline: [fft_yz, a2a_xz, fft_x].
+        assert_eq!(a.stages[1].rounds, 1);
+        assert_eq!(b.stages[1].rounds, 8);
+        assert!(a.stages[1].fused_bytes > 0.0, "the exchange carries its pack/unpack traffic");
     }
 
     #[test]

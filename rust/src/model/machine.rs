@@ -15,6 +15,7 @@
 /// A machine to price stage counts on.
 #[derive(Clone, Debug)]
 pub struct Machine {
+    /// Human-readable machine label (printed by the benches).
     pub name: &'static str,
     /// Effective local FFT throughput per rank, complex-FLOP/s.
     pub fft_flops_per_sec: f64,
@@ -123,6 +124,37 @@ impl Machine {
         let pin = (w - 1) as f64 * Self::WINDOW_PIN_ALPHA_FRACTION * self.alpha;
         serialized as f64 * alpha + pin + bytes_per_rank * self.beta
     }
+
+    /// [`Machine::alltoall_time_windowed`] with the **fused-pack
+    /// discount**: `fused_bytes` of per-destination pack/unpack memory
+    /// traffic ride *inside* the exchange (the live engine packs block
+    /// `s + w` between the waits for rounds `s` and `s + 1`, and unpacks
+    /// each block as its wait completes), so a window-`w` pipeline hides
+    /// all but a `1/w` fraction of that traffic behind the waits.
+    ///
+    /// `window == 1` exposes the full pack/unpack time — the serial
+    /// ordering interleaves but cannot hide, which keeps window-1 pricing
+    /// exactly equal to the old monolithic pack-stage + exchange-stage sum
+    /// (the Fig. 9 projections are unchanged). Wider windows hide more, so
+    /// fused schedules push the model's window optimum wider than the
+    /// pinning charge alone would allow — this is what lets
+    /// `tuner::search` price fusion and move the optimum accordingly. On a
+    /// single-rank communicator the "exchange" is pure local pack/unpack
+    /// and nothing can hide it.
+    pub fn alltoall_time_fused(
+        &self,
+        p: usize,
+        bytes_per_rank: f64,
+        window: usize,
+        fused_bytes: f64,
+    ) -> f64 {
+        let pack_time = fused_bytes / self.mem_bw;
+        if p <= 1 {
+            return pack_time;
+        }
+        let w = window.clamp(1, p - 1);
+        self.alltoall_time_windowed(p, bytes_per_rank, window) + pack_time / w as f64
+    }
 }
 
 #[cfg(test)]
@@ -179,6 +211,41 @@ mod tests {
             assert_eq!(m.alltoall_time_windowed(p, bytes, 1), want);
             assert_eq!(m.alltoall_time(p, bytes), want);
         }
+    }
+
+    #[test]
+    fn fused_discount_preserves_window_one_and_widens_the_optimum() {
+        // local_cpu: memory-bound regime where pack time is comparable to
+        // the latency terms, so hiding it visibly moves the optimum.
+        let m = Machine::local_cpu();
+        let p = 8usize;
+        let bytes = (64 * 1024) as f64 * (p - 1) as f64;
+        let fused = 4.0 * bytes; // pack + unpack touch ~4x the wire volume
+        // Window 1: the serial ordering hides nothing — pricing must equal
+        // the old "pack stage + exchange stage" sum exactly.
+        let want = m.alltoall_time_windowed(p, bytes, 1) + fused / m.mem_bw;
+        assert_eq!(m.alltoall_time_fused(p, bytes, 1, fused), want);
+        // Zero fused bytes: exactly the plain windowed model.
+        for w in [1usize, 2, 7] {
+            assert_eq!(m.alltoall_time_fused(p, bytes, w, 0.0), m.alltoall_time_windowed(p, bytes, w));
+        }
+        // The fused discount must move the window optimum wider: pick the
+        // argmin over the ladder with and without fused bytes.
+        let argmin = |fused: f64| {
+            (1..p)
+                .min_by(|&a, &b| {
+                    m.alltoall_time_fused(p, bytes, a, fused)
+                        .total_cmp(&m.alltoall_time_fused(p, bytes, b, fused))
+                })
+                .unwrap()
+        };
+        let (w_plain, w_fused) = (argmin(0.0), argmin(fused));
+        assert!(
+            w_fused > w_plain,
+            "fused pack must widen the optimum (plain {w_plain}, fused {w_fused})"
+        );
+        // Single-rank communicators: pure local pack/unpack, nothing hidden.
+        assert_eq!(m.alltoall_time_fused(1, 0.0, 4, fused), fused / m.mem_bw);
     }
 
     #[test]

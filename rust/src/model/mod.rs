@@ -2,6 +2,7 @@
 //! machine to project the paper's strong-scaling experiment (Fig. 9) beyond
 //! the live in-process rank count. See DESIGN.md §3 for the substitution
 //! argument and §4.5 for the module inventory.
+#![warn(missing_docs)]
 
 pub mod cost;
 pub mod machine;

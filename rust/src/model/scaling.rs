@@ -30,6 +30,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// All five variants, in the paper's legend order.
     pub fn all() -> [Variant; 5] {
         [
             Variant::Slab1dBatched,
@@ -40,6 +41,7 @@ impl Variant {
         ]
     }
 
+    /// Stable series label used in bench tables and CSV output.
     pub fn label(&self) -> &'static str {
         match self {
             Variant::Slab1dBatched => "cube-1Dgrid-batched",
@@ -53,7 +55,9 @@ impl Variant {
 
 /// Fig. 9 workload description.
 pub struct Workload<'a> {
+    /// Global cube extents `[nx, ny, nz]`.
     pub shape: [usize; 3],
+    /// Batch count (bands per transform).
     pub nb: usize,
     /// Offset array of the wavefunction sphere (plane-wave variant).
     pub offsets: &'a OffsetArray,
@@ -81,24 +85,30 @@ pub fn grid_2d(p: usize) -> (usize, usize) {
 }
 
 /// Price a stage table on `m`: compute stages through the roofline, comm
-/// stages through the windowed alltoall model, non-batched rounds
-/// serialized. `window == 1` is the serial pricing the Fig. 9 projections
-/// use; the tuner's candidate search prices its window ladder through the
-/// same walk, so the two layers can never diverge.
+/// stages through the *fused* windowed alltoall model (each exchange
+/// carries its per-destination pack/unpack traffic as
+/// `StageCost::fused_bytes`, hidden behind waits in proportion to the
+/// window), non-batched rounds serialized. `window == 1` is the serial
+/// pricing the Fig. 9 projections use — at that window the fused pricing
+/// degenerates to the old pack-stage + exchange-stage sum exactly; the
+/// tuner's candidate search prices its window ladder through the same
+/// walk, so the two layers can never diverge.
 pub fn price_stages(cost: &PlanCost, m: &Machine, window: usize) -> f64 {
     let mut t = 0.0;
     let mut comm_idx = 0;
     for s in &cost.stages {
-        // Comm stages are identified by `rounds > 0` (StageCost::comm sets
-        // it >= 1, compute stages 0) — NOT by nonzero bytes: a degenerate
-        // single-rank exchange (e.g. the first alltoall of a pencil 1xN
-        // grid) carries zero bytes but must still consume its a2a_ranks
-        // slot, or every later exchange is priced on the wrong rank count.
+        // Comm stages are identified by `rounds > 0` (StageCost::comm_fused
+        // sets it >= 1, compute stages 0) — NOT by nonzero bytes: a
+        // degenerate single-rank exchange (e.g. the first alltoall of a
+        // pencil 1xN grid) carries zero bytes but must still consume its
+        // a2a_ranks slot, or every later exchange is priced on the wrong
+        // rank count.
         if s.rounds > 0 {
             let pc = cost.a2a_ranks[comm_idx];
             comm_idx += 1;
             let per_round = s.a2a_bytes / s.rounds as f64;
-            t += s.rounds as f64 * m.alltoall_time_windowed(pc, per_round, window);
+            let fused_per_round = s.fused_bytes / s.rounds as f64;
+            t += s.rounds as f64 * m.alltoall_time_fused(pc, per_round, window, fused_per_round);
         } else {
             t += m.compute_time(s.flops, s.touched_bytes);
         }

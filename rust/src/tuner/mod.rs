@@ -31,6 +31,14 @@
 //! ranks without communication. The empirical mode does communicate — its
 //! per-candidate timings are allreduced to the cross-rank critical path —
 //! and therefore also agrees. `tests/tuner.rs` pins both properties.
+//!
+//! ---
+//!
+//! The user guide below is `docs/TUNING.md`, included verbatim — its code
+//! blocks run as doctests, so every walkthrough in the guide is checked
+//! by `cargo test --doc`.
+//!
+#![doc = include_str!("../../../docs/TUNING.md")]
 #![warn(missing_docs)]
 
 pub mod cache;

@@ -8,11 +8,14 @@
 //! padding and the pad-to-cube baseline for sphere inputs), crossed with
 //! the exchange-window ladder `{1, 2, 4, ...}`. Each candidate is priced by
 //! the exact stage counts of [`model::cost`](crate::model::cost) on a
-//! [`Machine`] — the windowed alltoall model
-//! ([`Machine::alltoall_time_windowed`]) prices the overlap knob — and the
-//! result is a deterministically ordered ranking: pure arithmetic on
-//! rank-independent inputs, so every rank of an SPMD program computes the
-//! *same* list and picks the same winner without communicating.
+//! [`Machine`] — the fused windowed alltoall model
+//! ([`Machine::alltoall_time_fused`](crate::model::machine::Machine::alltoall_time_fused))
+//! prices both the overlap knob *and* the pack/unpack traffic each
+//! exchange hides behind its waits, so fused schedules shift the window
+//! optimum — and the result is a deterministically ordered ranking: pure
+//! arithmetic on rank-independent inputs, so every rank of an SPMD program
+//! computes the *same* list and picks the same winner without
+//! communicating.
 
 use std::sync::Arc;
 
@@ -295,10 +298,29 @@ pub fn build(cand: &Candidate, req: &TuneRequest, comm: &Comm) -> Result<Fftb> {
     Ok(fx)
 }
 
+/// Pick the cheapest exchange window for one decomposition of a request —
+/// the window-only search shared by [`auto_window_for`] (the
+/// `FftbOptions::auto()` path) and
+/// [`BatchingDriver::with_auto_window`](crate::coordinator::BatchingDriver::with_auto_window)
+/// (which resolves a window per flushed batch size). Deterministic across
+/// ranks: pricing uses the rank-0 worst-rank stage counts of `model::cost`,
+/// and ties keep the narrower window.
+pub fn auto_window(kind: CandidateKind, req: &TuneRequest, m: &Machine) -> usize {
+    let cost = stage_cost(kind, req);
+    let mut best = (f64::INFINITY, 1usize);
+    for w in windows(req.p) {
+        let t = crate::model::scaling::price_stages(&cost, m, w);
+        // Strict `<`: ties keep the narrower window (deterministic).
+        if t < best.0 {
+            best = (t, w);
+        }
+    }
+    best.1
+}
+
 /// Pick the cheapest exchange window for an already-constructed plan (the
 /// `FftbOptions::auto()` path, where the tensors have pinned the
-/// decomposition and only the window is free). Deterministic across ranks:
-/// pricing uses the rank-0 worst-rank stage counts of `model::cost`.
+/// decomposition and only the window is free).
 pub fn auto_window_for(fx: &Fftb, m: &Machine) -> usize {
     let (kind, p, sphere) = match &fx.kind {
         PlanKind::SlabPencil(pl) => (CandidateKind::SlabPencil, pl.grid_size(), None),
@@ -316,16 +338,7 @@ pub fn auto_window_for(fx: &Fftb, m: &Machine) -> usize {
         }
     };
     let req = TuneRequest { shape: fx.sizes, nb: fx.nb, p, sphere };
-    let cost = stage_cost(kind, &req);
-    let mut best = (f64::INFINITY, 1usize);
-    for w in windows(p) {
-        let t = crate::model::scaling::price_stages(&cost, m, w);
-        // Strict `<`: ties keep the narrower window (deterministic).
-        if t < best.0 {
-            best = (t, w);
-        }
-    }
-    best.1
+    auto_window(kind, &req, m)
 }
 
 #[cfg(test)]
