@@ -1,19 +1,37 @@
 #!/usr/bin/env sh
-# Tier-1 verification: build and test the rust tree with the default
-# (dependency-free) feature set (the unit/integration lane includes the
-# tuner integration tests in tests/tuner.rs; doc examples are split into
-# their own explicit lane so each doctest runs exactly once: cargo test
-# --doc covers the README quickstarts, the docs/TUNING.md walkthroughs
-# included into the tuner rustdoc, and all rustdoc examples), compile
-# every bench harness (cargo bench --no-run: benches otherwise only build
-# on demand and can rot), then build the docs with warnings as errors
-# (enforces the #![warn(missing_docs)] coverage of the comm, fftb::plan,
-# tuner, coordinator and model trees). Run from anywhere.
+# Tier-1 verification + the full lane structure, invoked verbatim by
+# .github/workflows/ci.yml on every push/PR. Run from anywhere.
+#
+# Lanes, in order (fail fast on the cheap static ones):
+#   fmt            cargo fmt --check (style drift fails CI, not review)
+#   clippy         warnings as errors over every target; the structural
+#                  lints at odds with this tree's numeric idiom are
+#                  allowed centrally in Cargo.toml [lints.clippy]
+#   build          release build (tier-1)
+#   test           unit + integration lanes, incl. tests/tuner.rs and
+#                  tests/scf_distributed.rs (tier-1)
+#   doctest        every README / docs/TUNING.md / rustdoc example runs
+#                  exactly once
+#   bench-compile  cargo bench --no-run: benches only build on demand and
+#                  can rot otherwise
+#   examples       cargo build --examples: same rot-protection for the
+#                  runnable walkthroughs at examples/
+#   doc            RUSTDOCFLAGS=-D warnings doc build — enforces the
+#                  #![warn(missing_docs)] coverage of the comm, fftb::plan,
+#                  tuner, coordinator and model trees
+#   smoke          actually RUN the SCF example on p=2: the end-to-end
+#                  DFT-through-the-autotuner scenario (charge conservation,
+#                  steady-state plan-cache hits, zero steady-state allocs,
+#                  wisdom round trip) gates every change
 set -eu
 cd "$(dirname "$0")/rust"
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
 cargo build --release
 cargo test -q --lib --bins --tests
 cargo test --doc -q
 cargo bench --no-run --quiet
+cargo build --examples --release --quiet
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
-echo "ci.sh: tier-1 OK (build + test + doctest + bench-compile + doc)"
+cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4
+echo "ci.sh: OK (fmt + clippy + build + test + doctest + bench-compile + examples + doc + scf smoke)"

@@ -1,0 +1,150 @@
+//! END-TO-END: the distributed SCF loop driven through the autotuner —
+//! every transform requested via `Fftb::plan_auto_scf`, decisions shared
+//! across iterations and ranks through a wisdom file, steady-state
+//! iterations pure plan-cache hits executing warmed workspaces.
+//!
+//! The example runs the loop TWICE in the same process tree:
+//!
+//! 1. a cold run — the tuner searches (or measures, with
+//!    `--empirical`), records the decision to wisdom, and writes the file;
+//! 2. a warm "restart" — a fresh tuner loads the wisdom file and the very
+//!    first plan request is decided without any search.
+//!
+//! Validation gates (CI runs this on p=2 as a smoke test): charge
+//! conservation every iteration, all-rank agreement on the tuner's
+//! decision, steady-state iterations with `plan_cache_hit` and zero
+//! `alloc_bytes`, and the warm run's decision coming from wisdom.
+//!
+//! Run: `cargo run --release --example scf_distributed [--p N] [--iters K]
+//!       [--empirical] [--wisdom PATH]`
+
+use std::path::PathBuf;
+
+use fftb::comm::communicator::run_world;
+use fftb::coordinator::MetricsSink;
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfRunner};
+use fftb::fftb::backend::RustFftBackend;
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let p = arg_usize("--p", 2);
+    let iters = arg_usize("--iters", 6);
+    let empirical = std::env::args().any(|a| a == "--empirical");
+    let wisdom_path: PathBuf = std::env::args()
+        .collect::<Vec<_>>()
+        .iter()
+        .position(|a| a == "--wisdom")
+        .and_then(|i| std::env::args().nth(i + 1))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("fftb_scf_wisdom_p{p}.json"))
+        });
+    std::fs::remove_file(&wisdom_path).ok(); // start genuinely cold
+
+    let n = 16usize; // FFT grid
+    let a = 10.0; // cell (bohr)
+    let ecut = 2.5; // hartree
+    let nb = 4usize; // bands
+
+    println!("distributed SCF through the autotuner");
+    println!("{n}^3 grid, a={a} bohr, ecut={ecut} Ha, {nb} bands, {p} ranks");
+    println!("wisdom: {}", wisdom_path.display());
+    println!();
+
+    let opts = ScfOptions {
+        max_iters: iters,
+        tol: 0.0, // run the full budget so the steady state is visible
+        coupling: 0.3,
+        empirical_top_k: if empirical { 3 } else { 0 },
+        wisdom_path: Some(wisdom_path.clone()),
+        ..Default::default()
+    };
+
+    // ---- cold run: search (or measure), execute, persist wisdom.
+    let t0 = std::time::Instant::now();
+    let opts2 = opts.clone();
+    let cold = run_world(p, move |comm| {
+        let lat = Lattice::new(a, n, ecut);
+        let backend = RustFftBackend::new();
+        let pot = GaussianWells::dimer(3.0, 1.3, 0.35);
+        let mut runner = ScfRunner::new(lat, nb, &pot, &comm, &backend, opts2.clone())
+            .expect("the tuner must find a feasible plan");
+        let res = runner.run(&backend);
+        let mut sink = MetricsSink::new(format!("rank {}", comm.rank()));
+        for t in runner.drain_traces() {
+            sink.record(t);
+        }
+        (res, sink.cache_hit_rate(), sink.total_alloc_bytes())
+    });
+    let cold_wall = t0.elapsed();
+
+    let (res, hit_rate, alloc) = &cold[0];
+    println!("== cold run ({cold_wall:?}) ==");
+    println!(
+        "tuner picked: {} (window {}, from_wisdom={}, measured={})",
+        res.plan_kind, res.window, res.from_wisdom, res.measured
+    );
+    println!(
+        "{:>5} {:>14} {:>12} {:>12} {:>10} {:>8}",
+        "iter", "charge", "delta_rho", "residual", "cache", "alloc"
+    );
+    for s in &res.history {
+        println!(
+            "{:>5} {:>14.8} {:>12.3e} {:>12.3e} {:>10} {:>8}",
+            s.iter, s.charge, s.delta_rho, s.max_residual, s.plan_cache_hit, s.alloc_bytes
+        );
+    }
+    println!("plan-cache hit rate over all transforms: {hit_rate:.2}, alloc {alloc} B");
+    println!();
+
+    // ---- validation gates (the CI smoke step relies on these).
+    for (r, (res_r, _, _)) in cold.iter().enumerate() {
+        assert_eq!(
+            (&res_r.plan_kind, res_r.window),
+            (&res.plan_kind, res.window),
+            "rank {r} disagrees with rank 0 on the tuner decision"
+        );
+        for s in &res_r.history {
+            assert!((s.charge - nb as f64).abs() < 1e-6, "charge drift at iter {}", s.iter);
+        }
+        for s in res_r.history.iter().skip(1) {
+            assert!(s.plan_cache_hit, "iter {} re-planned", s.iter);
+            assert_eq!(s.alloc_bytes, 0, "iter {} allocated", s.iter);
+        }
+    }
+    assert!(!res.from_wisdom, "the cold run must have searched");
+    assert!(res.measured == empirical, "measurement must follow --empirical");
+    assert!(wisdom_path.exists(), "rank 0 must persist the wisdom file");
+
+    // ---- warm restart: a fresh process life, seeded by the wisdom file.
+    let opts3 = opts.clone();
+    let warm = run_world(p, move |comm| {
+        let lat = Lattice::new(a, n, ecut);
+        let backend = RustFftBackend::new();
+        let pot = GaussianWells::dimer(3.0, 1.3, 0.35);
+        let mut runner = ScfRunner::new(lat, nb, &pot, &comm, &backend, opts3.clone())
+            .expect("the tuner must find a feasible plan");
+        runner.run(&backend)
+    });
+    println!("== warm restart ==");
+    println!(
+        "decision: {} (window {}), from_wisdom={}",
+        warm[0].plan_kind, warm[0].window, warm[0].from_wisdom
+    );
+    for w in &warm {
+        assert!(w.from_wisdom, "the warm run must decide from the wisdom file");
+        assert_eq!((&w.plan_kind, w.window), (&res.plan_kind, res.window));
+        assert!((w.density.charge - nb as f64).abs() < 1e-6);
+    }
+    std::fs::remove_file(&wisdom_path).ok();
+    println!();
+    println!("scf_distributed OK");
+}

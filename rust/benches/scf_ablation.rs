@@ -1,0 +1,143 @@
+//! SCF ablation: the full density loop, auto-tuned vs hand-picked plans.
+//!
+//! The paper's red-line workload is the SCF iteration — batched
+//! sphere-forward + inverse per Hamiltonian application plus one density
+//! forward — repeated every iteration. This bench runs the *whole* loop
+//! (fixed iteration budget, identical physics and seeds) under:
+//!
+//! * `auto (model)` — `ScfRunner::new`, tuner decides from the cost model;
+//! * `auto (scf-probe)` — tuner additionally executes its shortlist once
+//!   in the SCF-shaped alternating fwd/inv cadence and keeps the measured
+//!   winner;
+//! * `pinned plane-wave` — the hand-picked batched staged-padding plan;
+//! * `pinned plane-wave-loop` — the per-band exchange cadence;
+//! * `pinned pad-to-cube` — the Fig. 2 baseline.
+//!
+//! Printed per configuration: wall time of the run, per-iteration mean,
+//! plan-cache hit rate and total workspace growth over the loop's
+//! transforms.
+//!
+//! Run: `cargo bench --bench scf_ablation`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fftb::comm::communicator::run_world;
+use fftb::coordinator::MetricsSink;
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfRunner};
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::{
+    Fftb, PaddedSpherePlan, PlanKind, PlaneWaveLoop, PlaneWavePlan,
+};
+
+const N: usize = 16;
+const A: f64 = 10.0;
+const ECUT: f64 = 2.5;
+const NB: usize = 6;
+const P: usize = 4;
+const ITERS: usize = 6;
+
+fn opts() -> ScfOptions {
+    ScfOptions { max_iters: ITERS, tol: 0.0, coupling: 0.3, ..Default::default() }
+}
+
+fn lattice() -> Lattice {
+    Lattice::new(A, N, ECUT)
+}
+
+fn potential() -> GaussianWells {
+    GaussianWells::dimer(3.0, 1.3, 0.35)
+}
+
+/// Run one configuration; returns (kind label, wall, cache rate, alloc B).
+fn run_config(mk: &'static str) -> (String, Duration, f64, u64) {
+    let t0 = Instant::now();
+    let outs = run_world(P, move |comm| {
+        let backend = RustFftBackend::new();
+        let lat = lattice();
+        let off = Arc::clone(&lat.offsets);
+        let mut runner = match mk {
+            "auto-model" => {
+                ScfRunner::new(lat, NB, &potential(), &comm, &backend, opts()).unwrap()
+            }
+            "auto-scf-probe" => {
+                let o = ScfOptions { empirical_top_k: 3, ..opts() };
+                ScfRunner::new(lat, NB, &potential(), &comm, &backend, o).unwrap()
+            }
+            pinned => {
+                let grid = ProcGrid::new(&[P], comm.clone()).unwrap();
+                let kind = match pinned {
+                    "plane-wave" => {
+                        PlanKind::PlaneWave(PlaneWavePlan::new(off, NB, grid).unwrap())
+                    }
+                    "plane-wave-loop" => {
+                        PlanKind::PlaneWaveLoop(PlaneWaveLoop::new(off, NB, grid).unwrap())
+                    }
+                    "pad-to-cube" => {
+                        PlanKind::PaddedSphere(PaddedSpherePlan::new(off, NB, grid).unwrap())
+                    }
+                    other => panic!("unknown config {other}"),
+                };
+                let plan = Arc::new(Fftb { kind, sizes: [N, N, N], nb: NB });
+                ScfRunner::with_plan(lat, NB, &potential(), &comm, plan, opts()).unwrap()
+            }
+        };
+        let res = runner.run(&backend);
+        let mut sink = MetricsSink::new(mk);
+        for t in runner.drain_traces() {
+            sink.record(t);
+        }
+        (res, sink.cache_hit_rate(), sink.total_alloc_bytes())
+    });
+    let wall = t0.elapsed();
+    let (res, _, _) = &outs[0];
+    // Sanity: identical physics in every configuration.
+    for (r, _, _) in &outs {
+        assert!((r.density.charge - NB as f64).abs() < 1e-6, "charge drift under {mk}");
+    }
+    let hit = outs.iter().map(|o| o.1).fold(1.0f64, f64::min);
+    let alloc = outs.iter().map(|o| o.2).max().unwrap();
+    (res.plan_kind.clone(), wall, hit, alloc)
+}
+
+fn main() {
+    println!(
+        "SCF ablation: {N}^3 grid, ecut={ECUT}, nb={NB}, p={P}, {ITERS} iterations"
+    );
+    println!(
+        "{:>16} {:>44} {:>10} {:>10} {:>8} {:>10}",
+        "config", "executed plan", "wall", "per-iter", "cache", "alloc"
+    );
+    let configs =
+        ["auto-model", "auto-scf-probe", "plane-wave", "plane-wave-loop", "pad-to-cube"];
+    let mut rows = Vec::new();
+    for mk in configs {
+        let (kind, wall, hit, alloc) = run_config(mk);
+        println!(
+            "{:>16} {:>44} {:>10.1?} {:>10.1?} {:>8.2} {:>8} B",
+            mk,
+            kind,
+            wall,
+            wall / ITERS as u32,
+            hit,
+            alloc
+        );
+        rows.push((mk, wall));
+    }
+    // The auto-tuned loop must not lose badly to the best hand-picked plan
+    // (it should *be* the best plan, modulo tuning overhead amortized over
+    // only a handful of iterations here), and the pad-to-cube baseline
+    // must not win.
+    let wall_of = |name: &str| rows.iter().find(|r| r.0 == name).unwrap().1;
+    let best_pinned = wall_of("plane-wave").min(wall_of("plane-wave-loop"));
+    assert!(
+        wall_of("auto-model") < best_pinned.mul_f64(1.5),
+        "auto-tuned run fell far behind the best hand-picked plan"
+    );
+    assert!(
+        best_pinned < wall_of("pad-to-cube").mul_f64(1.05),
+        "staged padding must not lose to the pad-to-cube baseline"
+    );
+    println!("scf_ablation bench done");
+}

@@ -19,7 +19,7 @@ use fftb::fft::dft::Direction;
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::sphere::{OffsetArray, SphereKind, SphereSpec};
 use fftb::model::Machine;
-use fftb::tuner::search::{self, TuneRequest};
+use fftb::tuner::search::{self, TuneRequest, WorkloadProfile};
 
 /// Execute every shortlisted candidate (one per decomposition, at its
 /// model-best window — `search::shortlist`, the same list the tuner's
@@ -31,7 +31,7 @@ fn measure(
     p: usize,
     sphere: Option<Arc<OffsetArray>>,
 ) -> Vec<(String, usize, f64, Duration)> {
-    let req = TuneRequest { shape, nb, p, sphere };
+    let req = TuneRequest { shape, nb, p, sphere, profile: WorkloadProfile::Forward };
     let cands = search::shortlist(&req, &Machine::local_cpu(), usize::MAX);
     assert!(!cands.is_empty(), "no feasible candidate for {shape:?} on p={p}");
     let req2 = req.clone();
@@ -110,8 +110,11 @@ fn sphere() {
     print_table("sphere d=n/2 in 32^3, nb=4, p=4 (model order)", &rows);
     assert_eq!(rows[0].0, "plane-wave", "model must pick staged padding");
     let winner = rows.iter().min_by_key(|r| r.3).unwrap();
-    assert_eq!(
-        winner.0, "plane-wave",
+    // The two staged-padding cadences (one fused batched exchange vs the
+    // per-band loop) run nearly identical work in-process, so either may
+    // take the measured crown on a given run — but pad-to-cube must not.
+    assert!(
+        winner.0.starts_with("plane-wave"),
         "staged padding must also win the measurement (got {winner:?})"
     );
 }

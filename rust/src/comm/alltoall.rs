@@ -350,7 +350,14 @@ pub fn alltoallv_complex_flat(
     recv: &mut [Complex],
     recv_offs: &[usize],
 ) {
-    let _ = alltoallv_complex_flat_tuned(comm, send, send_offs, recv, recv_offs, CommTuning::default());
+    let _ = alltoallv_complex_flat_tuned(
+        comm,
+        send,
+        send_offs,
+        recv,
+        recv_offs,
+        CommTuning::default(),
+    );
 }
 
 /// [`alltoallv_complex_flat`] with explicit [`CommTuning`], returning the
@@ -523,7 +530,8 @@ mod tests {
     fn alltoall_regular() {
         let outs = run_world(4, |comm| {
             let p = comm.size();
-            let send: Vec<u8> = (0..p).flat_map(|j| vec![(10 * comm.rank() + j) as u8; 2]).collect();
+            let send: Vec<u8> =
+                (0..p).flat_map(|j| vec![(10 * comm.rank() + j) as u8; 2]).collect();
             alltoall(&comm, &send, 2)
         });
         for (j, recv) in outs.iter().enumerate() {

@@ -37,7 +37,7 @@ use crate::fftb::grid::ProcGrid;
 use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, SlabPencilPlan};
 use crate::model::machine::Machine;
 use crate::tuner::cache::{PlanCache, PlanKey};
-use crate::tuner::search::{self, CandidateKind, TuneRequest};
+use crate::tuner::search::{self, CandidateKind, TuneRequest, WorkloadProfile};
 
 /// One queued single-band transform request.
 pub struct TransformJob {
@@ -123,7 +123,13 @@ impl BatchingDriver {
         match &self.auto_machine {
             Some(m) => search::auto_window(
                 CandidateKind::SlabPencil,
-                &TuneRequest { shape: self.shape, nb, p: self.grid.size(), sphere: None },
+                &TuneRequest {
+                    shape: self.shape,
+                    nb,
+                    p: self.grid.size(),
+                    sphere: None,
+                    profile: WorkloadProfile::Forward,
+                },
                 m,
             ),
             None => self.tuning.window,
@@ -206,8 +212,7 @@ impl BatchingDriver {
             return 0;
         }
         let nb = self.take_buf.len();
-        let (plan, cache_hit) =
-            self.plan_for(nb).expect("driver shape/grid mismatch");
+        let (plan, cache_hit) = self.plan_for(nb).expect("driver shape/grid mismatch");
         // Batched local lengths are nb x the single-band ones, so the
         // per-band job length comes straight off the batched plan.
         let per_band = match dir {
@@ -395,7 +400,7 @@ mod tests {
     #[test]
     fn auto_window_driver_resolves_through_the_tuner() {
         use crate::model::machine::Machine;
-        use crate::tuner::search::{self, CandidateKind, TuneRequest};
+        use crate::tuner::search::{self, CandidateKind, TuneRequest, WorkloadProfile};
 
         let shape = [8usize, 8, 8];
         let p = 2;
@@ -409,7 +414,7 @@ mod tests {
             let nb = 3usize;
             let want = search::auto_window(
                 CandidateKind::SlabPencil,
-                &TuneRequest { shape, nb, p, sphere: None },
+                &TuneRequest { shape, nb, p, sphere: None, profile: WorkloadProfile::Forward },
                 &Machine::local_cpu(),
             );
             assert_eq!(driver.window_for(nb), want);

@@ -73,6 +73,23 @@ impl MetricsSink {
         self.runs.iter().map(|t| t.comm_messages()).sum()
     }
 
+    /// Fraction of recorded runs whose plan was served from a plan cache
+    /// (`ExecTrace::plan_cache_hit`) — 1.0 for a steady-state SCF loop
+    /// after its first iteration. 0.0 when no runs are recorded.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
+        self.runs.iter().filter(|t| t.plan_cache_hit).count() as f64 / self.runs.len() as f64
+    }
+
+    /// Workspace growth summed over all recorded runs
+    /// (`ExecTrace::alloc_bytes`) — 0 once every plan involved has reached
+    /// its high-water mark.
+    pub fn total_alloc_bytes(&self) -> u64 {
+        self.runs.iter().map(|t| t.alloc_bytes).sum()
+    }
+
     /// Measured local compute rate over the runs (flops/s), for calibrating
     /// the performance model.
     pub fn measured_flop_rate(&self) -> f64 {
@@ -144,6 +161,21 @@ mod tests {
         assert_eq!(m.total_messages(), 2);
         assert_eq!(m.mean_comm(), Duration::from_millis(15));
         assert!(m.measured_flop_rate() > 0.0);
+    }
+
+    #[test]
+    fn cache_and_alloc_aggregates() {
+        let mut m = MetricsSink::new("scf");
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        let mut cold = trace(10, 100);
+        cold.alloc_bytes = 4096;
+        m.record(cold);
+        let mut hot = trace(10, 100);
+        hot.plan_cache_hit = true;
+        m.record(hot.clone());
+        m.record(hot);
+        assert!((m.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.total_alloc_bytes(), 4096);
     }
 
     #[test]

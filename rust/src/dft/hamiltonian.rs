@@ -10,17 +10,25 @@
 use std::sync::Arc;
 
 use crate::fft::complex::Complex;
+use crate::fft::dft::Direction;
 use crate::fftb::backend::LocalFftBackend;
 use crate::fftb::grid::{cyclic, ProcGrid};
-use crate::fftb::plan::{ExecTrace, PlaneWavePlan};
+use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, PlaneWavePlan};
 
 use super::lattice::Lattice;
 
 /// Per-rank Hamiltonian: plan + local kinetic array + local potential slab.
+///
+/// The transform plan is any [`Fftb`] whose forward maps the packed
+/// plane-wave sphere to this rank's dense z-slab — by default the staged
+/// plane-wave plan built by [`Hamiltonian::new`], or a tuner-picked plan
+/// injected through [`Hamiltonian::with_plan`] (the `ScfRunner` path,
+/// where `Fftb::plan_auto_scf` chooses the decomposition and window and
+/// the plan object is shared with the tuner's cache).
 pub struct Hamiltonian {
     pub lattice: Lattice,
     pub nb: usize,
-    pub plan: PlaneWavePlan,
+    pub plan: Arc<Fftb>,
     /// Kinetic 1/2 |G|^2 per local packed plane wave.
     kin: Vec<f64>,
     /// Local potential V(r) on this rank's z-slab `[nx, ny, lzc]`.
@@ -74,21 +82,57 @@ impl GaussianWells {
 }
 
 impl Hamiltonian {
-    /// Build on rank `grid.rank()` of a 1D processing grid.
+    /// Build on rank `grid.rank()` of a 1D processing grid, planning the
+    /// default staged plane-wave transform by hand.
     pub fn new(
         lattice: Lattice,
         nb: usize,
         potential: &GaussianWells,
         grid: Arc<ProcGrid>,
     ) -> Self {
+        let n = lattice.n;
+        let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, Arc::clone(&grid))
+            .expect("lattice grid must satisfy the plane-wave plan constraints");
+        let plan = Arc::new(Fftb { kind: PlanKind::PlaneWave(plan), sizes: [n, n, n], nb });
+        Self::with_plan(lattice, nb, potential, grid, plan)
+    }
+
+    /// Build around an already-constructed (e.g. tuner-picked, cached)
+    /// transform plan. The plan must map `nb` bands of the lattice's
+    /// plane-wave sphere to the rank's dense z-slab — exactly what
+    /// [`Fftb::plan_auto_scf`] returns for
+    /// `(sizes = [n, n, n], nb, sphere = lattice.offsets)`.
+    pub fn with_plan(
+        lattice: Lattice,
+        nb: usize,
+        potential: &GaussianWells,
+        grid: Arc<ProcGrid>,
+        plan: Arc<Fftb>,
+    ) -> Self {
         assert_eq!(grid.ndim(), 1, "the mini DFT app runs on 1D grids");
         let p = grid.size();
         let r = grid.rank();
-        let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, Arc::clone(&grid))
-            .expect("lattice grid must satisfy the plane-wave plan constraints");
+        let n = lattice.n;
+        assert_eq!(plan.sizes, [n, n, n], "plan sizes must match the lattice grid");
+        assert_eq!(plan.nb, nb, "plan batch count must match the band count");
         let kin = lattice.local_kinetic(p, r);
+        assert_eq!(
+            plan.input_len(),
+            nb * kin.len(),
+            "plan input layout must match the local plane-wave basis"
+        );
+        let vloc = Self::external_potential(&lattice, potential, p, r);
+        Hamiltonian { lattice, nb, plan, kin, vloc, grid }
+    }
 
-        // Potential on the local z-slab (z cyclic).
+    /// The external potential sampled on rank `r`'s z-slab `[nx, ny, lzc]`
+    /// (z cyclic over `p` ranks) — the fixed part of the SCF potential.
+    pub fn external_potential(
+        lattice: &Lattice,
+        potential: &GaussianWells,
+        p: usize,
+        r: usize,
+    ) -> Vec<f64> {
         let n = lattice.n;
         let lzc = cyclic::local_count(n, p, r);
         let mut vloc = vec![0.0; n * n * lzc];
@@ -102,7 +146,20 @@ impl Hamiltonian {
                 }
             }
         }
-        Hamiltonian { lattice, nb, plan, kin, vloc, grid }
+        vloc
+    }
+
+    /// Mutable access to the local potential slab — the SCF loop rewrites
+    /// it in place every iteration (`v = v_ext + coupling * rho`) without
+    /// minting a new vector. The length (the rank's z-slab) must not
+    /// change.
+    pub fn vloc_mut(&mut self) -> &mut [f64] {
+        &mut self.vloc
+    }
+
+    /// The current local potential slab `[nx, ny, lzc]`.
+    pub fn vloc(&self) -> &[f64] {
+        &self.vloc
     }
 
     /// Local plane-wave count (per band).
@@ -129,14 +186,14 @@ impl Hamiltonian {
         assert_eq!(psi.len(), nb * self.kin.len());
 
         // Potential term through the plane-wave transform pair.
-        let (mut cube, tr_f) = self.plan.forward(backend, psi.to_vec());
+        let (mut cube, tr_f) = self.plan.execute(backend, psi.to_vec(), Direction::Forward);
         for (i, chunk) in cube.chunks_exact_mut(nb).enumerate() {
             let v = self.vloc[i];
             for c in chunk {
                 *c = c.scale(v);
             }
         }
-        let (mut hpsi, tr_i) = self.plan.inverse(backend, cube);
+        let (mut hpsi, tr_i) = self.plan.execute(backend, cube, Direction::Inverse);
 
         // Kinetic term, diagonal in G.
         for (e, &t) in self.kin.iter().enumerate() {
@@ -152,21 +209,39 @@ impl Hamiltonian {
     /// normalized so that the cell integral equals `nb` for orthonormal
     /// bands (`sum_G |c|^2 = 1` maps to `1/vol sum_r |psi(r)|^2 dv = 1`).
     pub fn density(&self, backend: &dyn LocalFftBackend, psi: &[Complex]) -> Vec<f64> {
+        let mut rho = Vec::new();
+        self.density_into(backend, psi, &mut rho);
+        rho
+    }
+
+    /// [`Hamiltonian::density`] into caller-owned storage: `rho` is resized
+    /// to the local slab and overwritten, the transform's dense output is
+    /// recycled back into the plan's slot pool, and the execution trace is
+    /// returned — this is the SCF loop's path, which must neither mint a
+    /// density vector per iteration nor leak pool buffers.
+    pub fn density_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        psi: &[Complex],
+        rho: &mut Vec<f64>,
+    ) -> ExecTrace {
         let nb = self.nb;
-        let (cube, _) = self.plan.forward(backend, psi.to_vec());
+        let (cube, trace) = self.plan.execute(backend, psi.to_vec(), Direction::Forward);
         let npts = cube.len() / nb;
-        let n3 = (self.lattice.n * self.lattice.n * self.lattice.n) as f64;
         let cell_vol = self.lattice.a.powi(3);
-        // |psi(r)|^2 with psi(r) = sum_G c e^{igr}: plan.forward is the
-        // unnormalized DFT, so sum_r |psi(r)|^2 = n^3 sum_G |c|^2.
-        let scale = 1.0 / cell_vol; // integral dv = vol/n^3 per point
-        let _ = n3;
-        let mut rho = vec![0.0; npts];
+        // |psi(r)|^2 with psi(r) = sum_G c e^{igr}: the forward transform is
+        // the unnormalized DFT, so sum_r |psi(r)|^2 = n^3 sum_G |c|^2 and
+        // the per-point integral weight dv = vol/n^3 makes the cell
+        // integral of n(r) equal the band count for orthonormal bands.
+        let scale = 1.0 / cell_vol;
+        rho.clear();
+        rho.resize(npts, 0.0);
         for (i, chunk) in cube.chunks_exact(nb).enumerate() {
             let s: f64 = chunk.iter().map(|c| c.norm_sqr()).sum();
             rho[i] = s * scale;
         }
-        rho
+        self.plan.recycle(cube);
+        trace
     }
 }
 

@@ -4,9 +4,13 @@
 //!
 //! * [`lattice`] — supercell, plane-wave basis from E_cut (Eq. 8-9).
 //! * [`linalg`] — small dense complex algebra (Cholesky, Jacobi eigh).
-//! * [`hamiltonian`] — kinetic + local potential via the plane-wave plan.
+//! * [`hamiltonian`] — kinetic + local potential via an injectable
+//!   (tuner-picked) transform plan.
 //! * [`eigensolver`] — all-band preconditioned steepest descent + Ritz.
-//! * [`scf`] — density build, charge checks, mixing.
+//! * [`scf`] — density build, charge checks, mixing, and [`ScfRunner`]:
+//!   the distributed self-consistency loop driven end-to-end through the
+//!   autotuner (`Fftb::plan_auto_scf`, shared wisdom, steady-state
+//!   plan-cache hits).
 
 pub mod eigensolver;
 pub mod hamiltonian;
@@ -17,4 +21,6 @@ pub mod scf;
 pub use eigensolver::{solve_bands, EigenOptions, EigenResult};
 pub use hamiltonian::{GaussianWells, Hamiltonian};
 pub use lattice::Lattice;
-pub use scf::{build_density, mix_density, Density};
+pub use scf::{
+    build_density, mix_density, Density, ScfIterStats, ScfOptions, ScfResult, ScfRunner,
+};

@@ -6,11 +6,16 @@
 //! variant "loops 256 times around a distributed 3D Fourier transform"
 //! (paper): same total bytes, but `nb`x as many messages, each `nb`x
 //! smaller — which is exactly what falls off the latency cliff at scale.
+//! [`NonBatchedLoop`] is that cadence over the dense slab-pencil plan;
+//! [`PlaneWaveLoop`] is the same cadence over the plane-wave sphere plan
+//! (per-band sphere exchanges vs one fused exchange — the pair
+//! `tuner::search` prices distinctly through the round count of
+//! `model::cost::planewave`).
 //!
 //! Band staging and the batch-wide output run through the loop's own
 //! [`Workspace`]; the inner single-band plan recycles each band vector, so
 //! steady-state loops allocate nothing either. Each inner transform drives
-//! the fused windowed exchange of its `SlabPencilPlan` (per-destination
+//! the fused windowed exchange of its inner plan (per-destination
 //! pack kernels, `CommTuning` forwarded through `set_tuning`), and the
 //! loop's accumulated trace sums the per-iteration overlap counters
 //! (`wait_ns`, `overlap_rounds`, `pack_overlap_ns`, `unpack_overlap_ns`).
@@ -22,11 +27,34 @@ use crate::fft::complex::Complex;
 use crate::fftb::backend::LocalFftBackend;
 use crate::fftb::error::Result;
 use crate::fftb::grid::ProcGrid;
+use crate::fftb::sphere::OffsetArray;
 
+use super::planewave::PlaneWavePlan;
 use super::redistribute::{extract_band_into, insert_band};
 use super::slab_pencil::SlabPencilPlan;
 use super::stages::ExecTrace;
 use super::workspace::{ensure, Workspace};
+
+/// Accumulate iteration traces stage-by-stage so a band loop's trace shape
+/// matches its batched sibling, with summed time/bytes/messages/counters.
+fn accumulate(total: &mut ExecTrace, it: ExecTrace) {
+    total.alloc_bytes += it.alloc_bytes;
+    total.wait_ns += it.wait_ns;
+    total.overlap_rounds += it.overlap_rounds;
+    total.pack_overlap_ns += it.pack_overlap_ns;
+    total.unpack_overlap_ns += it.unpack_overlap_ns;
+    if total.stages.is_empty() {
+        total.stages = it.stages;
+    } else {
+        for (acc, s) in total.stages.iter_mut().zip(it.stages) {
+            debug_assert_eq!(acc.name, s.name);
+            acc.elapsed += s.elapsed;
+            acc.bytes_sent += s.bytes_sent;
+            acc.messages += s.messages;
+            acc.flops += s.flops;
+        }
+    }
+}
 
 /// Runs an `nb`-batched slab-pencil transform as `nb` independent
 /// single-band transforms, each with its own communication stages.
@@ -73,25 +101,113 @@ impl NonBatchedLoop {
         self.nb * self.single.output_len()
     }
 
-    /// Accumulate iteration traces stage-by-stage so the trace shape matches
-    /// the batched plan (5 stages), with summed time/bytes/messages.
-    fn accumulate(total: &mut ExecTrace, it: ExecTrace) {
-        total.alloc_bytes += it.alloc_bytes;
-        total.wait_ns += it.wait_ns;
-        total.overlap_rounds += it.overlap_rounds;
-        total.pack_overlap_ns += it.pack_overlap_ns;
-        total.unpack_overlap_ns += it.unpack_overlap_ns;
-        if total.stages.is_empty() {
-            total.stages = it.stages;
+    fn run(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+        forward: bool,
+    ) -> (Vec<Complex>, ExecTrace) {
+        let (in_band, out_band) = if forward {
+            (self.single.input_len(), self.single.output_len())
         } else {
-            for (acc, s) in total.stages.iter_mut().zip(it.stages) {
-                debug_assert_eq!(acc.name, s.name);
-                acc.elapsed += s.elapsed;
-                acc.bytes_sent += s.bytes_sent;
-                acc.messages += s.messages;
-                acc.flops += s.flops;
-            }
+            (self.single.output_len(), self.single.input_len())
+        };
+        assert_eq!(input.len(), self.nb * in_band);
+
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let mut out = ws.slots.take(self.nb * out_band, &ws.alloc);
+        let mut band = std::mem::take(&mut ws.work);
+        let mut trace = ExecTrace::default();
+        for b in 0..self.nb {
+            ensure(&mut band, in_band, &ws.alloc);
+            extract_band_into(&input, self.nb, b, &mut band);
+            let (res, tr) = if forward {
+                self.single.forward(backend, band)
+            } else {
+                self.single.inverse(backend, band)
+            };
+            insert_band(&mut out, self.nb, b, &res);
+            band = res; // recycle the single plan's output as the next band
+            accumulate(&mut trace, tr);
         }
+        ws.work = band;
+        ws.slots.recycle(input); // the consumed input's storage joins the pool
+        trace.alloc_bytes += ws.allocated();
+        (out, trace)
+    }
+
+    /// Forward transform: `nb` single-band forward passes, traces summed.
+    pub fn forward(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        self.run(backend, input, true)
+    }
+
+    /// Inverse transform: `nb` single-band inverse passes, traces summed.
+    pub fn inverse(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        self.run(backend, input, false)
+    }
+}
+
+/// Runs an `nb`-batched plane-wave sphere transform as `nb` independent
+/// single-band transforms — the per-band exchange cadence of a DFT code
+/// that transforms one wavefunction at a time instead of batching the
+/// whole band block (same wire bytes as [`PlaneWavePlan`], `nb`x the
+/// messages at `1/nb` the size).
+pub struct PlaneWaveLoop {
+    /// Batch count (independent single transforms per execution).
+    pub nb: usize,
+    single: PlaneWavePlan,
+    ws: Mutex<Workspace>,
+}
+
+impl PlaneWaveLoop {
+    /// Plan `nb` independent single-band plane-wave transforms of the
+    /// sphere described by `offsets` on the 1D `grid`.
+    pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
+        Ok(PlaneWaveLoop {
+            nb,
+            single: PlaneWavePlan::new(offsets, 1, grid)?,
+            ws: Mutex::new(Workspace::new()),
+        })
+    }
+
+    /// Override the exchange overlap knobs of the inner single-band plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.single.set_tuning(tuning);
+    }
+
+    /// Return a finished batch-wide output buffer to the loop's slot pool.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        self.ws.lock().unwrap().slots.recycle(buf);
+    }
+
+    /// Rank count of the 1D processing grid the inner plan runs on.
+    pub fn grid_size(&self) -> usize {
+        self.single.grid_size()
+    }
+
+    /// The sphere offsets the inner single-band plan was built from.
+    pub fn offsets(&self) -> &Arc<OffsetArray> {
+        &self.single.offsets
+    }
+
+    /// Packed local input length (`nb` x the single-band sphere points).
+    pub fn input_len(&self) -> usize {
+        self.nb * self.single.input_len()
+    }
+
+    /// Dense local output length (`nb` x the single-band slab).
+    pub fn output_len(&self) -> usize {
+        self.nb * self.single.output_len()
     }
 
     fn run(
@@ -123,7 +239,7 @@ impl NonBatchedLoop {
             };
             insert_band(&mut out, self.nb, b, &res);
             band = res; // recycle the single plan's output as the next band
-            Self::accumulate(&mut trace, tr);
+            accumulate(&mut trace, tr);
         }
         ws.work = band;
         ws.slots.recycle(input); // the consumed input's storage joins the pool
@@ -176,6 +292,39 @@ mod tests {
         });
         for (err, msgs_batched, msgs_looped) in outs {
             assert!(err < 1e-9);
+            // Same exchange repeated nb times => nb x the messages.
+            assert_eq!(msgs_looped, nb as u64 * msgs_batched);
+        }
+    }
+
+    #[test]
+    fn planewave_loop_matches_batched_planewave() {
+        use crate::fftb::sphere::{SphereKind, SphereSpec};
+        let n = 8usize;
+        let nb = 3;
+        let p = 2;
+        let spec = SphereSpec::new([n, n, n], 3.0, SphereKind::Centered);
+        let off = Arc::new(spec.offsets());
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let batched = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+            let looped = PlaneWaveLoop::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+            assert_eq!(batched.input_len(), looped.input_len());
+            assert_eq!(batched.output_len(), looped.output_len());
+            // Both plans read the same batch-fastest packed-sphere layout.
+            let local = phased(batched.input_len(), 5 + grid.rank() as u64);
+            let (a, tr_a) = batched.forward(&backend, local.clone());
+            let (b, tr_b) = looped.forward(&backend, local);
+            let fwd_err = max_abs_diff(&a, &b);
+            // Round trip through the loop restores the sphere coefficients.
+            let (back, _) = looped.inverse(&backend, b);
+            let (want, _) = batched.inverse(&backend, a);
+            (fwd_err, max_abs_diff(&back, &want), tr_a.comm_messages(), tr_b.comm_messages())
+        });
+        for (fwd_err, rt_err, msgs_batched, msgs_looped) in outs {
+            assert!(fwd_err < 1e-9, "forward mismatch {fwd_err}");
+            assert!(rt_err < 1e-9, "round-trip mismatch {rt_err}");
             // Same exchange repeated nb times => nb x the messages.
             assert_eq!(msgs_looped, nb as u64 * msgs_batched);
         }

@@ -51,7 +51,7 @@ use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::ProcGrid;
 use crate::fftb::tensor::DistTensor;
 
-pub use batched::NonBatchedLoop;
+pub use batched::{NonBatchedLoop, PlaneWaveLoop};
 pub use pencil::PencilPlan;
 pub use planewave::{PaddedSpherePlan, PlaneWavePlan};
 pub use redistribute::{A2aSchedule, SplitMergeKernel};
@@ -68,6 +68,8 @@ pub enum PlanKind {
     Pencil(PencilPlan),
     /// Plane-wave sphere transform with staged padding.
     PlaneWave(PlaneWavePlan),
+    /// Non-batched loop of single plane-wave sphere transforms.
+    PlaneWaveLoop(PlaneWaveLoop),
     /// Pad-to-cube baseline for sphere inputs.
     PaddedSphere(PaddedSpherePlan),
 }
@@ -80,6 +82,7 @@ impl PlanKind {
             PlanKind::SlabPencilLoop(_) => "slab-pencil (1D grid, non-batched loop)",
             PlanKind::Pencil(_) => "pencil-pencil (2D grid)",
             PlanKind::PlaneWave(_) => "plane-wave staged padding (1D grid)",
+            PlanKind::PlaneWaveLoop(_) => "plane-wave staged padding (1D grid, non-batched loop)",
             PlanKind::PaddedSphere(_) => "sphere padded to cube + slab-pencil",
         }
     }
@@ -189,6 +192,24 @@ impl Fftb {
         tuner.plan_auto(sizes, nb, sphere, comm, backend)
     }
 
+    /// [`Fftb::plan_auto`] for SCF-shaped workloads that alternate forward
+    /// and inverse transforms every use (the plane-wave DFT density loop):
+    /// the request is tuned, cached and remembered under a round-trip
+    /// signature, and the tuner's empirical mode — when enabled — measures
+    /// one forward *plus* one inverse execution per candidate instead of
+    /// the forward-only probe (see
+    /// [`Tuner::plan_auto_scf`](crate::tuner::Tuner::plan_auto_scf)).
+    pub fn plan_auto_scf(
+        sizes: [usize; 3],
+        nb: usize,
+        sphere: Option<Arc<crate::fftb::sphere::OffsetArray>>,
+        comm: &crate::comm::communicator::Comm,
+        tuner: &mut crate::tuner::Tuner,
+        backend: Option<&dyn LocalFftBackend>,
+    ) -> Result<crate::tuner::TunedPlan> {
+        tuner.plan_auto_scf(sizes, nb, sphere, comm, backend)
+    }
+
     fn plan_inner(
         sizes: [usize; 3],
         output: &DistTensor,
@@ -256,6 +277,8 @@ impl Fftb {
             let off = Arc::clone(input.domains.offsets().unwrap());
             let kind = if opts.pad_sphere_to_cube {
                 PlanKind::PaddedSphere(PaddedSpherePlan::new(off, nb, grid)?)
+            } else if opts.force_non_batched && nb > 1 {
+                PlanKind::PlaneWaveLoop(PlaneWaveLoop::new(off, nb, grid)?)
             } else {
                 PlanKind::PlaneWave(PlaneWavePlan::new(off, nb, grid)?)
             };
@@ -328,6 +351,7 @@ impl Fftb {
             PlanKind::SlabPencilLoop(p) => p.set_tuning(tuning),
             PlanKind::Pencil(p) => p.set_tuning(tuning),
             PlanKind::PlaneWave(p) => p.set_tuning(tuning),
+            PlanKind::PlaneWaveLoop(p) => p.set_tuning(tuning),
             PlanKind::PaddedSphere(p) => p.set_tuning(tuning),
         }
     }
@@ -348,6 +372,8 @@ impl Fftb {
             (PlanKind::Pencil(p), Direction::Inverse) => p.inverse(backend, data),
             (PlanKind::PlaneWave(p), Direction::Forward) => p.forward(backend, data),
             (PlanKind::PlaneWave(p), Direction::Inverse) => p.inverse(backend, data),
+            (PlanKind::PlaneWaveLoop(p), Direction::Forward) => p.forward(backend, data),
+            (PlanKind::PlaneWaveLoop(p), Direction::Inverse) => p.inverse(backend, data),
             (PlanKind::PaddedSphere(p), Direction::Forward) => p.forward(backend, data),
             (PlanKind::PaddedSphere(p), Direction::Inverse) => p.inverse(backend, data),
         }
@@ -360,6 +386,7 @@ impl Fftb {
             PlanKind::SlabPencilLoop(p) => p.input_len(),
             PlanKind::Pencil(p) => p.input_len(),
             PlanKind::PlaneWave(p) => p.input_len(),
+            PlanKind::PlaneWaveLoop(p) => p.input_len(),
             PlanKind::PaddedSphere(p) => p.input_len(),
         }
     }
@@ -371,6 +398,7 @@ impl Fftb {
             PlanKind::SlabPencilLoop(p) => p.output_len(),
             PlanKind::Pencil(p) => p.output_len(),
             PlanKind::PlaneWave(p) => p.output_len(),
+            PlanKind::PlaneWaveLoop(p) => p.output_len(),
             PlanKind::PaddedSphere(p) => p.output_len(),
         }
     }
@@ -386,6 +414,7 @@ impl Fftb {
             PlanKind::SlabPencilLoop(p) => p.recycle(buf),
             PlanKind::Pencil(p) => p.recycle(buf),
             PlanKind::PlaneWave(p) => p.recycle(buf),
+            PlanKind::PlaneWaveLoop(p) => p.recycle(buf),
             PlanKind::PaddedSphere(p) => p.recycle(buf),
         }
     }

@@ -158,8 +158,14 @@ pub fn pencil(shape: [usize; 3], nb: usize, p0: usize, p1: usize, batched: bool)
 }
 
 /// Plane-wave staged-padding forward on a 1D grid, from the *real* offset
-/// array (exact disc/sphere counts).
-pub fn planewave(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
+/// array (exact disc/sphere counts). `batched` selects the paper's batched
+/// execution (one fused sphere exchange carrying all `nb` bands); the
+/// non-batched *loop* variant issues `nb` per-band exchanges instead —
+/// same total wire bytes and pack/unpack traffic, but `nb`x the message
+/// count at `1/nb` the size, which is what separates the two cadences on
+/// a latency-sensitive machine (they priced identically before the loop
+/// variant carried its own round count).
+pub fn planewave(off: &OffsetArray, nb: usize, p: usize, batched: bool) -> PlanCost {
     let (nx, ny, nz) = (off.nx, off.ny, off.nz);
     let lzc = cyclic::local_count(nz, p, 0);
     // Worst rank: rank 0 owns ceil of the x columns.
@@ -170,6 +176,7 @@ pub fn planewave(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
 
     let cyl = nb as f64 * my_cols * nz as f64; // dense z-columns
     let slab = (nb * nx * ny * lzc) as f64;
+    let rounds = if batched { 1 } else { nb };
 
     PlanCost {
         stages: vec![
@@ -185,7 +192,7 @@ pub fn planewave(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
             StageCost::comm_fused(
                 "a2a_sphere",
                 cyl * BYTES_PER_ELEM * (p - 1) as f64 / p as f64,
-                1,
+                rounds,
                 2.0 * cyl * BYTES_PER_ELEM,
             ),
             StageCost::compute(
@@ -262,10 +269,28 @@ mod tests {
         let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
         let off = spec.offsets();
         let (nb, p) = (4usize, 4usize);
-        let pw = planewave(&off, nb, p);
+        let pw = planewave(&off, nb, p, true);
         let dense = slab_pencil([n, n, n], nb, p, true);
         assert!(pw.total_a2a_bytes() < 0.4 * dense.total_a2a_bytes());
         assert!(pw.total_flops() < 0.7 * dense.total_flops());
+    }
+
+    #[test]
+    fn planewave_loop_same_bytes_more_rounds() {
+        // The loop cadence moves the same data as the batched exchange but
+        // in nb per-band invocations — the stage tables must agree on
+        // everything except the round count (the knob the tuner prices).
+        let n = 16;
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = spec.offsets();
+        let (nb, p) = (8usize, 4usize);
+        let batched = planewave(&off, nb, p, true);
+        let looped = planewave(&off, nb, p, false);
+        assert_eq!(batched.total_a2a_bytes(), looped.total_a2a_bytes());
+        assert_eq!(batched.total_flops(), looped.total_flops());
+        assert_eq!(batched.stages[1].rounds, 1);
+        assert_eq!(looped.stages[1].rounds, nb);
+        assert_eq!(batched.stages[1].fused_bytes, looped.stages[1].fused_bytes);
     }
 
     #[test]
@@ -275,7 +300,7 @@ mod tests {
         let off = spec.offsets();
         let (nb, p) = (4usize, 4usize);
         let padded = padded_sphere(&off, nb, p);
-        let pw = planewave(&off, nb, p);
+        let pw = planewave(&off, nb, p, true);
         assert!(padded.total_a2a_bytes() > pw.total_a2a_bytes());
         assert!(padded.total_flops() > pw.total_flops());
         // Same wire volume as the dense cube plan, plus the pad stage.

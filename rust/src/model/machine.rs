@@ -227,7 +227,10 @@ mod tests {
         assert_eq!(m.alltoall_time_fused(p, bytes, 1, fused), want);
         // Zero fused bytes: exactly the plain windowed model.
         for w in [1usize, 2, 7] {
-            assert_eq!(m.alltoall_time_fused(p, bytes, w, 0.0), m.alltoall_time_windowed(p, bytes, w));
+            assert_eq!(
+                m.alltoall_time_fused(p, bytes, w, 0.0),
+                m.alltoall_time_windowed(p, bytes, w)
+            );
         }
         // The fused discount must move the window optimum wider: pick the
         // argmin over the ladder with and without fused bytes.

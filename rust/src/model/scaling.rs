@@ -124,7 +124,7 @@ pub fn project(variant: Variant, w: &Workload, p: usize, m: &Machine) -> f64 {
             let (px, pg) = fold_ranks(p, n, w.nb);
             let nb_group = (w.nb + pg - 1) / pg;
             match variant {
-                Variant::PlaneWave => cost::planewave(w.offsets, nb_group, px),
+                Variant::PlaneWave => cost::planewave(w.offsets, nb_group, px, true),
                 Variant::Slab1dBatched => cost::slab_pencil(w.shape, nb_group, px, true),
                 _ => cost::slab_pencil(w.shape, nb_group, px, false),
             }

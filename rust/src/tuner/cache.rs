@@ -176,11 +176,14 @@ mod tests {
             let grid = ProcGrid::new(&[2], comm).unwrap();
             let mut cache = PlanCache::new();
             cache.get_or_insert(key(2, None, 2), || build_slab(2, &grid)).unwrap();
-            let (_, hit) = cache.get_or_insert(key(3, None, 2), || build_slab(3, &grid)).unwrap();
+            let (_, hit) =
+                cache.get_or_insert(key(3, None, 2), || build_slab(3, &grid)).unwrap();
             assert!(!hit, "different nb is a different plan");
-            let (_, hit) = cache.get_or_insert(key(2, Some(0), 2), || build_slab(2, &grid)).unwrap();
+            let (_, hit) =
+                cache.get_or_insert(key(2, Some(0), 2), || build_slab(2, &grid)).unwrap();
             assert!(!hit, "different direction is a different plan");
-            let (_, hit) = cache.get_or_insert(key(2, None, 4), || build_slab(2, &grid)).unwrap();
+            let (_, hit) =
+                cache.get_or_insert(key(2, None, 4), || build_slab(2, &grid)).unwrap();
             assert!(!hit, "different window is a different plan");
             let other_comm = PlanKey { comm_id: 8, ..key(2, None, 2) };
             let (_, hit) = cache.get_or_insert(other_comm, || build_slab(2, &grid)).unwrap();

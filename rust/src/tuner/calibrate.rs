@@ -159,17 +159,61 @@ pub fn measure_candidates(
     backend: &dyn LocalFftBackend,
     comm: &Comm,
 ) -> (usize, f64) {
+    measure_with(plans, backend, comm, false)
+}
+
+/// The SCF-shaped empirical probe: like [`measure_candidates`] but each
+/// timed use is one **forward plus one inverse** transform — the
+/// alternating G→r / r→G cadence every Hamiltonian application of a
+/// plane-wave SCF loop runs. A forward-only measurement misprices
+/// inverse-heavy workloads whose two directions cost differently (e.g.
+/// the staged-padding sphere plans, whose pack kernels are asymmetric);
+/// this probe is what [`Tuner::plan_auto_scf`](crate::tuner::Tuner::plan_auto_scf)
+/// runs for round-trip requests, and its critical-path seconds are what
+/// lands in the wisdom record (probe kind `"scf"`). Collective, same
+/// contract as [`measure_candidates`].
+pub fn measure_candidates_scf(
+    plans: &[Arc<Fftb>],
+    backend: &dyn LocalFftBackend,
+    comm: &Comm,
+) -> (usize, f64) {
+    measure_with(plans, backend, comm, true)
+}
+
+/// Shared body of the two empirical probes: warm up (fwd + inv when
+/// `round_trip`, so both directions' workspaces reach their high-water
+/// mark untimed), then time one use and allreduce it to the cross-rank
+/// critical path.
+fn measure_with(
+    plans: &[Arc<Fftb>],
+    backend: &dyn LocalFftBackend,
+    comm: &Comm,
+    round_trip: bool,
+) -> (usize, f64) {
     assert!(!plans.is_empty(), "measure_candidates needs at least one plan");
     let mut best = (f64::INFINITY, 0usize);
     for (i, plan) in plans.iter().enumerate() {
         // Warm-up: grows workspaces and slot pools, untimed.
         let (warm, _) = plan.execute(backend, vec![ZERO; plan.input_len()], Direction::Forward);
-        plan.recycle(warm);
+        if round_trip {
+            let (back, _) = plan.execute(backend, warm, Direction::Inverse);
+            plan.recycle(back);
+        } else {
+            plan.recycle(warm);
+        }
         let input = vec![ZERO; plan.input_len()];
         let t0 = Instant::now();
         let (out, _) = plan.execute(backend, input, Direction::Forward);
-        let mine = t0.elapsed().as_secs_f64();
-        plan.recycle(out);
+        let mine = if round_trip {
+            let (back, _) = plan.execute(backend, out, Direction::Inverse);
+            let secs = t0.elapsed().as_secs_f64();
+            plan.recycle(back);
+            secs
+        } else {
+            let secs = t0.elapsed().as_secs_f64();
+            plan.recycle(out);
+            secs
+        };
         let worst = allreduce_max_f64(comm, mine);
         if worst < best.0 {
             best = (worst, i);
@@ -204,7 +248,8 @@ mod tests {
         assert_eq!(m.alpha, 1e-6);
         assert_eq!(m.beta, 1e-10);
         // Bad probes keep the defaults.
-        let bad = Calibration { fft_flops_per_sec: f64::NAN, mem_bw: -1.0, alpha: 0.0, beta: 1e-10 };
+        let bad =
+            Calibration { fft_flops_per_sec: f64::NAN, mem_bw: -1.0, alpha: 0.0, beta: 1e-10 };
         let m2 = bad.apply(Machine::local_cpu());
         let base = Machine::local_cpu();
         assert_eq!(m2.fft_flops_per_sec, base.fft_flops_per_sec);

@@ -57,8 +57,8 @@ use crate::model::machine::Machine;
 
 pub use cache::{PlanCache, PlanKey};
 pub use calibrate::{calibrate_local, calibrated_local_machine, Calibration};
-pub use search::{Candidate, CandidateKind, TuneRequest};
-pub use wisdom::{Wisdom, WisdomEntry};
+pub use search::{Candidate, CandidateKind, TuneRequest, WorkloadProfile};
+pub use wisdom::{Probe, Wisdom, WisdomEntry};
 
 /// The result of one auto-planning call: the (shared, possibly cached)
 /// plan plus how the tuner arrived at it.
@@ -147,6 +147,40 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
     ) -> Result<TunedPlan> {
+        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::Forward)
+    }
+
+    /// [`Tuner::plan_auto`] for SCF-shaped (round-trip) workloads: the
+    /// request is tagged [`WorkloadProfile::RoundTrip`], so its wisdom and
+    /// cache entries never collide with forward-only requests, and the
+    /// empirical mode (when enabled) measures the alternating
+    /// forward/inverse cadence through
+    /// [`calibrate::measure_candidates_scf`] instead of the forward-only
+    /// probe — the critical-path seconds of one G→r / r→G pair, allreduced
+    /// across ranks and persisted to wisdom with probe kind `"scf"`.
+    pub fn plan_auto_scf(
+        &mut self,
+        shape: [usize; 3],
+        nb: usize,
+        sphere: Option<Arc<OffsetArray>>,
+        comm: &Comm,
+        backend: Option<&dyn LocalFftBackend>,
+    ) -> Result<TunedPlan> {
+        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::RoundTrip)
+    }
+
+    /// Shared body of [`Tuner::plan_auto`] / [`Tuner::plan_auto_scf`]:
+    /// wisdom lookup → model ranking → optional empirical probe (shaped by
+    /// `profile`) → wisdom record → plan-cache fetch.
+    fn plan_auto_profiled(
+        &mut self,
+        shape: [usize; 3],
+        nb: usize,
+        sphere: Option<Arc<OffsetArray>>,
+        comm: &Comm,
+        backend: Option<&dyn LocalFftBackend>,
+        profile: WorkloadProfile,
+    ) -> Result<TunedPlan> {
         if let Some(off) = &sphere {
             if shape != [off.nx, off.ny, off.nz] {
                 return Err(FftbError::Unsupported(format!(
@@ -156,11 +190,11 @@ impl Tuner {
                 )));
             }
         }
-        let req = TuneRequest { shape, nb, p: comm.size(), sphere };
+        let req = TuneRequest { shape, nb, p: comm.size(), sphere, profile };
         let sig = req.signature();
 
         let mut prebuilt: Option<Arc<Fftb>> = None;
-        let mut measured = false;
+        let mut probe = Probe::Model;
         // Live critical-path seconds when the empirical mode ran; the
         // wisdom record falls back to the model prediction otherwise.
         let mut measured_seconds: Option<f64> = None;
@@ -189,8 +223,20 @@ impl Tuner {
                                 .iter()
                                 .map(|c| search::build(c, &req, comm).map(Arc::new))
                                 .collect::<Result<Vec<_>>>()?;
-                            let (win, secs) = calibrate::measure_candidates(&plans, be, comm);
-                            measured = true;
+                            // Probe the cadence the caller will run: the
+                            // SCF-shaped probe times one fwd + inv pair,
+                            // replacing the forward-only measurement for
+                            // inverse-heavy (round-trip) requests.
+                            let (win, secs) = match profile {
+                                WorkloadProfile::Forward => {
+                                    probe = Probe::Forward;
+                                    calibrate::measure_candidates(&plans, be, comm)
+                                }
+                                WorkloadProfile::RoundTrip => {
+                                    probe = Probe::Scf;
+                                    calibrate::measure_candidates_scf(&plans, be, comm)
+                                }
+                            };
                             measured_seconds = Some(secs);
                             prebuilt = Some(Arc::clone(&plans[win]));
                             short.swap_remove(win)
@@ -208,10 +254,12 @@ impl Tuner {
                     kind: choice.kind.label(),
                     window: choice.window,
                     seconds: measured_seconds.unwrap_or(choice.predicted),
-                    measured,
+                    measured: probe.is_measured(),
+                    probe,
                 },
             );
         }
+        let measured = probe.is_measured();
 
         let key = PlanKey {
             comm_id: comm.identity(),

@@ -24,7 +24,8 @@ use crate::comm::communicator::Comm;
 use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::ProcGrid;
 use crate::fftb::plan::{
-    Fftb, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlaneWavePlan, PlanKind, SlabPencilPlan,
+    Fftb, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlaneWaveLoop, PlaneWavePlan, PlanKind,
+    SlabPencilPlan,
 };
 use crate::fftb::sphere::OffsetArray;
 use crate::model::cost::{self, PlanCost};
@@ -46,6 +47,9 @@ pub enum CandidateKind {
     },
     /// Plane-wave staged padding for sphere inputs (1D grid).
     PlaneWave,
+    /// Non-batched loop of single plane-wave sphere transforms (1D grid):
+    /// per-band exchange cadence instead of one fused batched exchange.
+    PlaneWaveLoop,
     /// Pad-to-cube baseline for sphere inputs (1D grid).
     PaddedSphere,
 }
@@ -58,6 +62,7 @@ impl CandidateKind {
             CandidateKind::SlabPencilLoop => "slab-pencil-loop".into(),
             CandidateKind::Pencil { p0, p1 } => format!("pencil:{p0}x{p1}"),
             CandidateKind::PlaneWave => "plane-wave".into(),
+            CandidateKind::PlaneWaveLoop => "plane-wave-loop".into(),
             CandidateKind::PaddedSphere => "padded-sphere".into(),
         }
     }
@@ -68,6 +73,7 @@ impl CandidateKind {
             "slab-pencil" => Some(CandidateKind::SlabPencil),
             "slab-pencil-loop" => Some(CandidateKind::SlabPencilLoop),
             "plane-wave" => Some(CandidateKind::PlaneWave),
+            "plane-wave-loop" => Some(CandidateKind::PlaneWaveLoop),
             "padded-sphere" => Some(CandidateKind::PaddedSphere),
             _ => {
                 let rest = s.strip_prefix("pencil:")?;
@@ -76,6 +82,22 @@ impl CandidateKind {
             }
         }
     }
+}
+
+/// How the requested plan will be driven — what one "use" of the plan
+/// looks like to the caller. The tuner's empirical mode measures exactly
+/// this shape, and the wisdom/cache signatures keep the profiles apart so
+/// a winner measured under one cadence never steers the other.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WorkloadProfile {
+    /// One forward transform per use (the historical probe shape).
+    #[default]
+    Forward,
+    /// One forward *and* one inverse transform per use — the SCF loop's
+    /// cadence (G→r, multiply by V(r), r→G every Hamiltonian application),
+    /// where inverse-heavy costs would be mispriced by a forward-only
+    /// measurement.
+    RoundTrip,
 }
 
 /// A tuning question: what to transform, over how many ranks.
@@ -90,20 +112,28 @@ pub struct TuneRequest {
     /// Offset array of the cut-off sphere for sphere workloads; `None`
     /// selects the dense cuboid candidate set.
     pub sphere: Option<Arc<OffsetArray>>,
+    /// The cadence the plan will be driven at (empirical probes measure
+    /// this shape; signatures keep the profiles' wisdom apart).
+    pub profile: WorkloadProfile,
 }
 
 impl TuneRequest {
     /// Canonical string form — the wisdom key and the cache signature.
     /// Sphere requests carry the offset array's structural fingerprint, so
     /// two different spheres with the same point count never share a plan
-    /// or a wisdom entry.
+    /// or a wisdom entry; round-trip (SCF-shaped) requests carry an `|rt`
+    /// suffix so their measured winners never steer forward-only requests.
     pub fn signature(&self) -> String {
         let [nx, ny, nz] = self.shape;
         let sphere = match &self.sphere {
             Some(off) => format!("sphere:{}:{:016x}", off.total(), off.fingerprint()),
             None => "dense".into(),
         };
-        format!("{nx}x{ny}x{nz}|nb={}|p={}|{sphere}", self.nb, self.p)
+        let rt = match self.profile {
+            WorkloadProfile::Forward => "",
+            WorkloadProfile::RoundTrip => "|rt",
+        };
+        format!("{nx}x{ny}x{nz}|nb={}|p={}|{sphere}{rt}", self.nb, self.p)
     }
 }
 
@@ -160,6 +190,9 @@ pub fn enumerate(req: &TuneRequest) -> Vec<CandidateKind> {
         // constructor failure downstream.
         if req.shape == [off.nx, off.ny, off.nz] && p <= nx && p <= nz {
             out.push(CandidateKind::PlaneWave);
+            if req.nb > 1 {
+                out.push(CandidateKind::PlaneWaveLoop);
+            }
             out.push(CandidateKind::PaddedSphere);
         }
         return out;
@@ -186,7 +219,10 @@ pub fn stage_cost(kind: CandidateKind, req: &TuneRequest) -> PlanCost {
         CandidateKind::SlabPencilLoop => cost::slab_pencil(req.shape, req.nb, req.p, false),
         CandidateKind::Pencil { p0, p1 } => cost::pencil(req.shape, req.nb, p0, p1, true),
         CandidateKind::PlaneWave => {
-            cost::planewave(req.sphere.as_ref().expect("sphere request"), req.nb, req.p)
+            cost::planewave(req.sphere.as_ref().expect("sphere request"), req.nb, req.p, true)
+        }
+        CandidateKind::PlaneWaveLoop => {
+            cost::planewave(req.sphere.as_ref().expect("sphere request"), req.nb, req.p, false)
         }
         CandidateKind::PaddedSphere => {
             cost::padded_sphere(req.sphere.as_ref().expect("sphere request"), req.nb, req.p)
@@ -287,6 +323,11 @@ pub fn build(cand: &Candidate, req: &TuneRequest, comm: &Comm) -> Result<Fftb> {
             let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
             PlanKind::PlaneWave(PlaneWavePlan::new(off, req.nb, grid)?)
         }
+        CandidateKind::PlaneWaveLoop => {
+            let grid = ProcGrid::new(&[req.p], comm.clone())?;
+            let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
+            PlanKind::PlaneWaveLoop(PlaneWaveLoop::new(off, req.nb, grid)?)
+        }
         CandidateKind::PaddedSphere => {
             let grid = ProcGrid::new(&[req.p], comm.clone())?;
             let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
@@ -325,19 +366,23 @@ pub fn auto_window_for(fx: &Fftb, m: &Machine) -> usize {
     let (kind, p, sphere) = match &fx.kind {
         PlanKind::SlabPencil(pl) => (CandidateKind::SlabPencil, pl.grid_size(), None),
         PlanKind::SlabPencilLoop(pl) => (CandidateKind::SlabPencilLoop, pl.grid_size(), None),
-        PlanKind::Pencil(pl) => {
-            (CandidateKind::Pencil { p0: pl.grid_dims().0, p1: pl.grid_dims().1 },
-             pl.grid_dims().0 * pl.grid_dims().1,
-             None)
-        }
+        PlanKind::Pencil(pl) => (
+            CandidateKind::Pencil { p0: pl.grid_dims().0, p1: pl.grid_dims().1 },
+            pl.grid_dims().0 * pl.grid_dims().1,
+            None,
+        ),
         PlanKind::PlaneWave(pl) => {
             (CandidateKind::PlaneWave, pl.grid_size(), Some(Arc::clone(&pl.offsets)))
+        }
+        PlanKind::PlaneWaveLoop(pl) => {
+            (CandidateKind::PlaneWaveLoop, pl.grid_size(), Some(Arc::clone(pl.offsets())))
         }
         PlanKind::PaddedSphere(pl) => {
             (CandidateKind::PaddedSphere, pl.grid_size(), Some(Arc::clone(&pl.offsets)))
         }
     };
-    let req = TuneRequest { shape: fx.sizes, nb: fx.nb, p, sphere };
+    let req =
+        TuneRequest { shape: fx.sizes, nb: fx.nb, p, sphere, profile: WorkloadProfile::Forward };
     auto_window(kind, &req, m)
 }
 
@@ -347,7 +392,17 @@ mod tests {
     use crate::fftb::sphere::{SphereKind, SphereSpec};
 
     fn dense(shape: [usize; 3], nb: usize, p: usize) -> TuneRequest {
-        TuneRequest { shape, nb, p, sphere: None }
+        TuneRequest { shape, nb, p, sphere: None, profile: WorkloadProfile::Forward }
+    }
+
+    fn sphere(n: usize, nb: usize, p: usize, off: Arc<OffsetArray>) -> TuneRequest {
+        TuneRequest {
+            shape: [n, n, n],
+            nb,
+            p,
+            sphere: Some(off),
+            profile: WorkloadProfile::Forward,
+        }
     }
 
     #[test]
@@ -378,14 +433,19 @@ mod tests {
     #[test]
     fn sphere_requests_get_sphere_candidates_only() {
         let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
-        let req = TuneRequest {
-            shape: [8, 8, 8],
-            nb: 2,
-            p: 2,
-            sphere: Some(Arc::new(spec.offsets())),
-        };
+        let req = sphere(8, 2, 2, Arc::new(spec.offsets()));
         let cands = enumerate(&req);
-        assert_eq!(cands, vec![CandidateKind::PlaneWave, CandidateKind::PaddedSphere]);
+        assert_eq!(
+            cands,
+            vec![
+                CandidateKind::PlaneWave,
+                CandidateKind::PlaneWaveLoop,
+                CandidateKind::PaddedSphere
+            ]
+        );
+        // Single-band requests have no loop to run.
+        let single = sphere(8, 1, 2, Arc::clone(req.sphere.as_ref().unwrap()));
+        assert!(!enumerate(&single).contains(&CandidateKind::PlaneWaveLoop));
     }
 
     #[test]
@@ -399,6 +459,7 @@ mod tests {
             nb: 1,
             p: 2,
             sphere: Some(Arc::new(spec.offsets())),
+            profile: WorkloadProfile::Forward,
         };
         assert!(enumerate(&req).is_empty());
         assert!(best(&req, &Machine::local_cpu()).is_err());
@@ -408,12 +469,7 @@ mod tests {
     fn planewave_ranks_first_for_spheres() {
         let n = 32;
         let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
-        let req = TuneRequest {
-            shape: [n, n, n],
-            nb: 4,
-            p: 4,
-            sphere: Some(Arc::new(spec.offsets())),
-        };
+        let req = sphere(n, 4, 4, Arc::new(spec.offsets()));
         let ranked = rank_candidates(&req, &Machine::local_cpu());
         assert!(!ranked.is_empty());
         assert_eq!(ranked[0].kind, CandidateKind::PlaneWave, "staged padding must win");
@@ -426,6 +482,61 @@ mod tests {
         let batched = predict(CandidateKind::SlabPencil, 2, &req, &m);
         let looped = predict(CandidateKind::SlabPencilLoop, 2, &req, &m);
         assert!(batched < looped, "batched {batched} must beat looped {looped}");
+    }
+
+    #[test]
+    fn planewave_loop_priced_distinctly_from_batched() {
+        // The acceptance pin: the batched plane-wave variant and its
+        // non-batched loop must never collapse to the same cost (they did
+        // before the loop carried its own round count) — and there must
+        // exist a machine where the *winner* flips.
+        let n = 32;
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = Arc::new(spec.offsets());
+        let req = sphere(n, 8, 4, Arc::clone(&off));
+
+        // On the live-testbed machine the costs differ and batching wins
+        // (per-band exchanges pay nb x the latency convoy).
+        let m = Machine::local_cpu();
+        for w in windows(req.p) {
+            let batched = predict(CandidateKind::PlaneWave, w, &req, &m);
+            let looped = predict(CandidateKind::PlaneWaveLoop, w, &req, &m);
+            assert_ne!(batched, looped, "window {w}: the two cadences priced identically");
+            assert!(batched < looped, "window {w}: batching must win on local_cpu");
+        }
+        let ranked = rank_candidates(&req, &m);
+        assert_eq!(ranked[0].kind, CandidateKind::PlaneWave);
+        assert!(ranked.iter().any(|c| c.kind == CandidateKind::PlaneWaveLoop));
+
+        // A machine whose eager (small-message) protocol is much cheaper
+        // than rendezvous: the batched exchange's large blocks pay the full
+        // rendezvous latency while the loop's per-band blocks stay eager —
+        // the winner flips to the loop cadence.
+        let batched_msg = {
+            let c = stage_cost(CandidateKind::PlaneWave, &req);
+            c.stages[1].a2a_bytes / (req.p - 1) as f64
+        };
+        let eager = Machine {
+            name: "eager-interconnect",
+            small_msg_threshold: batched_msg as usize, // loop msgs fall below
+            small_msg_alpha_factor: 0.02,              // eager skips rendezvous
+            alpha: 5.0e-5,
+            ..Machine::local_cpu()
+        };
+        let ranked = rank_candidates(&req, &eager);
+        assert_eq!(
+            ranked[0].kind,
+            CandidateKind::PlaneWaveLoop,
+            "eager machine must flip the winner to the per-band cadence"
+        );
+    }
+
+    #[test]
+    fn round_trip_signature_is_distinct() {
+        let fwd = dense([8, 8, 8], 2, 2);
+        let rt = TuneRequest { profile: WorkloadProfile::RoundTrip, ..fwd.clone() };
+        assert_ne!(fwd.signature(), rt.signature());
+        assert!(rt.signature().ends_with("|rt"));
     }
 
     #[test]
@@ -449,6 +560,7 @@ mod tests {
             CandidateKind::SlabPencilLoop,
             CandidateKind::Pencil { p0: 3, p1: 5 },
             CandidateKind::PlaneWave,
+            CandidateKind::PlaneWaveLoop,
             CandidateKind::PaddedSphere,
         ] {
             assert_eq!(CandidateKind::from_label(&kind.label()), Some(kind));

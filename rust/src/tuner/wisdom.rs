@@ -10,9 +10,15 @@
 //! consults it before searching and records every fresh decision into it;
 //! [`Wisdom::save`] / [`Wisdom::load`] move it through a JSON file.
 //!
-//! The format is versioned (`"version": 1`); unknown or malformed entries
-//! are rejected loudly at load so a stale file never silently steers the
-//! planner.
+//! The format is versioned (`"version": 2`); unknown or malformed entries
+//! — and files written by a different format version — are rejected with
+//! an `Err` at load (never a panic), so a stale file never silently steers
+//! the planner and callers can fall back to a fresh search. Version 2
+//! added the per-entry `probe` record: *how* the stored seconds were
+//! obtained — `"model"` (cost-model prediction), `"forward"` (the
+//! forward-only empirical probe) or `"scf"` (the SCF-shaped alternating
+//! forward/inverse probe of
+//! [`measure_candidates_scf`](crate::tuner::calibrate::measure_candidates_scf)).
 
 use std::collections::BTreeMap;
 
@@ -21,7 +27,47 @@ use crate::tuner::search::{Candidate, CandidateKind};
 use crate::util::json::Json;
 
 /// Current on-disk format version.
-const VERSION: f64 = 1.0;
+const VERSION: f64 = 2.0;
+
+/// How a wisdom entry's `seconds` were obtained.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Probe {
+    /// Cost-model prediction (no live execution).
+    #[default]
+    Model,
+    /// Forward-only empirical measurement
+    /// ([`measure_candidates`](crate::tuner::calibrate::measure_candidates)).
+    Forward,
+    /// SCF-shaped alternating forward/inverse measurement
+    /// ([`measure_candidates_scf`](crate::tuner::calibrate::measure_candidates_scf)).
+    Scf,
+}
+
+impl Probe {
+    /// Stable on-disk label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Probe::Model => "model",
+            Probe::Forward => "forward",
+            Probe::Scf => "scf",
+        }
+    }
+
+    /// Parse an on-disk label back.
+    pub fn from_label(s: &str) -> Option<Probe> {
+        match s {
+            "model" => Some(Probe::Model),
+            "forward" => Some(Probe::Forward),
+            "scf" => Some(Probe::Scf),
+            _ => None,
+        }
+    }
+
+    /// Whether the seconds came from a live execution (any non-model probe).
+    pub fn is_measured(&self) -> bool {
+        !matches!(self, Probe::Model)
+    }
+}
 
 /// One remembered winner for one request signature.
 #[derive(Clone, Debug, PartialEq)]
@@ -32,8 +78,13 @@ pub struct WisdomEntry {
     pub window: usize,
     /// Predicted (model mode) or measured (empirical mode) seconds.
     pub seconds: f64,
-    /// Whether `seconds` came from a live measurement.
+    /// Whether `seconds` came from a live measurement. Derived from
+    /// `probe` at load ([`Probe::is_measured`]), so the two fields cannot
+    /// disagree after a round trip; kept alongside `probe` for callers
+    /// that only care about provenance, not shape.
     pub measured: bool,
+    /// Which probe produced `seconds` (see [`Probe`]).
+    pub probe: Probe,
 }
 
 impl WisdomEntry {
@@ -109,6 +160,7 @@ impl Wisdom {
             m.insert("window".into(), Json::Num(e.window as f64));
             m.insert("seconds".into(), Json::Num(e.seconds));
             m.insert("measured".into(), Json::Bool(e.measured));
+            m.insert("probe".into(), Json::Str(e.probe.label().into()));
             entries.insert(sig.clone(), Json::Obj(m));
         }
         root.insert("entries".into(), Json::Obj(entries));
@@ -159,8 +211,23 @@ impl Wisdom {
                     .get("seconds")
                     .and_then(Json::as_f64)
                     .ok_or_else(|| format!("wisdom: entry `{sig}` missing seconds"))?;
-                let measured = matches!(e.get("measured"), Some(Json::Bool(true)));
-                entries.insert(sig.clone(), WisdomEntry { kind, window, seconds, measured });
+                let probe = match e.get("probe") {
+                    None => Probe::Model,
+                    Some(v) => {
+                        let label = v.as_str().ok_or_else(|| {
+                            format!("wisdom: entry `{sig}` probe must be a string")
+                        })?;
+                        Probe::from_label(label).ok_or_else(|| {
+                            format!("wisdom: entry `{sig}` has unknown probe `{label}`")
+                        })?
+                    }
+                };
+                // `measured` is derived, not read back: a hand-edited file
+                // whose `measured` flag contradicts its probe kind cannot
+                // smuggle the disagreement into memory.
+                let measured = probe.is_measured();
+                entries
+                    .insert(sig.clone(), WisdomEntry { kind, window, seconds, measured, probe });
             }
         } else if j.get("entries").is_some() {
             return Err("wisdom: `entries` must be an object".into());
@@ -194,11 +261,33 @@ mod tests {
         });
         w.record(
             "16x16x16|nb=4|p=8|dense".into(),
-            WisdomEntry { kind: "pencil:2x4".into(), window: 4, seconds: 0.0125, measured: false },
+            WisdomEntry {
+                kind: "pencil:2x4".into(),
+                window: 4,
+                seconds: 0.0125,
+                measured: false,
+                probe: Probe::Model,
+            },
         );
         w.record(
             "32x32x32|nb=8|p=4|sphere:4169".into(),
-            WisdomEntry { kind: "plane-wave".into(), window: 2, seconds: 0.5, measured: true },
+            WisdomEntry {
+                kind: "plane-wave".into(),
+                window: 2,
+                seconds: 0.5,
+                measured: true,
+                probe: Probe::Forward,
+            },
+        );
+        w.record(
+            "32x32x32|nb=8|p=4|sphere:4169|rt".into(),
+            WisdomEntry {
+                kind: "plane-wave".into(),
+                window: 1,
+                seconds: 0.75,
+                measured: true,
+                probe: Probe::Scf,
+            },
         );
         w
     }
@@ -211,6 +300,13 @@ mod tests {
         assert_eq!(back, w);
         assert_eq!(back.lookup("16x16x16|nb=4|p=8|dense").unwrap().window, 4);
         assert!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().measured);
+        // The probe record survives the round trip — including the
+        // SCF-shaped probe under its round-trip (`|rt`) signature.
+        assert_eq!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().probe, Probe::Forward);
+        let scf = back.lookup("32x32x32|nb=8|p=4|sphere:4169|rt").unwrap();
+        assert_eq!(scf.probe, Probe::Scf);
+        assert!(scf.probe.is_measured());
+        assert_eq!(scf.window, 1);
         let cand = back.lookup("16x16x16|nb=4|p=8|dense").unwrap().candidate().unwrap();
         assert_eq!(cand.kind, crate::tuner::search::CandidateKind::Pencil { p0: 2, p1: 4 });
     }
@@ -232,8 +328,51 @@ mod tests {
             Wisdom::from_json(&Json::parse(r#"{"version": 99}"#).unwrap()).is_err(),
             "future version"
         );
-        let bad_kind = r#"{"version": 1, "entries": {"k": {"kind": "warp-drive", "window": 1, "seconds": 1}}}"#;
+        let bad_kind = r#"{"version": 2, "entries": {"k": {"kind": "warp-drive", "window": 1, "seconds": 1}}}"#;
         assert!(Wisdom::from_json(&Json::parse(bad_kind).unwrap()).is_err(), "unknown kind");
+        let bad_probe = r#"{"version": 2, "entries": {"k": {"kind": "plane-wave", "window": 1, "seconds": 1, "probe": "guesswork"}}}"#;
+        assert!(Wisdom::from_json(&Json::parse(bad_probe).unwrap()).is_err(), "unknown probe");
+    }
+
+    #[test]
+    fn stale_version_files_are_rejected_gracefully() {
+        // A version-1 file (pre-probe format) must come back as a plain
+        // `Err` — never a panic — so callers can fall back to a fresh
+        // search instead of being steered by a record whose semantics
+        // changed under them.
+        let v1 = r#"{"version": 1, "entries": {"8x8x8|nb=2|p=2|dense":
+            {"kind": "slab-pencil", "window": 2, "seconds": 0.001, "measured": false}}}"#;
+        let got = Wisdom::from_json(&Json::parse(v1).unwrap());
+        assert!(matches!(&got, Err(e) if e.contains("unsupported version")), "{got:?}");
+
+        // Same through the file path: Wisdom::load returns the error.
+        let path = std::env::temp_dir().join("fftb_wisdom_stale_v1.json");
+        std::fs::write(&path, v1).unwrap();
+        let loaded = Wisdom::load(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(loaded.is_err());
+    }
+
+    #[test]
+    fn measured_flag_is_derived_from_probe() {
+        // A hand-edited file whose `measured` flag contradicts its probe
+        // kind is normalized at load — probe is the source of truth.
+        let doc = r#"{"version": 2, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5,
+             "measured": true, "probe": "model"}}}"#;
+        let w = Wisdom::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert!(!w.lookup("k").unwrap().measured, "contradiction must be normalized");
+    }
+
+    #[test]
+    fn missing_probe_defaults_to_model() {
+        // Entries written without an explicit probe (e.g. hand-edited
+        // files) parse as model predictions.
+        let doc = r#"{"version": 2, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5}}}"#;
+        let w = Wisdom::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(w.lookup("k").unwrap().probe, Probe::Model);
+        assert!(!w.lookup("k").unwrap().probe.is_measured());
     }
 
     #[test]

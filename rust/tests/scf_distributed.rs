@@ -1,0 +1,234 @@
+//! Integration tests of the tuner-driven distributed SCF loop
+//! (`dft::scf::ScfRunner`): density conservation and SPMD bit-identity
+//! across world sizes, the steady-state re-plan-free / allocation-free
+//! contract (`ExecTrace::plan_cache_hit`, `alloc_bytes == 0`), and the
+//! wisdom file round trip that seeds a second process life — including
+//! the SCF-shaped probe record.
+
+use std::sync::Arc;
+
+use fftb::comm::run_world;
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfRunner};
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::cyclic;
+use fftb::tuner::{Probe, Wisdom};
+
+const N: usize = 12;
+const A: f64 = 8.0;
+const ECUT: f64 = 2.0;
+const NB: usize = 2;
+
+fn opts(iters: usize) -> ScfOptions {
+    // tol 0: run the full budget so every test sees the same iteration
+    // count; coupling on so the loop is genuinely self-consistent.
+    ScfOptions { max_iters: iters, tol: 0.0, coupling: 0.3, ..Default::default() }
+}
+
+fn pot() -> GaussianWells {
+    GaussianWells::single(2.0, 1.4)
+}
+
+/// Run the loop on `p` ranks; per rank: (result, gathered-global-ready
+/// local density, traces' (cache_hit, alloc) pairs).
+#[allow(clippy::type_complexity)]
+fn run_scf(p: usize, iters: usize) -> Vec<(Vec<f64>, Vec<f64>, Vec<(bool, u64)>, String, usize)> {
+    run_world(p, move |comm| {
+        let lat = Lattice::new(A, N, ECUT);
+        let backend = RustFftBackend::new();
+        let mut runner = ScfRunner::new(lat, NB, &pot(), &comm, &backend, opts(iters))
+            .expect("plan_auto_scf must find a feasible plan");
+        let res = runner.run(&backend);
+        let flags = runner
+            .drain_traces()
+            .iter()
+            .map(|t| (t.plan_cache_hit, t.alloc_bytes))
+            .collect();
+        // Scalars whose bits every rank must agree on.
+        let mut scalars: Vec<f64> = res.eigenvalues.clone();
+        for s in &res.history {
+            scalars.push(s.charge);
+            scalars.push(s.delta_rho);
+            scalars.push(s.max_residual);
+        }
+        (scalars, res.density.rho, flags, res.plan_kind, res.window)
+    })
+}
+
+/// Reassemble the global `[n, n, n]` density from per-rank z-slabs
+/// (z cyclic over p ranks).
+fn gather_rho(locals: &[Vec<f64>], p: usize) -> Vec<f64> {
+    let mut global = vec![0.0; N * N * N];
+    for z in 0..N {
+        let r = cyclic::owner(z, p);
+        let lz = cyclic::global_to_local(z, p);
+        for y in 0..N {
+            for x in 0..N {
+                global[x + N * (y + N * z)] = locals[r][x + N * (y + N * lz)];
+            }
+        }
+    }
+    global
+}
+
+#[test]
+fn density_conserved_and_bit_identical_across_ranks() {
+    for p in [1usize, 2, 4] {
+        let outs = run_scf(p, 3);
+        // Charge conservation on every rank, every iteration (charges are
+        // the first history scalars after the eigenvalues).
+        for (scalars, _, _, kind, _) in &outs {
+            for it in 0..3 {
+                let charge = scalars[NB + 3 * it];
+                assert!(
+                    (charge - NB as f64).abs() < 1e-8,
+                    "p={p} iter {it}: charge {charge}"
+                );
+            }
+            assert_eq!(kind, "plane-wave", "p={p}");
+        }
+        // SPMD bit-identity: every global scalar — eigenvalues, charges,
+        // density deltas, residuals — and the tuner decision must agree
+        // across ranks to the last bit (allreduced quantities, identical
+        // tuning inputs).
+        let first = &outs[0];
+        for (r, o) in outs.iter().enumerate().skip(1) {
+            assert_eq!(o.0.len(), first.0.len());
+            for (i, (a, b)) in o.0.iter().zip(&first.0).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "p={p} rank {r}: scalar {i} differs ({a} vs {b})"
+                );
+            }
+            assert_eq!((&o.3, o.4), (&first.3, first.4), "p={p} rank {r}: decision differs");
+        }
+    }
+}
+
+#[test]
+fn density_agrees_across_world_sizes() {
+    // The same physics on p = 1, 2, 4 ranks: the assembled global density
+    // must agree tightly (different decomposition, same transform).
+    let rho1 = {
+        let outs = run_scf(1, 3);
+        gather_rho(&[outs[0].1.clone()], 1)
+    };
+    for p in [2usize, 4] {
+        let outs = run_scf(p, 3);
+        let locals: Vec<Vec<f64>> = outs.iter().map(|o| o.1.clone()).collect();
+        let rho_p = gather_rho(&locals, p);
+        let worst = rho1
+            .iter()
+            .zip(&rho_p)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        // Starting state is identical by construction (global-index
+        // seeding); only summation-order fp noise separates the worlds.
+        assert!(worst < 1e-7, "p={p}: global density diverges by {worst}");
+    }
+}
+
+#[test]
+fn steady_state_is_replan_free_and_allocation_free() {
+    for p in [1usize, 2, 4] {
+        let outs = run_scf(p, 4);
+        for (r, (_, _, flags, _, _)) in outs.iter().enumerate() {
+            assert_eq!(flags.len(), 3 * 4, "three transforms per iteration");
+            // Iteration >= 2 (trace index >= 3): plan served from the
+            // tuner's cache, zero workspace growth — the acceptance pin.
+            for (i, (hit, alloc)) in flags.iter().enumerate().skip(3) {
+                assert!(hit, "p={p} rank {r}: transform {i} executed a re-planned plan");
+                assert_eq!(alloc, &0, "p={p} rank {r}: transform {i} grew its workspace");
+            }
+        }
+    }
+}
+
+#[test]
+fn wisdom_file_seeds_the_next_life_with_the_scf_probe() {
+    let path = std::env::temp_dir().join("fftb_scf_test_wisdom.json");
+    std::fs::remove_file(&path).ok();
+    let p = 2;
+
+    // First life: empirical SCF-shaped probe, wisdom written by rank 0.
+    let path2 = path.clone();
+    let first = run_world(p, move |comm| {
+        let lat = Lattice::new(A, N, ECUT);
+        let backend = RustFftBackend::new();
+        let o = ScfOptions {
+            empirical_top_k: 3,
+            wisdom_path: Some(path2.clone()),
+            ..opts(2)
+        };
+        let mut runner = ScfRunner::new(lat, NB, &pot(), &comm, &backend, o).unwrap();
+        runner.run(&backend)
+    });
+    for r in &first {
+        assert!(!r.from_wisdom, "first life must search");
+        assert!(r.measured, "empirical_top_k=3 must measure the shortlist");
+    }
+
+    // The persisted record: a round-trip (`|rt`) signature carrying the
+    // SCF probe kind and a positive measured time.
+    let wisdom = Wisdom::load(&path).expect("rank 0 must have written the wisdom file");
+    let sig = wisdom_sig();
+    let entry = wisdom.lookup(&sig).unwrap_or_else(|| panic!("no wisdom entry for `{sig}`"));
+    assert_eq!(entry.probe, Probe::Scf, "the SCF-shaped probe must be recorded");
+    assert!(entry.measured && entry.seconds > 0.0);
+
+    // Second life: decision comes straight from the file.
+    let path3 = path.clone();
+    let second = run_world(p, move |comm| {
+        let lat = Lattice::new(A, N, ECUT);
+        let backend = RustFftBackend::new();
+        let o = ScfOptions { wisdom_path: Some(path3.clone()), ..opts(2) };
+        let mut runner = ScfRunner::new(lat, NB, &pot(), &comm, &backend, o).unwrap();
+        runner.run(&backend)
+    });
+    std::fs::remove_file(&path).ok();
+    for (f, s) in first.iter().zip(&second) {
+        assert!(s.from_wisdom, "second life must decide from wisdom");
+        assert!(!s.measured, "no re-measuring on a wisdom hit");
+        assert_eq!((&s.plan_kind, s.window), (&f.plan_kind, f.window));
+        assert!((s.density.charge - NB as f64).abs() < 1e-8);
+    }
+}
+
+/// The round-trip request signature the runner tunes under (kept in sync
+/// with `TuneRequest::signature`).
+fn wisdom_sig() -> String {
+    let lat = Lattice::new(A, N, ECUT);
+    let off = Arc::clone(&lat.offsets);
+    format!(
+        "{N}x{N}x{N}|nb={NB}|p=2|sphere:{}:{:016x}|rt",
+        off.total(),
+        off.fingerprint()
+    )
+}
+
+#[test]
+fn stale_wisdom_is_skipped_not_fatal() {
+    // A version-1 (stale) wisdom file must not panic the runner — it
+    // falls back to a fresh search and still completes.
+    let path = std::env::temp_dir().join("fftb_scf_test_stale_wisdom.json");
+    std::fs::write(
+        &path,
+        r#"{"version": 1, "entries": {"junk": {"kind": "plane-wave", "window": 1, "seconds": 1}}}"#,
+    )
+    .unwrap();
+    let path2 = path.clone();
+    let outs = run_world(2, move |comm| {
+        let lat = Lattice::new(A, N, ECUT);
+        let backend = RustFftBackend::new();
+        let o = ScfOptions { wisdom_path: Some(path2.clone()), ..opts(2) };
+        let mut runner = ScfRunner::new(lat, NB, &pot(), &comm, &backend, o).unwrap();
+        runner.run(&backend)
+    });
+    for r in &outs {
+        assert!(!r.from_wisdom, "stale wisdom must be ignored");
+        assert!((r.density.charge - NB as f64).abs() < 1e-8);
+    }
+    // The run then overwrites the stale file with a current-version one.
+    assert!(Wisdom::load(&path).is_ok(), "the stale file must be replaced");
+    std::fs::remove_file(&path).ok();
+}
