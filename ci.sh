@@ -7,9 +7,14 @@
 #   clippy         warnings as errors over every target; the structural
 #                  lints at odds with this tree's numeric idiom are
 #                  allowed centrally in Cargo.toml [lints.clippy]
+#   lint           pallas-lint, the repo-specific static pass: SAFETY
+#                  comments on every unsafe block, atomic-ordering
+#                  rationale, no allocation inside steady-state regions,
+#                  no panicking calls in library code (see rust/src/lint)
 #   build          release build (tier-1)
-#   test           unit + integration lanes, incl. tests/tuner.rs and
-#                  tests/scf_distributed.rs (tier-1)
+#   test           unit + integration lanes, incl. tests/tuner.rs,
+#                  tests/scf_distributed.rs and the schedule-perturbation
+#                  lanes of tests/comm_schedules.rs (tier-1)
 #   doctest        every README / docs/TUNING.md / rustdoc example runs
 #                  exactly once
 #   bench-compile  cargo bench --no-run: benches only build on demand and
@@ -23,15 +28,61 @@
 #                  DFT-through-the-autotuner scenario (charge conservation,
 #                  steady-state plan-cache hits, zero steady-state allocs,
 #                  wisdom round trip) gates every change
+#
+# Nightly sanitizer lanes (opt-in, PALLAS_NIGHTLY=1; PALLAS_NIGHTLY=only
+# skips the stable lanes and runs just the sanitizers):
+#   miri           cargo +nightly miri over the unsafe surface — the
+#                  fft::complex byte/f64 reinterpret casts and the
+#                  comm::arena checkout/recycle unit tests
+#   tsan           ThreadSanitizer (-Z sanitizer=thread, -Zbuild-std) over
+#                  the comm-layer unit tests: mailbox delivery, arena
+#                  stress, collectives — the threads-as-ranks surface
+# Both lanes skip with a visible notice when no nightly toolchain (or the
+# miri / rust-src component) is installed, so the stable lanes never block
+# on nightly availability.
 set -eu
 cd "$(dirname "$0")/rust"
-cargo fmt --check
-cargo clippy --all-targets -- -D warnings
-cargo build --release
-cargo test -q --lib --bins --tests
-cargo test --doc -q
-cargo bench --no-run --quiet
-cargo build --examples --release --quiet
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
-cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4
-echo "ci.sh: OK (fmt + clippy + build + test + doctest + bench-compile + examples + doc + scf smoke)"
+
+PALLAS_NIGHTLY="${PALLAS_NIGHTLY:-}"
+
+if [ "$PALLAS_NIGHTLY" != "only" ]; then
+    cargo fmt --check
+    cargo clippy --all-targets -- -D warnings
+    cargo run --release --quiet --bin pallas-lint
+    cargo build --release
+    cargo test -q --lib --bins --tests
+    cargo test --doc -q
+    cargo bench --no-run --quiet
+    cargo build --examples --release --quiet
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+    cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4
+    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke)"
+fi
+
+if [ -n "$PALLAS_NIGHTLY" ]; then
+    if ! rustup toolchain list 2>/dev/null | grep -q nightly; then
+        echo "ci.sh: NOTICE: PALLAS_NIGHTLY set but no nightly toolchain installed — skipping miri + tsan lanes"
+        exit 0
+    fi
+    if rustup component list --toolchain nightly 2>/dev/null | grep -q "^miri.*(installed)"; then
+        # Miri over the unsafe surface: byte/f64 reinterpret casts and the
+        # arena's checkout/recycle ownership dance.
+        MIRIFLAGS="-Zmiri-strict-provenance" \
+            cargo +nightly miri test -q --lib fft::complex comm::arena
+        echo "ci.sh: miri lane OK"
+    else
+        echo "ci.sh: NOTICE: nightly miri component not installed — skipping miri lane"
+    fi
+    if rustup component list --toolchain nightly 2>/dev/null | grep -q "^rust-src.*(installed)"; then
+        # TSan needs a sanitized std (-Zbuild-std) and a nightly-only
+        # RUSTFLAGS; run the comm-layer unit tests where every rank is a
+        # thread sharing mailboxes, the arena and the stats counters.
+        host="$(rustc -vV | sed -n 's/^host: //p')"
+        RUSTFLAGS="-Z sanitizer=thread" \
+            cargo +nightly test -q --lib comm:: \
+            -Zbuild-std --target "$host"
+        echo "ci.sh: tsan lane OK"
+    else
+        echo "ci.sh: NOTICE: nightly rust-src component not installed — skipping tsan lane"
+    fi
+fi

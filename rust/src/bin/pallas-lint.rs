@@ -1,0 +1,54 @@
+//! `pallas-lint`: the repo's custom static-analysis pass (see the
+//! `fftb::lint` module).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --release --quiet --bin pallas-lint            # lint rust/src
+//! cargo run --release --quiet --bin pallas-lint -- <paths> # lint paths
+//! ```
+//!
+//! Diagnostics are machine-readable, one per line:
+//! `file:line: [rule] message`. Exit status is 0 when clean, 1 when there
+//! are findings, 2 on I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let roots: Vec<PathBuf> = {
+        let args: Vec<PathBuf> =
+            std::env::args().skip(1).filter(|a| !a.starts_with('-')).map(PathBuf::from).collect();
+        if args.is_empty() {
+            vec![PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))]
+        } else {
+            args
+        }
+    };
+
+    let mut files = 0usize;
+    let mut findings = Vec::new();
+    for root in &roots {
+        match fftb::lint::lint_tree(root) {
+            Ok(report) => {
+                files += report.files;
+                findings.extend(report.diagnostics);
+            }
+            Err(e) => {
+                eprintln!("pallas-lint: {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    for d in &findings {
+        println!("{d}");
+    }
+    if findings.is_empty() {
+        eprintln!("pallas-lint: {files} file(s) clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("pallas-lint: {} finding(s) across {files} file(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

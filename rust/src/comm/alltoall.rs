@@ -209,6 +209,36 @@ pub fn alltoallv_fused(
     let rounds = p - 1;
     let w = tuning.window.clamp(1, rounds);
 
+    // Schedule-perturbation mode (verification worlds only, see
+    // `run_world_perturbed`): post every send up front — sends are
+    // eager/buffered, so posting all of them cannot deadlock, whereas
+    // permuting waits *inside* the windowed schedule could cross-block
+    // between ranks — then complete the waits in a seeded pseudo-random
+    // order. Distinct rounds unpack into disjoint destinations, so the
+    // result must stay bit-identical to the windowed schedule; that is
+    // exactly what tests/comm_schedules.rs pins across seeds.
+    if let Some(order) = comm.perturb_order(rounds) {
+        for round in 1..=rounds {
+            pack_and_send(comm, blocks, me, p, round, w, &mut c);
+        }
+        for &s in &order {
+            let from = (me + p - s) % p;
+            let req = comm.irecv_coll(from, T_A2A);
+            let t0 = Instant::now();
+            // pallas-lint: allow(no-panic) — receive requests always
+            // carry a payload (see Request::wait).
+            let buf = req.wait().expect("irecv requests always carry a payload");
+            c.wait_ns += t0.elapsed().as_nanos() as u64;
+            assert_eq!(
+                buf.len(),
+                blocks.recv_bytes(from),
+                "alltoall: peer {from} sent a block of the wrong size"
+            );
+            blocks.unpack(from, &buf);
+        }
+        return c;
+    }
+
     // All receives are logically posted up front: in this mailbox model an
     // `irecv` has no post-time side effect (a `Request` is just a routing
     // key; matching is by per-channel FIFO), so the pre-posting is fully
@@ -233,6 +263,8 @@ pub fn alltoallv_fused(
         let from = (me + p - s) % p;
         let req = comm.irecv_coll(from, T_A2A);
         let t0 = Instant::now();
+        // pallas-lint: allow(no-panic) — receive requests always carry a
+        // payload (see Request::wait).
         let buf = req.wait().expect("irecv requests always carry a payload");
         c.wait_ns += t0.elapsed().as_nanos() as u64;
         assert_eq!(

@@ -31,6 +31,11 @@ struct ArenaInner {
     /// `classes[k]` holds free buffers whose capacity is at least
     /// `2^(k + MIN_CLASS_SHIFT)` bytes.
     classes: Vec<Mutex<Vec<Vec<u8>>>>,
+    /// Reuse tallies (`Ordering::Relaxed` throughout, and in the
+    /// pallas-lint allowlist): pure monotone statistics read only by
+    /// [`BufferArena::stats`]. Buffer ownership itself is handed over
+    /// under the per-class mutex, which carries all the synchronization —
+    /// the counters order nothing.
     minted: AtomicU64,
     reused: AtomicU64,
 }
@@ -144,6 +149,9 @@ pub struct WireBuf {
 impl WireBuf {
     /// Append `src`, growing only if the checkout capacity was exceeded.
     pub fn extend_from_slice(&mut self, src: &[u8]) {
+        // pallas-lint: allow(no-panic) — `buf` is only `None` after
+        // `into_vec`, which consumes `self`; `&mut self` here proves it
+        // was not consumed.
         self.buf.as_mut().expect("WireBuf used after into_vec").extend_from_slice(src);
     }
 
@@ -160,6 +168,8 @@ impl WireBuf {
     /// Take the storage out, skipping arena recycling (used where the
     /// public API hands a plain `Vec<u8>` to the caller).
     pub fn into_vec(mut self) -> Vec<u8> {
+        // pallas-lint: allow(no-panic) — `into_vec` consumes `self`, so
+        // the storage can only have been taken once.
         self.buf.take().expect("WireBuf used after into_vec")
     }
 }

@@ -90,8 +90,9 @@ pub fn allgatherv(comm: &Comm, mine: &[u8]) -> Vec<Vec<u8>> {
     let gathered = gatherv(comm, 0, mine);
     // Pack: [count, len_0.., bytes_0..]
     let mut packed = Vec::new();
-    if comm.rank() == 0 {
-        let blocks = gathered.unwrap();
+    // `gatherv` returns `Some` exactly at the root, so this branch is the
+    // rank-0 branch (and stays panic-free on every rank).
+    if let Some(blocks) = gathered {
         packed.extend_from_slice(&(p as u64).to_le_bytes());
         for b in &blocks {
             packed.extend_from_slice(&(b.len() as u64).to_le_bytes());
@@ -122,9 +123,6 @@ pub fn allreduce_sum_f64(comm: &Comm, data: &mut [f64]) {
     if p == 1 {
         return;
     }
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-    };
     if comm.rank() == 0 {
         let mut acc: Vec<f64> = data.to_vec();
         for r in 1..p {
@@ -135,16 +133,10 @@ pub fn allreduce_sum_f64(comm: &Comm, data: &mut [f64]) {
         }
         data.copy_from_slice(&acc);
     } else {
-        comm.send_coll(0, T_REDUCE, bytes);
+        comm.send_coll(0, T_REDUCE, complex::f64_as_bytes(data));
     }
-    let mut buf: Vec<u8> = if comm.rank() == 0 {
-        unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-        }
-        .to_vec()
-    } else {
-        Vec::new()
-    };
+    let mut buf: Vec<u8> =
+        if comm.rank() == 0 { complex::f64_as_bytes(data).to_vec() } else { Vec::new() };
     bcast(comm, 0, &mut buf);
     for (i, c) in buf.chunks_exact(8).enumerate() {
         data[i] = f64::from_le_bytes(c.try_into().unwrap());

@@ -54,17 +54,43 @@ pub struct WorldShared {
     arena: BufferArena,
     /// Wire traffic counters for the whole world.
     pub stats: Arc<CommStats>,
+    /// `Some(seed)` arms schedule perturbation: mailbox delivery order and
+    /// exchange wait order are scrambled deterministically from the seed
+    /// (verification worlds only — see [`run_world_perturbed`]).
+    schedule_seed: Option<u64>,
+    /// Per-exchange ticket feeding distinct sub-seeds to consecutive
+    /// perturbed exchanges on the same world.
+    perturb_ticket: AtomicU64,
 }
 
 impl WorldShared {
     /// Create the shared state for a world of `p` ranks.
     pub fn new(p: usize) -> Arc<Self> {
+        Self::with_perturbation(p, None)
+    }
+
+    /// [`WorldShared::new`] with an optional schedule-perturbation seed;
+    /// `Some(seed)` arms the delivery policy of every rank's mailbox (each
+    /// with a distinct sub-seed) and the wait-order shuffle in the fused
+    /// exchange engine.
+    pub fn with_perturbation(p: usize, seed: Option<u64>) -> Arc<Self> {
+        let mailboxes: Vec<Arc<Mailbox>> = (0..p)
+            .map(|r| {
+                let mb = Mailbox::new();
+                if let Some(s) = seed {
+                    mb.set_policy(s ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(r as u64 + 1));
+                }
+                mb
+            })
+            .collect();
         Arc::new(WorldShared {
-            mailboxes: (0..p).map(|_| Mailbox::new()).collect(),
+            mailboxes,
             // context 0 is the world communicator.
             next_context: AtomicU64::new(1),
             arena: BufferArena::new(),
             stats: Arc::new(CommStats::default()),
+            schedule_seed: seed,
+            perturb_ticket: AtomicU64::new(0),
         })
     }
 
@@ -74,6 +100,11 @@ impl WorldShared {
     }
 
     fn alloc_contexts(&self, n: u64) -> u64 {
+        // SeqCst: context ids must be globally unique *and* every rank of
+        // the splitting group must agree on the id ordering; the single
+        // total order is cheap here (splits are rare, plan-time-only) and
+        // removes any reasoning burden when worker threads (ROADMAP item
+        // 3) start splitting concurrently.
         self.next_context.fetch_add(n, Ordering::SeqCst)
     }
 }
@@ -204,6 +235,28 @@ impl Comm {
     /// The world's shared wire-buffer arena.
     pub fn arena(&self) -> &BufferArena {
         &self.shared.arena
+    }
+
+    /// When this world is perturbation-armed: a seeded pseudo-random
+    /// permutation of the exchange rounds `1..=rounds`, distinct per call
+    /// site (ticketed), per rank, and per seed. `None` on normal worlds —
+    /// the fused exchange engine keeps its windowed schedule.
+    pub(crate) fn perturb_order(&self, rounds: usize) -> Option<Vec<usize>> {
+        let seed = self.shared.schedule_seed?;
+        // Relaxed (allowlisted): fetch_add atomicity alone makes tickets
+        // distinct; nothing else is published through this counter.
+        let ticket = self.shared.perturb_ticket.fetch_add(1, Ordering::Relaxed);
+        let mut prng = crate::util::prng::Prng::new(
+            seed ^ ticket.wrapping_mul(0x2545_F491_4F6C_DD1D)
+                ^ ((self.world_rank as u64) << 32)
+                ^ self.context,
+        );
+        let mut order: Vec<usize> = (1..=rounds).collect();
+        for i in (1..order.len()).rev() {
+            let j = prng.next_below(i + 1);
+            order.swap(i, j);
+        }
+        Some(order)
     }
 
     /// Post a wire buffer to `dst`'s mailbox, recording remote traffic.
@@ -352,6 +405,8 @@ impl Comm {
             // Scatter.
             let mut my_reply = None;
             for (r, rep) in replies.into_iter().enumerate() {
+                // pallas-lint: allow(no-panic) — every slot was filled by
+                // the grouping loop above: each rank has exactly one color.
                 let (ctx, group, new_rank) = rep.expect("every rank belongs to a group");
                 if r == 0 {
                     my_reply = Some((ctx, group, new_rank));
@@ -365,6 +420,8 @@ impl Comm {
                     self.send_coll(r, T_SCATTER, &buf);
                 }
             }
+            // pallas-lint: allow(no-panic) — rank 0 set its own slot in
+            // the scatter loop just above.
             let (ctx, group, new_rank) = my_reply.unwrap();
             Comm {
                 shared: Arc::clone(&self.shared),
@@ -396,15 +453,14 @@ impl Comm {
     }
 }
 
-/// Run `p` ranks as scoped threads; each gets the world communicator. The
-/// closure's return values are collected in rank order.
-pub fn run_world<T, F>(p: usize, f: F) -> Vec<T>
+/// Shared body of the `run_world*` entry points: spawn `p` rank threads
+/// over `shared`, collect their return values in rank order.
+fn run_world_on<T, F>(shared: Arc<WorldShared>, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(Comm) -> T + Send + Sync,
 {
-    assert!(p >= 1, "world needs at least one rank");
-    let shared = WorldShared::new(p);
+    let p = shared.size();
     let results: Vec<Mutex<Option<T>>> = (0..p).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for r in 0..p {
@@ -419,8 +475,37 @@ where
     });
     results
         .into_iter()
+        // pallas-lint: allow(no-panic) — a rank thread that panicked has
+        // already torn the scope down; re-raising here is the only option.
         .map(|m| m.into_inner().unwrap().expect("rank thread panicked before producing output"))
         .collect()
+}
+
+/// Run `p` ranks as scoped threads; each gets the world communicator. The
+/// closure's return values are collected in rank order.
+pub fn run_world<T, F>(p: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Comm) -> T + Send + Sync,
+{
+    assert!(p >= 1, "world needs at least one rank");
+    run_world_on(WorldShared::new(p), f)
+}
+
+/// [`run_world`] on a schedule-perturbed world: mailbox delivery order and
+/// fused-exchange wait order are scrambled deterministically from `seed`
+/// (see the `comm::mailbox` module docs). Any correct SPMD program must
+/// return bit-identical results under every seed — `tests/comm_schedules.rs`
+/// pins that for the exchange engine and a full SCF iteration. A zero-dep
+/// "loom-lite": it explores delivery interleavings TSan would need a lucky
+/// schedule to hit, though (unlike loom) not exhaustively.
+pub fn run_world_perturbed<T, F>(p: usize, seed: u64, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Comm) -> T + Send + Sync,
+{
+    assert!(p >= 1, "world needs at least one rank");
+    run_world_on(WorldShared::with_perturbation(p, Some(seed)), f)
 }
 
 /// Like [`run_world`] but also returns the world traffic stats.
@@ -432,22 +517,7 @@ where
     assert!(p >= 1);
     let shared = WorldShared::new(p);
     let stats = Arc::clone(&shared.stats);
-    let results: Vec<Mutex<Option<T>>> = (0..p).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for r in 0..p {
-            let comm = Comm::world(Arc::clone(&shared), r);
-            let f = &f;
-            let slot = &results[r];
-            scope.spawn(move || {
-                let out = f(comm);
-                *slot.lock().unwrap() = Some(out);
-            });
-        }
-    });
-    let outs = results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("rank thread panicked"))
-        .collect();
+    let outs = run_world_on(shared, f);
     (outs, stats.snapshot())
 }
 

@@ -12,11 +12,25 @@
 //! would put on a real wire. Payloads are [`WireBuf`]s checked out of the
 //! world's shared [`BufferArena`](super::arena::BufferArena), so the
 //! modeled NIC buffers are recycled instead of reallocated per message.
+//!
+//! ## Schedule perturbation
+//!
+//! With a delivery policy armed ([`Mailbox::set_policy`], normally via
+//! `run_world_perturbed`), posted messages may be parked in a staging
+//! buffer and released later in a seeded pseudo-random order — the
+//! in-process analogue of network jitter. Two MPI guarantees survive
+//! perturbation by construction: messages of the *same* channel are always
+//! released in posting order (non-overtaking), and a blocked receiver
+//! drains the staging buffer before sleeping, so every posted message
+//! remains receivable (liveness). Everything else — cross-channel arrival
+//! order, probe timing — is deliberately scrambled, which is exactly what
+//! `tests/comm_schedules.rs` exercises.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::arena::WireBuf;
+use crate::util::prng::Prng;
 
 /// Message routing key: (source rank in world, context id, user tag).
 pub type Key = (usize, u64, u64);
@@ -24,6 +38,37 @@ pub type Key = (usize, u64, u64);
 #[derive(Default)]
 struct Inner {
     queues: HashMap<Key, VecDeque<WireBuf>>,
+    /// Posted-but-undelivered messages, in posting order (perturbation
+    /// mode only; always empty without a policy).
+    staged: Vec<(Key, WireBuf)>,
+    /// `Some` arms delivery perturbation; the PRNG lives under the same
+    /// mutex as the queues so every delivery decision is serialized.
+    policy: Option<Prng>,
+}
+
+impl Inner {
+    /// Move one staged message into its delivery queue: pick one of the
+    /// *distinct channel heads* (the oldest staged message of each key),
+    /// keeping per-channel FIFO order intact.
+    fn release_one(&mut self) {
+        let mut heads: Vec<usize> = Vec::new();
+        let mut seen: Vec<Key> = Vec::new();
+        for (i, (k, _)) in self.staged.iter().enumerate() {
+            if !seen.contains(k) {
+                seen.push(*k);
+                heads.push(i);
+            }
+        }
+        if heads.is_empty() {
+            return;
+        }
+        let pick = match &mut self.policy {
+            Some(prng) => prng.next_below(heads.len()),
+            None => 0,
+        };
+        let (key, payload) = self.staged.remove(heads[pick]);
+        self.queues.entry(key).or_default().push_back(payload);
+    }
 }
 
 /// One rank's receive endpoint.
@@ -39,10 +84,40 @@ impl Mailbox {
         Arc::new(Mailbox::default())
     }
 
+    /// Arm the seeded delivery-perturbation policy (see the module docs).
+    /// Test-only in spirit: production worlds never call this.
+    pub fn set_policy(&self, seed: u64) {
+        self.inner.lock().unwrap().policy = Some(Prng::new(seed));
+    }
+
     /// Deposit a message (called by the *sender* thread).
     pub fn post(&self, key: Key, payload: WireBuf) {
         let mut inner = self.inner.lock().unwrap();
-        inner.queues.entry(key).or_default().push_back(payload);
+        if inner.policy.is_some() {
+            // Non-overtaking: once any message of this channel is staged,
+            // later ones must stage behind it.
+            let must_stage = inner.staged.iter().any(|(k, _)| *k == key);
+            let coin = match &mut inner.policy {
+                Some(prng) => prng.next_u64() & 1 == 0,
+                None => false,
+            };
+            if must_stage || coin {
+                inner.staged.push((key, payload));
+            } else {
+                inner.queues.entry(key).or_default().push_back(payload);
+            }
+            // Let 0..=2 staged messages (any channel) through, scrambling
+            // cross-channel arrival order.
+            let releases = match &mut inner.policy {
+                Some(prng) => prng.next_below(3),
+                None => 0,
+            };
+            for _ in 0..releases {
+                inner.release_one();
+            }
+        } else {
+            inner.queues.entry(key).or_default().push_back(payload);
+        }
         self.signal.notify_all();
     }
 
@@ -55,20 +130,30 @@ impl Mailbox {
                     return msg;
                 }
             }
-            inner = self.signal.wait(inner).unwrap();
+            if inner.staged.is_empty() {
+                inner = self.signal.wait(inner).unwrap();
+            } else {
+                // Liveness under perturbation: drain staged deliveries
+                // (one random channel head at a time) instead of sleeping
+                // on messages that were posted but not yet delivered.
+                inner.release_one();
+            }
         }
     }
 
-    /// Non-blocking probe: is a message matching `key` available?
+    /// Non-blocking probe: is a message matching `key` available? Staged
+    /// (undelivered) messages are invisible here — under perturbation a
+    /// probe can say "no" for a message that was already posted, exactly
+    /// like an in-flight packet on a real network.
     pub fn probe(&self, key: Key) -> bool {
         let inner = self.inner.lock().unwrap();
         inner.queues.get(&key).map(|q| !q.is_empty()).unwrap_or(false)
     }
 
-    /// Total queued messages (diagnostics).
+    /// Total queued messages, staged deliveries included (diagnostics).
     pub fn pending(&self) -> usize {
         let inner = self.inner.lock().unwrap();
-        inner.queues.values().map(|q| q.len()).sum()
+        inner.queues.values().map(|q| q.len()).sum::<usize>() + inner.staged.len()
     }
 }
 
@@ -137,5 +222,95 @@ mod tests {
         let (minted, reused) = arena.stats();
         assert_eq!(minted, 1, "wire buffers must be recycled across messages");
         assert_eq!(reused, 4);
+    }
+
+    #[test]
+    fn tags_match_under_out_of_order_posting() {
+        // Messages posted on three interleaved tag channels must come back
+        // matched by tag, not by arrival order.
+        let arena = BufferArena::new();
+        let mb = Mailbox::new();
+        for (tag, val) in [(7u64, 70u8), (5, 50), (9, 90), (5, 51), (7, 71)] {
+            mb.post((2, 0, tag), arena.adopt(vec![val]));
+        }
+        assert_eq!(mb.take((2, 0, 9)).into_vec(), vec![90]);
+        assert_eq!(mb.take((2, 0, 7)).into_vec(), vec![70]);
+        assert_eq!(mb.take((2, 0, 5)).into_vec(), vec![50]);
+        assert_eq!(mb.take((2, 0, 5)).into_vec(), vec![51]);
+        assert_eq!(mb.take((2, 0, 7)).into_vec(), vec![71]);
+    }
+
+    #[test]
+    fn perturbed_delivery_preserves_per_channel_fifo() {
+        for seed in 0..32u64 {
+            let arena = BufferArena::new();
+            let mb = Mailbox::new();
+            mb.set_policy(seed);
+            for i in 0..10u8 {
+                mb.post((0, 0, 1), arena.adopt(vec![i]));
+                mb.post((0, 0, 2), arena.adopt(vec![100 + i]));
+            }
+            for i in 0..10u8 {
+                assert_eq!(mb.take((0, 0, 1)).into_vec(), vec![i], "seed {seed}");
+            }
+            for i in 0..10u8 {
+                assert_eq!(mb.take((0, 0, 2)).into_vec(), vec![100 + i], "seed {seed}");
+            }
+            assert_eq!(mb.pending(), 0, "seed {seed}: no message may be lost");
+        }
+    }
+
+    #[test]
+    fn perturbed_blocking_take_stays_live() {
+        // A receiver blocked on one channel must not deadlock on messages
+        // parked in the staging buffer.
+        for seed in [3u64, 17, 40_404] {
+            let arena = BufferArena::new();
+            let mb = Mailbox::new();
+            mb.set_policy(seed);
+            let mb2 = Arc::clone(&mb);
+            let h = thread::spawn(move || mb2.take((1, 0, 8)).into_vec());
+            thread::sleep(std::time::Duration::from_millis(10));
+            mb.post((1, 0, 3), arena.adopt(vec![1]));
+            mb.post((1, 0, 8), arena.adopt(vec![2]));
+            assert_eq!(h.join().unwrap(), vec![2]);
+            assert_eq!(mb.take((1, 0, 3)).into_vec(), vec![1]);
+        }
+    }
+
+    #[test]
+    fn concurrent_checkout_recycle_minted_plateaus() {
+        // Hammer one shared arena from four threads; after warm-up, the
+        // `minted` counter must plateau — steady-state traffic reuses
+        // buffers instead of allocating.
+        let arena = BufferArena::new();
+        let mb = Mailbox::new();
+        let threads: usize = 4;
+        let rounds: usize = 200;
+        // Deterministic warm-up: mint exactly one buffer per thread (held
+        // simultaneously, then returned), so the free list can absorb the
+        // peak concurrent demand of the stress phase.
+        let warm: Vec<_> = (0..threads).map(|_| arena.checkout(256)).collect();
+        drop(warm);
+        let (minted_warm, _) = arena.stats();
+        assert_eq!(minted_warm, threads as u64);
+        thread::scope(|s| {
+            for t in 0..threads {
+                let arena = &arena;
+                let mb = &mb;
+                s.spawn(move || {
+                    for i in 0..rounds {
+                        let mut b = arena.checkout(256);
+                        b.extend_from_slice(&[t as u8; 256]);
+                        mb.post((t, 0, i as u64), b);
+                        let got = mb.take((t, 0, i as u64));
+                        assert_eq!(got.len(), 256);
+                    }
+                });
+            }
+        });
+        let (minted_steady, reused) = arena.stats();
+        assert_eq!(minted_steady, minted_warm, "steady-state traffic must not mint");
+        assert!(reused >= (threads * rounds) as u64, "every stress checkout must reuse");
     }
 }

@@ -38,5 +38,6 @@ pub use collectives::{
     gatherv,
 };
 pub use communicator::{
-    run_world, run_world_with_stats, waitall, Comm, CommStats, Request, WorldShared,
+    run_world, run_world_perturbed, run_world_with_stats, waitall, Comm, CommStats, Request,
+    WorldShared,
 };

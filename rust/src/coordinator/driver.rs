@@ -212,6 +212,9 @@ impl BatchingDriver {
             return 0;
         }
         let nb = self.take_buf.len();
+        // pallas-lint: allow(no-panic) — `enqueue` validated every job's
+        // shape against the driver's grid, so planning the same shape at a
+        // new batch width cannot fail here.
         let (plan, cache_hit) = self.plan_for(nb).expect("driver shape/grid mismatch");
         // Batched local lengths are nb x the single-band ones, so the
         // per-band job length comes straight off the batched plan.

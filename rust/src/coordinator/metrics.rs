@@ -1,5 +1,11 @@
 //! Metrics collection: aggregate [`ExecTrace`]s into table rows / CSV /
 //! JSON for the benches and EXPERIMENTS.md.
+//!
+//! Atomics audit: this sink is deliberately single-threaded — traces are
+//! merged across ranks *before* they arrive here (see
+//! [`ExecTrace::critical_path`]), so it holds plain fields and no atomics.
+//! The crate-wide atomic-ordering conventions live in
+//! [`lint`](crate::lint) and `docs/ARCHITECTURE.md`.
 
 use std::time::Duration;
 

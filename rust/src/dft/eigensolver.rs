@@ -80,6 +80,9 @@ pub fn rotate_bands(psi: &mut [Complex], nb: usize, u: &CMat) {
 /// `psi <- psi (L^H)^{-1}`.
 pub fn orthonormalize(comm: &Comm, psi: &mut [Complex], nb: usize) {
     let s = subspace_matrix(comm, psi, psi, nb);
+    // pallas-lint: allow(no-panic) — a Gram matrix of linearly independent
+    // bands is positive definite by construction; failure means the caller
+    // fed degenerate bands, a programming error worth an immediate abort.
     let l = cholesky(&s).expect("Gram matrix must be positive definite");
     // psi_j <- (psi_j - sum_{k<j} psi_k L^H[k,j]) / L[j,j], elementwise over
     // the batch-fastest chunks.

@@ -92,6 +92,9 @@ impl Hamiltonian {
     ) -> Self {
         let n = lattice.n;
         let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, Arc::clone(&grid))
+            // pallas-lint: allow(no-panic) — `Lattice` always builds a full
+            // cubic grid with a centered sphere, which satisfies every
+            // `PlaneWavePlan` constraint; failure is a construction bug.
             .expect("lattice grid must satisfy the plane-wave plan constraints");
         let plan = Arc::new(Fftb { kind: PlanKind::PlaneWave(plan), sizes: [n, n, n], nb });
         Self::with_plan(lattice, nb, potential, grid, plan)

@@ -90,7 +90,7 @@ impl Lattice {
                 }
             }
         }
-        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.sort_by(f64::total_cmp);
         out
     }
 }

@@ -217,7 +217,7 @@ pub fn eigh_jacobi(a: &CMat, sweeps: usize) -> (Vec<f64>, CMat) {
     }
     // Extract and sort.
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)].re, i)).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
     let w: Vec<f64> = pairs.iter().map(|&(x, _)| x).collect();
     let mut vs = CMat::zeros(n, n);
     for (new_j, &(_, old_j)) in pairs.iter().enumerate() {

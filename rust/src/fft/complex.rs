@@ -212,6 +212,15 @@ pub fn as_bytes_mut(a: &mut [Complex]) -> &mut [u8] {
     }
 }
 
+/// Reinterpret an `f64` slice as raw bytes (the wire view the reduction
+/// collectives send). Centralized here so the comm layer holds no unsafe
+/// byte casts of its own.
+pub fn f64_as_bytes(a: &[f64]) -> &[u8] {
+    // SAFETY: f64 is POD with no padding; the view borrows `a`, so the
+    // bytes cannot outlive or alias a mutation of the source slice.
+    unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, std::mem::size_of_val(a)) }
+}
+
 /// Copy raw bytes into an existing complex slice (the allocation-free
 /// receive path of the flat alltoall). Byte length must equal the slice's
 /// storage size.

@@ -117,6 +117,9 @@ impl NonBatchedLoop {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
+        // steady-state: non-batched band loop
+        // Band staging buffers circulate through the loop workspace; the
+        // inner single-band plan audits its own region.
         let mut out = ws.slots.take(self.nb * out_band, &ws.alloc);
         let mut band = std::mem::take(&mut ws.work);
         let mut trace = ExecTrace::default();
@@ -134,6 +137,7 @@ impl NonBatchedLoop {
         }
         ws.work = band;
         ws.slots.recycle(input); // the consumed input's storage joins the pool
+        // steady-state: end
         trace.alloc_bytes += ws.allocated();
         (out, trace)
     }
@@ -226,6 +230,9 @@ impl PlaneWaveLoop {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
+        // steady-state: non-batched band loop
+        // Band staging buffers circulate through the loop workspace; the
+        // inner single-band plan audits its own region.
         let mut out = ws.slots.take(self.nb * out_band, &ws.alloc);
         let mut band = std::mem::take(&mut ws.work);
         let mut trace = ExecTrace::default();
@@ -243,6 +250,7 @@ impl PlaneWaveLoop {
         }
         ws.work = band;
         ws.slots.recycle(input); // the consumed input's storage joins the pool
+        // steady-state: end
         trace.alloc_bytes += ws.allocated();
         (out, trace)
     }

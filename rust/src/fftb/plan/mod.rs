@@ -231,7 +231,12 @@ impl Fftb {
         let in_ext = input.global_extents();
         for (i, d) in input.layout.dims.iter().enumerate() {
             if !in_names.contains(&d.name.as_str()) {
-                batch_ext = batch_ext.checked_mul(in_ext[i]).unwrap();
+                batch_ext = batch_ext.checked_mul(in_ext[i]).ok_or_else(|| {
+                    FftbError::Shape(format!(
+                        "batch extent overflows usize at dimension `{}`",
+                        d.name
+                    ))
+                })?;
             }
         }
         for name in &in_names {
@@ -255,6 +260,9 @@ impl Fftb {
         let sig = |t: &DistTensor, names: &[&str]| -> Vec<Option<usize>> {
             names
                 .iter()
+                // pallas-lint: allow(no-panic) — both loops above returned
+                // `Unsupported` for any name missing from either layout,
+                // so `find` succeeds for every name reaching this closure.
                 .map(|n| t.layout.dims[t.layout.find(n).unwrap()].grid_axis)
                 .collect()
         };
@@ -274,6 +282,8 @@ impl Fftb {
                      (got in={in_sig:?}, out={out_sig:?})"
                 )));
             }
+            // pallas-lint: allow(no-panic) — `is_sphere()` just confirmed
+            // the input carries sphere domains, so `offsets()` is `Some`.
             let off = Arc::clone(input.domains.offsets().unwrap());
             let kind = if opts.pad_sphere_to_cube {
                 PlanKind::PaddedSphere(PaddedSpherePlan::new(off, nb, grid)?)

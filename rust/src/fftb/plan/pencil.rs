@@ -218,6 +218,10 @@ impl PencilPlan {
         let mut t = StageTimer::new(&mut trace);
         let lines = |total: usize, n: usize| backend.flops(total, n);
 
+        // steady-state: pencil execute
+        // Buffers come from the workspace slot pool / wire arena only;
+        // pallas-lint rejects allocating calls here and `trace.alloc_bytes`
+        // audits the contract at run time.
         match dir {
             Direction::Forward => {
                 assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
@@ -263,6 +267,7 @@ impl PencilPlan {
                 });
             }
         }
+        // steady-state: end
         trace.alloc_bytes = alloc.get();
         (data, trace)
     }

@@ -357,6 +357,10 @@ impl PlaneWavePlan {
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
+        // steady-state: plane-wave forward
+        // All storage below is workspace-pooled or arena-backed;
+        // pallas-lint rejects allocating calls in this region and
+        // `trace.alloc_bytes` audits it at run time.
         // 1. Scatter z-runs to dense columns + FFT z.
         //    Dense layout: [nb, nz, C_loc], one zero-padded line per disc col.
         t.reshape("scatter_z", || {
@@ -415,6 +419,7 @@ impl PlaneWavePlan {
         });
         // The consumed input's storage joins the pool for later calls.
         slots.recycle(input);
+        // steady-state: end
         trace.alloc_bytes = alloc.get();
         (cube, trace)
     }
@@ -440,6 +445,7 @@ impl PlaneWavePlan {
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
+        // steady-state: plane-wave inverse
         // 1. Dense inverse FFT along x.
         t.compute("ifft_x", backend.flops(cube.len(), nx), || {
             backend_fft_dim_ws(
@@ -495,6 +501,7 @@ impl PlaneWavePlan {
             self.local_off.gather_z_into(&*work, nb, &mut packed);
         });
         slots.recycle(cube);
+        // steady-state: end
         trace.alloc_bytes = alloc.get();
         (packed, trace)
     }
@@ -577,6 +584,7 @@ impl PaddedSpherePlan {
             ws.begin();
             let mut cube = Vec::new();
             let mut t = StageTimer::new(&mut trace);
+            // steady-state: padded-sphere forward (pad stage)
             // Pad up front: local dense [nb, lxc, ny, nz]. The cube comes
             // from the *inner slab plan's* pool — that is where the
             // consumed cube and caller-recycled outputs land, so
@@ -611,6 +619,7 @@ impl PaddedSpherePlan {
             } else {
                 ws.slots.recycle(input);
             }
+            // steady-state: end
             trace.alloc_bytes = ws.allocated();
             cube
         };
@@ -638,6 +647,7 @@ impl PaddedSpherePlan {
         ws.begin();
         let mut packed = Vec::new();
         let mut t = StageTimer::new(&mut trace);
+        // steady-state: padded-sphere inverse (truncate stage)
         t.reshape("trunc_full", || {
             let packed_len = nb * self.local_off.total();
             // Degenerate full-cube spheres: packed buffers are cube-length
@@ -666,6 +676,7 @@ impl PaddedSpherePlan {
         });
         // Cube-sized storage belongs to the inner slab plan's pool.
         self.slab.recycle(back);
+        // steady-state: end
         trace.alloc_bytes += ws.allocated();
         (packed, trace)
     }

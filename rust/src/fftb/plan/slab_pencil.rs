@@ -175,6 +175,11 @@ impl SlabPencilPlan {
         let mut t = StageTimer::new(&mut trace);
         let lines = |total: usize, n: usize| backend.flops(total, n);
 
+        // steady-state: slab-pencil execute
+        // Every buffer below comes from the plan workspace or the wire
+        // arena; pallas-lint rejects allocating calls in this region and
+        // the `alloc` counter audits anything that slips through at run
+        // time (`trace.alloc_bytes` must stay 0 after warm-up).
         match dir {
             Direction::Forward => {
                 assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
@@ -235,6 +240,7 @@ impl SlabPencilPlan {
                 );
             }
         }
+        // steady-state: end
         trace.alloc_bytes = alloc.get();
         (data, trace)
     }

@@ -204,20 +204,25 @@ impl ExecTrace {
         let mut out = ExecTrace::default();
         for i in 0..nstages {
             let s0 = &traces[0].stages[i];
+            // `max()` is `None` only on an empty iterator, and `traces`
+            // was asserted non-empty; fold to the zero default instead of
+            // unwrapping so the closed-world claim is structural.
             out.push(
                 s0.name,
                 s0.kind,
-                traces.iter().map(|t| t.stages[i].elapsed).max().unwrap(),
-                traces.iter().map(|t| t.stages[i].bytes_sent).max().unwrap(),
-                traces.iter().map(|t| t.stages[i].messages).max().unwrap(),
+                traces.iter().map(|t| t.stages[i].elapsed).max().unwrap_or_default(),
+                traces.iter().map(|t| t.stages[i].bytes_sent).max().unwrap_or_default(),
+                traces.iter().map(|t| t.stages[i].messages).max().unwrap_or_default(),
                 traces.iter().map(|t| t.stages[i].flops).fold(0.0, f64::max),
             );
         }
-        out.alloc_bytes = traces.iter().map(|t| t.alloc_bytes).max().unwrap();
-        out.wait_ns = traces.iter().map(|t| t.wait_ns).max().unwrap();
-        out.overlap_rounds = traces.iter().map(|t| t.overlap_rounds).max().unwrap();
-        out.pack_overlap_ns = traces.iter().map(|t| t.pack_overlap_ns).max().unwrap();
-        out.unpack_overlap_ns = traces.iter().map(|t| t.unpack_overlap_ns).max().unwrap();
+        out.alloc_bytes = traces.iter().map(|t| t.alloc_bytes).max().unwrap_or_default();
+        out.wait_ns = traces.iter().map(|t| t.wait_ns).max().unwrap_or_default();
+        out.overlap_rounds = traces.iter().map(|t| t.overlap_rounds).max().unwrap_or_default();
+        out.pack_overlap_ns =
+            traces.iter().map(|t| t.pack_overlap_ns).max().unwrap_or_default();
+        out.unpack_overlap_ns =
+            traces.iter().map(|t| t.unpack_overlap_ns).max().unwrap_or_default();
         // A cache hit only counts if *every* rank was served from cache.
         out.plan_cache_hit = traces.iter().all(|t| t.plan_cache_hit);
         out

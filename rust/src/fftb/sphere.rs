@@ -82,7 +82,7 @@ impl OffsetArray {
 
     /// Total number of retained points.
     pub fn total(&self) -> usize {
-        *self.col_elem.last().unwrap() as usize
+        self.col_elem.last().copied().unwrap_or(0) as usize
     }
 
     /// Order-sensitive FNV-1a fingerprint of the full run structure (grid

@@ -16,6 +16,7 @@ pub mod coordinator;
 pub mod dft;
 pub mod fft;
 pub mod fftb;
+pub mod lint;
 pub mod model;
 pub mod runtime;
 pub mod tuner;

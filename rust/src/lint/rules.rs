@@ -1,0 +1,497 @@
+//! The four `pallas-lint` rules.
+//!
+//! Each rule walks the scanned lines of one file (see
+//! [`crate::lint::scanner`]) and reports [`Diagnostic`]s. `#[cfg(test)]`
+//! regions are exempt from every rule, and any finding can be silenced by
+//! an explicit allow comment — on the offending line or in the comment
+//! block directly above it — so exceptions stay visible in diffs:
+//!
+//! ```text
+//! // pallas-lint: allow(no-panic) — reason the invariant holds
+//! ```
+//!
+//! The rules:
+//!
+//! * `safety-comment` — every line whose code mentions `unsafe` must carry
+//!   a `SAFETY:` comment on the line or in the comment block directly
+//!   above it.
+//! * `atomic-ordering` — `Ordering::Relaxed` may only touch statistics
+//!   counters named in [`RELAXED_COUNTERS`]; synchronizing orderings
+//!   (`Acquire`/`Release`/`AcqRel`/`SeqCst`) must carry a rationale
+//!   comment.
+//! * `steady-state-alloc` — no allocating calls inside a region opened by
+//!   a comment beginning `steady-state:` and closed by one reading
+//!   `steady-state: end` — the static complement of the dynamic
+//!   `ExecTrace::alloc_bytes == 0` pin on the plan execute paths.
+//! * `no-panic` — no `unwrap()` / `expect("..")` / `panic!`-family macros
+//!   in library code (binaries and test utilities are exempt, as are the
+//!   mutex-poisoning and infallible `try_into` idioms — see
+//!   [`check_source`]).
+
+use std::fmt;
+
+use super::scanner::{scan, Line};
+
+/// Rule id: `unsafe` requires an adjacent `SAFETY:` comment.
+pub const RULE_SAFETY: &str = "safety-comment";
+/// Rule id: atomic-ordering discipline (allowlisted `Relaxed` counters,
+/// rationale comments on synchronizing orderings).
+pub const RULE_ATOMIC: &str = "atomic-ordering";
+/// Rule id: no allocating calls inside steady-state regions.
+pub const RULE_STEADY: &str = "steady-state-alloc";
+/// Rule id: no panicking calls in library code.
+pub const RULE_NO_PANIC: &str = "no-panic";
+
+/// Statistics counters that may legitimately use `Ordering::Relaxed`: each
+/// is a monotone tally read only for reporting, never to synchronize state
+/// (no other memory access is ordered against it). Everything else must
+/// use a synchronizing ordering and say why.
+pub const RELAXED_COUNTERS: &[&str] = &[
+    // comm::CommStats traffic tallies.
+    "messages",
+    "bytes",
+    // comm::BufferArena reuse tallies.
+    "minted",
+    "reused",
+    // runtime::backend dispatch tallies.
+    "pjrt_lines",
+    "fallback_lines",
+    // comm schedule-perturbation ticket: fetch_add atomicity alone
+    // guarantees distinct tickets; nothing is published through it.
+    "perturb_ticket",
+];
+
+/// One lint finding, formatted `file:line: [rule] message`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Path of the offending file, as given to [`check_source`].
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (one of the `RULE_*` constants).
+    pub rule: &'static str,
+    /// Human-readable description of the finding.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// How a file is linted: `Binary` (bin targets, test utilities) skips the
+/// `no-panic` rule — a CLI aborting on bad input is fine; library code
+/// must surface `FftbError` instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileKind {
+    /// Library code: all four rules apply.
+    Library,
+    /// Binary / test-utility code: `no-panic` is skipped.
+    Binary,
+}
+
+/// Run every rule over one file's source. `file` is only used to label
+/// diagnostics.
+pub fn check_source(file: &str, source: &str, kind: FileKind) -> Vec<Diagnostic> {
+    let lines = scan(source);
+    let in_test = test_mask(&lines);
+    let mut out = Vec::new();
+    check_safety(file, &lines, &in_test, &mut out);
+    check_atomics(file, &lines, &in_test, &mut out);
+    check_steady_state(file, &lines, &in_test, &mut out);
+    if kind == FileKind::Library {
+        check_no_panic(file, &lines, &in_test, &mut out);
+    }
+    out.sort_by_key(|d| d.line);
+    out
+}
+
+/// Mark the lines inside `#[cfg(test)]`-gated item bodies. The attribute
+/// arms the tracker; the next `{` opens the exempt region, the matching
+/// `}` closes it. Test modules in this tree are always brace-delimited.
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut test_exit: Option<i64> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        if test_exit.is_some() {
+            mask[idx] = true;
+        }
+        if line.code.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if armed {
+                        test_exit = Some(depth);
+                        armed = false;
+                        mask[idx] = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_exit == Some(depth) {
+                        test_exit = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    mask
+}
+
+fn allowed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    let token = format!("pallas-lint: allow({rule})");
+    if lines[idx].comment.contains(&token) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && lines[j - 1].is_comment_only() {
+        j -= 1;
+        if lines[j].comment.contains(&token) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Concatenated text of the contiguous comment-only lines directly above
+/// line `idx` (empty when the preceding line holds code or is blank).
+fn comment_block_above(lines: &[Line], idx: usize) -> String {
+    let mut j = idx;
+    while j > 0 && lines[j - 1].is_comment_only() {
+        j -= 1;
+    }
+    lines[j..idx].iter().map(|l| l.comment.as_str()).collect::<Vec<_>>().join("\n")
+}
+
+/// Substring match of an ASCII `word` with identifier boundaries on both
+/// sides.
+fn contains_word(text: &str, word: &str) -> bool {
+    let bytes = text.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = text[start..].find(word) {
+        let begin = start + pos;
+        let end = begin + word.len();
+        let left_ok = begin == 0 || !is_ident(bytes[begin - 1]);
+        let right_ok = end == bytes.len() || !is_ident(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn check_safety(file: &str, lines: &[Line], in_test: &[bool], out: &mut Vec<Diagnostic>) {
+    for (idx, line) in lines.iter().enumerate() {
+        if in_test[idx] || !contains_word(&line.code, "unsafe") {
+            continue;
+        }
+        if allowed(lines, idx, RULE_SAFETY) {
+            continue;
+        }
+        let covered = line.comment.contains("SAFETY:")
+            || comment_block_above(lines, idx).contains("SAFETY:");
+        if !covered {
+            out.push(Diagnostic {
+                file: file.into(),
+                line: line.number,
+                rule: RULE_SAFETY,
+                message: "`unsafe` without an immediately preceding `SAFETY:` comment".into(),
+            });
+        }
+    }
+}
+
+fn check_atomics(file: &str, lines: &[Line], in_test: &[bool], out: &mut Vec<Diagnostic>) {
+    const SYNC: [&str; 4] =
+        ["Ordering::SeqCst", "Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel"];
+    for (idx, line) in lines.iter().enumerate() {
+        if in_test[idx] {
+            continue;
+        }
+        if line.code.contains("Ordering::Relaxed") && !allowed(lines, idx, RULE_ATOMIC) {
+            // The counter name usually sits on the same line
+            // (`self.minted.fetch_add(..)`), but rustfmt may break the
+            // chain — accept it up to two lines above.
+            let lo = idx.saturating_sub(2);
+            let ctx =
+                lines[lo..=idx].iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+            if !RELAXED_COUNTERS.iter().any(|name| contains_word(&ctx, name)) {
+                out.push(Diagnostic {
+                    file: file.into(),
+                    line: line.number,
+                    rule: RULE_ATOMIC,
+                    message: "`Ordering::Relaxed` outside the statistics-counter allowlist"
+                        .into(),
+                });
+            }
+        }
+        if SYNC.iter().any(|s| line.code.contains(s)) && !allowed(lines, idx, RULE_ATOMIC) {
+            let has_rationale = !line.comment.trim().is_empty()
+                || !comment_block_above(lines, idx).trim().is_empty();
+            if !has_rationale {
+                out.push(Diagnostic {
+                    file: file.into(),
+                    line: line.number,
+                    rule: RULE_ATOMIC,
+                    message: "synchronizing atomic ordering without a rationale comment".into(),
+                });
+            }
+        }
+    }
+}
+
+fn check_steady_state(file: &str, lines: &[Line], in_test: &[bool], out: &mut Vec<Diagnostic>) {
+    const BANNED: &[&str] = &[
+        "Vec::new",
+        "vec!",
+        ".to_vec",
+        ".clone()",
+        "Box::new",
+        "with_capacity",
+        "String::new",
+        ".to_string",
+        "format!",
+        ".collect",
+        ".reserve",
+    ];
+    let mut open: Option<usize> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let marker = line.comment.trim();
+        if let Some(rest) = marker.strip_prefix("steady-state:") {
+            if rest.trim() == "end" {
+                if open.take().is_none() {
+                    out.push(Diagnostic {
+                        file: file.into(),
+                        line: line.number,
+                        rule: RULE_STEADY,
+                        message: "region end marker without an open steady-state region".into(),
+                    });
+                }
+            } else if open.is_some() {
+                out.push(Diagnostic {
+                    file: file.into(),
+                    line: line.number,
+                    rule: RULE_STEADY,
+                    message: "nested steady-state region".into(),
+                });
+            } else {
+                open = Some(line.number);
+            }
+            continue;
+        }
+        if open.is_none() || in_test[idx] || allowed(lines, idx, RULE_STEADY) {
+            continue;
+        }
+        if let Some(tok) = BANNED.iter().find(|t| line.code.contains(**t)) {
+            out.push(Diagnostic {
+                file: file.into(),
+                line: line.number,
+                rule: RULE_STEADY,
+                message: format!("allocating call `{tok}` inside a steady-state region"),
+            });
+        }
+    }
+    if let Some(n) = open {
+        out.push(Diagnostic {
+            file: file.into(),
+            line: n,
+            rule: RULE_STEADY,
+            message: "steady-state region never closed".into(),
+        });
+    }
+}
+
+fn check_no_panic(file: &str, lines: &[Line], in_test: &[bool], out: &mut Vec<Diagnostic>) {
+    const MACROS: [&str; 4] = ["panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    for (idx, line) in lines.iter().enumerate() {
+        if in_test[idx] || allowed(lines, idx, RULE_NO_PANIC) {
+            continue;
+        }
+        let code = line.code.as_str();
+        let mut finding: Option<&str> = MACROS.iter().find(|m| code.contains(**m)).copied();
+        if finding.is_none() && code.contains(".expect(\"") {
+            finding = Some(".expect(..)");
+        }
+        if finding.is_none() && has_bare_unwrap(code) {
+            finding = Some(".unwrap()");
+        }
+        if let Some(tok) = finding {
+            out.push(Diagnostic {
+                file: file.into(),
+                line: line.number,
+                rule: RULE_NO_PANIC,
+                message: format!(
+                    "`{tok}` in library code — return `FftbError`, or add an allow \
+                     comment stating the invariant"
+                ),
+            });
+        }
+    }
+}
+
+/// `.unwrap()` occurrences that are neither the mutex-poisoning idiom
+/// (`.lock()`, Condvar `.wait(..)`, `.into_inner()` — propagating a
+/// poisoned lock is the only sane response) nor the infallible
+/// `from_le_bytes(buf.try_into().unwrap())` fixed-width conversion.
+fn has_bare_unwrap(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(".unwrap()") {
+        let at = start + pos;
+        let before = &code[..at];
+        let poisoning = before.ends_with(".lock()")
+            || before.ends_with(".into_inner()")
+            || (before.ends_with(')') && before.contains(".wait("));
+        let infallible = code.contains("from_le_bytes") && before.ends_with(".try_into()");
+        if !poisoning && !infallible {
+            return true;
+        }
+        start = at + ".unwrap()".len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Diagnostic> {
+        check_source("fixture.rs", src, FileKind::Library)
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let d = lint(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_SAFETY);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_clears_the_unsafe_rule() {
+        let src =
+            "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller upholds validity.\n    unsafe { *p }\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "// unsafe is discussed here, not used\nfn f() -> &'static str {\n    \"unsafe\"\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_outside_the_allowlist_is_flagged() {
+        let src = "fn f(flag: &AtomicU64) -> u64 {\n    flag.load(Ordering::Relaxed)\n}\n";
+        let d = lint(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_ATOMIC);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn relaxed_on_an_allowlisted_counter_passes() {
+        let src = "fn f(s: &Stats) {\n    s.minted.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn seqcst_requires_a_rationale_comment() {
+        let bare = "fn f(x: &AtomicU64) -> u64 {\n    x.fetch_add(1, Ordering::SeqCst)\n}\n";
+        let d = lint(bare);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_ATOMIC);
+
+        let justified = "fn f(x: &AtomicU64) -> u64 {\n    // Total order across ranks.\n    x.fetch_add(1, Ordering::SeqCst)\n}\n";
+        assert!(lint(justified).is_empty());
+    }
+
+    #[test]
+    fn steady_state_region_rejects_allocation() {
+        let src = "fn run() {\n    // steady-state: fixture\n    let v: Vec<u8> = Vec::new();\n    // steady-state: end\n}\n";
+        let d = lint(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_STEADY);
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn allocation_outside_a_region_passes() {
+        let src = "fn setup() {\n    let v: Vec<u8> = Vec::new();\n    drop(v);\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn unclosed_steady_state_region_is_flagged() {
+        let src = "fn run() {\n    // steady-state: fixture\n    step();\n}\n";
+        let d = lint(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_STEADY);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn unwrap_in_library_code_is_flagged() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        let d = lint(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_NO_PANIC);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn expect_and_panic_macros_are_flagged() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.expect(\"present\")\n}\n";
+        assert_eq!(lint(src).len(), 1);
+        let src = "fn g() {\n    panic!(\"boom\");\n}\n";
+        assert_eq!(lint(src).len(), 1);
+    }
+
+    #[test]
+    fn poisoning_and_le_bytes_idioms_are_exempt() {
+        let src = "fn f(m: &Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n";
+        assert!(lint(src).is_empty());
+        let src = "fn g(b: &[u8]) -> u64 {\n    u64::from_le_bytes(b[0..8].try_into().unwrap())\n}\n";
+        assert!(lint(src).is_empty());
+        let src = "fn h(m: Mutex<u8>) -> u8 {\n    m.into_inner().unwrap()\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_suppresses_a_rule() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    // pallas-lint: allow(no-panic) — fixture invariant\n    x.unwrap()\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_all_rules() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn code_after_a_test_module_is_linted_again() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\nfn g(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        let d = lint(src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 6);
+    }
+
+    #[test]
+    fn binary_files_may_panic() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        assert!(check_source("fixture.rs", src, FileKind::Binary).is_empty());
+    }
+}

@@ -1,0 +1,237 @@
+//! A tiny lexical scanner: splits each source line into *code* and
+//! *comment* text, with string and character literal contents blanked.
+//!
+//! The lint rules in [`crate::lint::rules`] are substring matchers; running
+//! them over raw source would trip on tokens inside string literals, doc
+//! comments, or commented-out code. The scanner removes exactly that noise
+//! while keeping line numbers stable: rules see `code` (literal contents
+//! dropped, comments stripped) and `comment` (the text of `//` and
+//! `/* .. */` comments) per line.
+//!
+//! This is deliberately not a Rust parser. It understands just enough of
+//! the lexical grammar — nested block comments, escapes, raw strings,
+//! char literals vs lifetimes — to classify every byte as code, comment,
+//! or literal content.
+
+/// One source line after scanning.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// 1-based line number in the file.
+    pub number: usize,
+    /// Code text: comments removed, string/char literal contents blanked
+    /// (the delimiting quotes are kept).
+    pub code: String,
+    /// Concatenated comment text on this line, without the `//`, `/*`,
+    /// `*/` markers. Empty when the line has no comment.
+    pub comment: String,
+}
+
+impl Line {
+    /// True when the line holds comment text and no code.
+    pub fn is_comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    Str,
+    RawStr(usize),
+    Block(usize),
+}
+
+/// Scan `source` into the per-line code/comment split described on
+/// [`Line`]. Literal contents never reach `code`; comment text never
+/// reaches `code`; code never reaches `comment`.
+pub fn scan(source: &str) -> Vec<Line> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line { number: 1, ..Line::default() };
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            let number = cur.number;
+            lines.push(std::mem::take(&mut cur));
+            cur.number = number + 1;
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    // `//`, `///` and `//!` all count as comment text.
+                    i += 2;
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    state = match raw_hashes(&cur.code) {
+                        Some(h) => State::RawStr(h),
+                        None => State::Str,
+                    };
+                    cur.code.push('"');
+                    i += 1;
+                } else if c == '\'' && is_char_literal(&chars, i) {
+                    cur.code.push('\'');
+                    i += 1;
+                    while i < chars.len() && chars[i] != '\n' {
+                        if chars[i] == '\\' {
+                            i += 2;
+                        } else if chars[i] == '\'' {
+                            cur.code.push('\'');
+                            i += 1;
+                            break;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Keep a trailing `\` + newline (line continuation)
+                    // visible to the newline handler so counts stay right.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else {
+                    if c == '"' {
+                        cur.code.push('"');
+                        state = State::Code;
+                    }
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    cur.code.push('"');
+                    i += 1 + hashes;
+                    state = State::Code;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// `Some(hashes)` when the code scanned so far ends with a raw-string
+/// opener (`r`, `br`, `r#`, `br##`, ...) for the `"` about to be consumed.
+fn raw_hashes(code: &str) -> Option<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut k = chars.len();
+    let mut hashes = 0;
+    while k > 0 && chars[k - 1] == '#' {
+        hashes += 1;
+        k -= 1;
+    }
+    if k == 0 || chars[k - 1] != 'r' {
+        return None;
+    }
+    k -= 1;
+    if k > 0 && chars[k - 1] == 'b' {
+        k -= 1;
+    }
+    // `var"` or `faster"` is not a raw string; a bare `r`/`br` prefix is.
+    let ident_before = k > 0 && (chars[k - 1].is_alphanumeric() || chars[k - 1] == '_');
+    if ident_before {
+        None
+    } else {
+        Some(hashes)
+    }
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Distinguish `'a'` / `'\n'` (char literal) from `'a` (lifetime/label).
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match (chars.get(i + 1), chars.get(i + 2)) {
+        (Some('\\'), _) => true,
+        (Some(_), Some('\'')) => true,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments_into_comment_text() {
+        let lines = scan("let x = 1; // trailing note\n// full-line note\n");
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert_eq!(lines[0].comment.trim(), "trailing note");
+        assert!(lines[1].is_comment_only());
+        assert_eq!(lines[1].comment.trim(), "full-line note");
+    }
+
+    #[test]
+    fn blanks_string_contents_but_keeps_quotes() {
+        let lines = scan("let s = \"unsafe // not a comment\";\n");
+        assert_eq!(lines[0].code, "let s = \"\";");
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        let lines = scan("p.expect(b'\"')?;\nlet q: &'static str = \"x\";\n");
+        assert_eq!(lines[0].code, "p.expect(b'')?;");
+        assert_eq!(lines[1].code, "let q: &'static str = \"\";");
+    }
+
+    #[test]
+    fn lifetimes_stay_in_code() {
+        let lines = scan("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert_eq!(lines[0].code, "fn f<'a>(x: &'a str) -> &'a str { x }");
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let lines = scan("a /* one\ntwo */ b\n");
+        assert_eq!(lines[0].code.trim(), "a");
+        assert_eq!(lines[0].comment.trim(), "one");
+        assert_eq!(lines[1].code.trim(), "b");
+        assert_eq!(lines[1].comment.trim(), "two");
+    }
+
+    #[test]
+    fn raw_strings_blank_their_contents() {
+        let lines = scan("let j = r#\"{\"k\": \"unsafe\"}\"#;\n");
+        assert_eq!(lines[0].code, "let j = r#\"\";");
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers() {
+        let lines = scan("let s = \"one\ntwo\";\nlet t = 3;\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].number, 3);
+        assert_eq!(lines[2].code, "let t = 3;");
+    }
+}

@@ -64,6 +64,10 @@ impl PjrtFftBackend {
         let out = self
             .rt
             .execute_f32(name, &buf)
+            // pallas-lint: allow(no-panic) — `LocalFftBackend::fft_batch`
+            // has no error channel; an execute failure on an artifact that
+            // loaded and compiled at open() means the artifact itself is
+            // broken, and aborting loudly beats silently corrupting data.
             .unwrap_or_else(|e| panic!("PJRT execute {name}: {e:#}"));
         debug_assert_eq!(out.len(), batch * n * 2);
         for (c, pair) in tile.iter_mut().zip(out.chunks_exact(2)) {

@@ -35,10 +35,12 @@ pub struct PjrtRuntime {
     inner: Mutex<Inner>,
 }
 
-// SAFETY: all access to the non-Send xla handles goes through `inner`'s
-// mutex; the underlying PJRT CPU client supports concurrent use and we never
-// hand out raw handles.
+// SAFETY: the non-Send xla handles live in `inner` and every access goes
+// through its mutex, so moving the runtime between threads cannot observe
+// a handle mid-use; raw handles are never handed out.
 unsafe impl Send for PjrtRuntime {}
+// SAFETY: as for `Send` — the `inner` mutex serializes all use of the xla
+// handles, so `&PjrtRuntime` may be shared across rank threads.
 unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
@@ -93,7 +95,10 @@ impl PjrtRuntime {
                 .map_err(|e| err(format!("compiling {name}: {e:?}")))?;
             inner.execs.insert(name.to_string(), exe);
         }
-        let exe = inner.execs.get(name).unwrap();
+        let exe = match inner.execs.get(name) {
+            Some(exe) => exe,
+            None => return Err(err(format!("entry `{name}` vanished from the executable cache"))),
+        };
 
         let lit = xla::Literal::vec1(input)
             .reshape(&dims)

@@ -241,6 +241,9 @@ impl Tuner {
                             prebuilt = Some(Arc::clone(&plans[win]));
                             short.swap_remove(win)
                         }
+                        // pallas-lint: allow(no-panic) — `ranked` was
+                        // checked non-empty right after rank_candidates,
+                        // so the model-mode head always exists.
                         _ => ranked.into_iter().next().unwrap(),
                     };
                     (choice, false)

@@ -211,6 +211,19 @@ pub fn enumerate(req: &TuneRequest) -> Vec<CandidateKind> {
     out
 }
 
+/// The sphere offsets of a plane-wave-family request. [`enumerate`] emits
+/// sphere candidate kinds only for requests that carry offsets, so every
+/// sphere kind reaching [`stage_cost`] or [`build`] has `Some` here —
+/// absence is a caller bug worth an immediate abort.
+fn sphere_of(req: &TuneRequest) -> &Arc<OffsetArray> {
+    match req.sphere.as_ref() {
+        Some(off) => off,
+        // pallas-lint: allow(no-panic) — unreachable for candidates
+        // produced by `enumerate` (see above).
+        None => panic!("sphere candidate priced against a sphere-free request"),
+    }
+}
+
 /// Exact stage counts of one candidate (the `model::cost` table it is
 /// priced from).
 pub fn stage_cost(kind: CandidateKind, req: &TuneRequest) -> PlanCost {
@@ -218,15 +231,9 @@ pub fn stage_cost(kind: CandidateKind, req: &TuneRequest) -> PlanCost {
         CandidateKind::SlabPencil => cost::slab_pencil(req.shape, req.nb, req.p, true),
         CandidateKind::SlabPencilLoop => cost::slab_pencil(req.shape, req.nb, req.p, false),
         CandidateKind::Pencil { p0, p1 } => cost::pencil(req.shape, req.nb, p0, p1, true),
-        CandidateKind::PlaneWave => {
-            cost::planewave(req.sphere.as_ref().expect("sphere request"), req.nb, req.p, true)
-        }
-        CandidateKind::PlaneWaveLoop => {
-            cost::planewave(req.sphere.as_ref().expect("sphere request"), req.nb, req.p, false)
-        }
-        CandidateKind::PaddedSphere => {
-            cost::padded_sphere(req.sphere.as_ref().expect("sphere request"), req.nb, req.p)
-        }
+        CandidateKind::PlaneWave => cost::planewave(sphere_of(req), req.nb, req.p, true),
+        CandidateKind::PlaneWaveLoop => cost::planewave(sphere_of(req), req.nb, req.p, false),
+        CandidateKind::PaddedSphere => cost::padded_sphere(sphere_of(req), req.nb, req.p),
     }
 }
 
@@ -320,17 +327,17 @@ pub fn build(cand: &Candidate, req: &TuneRequest, comm: &Comm) -> Result<Fftb> {
         }
         CandidateKind::PlaneWave => {
             let grid = ProcGrid::new(&[req.p], comm.clone())?;
-            let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
+            let off = Arc::clone(sphere_of(req));
             PlanKind::PlaneWave(PlaneWavePlan::new(off, req.nb, grid)?)
         }
         CandidateKind::PlaneWaveLoop => {
             let grid = ProcGrid::new(&[req.p], comm.clone())?;
-            let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
+            let off = Arc::clone(sphere_of(req));
             PlanKind::PlaneWaveLoop(PlaneWaveLoop::new(off, req.nb, grid)?)
         }
         CandidateKind::PaddedSphere => {
             let grid = ProcGrid::new(&[req.p], comm.clone())?;
-            let off = Arc::clone(req.sphere.as_ref().expect("sphere request"));
+            let off = Arc::clone(sphere_of(req));
             PlanKind::PaddedSphere(PaddedSpherePlan::new(off, req.nb, grid)?)
         }
     };

@@ -118,7 +118,8 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|e| format!("bad utf-8 in number at byte {start}: {e}"))?;
         s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number `{s}`: {e}"))
     }
 

@@ -1,0 +1,193 @@
+//! Schedule-perturbation tests: the comm layer's results must not depend
+//! on *when* messages are delivered or waits complete, only on the
+//! per-channel FIFO contract. `run_world_perturbed` arms every mailbox
+//! with a seeded delivery policy (messages stage and release out of
+//! post order across channels) and makes the fused exchange complete its
+//! waits in a seeded pseudo-random round order — a zero-dep "loom-lite"
+//! that explores interleavings a sanitizer would need a lucky thread
+//! schedule to hit. Any correct SPMD program must return bit-identical
+//! results under every seed; this file pins that for the flat windowed
+//! exchange, the fused plan executions, and a full SCF iteration.
+
+use std::sync::Arc;
+
+use fftb::comm::alltoall::alltoallv_complex_flat_tuned;
+use fftb::comm::{run_world, run_world_perturbed, CommTuning};
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfRunner};
+use fftb::fft::complex::{Complex, ZERO};
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+
+/// Varied block extents with systematic empty blocks (extent 0 whenever
+/// `3r + 5j ≡ 0 (mod 7)`) — the same pattern `tests/overlapped_exchange.rs`
+/// uses, so empty wire messages ride through the perturbed schedules too.
+fn block_len(r: usize, j: usize) -> usize {
+    (r * 3 + 5 * j) % 7
+}
+
+/// One flat exchange on rank `me` of `p` with window `w`; deterministic
+/// content `f(src, dst, k)` so the result is comparable across worlds.
+fn flat_exchange(comm: &fftb::comm::Comm, p: usize, w: usize) -> Vec<Complex> {
+    let me = comm.rank();
+    let mut send_offs = vec![0usize];
+    let mut send: Vec<Complex> = Vec::new();
+    for j in 0..p {
+        for k in 0..block_len(me, j) {
+            send.push(Complex::new((me * 31 + j) as f64, k as f64 + 0.25));
+        }
+        send_offs.push(send.len());
+    }
+    let mut recv_offs = vec![0usize];
+    for q in 0..p {
+        recv_offs.push(recv_offs[q] + block_len(q, me));
+    }
+    let mut out = vec![ZERO; *recv_offs.last().unwrap()];
+    let _ = alltoallv_complex_flat_tuned(
+        comm,
+        &send,
+        &send_offs,
+        &mut out,
+        &recv_offs,
+        CommTuning::with_window(w),
+    );
+    out
+}
+
+/// Bitwise comparison of per-rank complex outputs (stricter than
+/// `PartialEq`, which would let `-0.0 == 0.0` slip through).
+fn assert_bits_eq(base: &[Vec<Complex>], got: &[Vec<Complex>], what: &str) {
+    assert_eq!(base.len(), got.len(), "{what}: rank count differs");
+    for (r, (a, b)) in base.iter().zip(got).enumerate() {
+        assert_eq!(a.len(), b.len(), "{what}: rank {r} length differs");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                (x.re.to_bits(), x.im.to_bits()),
+                (y.re.to_bits(), y.im.to_bits()),
+                "{what}: rank {r} element {i} differs ({x:?} vs {y:?})"
+            );
+        }
+    }
+}
+
+/// The flat windowed exchange (which runs on the fused engine) must be
+/// bit-identical under every perturbation seed, for every window in
+/// {1, 2, p-1} and worlds including a prime p — 16 seeds each.
+#[test]
+fn perturbed_flat_exchange_is_bit_identical() {
+    for p in [2usize, 3, 5] {
+        for w in [1usize, 2, p - 1] {
+            let w = w.max(1);
+            let base = run_world(p, move |comm| flat_exchange(&comm, p, w));
+            for seed in 0..16u64 {
+                let got =
+                    run_world_perturbed(p, seed, move |comm| flat_exchange(&comm, p, w));
+                assert_bits_eq(&base, &got, &format!("p={p} w={w} seed={seed}"));
+            }
+        }
+    }
+}
+
+/// Full fused plan executions (slab-pencil forward+inverse round trip)
+/// under perturbed delivery and wait order: bit-identical to the
+/// unperturbed world across seeds, including at prime p.
+#[test]
+fn perturbed_slab_pencil_is_bit_identical() {
+    let shape = [6usize, 5, 6];
+    let nb = 2usize;
+    for p in [2usize, 3, 5] {
+        let body = move |comm: fftb::comm::Comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            let (spec, _) = plan.forward(&backend, input);
+            let (back, _) = plan.inverse(&backend, spec.clone());
+            spec.into_iter().chain(back).collect::<Vec<Complex>>()
+        };
+        let base = run_world(p, body);
+        for seed in 0..8u64 {
+            let got = run_world_perturbed(p, seed, body);
+            assert_bits_eq(&base, &got, &format!("slab-pencil p={p} seed={seed}"));
+        }
+    }
+}
+
+/// The plane-wave sphere plan (the SCF workhorse, with its uneven
+/// per-rank block extents) under perturbation.
+#[test]
+fn perturbed_planewave_is_bit_identical() {
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    let nb = 2usize;
+    for p in [2usize, 3, 5] {
+        let off = Arc::clone(&off);
+        let body = move |comm: fftb::comm::Comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+            let input = phased(plan.input_len(), grid.rank() as u64);
+            plan.forward(&backend, input).0
+        };
+        let base = run_world(p, body.clone());
+        for seed in 0..8u64 {
+            let got = run_world_perturbed(p, seed, body.clone());
+            assert_bits_eq(&base, &got, &format!("plane-wave p={p} seed={seed}"));
+        }
+    }
+}
+
+/// A full tuner-driven SCF iteration — orthonormalization, batched
+/// sphere transforms, subspace reductions, density mixing — must produce
+/// bit-identical scalars and densities under perturbed schedules. This is
+/// the steady-state contract end to end: fixed-order reductions plus
+/// destination-disjoint exchanges leave no room for delivery order to
+/// leak into results.
+#[test]
+fn perturbed_scf_is_bit_identical() {
+    const N: usize = 12;
+    const A: f64 = 8.0;
+    const ECUT: f64 = 2.0;
+    const NB: usize = 2;
+    let body = move |comm: fftb::comm::Comm| {
+        let lat = Lattice::new(A, N, ECUT);
+        let backend = RustFftBackend::new();
+        let opts = ScfOptions { max_iters: 2, tol: 0.0, coupling: 0.3, ..Default::default() };
+        let mut runner = ScfRunner::new(lat, NB, &GaussianWells::single(2.0, 1.4), &comm,
+            &backend, opts)
+            .expect("plan_auto_scf must find a feasible plan");
+        let res = runner.run(&backend);
+        let mut scalars: Vec<f64> = res.eigenvalues.clone();
+        for s in &res.history {
+            scalars.push(s.charge);
+            scalars.push(s.delta_rho);
+            scalars.push(s.max_residual);
+        }
+        (scalars, res.density.rho)
+    };
+    for p in [2usize, 3, 5] {
+        let base = run_world(p, body);
+        for seed in [1u64, 7, 23, 99, 1234, 0xDEAD_BEEF] {
+            let got = run_world_perturbed(p, seed, body);
+            assert_eq!(base.len(), got.len());
+            for (r, ((bs, brho), (gs, grho))) in base.iter().zip(&got).enumerate() {
+                for (i, (a, b)) in bs.iter().zip(gs).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "p={p} seed={seed} rank {r}: scalar {i} differs ({a} vs {b})"
+                    );
+                }
+                for (i, (a, b)) in brho.iter().zip(grho).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "p={p} seed={seed} rank {r}: rho[{i}] differs ({a} vs {b})"
+                    );
+                }
+            }
+        }
+    }
+}
