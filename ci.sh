@@ -27,16 +27,22 @@
 #   smoke          actually RUN the SCF example on p=2: the end-to-end
 #                  DFT-through-the-autotuner scenario (charge conservation,
 #                  steady-state plan-cache hits, zero steady-state allocs,
-#                  wisdom round trip) gates every change
+#                  wisdom round trip), plus --worker: the depth-2 pipeline
+#                  smoke — the pinned-plan SCF with the exchange helper
+#                  worker enabled must be bit-identical to worker-off, and
+#                  the coordinator's two-deep pipeline to depth 1
 #
 # Nightly sanitizer lanes (opt-in, PALLAS_NIGHTLY=1; PALLAS_NIGHTLY=only
 # skips the stable lanes and runs just the sanitizers):
 #   miri           cargo +nightly miri over the unsafe surface — the
-#                  fft::complex byte/f64 reinterpret casts and the
-#                  comm::arena checkout/recycle unit tests
+#                  fft::complex byte/f64 reinterpret casts, the comm::arena
+#                  checkout/recycle unit tests, and the comm::worker buffer
+#                  handoff (ownership moves through the job channel)
 #   tsan           ThreadSanitizer (-Z sanitizer=thread, -Zbuild-std) over
 #                  the comm-layer unit tests: mailbox delivery, arena
-#                  stress, collectives — the threads-as-ranks surface
+#                  stress, collectives, and (via the same comm:: filter)
+#                  the worker thread's channel handoff and shutdown-on-drop
+#                  — the threads-as-ranks surface
 # Both lanes skip with a visible notice when no nightly toolchain (or the
 # miri / rust-src component) is installed, so the stable lanes never block
 # on nightly availability.
@@ -55,8 +61,8 @@ if [ "$PALLAS_NIGHTLY" != "only" ]; then
     cargo bench --no-run --quiet
     cargo build --examples --release --quiet
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
-    cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4
-    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke)"
+    cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4 --worker
+    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker)"
 fi
 
 if [ -n "$PALLAS_NIGHTLY" ]; then
@@ -65,10 +71,12 @@ if [ -n "$PALLAS_NIGHTLY" ]; then
         exit 0
     fi
     if rustup component list --toolchain nightly 2>/dev/null | grep -q "^miri.*(installed)"; then
-        # Miri over the unsafe surface: byte/f64 reinterpret casts and the
-        # arena's checkout/recycle ownership dance.
+        # Miri over the unsafe surface: byte/f64 reinterpret casts, the
+        # arena's checkout/recycle ownership dance, and the worker thread's
+        # buffer handoff (an arena buffer moves through the job channel and
+        # back — the driver pipeline's ownership pattern).
         MIRIFLAGS="-Zmiri-strict-provenance" \
-            cargo +nightly miri test -q --lib fft::complex comm::arena
+            cargo +nightly miri test -q --lib fft::complex comm::arena comm::worker
         echo "ci.sh: miri lane OK"
     else
         echo "ci.sh: NOTICE: nightly miri component not installed — skipping miri lane"
@@ -76,7 +84,9 @@ if [ -n "$PALLAS_NIGHTLY" ]; then
     if rustup component list --toolchain nightly 2>/dev/null | grep -q "^rust-src.*(installed)"; then
         # TSan needs a sanitized std (-Zbuild-std) and a nightly-only
         # RUSTFLAGS; run the comm-layer unit tests where every rank is a
-        # thread sharing mailboxes, the arena and the stats counters.
+        # thread sharing mailboxes, the arena and the stats counters. The
+        # comm:: filter also picks up comm::worker:: — the helper thread's
+        # channel handoff and shutdown-on-drop run under TSan here.
         host="$(rustc -vV | sed -n 's/^host: //p')"
         RUSTFLAGS="-Z sanitizer=thread" \
             cargo +nightly test -q --lib comm:: \

@@ -15,15 +15,27 @@
 //! decision, steady-state iterations with `plan_cache_hit` and zero
 //! `alloc_bytes`, and the warm run's decision coming from wisdom.
 //!
+//! With `--worker` the example appends the depth-2 smoke: the same SCF on
+//! a pinned plane-wave plan with the exchange's helper worker thread
+//! enabled (bit-identical to worker-off), then the coordinator's two-deep
+//! software pipeline pushed through batched flushes (depth 2 bit-identical
+//! to depth 1, overlap reported). CI runs this section on p=2.
+//!
 //! Run: `cargo run --release --example scf_distributed [--p N] [--iters K]
-//!       [--empirical] [--wisdom PATH]`
+//!       [--empirical] [--wisdom PATH] [--worker]`
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use fftb::comm::communicator::run_world;
-use fftb::coordinator::MetricsSink;
+use fftb::comm::CommTuning;
+use fftb::coordinator::{BatchingDriver, MetricsSink, TransformJob};
 use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfRunner};
+use fftb::fft::dft::Direction;
 use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{Fftb, PlanKind, PlaneWavePlan};
 
 fn arg_usize(name: &str, default: usize) -> usize {
     let args: Vec<String> = std::env::args().collect();
@@ -38,6 +50,7 @@ fn main() {
     let p = arg_usize("--p", 2);
     let iters = arg_usize("--iters", 6);
     let empirical = std::env::args().any(|a| a == "--empirical");
+    let worker_smoke = std::env::args().any(|a| a == "--worker");
     let wisdom_path: PathBuf = std::env::args()
         .collect::<Vec<_>>()
         .iter()
@@ -145,6 +158,101 @@ fn main() {
         assert!((w.density.charge - nb as f64).abs() < 1e-6);
     }
     std::fs::remove_file(&wisdom_path).ok();
+
+    // ---- depth-2 worker smoke (opt-in: --worker; CI runs it on p=2).
+    if worker_smoke {
+        // The tuner owns the worker axis in the runs above; pinning the
+        // plan is what lets this section force it both ways and assert the
+        // threaded exchange changes nothing but the clock.
+        let scf_mode = move |worker: bool| {
+            move |comm: fftb::comm::Comm| {
+                let lat = Lattice::new(a, n, ecut);
+                let backend = RustFftBackend::new();
+                let pot = GaussianWells::dimer(3.0, 1.3, 0.35);
+                let grid = ProcGrid::new(&[comm.size()], comm.clone()).unwrap();
+                let plan = PlaneWavePlan::new(Arc::clone(&lat.offsets), nb, grid).unwrap();
+                let mut fx = Fftb { kind: PlanKind::PlaneWave(plan), sizes: [n, n, n], nb };
+                fx.set_comm_tuning(CommTuning::with_window(2).with_worker(worker));
+                let opts = ScfOptions {
+                    max_iters: iters,
+                    tol: 0.0,
+                    coupling: 0.3,
+                    ..Default::default()
+                };
+                let mut runner =
+                    ScfRunner::with_plan(lat, nb, &pot, &comm, Arc::new(fx), opts)
+                        .expect("the pinned plane-wave plan must assemble");
+                let res = runner.run(&backend);
+                (res.eigenvalues, res.density.rho, res.density.charge)
+            }
+        };
+        let off = run_world(p, scf_mode(false));
+        let on = run_world(p, scf_mode(true));
+        for (r, ((ev_off, rho_off, _), (ev_on, rho_on, charge))) in
+            off.iter().zip(&on).enumerate()
+        {
+            assert!((charge - nb as f64).abs() < 1e-6, "worker SCF: charge drift on rank {r}");
+            for (x, y) in ev_off.iter().zip(ev_on) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r}: eigenvalue differs under worker");
+            }
+            for (x, y) in rho_off.iter().zip(rho_on) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r}: density differs under worker");
+            }
+        }
+
+        // Two-deep coordinator pipeline over batched flushes: depth 2 must
+        // return exactly what depth 1 returns, in the same order.
+        assert!(
+            n % p == 0,
+            "--worker pipeline smoke assumes an even slab split (p must divide {n})"
+        );
+        let pipe = |depth: usize| {
+            run_world(p, move |comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let mut driver = BatchingDriver::new([n, n, n], Arc::clone(&grid))
+                    .with_pipeline_depth(depth);
+                let per_band = n * n * n / p;
+                let mut got = Vec::new();
+                for round in 0..3u64 {
+                    for i in 0..nb as u64 {
+                        let id = round * nb as u64 + i;
+                        driver.submit(TransformJob {
+                            id,
+                            data: phased(per_band, id),
+                            dir: Direction::Forward,
+                        });
+                    }
+                    driver.flush(&backend, Direction::Forward);
+                    got.extend(driver.drain_completed());
+                }
+                let overlap: u64 =
+                    driver.drain_traces().iter().map(|t| t.pipeline_overlap_ns).sum();
+                (got, overlap)
+            })
+        };
+        let d1 = pipe(1);
+        let d2 = pipe(2);
+        let mut overlap_total = 0u64;
+        for (r, ((g1, ov1), (g2, ov2))) in d1.iter().zip(&d2).enumerate() {
+            assert_eq!(*ov1, 0, "rank {r}: depth 1 must report no pipeline overlap");
+            assert_eq!(g1.len(), g2.len(), "rank {r}: result count differs across depths");
+            for ((id1, v1), (id2, v2)) in g1.iter().zip(g2) {
+                assert_eq!(id1, id2, "rank {r}: the pipeline reordered results");
+                for (x, y) in v1.iter().zip(v2) {
+                    assert_eq!(x.re.to_bits(), y.re.to_bits(), "rank {r} job {id1}: re differs");
+                    assert_eq!(x.im.to_bits(), y.im.to_bits(), "rank {r} job {id1}: im differs");
+                }
+            }
+            overlap_total += ov2;
+        }
+        println!("== depth-2 worker smoke ==");
+        println!(
+            "worker-on SCF bit-identical to worker-off; depth-2 pipeline bit-identical \
+             to depth 1 (overlap {overlap_total} ns across ranks)"
+        );
+    }
+
     println!();
     println!("scf_distributed OK");
 }

@@ -17,6 +17,13 @@
 //! fused path's overlapped pack+unpack nanoseconds — the work the
 //! monolithic path serializes before/after the wire.
 //!
+//! Section 3 — worker-off vs worker-on: the same fused split/merge with
+//! the exchange's helper worker thread disabled and enabled
+//! (`CommTuning::with_worker`). With the worker, pack/unpack run on the
+//! helper *while* the communicating thread is blocked in waits, instead
+//! of between them. Reported: slowest-rank wall time per mode and the
+//! helper's busy nanoseconds; bit-identity of the two modes is asserted.
+//!
 //! Reported per discipline: slowest-rank wall time per exchange and
 //! slowest-rank `ExecTrace::wait_ns` per exchange (time blocked in
 //! receive waits). Expected shape: the overlapped schedule shows lower
@@ -134,6 +141,77 @@ fn fused_section() {
     }
 }
 
+/// Worker-off vs worker-on fused exchange on the same slab split/merge,
+/// window 2: the helper thread takes the pack/unpack movers off the
+/// communicating thread's critical path.
+fn worker_section() {
+    println!();
+    println!("worker-off vs worker-on exchange (slab split/merge, window 2), skew {SKEW_US}us/rank");
+    println!(
+        "{:>4} {:>7} | {:>11} | {:>11} {:>14} | {}",
+        "p", "n", "worker-off", "worker-on", "worker-busy", "note"
+    );
+    for p in [2usize, 4, 8] {
+        for n in [16usize, 32] {
+            let (nb, ny) = (2usize, n);
+            let rows = run_world(p, move |comm| {
+                let me = comm.rank();
+                let lxc = cyclic::local_count(n, p, me);
+                let lzc = cyclic::local_count(n, p, me);
+                let sh_in = [nb, lxc, ny, n];
+                let sh_out = [nb, n, ny, lzc];
+                let sched = A2aSchedule::for_split_merge(sh_in, 3, sh_out, 1, p, me);
+                let data: Vec<Complex> =
+                    (0..volume(sh_in)).map(|i| Complex::new(i as f64, me as f64)).collect();
+
+                let mut bench_mode = |worker: bool| {
+                    let tuning = CommTuning::with_window(2).with_worker(worker);
+                    let mut out = vec![ZERO; volume(sh_out)];
+                    let mut t = Duration::ZERO;
+                    let mut busy = 0u64;
+                    for it in 0..WARMUP + ITERS {
+                        barrier(&comm);
+                        busy_wait_us(me as u64 * SKEW_US);
+                        let t0 = Instant::now();
+                        let k =
+                            SplitMergeKernel::new(&sched, &data, sh_in, 3, &mut out, sh_out, 1);
+                        let c = k.exchange(&comm, tuning);
+                        if it >= WARMUP {
+                            t += t0.elapsed();
+                            busy += c.worker_busy_ns;
+                        }
+                    }
+                    (t / ITERS as u32, busy / ITERS as u64, out)
+                };
+                let (t_off, _, want) = bench_mode(false);
+                let (t_on, busy, got) = bench_mode(true);
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(
+                        (a.re.to_bits(), a.im.to_bits()),
+                        (b.re.to_bits(), b.im.to_bits()),
+                        "worker exchange must be bit-identical"
+                    );
+                }
+                (t_off, t_on, busy)
+            });
+            let t_off = rows.iter().map(|r| r.0).max().unwrap();
+            let t_on = rows.iter().map(|r| r.1).max().unwrap();
+            let busy = rows.iter().map(|r| r.2).max().unwrap();
+            let note = if p >= 4 && t_on > t_off {
+                "worker did not win (timing noise?)"
+            } else {
+                ""
+            };
+            println!(
+                "{p:>4} {n:>6}^ | {:>11} | {:>11} {:>14} | {note}",
+                fmt_us(t_off),
+                fmt_us(t_on),
+                fmt_us(Duration::from_nanos(busy)),
+            );
+        }
+    }
+}
+
 fn main() {
     println!("pairwise exchange: serial vs overlapped (window = p-1), skew {SKEW_US}us/rank");
     println!(
@@ -206,5 +284,6 @@ fn main() {
         }
     }
     fused_section();
+    worker_section();
     println!("a2a_micro bench done");
 }

@@ -5,6 +5,13 @@
 //! same comparison priced on Perlmutter at paper scale, where the latency
 //! term (nb * (p-1) * alpha) is what separates the dark- and light-blue
 //! lines of Fig. 9.
+//!
+//! Also ablated here: the driver's two-deep software pipeline (worker-off
+//! depth 1 vs worker-on depth 2) — with the worker thread, flush k's
+//! de-interleave tail runs concurrently with flush k+1's exchange.
+//! Reported: slowest-rank wall time per mode and the overlapped tail
+//! nanoseconds (`ExecTrace::pipeline_overlap_ns`); bit-identity of the
+//! two depths is asserted.
 
 use std::sync::Arc;
 
@@ -146,9 +153,75 @@ fn cached_flush() {
     );
 }
 
+/// Pipeline depth 1 (worker off) vs depth 2 (worker on): a run of flushes
+/// with no intermediate drains, so every depth-2 flush's exchange overlaps
+/// the previous flush's de-interleave tail on the worker thread.
+fn pipeline_ablation() {
+    println!();
+    println!("== pipeline depth 1 vs 2 (driver worker thread) ==");
+    let n = 32usize;
+    let nb = 8usize;
+    let p = 4usize;
+    let rounds = 5usize;
+    let run = |depth: usize| {
+        run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver =
+                BatchingDriver::new([n, n, n], Arc::clone(&grid)).with_pipeline_depth(depth);
+            let bands: Vec<_> = (0..nb)
+                .map(|b| {
+                    let g = phased(n * n * n, b as u64);
+                    scatter_cube_x(&g, 1, [n, n, n], p, grid.rank())
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            for round in 0..rounds {
+                for (i, b) in bands.iter().enumerate() {
+                    driver.submit(TransformJob {
+                        id: (round * nb + i) as u64,
+                        data: b.clone(),
+                        dir: Direction::Forward,
+                    });
+                }
+                driver.flush(&backend, Direction::Forward);
+            }
+            let got = driver.drain_completed();
+            let wall = t0.elapsed();
+            let overlap: u64 =
+                driver.drain_traces().iter().map(|t| t.pipeline_overlap_ns).sum();
+            (wall, overlap, got)
+        })
+    };
+    let d1 = run(1);
+    let d2 = run(2);
+    for (r, ((_, ov1, g1), (_, _, g2))) in d1.iter().zip(&d2).enumerate() {
+        assert_eq!(*ov1, 0, "depth 1 must report no pipeline overlap");
+        assert_eq!(g1.len(), g2.len(), "rank {r}: result count differs across depths");
+        for ((i1, v1), (i2, v2)) in g1.iter().zip(g2) {
+            assert_eq!(i1, i2, "rank {r}: pipelined flushes must stay FIFO");
+            for (a, b) in v1.iter().zip(v2) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "rank {r}: depth 2 diverged");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "rank {r}: depth 2 diverged");
+            }
+        }
+    }
+    let w1 = d1.iter().map(|r| r.0).max().unwrap();
+    let w2 = d2.iter().map(|r| r.0).max().unwrap();
+    let ov = d2.iter().map(|r| r.1).max().unwrap();
+    println!(
+        "cube {n}^3, nb={nb}, p={p}, {rounds} rounds: depth 1 {}, depth 2 {} \
+         (overlapped tail {} on the slowest rank)",
+        fmt_duration(w1),
+        fmt_duration(w2),
+        fmt_duration(std::time::Duration::from_nanos(ov))
+    );
+}
+
 fn main() {
     live();
     modeled();
     cached_flush();
+    pipeline_ablation();
     println!("batching_ablation bench done");
 }

@@ -32,12 +32,27 @@
 //! engine, and the plan layer bridges its `PackKernel` trait
 //! (`fftb::plan::stages`) to it, so one engine serves every caller.
 //!
+//! The fused engine also has a **threaded** variant
+//! ([`alltoallv_fused_threaded`], selected by [`CommTuning::worker`]): a
+//! scoped helper thread takes over all pack/unpack work — it packs and
+//! posts each round's block and lands each received one — while the
+//! communicating thread does nothing but complete waits in schedule order
+//! and forward payloads over a channel. Pack/unpack then overlap the waits
+//! *in real time* instead of merely interleaving with them. The mover
+//! contract splits into a read-only [`PackHalf`] (shared with the helper)
+//! and a write-only [`UnpackHalf`] (moved into it), so no `unsafe` and no
+//! aliasing: the source tensor is only ever read, the destination only
+//! ever written, and the self block is the caller's job before the call.
+//! Results are bit-identical to the single-threaded engine — the helper
+//! changes *when* blocks move, never where they land — which
+//! `tests/comm_schedules.rs` pins across the perturbation seed matrix.
+//!
 //! All disciplines report [`A2aCounters`]: nanoseconds spent blocked in
-//! waits, rounds posted ahead of the serial schedule, and the pack/unpack
-//! nanoseconds that ran *overlapped* with in-flight rounds — the numbers
-//! `ExecTrace` surfaces as `wait_ns` / `overlap_rounds` /
-//! `pack_overlap_ns` / `unpack_overlap_ns` and `benches/a2a_micro.rs`
-//! prints side by side.
+//! waits, rounds posted ahead of the serial schedule, the pack/unpack
+//! nanoseconds that ran *overlapped* with in-flight rounds, and the helper
+//! thread's busy time — the numbers `ExecTrace` surfaces as `wait_ns` /
+//! `overlap_rounds` / `pack_overlap_ns` / `unpack_overlap_ns` /
+//! `worker_busy_ns` and `benches/a2a_micro.rs` prints side by side.
 
 use std::time::Instant;
 
@@ -60,23 +75,37 @@ pub struct CommTuning {
     /// rounds overlap the wait for the current one. Clamped to
     /// `[1, p - 1]` at execution.
     pub window: usize,
+    /// Run the exchange's pack/unpack work on a helper worker thread
+    /// ([`alltoallv_fused_threaded`]): packing and unpacking proceed while
+    /// the communicating thread is blocked in waits, instead of
+    /// interleaving with them. Bit-identical to the single-threaded
+    /// engine; whether it is *faster* depends on the machine profile,
+    /// which is exactly what `Machine::alltoall_time_fused_threaded`
+    /// prices and `tuner::search` decides.
+    pub worker: bool,
 }
 
 impl Default for CommTuning {
     fn default() -> Self {
-        CommTuning { window: 2 }
+        CommTuning { window: 2, worker: false }
     }
 }
 
 impl CommTuning {
     /// Tuning with an explicit window.
     pub fn with_window(window: usize) -> Self {
-        CommTuning { window }
+        CommTuning { window, worker: false }
+    }
+
+    /// The same tuning with the helper worker thread switched on or off.
+    pub fn with_worker(mut self, worker: bool) -> Self {
+        self.worker = worker;
+        self
     }
 
     /// The serial-ordering window (no sends ahead of the current wait).
     pub fn serial() -> Self {
-        CommTuning { window: 1 }
+        CommTuning { window: 1, worker: false }
     }
 }
 
@@ -102,6 +131,10 @@ pub struct A2aCounters {
     /// for the serial ordering (`window == 1`), and for the barrier-style
     /// unpack of the serial baseline.
     pub unpack_overlap_ns: u64,
+    /// Nanoseconds the helper worker thread spent packing and unpacking
+    /// in the threaded engine ([`alltoallv_fused_threaded`]) — its total
+    /// busy time for this exchange. 0 on every single-threaded path.
+    pub worker_busy_ns: u64,
 }
 
 /// Per-destination block movers driven by the fused windowed engine
@@ -292,6 +325,166 @@ pub fn alltoallv_fused(
     c
 }
 
+/// The read-only pack side of a fused exchange, for the threaded engine
+/// ([`alltoallv_fused_threaded`]).
+///
+/// `pack` takes `&self` — packing must only *read* the source tensor —
+/// and the trait requires `Sync` because the reference is shared with the
+/// helper thread. Together with [`UnpackHalf`]'s exclusive borrow of the
+/// destination, this splits [`FusedBlocks`]'s single `&mut` mover into
+/// two disjoint halves that can run concurrently without `unsafe`.
+pub trait PackHalf: Sync {
+    /// Bytes of the block headed to rank `dest` (0 allowed).
+    fn send_bytes(&self, dest: usize) -> usize;
+    /// Append rank `dest`'s packed block to `out`, in the destination's
+    /// canonical element order. Must append exactly `send_bytes(dest)`
+    /// bytes (the engine asserts it).
+    fn pack(&self, dest: usize, out: &mut WireBuf);
+}
+
+/// The write-only unpack side of a fused exchange, for the threaded
+/// engine ([`alltoallv_fused_threaded`]). Requires `Send` because the
+/// engine moves the exclusive borrow of the destination tensor into the
+/// helper thread for the duration of the exchange.
+pub trait UnpackHalf: Send {
+    /// Bytes expected from rank `src` (0 allowed).
+    fn recv_bytes(&self, src: usize) -> usize;
+    /// Land the block received from rank `src`.
+    fn unpack(&mut self, src: usize, block: &[u8]);
+}
+
+/// The **threaded** fused windowed exchange: a scoped helper thread owns
+/// all pack/unpack work while the calling thread only completes waits.
+///
+/// Division of labor:
+///
+/// * **helper thread** — primes [`CommTuning::window`] rounds of sends
+///   (packing each block straight into its recycled wire buffer), then
+///   loops: receive a completed payload over the channel, unpack it, post
+///   the next round's freshly packed send.
+/// * **calling thread** — completes the waits in schedule order (the
+///   seeded perturbation order in verification worlds) and forwards each
+///   payload `(from, WireBuf)` to the helper. While it is blocked in a
+///   wait, the helper is packing and unpacking — true concurrency where
+///   the single-threaded engine merely interleaves.
+///
+/// The dependency structure (send `s + w` is posted only after round `s`'s
+/// payload arrived) is exactly the single-threaded windowed engine's, so
+/// the schedule stays deadlock-free; and since distinct rounds pack from /
+/// unpack into disjoint regions, results are bit-identical to
+/// [`alltoallv_fused`] under every seed — `tests/comm_schedules.rs` pins
+/// this.
+///
+/// **The self block is the caller's job**: move it src→dst *before* the
+/// call (plans do a direct move with no arena staging — see
+/// `SplitMergeKernel::exchange`). This engine touches remote rounds only
+/// and returns immediately for a single-rank world.
+pub fn alltoallv_fused_threaded(
+    comm: &Comm,
+    pack: &dyn PackHalf,
+    unpack: &mut dyn UnpackHalf,
+    tuning: CommTuning,
+) -> A2aCounters {
+    let p = comm.size();
+    let me = comm.rank();
+    let mut c = A2aCounters::default();
+    if p == 1 {
+        return c;
+    }
+    let rounds = p - 1;
+    let w = tuning.window.clamp(1, rounds);
+    // Perturbation worlds post every send up front (eager sends cannot
+    // deadlock) and complete waits in the seeded order — the same
+    // discipline as the single-threaded engine. `perturb_order` is drawn
+    // once, here, so the helper never touches the perturbation state.
+    let perturb = comm.perturb_order(rounds);
+    let prime = if perturb.is_some() { rounds } else { w };
+
+    let helper_comm = comm.clone();
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, WireBuf)>();
+
+    let (pack_ns, unpack_ns) = std::thread::scope(|scope| {
+        let helper = scope.spawn(move || {
+            let comm = helper_comm;
+            let mut pack_ns = 0u64;
+            let mut unpack_ns = 0u64;
+            let mut posted = 0usize;
+            let mut post_next = |posted: &mut usize, pack_ns: &mut u64| {
+                *posted += 1;
+                let to = (me + *posted) % p;
+                let n = pack.send_bytes(to);
+                let mut buf = comm.arena().checkout(n);
+                let t0 = Instant::now();
+                pack.pack(to, &mut buf);
+                *pack_ns += t0.elapsed().as_nanos() as u64;
+                assert_eq!(
+                    buf.len(),
+                    n,
+                    "alltoall: pack for rank {to} produced the wrong block size"
+                );
+                comm.send_coll_buf(to, T_A2A, buf);
+            };
+            while posted < prime {
+                post_next(&mut posted, &mut pack_ns);
+            }
+            for _ in 0..rounds {
+                let Ok((from, buf)) = rx.recv() else { break };
+                assert_eq!(
+                    buf.len(),
+                    unpack.recv_bytes(from),
+                    "alltoall: peer {from} sent a block of the wrong size"
+                );
+                let t1 = Instant::now();
+                unpack.unpack(from, &buf);
+                unpack_ns += t1.elapsed().as_nanos() as u64;
+                drop(buf); // the wire buffer returns to the shared arena
+                if posted < rounds {
+                    post_next(&mut posted, &mut pack_ns);
+                }
+            }
+            (pack_ns, unpack_ns)
+        });
+
+        let mut wait_round = |s: usize| {
+            let from = (me + p - s) % p;
+            let req = comm.irecv_coll(from, T_A2A);
+            let t0 = Instant::now();
+            // pallas-lint: allow(no-panic) — receive requests always
+            // carry a payload (see Request::wait).
+            let buf = req.wait().expect("irecv requests always carry a payload");
+            c.wait_ns += t0.elapsed().as_nanos() as u64;
+            // A send error means the helper exited early (it panicked);
+            // the join below surfaces that.
+            let _ = tx.send((from, buf));
+        };
+        match &perturb {
+            Some(order) => {
+                for &s in order {
+                    wait_round(s);
+                }
+            }
+            None => {
+                for s in 1..p {
+                    wait_round(s);
+                }
+            }
+        }
+        drop(tx); // closes the channel: the helper drains and returns
+        // pallas-lint: allow(no-panic) — the helper only panics if a peer
+        // sent a malformed block, which is already a broken world; the
+        // join then re-raises that panic on the calling thread.
+        helper.join().expect("exchange helper thread panicked")
+    });
+
+    // With the worker, *every* remote round's pack and unpack ran
+    // concurrently with the communicating thread's waits.
+    c.overlap_rounds = rounds as u64;
+    c.pack_overlap_ns = pack_ns;
+    c.unpack_overlap_ns = unpack_ns;
+    c.worker_busy_ns = pack_ns + unpack_ns;
+    c
+}
+
 /// [`FusedBlocks`] adapter for pre-packed flat byte buffers: pack is a
 /// straight copy out of `send[soff(j)..soff(j+1)]`, unpack a straight copy
 /// into `recv[roff(q)..roff(q+1)]`.
@@ -331,11 +524,53 @@ where
     }
 }
 
+/// [`PackHalf`] adapter over a pre-packed flat send buffer (the read-only
+/// half of [`FlatBlocks`]).
+struct FlatPackHalf<'a, FS> {
+    send: &'a [u8],
+    soff: FS,
+}
+
+impl<FS> PackHalf for FlatPackHalf<'_, FS>
+where
+    FS: Fn(usize) -> usize + Sync,
+{
+    fn send_bytes(&self, dest: usize) -> usize {
+        (self.soff)(dest + 1) - (self.soff)(dest)
+    }
+
+    fn pack(&self, dest: usize, out: &mut WireBuf) {
+        out.extend_from_slice(&self.send[(self.soff)(dest)..(self.soff)(dest + 1)]);
+    }
+}
+
+/// [`UnpackHalf`] adapter over a flat receive buffer (the write-only half
+/// of [`FlatBlocks`]).
+struct FlatUnpackHalf<'a, FR> {
+    recv: &'a mut [u8],
+    roff: FR,
+}
+
+impl<FR> UnpackHalf for FlatUnpackHalf<'_, FR>
+where
+    FR: Fn(usize) -> usize + Send,
+{
+    fn recv_bytes(&self, src: usize) -> usize {
+        (self.roff)(src + 1) - (self.roff)(src)
+    }
+
+    fn unpack(&mut self, src: usize, block: &[u8]) {
+        self.recv[(self.roff)(src)..(self.roff)(src + 1)].copy_from_slice(block);
+    }
+}
+
 /// The windowed pairwise exchange over flat byte buffers — a
-/// [`FlatBlocks`] adapter over [`alltoallv_fused`]. `soff`/`roff` map
-/// block index `j` (0..=p) to byte offsets into `send`/`recv`; block `j`
-/// of `send` goes to rank `j`, and rank `q`'s block lands at
-/// `recv[roff(q)..roff(q + 1)]`.
+/// [`FlatBlocks`] adapter over [`alltoallv_fused`], or, with
+/// [`CommTuning::worker`], a [`FlatPackHalf`]/[`FlatUnpackHalf`] split
+/// over [`alltoallv_fused_threaded`] (self block moved directly first).
+/// `soff`/`roff` map block index `j` (0..=p) to byte offsets into
+/// `send`/`recv`; block `j` of `send` goes to rank `j`, and rank `q`'s
+/// block lands at `recv[roff(q)..roff(q + 1)]`.
 fn exchange_flat<FS, FR>(
     comm: &Comm,
     send: &[u8],
@@ -345,11 +580,22 @@ fn exchange_flat<FS, FR>(
     tuning: CommTuning,
 ) -> A2aCounters
 where
-    FS: Fn(usize) -> usize,
-    FR: Fn(usize) -> usize,
+    FS: Fn(usize) -> usize + Sync,
+    FR: Fn(usize) -> usize + Send,
 {
-    let mut blocks = FlatBlocks { send, recv, soff, roff };
-    alltoallv_fused(comm, &mut blocks, tuning)
+    if tuning.worker {
+        let me = comm.rank();
+        let (s0, s1) = (soff(me), soff(me + 1));
+        let (r0, r1) = (roff(me), roff(me + 1));
+        assert_eq!(s1 - s0, r1 - r0, "alltoall: self block extents disagree");
+        recv[r0..r1].copy_from_slice(&send[s0..s1]);
+        let pack = FlatPackHalf { send, soff };
+        let mut unpack = FlatUnpackHalf { recv, roff };
+        alltoallv_fused_threaded(comm, &pack, &mut unpack, tuning)
+    } else {
+        let mut blocks = FlatBlocks { send, recv, soff, roff };
+        alltoallv_fused(comm, &mut blocks, tuning)
+    }
 }
 
 fn validate_flat(
@@ -664,6 +910,86 @@ mod tests {
     // Serial-vs-windowed bit-identity (incl. empty blocks, non-pow2
     // worlds, overlap-counter invariants) is covered end-to-end by
     // `tests/overlapped_exchange.rs`.
+
+    /// The threaded (worker) flat exchange must be bit-identical to the
+    /// single-threaded one for every window, including uneven block sizes
+    /// and a non-power-of-two world. The perturbed-seed matrix lives in
+    /// `tests/comm_schedules.rs`; this is the direct unit-level pin.
+    #[test]
+    fn worker_flat_exchange_is_bit_identical() {
+        use crate::fft::complex::{Complex, ZERO};
+        let p = 3usize;
+        for w in [1usize, 2] {
+            let outs = run_world(p, move |comm| {
+                let me = comm.rank();
+                // Block to rank j carries me + 2j + 1 elements.
+                let mut send_offs = vec![0usize];
+                let mut send: Vec<Complex> = Vec::new();
+                for j in 0..p {
+                    for k in 0..(me + 2 * j + 1) {
+                        send.push(Complex::new((me * 7 + j) as f64, k as f64 + 0.5));
+                    }
+                    send_offs.push(send.len());
+                }
+                let mut recv_offs = vec![0usize];
+                for q in 0..p {
+                    recv_offs.push(recv_offs[q] + q + 2 * me + 1);
+                }
+                let mut base = vec![ZERO; *recv_offs.last().unwrap()];
+                let _ = alltoallv_complex_flat_tuned(
+                    &comm,
+                    &send,
+                    &send_offs,
+                    &mut base,
+                    &recv_offs,
+                    CommTuning::with_window(w),
+                );
+                let mut got = vec![ZERO; base.len()];
+                let c = alltoallv_complex_flat_tuned(
+                    &comm,
+                    &send,
+                    &send_offs,
+                    &mut got,
+                    &recv_offs,
+                    CommTuning::with_window(w).with_worker(true),
+                );
+                // The helper's busy time is exactly its pack + unpack time,
+                // and every remote round overlapped the waits.
+                assert_eq!(c.worker_busy_ns, c.pack_overlap_ns + c.unpack_overlap_ns);
+                assert_eq!(c.overlap_rounds, (p - 1) as u64);
+                (base, got)
+            });
+            for (want, got) in outs {
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(
+                        (a.re.to_bits(), a.im.to_bits()),
+                        (b.re.to_bits(), b.im.to_bits()),
+                        "worker exchange diverged at window {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Single-rank worlds short-circuit the threaded engine: the self
+    /// block is the caller's job and no helper is spawned.
+    #[test]
+    fn worker_single_rank_is_trivial() {
+        run_world(1, |comm| {
+            let send = [5u8; 16];
+            let mut recv = [0u8; 16];
+            let c = alltoall_into(
+                &comm,
+                &send,
+                16,
+                &mut recv,
+                CommTuning::default().with_worker(true),
+            );
+            assert_eq!(recv, send);
+            assert_eq!(c.worker_busy_ns, 0);
+        });
+    }
 
     #[test]
     fn complex_alltoall_round_values() {

@@ -26,11 +26,12 @@ pub mod arena;
 pub mod collectives;
 pub mod communicator;
 pub mod mailbox;
+pub mod worker;
 
 pub use alltoall::{
     alltoall, alltoall_into, alltoallv, alltoallv_complex, alltoallv_complex_flat,
-    alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned, alltoallv_fused, A2aCounters,
-    CommTuning, FusedBlocks,
+    alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned, alltoallv_fused,
+    alltoallv_fused_threaded, A2aCounters, CommTuning, FusedBlocks, PackHalf, UnpackHalf,
 };
 pub use arena::{BufferArena, WireBuf};
 pub use collectives::{
@@ -41,3 +42,4 @@ pub use communicator::{
     run_world, run_world_perturbed, run_world_with_stats, waitall, Comm, CommStats, Request,
     WorldShared,
 };
+pub use worker::Worker;

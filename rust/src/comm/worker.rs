@@ -1,0 +1,183 @@
+//! Per-rank helper worker thread: a single persistent `std::thread` fed
+//! closures over an mpsc channel, used by the coordinator's
+//! [`BatchingDriver`](crate::coordinator::BatchingDriver) to run one
+//! batch's staging tail concurrently with the next batch's exchange (the
+//! two-deep software pipeline).
+//!
+//! The exchange-level overlap worker is different machinery: the fused
+//! threaded engine (`alltoallv_fused_threaded`) spawns a *scoped* helper
+//! per exchange so it can borrow the plan's tensors directly. This module
+//! is the `'static` variant for work that outlives any one call: jobs own
+//! their data (buffers move through the channel) and the thread persists
+//! across flushes so steady state spawns nothing.
+//!
+//! Channel contract: `submit` enqueues a boxed `FnOnce`; the worker runs
+//! jobs strictly in submission order (mpsc FIFO), so a later harvest
+//! observes every effect of earlier jobs once its own job's completion is
+//! observed. Shutdown is drop-driven: dropping the `Worker` closes the
+//! channel, the thread drains what is queued and exits, and the `Drop`
+//! impl joins it — no sentinel messages, no leaked threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A unit of work shipped to the worker thread. Jobs own everything they
+/// touch; results travel back through whatever channel the job captured.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent helper thread consuming [`Job`]s from an mpsc queue.
+///
+/// One `Worker` per driver; jobs run in submission order; dropping the
+/// worker shuts the thread down cleanly (close channel → drain → join).
+pub struct Worker {
+    /// `Some` while the thread is accepting work; taken on drop so the
+    /// channel closes and the receive loop ends.
+    tx: Option<mpsc::Sender<Job>>,
+    /// `Some` until joined on drop.
+    handle: Option<JoinHandle<()>>,
+    /// Nanoseconds the thread has spent inside jobs, accumulated across
+    /// the worker's lifetime. Written by the worker, read by harvesters.
+    busy_ns: Arc<AtomicU64>,
+}
+
+impl Worker {
+    /// Spawn the helper thread. The thread blocks in `recv` while idle
+    /// (no spinning) and exits when the `Worker` is dropped.
+    pub fn spawn() -> Worker {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let busy_ns = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let busy_ns = Arc::clone(&busy_ns);
+            std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    job();
+                    // Relaxed: `busy_ns` is a monotone reporting tally read
+                    // for trace attribution only; the job's *effects* are
+                    // ordered by the response channel the job itself
+                    // signals on, never by this counter.
+                    busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            })
+        };
+        Worker { tx: Some(tx), handle: Some(handle), busy_ns }
+    }
+
+    /// Enqueue `job` for execution on the worker thread. Jobs run in
+    /// submission order.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        if let Some(tx) = &self.tx {
+            // The receiver lives for as long as `tx` is `Some` (the thread
+            // only exits once the sender drops), so this send cannot fail;
+            // swallow the theoretical error rather than panic in a
+            // library path.
+            let _ = tx.send(Box::new(job));
+        }
+    }
+
+    /// Nanoseconds the worker has spent executing jobs so far.
+    pub fn busy_ns(&self) -> u64 {
+        // Relaxed: see the comment at the `busy_ns` fetch_add — a
+        // monotone reporting tally, not a synchronization edge.
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        // Close the channel first so the receive loop sees `Err` and
+        // returns after draining queued jobs...
+        drop(self.tx.take());
+        // ...then join so no job outlives the owner's borrow horizon.
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::arena::BufferArena;
+    use std::sync::mpsc::channel;
+
+    /// A buffer handed off through the job channel is filled by the worker
+    /// and comes back intact through a response channel — the exact
+    /// ownership dance the driver's pipeline tail uses (buffers move, no
+    /// shared mutation).
+    #[test]
+    fn channel_handoff_round_trips_a_buffer() {
+        let arena = BufferArena::new();
+        let mut buf = arena.checkout(64);
+        buf.extend_from_slice(&[0xAB; 64]);
+        let w = Worker::spawn();
+        let (tx, rx) = channel();
+        w.submit(move || {
+            let ok = buf.as_slice().iter().all(|&b| b == 0xAB);
+            let _ = tx.send((ok, buf));
+        });
+        let (ok, buf) = rx.recv().expect("worker must run the job");
+        assert!(ok, "worker saw the bytes the submitter wrote");
+        arena.recycle(buf);
+        let (minted, _reused) = arena.stats();
+        assert_eq!(minted, 1, "the handoff moves one buffer, mints nothing");
+    }
+
+    /// Jobs run in submission order (mpsc FIFO): a later job observes every
+    /// effect of earlier ones.
+    #[test]
+    fn jobs_run_in_submission_order() {
+        let w = Worker::spawn();
+        let (tx, rx) = channel();
+        for i in 0..16u32 {
+            let tx = tx.clone();
+            w.submit(move || {
+                let _ = tx.send(i);
+            });
+        }
+        let got: Vec<u32> = (0..16).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, (0..16).collect::<Vec<u32>>());
+    }
+
+    /// Dropping the worker drains queued jobs, then joins the thread:
+    /// every submitted job runs exactly once, and drop returns (join
+    /// completes) rather than leaking the thread.
+    #[test]
+    fn shutdown_on_drop_drains_then_joins() {
+        let (tx, rx) = channel();
+        {
+            let w = Worker::spawn();
+            for i in 0..8u32 {
+                let tx = tx.clone();
+                w.submit(move || {
+                    let _ = tx.send(i);
+                });
+            }
+            // `w` drops here: channel closes, queued jobs drain, join.
+        }
+        drop(tx);
+        let got: Vec<u32> = rx.iter().collect();
+        assert_eq!(got, (0..8).collect::<Vec<u32>>(), "drop drained the queue");
+    }
+
+    /// `busy_ns` accumulates monotonically once jobs have run.
+    #[test]
+    fn busy_ns_accumulates() {
+        let w = Worker::spawn();
+        let (tx, rx) = channel();
+        w.submit(move || {
+            // Enough work that even a coarse clock ticks.
+            let mut acc = 0u64;
+            for i in 0..200_000u64 {
+                acc = acc.wrapping_add(i.wrapping_mul(2654435761));
+            }
+            let _ = tx.send(acc);
+        });
+        let _ = rx.recv().unwrap();
+        // The job has signalled completion, so its busy time is recorded.
+        assert!(w.busy_ns() > 0, "worker recorded busy time");
+    }
+}

@@ -8,8 +8,8 @@
 //! results are handed back per job.
 //!
 //! Plans are drawn from a per-driver [`PlanCache`] keyed by
-//! `(shape, nb, window)` (direction-agnostic: one slab-pencil plan serves
-//! both directions): the first flush of a given batch size
+//! `(shape, nb, window, worker)` (direction-agnostic: one slab-pencil plan
+//! serves both directions): the first flush of a given batch size
 //! plans and warms a workspace, every later flush reuses both. The
 //! exchange window is either fixed at construction
 //! ([`BatchingDriver::with_tuning`]) or resolved per batch size through
@@ -25,10 +25,30 @@
 //! recycled as the next flush's block. Results accumulate until the caller
 //! collects them with [`BatchingDriver::drain_completed`] (and traces with
 //! [`BatchingDriver::drain_traces`]).
+//!
+//! ## The two-deep pipeline
+//!
+//! [`BatchingDriver::with_pipeline_depth`] at depth 2 gives the driver a
+//! persistent helper thread ([`Worker`]): each flush's de-interleave tail
+//! (batched output → per-job result vectors) is shipped to the worker,
+//! which runs it while the *next* flush's interleave and exchange occupy
+//! the main thread. The tail owns its data outright (the batch output and
+//! the jobs move through the channel) and signals completion on a response
+//! channel, so there is no shared mutation; interleave blocks are
+//! double-buffered (one riding the worker, one on the main thread) and the
+//! pool never grows past two. Harvesting is deferred to the latest safe
+//! point — the next flush (after its execute), a drain, or a pool-empty
+//! checkout — and folds the worker's time into that flush's trace as
+//! `worker_busy_ns` / `pipeline_overlap_ns`. Depth 1 (the default) runs
+//! the identical tail code inline; the two depths are bit-identical by
+//! construction.
 
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::comm::alltoall::CommTuning;
+use crate::comm::worker::Worker;
 use crate::fft::complex::{Complex, ZERO};
 use crate::fft::dft::Direction;
 use crate::fftb::backend::LocalFftBackend;
@@ -49,6 +69,30 @@ pub struct TransformJob {
     pub dir: Direction,
 }
 
+/// A flush's deferred de-interleave tail, in flight on the worker thread.
+struct PendingTail {
+    /// Completion channel: the de-interleaved jobs (results in their own
+    /// vectors), the batch-output block for the pool, and the tail's
+    /// elapsed nanoseconds.
+    rx: mpsc::Receiver<(Vec<TransformJob>, Vec<Complex>, u64)>,
+    /// Index into `traces` of the flush this tail belongs to (valid until
+    /// `drain_traces`, which harvests first).
+    trace_idx: usize,
+}
+
+/// De-interleave the batch-fastest output block back into each job's own
+/// vector — the submitted storage becomes the result storage, so the tail
+/// mints no per-band vectors. Shared verbatim by the inline (depth-1) and
+/// worker (depth-2) tails, so the two pipeline depths are bit-identical by
+/// construction.
+fn deinterleave_into_jobs(out: &[Complex], nb: usize, jobs: &mut [TransformJob]) {
+    let out_per_band = out.len() / nb;
+    for (b, job) in jobs.iter_mut().enumerate() {
+        job.data.clear();
+        job.data.extend((0..out_per_band).map(|e| out[b + nb * e]));
+    }
+}
+
 /// Collects jobs and executes them as one batched transform per direction.
 pub struct BatchingDriver {
     shape: [usize; 3],
@@ -65,10 +109,25 @@ pub struct BatchingDriver {
     /// Reusable flush scratch: jobs taken this flush / jobs kept queued.
     take_buf: Vec<TransformJob>,
     keep_buf: Vec<TransformJob>,
-    /// Reusable interleave block (recycled from the previous flush output).
-    block: Vec<Complex>,
-    /// Memoized plans, keyed by `(comm_id, shape, nb, window)`; see
-    /// `plan_for` for why the key is direction-agnostic.
+    /// Spare job vector cycling through the worker tail at depth 2, so the
+    /// handoff swaps vectors instead of minting one per flush.
+    spare_jobs: Vec<TransformJob>,
+    /// Reusable interleave blocks (recycled from previous flush outputs).
+    /// Depth 1 cycles one block; depth 2 double-buffers (one riding the
+    /// worker tail, one interleaving) and never holds more than two.
+    block_pool: Vec<Vec<Complex>>,
+    /// How many blocks the pool has ever minted — past two, an empty pool
+    /// harvests the in-flight tail instead of allocating a third.
+    blocks_minted: usize,
+    /// Software-pipeline depth: 1 = synchronous tail (default), 2 = the
+    /// tail runs on `worker` concurrently with the next flush's exchange.
+    pipeline_depth: usize,
+    /// The persistent helper thread (spawned at depth 2).
+    worker: Option<Worker>,
+    /// The previous flush's tail, if still in flight on the worker.
+    pending_tail: Option<PendingTail>,
+    /// Memoized plans, keyed by `(comm_id, shape, nb, window, worker)`;
+    /// see `plan_for` for why the key is direction-agnostic.
     cache: PlanCache,
     /// Completed results by job id (collect with `drain_completed`).
     pub completed: Vec<(u64, Vec<Complex>)>,
@@ -96,11 +155,35 @@ impl BatchingDriver {
             queue: Vec::new(),
             take_buf: Vec::new(),
             keep_buf: Vec::new(),
-            block: Vec::new(),
+            spare_jobs: Vec::new(),
+            block_pool: Vec::new(),
+            blocks_minted: 0,
+            pipeline_depth: 1,
+            worker: None,
+            pending_tail: None,
             cache: PlanCache::new(),
             completed: Vec::new(),
             traces: Vec::new(),
         }
+    }
+
+    /// Set the software-pipeline depth: `1` (the default) runs each
+    /// flush's de-interleave tail inline; `2` spawns the persistent
+    /// [`Worker`] and ships the tail to it, overlapping it with the next
+    /// flush's interleave + exchange. Results are identical bit-for-bit —
+    /// only the schedule changes.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
+        assert!((1..=2).contains(&depth), "pipeline depth must be 1 or 2, got {depth}");
+        self.pipeline_depth = depth;
+        if depth >= 2 && self.worker.is_none() {
+            self.worker = Some(Worker::spawn());
+        }
+        self
+    }
+
+    /// The configured software-pipeline depth (1 or 2).
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
     }
 
     /// A driver that resolves its exchange window through the tuner's cost
@@ -153,14 +236,59 @@ impl BatchingDriver {
 
     /// Take all completed `(id, result)` pairs, leaving the driver's
     /// completed list empty — call after each flush round so results do
-    /// not accumulate unboundedly across an SCF run.
+    /// not accumulate unboundedly across an SCF run. Harvests any
+    /// in-flight pipeline tail first, so the last flush's results are
+    /// always included and the list stays FIFO in submission order.
     pub fn drain_completed(&mut self) -> Vec<(u64, Vec<Complex>)> {
+        self.harvest_pending();
         std::mem::take(&mut self.completed)
     }
 
-    /// Take all flush traces accumulated since the last drain.
+    /// Take all flush traces accumulated since the last drain. Harvests
+    /// any in-flight pipeline tail first, so every returned trace carries
+    /// its final `worker_busy_ns` / `pipeline_overlap_ns`.
     pub fn drain_traces(&mut self) -> Vec<ExecTrace> {
+        self.harvest_pending();
         std::mem::take(&mut self.traces)
+    }
+
+    /// Complete the previous flush's deferred tail, if one is in flight:
+    /// block until the worker signals, move its results into `completed`
+    /// (FIFO across flushes), return its buffers to the pools, and fold
+    /// the worker's time into that flush's trace.
+    fn harvest_pending(&mut self) {
+        if let Some(tail) = self.pending_tail.take() {
+            if let Ok((mut jobs, out, busy_ns)) = tail.rx.recv() {
+                for job in jobs.drain(..) {
+                    self.completed.push((job.id, job.data));
+                }
+                self.spare_jobs = jobs;
+                self.block_pool.push(out);
+                if let Some(tr) = self.traces.get_mut(tail.trace_idx) {
+                    tr.worker_busy_ns += busy_ns;
+                    tr.pipeline_overlap_ns += busy_ns;
+                }
+            }
+        }
+    }
+
+    /// Grab an interleave block. The pool is double-buffered: at depth 2
+    /// one block rides the worker tail while the next flush interleaves
+    /// into the other. Once two blocks exist, an empty pool harvests the
+    /// in-flight tail (blocking) instead of minting a third, so steady
+    /// state allocates nothing.
+    fn checkout_block(&mut self) -> Vec<Complex> {
+        if let Some(b) = self.block_pool.pop() {
+            return b;
+        }
+        if self.pending_tail.is_some() && self.blocks_minted >= 2 {
+            self.harvest_pending();
+            if let Some(b) = self.block_pool.pop() {
+                return b;
+            }
+        }
+        self.blocks_minted += 1;
+        Vec::new()
     }
 
     /// Fetch (or build and cache) the batched plan for `nb` bands. The key
@@ -180,15 +308,17 @@ impl BatchingDriver {
             nb,
             dir: None,
             window,
+            worker: self.tuning.worker,
         };
         let (shape, grid) = (self.shape, Arc::clone(&self.grid));
+        let worker = self.tuning.worker;
         self.cache.get_or_insert(key, || {
             let mut fx = Fftb {
                 kind: PlanKind::SlabPencil(SlabPencilPlan::new(shape, nb, grid)?),
                 sizes: shape,
                 nb,
             };
-            fx.set_comm_tuning(CommTuning::with_window(window));
+            fx.set_comm_tuning(CommTuning::with_window(window).with_worker(worker));
             Ok(fx)
         })
     }
@@ -223,10 +353,10 @@ impl BatchingDriver {
             Direction::Inverse => plan.output_len() / nb,
         };
 
-        // Interleave bands (batch fastest) into the reusable block. No
-        // clear first: the loop below writes every element, so stale
-        // contents never survive and the resize avoids a redundant memset.
-        let mut block = std::mem::take(&mut self.block);
+        // Interleave bands (batch fastest) into a pooled block. No clear
+        // first: the loop below writes every element, so stale contents
+        // never survive and the resize avoids a redundant memset.
+        let mut block = self.checkout_block();
         block.resize(nb * per_band, ZERO);
         for (b, job) in self.take_buf.iter().enumerate() {
             assert_eq!(job.data.len(), per_band, "job {b} has wrong local length");
@@ -237,18 +367,36 @@ impl BatchingDriver {
         let (out, mut trace) = plan.execute(backend, block, dir);
         trace.plan_cache_hit = cache_hit;
         self.traces.push(trace);
+        // The previous flush's tail has had this whole execute to finish
+        // on the worker; harvest it now so `completed` stays FIFO across
+        // flushes before this flush's results are (eventually) appended.
+        self.harvest_pending();
 
-        // De-interleave each band back into its own job's vector — the
-        // submitted storage becomes the result storage, so the flush path
-        // mints no per-band vectors.
-        let out_per_band = out.len() / nb;
-        for (b, mut job) in self.take_buf.drain(..).enumerate() {
-            job.data.clear();
-            job.data.extend((0..out_per_band).map(|e| out[b + nb * e]));
-            self.completed.push((job.id, job.data));
+        if self.pipeline_depth >= 2 && self.worker.is_some() {
+            // Defer this flush's de-interleave to the worker: jobs and the
+            // batch output move into the closure outright, results travel
+            // back through the response channel at the next harvest point.
+            let mut jobs =
+                std::mem::replace(&mut self.take_buf, std::mem::take(&mut self.spare_jobs));
+            let (tx, rx) = mpsc::channel();
+            let trace_idx = self.traces.len() - 1;
+            if let Some(worker) = &self.worker {
+                worker.submit(move || {
+                    let t0 = Instant::now();
+                    deinterleave_into_jobs(&out, nb, &mut jobs);
+                    let _ = tx.send((jobs, out, t0.elapsed().as_nanos() as u64));
+                });
+            }
+            self.pending_tail = Some(PendingTail { rx, trace_idx });
+        } else {
+            // Depth 1: the identical tail, inline. The batch output
+            // becomes a future flush's interleave block.
+            deinterleave_into_jobs(&out, nb, &mut self.take_buf);
+            for job in self.take_buf.drain(..) {
+                self.completed.push((job.id, job.data));
+            }
+            self.block_pool.push(out);
         }
-        // The batch output becomes the next flush's interleave block.
-        self.block = out;
         nb
     }
 }
@@ -441,6 +589,94 @@ mod tests {
         for (hits, misses) in outs {
             assert_eq!((hits, misses), (1, 1), "second flush must reuse the plan");
         }
+    }
+
+    #[test]
+    fn pipeline_depth_two_matches_depth_one_bitwise() {
+        let shape = [8usize, 8, 8];
+        let p = 2;
+        run_world(p, |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut d1 = BatchingDriver::new(shape, Arc::clone(&grid));
+            let mut d2 = BatchingDriver::new(shape, Arc::clone(&grid)).with_pipeline_depth(2);
+            assert_eq!(d1.pipeline_depth(), 1);
+            assert_eq!(d2.pipeline_depth(), 2);
+
+            let mut run = |driver: &mut BatchingDriver| {
+                let mut got = Vec::new();
+                for round in 0..3u64 {
+                    for i in 0..3u64 {
+                        let g = phased(512, round * 10 + i);
+                        driver.submit(TransformJob {
+                            id: round * 10 + i,
+                            data: scatter_cube_x(&g, 1, shape, p, grid.rank()),
+                            dir: Direction::Forward,
+                        });
+                    }
+                    assert_eq!(driver.flush(&backend, Direction::Forward), 3);
+                    // Depth 2 leaves the tail in flight here; the drain
+                    // must harvest it before returning results.
+                    got.extend(driver.drain_completed());
+                }
+                got
+            };
+            let r1 = run(&mut d1);
+            let r2 = run(&mut d2);
+            assert_eq!(r1.len(), 9);
+            assert_eq!(r2.len(), 9);
+            for ((id1, v1), (id2, v2)) in r1.iter().zip(&r2) {
+                assert_eq!(id1, id2, "pipelining must not reorder results");
+                assert_eq!(v1.len(), v2.len());
+                for (a, b) in v1.iter().zip(v2) {
+                    assert_eq!(a.re.to_bits(), b.re.to_bits());
+                    assert_eq!(a.im.to_bits(), b.im.to_bits());
+                }
+            }
+            // Harvest attributed the worker's time to the flush traces,
+            // and the overlap tally is exactly the worker's busy time
+            // (the exchange-level worker is off in this tuning).
+            for tr in d2.drain_traces() {
+                assert_eq!(tr.worker_busy_ns, tr.pipeline_overlap_ns);
+            }
+            assert!(d2.blocks_minted <= 2, "block pool must stay double-buffered");
+        });
+    }
+
+    #[test]
+    fn depth_two_double_buffers_without_intermediate_drains() {
+        let shape = [4usize, 4, 4];
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver =
+                BatchingDriver::new(shape, Arc::clone(&grid)).with_pipeline_depth(2);
+            // Four back-to-back flushes with no drain in between: each
+            // flush's execute overlaps the previous flush's tail.
+            for round in 0..4u64 {
+                for i in 0..2u64 {
+                    driver.submit(TransformJob {
+                        id: round * 2 + i,
+                        data: phased(64, round * 2 + i),
+                        dir: Direction::Forward,
+                    });
+                }
+                assert_eq!(driver.flush(&backend, Direction::Forward), 2);
+            }
+            let got = driver.drain_completed();
+            let ids: Vec<u64> = got.iter().map(|(id, _)| *id).collect();
+            assert_eq!(ids, (0..8).collect::<Vec<u64>>(), "FIFO across pipelined flushes");
+            assert_eq!(driver.blocks_minted, 2, "exactly two interleave blocks circulate");
+            let traces = driver.drain_traces();
+            assert_eq!(traces.len(), 4);
+            for (round, tr) in traces.iter().enumerate() {
+                assert_eq!(tr.worker_busy_ns, tr.pipeline_overlap_ns);
+                if round > 0 {
+                    assert!(tr.plan_cache_hit, "round {round} must reuse the plan");
+                    assert_eq!(tr.alloc_bytes, 0, "round {round} must stay warm");
+                }
+            }
+        });
     }
 
     #[test]

@@ -43,6 +43,8 @@ fn accumulate(total: &mut ExecTrace, it: ExecTrace) {
     total.overlap_rounds += it.overlap_rounds;
     total.pack_overlap_ns += it.pack_overlap_ns;
     total.unpack_overlap_ns += it.unpack_overlap_ns;
+    total.worker_busy_ns += it.worker_busy_ns;
+    total.pipeline_overlap_ns += it.pipeline_overlap_ns;
     if total.stages.is_empty() {
         total.stages = it.stages;
     } else {

@@ -158,7 +158,10 @@ impl Fftb {
         let mut fx = Self::plan_inner(sizes, output, out_dims, input, in_dims, grid, opts)?;
         let tuning = if opts.auto_window {
             let m = crate::model::Machine::local_cpu();
+            // Auto-resolution picks the window only; the caller's worker
+            // choice rides along unchanged.
             CommTuning::with_window(crate::tuner::search::auto_window_for(&fx, &m))
+                .with_worker(opts.comm.worker)
         } else {
             opts.comm
         };

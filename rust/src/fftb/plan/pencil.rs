@@ -39,7 +39,7 @@ use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 
 use super::redistribute::{volume, A2aSchedule, Shape4, SplitMergeKernel};
-use super::stages::{fused_exchange, ExecTrace, StageTimer};
+use super::stages::{ExecTrace, StageTimer};
 use super::workspace::{SlotPool, Workspace};
 
 /// Batched pencil-decomposition 3D FFT plan on a 2D grid.
@@ -183,18 +183,9 @@ impl PencilPlan {
     ) {
         t.comm_a2a(name, || {
             let mut out = slots.take(volume(sh_dst), alloc);
-            let c = {
-                let mut k = SplitMergeKernel::new(
-                    sched,
-                    &data[..],
-                    sh_src,
-                    dim_src,
-                    &mut out,
-                    sh_dst,
-                    dim_dst,
-                );
-                fused_exchange(comm, &mut k, tuning)
-            };
+            let c =
+                SplitMergeKernel::new(sched, &data[..], sh_src, dim_src, &mut out, sh_dst, dim_dst)
+                    .exchange(comm, tuning);
             slots.recycle(std::mem::replace(data, out));
             ((), sched.bytes_remote(), sched.msgs(), c)
         });

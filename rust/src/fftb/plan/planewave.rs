@@ -37,8 +37,11 @@
 use std::cell::Cell;
 use std::sync::{Arc, Mutex};
 
-use crate::comm::alltoall::CommTuning;
+use crate::comm::alltoall::{
+    alltoallv_fused_threaded, CommTuning, PackHalf, UnpackHalf,
+};
 use crate::comm::arena::WireBuf;
+use crate::comm::communicator::Comm;
 use crate::fft::complex::{self, Complex};
 use crate::fft::dft::Direction;
 use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
@@ -82,6 +85,94 @@ pub struct PlaneWavePlan {
     ws: Mutex<Workspace>,
 }
 
+/// Pack destination `s`'s z-residues of the dense z-columns `[nb, nz,
+/// ncols]`: for each column, each `lz` with `gz = lz*p + s`, one `nb`-run.
+/// Shared by the fused forward kernel and its threaded pack half, so both
+/// engines produce identical wire bytes.
+fn pack_col_residues(
+    work: &[Complex],
+    nb: usize,
+    nz: usize,
+    ncols: usize,
+    p: usize,
+    s: usize,
+    out: &mut WireBuf,
+) {
+    let lzc_s = cyclic::local_count(nz, p, s);
+    for c in 0..ncols {
+        let base = c * nb * nz;
+        for lz in 0..lzc_s {
+            let gz = cyclic::local_to_global(lz, p, s);
+            let src = base + nb * gz;
+            out.extend_from_slice(complex::as_bytes(&work[src..src + nb]));
+        }
+    }
+}
+
+/// Merge source rank's z-residue block back into the dense z-columns —
+/// the exact inverse walk of [`pack_col_residues`].
+fn unpack_col_residues(
+    block: &[u8],
+    nb: usize,
+    nz: usize,
+    ncols: usize,
+    p: usize,
+    s: usize,
+    work: &mut [Complex],
+) {
+    let lzc_s = cyclic::local_count(nz, p, s);
+    let mut src = 0usize;
+    for c in 0..ncols {
+        let base = c * nb * nz;
+        for lz in 0..lzc_s {
+            let gz = cyclic::local_to_global(lz, p, s);
+            let dst = base + nb * gz;
+            complex::copy_from_bytes(&block[src..src + nb * ELEM], &mut work[dst..dst + nb]);
+            src += nb * ELEM;
+        }
+    }
+}
+
+/// Land one source rank's disc columns (this rank's z-slab share) in the
+/// `[nb, nx, ny, lzc]` cube, in that rank's packing order.
+fn unpack_cols_into_cube(
+    block: &[u8],
+    cols: &[(usize, usize)],
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    cube: &mut [Complex],
+) {
+    let mut src = 0usize;
+    for &(gx, y) in cols {
+        for lz in 0..lzc {
+            let dst = nb * (gx + nx * (y + ny * lz));
+            complex::copy_from_bytes(&block[src..src + nb * ELEM], &mut cube[dst..dst + nb]);
+            src += nb * ELEM;
+        }
+    }
+}
+
+/// Gather one destination rank's disc columns out of the cube — the exact
+/// inverse walk of [`unpack_cols_into_cube`].
+fn pack_cols_from_cube(
+    cube: &[Complex],
+    cols: &[(usize, usize)],
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    out: &mut WireBuf,
+) {
+    for &(gx, y) in cols {
+        for lz in 0..lzc {
+            let src = nb * (gx + nx * (y + ny * lz));
+            out.extend_from_slice(complex::as_bytes(&cube[src..src + nb]));
+        }
+    }
+}
+
 /// Fused pack/unpack movers of the forward sphere exchange (`G`-sphere →
 /// `r`-cube): destination `s`'s z-residues are packed straight from the
 /// dense z-columns as round `s` posts, and each source rank's disc columns
@@ -104,33 +195,14 @@ impl PackKernel for SphereFwdKernel<'_> {
     }
 
     fn pack(&mut self, s: usize, out: &mut WireBuf) {
-        let p = self.plan.p();
         let (nb, nz) = (self.plan.nb, self.plan.offsets.nz);
-        let lzc_s = cyclic::local_count(nz, p, s);
-        for c in 0..self.plan.ncols {
-            let base = c * nb * nz;
-            for lz in 0..lzc_s {
-                let gz = cyclic::local_to_global(lz, p, s);
-                let src = base + nb * gz;
-                out.extend_from_slice(complex::as_bytes(&self.work[src..src + nb]));
-            }
-        }
+        pack_col_residues(self.work, nb, nz, self.plan.ncols, self.plan.p(), s, out);
     }
 
     fn unpack(&mut self, q: usize, block: &[u8]) {
         let (nb, nx, ny) = (self.plan.nb, self.plan.offsets.nx, self.plan.offsets.ny);
-        let lzc = self.plan.lzc;
-        let mut src = 0usize;
-        for &(gx, y) in &self.plan.cols_by_rank[q] {
-            for lz in 0..lzc {
-                let dst = nb * (gx + nx * (y + ny * lz));
-                complex::copy_from_bytes(
-                    &block[src..src + nb * ELEM],
-                    &mut self.cube[dst..dst + nb],
-                );
-                src += nb * ELEM;
-            }
-        }
+        let cols = &self.plan.cols_by_rank[q];
+        unpack_cols_into_cube(block, cols, nb, nx, ny, self.plan.lzc, self.cube);
     }
 }
 
@@ -157,33 +229,118 @@ impl PackKernel for SphereInvKernel<'_> {
 
     fn pack(&mut self, q: usize, out: &mut WireBuf) {
         let (nb, nx, ny) = (self.plan.nb, self.plan.offsets.nx, self.plan.offsets.ny);
-        let lzc = self.plan.lzc;
-        for &(gx, y) in &self.plan.cols_by_rank[q] {
-            for lz in 0..lzc {
-                let src = nb * (gx + nx * (y + ny * lz));
-                out.extend_from_slice(complex::as_bytes(&self.cube[src..src + nb]));
-            }
-        }
+        let cols = &self.plan.cols_by_rank[q];
+        pack_cols_from_cube(self.cube, cols, nb, nx, ny, self.plan.lzc, out);
     }
 
     fn unpack(&mut self, s: usize, block: &[u8]) {
-        let p = self.plan.p();
         let (nb, nz) = (self.plan.nb, self.plan.offsets.nz);
-        let lzc_s = cyclic::local_count(nz, p, s);
-        let mut src = 0usize;
-        for c in 0..self.plan.ncols {
-            let base = c * nb * nz;
-            for lz in 0..lzc_s {
-                let gz = cyclic::local_to_global(lz, p, s);
-                let dst = base + nb * gz;
-                complex::copy_from_bytes(
-                    &block[src..src + nb * ELEM],
-                    &mut self.work[dst..dst + nb],
-                );
-                src += nb * ELEM;
-            }
-        }
+        unpack_col_residues(block, nb, nz, self.plan.ncols, self.plan.p(), s, self.work);
     }
+}
+
+/// Read-only pack half of the forward sphere exchange for the threaded
+/// engine: plain borrowed data (counts, geometry, the dense columns), so
+/// the helper thread shares only `Sync` slices — never the plan itself.
+struct SphereFwdPackHalf<'a> {
+    counts: &'a [usize],
+    nb: usize,
+    nz: usize,
+    ncols: usize,
+    p: usize,
+    work: &'a [Complex],
+}
+
+impl PackHalf for SphereFwdPackHalf<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.counts[dest] * ELEM
+    }
+
+    fn pack(&self, s: usize, out: &mut WireBuf) {
+        pack_col_residues(self.work, self.nb, self.nz, self.ncols, self.p, s, out);
+    }
+}
+
+/// Write-only unpack half of the forward sphere exchange: exclusively
+/// owns the output cube while the pack half is shared with the helper.
+struct SphereFwdUnpackHalf<'a> {
+    counts: &'a [usize],
+    cols_by_rank: &'a [Vec<(usize, usize)>],
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    cube: &'a mut [Complex],
+}
+
+impl UnpackHalf for SphereFwdUnpackHalf<'_> {
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.counts[src] * ELEM
+    }
+
+    fn unpack(&mut self, q: usize, block: &[u8]) {
+        let cols = &self.cols_by_rank[q];
+        unpack_cols_into_cube(block, cols, self.nb, self.nx, self.ny, self.lzc, self.cube);
+    }
+}
+
+/// Read-only pack half of the inverse sphere exchange (gathers disc
+/// columns from the shared cube).
+struct SphereInvPackHalf<'a> {
+    counts: &'a [usize],
+    cols_by_rank: &'a [Vec<(usize, usize)>],
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    cube: &'a [Complex],
+}
+
+impl PackHalf for SphereInvPackHalf<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.counts[dest] * ELEM
+    }
+
+    fn pack(&self, q: usize, out: &mut WireBuf) {
+        let cols = &self.cols_by_rank[q];
+        pack_cols_from_cube(self.cube, cols, self.nb, self.nx, self.ny, self.lzc, out);
+    }
+}
+
+/// Write-only unpack half of the inverse sphere exchange (merges
+/// z-residues into the exclusively-owned dense columns).
+struct SphereInvUnpackHalf<'a> {
+    counts: &'a [usize],
+    nb: usize,
+    nz: usize,
+    ncols: usize,
+    p: usize,
+    work: &'a mut [Complex],
+}
+
+impl UnpackHalf for SphereInvUnpackHalf<'_> {
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.counts[src] * ELEM
+    }
+
+    fn unpack(&mut self, s: usize, block: &[u8]) {
+        unpack_col_residues(block, self.nb, self.nz, self.ncols, self.p, s, self.work);
+    }
+}
+
+/// Stage the self block through an arena wire buffer (pack → unpack),
+/// exactly as the single-threaded engine does internally — the sphere
+/// movers have no direct src→dst self move, so worker mode reproduces the
+/// staged bytes before handing the remote rounds to the threaded engine.
+fn stage_self_block(comm: &Comm, pack: &dyn PackHalf, unpack: &mut dyn UnpackHalf) {
+    let me = comm.rank();
+    let n = pack.send_bytes(me);
+    assert_eq!(n, unpack.recv_bytes(me), "alltoall: self block extents disagree");
+    let mut buf = comm.arena().checkout(n);
+    pack.pack(me, &mut buf);
+    assert_eq!(buf.len(), n, "alltoall: self pack wrote unexpected byte count");
+    unpack.unpack(me, &buf);
+    comm.arena().recycle(buf);
 }
 
 impl PlaneWavePlan {
@@ -390,7 +547,27 @@ impl PlaneWavePlan {
         //    into its wire buffer as round s posts; each rank's columns
         //    land in the slab as that round's wait completes.
         t.comm_a2a("a2a_sphere", || {
-            let c = {
+            let c = if self.tuning.worker {
+                let pack = SphereFwdPackHalf {
+                    counts: &self.fwd.send_counts,
+                    nb,
+                    nz,
+                    ncols,
+                    p: self.p(),
+                    work: &work[..],
+                };
+                let mut unpack = SphereFwdUnpackHalf {
+                    counts: &self.fwd.recv_counts,
+                    cols_by_rank: &self.cols_by_rank,
+                    nb,
+                    nx,
+                    ny,
+                    lzc,
+                    cube: &mut cube[..],
+                };
+                stage_self_block(comm, &pack, &mut unpack);
+                alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
+            } else {
                 let mut k = SphereFwdKernel { plan: self, work: &work[..], cube: &mut cube[..] };
                 fused_exchange(comm, &mut k, self.tuning)
             };
@@ -477,7 +654,27 @@ impl PlaneWavePlan {
         //    gathered from the cube as that round posts; each rank's
         //    z-residues merge into the dense columns as its wait completes.
         t.comm_a2a("a2a_sphere", || {
-            let c = {
+            let c = if self.tuning.worker {
+                let pack = SphereInvPackHalf {
+                    counts: &self.inv.send_counts,
+                    cols_by_rank: &self.cols_by_rank,
+                    nb,
+                    nx,
+                    ny,
+                    lzc,
+                    cube: &cube[..],
+                };
+                let mut unpack = SphereInvUnpackHalf {
+                    counts: &self.inv.recv_counts,
+                    nb,
+                    nz,
+                    ncols,
+                    p: self.p(),
+                    work: &mut work[..],
+                };
+                stage_self_block(comm, &pack, &mut unpack);
+                alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
+            } else {
                 let mut k = SphereInvKernel { plan: self, cube: &cube[..], work: &mut work[..] };
                 fused_exchange(comm, &mut k, self.tuning)
             };
@@ -629,6 +826,8 @@ impl PaddedSpherePlan {
         trace.overlap_rounds += slab_trace.overlap_rounds;
         trace.pack_overlap_ns += slab_trace.pack_overlap_ns;
         trace.unpack_overlap_ns += slab_trace.unpack_overlap_ns;
+        trace.worker_busy_ns += slab_trace.worker_busy_ns;
+        trace.pipeline_overlap_ns += slab_trace.pipeline_overlap_ns;
         trace.stages.extend(slab_trace.stages);
         (out, trace)
     }

@@ -25,11 +25,15 @@
 //! batching directly increases the contiguity of every pack/unpack — the
 //! mechanical reason batched transforms win in Fig. 9.
 
+use crate::comm::alltoall::{
+    alltoallv_fused_threaded, A2aCounters, CommTuning, PackHalf, UnpackHalf,
+};
 use crate::comm::arena::WireBuf;
+use crate::comm::communicator::Comm;
 use crate::fft::complex::{self, Complex, ZERO};
 use crate::fftb::grid::cyclic;
 
-use super::stages::PackKernel;
+use super::stages::{fused_exchange, PackKernel};
 
 /// Bytes per complex element on the wire.
 const ELEM: usize = std::mem::size_of::<Complex>();
@@ -456,6 +460,93 @@ pub fn unpack_block_bytes(
     }
 }
 
+/// Cursor over the contiguous element runs of one residue block, in
+/// canonical block order — the run geometry of [`pack_block_bytes`] /
+/// [`unpack_block_bytes`] (planes for dim 3, rows for dim 2, `nb`-runs
+/// for dim 1) expressed as an iterator of `(start_elem, len)` pairs.
+/// Pairing a source walker with a destination walker lets the self block
+/// stream src→dst directly, with no wire-buffer staging and no byte
+/// reinterpretation.
+struct RunWalker {
+    sh: Shape4,
+    dim: usize,
+    p: usize,
+    r: usize,
+    i1: usize,
+    i2: usize,
+    i3: usize,
+}
+
+impl RunWalker {
+    fn new(sh: Shape4, dim: usize, p: usize, r: usize) -> Self {
+        assert!((1..=3).contains(&dim));
+        assert!(r < p);
+        RunWalker {
+            sh,
+            dim,
+            p,
+            r,
+            i1: r,
+            i2: if dim == 2 { r } else { 0 },
+            i3: if dim == 3 { r } else { 0 },
+        }
+    }
+}
+
+impl Iterator for RunWalker {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        let [nb, d1, d2, d3] = self.sh;
+        match self.dim {
+            // Whole contiguous planes, stride p along dim 3.
+            3 => {
+                if self.i3 >= d3 {
+                    return None;
+                }
+                let plane = nb * d1 * d2;
+                let run = (self.i3 * plane, plane);
+                self.i3 += self.p;
+                Some(run)
+            }
+            // Whole contiguous rows of nb*d1 elements.
+            2 => {
+                let row = nb * d1;
+                loop {
+                    if self.i3 >= d3 {
+                        return None;
+                    }
+                    if self.i2 < d2 {
+                        let run = (row * (self.i2 + d2 * self.i3), row);
+                        self.i2 += self.p;
+                        return Some(run);
+                    }
+                    self.i2 = self.r;
+                    self.i3 += 1;
+                }
+            }
+            // nb-contiguous runs, stride p along dim 1.
+            _ => loop {
+                if self.i3 >= d3 {
+                    return None;
+                }
+                if self.i2 >= d2 {
+                    self.i2 = 0;
+                    self.i3 += 1;
+                    continue;
+                }
+                if self.i1 < d1 {
+                    let run = (nb * (self.i1 + d1 * (self.i2 + d2 * self.i3)), nb);
+                    self.i1 += self.p;
+                    return Some(run);
+                }
+                self.i1 = self.r;
+                self.i2 += 1;
+            },
+        }
+    }
+}
+
 /// The [`PackKernel`] of every cyclic split/merge exchange — shared by the
 /// slab-pencil plan (and everything stacked on it: the non-batched loop,
 /// the pad-to-cube baseline) and both exchanges of the pencil plan. Packs
@@ -491,6 +582,113 @@ impl<'a> SplitMergeKernel<'a> {
         assert_eq!(dst.len(), volume(sh_dst), "split-merge kernel: destination length");
         SplitMergeKernel { sched, src, sh_src, dim_src, dst, sh_dst, dim_dst }
     }
+
+    /// Move the self block src→dst directly: pair the source walker
+    /// (residue `me` of `dim_src`) with the destination walker (block `me`
+    /// merging into `dim_dst`), streaming the shorter of the two current
+    /// runs at each step. Both walkers enumerate elements in canonical
+    /// block order, so this is bit-identical to
+    /// pack → arena staging buffer → unpack — with zero staging.
+    fn self_move_impl(&mut self) {
+        let me = self.sched.me;
+        assert_eq!(
+            self.sched.send_counts[me], self.sched.recv_counts[me],
+            "alltoall: self block extents disagree"
+        );
+        let mut src_runs = RunWalker::new(self.sh_src, self.dim_src, self.sched.p, me);
+        let mut dst_runs = RunWalker::new(self.sh_dst, self.dim_dst, self.sched.p, me);
+        let (mut ss, mut sl) = (0usize, 0usize);
+        let (mut ds, mut dl) = (0usize, 0usize);
+        loop {
+            if sl == 0 {
+                match src_runs.next() {
+                    Some((s, l)) => (ss, sl) = (s, l),
+                    None => break,
+                }
+                continue;
+            }
+            if dl == 0 {
+                match dst_runs.next() {
+                    Some((d, l)) => (ds, dl) = (d, l),
+                    None => break,
+                }
+                continue;
+            }
+            let n = sl.min(dl);
+            self.dst[ds..ds + n].copy_from_slice(&self.src[ss..ss + n]);
+            (ss, sl) = (ss + n, sl - n);
+            (ds, dl) = (ds + n, dl - n);
+        }
+    }
+
+    /// Consume the kernel into its read-only pack half and write-only
+    /// unpack half — the two-borrow contract of the threaded engine
+    /// ([`alltoallv_fused_threaded`]): the pack half is shared with the
+    /// helper thread (it only reads `src`), the unpack half moves into it
+    /// (it exclusively owns `dst`).
+    pub fn into_halves(self) -> (SplitPackHalf<'a>, SplitUnpackHalf<'a>) {
+        let SplitMergeKernel { sched, src, sh_src, dim_src, dst, sh_dst, dim_dst } = self;
+        (
+            SplitPackHalf { sched, src, sh_src, dim_src },
+            SplitUnpackHalf { sched, dst, sh_dst, dim_dst },
+        )
+    }
+
+    /// Run this kernel's exchange under `tuning`: the single-threaded
+    /// fused windowed engine, or — with [`CommTuning::worker`] — the self
+    /// block moved src→dst directly (no arena staging) followed by the
+    /// threaded engine, whose helper thread packs and unpacks while the
+    /// communicating thread is blocked in waits. Results are bit-identical
+    /// either way; only the counters differ.
+    pub fn exchange(mut self, comm: &Comm, tuning: CommTuning) -> A2aCounters {
+        if tuning.worker {
+            self.self_move_impl();
+            let (pack, mut unpack) = self.into_halves();
+            alltoallv_fused_threaded(comm, &pack, &mut unpack, tuning)
+        } else {
+            fused_exchange(comm, &mut self, tuning)
+        }
+    }
+}
+
+/// The read-only pack half of a [`SplitMergeKernel`] (see
+/// [`SplitMergeKernel::into_halves`]): packs destination residue blocks
+/// straight out of the shared source tensor.
+pub struct SplitPackHalf<'a> {
+    sched: &'a A2aSchedule,
+    src: &'a [Complex],
+    sh_src: Shape4,
+    dim_src: usize,
+}
+
+impl PackHalf for SplitPackHalf<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.sched.send_counts[dest] * ELEM
+    }
+
+    fn pack(&self, dest: usize, out: &mut WireBuf) {
+        pack_block_bytes(self.src, self.sh_src, self.dim_src, self.sched.p, dest, out);
+    }
+}
+
+/// The write-only unpack half of a [`SplitMergeKernel`] (see
+/// [`SplitMergeKernel::into_halves`]): merges each received block into the
+/// exclusively-owned destination tensor.
+pub struct SplitUnpackHalf<'a> {
+    sched: &'a A2aSchedule,
+    dst: &'a mut [Complex],
+    sh_dst: Shape4,
+    dim_dst: usize,
+}
+
+impl UnpackHalf for SplitUnpackHalf<'_> {
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.sched.recv_counts[src] * ELEM
+    }
+
+    fn unpack(&mut self, src: usize, block: &[u8]) {
+        unpack_block_bytes(block, self.sh_dst, self.dim_dst, self.sched.p, src, self.dst);
+    }
 }
 
 impl PackKernel for SplitMergeKernel<'_> {
@@ -508,6 +706,12 @@ impl PackKernel for SplitMergeKernel<'_> {
 
     fn unpack(&mut self, src: usize, block: &[u8]) {
         unpack_block_bytes(block, self.sh_dst, self.dim_dst, self.sched.p, src, self.dst);
+    }
+
+    fn self_move(&mut self, me: usize) -> bool {
+        debug_assert_eq!(me, self.sched.me);
+        self.self_move_impl();
+        true
     }
 }
 
@@ -674,6 +878,95 @@ mod tests {
                 assert_eq!(back, data, "dim={dim} p={p}");
             }
         }
+    }
+
+    /// The direct src→dst self move (paired [`RunWalker`]s, no staging)
+    /// produces exactly the elements the staged path writes — pack the
+    /// self block into an arena buffer, then unpack it — across the
+    /// slab-style (split dim 3, merge dim 1) and pencil-style (split dim
+    /// 2, merge dim 3) exchanges, including ranks whose residue is beyond
+    /// the extent (zero-length self block).
+    #[test]
+    fn direct_self_move_matches_staged_self_block() {
+        use crate::comm::arena::BufferArena;
+        let arena = BufferArena::new();
+        let nb = 2usize;
+        for (nx, ny, nz) in [(5usize, 3usize, 7usize), (2, 3, 7), (4, 1, 3)] {
+            for p in [1usize, 2, 3] {
+                for me in 0..p {
+                    let lxc = cyclic::local_count(nx, p, me);
+                    let lyc = cyclic::local_count(ny, p, me);
+                    let lzc = cyclic::local_count(nz, p, me);
+                    // Slab-pencil forward: split z of [nb,lxc,ny,nz], merge
+                    // x of [nb,nx,ny,lzc]; pencil column exchange: split y
+                    // of [nb,lxc,ny,lzc], merge z of [nb,lxc,lyc,nz].
+                    let cases: [(Shape4, usize, Shape4, usize); 2] = [
+                        ([nb, lxc, ny, nz], 3, [nb, nx, ny, lzc], 1),
+                        ([nb, lxc, ny, lzc], 2, [nb, lxc, lyc, nz], 3),
+                    ];
+                    for (sh_src, dim_src, sh_dst, dim_dst) in cases {
+                        let sched =
+                            A2aSchedule::for_split_merge(sh_src, dim_src, sh_dst, dim_dst, p, me);
+                        let data = seq(volume(sh_src));
+                        // Staged reference: pack → wire buffer → unpack.
+                        let mut want = vec![ZERO; volume(sh_dst)];
+                        let mut buf = arena.checkout(sched.send_counts[me] * ELEM);
+                        pack_block_bytes(&data, sh_src, dim_src, p, me, &mut buf);
+                        unpack_block_bytes(&buf, sh_dst, dim_dst, p, me, &mut want);
+                        arena.recycle(buf);
+                        // Direct move through the kernel's PackKernel hook.
+                        let mut got = vec![ZERO; volume(sh_dst)];
+                        let mut k = SplitMergeKernel::new(
+                            &sched, &data, sh_src, dim_src, &mut got, sh_dst, dim_dst,
+                        );
+                        assert!(k.self_move(me), "split-merge kernel moves its self block");
+                        assert_eq!(got, want, "dims {dim_src}->{dim_dst} p={p} me={me}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The worker-threaded exchange (direct self move, then helper-thread
+    /// pack/unpack via the split halves) is bit-identical to the
+    /// single-threaded fused engine on every rank.
+    #[test]
+    fn worker_exchange_is_bit_identical_to_fused() {
+        use crate::comm::communicator::run_world;
+        let p = 3usize;
+        run_world(p, move |comm| {
+            let me = comm.rank();
+            let nb = 2usize;
+            let (nx, ny, nz) = (5usize, 3usize, 7usize);
+            let lxc = cyclic::local_count(nx, p, me);
+            let lzc = cyclic::local_count(nz, p, me);
+            let sh_src: Shape4 = [nb, lxc, ny, nz];
+            let sh_dst: Shape4 = [nb, nx, ny, lzc];
+            let sched = A2aSchedule::for_split_merge(sh_src, 3, sh_dst, 1, p, me);
+            let data: Vec<Complex> = (0..volume(sh_src))
+                .map(|i| Complex::new((me * 10_000 + i) as f64, -0.25 * i as f64))
+                .collect();
+            for w in [1usize, 2] {
+                let mut base = vec![ZERO; volume(sh_dst)];
+                let mut k =
+                    SplitMergeKernel::new(&sched, &data, sh_src, 3, &mut base, sh_dst, 1);
+                let c0 = fused_exchange(&comm, &mut k, CommTuning::with_window(w));
+                assert_eq!(c0.worker_busy_ns, 0, "single-threaded path has no worker");
+                let mut threaded = vec![ZERO; volume(sh_dst)];
+                let k =
+                    SplitMergeKernel::new(&sched, &data, sh_src, 3, &mut threaded, sh_dst, 1);
+                let c1 = k.exchange(&comm, CommTuning::with_window(w).with_worker(true));
+                assert_eq!(
+                    c1.worker_busy_ns,
+                    c1.pack_overlap_ns + c1.unpack_overlap_ns,
+                    "helper busy time is its pack + unpack time"
+                );
+                for (a, b) in base.iter().zip(threaded.iter()) {
+                    assert_eq!(a.re.to_bits(), b.re.to_bits(), "w={w} me={me}");
+                    assert_eq!(a.im.to_bits(), b.im.to_bits(), "w={w} me={me}");
+                }
+            }
+        });
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
 
 use super::redistribute::{volume, A2aSchedule, Shape4, SplitMergeKernel};
-use super::stages::{fused_exchange, ExecTrace, StageTimer};
+use super::stages::{ExecTrace, StageTimer};
 use super::workspace::Workspace;
 
 /// Plan for a batched slab-pencil 3D FFT of global shape `(nx, ny, nz)` on a
@@ -200,12 +200,8 @@ impl SlabPencilPlan {
                 //    caller vector joins the pool.
                 t.comm_a2a("a2a_xz", || {
                     let mut out = slots.take(volume(sh_out), alloc);
-                    let c = {
-                        let mut k = SplitMergeKernel::new(
-                            &self.fwd, &data, sh_in, 3, &mut out, sh_out, 1,
-                        );
-                        fused_exchange(comm, &mut k, self.tuning)
-                    };
+                    let c = SplitMergeKernel::new(&self.fwd, &data, sh_in, 3, &mut out, sh_out, 1)
+                        .exchange(comm, self.tuning);
                     slots.recycle(std::mem::replace(&mut data, out));
                     ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
                 });
@@ -221,12 +217,8 @@ impl SlabPencilPlan {
                 });
                 t.comm_a2a("a2a_zx", || {
                     let mut out = slots.take(volume(sh_in), alloc);
-                    let c = {
-                        let mut k = SplitMergeKernel::new(
-                            &self.inv, &data, sh_out, 1, &mut out, sh_in, 3,
-                        );
-                        fused_exchange(comm, &mut k, self.tuning)
-                    };
+                    let c = SplitMergeKernel::new(&self.inv, &data, sh_out, 1, &mut out, sh_in, 3)
+                        .exchange(comm, self.tuning);
                     slots.recycle(std::mem::replace(&mut data, out));
                     ((), self.inv.bytes_remote(), self.inv.msgs(), c)
                 });

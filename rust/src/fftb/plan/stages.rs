@@ -11,10 +11,12 @@
 //! counters fed by the fused windowed alltoall ([`A2aCounters`]):
 //! `wait_ns`, the nanoseconds this rank spent blocked in receive waits;
 //! `overlap_rounds`, how many exchange rounds were posted ahead of the
-//! serial schedule; and `pack_overlap_ns` / `unpack_overlap_ns`, the
-//! pack/unpack nanoseconds that ran while other rounds were in flight.
-//! `benches/a2a_micro.rs` prints them side by side for the serial,
-//! pre-packed and fused disciplines.
+//! serial schedule; `pack_overlap_ns` / `unpack_overlap_ns`, the
+//! pack/unpack nanoseconds that ran while other rounds were in flight;
+//! and `worker_busy_ns` / `pipeline_overlap_ns`, the helper worker
+//! thread's busy time inside exchanges and inside the batching driver's
+//! two-deep pipeline respectively. `benches/a2a_micro.rs` prints them
+//! side by side for the serial, pre-packed and fused disciplines.
 //!
 //! [`PackKernel`] is the plan-side contract of the fused exchange: a plan
 //! hands the engine per-destination pack and unpack movers instead of
@@ -54,6 +56,13 @@ pub trait PackKernel {
     fn pack(&mut self, dest: usize, out: &mut WireBuf);
     /// Land the block received from rank `src`.
     fn unpack(&mut self, src: usize, block: &[u8]);
+    /// Move rank `me`'s self block src→dst directly, without arena
+    /// staging, when the kernel can. Return `false` (the default) to have
+    /// the engine route it as `pack` → arena staging buffer → `unpack`.
+    fn self_move(&mut self, me: usize) -> bool {
+        let _ = me;
+        false
+    }
 }
 
 /// Adapter bridging a [`PackKernel`] to the comm layer's [`FusedBlocks`]
@@ -75,6 +84,10 @@ impl FusedBlocks for KernelBlocks<'_> {
 
     fn unpack(&mut self, src: usize, block: &[u8]) {
         self.0.unpack(src, block);
+    }
+
+    fn self_move(&mut self, me: usize) -> bool {
+        self.0.self_move(me)
     }
 }
 
@@ -146,6 +159,18 @@ pub struct ExecTrace {
     /// still outstanding, summed over every comm stage (see
     /// [`A2aCounters::unpack_overlap_ns`]).
     pub unpack_overlap_ns: u64,
+    /// Nanoseconds the helper worker thread spent packing and unpacking
+    /// inside threaded exchanges, summed over every comm stage (see
+    /// [`A2aCounters::worker_busy_ns`]); the batching driver adds the
+    /// worker time of pipelined staging tails it attributes to this
+    /// execution. 0 on every single-threaded path.
+    pub worker_busy_ns: u64,
+    /// Nanoseconds of this execution's work that ran on the worker thread
+    /// *concurrently with another batch's execution* in the batching
+    /// driver's two-deep pipeline (the de-interleave tail of flush `k-1`
+    /// overlapping flush `k`'s exchange). 0 at pipeline depth 1 and for
+    /// directly-executed plans.
+    pub pipeline_overlap_ns: u64,
     /// Whether the plan that produced this execution was served from a
     /// [`PlanCache`](crate::tuner::cache::PlanCache) rather than built
     /// fresh. Set by the caching layer (e.g. the batching driver), not by
@@ -223,6 +248,9 @@ impl ExecTrace {
             traces.iter().map(|t| t.pack_overlap_ns).max().unwrap_or_default();
         out.unpack_overlap_ns =
             traces.iter().map(|t| t.unpack_overlap_ns).max().unwrap_or_default();
+        out.worker_busy_ns = traces.iter().map(|t| t.worker_busy_ns).max().unwrap_or_default();
+        out.pipeline_overlap_ns =
+            traces.iter().map(|t| t.pipeline_overlap_ns).max().unwrap_or_default();
         // A cache hit only counts if *every* rank was served from cache.
         out.plan_cache_hit = traces.iter().all(|t| t.plan_cache_hit);
         out
@@ -249,6 +277,13 @@ impl ExecTrace {
                 "(fused pack/unpack overlapped: {:?} / {:?})\n",
                 Duration::from_nanos(self.pack_overlap_ns),
                 Duration::from_nanos(self.unpack_overlap_ns)
+            ));
+        }
+        if self.worker_busy_ns > 0 || self.pipeline_overlap_ns > 0 {
+            s.push_str(&format!(
+                "(worker busy: {:?}, pipeline overlap: {:?})\n",
+                Duration::from_nanos(self.worker_busy_ns),
+                Duration::from_nanos(self.pipeline_overlap_ns)
             ));
         }
         if self.alloc_bytes > 0 {
@@ -296,7 +331,7 @@ impl<'a> StageTimer<'a> {
     /// Time an exchange stage that also reports overlap counters; `f` must
     /// return (result, bytes_sent, messages, counters). The counters are
     /// accumulated into the trace's `wait_ns` / `overlap_rounds` /
-    /// `pack_overlap_ns` / `unpack_overlap_ns`.
+    /// `pack_overlap_ns` / `unpack_overlap_ns` / `worker_busy_ns`.
     pub fn comm_a2a<R>(
         &mut self,
         name: &'static str,
@@ -309,6 +344,7 @@ impl<'a> StageTimer<'a> {
         self.trace.overlap_rounds += c.overlap_rounds;
         self.trace.pack_overlap_ns += c.pack_overlap_ns;
         self.trace.unpack_overlap_ns += c.unpack_overlap_ns;
+        self.trace.worker_busy_ns += c.worker_busy_ns;
         r
     }
 }
@@ -344,6 +380,7 @@ mod tests {
                     overlap_rounds: 3,
                     pack_overlap_ns: 40,
                     unpack_overlap_ns: 7,
+                    worker_busy_ns: 12,
                 },
             )
         });
@@ -357,6 +394,7 @@ mod tests {
                     overlap_rounds: 2,
                     pack_overlap_ns: 60,
                     unpack_overlap_ns: 3,
+                    worker_busy_ns: 8,
                 },
             )
         });
@@ -364,27 +402,32 @@ mod tests {
         assert_eq!(trace.overlap_rounds, 5);
         assert_eq!(trace.pack_overlap_ns, 100);
         assert_eq!(trace.unpack_overlap_ns, 10);
+        assert_eq!(trace.worker_busy_ns, 20);
         assert_eq!(trace.comm_bytes(), 30);
         assert_eq!(trace.wait_time(), Duration::from_nanos(750));
     }
 
     #[test]
     fn critical_path_takes_max() {
-        let mk = |ms: u64, bytes: u64, alloc: u64, wait: u64| {
+        let mk = |ms: u64, bytes: u64, alloc: u64, wait: u64, busy: u64, pipe: u64| {
             let mut t = ExecTrace::default();
             t.push("s", StageKind::Comm, Duration::from_millis(ms), bytes, 1, 0.0);
             t.alloc_bytes = alloc;
             t.wait_ns = wait;
+            t.worker_busy_ns = busy;
+            t.pipeline_overlap_ns = pipe;
             t
         };
         let cp = ExecTrace::critical_path(&[
-            mk(5, 10, 0, 100),
-            mk(9, 3, 64, 900),
-            mk(2, 7, 16, 50),
+            mk(5, 10, 0, 100, 30, 2),
+            mk(9, 3, 64, 900, 10, 9),
+            mk(2, 7, 16, 50, 20, 4),
         ]);
         assert_eq!(cp.stages[0].elapsed, Duration::from_millis(9));
         assert_eq!(cp.stages[0].bytes_sent, 10);
         assert_eq!(cp.alloc_bytes, 64, "slowest-allocating rank gates the view");
         assert_eq!(cp.wait_ns, 900, "longest-waiting rank gates the view");
+        assert_eq!(cp.worker_busy_ns, 30, "busiest worker gates the view");
+        assert_eq!(cp.pipeline_overlap_ns, 9, "deepest pipeline overlap gates the view");
     }
 }

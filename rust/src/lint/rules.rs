@@ -59,6 +59,10 @@ pub const RELAXED_COUNTERS: &[&str] = &[
     // comm schedule-perturbation ticket: fetch_add atomicity alone
     // guarantees distinct tickets; nothing is published through it.
     "perturb_ticket",
+    // comm::worker busy-time tally: written by the worker thread, read by
+    // harvesters for trace attribution only; the jobs' effects are ordered
+    // by their own response channels, never by this counter.
+    "busy_ns",
 ];
 
 /// One lint finding, formatted `file:line: [rule] message`.

@@ -80,6 +80,21 @@ impl PlanCost {
     pub fn total_a2a_bytes(&self) -> f64 {
         self.stages.iter().map(|s| s.a2a_bytes).sum()
     }
+
+    /// Time the driver's two-deep software pipeline can hide per flush:
+    /// the memory time of the heaviest compute stage (its de-interleave /
+    /// staging traffic priced on `m`'s bandwidth), which is the tail the
+    /// driver hands to its persistent worker while the next flush's
+    /// exchange runs on the communicating thread. The pipeline can never
+    /// hide more than one stage's traffic per flush — the worker is one
+    /// thread — so the heaviest stage bounds the benefit.
+    pub fn pipeline_tail_time(&self, m: &super::machine::Machine) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.rounds == 0)
+            .map(|s| s.touched_bytes / m.mem_bw)
+            .fold(0.0, f64::max)
+    }
 }
 
 /// Batched slab-pencil forward on a 1D grid of `p` ranks.
@@ -307,6 +322,28 @@ mod tests {
         let dense = slab_pencil([n, n, n], nb, p, true);
         assert_eq!(padded.total_a2a_bytes(), dense.total_a2a_bytes());
         assert_eq!(padded.stages.len(), dense.stages.len() + 1);
+    }
+
+    #[test]
+    fn pipeline_tail_is_the_heaviest_compute_stage() {
+        use crate::model::machine::Machine;
+        let m = Machine::local_cpu();
+        let c = slab_pencil([16, 16, 16], 8, 4, true);
+        let heaviest = c
+            .stages
+            .iter()
+            .filter(|s| s.rounds == 0)
+            .map(|s| s.touched_bytes)
+            .fold(0.0, f64::max);
+        assert!(heaviest > 0.0);
+        assert_eq!(c.pipeline_tail_time(&m), heaviest / m.mem_bw);
+        // Comm stages never contribute: a cost table with only exchanges
+        // has no tail to hand to the worker.
+        let comm_only = PlanCost {
+            stages: vec![StageCost::comm_fused("a2a", 1e6, 1, 1e6)],
+            a2a_ranks: vec![4],
+        };
+        assert_eq!(comm_only.pipeline_tail_time(&m), 0.0);
     }
 
     #[test]

@@ -39,6 +39,12 @@ impl Machine {
     /// [`Machine::alltoall_time_windowed`]).
     pub const WINDOW_PIN_ALPHA_FRACTION: f64 = 0.5;
 
+    /// Per-message channel-handoff charge of the threaded exchange (ship a
+    /// buffer through the helper's mpsc channel and wake it), as a
+    /// fraction of the base per-message latency (see
+    /// [`Machine::alltoall_time_fused_threaded`]).
+    pub const WORKER_HANDOFF_ALPHA_FRACTION: f64 = 0.25;
+
     /// Perlmutter GPU-node estimate (per-GPU rank).
     pub fn perlmutter_a100() -> Machine {
         Machine {
@@ -155,6 +161,42 @@ impl Machine {
         let w = window.clamp(1, p - 1);
         self.alltoall_time_windowed(p, bytes_per_rank, window) + pack_time / w as f64
     }
+
+    /// [`Machine::alltoall_time_fused`] with the exchange's **helper worker
+    /// thread** priced in. With `worker == false` this is exactly the
+    /// single-threaded fused model (bit-for-bit the same float ops), so
+    /// everything priced before the worker existed is unchanged.
+    ///
+    /// With `worker == true`, pack/unpack runs on the helper *while the
+    /// communicating thread is blocked in waits*, so the exposed `1/w`
+    /// pack fraction disappears entirely — but every round pays a channel
+    /// handoff (send the packed buffer / received block across the mpsc
+    /// channel, wake the helper), charged as
+    /// [`Machine::WORKER_HANDOFF_ALPHA_FRACTION`] of a base latency per
+    /// message. The worker therefore wins exactly when the exposed pack
+    /// time `pack_time / w` exceeds `msgs * handoff` — large fused volumes
+    /// and narrow windows — and loses on latency-dominated exchanges,
+    /// which is the trade [`crate::tuner::search`] enumerates. On a
+    /// single-rank communicator there are no rounds to hide behind and the
+    /// helper is never engaged: pure local pack time, same as fused.
+    pub fn alltoall_time_fused_threaded(
+        &self,
+        p: usize,
+        bytes_per_rank: f64,
+        window: usize,
+        fused_bytes: f64,
+        worker: bool,
+    ) -> f64 {
+        if !worker {
+            return self.alltoall_time_fused(p, bytes_per_rank, window, fused_bytes);
+        }
+        let pack_time = fused_bytes / self.mem_bw;
+        if p <= 1 {
+            return pack_time;
+        }
+        let handoff = (p - 1) as f64 * Self::WORKER_HANDOFF_ALPHA_FRACTION * self.alpha;
+        self.alltoall_time_windowed(p, bytes_per_rank, window) + handoff
+    }
 }
 
 #[cfg(test)]
@@ -249,6 +291,46 @@ mod tests {
         );
         // Single-rank communicators: pure local pack/unpack, nothing hidden.
         assert_eq!(m.alltoall_time_fused(1, 0.0, 4, fused), fused / m.mem_bw);
+    }
+
+    #[test]
+    fn threaded_model_prices_the_worker_tradeoff() {
+        let m = Machine::local_cpu();
+        let p = 8usize;
+        let bytes = (64 * 1024) as f64 * (p - 1) as f64;
+        let fused = 4.0 * bytes;
+        // worker=false is bit-for-bit the single-threaded fused model.
+        for w in [1usize, 2, 7] {
+            assert_eq!(
+                m.alltoall_time_fused_threaded(p, bytes, w, fused, false),
+                m.alltoall_time_fused(p, bytes, w, fused)
+            );
+        }
+        // worker=true replaces the exposed pack fraction with the per-round
+        // handoff charge.
+        let handoff = (p - 1) as f64 * Machine::WORKER_HANDOFF_ALPHA_FRACTION * m.alpha;
+        for w in [1usize, 2, 7] {
+            assert_eq!(
+                m.alltoall_time_fused_threaded(p, bytes, w, fused, true),
+                m.alltoall_time_windowed(p, bytes, w) + handoff
+            );
+        }
+        // Memory-bound regime (local_cpu, heavy fused traffic): the worker
+        // must win at window 1, where all the pack time is exposed.
+        assert!(
+            m.alltoall_time_fused_threaded(p, bytes, 1, fused, true)
+                < m.alltoall_time_fused_threaded(p, bytes, 1, fused, false),
+            "hiding pack behind waits must beat exposing it"
+        );
+        // Latency-dominated regime: tiny fused volume, the handoff charge
+        // is pure overhead and the worker must lose.
+        assert!(
+            m.alltoall_time_fused_threaded(p, bytes, 2, 0.0, true)
+                > m.alltoall_time_fused_threaded(p, bytes, 2, 0.0, false),
+            "a worker with nothing to hide must cost its handoffs"
+        );
+        // Single rank: pure local pack time either way, helper never engaged.
+        assert_eq!(m.alltoall_time_fused_threaded(1, 0.0, 4, fused, true), fused / m.mem_bw);
     }
 
     #[test]

@@ -10,4 +10,6 @@ pub mod scaling;
 
 pub use cost::{PlanCost, StageCost};
 pub use machine::Machine;
-pub use scaling::{fig9_row, fold_ranks, grid_2d, price_stages, project, Variant, Workload};
+pub use scaling::{
+    fig9_row, fold_ranks, grid_2d, price_stages, price_stages_with, project, Variant, Workload,
+};

@@ -94,6 +94,17 @@ pub fn grid_2d(p: usize) -> (usize, usize) {
 /// tuner's candidate search prices its window ladder through the same
 /// walk, so the two layers can never diverge.
 pub fn price_stages(cost: &PlanCost, m: &Machine, window: usize) -> f64 {
+    price_stages_with(cost, m, window, false)
+}
+
+/// [`price_stages`] with the exchange's helper-worker axis: `worker ==
+/// false` delegates to the single-threaded fused pricing bit-for-bit (this
+/// is what [`price_stages`] calls), `worker == true` prices every comm
+/// stage through [`Machine::alltoall_time_fused_threaded`] — pack/unpack
+/// hidden behind the waits, a per-message channel-handoff charge in its
+/// place. The tuner's candidate search crosses its window ladder with this
+/// flag, so worker-on/worker-off is a real priced axis, not a heuristic.
+pub fn price_stages_with(cost: &PlanCost, m: &Machine, window: usize, worker: bool) -> f64 {
     let mut t = 0.0;
     let mut comm_idx = 0;
     for s in &cost.stages {
@@ -108,7 +119,8 @@ pub fn price_stages(cost: &PlanCost, m: &Machine, window: usize) -> f64 {
             comm_idx += 1;
             let per_round = s.a2a_bytes / s.rounds as f64;
             let fused_per_round = s.fused_bytes / s.rounds as f64;
-            t += s.rounds as f64 * m.alltoall_time_fused(pc, per_round, window, fused_per_round);
+            t += s.rounds as f64
+                * m.alltoall_time_fused_threaded(pc, per_round, window, fused_per_round, worker);
         } else {
             t += m.compute_time(s.flops, s.touched_bytes);
         }

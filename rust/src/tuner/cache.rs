@@ -6,8 +6,8 @@
 //! `BatchingDriver::flush` pattern — pays the planning cost and a cold
 //! workspace every time. A [`PlanCache`] memoizes constructed [`Fftb`]
 //! objects behind a [`PlanKey`], so repeated requests with the same shape,
-//! distribution signature, plan kind, batch count, direction and exchange
-//! window return the *same* plan object — schedules, warmed workspaces,
+//! distribution signature, plan kind, batch count, direction, exchange
+//! window and worker setting return the *same* plan object — schedules, warmed workspaces,
 //! slot pools and all. `ExecTrace::plan_cache_hit` reports whether an
 //! execution's plan came from here.
 //!
@@ -30,7 +30,8 @@ use crate::fftb::plan::Fftb;
 /// never share one), global shape, a canonical distribution signature
 /// string (e.g. `"x{0} y z -> X Y Z{0}"` or a driver-chosen tag), the
 /// plan-kind label, batch count, direction (`None` when one plan serves
-/// both directions), and the exchange window it was tuned with. The
+/// both directions), and the exchange window and worker flag it was tuned
+/// with. The
 /// string fields are `Cow` so fixed-key callers (the batching driver's
 /// per-flush lookup) build keys without heap allocation.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -50,6 +51,8 @@ pub struct PlanKey {
     pub dir: Option<u8>,
     /// Exchange window the plan's `CommTuning` carries.
     pub window: usize,
+    /// Whether the plan's `CommTuning` enables the helper worker thread.
+    pub worker: bool,
 }
 
 /// Memoized `Fftb` plans keyed by [`PlanKey`], with hit/miss accounting.
@@ -144,6 +147,7 @@ mod tests {
             nb,
             dir,
             window,
+            worker: false,
         }
     }
 
@@ -188,7 +192,10 @@ mod tests {
             let other_comm = PlanKey { comm_id: 8, ..key(2, None, 2) };
             let (_, hit) = cache.get_or_insert(other_comm, || build_slab(2, &grid)).unwrap();
             assert!(!hit, "a different communicator is a different plan");
-            assert_eq!(cache.len(), 5);
+            let threaded = PlanKey { worker: true, ..key(2, None, 2) };
+            let (_, hit) = cache.get_or_insert(threaded, || build_slab(2, &grid)).unwrap();
+            assert!(!hit, "the worker axis is a different plan");
+            assert_eq!(cache.len(), 6);
         });
     }
 

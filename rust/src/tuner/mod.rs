@@ -8,7 +8,7 @@
 //! described machine; this subsystem is what finally consumes those prices:
 //!
 //! * [`cache`] — [`PlanCache`]: memoized `Fftb` objects keyed by
-//!   `(shape, signature, kind, nb, direction, window)`, extending
+//!   `(shape, signature, kind, nb, direction, window, worker)`, extending
 //!   plan-once / execute-many to the layer that requests plans.
 //! * [`search`] — feasible-candidate enumeration (all decompositions ×
 //!   grid factorizations × exchange windows) and deterministic model-based
@@ -256,6 +256,7 @@ impl Tuner {
                 WisdomEntry {
                     kind: choice.kind.label(),
                     window: choice.window,
+                    worker: choice.worker,
                     seconds: measured_seconds.unwrap_or(choice.predicted),
                     measured: probe.is_measured(),
                     probe,
@@ -272,6 +273,7 @@ impl Tuner {
             nb,
             dir: None,
             window: choice.window,
+            worker: choice.worker,
         };
         let (plan, cache_hit) = match prebuilt {
             Some(plan) => {

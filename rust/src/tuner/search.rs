@@ -6,7 +6,8 @@
 //! could run (slab-pencil and its non-batched loop on a 1D grid, every
 //! pencil factorization `p0 x p1 = p` of the rank count, plane-wave staged
 //! padding and the pad-to-cube baseline for sphere inputs), crossed with
-//! the exchange-window ladder `{1, 2, 4, ...}`. Each candidate is priced by
+//! the exchange-window ladder `{1, 2, 4, ...}` and the exchange's
+//! helper-worker axis (worker on/off). Each candidate is priced by
 //! the exact stage counts of [`model::cost`](crate::model::cost) on a
 //! [`Machine`] — the fused windowed alltoall model
 //! ([`Machine::alltoall_time_fused`](crate::model::machine::Machine::alltoall_time_fused))
@@ -137,13 +138,18 @@ impl TuneRequest {
     }
 }
 
-/// One priced candidate: decomposition + window + predicted seconds.
+/// One priced candidate: decomposition + window + worker mode + predicted
+/// seconds.
 #[derive(Clone, Debug)]
 pub struct Candidate {
     /// The decomposition.
     pub kind: CandidateKind,
     /// Exchange window (`CommTuning::window`) the prediction assumed.
     pub window: usize,
+    /// Whether the exchange's helper worker thread
+    /// (`CommTuning::worker`) was priced in — pack/unpack hidden behind
+    /// the waits, a per-message handoff charge in its place.
+    pub worker: bool,
     /// Model-predicted execution time, seconds.
     pub predicted: f64,
 }
@@ -243,21 +249,25 @@ pub fn predict(kind: CandidateKind, window: usize, req: &TuneRequest, m: &Machin
     crate::model::scaling::price_stages(&stage_cost(kind, req), m, window)
 }
 
-/// Enumerate, cross with the window ladder, price, and sort: cheapest
-/// first, ties broken by the (total) ordering on kind then window so the
-/// ranking is deterministic across ranks. The (window-independent) stage
-/// table is derived once per decomposition, not once per rung.
+/// Enumerate, cross with the window ladder *and* the worker on/off axis,
+/// price, and sort: cheapest first, ties broken by the (total) ordering
+/// on kind, then window, then worker-off-first, so the ranking is
+/// deterministic across ranks. The (window-independent) stage table is
+/// derived once per decomposition, not once per rung.
 pub fn rank_candidates(req: &TuneRequest, m: &Machine) -> Vec<Candidate> {
     let mut out: Vec<Candidate> = Vec::new();
     let ladder = windows(req.p);
     for kind in enumerate(req) {
         let cost = stage_cost(kind, req);
         for &window in &ladder {
-            out.push(Candidate {
-                kind,
-                window,
-                predicted: crate::model::scaling::price_stages(&cost, m, window),
-            });
+            for worker in [false, true] {
+                out.push(Candidate {
+                    kind,
+                    window,
+                    worker,
+                    predicted: crate::model::scaling::price_stages_with(&cost, m, window, worker),
+                });
+            }
         }
     }
     out.sort_by(|a, b| {
@@ -265,6 +275,7 @@ pub fn rank_candidates(req: &TuneRequest, m: &Machine) -> Vec<Candidate> {
             .total_cmp(&b.predicted)
             .then_with(|| a.kind.cmp(&b.kind))
             .then_with(|| a.window.cmp(&b.window))
+            .then_with(|| a.worker.cmp(&b.worker))
     });
     out
 }
@@ -342,7 +353,7 @@ pub fn build(cand: &Candidate, req: &TuneRequest, comm: &Comm) -> Result<Fftb> {
         }
     };
     let mut fx = Fftb { kind, sizes: req.shape, nb: req.nb };
-    fx.set_comm_tuning(CommTuning::with_window(cand.window));
+    fx.set_comm_tuning(CommTuning::with_window(cand.window).with_worker(cand.worker));
     Ok(fx)
 }
 
@@ -573,6 +584,46 @@ mod tests {
             assert_eq!(CandidateKind::from_label(&kind.label()), Some(kind));
         }
         assert_eq!(CandidateKind::from_label("nonsense"), None);
+    }
+
+    #[test]
+    fn worker_choice_flips_between_machine_profiles() {
+        // The acceptance pin of the worker axis: two machine profiles on
+        // the same request must disagree about engaging the helper, so the
+        // tuner demonstrably treats worker-on/off as a real priced axis.
+        let req = dense([16, 16, 16], 8, 4);
+        // Pack-bound profile: modest memory bandwidth makes the exposed
+        // pack fraction expensive while handoffs stay cheap — the helper
+        // must be engaged.
+        let pack_bound = Machine {
+            name: "pack-bound",
+            mem_bw: 2.0e9,
+            alpha: 1.0e-7,
+            ..Machine::local_cpu()
+        };
+        let ranked = rank_candidates(&req, &pack_bound);
+        assert!(
+            ranked[0].worker,
+            "pack-bound machine must hide pack/unpack on the helper thread"
+        );
+        // Latency-bound profile: pack is effectively free and every
+        // channel handoff costs a quarter of a (large) message latency —
+        // the helper is pure overhead.
+        let latency_bound = Machine {
+            name: "latency-bound",
+            mem_bw: 1.0e15,
+            alpha: 1.0e-3,
+            ..Machine::local_cpu()
+        };
+        let ranked = rank_candidates(&req, &latency_bound);
+        assert!(
+            !ranked[0].worker,
+            "latency-bound machine must keep the exchange single-threaded"
+        );
+        // Both settings are enumerated for every (kind, window) pair.
+        let ranked = rank_candidates(&req, &Machine::local_cpu());
+        assert!(ranked.iter().any(|c| c.worker) && ranked.iter().any(|c| !c.worker));
+        assert_eq!(ranked.len() % 2, 0, "the worker axis doubles the candidate set");
     }
 
     #[test]

@@ -76,6 +76,11 @@ pub struct WisdomEntry {
     pub kind: String,
     /// Winning exchange window.
     pub window: usize,
+    /// Whether the winner engages the exchange's helper worker thread
+    /// (`CommTuning::worker`). Absent in files written before the worker
+    /// axis existed — those parse as `false` (the single-threaded engine),
+    /// which is exactly what they were measured or predicted with.
+    pub worker: bool,
     /// Predicted (model mode) or measured (empirical mode) seconds.
     pub seconds: f64,
     /// Whether `seconds` came from a live measurement. Derived from
@@ -94,6 +99,7 @@ impl WisdomEntry {
         Some(Candidate {
             kind: CandidateKind::from_label(&self.kind)?,
             window: self.window,
+            worker: self.worker,
             predicted: self.seconds,
         })
     }
@@ -158,6 +164,7 @@ impl Wisdom {
             let mut m = BTreeMap::new();
             m.insert("kind".into(), Json::Str(e.kind.clone()));
             m.insert("window".into(), Json::Num(e.window as f64));
+            m.insert("worker".into(), Json::Bool(e.worker));
             m.insert("seconds".into(), Json::Num(e.seconds));
             m.insert("measured".into(), Json::Bool(e.measured));
             m.insert("probe".into(), Json::Str(e.probe.label().into()));
@@ -207,6 +214,15 @@ impl Wisdom {
                     .get("window")
                     .and_then(Json::as_usize)
                     .ok_or_else(|| format!("wisdom: entry `{sig}` missing window"))?;
+                // Optional for compatibility with files written before the
+                // worker axis: absent means the single-threaded engine.
+                let worker = match e.get("worker") {
+                    None => false,
+                    Some(Json::Bool(b)) => *b,
+                    Some(_) => {
+                        return Err(format!("wisdom: entry `{sig}` worker must be a bool"))
+                    }
+                };
                 let seconds = e
                     .get("seconds")
                     .and_then(Json::as_f64)
@@ -226,8 +242,10 @@ impl Wisdom {
                 // whose `measured` flag contradicts its probe kind cannot
                 // smuggle the disagreement into memory.
                 let measured = probe.is_measured();
-                entries
-                    .insert(sig.clone(), WisdomEntry { kind, window, seconds, measured, probe });
+                entries.insert(
+                    sig.clone(),
+                    WisdomEntry { kind, window, worker, seconds, measured, probe },
+                );
             }
         } else if j.get("entries").is_some() {
             return Err("wisdom: `entries` must be an object".into());
@@ -264,6 +282,7 @@ mod tests {
             WisdomEntry {
                 kind: "pencil:2x4".into(),
                 window: 4,
+                worker: true,
                 seconds: 0.0125,
                 measured: false,
                 probe: Probe::Model,
@@ -274,6 +293,7 @@ mod tests {
             WisdomEntry {
                 kind: "plane-wave".into(),
                 window: 2,
+                worker: false,
                 seconds: 0.5,
                 measured: true,
                 probe: Probe::Forward,
@@ -284,6 +304,7 @@ mod tests {
             WisdomEntry {
                 kind: "plane-wave".into(),
                 window: 1,
+                worker: false,
                 seconds: 0.75,
                 measured: true,
                 probe: Probe::Scf,
@@ -309,6 +330,24 @@ mod tests {
         assert_eq!(scf.window, 1);
         let cand = back.lookup("16x16x16|nb=4|p=8|dense").unwrap().candidate().unwrap();
         assert_eq!(cand.kind, crate::tuner::search::CandidateKind::Pencil { p0: 2, p1: 4 });
+        assert!(cand.worker, "the worker flag survives the round trip");
+        let fwd = back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().candidate().unwrap();
+        assert!(!fwd.worker);
+    }
+
+    #[test]
+    fn missing_worker_defaults_to_single_threaded() {
+        // Entries written before the worker axis existed have no `worker`
+        // key; they must parse as worker-off (what they were priced with),
+        // and a non-bool value must be rejected, not coerced.
+        let doc = r#"{"version": 2, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5}}}"#;
+        let w = Wisdom::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert!(!w.lookup("k").unwrap().worker);
+        assert!(!w.lookup("k").unwrap().candidate().unwrap().worker);
+        let bad = r#"{"version": 2, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5, "worker": 1}}}"#;
+        assert!(Wisdom::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

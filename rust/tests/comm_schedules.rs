@@ -7,7 +7,10 @@
 //! that explores interleavings a sanitizer would need a lucky thread
 //! schedule to hit. Any correct SPMD program must return bit-identical
 //! results under every seed; this file pins that for the flat windowed
-//! exchange, the fused plan executions, and a full SCF iteration.
+//! exchange, the fused plan executions, and a full SCF iteration — each
+//! with the exchange's helper worker thread disabled AND enabled
+//! (`CommTuning::with_worker`), asserting the two modes agree with each
+//! other and with the unperturbed world.
 
 use std::sync::Arc;
 
@@ -18,7 +21,7 @@ use fftb::fft::complex::{Complex, ZERO};
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::grid::ProcGrid;
 use fftb::fftb::plan::testutil::phased;
-use fftb::fftb::plan::{PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::plan::{Fftb, PlanKind, PlaneWavePlan, SlabPencilPlan};
 use fftb::fftb::sphere::{SphereKind, SphereSpec};
 
 /// Varied block extents with systematic empty blocks (extent 0 whenever
@@ -28,9 +31,10 @@ fn block_len(r: usize, j: usize) -> usize {
     (r * 3 + 5 * j) % 7
 }
 
-/// One flat exchange on rank `me` of `p` with window `w`; deterministic
-/// content `f(src, dst, k)` so the result is comparable across worlds.
-fn flat_exchange(comm: &fftb::comm::Comm, p: usize, w: usize) -> Vec<Complex> {
+/// One flat exchange on rank `me` of `p` with window `w` and the helper
+/// worker on or off; deterministic content `f(src, dst, k)` so the result
+/// is comparable across worlds and modes.
+fn flat_exchange(comm: &fftb::comm::Comm, p: usize, w: usize, worker: bool) -> Vec<Complex> {
     let me = comm.rank();
     let mut send_offs = vec![0usize];
     let mut send: Vec<Complex> = Vec::new();
@@ -51,7 +55,7 @@ fn flat_exchange(comm: &fftb::comm::Comm, p: usize, w: usize) -> Vec<Complex> {
         &send_offs,
         &mut out,
         &recv_offs,
-        CommTuning::with_window(w),
+        CommTuning::with_window(w).with_worker(worker),
     );
     out
 }
@@ -74,17 +78,27 @@ fn assert_bits_eq(base: &[Vec<Complex>], got: &[Vec<Complex>], what: &str) {
 
 /// The flat windowed exchange (which runs on the fused engine) must be
 /// bit-identical under every perturbation seed, for every window in
-/// {1, 2, p-1} and worlds including a prime p — 16 seeds each.
+/// {1, 2, p-1} and worlds including a prime p — 16 seeds each, with the
+/// helper worker thread both off and on.
 #[test]
 fn perturbed_flat_exchange_is_bit_identical() {
     for p in [2usize, 3, 5] {
         for w in [1usize, 2, p - 1] {
             let w = w.max(1);
-            let base = run_world(p, move |comm| flat_exchange(&comm, p, w));
+            let base = run_world(p, move |comm| flat_exchange(&comm, p, w, false));
+            let threaded = run_world(p, move |comm| flat_exchange(&comm, p, w, true));
+            assert_bits_eq(&base, &threaded, &format!("p={p} w={w} worker-on unperturbed"));
             for seed in 0..16u64 {
-                let got =
-                    run_world_perturbed(p, seed, move |comm| flat_exchange(&comm, p, w));
-                assert_bits_eq(&base, &got, &format!("p={p} w={w} seed={seed}"));
+                for worker in [false, true] {
+                    let got = run_world_perturbed(p, seed, move |comm| {
+                        flat_exchange(&comm, p, w, worker)
+                    });
+                    assert_bits_eq(
+                        &base,
+                        &got,
+                        &format!("p={p} w={w} seed={seed} worker={worker}"),
+                    );
+                }
             }
         }
     }
@@ -98,19 +112,30 @@ fn perturbed_slab_pencil_is_bit_identical() {
     let shape = [6usize, 5, 6];
     let nb = 2usize;
     for p in [2usize, 3, 5] {
-        let body = move |comm: fftb::comm::Comm| {
-            let grid = ProcGrid::new(&[p], comm).unwrap();
-            let backend = RustFftBackend::new();
-            let plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
-            let input = phased(plan.input_len(), grid.rank() as u64);
-            let (spec, _) = plan.forward(&backend, input);
-            let (back, _) = plan.inverse(&backend, spec.clone());
-            spec.into_iter().chain(back).collect::<Vec<Complex>>()
+        let body = move |worker: bool| {
+            move |comm: fftb::comm::Comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let mut plan = SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap();
+                plan.set_tuning(CommTuning::with_window(2).with_worker(worker));
+                let input = phased(plan.input_len(), grid.rank() as u64);
+                let (spec, _) = plan.forward(&backend, input);
+                let (back, _) = plan.inverse(&backend, spec.clone());
+                spec.into_iter().chain(back).collect::<Vec<Complex>>()
+            }
         };
-        let base = run_world(p, body);
+        let base = run_world(p, body(false));
+        let threaded = run_world(p, body(true));
+        assert_bits_eq(&base, &threaded, &format!("slab-pencil p={p} worker-on unperturbed"));
         for seed in 0..8u64 {
-            let got = run_world_perturbed(p, seed, body);
-            assert_bits_eq(&base, &got, &format!("slab-pencil p={p} seed={seed}"));
+            for worker in [false, true] {
+                let got = run_world_perturbed(p, seed, body(worker));
+                assert_bits_eq(
+                    &base,
+                    &got,
+                    &format!("slab-pencil p={p} seed={seed} worker={worker}"),
+                );
+            }
         }
     }
 }
@@ -124,17 +149,30 @@ fn perturbed_planewave_is_bit_identical() {
     let nb = 2usize;
     for p in [2usize, 3, 5] {
         let off = Arc::clone(&off);
-        let body = move |comm: fftb::comm::Comm| {
-            let grid = ProcGrid::new(&[p], comm).unwrap();
-            let backend = RustFftBackend::new();
-            let plan = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
-            let input = phased(plan.input_len(), grid.rank() as u64);
-            plan.forward(&backend, input).0
+        let body = move |worker: bool| {
+            let off = Arc::clone(&off);
+            move |comm: fftb::comm::Comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let mut plan =
+                    PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+                plan.set_tuning(CommTuning::with_window(2).with_worker(worker));
+                let input = phased(plan.input_len(), grid.rank() as u64);
+                plan.forward(&backend, input).0
+            }
         };
-        let base = run_world(p, body.clone());
+        let base = run_world(p, body(false));
+        let threaded = run_world(p, body(true));
+        assert_bits_eq(&base, &threaded, &format!("plane-wave p={p} worker-on unperturbed"));
         for seed in 0..8u64 {
-            let got = run_world_perturbed(p, seed, body.clone());
-            assert_bits_eq(&base, &got, &format!("plane-wave p={p} seed={seed}"));
+            for worker in [false, true] {
+                let got = run_world_perturbed(p, seed, body(worker));
+                assert_bits_eq(
+                    &base,
+                    &got,
+                    &format!("plane-wave p={p} seed={seed} worker={worker}"),
+                );
+            }
         }
     }
 }
@@ -187,6 +225,70 @@ fn perturbed_scf_is_bit_identical() {
                         "p={p} seed={seed} rank {r}: rho[{i}] differs ({a} vs {b})"
                     );
                 }
+            }
+        }
+    }
+}
+
+/// The same 2-iteration SCF cadence through a pinned plane-wave plan
+/// whose exchanges run on the threaded engine: worker-on must be
+/// bit-identical to worker-off, unperturbed and under perturbed
+/// schedules alike. (The tuner-driven test above owns its own worker
+/// choice; pinning the plan is what lets this one force the axis.)
+#[test]
+fn perturbed_scf_with_worker_is_bit_identical() {
+    const N: usize = 12;
+    const A: f64 = 8.0;
+    const ECUT: f64 = 2.0;
+    const NB: usize = 2;
+    let body = move |worker: bool| {
+        move |comm: fftb::comm::Comm| {
+            let lat = Lattice::new(A, N, ECUT);
+            let backend = RustFftBackend::new();
+            let grid = ProcGrid::new(&[comm.size()], comm.clone()).unwrap();
+            let plan = PlaneWavePlan::new(Arc::clone(&lat.offsets), NB, grid).unwrap();
+            let mut fx = Fftb { kind: PlanKind::PlaneWave(plan), sizes: [N, N, N], nb: NB };
+            fx.set_comm_tuning(CommTuning::with_window(2).with_worker(worker));
+            let opts =
+                ScfOptions { max_iters: 2, tol: 0.0, coupling: 0.3, ..Default::default() };
+            let mut runner = ScfRunner::with_plan(
+                lat,
+                NB,
+                &GaussianWells::single(2.0, 1.4),
+                &comm,
+                Arc::new(fx),
+                opts,
+            )
+            .expect("the pinned plane-wave plan must assemble");
+            let res = runner.run(&backend);
+            let mut scalars: Vec<f64> = res.eigenvalues.clone();
+            for s in &res.history {
+                scalars.push(s.charge);
+                scalars.push(s.delta_rho);
+                scalars.push(s.max_residual);
+            }
+            (scalars, res.density.rho)
+        }
+    };
+    let check = |base: &[(Vec<f64>, Vec<f64>)], got: &[(Vec<f64>, Vec<f64>)], what: &str| {
+        assert_eq!(base.len(), got.len(), "{what}: rank count");
+        for (r, ((bs, brho), (gs, grho))) in base.iter().zip(got).enumerate() {
+            for (i, (a, b)) in bs.iter().zip(gs).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{what} rank {r}: scalar {i} differs");
+            }
+            for (i, (a, b)) in brho.iter().zip(grho).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{what} rank {r}: rho[{i}] differs");
+            }
+        }
+    };
+    for p in [2usize, 3, 5] {
+        let base = run_world(p, body(false));
+        let threaded = run_world(p, body(true));
+        check(&base, &threaded, &format!("scf p={p} worker-on unperturbed"));
+        for seed in [1u64, 23, 0xDEAD_BEEF] {
+            for worker in [false, true] {
+                let got = run_world_perturbed(p, seed, body(worker));
+                check(&base, &got, &format!("scf p={p} seed={seed} worker={worker}"));
             }
         }
     }

@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use fftb::comm::communicator::run_world;
+use fftb::coordinator::{BatchingDriver, TransformJob};
 use fftb::fft::batch::Fft1d;
 use fftb::fft::complex::{max_abs_diff, Complex, ZERO};
 use fftb::fft::dft::{naive_dft, Direction};
@@ -253,6 +254,81 @@ fn prop_comm_alltoall_permutation() {
         for (dst, recv) in outs.iter().enumerate() {
             for (src, block) in recv.iter().enumerate() {
                 assert_eq!(block, &vec![src as u8, dst as u8, (src * p + dst) as u8]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batching_driver_pipeline_depths_agree() {
+    // The two-deep pipeline (de-interleave tail on the worker thread) must
+    // be bit-identical to the synchronous driver for random batch sizes
+    // and random forward/inverse flush orders — and both must be
+    // allocation-free from the second flush on (one direction-agnostic
+    // plan, warm workspace).
+    let mut rng = Prng::new(0xD217);
+    let shape = [8usize, 8, 8];
+    let p = 2usize;
+    for case in 0..6 {
+        let nb = 1 + rng.next_below(3);
+        let rounds = 3usize;
+        // Per-round flush order: true = forward first, false = inverse
+        // first. Drawn outside the worlds so every rank and both depths
+        // see the same schedule.
+        let order: Vec<bool> = (0..rounds).map(|_| rng.next_f64() < 0.5).collect();
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let per_band = shape[0] * shape[1] * shape[2] / p;
+            let mut run = |depth: usize| {
+                let mut driver = BatchingDriver::new(shape, Arc::clone(&grid))
+                    .with_pipeline_depth(depth);
+                let mut got = Vec::new();
+                let mut id = 0u64;
+                for fwd_first in &order {
+                    for dir in [Direction::Forward, Direction::Inverse] {
+                        for _ in 0..nb {
+                            driver.submit(TransformJob {
+                                id,
+                                data: phased(per_band, id),
+                                dir,
+                            });
+                            id += 1;
+                        }
+                    }
+                    let dirs = if *fwd_first {
+                        [Direction::Forward, Direction::Inverse]
+                    } else {
+                        [Direction::Inverse, Direction::Forward]
+                    };
+                    for d in dirs {
+                        assert_eq!(driver.flush(&backend, d), nb);
+                    }
+                }
+                got.extend(driver.drain_completed());
+                let traces = driver.drain_traces();
+                assert_eq!(traces.len(), 2 * rounds);
+                for (i, tr) in traces.iter().enumerate().skip(1) {
+                    assert_eq!(
+                        tr.alloc_bytes, 0,
+                        "depth {depth} flush {i}: steady state must not allocate"
+                    );
+                }
+                got
+            };
+            let d1 = run(1);
+            let d2 = run(2);
+            (d1, d2)
+        });
+        for (r, (d1, d2)) in outs.iter().enumerate() {
+            assert_eq!(d1.len(), d2.len(), "case {case} rank {r}: result count");
+            for ((id1, v1), (id2, v2)) in d1.iter().zip(d2) {
+                assert_eq!(id1, id2, "case {case} rank {r}: order must match");
+                assert_eq!(v1.len(), v2.len());
+                for (a, b) in v1.iter().zip(v2) {
+                    assert_eq!(a.re.to_bits(), b.re.to_bits(), "case {case} rank {r}");
+                    assert_eq!(a.im.to_bits(), b.im.to_bits(), "case {case} rank {r}");
+                }
             }
         }
     }
