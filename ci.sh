@@ -30,7 +30,11 @@
 #                  wisdom round trip), plus --worker: the depth-2 pipeline
 #                  smoke — the pinned-plan SCF with the exchange helper
 #                  worker enabled must be bit-identical to worker-off, and
-#                  the coordinator's two-deep pipeline to depth 1
+#                  the coordinator's two-deep pipeline to depth 1; then the
+#                  multi-tenant service smoke on p=2: two SCF tenants plus
+#                  a raw batched-sphere tenant coalescing through one
+#                  service (typed quota rejection, three-tenant flushes,
+#                  steady-state zero-alloc, per-tenant percentiles)
 #
 # Nightly sanitizer lanes (opt-in, PALLAS_NIGHTLY=1; PALLAS_NIGHTLY=only
 # skips the stable lanes and runs just the sanitizers):
@@ -62,7 +66,8 @@ if [ "$PALLAS_NIGHTLY" != "only" ]; then
     cargo build --examples --release --quiet
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
     cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4 --worker
-    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker)"
+    cargo run --release --quiet --example service_multi_tenant -- --p 2 --iters 3
+    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker + service smoke)"
 fi
 
 if [ -n "$PALLAS_NIGHTLY" ]; then

@@ -1,0 +1,216 @@
+//! END-TO-END: the multi-tenant transform service — two distributed SCF
+//! solvers plus one raw batched-sphere stream sharing ONE coalesced
+//! transform world.
+//!
+//! The scenario (CI runs this on p=2 as a smoke test):
+//!
+//! 1. an [`ScfServiceDriver`] hosts tenants "scf-a" (2 bands) and "scf-b"
+//!    (3 bands) on the same plane-wave sphere — each lockstep iteration
+//!    runs THREE coalesced flushes total, no matter how many tenants;
+//! 2. a third tenant, "aux-bands", submits raw sphere transforms through
+//!    [`TransformService`] *before* each `step`, so its jobs ride the
+//!    iteration's first forward flush — three tenants, one fused exchange;
+//! 3. a deliberately under-provisioned tenant, "greedy", shows typed
+//!    admission: the checkout past its one-slot quota returns
+//!    [`ServiceError::QuotaExhausted`] (never a panic, never an unbounded
+//!    queue), and dropping the outstanding slot frees the charge.
+//!
+//! Validation gates: charge conservation for both SCF tenants, every
+//! coalesced flush serving >= 2 tenants (the first forward flush of each
+//! iteration serving all 3), steady-state iterations with `plan_cache_hit`
+//! and zero `alloc_bytes`, and per-tenant p50/p95/p99 latency percentiles
+//! present in the service's [`MetricsSink`].
+//!
+//! Run: `cargo run --release --example service_multi_tenant [--p N]
+//!       [--iters K]`
+
+use fftb::comm::communicator::run_world;
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfServiceDriver};
+use fftb::fft::dft::Direction;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::plan::testutil::phased;
+use fftb::service::{ServiceConfig, ServiceError};
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let p = arg_usize("--p", 2);
+    let iters = arg_usize("--iters", 4);
+
+    let n = 12usize; // FFT grid
+    let a = 8.0; // cell (bohr)
+    let ecut = 2.0; // hartree
+    let aux_bands = 2usize; // the raw tenant's bands per iteration
+
+    println!("multi-tenant transform service");
+    println!("{n}^3 grid, a={a} bohr, ecut={ecut} Ha, {p} ranks, {iters} iterations");
+    println!("tenants: scf-a (2 bands) + scf-b (3 bands) + aux-bands ({aux_bands} raw)");
+    println!();
+
+    let out = run_world(p, move |comm| {
+        let lat = Lattice::new(a, n, ecut);
+        let backend = RustFftBackend::new();
+        let mut driver = ScfServiceDriver::new(&lat, &comm, ServiceConfig::default())
+            .expect("the service must assemble on this world");
+
+        let base = ScfOptions { max_iters: iters, tol: 0.0, ..Default::default() };
+        driver
+            .add_tenant(
+                "scf-a",
+                lat.clone(),
+                2,
+                &GaussianWells::single(1.0, 1.5),
+                &comm,
+                base.clone(),
+            )
+            .expect("tenant scf-a must register");
+        driver
+            .add_tenant(
+                "scf-b",
+                lat.clone(),
+                3,
+                &GaussianWells::single(3.0, 1.2),
+                &comm,
+                ScfOptions { seed: 7, ..base },
+            )
+            .expect("tenant scf-b must register");
+
+        let lane = driver.lane();
+        let aux = driver.service_mut().register_tenant("aux-bands");
+
+        // --- typed admission: a one-slot tenant refused past its quota.
+        let slot_bytes = driver.service().slot_bytes(lane).expect("the sphere lane exists");
+        let greedy = driver.service_mut().register_tenant_with_quota("greedy", slot_bytes);
+        let held = driver
+            .service_mut()
+            .checkout(greedy, lane, Direction::Forward)
+            .expect("the first checkout fits the one-slot quota");
+        let refused = driver.service_mut().checkout(greedy, lane, Direction::Forward);
+        let quota_err = match refused {
+            Err(e @ ServiceError::QuotaExhausted { .. }) => format!("{e}"),
+            Err(e) => panic!("expected QuotaExhausted, got {e:?}"),
+            Ok(_) => panic!("the over-quota checkout must be refused"),
+        };
+        drop(held); // recycling the slot frees the whole charge...
+        assert_eq!(driver.service().tenant_charged(greedy), 0, "drop must release the quota");
+        // ...so the same checkout now succeeds (and is dropped unused).
+        driver
+            .service_mut()
+            .checkout(greedy, lane, Direction::Forward)
+            .expect("the freed quota must admit the retry");
+
+        // --- the lockstep loop: aux submits BEFORE each step, so its raw
+        // bands coalesce into the iteration's first forward flush.
+        let mut aux_done = 0usize;
+        for it in 0..iters {
+            for b in 0..aux_bands as u64 {
+                let mut slot = driver
+                    .service_mut()
+                    .checkout(aux, lane, Direction::Forward)
+                    .expect("aux checkout fits the default quota");
+                let src = phased(slot.len(), it as u64 * aux_bands as u64 + b);
+                slot.data_mut().copy_from_slice(&src);
+                driver
+                    .service_mut()
+                    .submit(aux, lane, Direction::Forward, slot)
+                    .expect("aux submit fits the in-flight window");
+            }
+            driver.step(&backend).expect("the lockstep iteration must run");
+            let got = driver.service_mut().collect(aux);
+            assert_eq!(got.len(), aux_bands, "aux bands lost in the coalesced flush");
+            aux_done += got.len();
+        }
+        let results = driver.results();
+
+        // --- audit trail: every flush coalesced, the first of each
+        // iteration across all three tenants.
+        let recs: Vec<_> = driver.service().flush_records().to_vec();
+        assert_eq!(recs.len(), 3 * iters, "three coalesced flushes per iteration");
+        for (i, r) in recs.iter().enumerate() {
+            assert!(r.tenants >= 2, "flush {i} served a single tenant");
+        }
+        for it in 0..iters {
+            let first = &recs[3 * it];
+            assert_eq!(first.tenants, 3, "iteration {it}: aux missed the forward flush");
+            assert_eq!(first.jobs, 2 + 3 + aux_bands, "iteration {it}: wrong batch size");
+        }
+
+        let metrics_rows: Vec<String> = driver
+            .service()
+            .metrics()
+            .tenant_metrics()
+            .iter()
+            .filter(|t| t.requests > 0)
+            .map(|t| {
+                assert!(t.p50().is_some() && t.p95().is_some() && t.p99().is_some());
+                t.one_line()
+            })
+            .collect();
+        let messages = driver.service().metrics().total_messages();
+        (results, recs, metrics_rows, quota_err, aux_done, messages)
+    });
+
+    let (results, recs, metrics_rows, quota_err, aux_done, messages) = &out[0];
+
+    println!("== admission ==");
+    println!("greedy tenant refused past its quota: {quota_err}");
+    println!("(dropping the outstanding slot freed the charge; the retry was admitted)");
+    println!();
+
+    println!("== coalesced flushes (rank 0 audit trail) ==");
+    println!(
+        "{:>5} {:>8} {:>5} {:>8} {:>9} {:>7} {:>6}",
+        "flush", "dir", "jobs", "tenants", "messages", "cache", "alloc"
+    );
+    for (i, r) in recs.iter().enumerate() {
+        println!(
+            "{:>5} {:>8?} {:>5} {:>8} {:>9} {:>7} {:>6}",
+            i, r.dir, r.jobs, r.tenants, r.messages, r.plan_cache_hit, r.alloc_bytes
+        );
+    }
+    println!();
+
+    // --- validation gates (the CI smoke step relies on these).
+    for (r, (results_r, _, _, _, _, _)) in out.iter().enumerate() {
+        for res in results_r {
+            let nb = res.eigenvalues.len();
+            for s in &res.history {
+                assert!(
+                    (s.charge - nb as f64).abs() < 1e-6,
+                    "rank {r}: charge drift at iter {}",
+                    s.iter
+                );
+            }
+            let last = res.history.last().expect("the run must record history");
+            assert!(last.plan_cache_hit, "rank {r}: steady state re-planned");
+            assert_eq!(last.alloc_bytes, 0, "rank {r}: steady state allocated");
+        }
+    }
+    assert_eq!(*aux_done, iters * aux_bands, "aux must get every band back");
+
+    println!("== SCF tenants ==");
+    for res in results {
+        println!(
+            "{} bands: charge {:.8}, residual {:.3e} after {} iterations",
+            res.eigenvalues.len(),
+            res.history.last().map(|s| s.charge).unwrap_or(0.0),
+            res.history.last().map(|s| s.max_residual).unwrap_or(0.0),
+            res.iterations
+        );
+    }
+    println!();
+
+    println!("== per-tenant metrics ({messages} fused-exchange messages total) ==");
+    for row in metrics_rows {
+        println!("{row}");
+    }
+    println!();
+    println!("service_multi_tenant OK");
+}

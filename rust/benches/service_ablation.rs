@@ -1,0 +1,144 @@
+//! Service ablation: coalesced multi-tenant batching vs isolated runs.
+//!
+//! The service's claim is that several SCF tenants sharing one lane ride
+//! shared batched executions — one fused exchange per flush instead of
+//! one per stream — at no numerical cost (bit-identity is pinned by
+//! `tests/service.rs`; this bench measures the *price* side). Two
+//! configurations, identical physics and seeds:
+//!
+//! * `coalesced` — all tenants on ONE [`ScfServiceDriver`]: every
+//!   lockstep iteration runs three coalesced flushes total;
+//! * `isolated` — each tenant alone on its own driver, run back to back:
+//!   three flushes per iteration *per tenant*.
+//!
+//! Printed per configuration: wall time, fused-exchange point-to-point
+//! message count, and each tenant's p95 submit-to-completion latency.
+//!
+//! Run: `cargo bench --bench service_ablation`
+
+use std::time::{Duration, Instant};
+
+use fftb::comm::communicator::run_world;
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfServiceDriver};
+use fftb::fftb::backend::RustFftBackend;
+use fftb::service::ServiceConfig;
+
+const N: usize = 16;
+const A: f64 = 10.0;
+const ECUT: f64 = 2.5;
+const P: usize = 4;
+const ITERS: usize = 5;
+/// Band counts of the tenants — deliberately unequal so the coalesced
+/// batches are ragged across tenants, the realistic case.
+const NBS: [usize; 3] = [2, 3, 4];
+
+fn opts(seed_off: usize) -> ScfOptions {
+    ScfOptions {
+        max_iters: ITERS,
+        tol: 0.0,
+        coupling: 0.3,
+        seed: 42 + seed_off as u64,
+        ..Default::default()
+    }
+}
+
+fn potential() -> GaussianWells {
+    GaussianWells::dimer(3.0, 1.3, 0.35)
+}
+
+/// Run `tenants` (indexes into [`NBS`]) on one shared driver; returns
+/// (wall, fused-exchange messages, per-tenant p95 rows) from rank 0.
+fn run_shared(tenants: &'static [usize]) -> (Duration, u64, Vec<String>) {
+    let t0 = Instant::now();
+    let outs = run_world(P, move |comm| {
+        let backend = RustFftBackend::new();
+        let lat = Lattice::new(A, N, ECUT);
+        let mut driver = ScfServiceDriver::new(&lat, &comm, ServiceConfig::default())
+            .expect("the service must assemble");
+        for &t in tenants {
+            driver
+                .add_tenant(
+                    &format!("scf-{t}"),
+                    lat.clone(),
+                    NBS[t],
+                    &potential(),
+                    &comm,
+                    opts(t),
+                )
+                .expect("tenant registration is infallible here");
+        }
+        let results = driver.run(&backend).expect("the lockstep loop must run");
+        for res in &results {
+            let nb = res.eigenvalues.len() as f64;
+            assert!(
+                (res.density.charge - nb).abs() < 1e-6,
+                "charge drift in a service-driven tenant"
+            );
+        }
+        let rows: Vec<String> = driver
+            .service()
+            .metrics()
+            .tenant_metrics()
+            .iter()
+            .map(|t| {
+                format!(
+                    "{:<8} p95 {:?}",
+                    t.label,
+                    t.p95().expect("every tenant completed requests")
+                )
+            })
+            .collect();
+        (driver.service().metrics().total_messages(), rows)
+    });
+    let wall = t0.elapsed();
+    let (messages, rows) = outs.into_iter().next().unwrap();
+    (wall, messages, rows)
+}
+
+fn main() {
+    println!(
+        "service ablation: {N}^3 grid, ecut={ECUT}, tenants nb={NBS:?}, p={P}, {ITERS} iterations"
+    );
+
+    // Coalesced: every tenant on one driver, shared flushes.
+    let (co_wall, co_msgs, co_rows) = run_shared(&[0, 1, 2]);
+
+    // Isolated: the same tenants back to back, each alone on its driver.
+    static SOLO: [[usize; 1]; 3] = [[0], [1], [2]];
+    let mut iso_wall = Duration::ZERO;
+    let mut iso_msgs = 0u64;
+    let mut iso_rows = Vec::new();
+    for solo in &SOLO {
+        let (w, m, rows) = run_shared(solo);
+        iso_wall += w;
+        iso_msgs += m;
+        iso_rows.extend(rows);
+    }
+
+    println!("{:>10} {:>10} {:>10}", "config", "wall", "messages");
+    println!("{:>10} {:>10.1?} {:>10}", "coalesced", co_wall, co_msgs);
+    println!("{:>10} {:>10.1?} {:>10}", "isolated", iso_wall, iso_msgs);
+    println!();
+    println!("per-tenant p95 (coalesced):");
+    for r in &co_rows {
+        println!("  {r}");
+    }
+    println!("per-tenant p95 (isolated):");
+    for r in &iso_rows {
+        println!("  {r}");
+    }
+
+    // The whole point: sharing the flushes must cut the exchange count —
+    // three fused exchanges per iteration total, not per tenant — and the
+    // saved latency must show up on the wall clock.
+    assert!(
+        co_msgs < iso_msgs,
+        "coalesced flushes must send fewer messages than isolated runs \
+         ({co_msgs} vs {iso_msgs})"
+    );
+    assert!(
+        co_wall < iso_wall.mul_f64(1.25),
+        "the coalesced loop fell behind the isolated runs"
+    );
+    println!("service_ablation bench done");
+}

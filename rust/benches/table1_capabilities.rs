@@ -57,9 +57,13 @@ fn run_cell(
         let mut out_parts = parts;
         out_parts.push(cube);
 
-        let ti = DistTensor::zeros(DomainList::new(in_parts).unwrap(), in_layout, g.clone())
+        // Layout-by-plan: a 3D grid is folded to (d0*d1, d2) by the
+        // planner, and the tensors must be declared against that folded
+        // grid so their local sizing matches the plan's layouts.
+        let tg = if grid_dims.len() == 3 { g.fold().unwrap() } else { g.clone() };
+        let ti = DistTensor::zeros(DomainList::new(in_parts).unwrap(), in_layout, tg.clone())
             .unwrap();
-        let to = DistTensor::zeros(DomainList::new(out_parts).unwrap(), out_layout, g.clone())
+        let to = DistTensor::zeros(DomainList::new(out_parts).unwrap(), out_layout, tg)
             .unwrap();
         let fx = match Fftb::plan_opt([n, n, n], &to, "X Y Z", &ti, "x y z", g.clone(), opts) {
             Ok(fx) => fx,

@@ -8,7 +8,7 @@
 //! results are handed back per job.
 //!
 //! Plans are drawn from a per-driver [`PlanCache`] keyed by
-//! `(shape, nb, window, worker)` (direction-agnostic: one slab-pencil plan
+//! `(shape, nb, sphere, window, worker)` (direction-agnostic: one plan
 //! serves both directions): the first flush of a given batch size
 //! plans and warms a workspace, every later flush reuses both. The
 //! exchange window is either fixed at construction
@@ -52,9 +52,10 @@ use crate::comm::worker::Worker;
 use crate::fft::complex::{Complex, ZERO};
 use crate::fft::dft::Direction;
 use crate::fftb::backend::LocalFftBackend;
-use crate::fftb::error::Result;
+use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::ProcGrid;
-use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, SlabPencilPlan};
+use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, PlaneWavePlan, SlabPencilPlan};
+use crate::fftb::sphere::OffsetArray;
 use crate::model::machine::Machine;
 use crate::tuner::cache::{PlanCache, PlanKey};
 use crate::tuner::search::{self, CandidateKind, TuneRequest, WorkloadProfile};
@@ -105,6 +106,11 @@ pub struct BatchingDriver {
     /// `tuner::search::auto_window` on this machine description instead of
     /// taking `tuning.window`.
     auto_machine: Option<Machine>,
+    /// When set, this driver is a *sphere lane*: jobs carry packed
+    /// plane-wave coefficients for this cut-off sphere, and flushes run
+    /// batched [`PlaneWavePlan`]s (staged padding) instead of dense
+    /// slab-pencil transforms. See [`BatchingDriver::with_sphere`].
+    sphere: Option<Arc<OffsetArray>>,
     queue: Vec<TransformJob>,
     /// Reusable flush scratch: jobs taken this flush / jobs kept queued.
     take_buf: Vec<TransformJob>,
@@ -126,8 +132,8 @@ pub struct BatchingDriver {
     worker: Option<Worker>,
     /// The previous flush's tail, if still in flight on the worker.
     pending_tail: Option<PendingTail>,
-    /// Memoized plans, keyed by `(comm_id, shape, nb, window, worker)`;
-    /// see `plan_for` for why the key is direction-agnostic.
+    /// Memoized plans, keyed by `(comm_id, shape, nb, sphere, window,
+    /// worker)`; see `plan_for` for why the key is direction-agnostic.
     cache: PlanCache,
     /// Completed results by job id (collect with `drain_completed`).
     pub completed: Vec<(u64, Vec<Complex>)>,
@@ -152,6 +158,7 @@ impl BatchingDriver {
             comm_id,
             tuning,
             auto_machine: None,
+            sphere: None,
             queue: Vec::new(),
             take_buf: Vec::new(),
             keep_buf: Vec::new(),
@@ -186,6 +193,37 @@ impl BatchingDriver {
         self.pipeline_depth
     }
 
+    /// A *sphere-lane* driver: jobs submit packed plane-wave coefficients
+    /// for the cut-off sphere `off` (this rank's slice is the cyclic
+    /// x-restriction, [`OffsetArray::restrict_x_cyclic`]) and flushes run
+    /// batched [`PlaneWavePlan`]s — forward jobs carry
+    /// `off.restrict_x_cyclic(p, r).total()` elements and come back dense,
+    /// inverse jobs the reverse. The sphere's structural fingerprint joins
+    /// the plan-cache key, so two lanes over different spheres never share
+    /// a plan even at the same shape and batch size.
+    pub fn with_sphere(
+        shape: [usize; 3],
+        grid: Arc<ProcGrid>,
+        off: Arc<OffsetArray>,
+        tuning: CommTuning,
+    ) -> Result<Self> {
+        if shape != [off.nx, off.ny, off.nz] {
+            return Err(FftbError::Shape(format!(
+                "sphere offsets describe a {}x{}x{} grid but the driver shape is {shape:?}",
+                off.nx, off.ny, off.nz
+            )));
+        }
+        if grid.ndim() != 1 {
+            return Err(FftbError::Grid(format!(
+                "sphere lanes need a 1D processing grid, got {}D",
+                grid.ndim()
+            )));
+        }
+        let mut d = Self::with_tuning(shape, grid, tuning);
+        d.sphere = Some(off);
+        Ok(d)
+    }
+
     /// A driver that resolves its exchange window through the tuner's cost
     /// model instead of a fixed `CommTuning`: every flush prices the
     /// batched slab-pencil stage table for its *actual* batch size on
@@ -204,17 +242,23 @@ impl BatchingDriver {
     /// the fixed `CommTuning::window` otherwise.
     pub fn window_for(&self, nb: usize) -> usize {
         match &self.auto_machine {
-            Some(m) => search::auto_window(
-                CandidateKind::SlabPencil,
-                &TuneRequest {
-                    shape: self.shape,
-                    nb,
-                    p: self.grid.size(),
-                    sphere: None,
-                    profile: WorkloadProfile::Forward,
-                },
-                m,
-            ),
+            Some(m) => {
+                let kind = match &self.sphere {
+                    Some(_) => CandidateKind::PlaneWave,
+                    None => CandidateKind::SlabPencil,
+                };
+                search::auto_window(
+                    kind,
+                    &TuneRequest {
+                        shape: self.shape,
+                        nb,
+                        p: self.grid.size(),
+                        sphere: self.sphere.clone(),
+                        profile: WorkloadProfile::Forward,
+                    },
+                    m,
+                )
+            }
             None => self.tuning.window,
         }
     }
@@ -300,24 +344,30 @@ impl BatchingDriver {
     fn plan_for(&mut self, nb: usize) -> Result<(Arc<Fftb>, bool)> {
         let window = self.window_for(nb);
         // Static string keys: the per-flush lookup allocates nothing.
+        let (signature, kind, sphere_fp) = match &self.sphere {
+            Some(off) => ("driver:sphere", "plane-wave", off.fingerprint()),
+            None => ("driver:slab", "slab-pencil", 0),
+        };
         let key = PlanKey {
             comm_id: self.comm_id,
             sizes: self.shape,
-            signature: "driver:slab".into(),
-            kind: "slab-pencil".into(),
+            signature: signature.into(),
+            kind: kind.into(),
             nb,
             dir: None,
+            sphere: sphere_fp,
             window,
             worker: self.tuning.worker,
         };
         let (shape, grid) = (self.shape, Arc::clone(&self.grid));
         let worker = self.tuning.worker;
+        let sphere = self.sphere.clone();
         self.cache.get_or_insert(key, || {
-            let mut fx = Fftb {
-                kind: PlanKind::SlabPencil(SlabPencilPlan::new(shape, nb, grid)?),
-                sizes: shape,
-                nb,
+            let kind = match sphere {
+                Some(off) => PlanKind::PlaneWave(PlaneWavePlan::new(off, nb, grid)?),
+                None => PlanKind::SlabPencil(SlabPencilPlan::new(shape, nb, grid)?),
             };
+            let mut fx = Fftb { kind, sizes: shape, nb };
             fx.set_comm_tuning(CommTuning::with_window(window).with_worker(worker));
             Ok(fx)
         })
@@ -676,6 +726,68 @@ mod tests {
                     assert_eq!(tr.alloc_bytes, 0, "round {round} must stay warm");
                 }
             }
+        });
+    }
+
+    #[test]
+    fn sphere_lane_flush_matches_single_plane_wave_plans() {
+        use crate::fftb::plan::PlaneWavePlan;
+        use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+        let n = 8usize;
+        let p = 2;
+        let spec = SphereSpec::new([n, n, n], 3.0, SphereKind::Wrapped);
+        let off = Arc::new(spec.offsets());
+        let off2 = Arc::clone(&off);
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let mut driver = BatchingDriver::with_sphere(
+                [n, n, n],
+                Arc::clone(&grid),
+                Arc::clone(&off2),
+                CommTuning::default(),
+            )
+            .unwrap();
+            let loc = off2.restrict_x_cyclic(p, grid.rank());
+            let bands: Vec<Vec<Complex>> =
+                (0..3).map(|b| phased(loc.total(), 40 + b as u64)).collect();
+            for (i, b) in bands.iter().enumerate() {
+                driver.submit(TransformJob {
+                    id: i as u64,
+                    data: b.clone(),
+                    dir: Direction::Forward,
+                });
+            }
+            assert_eq!(driver.flush(&backend, Direction::Forward), 3);
+            // One fused exchange cadence for the whole batch, not three.
+            assert_eq!(driver.traces.len(), 1);
+
+            // Bit-identical to the single-band plane-wave plan per job.
+            let single = PlaneWavePlan::new(Arc::clone(&off2), 1, Arc::clone(&grid)).unwrap();
+            let mut ok = true;
+            for (id, got) in driver.drain_completed() {
+                let (want, _) = single.forward(&backend, bands[id as usize].clone());
+                ok &= got.len() == want.len()
+                    && got
+                        .iter()
+                        .zip(&want)
+                        .all(|(a, b)| a.re.to_bits() == b.re.to_bits()
+                            && a.im.to_bits() == b.im.to_bits());
+            }
+            ok
+        });
+        assert!(outs.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sphere_lane_rejects_mismatched_shape() {
+        use crate::fftb::sphere::{SphereKind, SphereSpec};
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let off = Arc::new(SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered).offsets());
+            let e = BatchingDriver::with_sphere([4, 4, 4], grid, off, CommTuning::default());
+            assert!(matches!(e, Err(crate::fftb::error::FftbError::Shape(_))));
         });
     }
 

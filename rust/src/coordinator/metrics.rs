@@ -12,6 +12,131 @@ use std::time::Duration;
 use crate::fftb::plan::{ExecTrace, StageKind};
 use crate::util::json::Json;
 
+/// Samples kept per latency reservoir. 256 windows the most recent
+/// behaviour of a long-lived service; the ring overwrite keeps the record
+/// path O(1) and allocation-free after construction.
+const RESERVOIR_CAP: usize = 256;
+
+/// Fixed-size latency reservoir: the last [`RESERVOIR_CAP`] samples in a
+/// preallocated ring. Recording never allocates (the buffer's full capacity
+/// is reserved up front); percentile queries sort a scratch copy, so they
+/// are the (cheap, off-path) side that pays.
+#[derive(Clone, Debug)]
+pub struct LatencyReservoir {
+    /// Sample ring (nanoseconds), preallocated to `RESERVOIR_CAP`.
+    samples: Vec<u64>,
+    /// Next overwrite position once the ring is full.
+    next: usize,
+    /// Total samples ever recorded (can exceed the ring size).
+    count: u64,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyReservoir {
+    /// An empty reservoir with its full ring capacity preallocated.
+    pub fn new() -> Self {
+        LatencyReservoir { samples: Vec::with_capacity(RESERVOIR_CAP), next: 0, count: 0 }
+    }
+
+    /// Record one latency sample. Zero-alloc: the ring was preallocated at
+    /// construction, so this is a push-within-capacity or an overwrite.
+    pub fn record(&mut self, ns: u64) {
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(ns);
+        } else {
+            self.samples[self.next] = ns;
+            self.next = (self.next + 1) % RESERVOIR_CAP;
+        }
+        self.count += 1;
+    }
+
+    /// Total samples ever recorded (not capped by the ring size).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The `p`-th percentile (0..=100, nearest-rank on the retained
+    /// window), or `None` before any sample arrives.
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        Some(Duration::from_nanos(sorted[idx.min(sorted.len() - 1)]))
+    }
+}
+
+/// Per-tenant request accounting: latency percentiles over a fixed-size
+/// reservoir plus throughput counters. Lives inside [`MetricsSink`]; the
+/// record path ([`TenantMetrics::record`]) is allocation-free.
+#[derive(Clone, Debug)]
+pub struct TenantMetrics {
+    /// Tenant label (as registered with the service).
+    pub label: String,
+    /// Requests completed so far.
+    pub requests: u64,
+    /// Payload bytes moved through completed requests.
+    pub bytes: u64,
+    /// Submit-to-completion latency reservoir.
+    pub latency: LatencyReservoir,
+}
+
+impl TenantMetrics {
+    /// Empty accounting for the tenant named `label`.
+    pub fn new(label: impl Into<String>) -> Self {
+        TenantMetrics {
+            label: label.into(),
+            requests: 0,
+            bytes: 0,
+            latency: LatencyReservoir::new(),
+        }
+    }
+
+    /// Record one completed request: its submit-to-completion latency and
+    /// payload size. Zero-alloc (counter bumps + ring write).
+    pub fn record(&mut self, latency_ns: u64, bytes: u64) {
+        self.requests += 1;
+        self.bytes += bytes;
+        self.latency.record(latency_ns);
+    }
+
+    /// Median latency over the retained window.
+    pub fn p50(&self) -> Option<Duration> {
+        self.latency.percentile(50.0)
+    }
+
+    /// 95th-percentile latency over the retained window.
+    pub fn p95(&self) -> Option<Duration> {
+        self.latency.percentile(95.0)
+    }
+
+    /// 99th-percentile latency over the retained window.
+    pub fn p99(&self) -> Option<Duration> {
+        self.latency.percentile(99.0)
+    }
+
+    /// One human-readable row: label, request/byte counters, percentiles.
+    pub fn one_line(&self) -> String {
+        let d = |p: Option<Duration>| p.map_or("-".to_string(), |d| format!("{d:?}"));
+        format!(
+            "{:<24} {:>8} reqs {:>12} B  p50 {:>10} p95 {:>10} p99 {:>10}",
+            self.label,
+            self.requests,
+            self.bytes,
+            d(self.p50()),
+            d(self.p95()),
+            d(self.p99())
+        )
+    }
+}
+
 /// Aggregated view of one experiment configuration.
 #[derive(Clone, Debug)]
 pub struct MetricsSink {
@@ -19,17 +144,38 @@ pub struct MetricsSink {
     pub label: String,
     /// Per-run traces recorded so far, in call order.
     pub runs: Vec<ExecTrace>,
+    /// Per-tenant accounting (service layer); indexed by the id handed out
+    /// by [`MetricsSink::register_tenant`].
+    pub tenants: Vec<TenantMetrics>,
 }
 
 impl MetricsSink {
     /// An empty sink for the configuration named `label`.
     pub fn new(label: impl Into<String>) -> Self {
-        MetricsSink { label: label.into(), runs: Vec::new() }
+        MetricsSink { label: label.into(), runs: Vec::new(), tenants: Vec::new() }
     }
 
     /// Record one execution's trace.
     pub fn record(&mut self, trace: ExecTrace) {
         self.runs.push(trace);
+    }
+
+    /// Register a tenant for per-tenant accounting; returns its index for
+    /// [`MetricsSink::record_tenant`].
+    pub fn register_tenant(&mut self, label: impl Into<String>) -> usize {
+        self.tenants.push(TenantMetrics::new(label));
+        self.tenants.len() - 1
+    }
+
+    /// Record one completed request of tenant `idx` (zero-alloc; see
+    /// [`TenantMetrics::record`]).
+    pub fn record_tenant(&mut self, idx: usize, latency_ns: u64, bytes: u64) {
+        self.tenants[idx].record(latency_ns, bytes);
+    }
+
+    /// Per-tenant accounting rows registered so far.
+    pub fn tenant_metrics(&self) -> &[TenantMetrics] {
+        &self.tenants
     }
 
     /// Mean wall-clock time per run, summed over all stages.
@@ -182,6 +328,51 @@ mod tests {
         m.record(hot);
         assert!((m.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(m.total_alloc_bytes(), 4096);
+    }
+
+    #[test]
+    fn reservoir_percentiles_are_nearest_rank() {
+        let mut r = LatencyReservoir::new();
+        assert!(r.percentile(50.0).is_none());
+        for ns in 1..=100u64 {
+            r.record(ns);
+        }
+        assert_eq!(r.count(), 100);
+        assert_eq!(r.percentile(50.0), Some(Duration::from_nanos(51)));
+        assert_eq!(r.percentile(95.0), Some(Duration::from_nanos(95)));
+        assert_eq!(r.percentile(99.0), Some(Duration::from_nanos(99)));
+        assert_eq!(r.percentile(0.0), Some(Duration::from_nanos(1)));
+        assert_eq!(r.percentile(100.0), Some(Duration::from_nanos(100)));
+    }
+
+    #[test]
+    fn reservoir_ring_overwrites_oldest_without_allocating() {
+        let mut r = LatencyReservoir::new();
+        let cap0 = r.samples.capacity();
+        for ns in 0..(RESERVOIR_CAP as u64 * 2) {
+            r.record(ns);
+        }
+        assert_eq!(r.samples.capacity(), cap0, "ring must never grow past its preallocation");
+        assert_eq!(r.samples.len(), RESERVOIR_CAP);
+        assert_eq!(r.count(), RESERVOIR_CAP as u64 * 2);
+        // Only the newest window survives.
+        assert!(r.samples.iter().all(|&ns| ns >= RESERVOIR_CAP as u64));
+    }
+
+    #[test]
+    fn tenant_metrics_accumulate_per_tenant() {
+        let mut m = MetricsSink::new("service");
+        let a = m.register_tenant("scf-a");
+        let b = m.register_tenant("scf-b");
+        for i in 0..10u64 {
+            m.record_tenant(a, 1000 + i, 64);
+        }
+        m.record_tenant(b, 5000, 128);
+        assert_eq!(m.tenant_metrics()[a].requests, 10);
+        assert_eq!(m.tenant_metrics()[a].bytes, 640);
+        assert_eq!(m.tenant_metrics()[b].requests, 1);
+        assert!(m.tenant_metrics()[a].p50().unwrap() < m.tenant_metrics()[b].p50().unwrap());
+        assert!(m.tenant_metrics()[a].one_line().contains("scf-a"));
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod driver;
 pub mod metrics;
 
 pub use driver::{BatchingDriver, TransformJob};
-pub use metrics::MetricsSink;
+pub use metrics::{LatencyReservoir, MetricsSink, TenantMetrics};

@@ -23,4 +23,5 @@ pub use hamiltonian::{GaussianWells, Hamiltonian};
 pub use lattice::Lattice;
 pub use scf::{
     build_density, mix_density, Density, ScfIterStats, ScfOptions, ScfResult, ScfRunner,
+    ScfServiceDriver,
 };

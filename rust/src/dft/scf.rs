@@ -30,14 +30,16 @@ use std::sync::Arc;
 
 use crate::comm::collectives::allreduce_sum_f64;
 use crate::comm::communicator::Comm;
-use crate::fft::complex::Complex;
+use crate::fft::complex::{Complex, ZERO};
+use crate::fft::dft::Direction;
 use crate::fftb::backend::LocalFftBackend;
 use crate::fftb::domain::{Domain, DomainList};
-use crate::fftb::error::Result;
+use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::{cyclic, ProcGrid};
-use crate::fftb::plan::{ExecTrace, Fftb};
+use crate::fftb::plan::{ExecTrace, Fftb, PlanKind, PlaneWavePlan};
 use crate::fftb::tensor::DistTensor;
 use crate::model::machine::Machine;
+use crate::service::{ServiceConfig, ServiceError, TenantId, TransformService};
 use crate::tuner::{Tuner, Wisdom};
 use crate::util::prng::Prng;
 
@@ -431,64 +433,28 @@ impl ScfRunner {
             // H psi: batched sphere-forward + pointwise V(r) + inverse.
             let (hpsi, traces) = self.h.apply(backend, &self.psi.local);
 
-            // Rayleigh-Ritz in the current subspace.
-            let m = subspace_matrix(&comm, &self.psi.local, &hpsi, nb);
-            let (theta, u) = eigh_jacobi(&m, 30);
-            rotate_bands(&mut self.psi.local, nb, &u);
-            let mut resid = hpsi;
-            rotate_bands(&mut resid, nb, &u);
-            eigenvalues.copy_from_slice(&theta);
-
-            // Residuals R = H psi - theta psi, then one preconditioned
-            // descent step psi <- psi - K R (K = 1 / (1 + kin/|theta|)).
-            let mut res2 = vec![0.0f64; nb];
-            let kin = self.h.kinetic();
-            for (e, chunk) in resid.chunks_exact_mut(nb).enumerate() {
-                for b in 0..nb {
-                    chunk[b] -= self.psi.local[b + nb * e].scale(theta[b]);
-                    res2[b] += chunk[b].norm_sqr();
-                }
-                let t = kin[e];
-                for b in 0..nb {
-                    let k = 1.0 / (1.0 + t / theta[b].abs().max(0.5));
-                    self.psi.local[b + nb * e] -= chunk[b].scale(k);
-                }
-            }
-            allreduce_sum_f64(&comm, &mut res2);
-            // res2 was just sum-allreduced (gather-at-0 + broadcast), so
-            // every rank holds bit-identical values — the max needs no
-            // further collective.
-            let max_residual = res2.iter().cloned().fold(0.0, f64::max).sqrt();
+            // Rayleigh-Ritz + one preconditioned descent step (the body
+            // shared verbatim with the service-driven loop, so the two
+            // paths stay bit-identical).
+            let (max_residual, resid) = Self::ritz_and_descend(
+                &comm,
+                &mut self.psi.local,
+                hpsi,
+                self.h.kinetic(),
+                nb,
+                &mut eigenvalues,
+            );
             // The band-block buffer came from the plan's slot pool (it was
             // the inverse-transform output); hand it back so the pool
             // stays balanced and later iterations allocate nothing.
             self.h.plan.recycle(resid);
             orthonormalize(&comm, &mut self.psi.local, nb);
 
-            // Fresh density (one more batched forward), charge and change.
+            // Fresh density (one more batched forward), charge and change,
+            // mixing and potential feedback.
             let mut rho_new = std::mem::take(&mut self.rho_new);
             let tr_d = self.h.density_into(backend, &self.psi.local, &mut rho_new);
-            let mut sums = [
-                rho_new.iter().sum::<f64>() * dv,
-                rho_new.iter().zip(&self.rho).map(|(a, b)| (a - b).abs()).sum::<f64>() * dv,
-            ];
-            allreduce_sum_f64(&comm, &mut sums);
-            let (charge, delta_rho) = (sums[0], sums[1]);
-
-            // Mix, then fold the density back into the potential.
-            if it == 1 {
-                self.rho.copy_from_slice(&rho_new);
-            } else {
-                mix_density(&mut self.rho, &rho_new, self.opts.mix);
-            }
-            self.rho_new = rho_new;
-            if self.opts.coupling != 0.0 {
-                let u = self.opts.coupling;
-                let vloc = self.h.vloc_mut();
-                for (v, (ve, r)) in vloc.iter_mut().zip(self.vext.iter().zip(&self.rho)) {
-                    *v = ve + u * r;
-                }
-            }
+            let (charge, delta_rho) = self.absorb_density(it, rho_new, dv);
 
             // Stamp the cache provenance onto the iteration's traces (the
             // per-execution view the steady-state tests consume) and log
@@ -551,6 +517,390 @@ impl ScfRunner {
     /// steady-state tests and the metrics sink consume.
     pub fn drain_traces(&mut self) -> Vec<ExecTrace> {
         std::mem::take(&mut self.traces)
+    }
+
+    /// Rayleigh-Ritz rotation plus one preconditioned descent step — the
+    /// per-iteration eigen-update shared *verbatim* by [`ScfRunner::run`]
+    /// and the service-driven loop ([`ScfServiceDriver`]): one body, so
+    /// the two paths are arithmetically identical and their scalars
+    /// bit-equal. `resid` enters holding `H psi` (batch-fastest band
+    /// block) and leaves as the spent residual block; the caller owns
+    /// recycling its storage. Returns the allreduced max band-residual
+    /// 2-norm together with that spent block.
+    fn ritz_and_descend(
+        comm: &Comm,
+        psi: &mut [Complex],
+        mut resid: Vec<Complex>,
+        kin: &[f64],
+        nb: usize,
+        eigenvalues: &mut [f64],
+    ) -> (f64, Vec<Complex>) {
+        let m = subspace_matrix(comm, psi, &resid, nb);
+        let (theta, u) = eigh_jacobi(&m, 30);
+        rotate_bands(psi, nb, &u);
+        rotate_bands(&mut resid, nb, &u);
+        eigenvalues.copy_from_slice(&theta);
+
+        // Residuals R = H psi - theta psi, then one preconditioned
+        // descent step psi <- psi - K R (K = 1 / (1 + kin/|theta|)).
+        let mut res2 = vec![0.0f64; nb];
+        for (e, chunk) in resid.chunks_exact_mut(nb).enumerate() {
+            for b in 0..nb {
+                chunk[b] -= psi[b + nb * e].scale(theta[b]);
+                res2[b] += chunk[b].norm_sqr();
+            }
+            let t = kin[e];
+            for b in 0..nb {
+                let k = 1.0 / (1.0 + t / theta[b].abs().max(0.5));
+                psi[b + nb * e] -= chunk[b].scale(k);
+            }
+        }
+        allreduce_sum_f64(comm, &mut res2);
+        // res2 was just sum-allreduced (gather-at-0 + broadcast), so
+        // every rank holds bit-identical values — the max needs no
+        // further collective.
+        let max_residual = res2.iter().cloned().fold(0.0, f64::max).sqrt();
+        (max_residual, resid)
+    }
+
+    /// Absorb a freshly built density: allreduce its charge and L1
+    /// change, mix it into the running density (the first iteration
+    /// copies outright), park the storage for the next iteration, and
+    /// fold the result back into the local potential when the mean-field
+    /// coupling is on. Shared verbatim by [`ScfRunner::run`] and the
+    /// service-driven loop. Returns `(charge, delta_rho)`.
+    fn absorb_density(&mut self, it: usize, rho_new: Vec<f64>, dv: f64) -> (f64, f64) {
+        let mut sums = [
+            rho_new.iter().sum::<f64>() * dv,
+            rho_new.iter().zip(&self.rho).map(|(a, b)| (a - b).abs()).sum::<f64>() * dv,
+        ];
+        allreduce_sum_f64(&self.comm, &mut sums);
+        let (charge, delta_rho) = (sums[0], sums[1]);
+
+        // Mix, then fold the density back into the potential.
+        if it == 1 {
+            self.rho.copy_from_slice(&rho_new);
+        } else {
+            mix_density(&mut self.rho, &rho_new, self.opts.mix);
+        }
+        self.rho_new = rho_new;
+        if self.opts.coupling != 0.0 {
+            let u = self.opts.coupling;
+            let vloc = self.h.vloc_mut();
+            for (v, (ve, r)) in vloc.iter_mut().zip(self.vext.iter().zip(&self.rho)) {
+                *v = ve + u * r;
+            }
+        }
+        (charge, delta_rho)
+    }
+}
+
+/// Several SCF solvers as tenants of one [`TransformService`].
+///
+/// Each lockstep iteration batches *every* active tenant's bands into the
+/// service's shared sphere lane and flushes them as three coalesced
+/// executions — the H-apply forward, its inverse, and the density forward
+/// — so two solvers pay roughly one solver's worth of exchange latency
+/// instead of two (fewer, larger messages; the paper's batching argument
+/// applied across clients). Per-band transforms are arithmetically
+/// independent inside a batch, and the per-tenant updates between flushes
+/// are the *same code* the standalone runner executes
+/// (`ritz_and_descend`, `absorb_density`, [`Hamiltonian`]'s pointwise
+/// forms), so every tenant's global scalars — charge, `delta_rho`, max
+/// residual — are bit-identical to running that tenant alone on a pinned
+/// plane-wave plan. `tests/service.rs` pins this across world sizes.
+///
+/// SPMD contract: construct, register tenants, and step in identical
+/// order on every rank.
+pub struct ScfServiceDriver {
+    service: TransformService,
+    lane: u64,
+    it: usize,
+    tenants: Vec<ScfTenant>,
+}
+
+/// One SCF solver riding the service.
+struct ScfTenant {
+    id: TenantId,
+    runner: ScfRunner,
+    /// Reusable interleaved `H psi` block (`[nb, n_local]`, batch
+    /// fastest); the spent residual of one iteration becomes the scratch
+    /// of the next, so the steady-state loop allocates nothing here.
+    hpsi: Vec<Complex>,
+    eigenvalues: Vec<f64>,
+    max_residual: f64,
+    history: Vec<ScfIterStats>,
+    converged: bool,
+}
+
+impl ScfTenant {
+    fn active(&self, it: usize) -> bool {
+        !self.converged && it <= self.runner.opts.max_iters
+    }
+}
+
+fn svc_err(e: ServiceError) -> FftbError {
+    FftbError::Runtime(format!("transform service: {e}"))
+}
+
+impl ScfServiceDriver {
+    /// A driver whose tenants all share `lattice`'s plane-wave sphere on
+    /// the world of `comm`. Collective — identical arguments on every
+    /// rank.
+    pub fn new(lattice: &Lattice, comm: &Comm, config: ServiceConfig) -> Result<ScfServiceDriver> {
+        let n = lattice.n;
+        let grid = ProcGrid::new(&[comm.size()], comm.clone())?;
+        let mut service = TransformService::new([n, n, n], grid, config)?;
+        let lane = service.sphere_lane(Arc::clone(&lattice.offsets))?;
+        Ok(ScfServiceDriver { service, lane, it: 0, tenants: Vec::new() })
+    }
+
+    /// Register one SCF solver as a tenant on a pinned plane-wave plan.
+    /// Its quota is sized to exactly its band-parallel working set —
+    /// `nb` slots — so a correctly behaving driver never trips admission
+    /// while a runaway submitter would. `lattice` must carry the sphere
+    /// the driver was built with; registration order must be identical
+    /// on every rank.
+    pub fn add_tenant(
+        &mut self,
+        label: &str,
+        lattice: Lattice,
+        nb: usize,
+        potential: &GaussianWells,
+        comm: &Comm,
+        opts: ScfOptions,
+    ) -> Result<TenantId> {
+        if lattice.offsets.fingerprint() != self.lane {
+            return Err(FftbError::Shape(
+                "service SCF tenants must share the driver's plane-wave sphere".into(),
+            ));
+        }
+        let n = lattice.n;
+        let grid = ProcGrid::new(&[comm.size()], comm.clone())?;
+        let plan = PlaneWavePlan::new(Arc::clone(&lattice.offsets), nb, grid)?;
+        let plan = Arc::new(Fftb { kind: PlanKind::PlaneWave(plan), sizes: [n, n, n], nb });
+        let runner = ScfRunner::with_plan(lattice, nb, potential, comm, plan, opts)?;
+        let slot = match self.service.slot_bytes(self.lane) {
+            Some(b) => b,
+            None => return Err(FftbError::Runtime("service lane vanished".into())),
+        };
+        let id = self.service.register_tenant_with_quota(label, nb * slot);
+        self.tenants.push(ScfTenant {
+            id,
+            runner,
+            hpsi: Vec::new(),
+            eigenvalues: vec![0.0; nb],
+            max_residual: 0.0,
+            history: Vec::new(),
+            converged: false,
+        });
+        Ok(id)
+    }
+
+    /// The service under the driver — flush records and per-tenant
+    /// metrics for audits.
+    pub fn service(&self) -> &TransformService {
+        &self.service
+    }
+
+    /// Mutable service access, the submission surface for extra non-SCF
+    /// tenants sharing the lane: submit their requests *before*
+    /// [`ScfServiceDriver::step`] and they coalesce into the iteration's
+    /// first forward flush.
+    pub fn service_mut(&mut self) -> &mut TransformService {
+        &mut self.service
+    }
+
+    /// Key of the shared sphere lane.
+    pub fn lane(&self) -> u64 {
+        self.lane
+    }
+
+    /// Run one lockstep SCF iteration across every active tenant — three
+    /// coalesced flushes total, regardless of tenant count. Returns
+    /// whether any tenant was still active (converged tenants stop
+    /// submitting; `delta_rho` is allreduced, so the decision is
+    /// SPMD-consistent without extra communication).
+    pub fn step(&mut self, backend: &dyn LocalFftBackend) -> Result<bool> {
+        self.it += 1;
+        let it = self.it;
+        if !self.tenants.iter().any(|t| t.active(it)) {
+            return Ok(false);
+        }
+        let rec_mark = self.service.flush_records().len();
+
+        // Phase A: orthonormalize, then submit every active tenant's
+        // bands; ONE coalesced sphere-forward flush serves them all.
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let nb = t.runner.h.nb;
+            orthonormalize(&t.runner.comm, &mut t.runner.psi.local, nb);
+            let per = t.runner.h.n_local();
+            for b in 0..nb {
+                let mut slot = self
+                    .service
+                    .checkout(t.id, self.lane, Direction::Forward)
+                    .map_err(svc_err)?;
+                let dst = slot.data_mut();
+                for e in 0..per {
+                    dst[e] = t.runner.psi.local[b + nb * e];
+                }
+                self.service
+                    .submit(t.id, self.lane, Direction::Forward, slot)
+                    .map_err(svc_err)?;
+            }
+        }
+        self.service.flush(backend, Direction::Forward);
+
+        // Pointwise V(r) on each dense band (the same per-element form as
+        // `Hamiltonian::apply`), resubmitted as the inverse half of the
+        // Hamiltonian application — again one coalesced flush.
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let collected = self.service.collect(t.id);
+            let vloc = t.runner.h.vloc();
+            for (_, mut slot) in collected {
+                for (i, c) in slot.data_mut().iter_mut().enumerate() {
+                    *c = c.scale(vloc[i]);
+                }
+                self.service
+                    .submit(t.id, self.lane, Direction::Inverse, slot)
+                    .map_err(svc_err)?;
+            }
+        }
+        self.service.flush(backend, Direction::Inverse);
+
+        // Phase B: assemble `H psi` (kinetic term added in G-space, same
+        // form as `Hamiltonian::apply`), then the shared Ritz + descent
+        // step; the collected slots drop straight back into the tenant's
+        // pool.
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let nb = t.runner.h.nb;
+            let per = t.runner.h.n_local();
+            t.hpsi.clear();
+            t.hpsi.resize(nb * per, ZERO);
+            let collected = self.service.collect(t.id);
+            debug_assert_eq!(collected.len(), nb, "one inverse result per band");
+            for (b, (_, slot)) in collected.iter().enumerate() {
+                let src = slot.data();
+                for e in 0..per {
+                    t.hpsi[b + nb * e] = src[e];
+                }
+            }
+            drop(collected);
+            let kin = t.runner.h.kinetic();
+            for (e, &tk) in kin.iter().enumerate() {
+                for b in 0..nb {
+                    let idx = b + nb * e;
+                    t.hpsi[idx] += t.runner.psi.local[idx].scale(tk);
+                }
+            }
+            let hpsi = std::mem::take(&mut t.hpsi);
+            let (max_res, resid) = ScfRunner::ritz_and_descend(
+                &t.runner.comm,
+                &mut t.runner.psi.local,
+                hpsi,
+                t.runner.h.kinetic(),
+                nb,
+                &mut t.eigenvalues,
+            );
+            t.max_residual = max_res;
+            t.hpsi = resid;
+            orthonormalize(&t.runner.comm, &mut t.runner.psi.local, nb);
+        }
+
+        // Phase C: density forwards for every active tenant, one more
+        // coalesced flush.
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let nb = t.runner.h.nb;
+            let per = t.runner.h.n_local();
+            for b in 0..nb {
+                let mut slot = self
+                    .service
+                    .checkout(t.id, self.lane, Direction::Forward)
+                    .map_err(svc_err)?;
+                let dst = slot.data_mut();
+                for e in 0..per {
+                    dst[e] = t.runner.psi.local[b + nb * e];
+                }
+                self.service
+                    .submit(t.id, self.lane, Direction::Forward, slot)
+                    .map_err(svc_err)?;
+            }
+        }
+        self.service.flush(backend, Direction::Forward);
+        let (hit, alloc) = {
+            let recs = &self.service.flush_records()[rec_mark..];
+            (
+                recs.iter().all(|r| r.plan_cache_hit),
+                recs.iter().map(|r| r.alloc_bytes).sum::<u64>(),
+            )
+        };
+
+        // Accumulate |psi|^2 per grid point across bands in ascending
+        // band order — the exact fold `Hamiltonian::density_into` runs —
+        // then the shared absorb (allreduce, mix, coupling) per tenant.
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let nb = t.runner.h.nb;
+            let collected = self.service.collect(t.id);
+            debug_assert_eq!(collected.len(), nb, "one density result per band");
+            let npts = t.runner.h.vloc().len();
+            let n = t.runner.h.lattice.n;
+            let cell_vol = t.runner.h.lattice.a.powi(3);
+            let dv = cell_vol / (n * n * n) as f64;
+            let scale = 1.0 / cell_vol;
+            let mut rho_new = std::mem::take(&mut t.runner.rho_new);
+            rho_new.clear();
+            rho_new.resize(npts, 0.0);
+            for (i, r) in rho_new.iter_mut().enumerate() {
+                let mut s = 0.0f64;
+                for (_, slot) in &collected {
+                    s += slot.data()[i].norm_sqr();
+                }
+                *r = s * scale;
+            }
+            drop(collected);
+            let (charge, delta_rho) = t.runner.absorb_density(it, rho_new, dv);
+            t.history.push(ScfIterStats {
+                iter: it,
+                charge,
+                delta_rho,
+                max_residual: t.max_residual,
+                plan_cache_hit: hit,
+                alloc_bytes: alloc,
+                transforms: 3,
+            });
+            if it > 1 && delta_rho / nb as f64 < t.runner.opts.tol {
+                t.converged = true;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Run until every tenant converges or exhausts its iteration budget;
+    /// returns one [`ScfResult`] per tenant, in registration order.
+    pub fn run(&mut self, backend: &dyn LocalFftBackend) -> Result<Vec<ScfResult>> {
+        while self.step(backend)? {}
+        Ok(self.results())
+    }
+
+    /// Per-tenant results so far, in registration order.
+    pub fn results(&self) -> Vec<ScfResult> {
+        self.tenants
+            .iter()
+            .map(|t| ScfResult {
+                density: Density {
+                    rho: t.runner.rho.clone(),
+                    charge: t.history.last().map(|h| h.charge).unwrap_or(0.0),
+                },
+                eigenvalues: t.eigenvalues.clone(),
+                history: t.history.clone(),
+                iterations: t.history.len(),
+                converged: t.converged,
+                plan_kind: t.runner.plan_kind.clone(),
+                window: t.runner.window,
+                from_wisdom: t.runner.from_wisdom,
+                measured: t.runner.measured,
+            })
+            .collect()
     }
 }
 
@@ -710,5 +1060,103 @@ mod tests {
             assert!(worst < 1e-12, "vloc must equal vext + u*rho (err {worst})");
             assert!(res.density.rho.iter().any(|&r| r > 1e-6), "density must be nonzero");
         }
+    }
+
+    /// A standalone runner pinned to the same plane-wave plan the service
+    /// driver builds for its tenants.
+    fn pinned_runner(
+        lat: Lattice,
+        nb: usize,
+        pot: &GaussianWells,
+        comm: &Comm,
+        opts: ScfOptions,
+    ) -> ScfRunner {
+        let n = lat.n;
+        let grid = ProcGrid::new(&[comm.size()], comm.clone()).unwrap();
+        let plan = PlaneWavePlan::new(Arc::clone(&lat.offsets), nb, grid).unwrap();
+        let plan = Arc::new(Fftb { kind: PlanKind::PlaneWave(plan), sizes: [n, n, n], nb });
+        ScfRunner::with_plan(lat, nb, pot, comm, plan, opts).unwrap()
+    }
+
+    #[test]
+    fn service_driver_tenants_match_standalone_runs_bit_for_bit() {
+        // Two SCF solvers (different band counts, potentials and seeds)
+        // share one TransformService; every iteration's three flushes
+        // coalesce both tenants' bands into single batched executions,
+        // yet each tenant's scalars, eigenvalues and final density are
+        // bit-identical to running it alone on a pinned plan.
+        let p = 2;
+        let iters = 4;
+        run_world(p, move |comm| {
+            let lat = Lattice::new(8.0, 12, 2.0);
+            let backend = RustFftBackend::new();
+            let pot_a = GaussianWells::single(1.0, 1.5);
+            let pot_b = GaussianWells::single(3.0, 1.2);
+            let opts_a = ScfOptions { max_iters: iters, tol: 0.0, ..Default::default() };
+            let opts_b =
+                ScfOptions { max_iters: iters, tol: 0.0, seed: 7, ..Default::default() };
+
+            let mut driver =
+                ScfServiceDriver::new(&lat, &comm, ServiceConfig::default()).unwrap();
+            let a = driver
+                .add_tenant("scf-a", lat.clone(), 2, &pot_a, &comm, opts_a.clone())
+                .unwrap();
+            let b = driver
+                .add_tenant("scf-b", lat.clone(), 3, &pot_b, &comm, opts_b.clone())
+                .unwrap();
+            let results = driver.run(&backend).unwrap();
+
+            // Every iteration flushed both tenants' bands together: three
+            // coalesced flushes per iteration (2 + 3 = 5 jobs each), not
+            // the six separate ones two isolated loops would pay.
+            let recs = driver.service().flush_records();
+            assert_eq!(recs.len(), 3 * iters);
+            for r in recs {
+                assert_eq!(r.tenants, 2, "flush must serve both tenants");
+                assert_eq!(r.jobs, 5, "2 + 3 bands per coalesced flush");
+            }
+            // Steady state through the service path: the last iteration
+            // ran entirely on cached plans with zero workspace growth.
+            let last = results[0].history.last().unwrap();
+            assert!(last.plan_cache_hit, "steady-state iterations must be cache hits");
+            assert_eq!(last.alloc_bytes, 0, "steady-state iterations must not allocate");
+            // Per-tenant telemetry grew: 3 transforms x nb bands x iters
+            // requests each, with live latency percentiles.
+            let mt = &driver.service().metrics().tenant_metrics()[a.index()];
+            assert_eq!(mt.requests, (3 * 2 * iters) as u64);
+            assert!(mt.p50().is_some() && mt.p95().is_some() && mt.p99().is_some());
+            assert_eq!(
+                driver.service().metrics().tenant_metrics()[b.index()].requests,
+                (3 * 3 * iters) as u64
+            );
+            // All quota charges returned once the run's slots dropped.
+            assert_eq!(driver.service().tenant_charged(a), 0);
+            assert_eq!(driver.service().tenant_charged(b), 0);
+
+            // The same two problems, each alone on a pinned plan.
+            let res_a = pinned_runner(lat.clone(), 2, &pot_a, &comm, opts_a).run(&backend);
+            let res_b = pinned_runner(lat.clone(), 3, &pot_b, &comm, opts_b).run(&backend);
+
+            for (svc, alone) in [(&results[0], &res_a), (&results[1], &res_b)] {
+                assert_eq!(svc.history.len(), alone.history.len());
+                for (s, t) in svc.history.iter().zip(&alone.history) {
+                    assert_eq!(s.charge.to_bits(), t.charge.to_bits(), "iter {}", s.iter);
+                    assert_eq!(s.delta_rho.to_bits(), t.delta_rho.to_bits(), "iter {}", s.iter);
+                    assert_eq!(
+                        s.max_residual.to_bits(),
+                        t.max_residual.to_bits(),
+                        "iter {}",
+                        s.iter
+                    );
+                }
+                for (x, y) in svc.eigenvalues.iter().zip(&alone.eigenvalues) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                assert_eq!(svc.density.rho.len(), alone.density.rho.len());
+                for (x, y) in svc.density.rho.iter().zip(&alone.density.rho) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        });
     }
 }

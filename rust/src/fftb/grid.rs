@@ -107,6 +107,23 @@ impl ProcGrid {
     pub fn comm(&self) -> &Comm {
         &self.comm
     }
+
+    /// Fold a 3D grid `[d0, d1, d2]` into the 2D grid `[d0*d1, d2]` the
+    /// planner actually runs pencil plans on (layout-by-plan: the paper's
+    /// framework owns intermediate layouts, so the extra grid dimension is
+    /// absorbed into the first pencil axis). Tensors taking part in a
+    /// 3D-grid plan must be declared against *this* folded grid — the
+    /// planner validates their sizes against the folded plan and rejects
+    /// tensors declared on the unfolded grid ([`FftbError::Shape`]).
+    pub fn fold(&self) -> Result<Arc<Self>> {
+        if self.ndim() != 3 {
+            return Err(FftbError::Grid(format!(
+                "fold() applies to 3D grids only, got {}D",
+                self.ndim()
+            )));
+        }
+        ProcGrid::new(&[self.dims[0] * self.dims[1], self.dims[2]], self.comm.clone())
+    }
 }
 
 /// Elemental-cyclic distribution helpers (paper §3.2: "data in each

@@ -337,20 +337,31 @@ impl Fftb {
                          x{{0}} y{{1}} out (got in={in_sig:?}, out={out_sig:?})"
                     )));
                 }
-                // Axis folding: run the pencil plan on the (d0*d1, d2) grid.
-                // NOTE: after folding, the *plan* defines the local layouts —
-                // size buffers with `input_len()`/`output_len()` (y is cyclic
-                // over the folded d0*d1 ranks, not over axis 0 of the declared
-                // 3D grid). `benches/table1_capabilities.rs` shows the usage.
-                let folded = ProcGrid::new(
-                    &[grid.axis_len(0) * grid.axis_len(1), grid.axis_len(2)],
-                    grid.comm().clone(),
-                )?;
-                Ok(Fftb {
-                    kind: PlanKind::Pencil(PencilPlan::new(sizes, nb, folded)?),
-                    sizes,
-                    nb,
-                })
+                // Axis folding: run the pencil plan on the (d0*d1, d2) grid
+                // ([`ProcGrid::fold`]). Layout-by-plan means the *plan*
+                // defines the local layouts — y is cyclic over the folded
+                // d0*d1 ranks, not over axis 0 of the declared 3D grid — so
+                // the participating tensors must be declared against
+                // `grid.fold()` too. A tensor distributed over the unfolded
+                // grid has a different local size on most shapes, and
+                // executing with it would silently misplace data; validate
+                // the declared sizes against the folded plan and refuse.
+                let folded = grid.fold()?;
+                let plan = PencilPlan::new(sizes, nb, folded)?;
+                if input.local.len() != plan.input_len()
+                    || output.local.len() != plan.output_len()
+                {
+                    return Err(FftbError::Shape(format!(
+                        "3D-grid tensors must be distributed over the folded grid \
+                         (`ProcGrid::fold`): declared local sizes {} -> {} but the \
+                         folded pencil plan expects {} -> {}",
+                        input.local.len(),
+                        output.local.len(),
+                        plan.input_len(),
+                        plan.output_len()
+                    )));
+                }
+                Ok(Fftb { kind: PlanKind::Pencil(plan), sizes, nb })
             }
             _ => Err(FftbError::Unsupported("grids beyond 3D are not supported".into())),
         }
@@ -479,9 +490,33 @@ mod tests {
     fn planner_folds_3d_grid() {
         run_world(8, |comm| {
             let grid = ProcGrid::new(&[2, 2, 2], comm).unwrap();
-            let (ti, to) = cube_tensors(&grid, 8, "x y{0} z{1}", "X{0} Y{1} Z");
+            // Layout-by-plan: tensors taking part in a 3D-grid plan are
+            // declared against the folded (d0*d1, d2) grid, because that is
+            // the grid the pencil plan actually distributes over.
+            let folded = grid.fold().unwrap();
+            assert_eq!(folded.dims(), &[4, 2]);
+            let (ti, to) = cube_tensors(&folded, 8, "x y{0} z{1}", "X{0} Y{1} Z");
             let fx = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).unwrap();
             assert!(matches!(fx.kind, PlanKind::Pencil(_)));
+            // Declared-tensor sizing and the plan's layouts agree.
+            assert_eq!(fx.input_len(), ti.local.len());
+            assert_eq!(fx.output_len(), to.local.len());
+        });
+    }
+
+    #[test]
+    fn planner_rejects_3d_tensors_on_the_unfolded_grid() {
+        run_world(8, |comm| {
+            let grid = ProcGrid::new(&[2, 2, 2], comm).unwrap();
+            // Previously this planned "successfully": the tensors say
+            // 8 * 4 * 4 = 128 local elements (y and z each cyclic over 2
+            // ranks) while the folded plan's layouts say 8 * 2 * 4 = 64
+            // (y cyclic over the folded 4 ranks) — executing would read
+            // out of step with the declared data. Now it is a typed error.
+            let (ti, to) = cube_tensors(&grid, 8, "x y{0} z{1}", "X{0} Y{1} Z");
+            assert_ne!(ti.local.len(), 64, "shape chosen so the sizes disagree");
+            let e = Fftb::plan([8, 8, 8], &to, "X Y Z", &ti, "x y z", grid).err().unwrap();
+            assert!(matches!(e, FftbError::Shape(_)), "got {e:?}");
         });
     }
 

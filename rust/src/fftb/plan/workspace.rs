@@ -48,12 +48,63 @@ const MIN_CLASS_ELEMS: usize = 16;
 pub struct SlotPool {
     /// Free buffers, kept sorted by capacity (ascending) for best-fit pops.
     free: Vec<Vec<Complex>>,
+    /// Optional byte budget on *checked-out* capacity (see
+    /// [`SlotPool::with_budget`]); `None` = unbounded, the historical
+    /// behaviour.
+    budget: Option<usize>,
+    /// Bytes of capacity currently checked out against `budget`.
+    charged: usize,
 }
 
 impl SlotPool {
     /// Ceiling power-of-two capacity class serving a request of `len`.
     fn class_for(len: usize) -> usize {
         len.max(MIN_CLASS_ELEMS).next_power_of_two()
+    }
+
+    /// A pool whose *checked-out* capacity is capped at `bytes`: the
+    /// service layer gives each tenant one budgeted pool, so one tenant's
+    /// steady-state memory is bounded no matter how many requests it has in
+    /// flight. [`SlotPool::try_take`] refuses (returns `None`) instead of
+    /// allocating past the cap; [`SlotPool::recycle`] releases the charge.
+    /// The infallible [`SlotPool::take`] ignores the budget — plans
+    /// internally size their own scratch and must never fail mid-execute.
+    pub fn with_budget(bytes: usize) -> Self {
+        SlotPool { budget: Some(bytes), ..Default::default() }
+    }
+
+    /// Bytes of checked-out capacity currently charged against the budget.
+    pub fn charged(&self) -> usize {
+        self.charged
+    }
+
+    /// Bytes one checked-out buffer of `len` elements charges against a
+    /// budget — its capacity class times the element size. The unit the
+    /// service layer sizes tenant quotas in.
+    pub fn class_bytes(len: usize) -> usize {
+        Self::class_for(len) * std::mem::size_of::<Complex>()
+    }
+
+    /// Budget-checked checkout: like [`SlotPool::take`], but when the pool
+    /// has a budget and serving `len` would push the checked-out capacity
+    /// past it, returns `None` without allocating (the admission layer
+    /// turns that into a typed quota error). Unbudgeted pools never refuse.
+    pub fn try_take(&mut self, len: usize, ctr: &Cell<u64>) -> Option<Vec<Complex>> {
+        if let Some(budget) = self.budget {
+            // Charge what the checkout will actually pin: the capacity
+            // class of the free buffer that best-fit will hand out, or of
+            // a fresh exact-size buffer if none fits. Recycle releases the
+            // same class off the returned buffer's capacity, so the charge
+            // is symmetric.
+            let cap =
+                self.free.iter().find(|b| b.capacity() >= len).map_or(len, |b| b.capacity());
+            let cost = Self::class_for(cap) * std::mem::size_of::<Complex>();
+            if self.charged.saturating_add(cost) > budget {
+                return None;
+            }
+            self.charged += cost;
+        }
+        Some(self.take(len, ctr))
     }
 
     /// Check out a buffer resized to exactly `len` elements, preferring the
@@ -78,10 +129,16 @@ impl SlotPool {
     }
 
     /// Return a finished buffer's storage to the pool. Buffers beyond
-    /// `MAX_SLOTS_PER_CLASS` in the same capacity class are dropped.
+    /// `MAX_SLOTS_PER_CLASS` in the same capacity class are dropped. On a
+    /// budgeted pool this also releases the buffer's capacity class from
+    /// the checked-out charge (whether or not the storage is retained).
     pub fn recycle(&mut self, buf: Vec<Complex>) {
         if buf.capacity() == 0 {
             return;
+        }
+        if self.budget.is_some() {
+            let cost = Self::class_for(buf.capacity()) * std::mem::size_of::<Complex>();
+            self.charged = self.charged.saturating_sub(cost);
         }
         let class = Self::class_for(buf.capacity());
         let in_class =
@@ -248,6 +305,47 @@ mod tests {
             pool.recycle(a);
         }
         assert_eq!(ctr.get(), warm, "steady-state alternation must not allocate");
+    }
+
+    #[test]
+    fn budgeted_pool_refuses_past_the_cap_and_recovers_on_recycle() {
+        let ctr = Cell::new(0u64);
+        // Room for exactly two 64-element class buffers (class 64, 16 B
+        // per element).
+        let mut pool = SlotPool::with_budget(2 * 64 * std::mem::size_of::<Complex>());
+        let a = pool.try_take(60, &ctr).expect("first checkout fits");
+        let b = pool.try_take(64, &ctr).expect("second checkout fits");
+        assert_eq!(pool.charged(), 2 * 64 * std::mem::size_of::<Complex>());
+        assert!(pool.try_take(1, &ctr).is_none(), "third checkout must refuse");
+        pool.recycle(a);
+        assert!(pool.try_take(16, &ctr).is_some(), "recycle frees quota");
+        pool.recycle(b);
+    }
+
+    #[test]
+    fn unbudgeted_pool_never_refuses() {
+        let ctr = Cell::new(0u64);
+        let mut pool = SlotPool::default();
+        for _ in 0..8 {
+            assert!(pool.try_take(1024, &ctr).is_some());
+        }
+        assert_eq!(pool.charged(), 0, "no budget, no accounting");
+    }
+
+    #[test]
+    fn budget_charge_is_symmetric_across_classes() {
+        let ctr = Cell::new(0u64);
+        let mut pool = SlotPool::with_budget(1 << 20);
+        // A big recycled buffer serving a small request charges (and later
+        // releases) the big buffer's class, not the request's.
+        let big = pool.try_take(4096, &ctr).unwrap();
+        pool.recycle(big);
+        assert_eq!(pool.charged(), 0);
+        let served = pool.try_take(16, &ctr).unwrap();
+        assert!(served.capacity() >= 4096, "best fit hands out the pooled big slot");
+        assert_eq!(pool.charged(), 4096 * std::mem::size_of::<Complex>());
+        pool.recycle(served);
+        assert_eq!(pool.charged(), 0, "release matches the charge exactly");
     }
 
     #[test]

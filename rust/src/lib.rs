@@ -19,5 +19,6 @@ pub mod fftb;
 pub mod lint;
 pub mod model;
 pub mod runtime;
+pub mod service;
 pub mod tuner;
 pub mod util;

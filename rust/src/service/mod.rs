@@ -1,0 +1,711 @@
+//! The multi-tenant transform service: admission, coalesced batching,
+//! per-tenant quotas and metrics on top of the
+//! [`BatchingDriver`](crate::coordinator::BatchingDriver).
+//!
+//! A plane-wave DFT application rarely runs one transform stream: several
+//! SCF solvers (k-points, spins, ensembles) and auxiliary grid work share
+//! one machine allocation. This layer multiplexes those client streams —
+//! *tenants* — into one SPMD world so their per-band requests ride shared
+//! batched executions (one fused exchange per flush instead of one per
+//! stream), while keeping each stream's memory bounded and its latency
+//! observable:
+//!
+//! * **Lanes** group compatible requests. A lane is identified by the
+//!   coalescing key: the service's `(communicator, shape)` is fixed at
+//!   construction, and within it the dense grid lane is keyed `0` while
+//!   each cut-off sphere lane is keyed by its
+//!   [`OffsetArray::fingerprint`] — two tenants share a batch exactly when
+//!   they share a lane and a flush direction. Each lane owns one
+//!   [`BatchingDriver`], so the plan cache, interleave blocks and warmed
+//!   workspaces are shared by every tenant in the lane.
+//! * **Admission** is typed, never panicking and never unbounded: a
+//!   checkout past the tenant's quota returns
+//!   [`ServiceError::QuotaExhausted`], a submit past the service's
+//!   in-flight window returns [`ServiceError::Backlogged`], and malformed
+//!   requests are rejected before they touch a driver.
+//! * **Quotas** are budgeted [`SlotPool`]s, one per tenant: a checkout
+//!   charges the buffer's capacity class, the charge rides the request
+//!   through the driver, and dropping the result slot releases it (see
+//!   [`tenant`]). Steady-state tenants therefore run allocation-free out
+//!   of their own recycled storage.
+//! * **Metrics** grow per tenant: submit-to-completion latency
+//!   percentiles (p50/p95/p99 over a fixed-size reservoir, zero-alloc on
+//!   the record path) and request/byte counters in the service's
+//!   [`MetricsSink`], plus one [`FlushRecord`] per coalesced execution.
+//!
+//! Ordering is deterministic without communication: tenants register, and
+//! requests submit, in identical order on every rank (the SPMD contract
+//! the whole stack runs on), sequence ids are handed out in that order,
+//! lanes flush in ascending key order, and the driver preserves submission
+//! order within a flush — so all ranks assemble identical batches with no
+//! coordination traffic. Within a batch every band transforms
+//! independently (no plan stage mixes bands arithmetically), so a
+//! tenant's coalesced results are bit-identical to the same requests run
+//! alone — pinned by `tests/service.rs`.
+
+#![warn(missing_docs)]
+
+pub mod tenant;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::alltoall::CommTuning;
+use crate::coordinator::driver::{BatchingDriver, TransformJob};
+use crate::coordinator::metrics::MetricsSink;
+use crate::fft::complex::Complex;
+use crate::fft::dft::Direction;
+use crate::fftb::backend::LocalFftBackend;
+use crate::fftb::error::{FftbError, Result};
+use crate::fftb::grid::{cyclic, ProcGrid};
+use crate::fftb::plan::workspace::SlotPool;
+use crate::fftb::sphere::OffsetArray;
+
+pub use tenant::{TenantId, TenantSlot};
+
+/// Lane key of the dense full-grid lane (sphere lanes use their offset
+/// fingerprint, which is non-zero for any non-empty sphere).
+pub const GRID_LANE: u64 = 0;
+
+/// Typed admission/scheduling failures. Every rejection is recoverable:
+/// the request's slot (if any) is released back to its tenant, nothing
+/// panics, and nothing queues unboundedly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The tenant id was never registered with this service.
+    UnknownTenant {
+        /// The offending tenant index.
+        tenant: usize,
+    },
+    /// The lane key names no lane of this service.
+    UnknownLane {
+        /// The offending lane key.
+        lane: u64,
+    },
+    /// The checkout would push the tenant's checked-out capacity past its
+    /// quota. Recycle (drop) an outstanding slot and retry.
+    QuotaExhausted {
+        /// Tenant index whose quota is exhausted.
+        tenant: usize,
+        /// Bytes the refused checkout would have charged.
+        requested: usize,
+        /// Bytes currently charged against the quota.
+        charged: usize,
+        /// The tenant's quota, in bytes.
+        quota: usize,
+    },
+    /// The service's bounded in-flight window is full. Flush, then retry.
+    Backlogged {
+        /// Requests currently in flight across all lanes.
+        pending: usize,
+        /// The configured window ([`ServiceConfig::max_in_flight`]).
+        limit: usize,
+    },
+    /// The submitted slot's length does not match the lane's local layout
+    /// for the requested direction.
+    WrongLength {
+        /// Elements the lane expects for this direction.
+        expected: usize,
+        /// Elements the slot actually held.
+        got: usize,
+    },
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::UnknownTenant { tenant } => {
+                write!(f, "unknown tenant id {tenant}")
+            }
+            ServiceError::UnknownLane { lane } => write!(f, "unknown lane {lane:#x}"),
+            ServiceError::QuotaExhausted { tenant, requested, charged, quota } => write!(
+                f,
+                "tenant {tenant} quota exhausted: checkout of {requested} B refused \
+                 with {charged} of {quota} B already charged"
+            ),
+            ServiceError::Backlogged { pending, limit } => {
+                write!(f, "in-flight window full: {pending} of {limit} requests pending")
+            }
+            ServiceError::WrongLength { expected, got } => write!(
+                f,
+                "submit length mismatch: the lane expects {expected} elements \
+                 for this direction, got {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Service-wide knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Bound on requests in flight across all lanes; submits past it are
+    /// refused with [`ServiceError::Backlogged`], so the service never
+    /// queues unboundedly.
+    pub max_in_flight: usize,
+    /// Exchange tuning handed to every lane's driver.
+    pub tuning: CommTuning,
+    /// Quota (bytes of checked-out slot capacity) of tenants registered
+    /// through [`TransformService::register_tenant`].
+    pub default_quota: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_in_flight: 4096,
+            tuning: CommTuning::default(),
+            default_quota: 1 << 30,
+        }
+    }
+}
+
+/// What one coalesced flush did — the service's audit trail: how many
+/// jobs from how many distinct tenants shared the execution, and the
+/// exchange/allocation telemetry the acceptance tests gate on.
+#[derive(Clone, Copy, Debug)]
+pub struct FlushRecord {
+    /// Lane key ([`GRID_LANE`] or a sphere fingerprint).
+    pub lane: u64,
+    /// Direction this flush executed.
+    pub dir: Direction,
+    /// Jobs coalesced into the one batched execution.
+    pub jobs: usize,
+    /// Distinct tenants among those jobs.
+    pub tenants: usize,
+    /// Point-to-point messages the fused exchanges sent.
+    pub messages: u64,
+    /// Bytes those messages carried.
+    pub bytes: u64,
+    /// Workspace growth during the execution (0 in steady state).
+    pub alloc_bytes: u64,
+    /// Whether the batched plan came from the lane's plan cache.
+    pub plan_cache_hit: bool,
+}
+
+/// One request in flight: who submitted it, when, and how big it was.
+struct InFlight {
+    tenant: usize,
+    bytes: u64,
+    t0: Instant,
+}
+
+/// One coalescing group: a driver plus the local per-band layout lengths
+/// and the in-flight bookkeeping of its requests.
+struct Lane {
+    driver: BatchingDriver,
+    /// Local elements per band on the packed (forward-input) side.
+    in_per_band: usize,
+    /// Local elements per band on the dense (forward-output) side.
+    out_per_band: usize,
+    /// Metadata of requests currently riding this lane, by sequence id.
+    meta: BTreeMap<u64, InFlight>,
+}
+
+/// Server-side state of one registered tenant.
+struct TenantState {
+    /// Budgeted storage pool: the quota *is* the pool's budget.
+    pool: tenant::PoolHandle,
+    /// Allocation counter of the pool (bytes ever minted for this tenant).
+    pool_ctr: Cell<u64>,
+    /// The quota, kept for error reporting.
+    quota_bytes: usize,
+    /// Index into the sink's per-tenant metrics.
+    metrics: usize,
+    /// Completed results awaiting [`TransformService::collect`].
+    completed: Vec<(u64, TenantSlot)>,
+}
+
+/// The multi-tenant transform service. See the module docs for the
+/// admission rules, the coalescing key and the determinism argument;
+/// `examples/service_multi_tenant.rs` is the runnable walkthrough.
+pub struct TransformService {
+    shape: [usize; 3],
+    grid: Arc<ProcGrid>,
+    config: ServiceConfig,
+    tenants: Vec<TenantState>,
+    /// Lanes by coalescing key, flushed in ascending key order.
+    lanes: BTreeMap<u64, Lane>,
+    /// Next request sequence id (identical on every rank).
+    next_seq: u64,
+    /// Requests in flight across all lanes, bounded by the config window.
+    in_flight: usize,
+    /// One record per coalesced flush, in flush order.
+    flushes: Vec<FlushRecord>,
+    /// Scratch for the distinct-tenant count of a flush record.
+    tenant_scratch: Vec<usize>,
+    sink: MetricsSink,
+}
+
+impl TransformService {
+    /// A service for transforms of `shape` on the 1D processing `grid`.
+    /// Collective: every rank constructs with identical arguments.
+    pub fn new(shape: [usize; 3], grid: Arc<ProcGrid>, config: ServiceConfig) -> Result<Self> {
+        if grid.ndim() != 1 {
+            return Err(FftbError::Grid(format!(
+                "the transform service runs on a 1D processing grid, got {}D",
+                grid.ndim()
+            )));
+        }
+        let p = grid.size();
+        if p > shape[0] || p > shape[2] {
+            return Err(FftbError::Unsupported(format!(
+                "service lanes need p <= nx and p <= nz (p={p}, shape={shape:?})"
+            )));
+        }
+        Ok(TransformService {
+            shape,
+            grid,
+            config,
+            tenants: Vec::new(),
+            lanes: BTreeMap::new(),
+            next_seq: 0,
+            in_flight: 0,
+            flushes: Vec::new(),
+            tenant_scratch: Vec::new(),
+            sink: MetricsSink::new("service"),
+        })
+    }
+
+    /// Register a client stream under the config's default quota.
+    /// Registration order must be identical on every rank.
+    pub fn register_tenant(&mut self, label: &str) -> TenantId {
+        self.register_tenant_with_quota(label, self.config.default_quota)
+    }
+
+    /// Register a client stream with an explicit quota: the byte bound on
+    /// the tenant's checked-out slot capacity (size it with
+    /// [`TransformService::slot_bytes`] × the slots the tenant needs in
+    /// flight).
+    pub fn register_tenant_with_quota(&mut self, label: &str, quota_bytes: usize) -> TenantId {
+        let metrics = self.sink.register_tenant(label);
+        self.tenants.push(TenantState {
+            pool: Rc::new(RefCell::new(SlotPool::with_budget(quota_bytes))),
+            pool_ctr: Cell::new(0),
+            quota_bytes,
+            metrics,
+            completed: Vec::new(),
+        });
+        TenantId(self.tenants.len() - 1)
+    }
+
+    /// The dense full-grid lane (batched slab-pencil transforms), created
+    /// on first use. Returns its lane key, [`GRID_LANE`].
+    pub fn grid_lane(&mut self) -> u64 {
+        if !self.lanes.contains_key(&GRID_LANE) {
+            let (p, r) = (self.grid.size(), self.grid.rank());
+            let [nx, ny, nz] = self.shape;
+            let driver =
+                BatchingDriver::with_tuning(self.shape, Arc::clone(&self.grid), self.config.tuning);
+            self.lanes.insert(
+                GRID_LANE,
+                Lane {
+                    driver,
+                    in_per_band: cyclic::local_count(nx, p, r) * ny * nz,
+                    out_per_band: nx * ny * cyclic::local_count(nz, p, r),
+                    meta: BTreeMap::new(),
+                },
+            );
+        }
+        GRID_LANE
+    }
+
+    /// The lane of the cut-off sphere `off` (batched plane-wave
+    /// transforms), created on first use. The lane key is the sphere's
+    /// structural fingerprint, so every tenant handing in the same sphere
+    /// — on any rank — lands in the same lane without coordination.
+    pub fn sphere_lane(&mut self, off: Arc<OffsetArray>) -> Result<u64> {
+        if self.shape != [off.nx, off.ny, off.nz] {
+            return Err(FftbError::Shape(format!(
+                "sphere offsets describe a {}x{}x{} grid but the service shape is {:?}",
+                off.nx, off.ny, off.nz, self.shape
+            )));
+        }
+        let key = off.fingerprint();
+        debug_assert_ne!(key, GRID_LANE, "a non-empty sphere cannot fingerprint to 0");
+        if !self.lanes.contains_key(&key) {
+            let (p, r) = (self.grid.size(), self.grid.rank());
+            let in_per_band = off.restrict_x_cyclic(p, r).total();
+            let out_per_band =
+                self.shape[0] * self.shape[1] * cyclic::local_count(self.shape[2], p, r);
+            let driver = BatchingDriver::with_sphere(
+                self.shape,
+                Arc::clone(&self.grid),
+                off,
+                self.config.tuning,
+            )?;
+            let lane = Lane { driver, in_per_band, out_per_band, meta: BTreeMap::new() };
+            self.lanes.insert(key, lane);
+        }
+        Ok(key)
+    }
+
+    /// Bytes one slot of `lane` charges against a quota (the capacity
+    /// class of the larger of the lane's two sides), or `None` for an
+    /// unknown lane — the unit tenant quotas should be sized in.
+    pub fn slot_bytes(&self, lane: u64) -> Option<usize> {
+        self.lanes.get(&lane).map(|l| SlotPool::class_bytes(l.in_per_band.max(l.out_per_band)))
+    }
+
+    /// Check out a request buffer for `lane`, sized for `dir`'s submit
+    /// side (capacity covers the round trip, so the result never
+    /// reallocates). Charges the tenant's quota; refuses with
+    /// [`ServiceError::QuotaExhausted`] past it.
+    pub fn checkout(
+        &mut self,
+        tenant: TenantId,
+        lane: u64,
+        dir: Direction,
+    ) -> std::result::Result<TenantSlot, ServiceError> {
+        let t = match self.tenants.get(tenant.0) {
+            Some(t) => t,
+            None => return Err(ServiceError::UnknownTenant { tenant: tenant.0 }),
+        };
+        let l = match self.lanes.get(&lane) {
+            Some(l) => l,
+            None => return Err(ServiceError::UnknownLane { lane }),
+        };
+        let max_len = l.in_per_band.max(l.out_per_band);
+        let submit_len = match dir {
+            Direction::Forward => l.in_per_band,
+            Direction::Inverse => l.out_per_band,
+        };
+        let mut pool = t.pool.borrow_mut();
+        match pool.try_take(max_len, &t.pool_ctr) {
+            Some(mut buf) => {
+                buf.truncate(submit_len);
+                Ok(TenantSlot { data: Some(buf), pool: Rc::clone(&t.pool) })
+            }
+            None => Err(ServiceError::QuotaExhausted {
+                tenant: tenant.0,
+                requested: SlotPool::class_bytes(max_len),
+                charged: pool.charged(),
+                quota: t.quota_bytes,
+            }),
+        }
+    }
+
+    /// Submit a filled slot as one transform request on `lane`. Returns
+    /// the request's sequence id (identical on every rank). On any
+    /// rejection the slot is released back to its tenant — the error is
+    /// the whole story, nothing leaks. Submission order must be identical
+    /// on every rank.
+    pub fn submit(
+        &mut self,
+        tenant: TenantId,
+        lane: u64,
+        dir: Direction,
+        slot: TenantSlot,
+    ) -> std::result::Result<u64, ServiceError> {
+        // steady-state: service-submit
+        if tenant.0 >= self.tenants.len() {
+            return Err(ServiceError::UnknownTenant { tenant: tenant.0 });
+        }
+        let l = match self.lanes.get_mut(&lane) {
+            Some(l) => l,
+            None => return Err(ServiceError::UnknownLane { lane }),
+        };
+        let expected = match dir {
+            Direction::Forward => l.in_per_band,
+            Direction::Inverse => l.out_per_band,
+        };
+        if slot.len() != expected {
+            return Err(ServiceError::WrongLength { expected, got: slot.len() });
+        }
+        if self.in_flight >= self.config.max_in_flight {
+            return Err(ServiceError::Backlogged {
+                pending: self.in_flight,
+                limit: self.config.max_in_flight,
+            });
+        }
+        let id = self.next_seq;
+        self.next_seq += 1;
+        let bytes = (expected * std::mem::size_of::<Complex>()) as u64;
+        l.meta.insert(id, InFlight { tenant: tenant.0, bytes, t0: Instant::now() });
+        l.driver.submit(TransformJob { id, data: slot.take_storage(), dir });
+        self.in_flight += 1;
+        Ok(id)
+        // steady-state: end
+    }
+
+    /// Flush every lane's queued jobs of direction `dir` — one coalesced
+    /// batched execution per lane, lanes in ascending key order. Completed
+    /// results are routed to their tenants (collect them with
+    /// [`TransformService::collect`]), latencies recorded, and one
+    /// [`FlushRecord`] appended per lane that executed. Returns the total
+    /// jobs executed. Collective over the service's communicator.
+    pub fn flush(&mut self, backend: &dyn LocalFftBackend, dir: Direction) -> usize {
+        let mut total = 0;
+        for (key, lane) in self.lanes.iter_mut() {
+            let jobs = lane.driver.flush(backend, dir);
+            if jobs == 0 {
+                continue;
+            }
+            total += jobs;
+            // steady-state: service-flush-record
+            let (mut messages, mut bytes, mut alloc_bytes) = (0u64, 0u64, 0u64);
+            let mut hit = true;
+            for tr in lane.driver.drain_traces() {
+                messages += tr.comm_messages();
+                bytes += tr.comm_bytes();
+                alloc_bytes += tr.alloc_bytes;
+                hit &= tr.plan_cache_hit;
+                self.sink.record(tr);
+            }
+            self.tenant_scratch.clear();
+            for (id, data) in lane.driver.drain_completed() {
+                let info = match lane.meta.remove(&id) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                self.in_flight -= 1;
+                let latency_ns = info.t0.elapsed().as_nanos() as u64;
+                let t = &mut self.tenants[info.tenant];
+                self.sink.record_tenant(t.metrics, latency_ns, info.bytes);
+                t.completed.push((
+                    id,
+                    TenantSlot { data: Some(data), pool: Rc::clone(&t.pool) },
+                ));
+                self.tenant_scratch.push(info.tenant);
+            }
+            self.tenant_scratch.sort_unstable();
+            self.tenant_scratch.dedup();
+            self.flushes.push(FlushRecord {
+                lane: *key,
+                dir,
+                jobs,
+                tenants: self.tenant_scratch.len(),
+                messages,
+                bytes,
+                alloc_bytes,
+                plan_cache_hit: hit,
+            });
+            // steady-state: end
+        }
+        total
+    }
+
+    /// Take the tenant's completed `(sequence id, result)` pairs, in
+    /// submission order. Dropping a returned slot recycles its storage
+    /// into the tenant's pool and releases its quota charge.
+    pub fn collect(&mut self, tenant: TenantId) -> Vec<(u64, TenantSlot)> {
+        match self.tenants.get_mut(tenant.0) {
+            Some(t) => std::mem::take(&mut t.completed),
+            None => Vec::new(),
+        }
+    }
+
+    /// Requests currently in flight across all lanes.
+    pub fn pending(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Bytes currently charged against the tenant's quota (0 for unknown
+    /// tenants).
+    pub fn tenant_charged(&self, tenant: TenantId) -> usize {
+        self.tenants.get(tenant.0).map_or(0, |t| t.pool.borrow().charged())
+    }
+
+    /// Bytes of slot storage ever allocated for the tenant — flat from
+    /// the second flush on, once the pool's recycled buffers cover the
+    /// working set (the steady-state contract, pinned by
+    /// `tests/service.rs`).
+    pub fn tenant_alloc_bytes(&self, tenant: TenantId) -> u64 {
+        self.tenants.get(tenant.0).map_or(0, |t| t.pool_ctr.get())
+    }
+
+    /// The service's metrics sink: per-flush traces plus the per-tenant
+    /// latency/throughput accounting.
+    pub fn metrics(&self) -> &MetricsSink {
+        &self.sink
+    }
+
+    /// One record per coalesced flush so far, in flush order.
+    pub fn flush_records(&self) -> &[FlushRecord] {
+        &self.flushes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fftb::backend::RustFftBackend;
+    use crate::fftb::plan::testutil::phased;
+    use crate::fftb::plan::SlabPencilPlan;
+
+    fn service(p: usize, comm: &crate::comm::communicator::Comm) -> TransformService {
+        let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+        TransformService::new([8, 8, 8], grid, ServiceConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn coalesced_flush_routes_results_to_their_tenants() {
+        let p = 2;
+        let outs = run_world(p, move |comm| {
+            let mut svc = service(p, &comm);
+            let a = svc.register_tenant("a");
+            let b = svc.register_tenant("b");
+            let lane = svc.grid_lane();
+            let backend = RustFftBackend::new();
+
+            // a submits 2 bands, b submits 1 — interleaved, one flush.
+            let mut inputs = Vec::new();
+            for (t, seed) in [(a, 1u64), (b, 2), (a, 3)] {
+                let mut slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+                let data = phased(slot.len(), seed);
+                slot.data_mut().copy_from_slice(&data);
+                inputs.push(data);
+                svc.submit(t, lane, Direction::Forward, slot).unwrap();
+            }
+            assert_eq!(svc.pending(), 3);
+            assert_eq!(svc.flush(&backend, Direction::Forward), 3);
+            assert_eq!(svc.pending(), 0);
+
+            // One coalesced record: 3 jobs, 2 distinct tenants.
+            let rec = svc.flush_records().last().copied().unwrap();
+            assert_eq!((rec.jobs, rec.tenants, rec.lane), (3, 2, GRID_LANE));
+
+            // Results route per tenant, FIFO, and equal the single-band
+            // plan bit-for-bit (bands transform independently).
+            let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+            let single = SlabPencilPlan::new([8, 8, 8], 1, grid).unwrap();
+            let got_a = svc.collect(a);
+            let got_b = svc.collect(b);
+            assert_eq!((got_a.len(), got_b.len()), (2, 1));
+            assert_eq!((got_a[0].0, got_b[0].0, got_a[1].0), (0, 1, 2));
+            let mut ok = true;
+            for (slot, input) in
+                [(&got_a[0].1, &inputs[0]), (&got_b[0].1, &inputs[1]), (&got_a[1].1, &inputs[2])]
+            {
+                let (want, _) = single.forward(&backend, input.clone());
+                ok &= slot.data().len() == want.len()
+                    && slot.data().iter().zip(&want).all(|(x, y)| {
+                        x.re.to_bits() == y.re.to_bits() && x.im.to_bits() == y.im.to_bits()
+                    });
+            }
+            // Per-tenant accounting saw the requests.
+            let tm = svc.metrics().tenant_metrics();
+            ok && tm[0].requests == 2 && tm[1].requests == 1 && tm[0].p95().is_some()
+        });
+        assert!(outs.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn quota_refuses_then_recovers_when_a_slot_drops() {
+        run_world(1, |comm| {
+            let mut svc = service(1, &comm);
+            let lane = svc.grid_lane();
+            let slot_bytes = svc.slot_bytes(lane).unwrap();
+            // Room for exactly two slots.
+            let t = svc.register_tenant_with_quota("tight", 2 * slot_bytes);
+            let s1 = svc.checkout(t, lane, Direction::Forward).unwrap();
+            let _s2 = svc.checkout(t, lane, Direction::Forward).unwrap();
+            assert_eq!(svc.tenant_charged(t), 2 * slot_bytes);
+            match svc.checkout(t, lane, Direction::Forward) {
+                Err(ServiceError::QuotaExhausted { tenant, charged, quota, .. }) => {
+                    assert_eq!(tenant, t.index());
+                    assert_eq!(charged, 2 * slot_bytes);
+                    assert_eq!(quota, 2 * slot_bytes);
+                }
+                other => panic!("expected QuotaExhausted, got {other:?}"),
+            }
+            // Dropping an outstanding slot frees its lease.
+            drop(s1);
+            assert_eq!(svc.tenant_charged(t), slot_bytes);
+            assert!(svc.checkout(t, lane, Direction::Forward).is_ok());
+        });
+    }
+
+    #[test]
+    fn backlog_window_bounds_in_flight_requests() {
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm.clone()).unwrap();
+            let config = ServiceConfig { max_in_flight: 1, ..Default::default() };
+            let mut svc = TransformService::new([4, 4, 4], grid, config).unwrap();
+            let t = svc.register_tenant("t");
+            let lane = svc.grid_lane();
+            let backend = RustFftBackend::new();
+            let slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+            svc.submit(t, lane, Direction::Forward, slot).unwrap();
+            let slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+            match svc.submit(t, lane, Direction::Forward, slot) {
+                Err(ServiceError::Backlogged { pending: 1, limit: 1 }) => {}
+                other => panic!("expected Backlogged, got {other:?}"),
+            }
+            // The refused submit released its slot back to the tenant:
+            // nothing leaked, and after a flush the window reopens.
+            assert_eq!(svc.tenant_charged(t), svc.slot_bytes(lane).unwrap());
+            svc.flush(&backend, Direction::Forward);
+            assert_eq!(svc.pending(), 0);
+            let slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+            assert!(svc.submit(t, lane, Direction::Forward, slot).is_ok());
+        });
+    }
+
+    #[test]
+    fn malformed_submits_are_typed_rejections() {
+        run_world(1, |comm| {
+            let mut svc = service(1, &comm);
+            let t = svc.register_tenant("t");
+            let lane = svc.grid_lane();
+            assert!(matches!(
+                svc.checkout(TenantId(9), lane, Direction::Forward),
+                Err(ServiceError::UnknownTenant { tenant: 9 })
+            ));
+            assert!(matches!(
+                svc.checkout(t, 77, Direction::Forward),
+                Err(ServiceError::UnknownLane { lane: 77 })
+            ));
+            // A short payload is rejected before it touches the driver.
+            // (Both cube sides are 512 on one rank, so hand-build the
+            // mismatched slot — the fields are crate-visible.)
+            let pool = Rc::new(RefCell::new(SlotPool::default()));
+            let short = TenantSlot { data: Some(vec![crate::fft::complex::ZERO; 64]), pool };
+            let e = svc.submit(t, lane, Direction::Forward, short);
+            assert!(matches!(e, Err(ServiceError::WrongLength { expected: 512, got: 64 })));
+        });
+    }
+
+    #[test]
+    fn steady_state_flushes_are_allocation_free_per_tenant() {
+        let p = 2;
+        run_world(p, move |comm| {
+            let mut svc = service(p, &comm);
+            let t = svc.register_tenant("hot");
+            let lane = svc.grid_lane();
+            let backend = RustFftBackend::new();
+            let mut after_first = 0;
+            for round in 0..4u64 {
+                for b in 0..2u64 {
+                    let mut slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+                    let data = phased(slot.len(), 10 * round + b);
+                    slot.data_mut().copy_from_slice(&data);
+                    svc.submit(t, lane, Direction::Forward, slot).unwrap();
+                }
+                svc.flush(&backend, Direction::Forward);
+                // Dropping the collected slots restocks the pool.
+                drop(svc.collect(t));
+                if round == 0 {
+                    after_first = svc.tenant_alloc_bytes(t);
+                    assert!(after_first > 0, "first round mints the working set");
+                } else {
+                    assert_eq!(
+                        svc.tenant_alloc_bytes(t),
+                        after_first,
+                        "round {round} must run out of recycled slots"
+                    );
+                    let rec = svc.flush_records().last().unwrap();
+                    assert!(rec.plan_cache_hit, "round {round} must hit the plan cache");
+                    assert_eq!(rec.alloc_bytes, 0, "round {round} workspace must be warm");
+                }
+            }
+            assert_eq!(svc.tenant_charged(t), 0, "all leases returned");
+        });
+    }
+}

@@ -1,0 +1,132 @@
+//! Tenant-side handles: identities, and quota-leased request buffers.
+//!
+//! A [`TenantSlot`] is the unit of the service's admission control: it is
+//! minted by [`TransformService::checkout`](super::TransformService::checkout)
+//! against the tenant's budgeted [`SlotPool`] (the checkout *charges* the
+//! buffer's capacity class against the tenant's quota), travels into the
+//! batching driver on submit (the charge stays while the request is in
+//! flight), and comes back wrapping the result. Dropping a slot — whether
+//! the tenant read the result or abandoned it — recycles the storage into
+//! the tenant's pool and releases the charge, so quota can never leak: the
+//! lease *is* the buffer.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::fft::complex::Complex;
+use crate::fftb::plan::workspace::SlotPool;
+
+/// Opaque tenant identity handed out by
+/// [`TransformService::register_tenant`](super::TransformService::register_tenant).
+/// Registration order must be identical on every rank (the SPMD contract),
+/// so the id doubles as the deterministic tie-breaker in coalesced batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TenantId(pub(crate) usize);
+
+impl TenantId {
+    /// Index of this tenant in registration order.
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Shared handle on one tenant's budgeted slot pool. The service is
+/// single-threaded per rank (one service per SPMD thread), so plain
+/// `Rc<RefCell<..>>` suffices — no atomics, no locks.
+pub(crate) type PoolHandle = Rc<RefCell<SlotPool>>;
+
+/// A quota-leased request/result buffer of one tenant.
+///
+/// While the slot exists (checked out, in flight, or holding a collected
+/// result) its capacity class stays charged against the tenant's quota;
+/// dropping it recycles the storage into the tenant's pool and releases
+/// the charge. See the module docs for the full lifecycle.
+pub struct TenantSlot {
+    /// The buffer. `None` only transiently, while the storage rides the
+    /// batching driver (the service re-wraps the result on completion).
+    pub(crate) data: Option<Vec<Complex>>,
+    /// The owning tenant's pool, for the drop-time recycle.
+    pub(crate) pool: PoolHandle,
+}
+
+impl TenantSlot {
+    /// The slot's contents (empty once the storage moved into a submit).
+    pub fn data(&self) -> &[Complex] {
+        self.data.as_deref().unwrap_or(&[])
+    }
+
+    /// Mutable view of the slot's contents, for filling before a submit.
+    pub fn data_mut(&mut self) -> &mut [Complex] {
+        match &mut self.data {
+            Some(v) => v,
+            None => &mut [],
+        }
+    }
+
+    /// Number of elements currently held.
+    pub fn len(&self) -> usize {
+        self.data.as_ref().map_or(0, Vec::len)
+    }
+
+    /// Whether the slot currently holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Move the storage out for a submit, keeping the quota charge: the
+    /// emptied slot drops without recycling (there is nothing to return),
+    /// and the charge is released only when the *result* slot — same
+    /// storage, re-wrapped by the flush path — is dropped.
+    pub(crate) fn take_storage(mut self) -> Vec<Complex> {
+        self.data.take().unwrap_or_default()
+    }
+}
+
+impl Drop for TenantSlot {
+    fn drop(&mut self) {
+        if let Some(buf) = self.data.take() {
+            self.pool.borrow_mut().recycle(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn dropping_a_slot_recycles_and_releases_the_charge() {
+        let pool: PoolHandle =
+            Rc::new(RefCell::new(SlotPool::with_budget(1 << 20)));
+        let ctr = Cell::new(0u64);
+        let buf = pool.borrow_mut().try_take(100, &ctr).unwrap();
+        let charged = pool.borrow().charged();
+        assert!(charged > 0);
+        let slot = TenantSlot { data: Some(buf), pool: Rc::clone(&pool) };
+        assert_eq!(slot.len(), 100);
+        drop(slot);
+        assert_eq!(pool.borrow().charged(), 0, "drop must release the lease");
+        assert_eq!(pool.borrow().len(), 1, "storage must land back in the pool");
+    }
+
+    #[test]
+    fn take_storage_keeps_the_charge() {
+        let pool: PoolHandle =
+            Rc::new(RefCell::new(SlotPool::with_budget(1 << 20)));
+        let ctr = Cell::new(0u64);
+        let buf = pool.borrow_mut().try_take(64, &ctr).unwrap();
+        let charged = pool.borrow().charged();
+        let slot = TenantSlot { data: Some(buf), pool: Rc::clone(&pool) };
+        let storage = slot.take_storage();
+        assert_eq!(storage.len(), 64);
+        assert_eq!(
+            pool.borrow().charged(),
+            charged,
+            "in-flight storage must stay charged against the quota"
+        );
+        // Re-wrapping and dropping (what the flush path does) releases it.
+        drop(TenantSlot { data: Some(storage), pool: Rc::clone(&pool) });
+        assert_eq!(pool.borrow().charged(), 0);
+    }
+}

@@ -49,6 +49,10 @@ pub struct PlanKey {
     /// Direction discriminant: `None` = direction-agnostic, `Some(0)` =
     /// forward, `Some(1)` = inverse.
     pub dir: Option<u8>,
+    /// Structural fingerprint of the sphere offset array (0 for dense
+    /// cuboid requests) — two different spheres with the same shape and
+    /// batch must never share one plan.
+    pub sphere: u64,
     /// Exchange window the plan's `CommTuning` carries.
     pub window: usize,
     /// Whether the plan's `CommTuning` enables the helper worker thread.
@@ -146,6 +150,7 @@ mod tests {
             kind: "slab-pencil".into(),
             nb,
             dir,
+            sphere: 0,
             window,
             worker: false,
         }
@@ -195,7 +200,10 @@ mod tests {
             let threaded = PlanKey { worker: true, ..key(2, None, 2) };
             let (_, hit) = cache.get_or_insert(threaded, || build_slab(2, &grid)).unwrap();
             assert!(!hit, "the worker axis is a different plan");
-            assert_eq!(cache.len(), 6);
+            let other_sphere = PlanKey { sphere: 42, ..key(2, None, 2) };
+            let (_, hit) = cache.get_or_insert(other_sphere, || build_slab(2, &grid)).unwrap();
+            assert!(!hit, "a different sphere fingerprint is a different plan");
+            assert_eq!(cache.len(), 7);
         });
     }
 

@@ -8,7 +8,8 @@
 //! described machine; this subsystem is what finally consumes those prices:
 //!
 //! * [`cache`] — [`PlanCache`]: memoized `Fftb` objects keyed by
-//!   `(shape, signature, kind, nb, direction, window, worker)`, extending
+//!   `(shape, signature, kind, nb, direction, sphere, window, worker)`,
+//!   extending
 //!   plan-once / execute-many to the layer that requests plans.
 //! * [`search`] — feasible-candidate enumeration (all decompositions ×
 //!   grid factorizations × exchange windows) and deterministic model-based
@@ -91,12 +92,27 @@ pub struct Tuner {
     /// kept (the paper-style "try the shortlist" mode). `0` or `1` trusts
     /// the model outright.
     pub empirical_top_k: usize,
+    /// Wisdom lifecycle knob for long-lived services: when `> 0`, a wisdom
+    /// entry that has steered `remeasure_after` requests is retired and the
+    /// next request runs a fresh search (or empirical probe) instead of
+    /// trusting the remembered winner forever. `0` (the default) keeps
+    /// entries live indefinitely. Retirement is pure arithmetic on the
+    /// entry's `loads` counter, so all SPMD ranks retire and re-search in
+    /// lockstep; the re-search lands on the same [`PlanKey`], so cached
+    /// plan objects keep their identity across a re-measure.
+    pub remeasure_after: u64,
 }
 
 impl Tuner {
     /// A tuner pricing on the given machine, empty cache and wisdom.
     pub fn new(machine: Machine) -> Self {
-        Tuner { machine, cache: PlanCache::new(), wisdom: Wisdom::new(), empirical_top_k: 0 }
+        Tuner {
+            machine,
+            cache: PlanCache::new(),
+            wisdom: Wisdom::new(),
+            empirical_top_k: 0,
+            remeasure_after: 0,
+        }
     }
 
     /// A tuner for the live in-process testbed ([`Machine::local_cpu`]).
@@ -112,7 +128,7 @@ impl Tuner {
             Some(c) => c.apply(base),
             None => base,
         };
-        Tuner { machine, cache: PlanCache::new(), wisdom, empirical_top_k: 0 }
+        Tuner { machine, cache: PlanCache::new(), wisdom, empirical_top_k: 0, remeasure_after: 0 }
     }
 
     /// Run the calibration micro-probes ([`calibrate_local`]) and fold the
@@ -190,8 +206,21 @@ impl Tuner {
                 )));
             }
         }
+        let sphere_fp = sphere.as_ref().map_or(0, |o| o.fingerprint());
         let req = TuneRequest { shape, nb, p: comm.size(), sphere, profile };
         let sig = req.signature();
+
+        // Wisdom lifecycle: retire entries that have steered too many
+        // requests so a long-lived service re-validates its plans (see
+        // [`Tuner::remeasure_after`]). Deterministic across ranks — the
+        // counter advances identically everywhere.
+        if self.remeasure_after > 0 {
+            let stale =
+                matches!(self.wisdom.lookup(&sig), Some(e) if e.loads >= self.remeasure_after);
+            if stale {
+                self.wisdom.remove(&sig);
+            }
+        }
 
         let mut prebuilt: Option<Arc<Fftb>> = None;
         let mut probe = Probe::Model;
@@ -199,7 +228,7 @@ impl Tuner {
         // wisdom record falls back to the model prediction otherwise.
         let mut measured_seconds: Option<f64> = None;
         let (choice, from_wisdom) =
-            match self.wisdom.lookup(&sig).and_then(WisdomEntry::candidate) {
+            match self.wisdom.note_load(&sig).and_then(WisdomEntry::candidate) {
                 Some(c) => (c, true),
                 None => {
                     let ranked = search::rank_candidates(&req, &self.machine);
@@ -260,6 +289,8 @@ impl Tuner {
                     seconds: measured_seconds.unwrap_or(choice.predicted),
                     measured: probe.is_measured(),
                     probe,
+                    loads: 0,
+                    measured_at: wisdom::now_secs(),
                 },
             );
         }
@@ -272,6 +303,7 @@ impl Tuner {
             kind: choice.kind.label().into(),
             nb,
             dir: None,
+            sphere: sphere_fp,
             window: choice.window,
             worker: choice.worker,
         };

@@ -10,8 +10,8 @@
 //! consults it before searching and records every fresh decision into it;
 //! [`Wisdom::save`] / [`Wisdom::load`] move it through a JSON file.
 //!
-//! The format is versioned (`"version": 2`); unknown or malformed entries
-//! — and files written by a different format version — are rejected with
+//! The format is versioned (`"version": 3`); unknown or malformed entries
+//! — and files written by an *unknown* format version — are rejected with
 //! an `Err` at load (never a panic), so a stale file never silently steers
 //! the planner and callers can fall back to a fresh search. Version 2
 //! added the per-entry `probe` record: *how* the stored seconds were
@@ -19,6 +19,14 @@
 //! forward-only empirical probe) or `"scf"` (the SCF-shaped alternating
 //! forward/inverse probe of
 //! [`measure_candidates_scf`](crate::tuner::calibrate::measure_candidates_scf)).
+//! Version 3 added the lifecycle fields: a per-entry `loads` counter (how
+//! many requests the entry has steered — [`Wisdom::note_load`] advances
+//! it, `Tuner::remeasure_after` retires entries past a threshold) and a
+//! `measured_at` provenance stamp (seconds since the UNIX epoch when the
+//! decision was recorded). Version-2 files are **upgraded in place** at
+//! load — their entries parse with `loads = 0` and `measured_at = 0.0` —
+//! so existing wisdom keeps steering; only v1 and unknown versions are
+//! rejected.
 
 use std::collections::BTreeMap;
 
@@ -27,7 +35,19 @@ use crate::tuner::search::{Candidate, CandidateKind};
 use crate::util::json::Json;
 
 /// Current on-disk format version.
-const VERSION: f64 = 2.0;
+const VERSION: f64 = 3.0;
+
+/// Latest *previous* version still accepted at load (upgraded in place).
+const UPGRADABLE_VERSION: f64 = 2.0;
+
+/// Seconds since the UNIX epoch, or `0.0` when the system clock predates
+/// it (never a panic) — the provenance stamp for fresh wisdom entries.
+pub fn now_secs() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
 
 /// How a wisdom entry's `seconds` were obtained.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -90,6 +110,15 @@ pub struct WisdomEntry {
     pub measured: bool,
     /// Which probe produced `seconds` (see [`Probe`]).
     pub probe: Probe,
+    /// How many requests this entry has steered since it was recorded
+    /// ([`Wisdom::note_load`] advances it on every hit). The lifecycle
+    /// knob `Tuner::remeasure_after` retires entries whose count passes
+    /// its threshold, forcing a fresh search.
+    pub loads: u64,
+    /// Seconds since the UNIX epoch when the decision was recorded
+    /// ([`now_secs`]); `0.0` for entries upgraded from v2 files, which
+    /// carried no provenance.
+    pub measured_at: f64,
 }
 
 impl WisdomEntry {
@@ -127,6 +156,22 @@ impl Wisdom {
     /// Record (or overwrite) the winner for a request signature.
     pub fn record(&mut self, signature: String, entry: WisdomEntry) {
         self.entries.insert(signature, entry);
+    }
+
+    /// Look up the remembered winner for a request signature, advancing
+    /// its `loads` counter — the lifecycle bookkeeping behind
+    /// `Tuner::remeasure_after`. Use [`Wisdom::lookup`] for a counter-free
+    /// peek.
+    pub fn note_load(&mut self, signature: &str) -> Option<&WisdomEntry> {
+        let e = self.entries.get_mut(signature)?;
+        e.loads = e.loads.saturating_add(1);
+        Some(e)
+    }
+
+    /// Forget the winner for one request signature (lifecycle retirement);
+    /// returns the retired entry, if any.
+    pub fn remove(&mut self, signature: &str) -> Option<WisdomEntry> {
+        self.entries.remove(signature)
     }
 
     /// Drop every remembered winner, keeping the calibration record. Call
@@ -168,6 +213,8 @@ impl Wisdom {
             m.insert("seconds".into(), Json::Num(e.seconds));
             m.insert("measured".into(), Json::Bool(e.measured));
             m.insert("probe".into(), Json::Str(e.probe.label().into()));
+            m.insert("loads".into(), Json::Num(e.loads as f64));
+            m.insert("measured_at".into(), Json::Num(e.measured_at));
             entries.insert(sig.clone(), Json::Obj(m));
         }
         root.insert("entries".into(), Json::Obj(entries));
@@ -180,7 +227,7 @@ impl Wisdom {
             .get("version")
             .and_then(Json::as_f64)
             .ok_or_else(|| "wisdom: missing version".to_string())?;
-        if version != VERSION {
+        if version != VERSION && version != UPGRADABLE_VERSION {
             return Err(format!("wisdom: unsupported version {version}"));
         }
         let calibration = match j.get("calibration") {
@@ -242,9 +289,42 @@ impl Wisdom {
                 // whose `measured` flag contradicts its probe kind cannot
                 // smuggle the disagreement into memory.
                 let measured = probe.is_measured();
+                // Lifecycle fields (v3). Absent — the in-place v2 upgrade
+                // path — means a fresh counter and no provenance; present
+                // but non-integer (or negative) `loads` is corruption.
+                let loads = match e.get("loads") {
+                    None => 0,
+                    Some(v) => {
+                        let f = v.as_f64().ok_or_else(|| {
+                            format!("wisdom: entry `{sig}` loads must be a number")
+                        })?;
+                        if f.fract() != 0.0 || f < 0.0 {
+                            return Err(format!(
+                                "wisdom: entry `{sig}` loads must be a non-negative \
+                                 integer (got {f})"
+                            ));
+                        }
+                        f as u64
+                    }
+                };
+                let measured_at = match e.get("measured_at") {
+                    None => 0.0,
+                    Some(v) => v.as_f64().ok_or_else(|| {
+                        format!("wisdom: entry `{sig}` measured_at must be a number")
+                    })?,
+                };
                 entries.insert(
                     sig.clone(),
-                    WisdomEntry { kind, window, worker, seconds, measured, probe },
+                    WisdomEntry {
+                        kind,
+                        window,
+                        worker,
+                        seconds,
+                        measured,
+                        probe,
+                        loads,
+                        measured_at,
+                    },
                 );
             }
         } else if j.get("entries").is_some() {
@@ -286,6 +366,8 @@ mod tests {
                 seconds: 0.0125,
                 measured: false,
                 probe: Probe::Model,
+                loads: 0,
+                measured_at: 0.0,
             },
         );
         w.record(
@@ -297,6 +379,8 @@ mod tests {
                 seconds: 0.5,
                 measured: true,
                 probe: Probe::Forward,
+                loads: 17,
+                measured_at: 1.7e9,
             },
         );
         w.record(
@@ -308,6 +392,8 @@ mod tests {
                 seconds: 0.75,
                 measured: true,
                 probe: Probe::Scf,
+                loads: 3,
+                measured_at: 1.7e9 + 60.0,
             },
         );
         w
@@ -321,6 +407,9 @@ mod tests {
         assert_eq!(back, w);
         assert_eq!(back.lookup("16x16x16|nb=4|p=8|dense").unwrap().window, 4);
         assert!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().measured);
+        // The lifecycle fields survive the round trip too.
+        assert_eq!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().loads, 17);
+        assert_eq!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().measured_at, 1.7e9);
         // The probe record survives the round trip — including the
         // SCF-shaped probe under its round-trip (`|rt`) signature.
         assert_eq!(back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().probe, Probe::Forward);
@@ -412,6 +501,52 @@ mod tests {
         let w = Wisdom::from_json(&Json::parse(doc).unwrap()).unwrap();
         assert_eq!(w.lookup("k").unwrap().probe, Probe::Model);
         assert!(!w.lookup("k").unwrap().probe.is_measured());
+    }
+
+    #[test]
+    fn v2_files_are_upgraded_in_place() {
+        // A version-2 file (pre-lifecycle format) must load — not be
+        // rejected — with a fresh `loads` counter and no provenance stamp,
+        // so existing wisdom keeps steering across the format bump.
+        let v2 = r#"{"version": 2, "entries": {"8x8x8|nb=2|p=2|dense":
+            {"kind": "slab-pencil", "window": 2, "seconds": 0.001,
+             "worker": true, "probe": "scf"}}}"#;
+        let w = Wisdom::from_json(&Json::parse(v2).unwrap()).unwrap();
+        let e = w.lookup("8x8x8|nb=2|p=2|dense").unwrap();
+        assert_eq!((e.loads, e.measured_at), (0, 0.0));
+        assert!(e.worker && e.measured, "v2 payload fields must survive the upgrade");
+        // Saving re-serializes at the current version.
+        let text = w.to_json().to_string();
+        assert!(text.contains("\"version\": 3") || text.contains("\"version\":3"), "{text}");
+        assert_eq!(Wisdom::from_json(&Json::parse(&text).unwrap()).unwrap(), w);
+    }
+
+    #[test]
+    fn non_integer_loads_are_rejected() {
+        let bad = r#"{"version": 3, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5, "loads": 2.5}}}"#;
+        let got = Wisdom::from_json(&Json::parse(bad).unwrap());
+        assert!(matches!(&got, Err(e) if e.contains("loads")), "{got:?}");
+        let negative = r#"{"version": 3, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5, "loads": -1}}}"#;
+        assert!(Wisdom::from_json(&Json::parse(negative).unwrap()).is_err());
+        let non_number = r#"{"version": 3, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5, "loads": "many"}}}"#;
+        assert!(Wisdom::from_json(&Json::parse(non_number).unwrap()).is_err());
+    }
+
+    #[test]
+    fn note_load_advances_the_counter_and_remove_retires() {
+        let mut w = sample();
+        assert_eq!(w.lookup("16x16x16|nb=4|p=8|dense").unwrap().loads, 0);
+        w.note_load("16x16x16|nb=4|p=8|dense");
+        w.note_load("16x16x16|nb=4|p=8|dense");
+        assert_eq!(w.lookup("16x16x16|nb=4|p=8|dense").unwrap().loads, 2);
+        assert!(w.note_load("no-such-signature").is_none());
+        let retired = w.remove("16x16x16|nb=4|p=8|dense").unwrap();
+        assert_eq!(retired.loads, 2);
+        assert!(w.lookup("16x16x16|nb=4|p=8|dense").is_none());
+        assert!(w.remove("16x16x16|nb=4|p=8|dense").is_none());
     }
 
     #[test]

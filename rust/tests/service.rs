@@ -1,0 +1,372 @@
+//! Multi-tenant transform service integration tests: coalesced batches
+//! must be bit-identical to sequential per-tenant execution across world
+//! sizes, quotas and the backlog window must reject with typed errors and
+//! leak nothing, steady-state flushes must be allocation-free, the
+//! service-driven SCF loop must match standalone runs bit-for-bit while
+//! provably coalescing exchanges, and the whole submit/flush path must
+//! survive the schedule-perturbation gauntlet.
+
+use std::sync::Arc;
+
+use fftb::comm::{run_world, run_world_perturbed, Comm, CommTuning};
+use fftb::dft::{GaussianWells, Lattice, ScfOptions, ScfRunner, ScfServiceDriver};
+use fftb::fft::complex::Complex;
+use fftb::fft::Direction;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{Fftb, PlanKind, PlaneWavePlan};
+use fftb::fftb::sphere::{OffsetArray, SphereKind, SphereSpec};
+use fftb::service::{ServiceConfig, ServiceError, TransformService};
+
+fn sphere() -> Arc<OffsetArray> {
+    Arc::new(SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped).offsets())
+}
+
+fn service_on(p: usize, comm: &Comm, tuning: CommTuning) -> TransformService {
+    let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+    let config = ServiceConfig { tuning, ..Default::default() };
+    TransformService::new([8, 8, 8], grid, config).unwrap()
+}
+
+fn assert_slots_bits_eq(a: &[Complex], b: &[Complex], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length differs");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            (x.re.to_bits(), x.im.to_bits()),
+            (y.re.to_bits(), y.im.to_bits()),
+            "{what}: element {i} differs ({x:?} vs {y:?})"
+        );
+    }
+}
+
+/// Two tenants' bands coalesced into ONE flush must be bit-identical, on
+/// every rank, to the same requests flushed sequentially per tenant —
+/// and to the single-band plane-wave plan run band by band. This is the
+/// service's core correctness claim: coalescing changes the batching,
+/// never the numbers.
+#[test]
+fn coalesced_flush_is_bit_identical_to_sequential_per_tenant_runs() {
+    for p in [1usize, 2, 4] {
+        let off = sphere();
+        let ok = run_world(p, move |comm| {
+            let backend = RustFftBackend::new();
+
+            // Coalesced: a and b interleave five bands, one flush.
+            let mut svc = service_on(p, &comm, CommTuning::default());
+            let a = svc.register_tenant("a");
+            let b = svc.register_tenant("b");
+            let lane = svc.sphere_lane(Arc::clone(&off)).unwrap();
+            let mut inputs = Vec::new();
+            for (t, seed) in [(a, 1u64), (b, 2), (a, 3), (b, 4), (b, 5)] {
+                let mut slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+                let data = phased(slot.len(), seed);
+                slot.data_mut().copy_from_slice(&data);
+                inputs.push((t, data));
+                svc.submit(t, lane, Direction::Forward, slot).unwrap();
+            }
+            assert_eq!(svc.flush(&backend, Direction::Forward), 5);
+            let rec = *svc.flush_records().last().unwrap();
+            assert_eq!((rec.jobs, rec.tenants), (5, 2));
+            let got_a = svc.collect(a);
+            let got_b = svc.collect(b);
+            assert_eq!((got_a.len(), got_b.len()), (2, 3));
+
+            // Sequential: a fresh service, each tenant flushed alone.
+            let mut seq = service_on(p, &comm, CommTuning::default());
+            let sa = seq.register_tenant("a");
+            let sb = seq.register_tenant("b");
+            let lane2 = seq.sphere_lane(Arc::clone(&off)).unwrap();
+            assert_eq!(lane, lane2, "same sphere, same coalescing key");
+            let mut seq_results = Vec::new();
+            for t in [sa, sb] {
+                for (owner, data) in &inputs {
+                    if owner.index() != t.index() {
+                        continue;
+                    }
+                    let mut slot = seq.checkout(t, lane2, Direction::Forward).unwrap();
+                    slot.data_mut().copy_from_slice(data);
+                    seq.submit(t, lane2, Direction::Forward, slot).unwrap();
+                }
+                seq.flush(&backend, Direction::Forward);
+                seq_results.push(seq.collect(t));
+            }
+
+            // And the ground truth: a single-band plan per input.
+            let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+            let single = PlaneWavePlan::new(Arc::clone(&off), 1, grid).unwrap();
+            for (tenant_got, seq_got, tenant_idx) in
+                [(&got_a, &seq_results[0], 0usize), (&got_b, &seq_results[1], 1)]
+            {
+                let mut band = 0;
+                for (owner, data) in &inputs {
+                    if owner.index() != tenant_idx {
+                        continue;
+                    }
+                    let what = format!("p={p} tenant {tenant_idx} band {band}");
+                    assert_slots_bits_eq(
+                        tenant_got[band].1.data(),
+                        seq_got[band].1.data(),
+                        &format!("{what}: coalesced vs sequential"),
+                    );
+                    let (want, _) = single.forward(&backend, data.clone());
+                    assert_slots_bits_eq(
+                        tenant_got[band].1.data(),
+                        &want,
+                        &format!("{what}: coalesced vs single-band plan"),
+                    );
+                    band += 1;
+                }
+            }
+            true
+        });
+        assert!(ok.into_iter().all(|b| b));
+    }
+}
+
+/// Quota exhaustion and the backlog window reject with typed errors
+/// through the public API, release the refused request's resources, and
+/// recover as soon as a slot drops / a flush runs — never a panic, never
+/// an unbounded queue.
+#[test]
+fn quota_and_backlog_reject_typed_and_recover() {
+    run_world(1, |comm| {
+        let off = sphere();
+        let grid = ProcGrid::new(&[1], comm.clone()).unwrap();
+        let config = ServiceConfig { max_in_flight: 2, ..Default::default() };
+        let mut svc = TransformService::new([8, 8, 8], grid, config).unwrap();
+        let lane = svc.sphere_lane(Arc::clone(&off)).unwrap();
+        let slot_bytes = svc.slot_bytes(lane).unwrap();
+        let t = svc.register_tenant_with_quota("tight", slot_bytes);
+        let backend = RustFftBackend::new();
+
+        // One slot fits; the second checkout is a typed refusal.
+        let s1 = svc.checkout(t, lane, Direction::Forward).unwrap();
+        match svc.checkout(t, lane, Direction::Forward) {
+            Err(ServiceError::QuotaExhausted { tenant, requested, charged, quota }) => {
+                assert_eq!(tenant, t.index());
+                assert_eq!(requested, slot_bytes);
+                assert_eq!(charged, slot_bytes);
+                assert_eq!(quota, slot_bytes);
+            }
+            other => panic!("expected QuotaExhausted, got {other:?}"),
+        }
+        // Dropping the outstanding slot frees the lease immediately.
+        drop(s1);
+        assert_eq!(svc.tenant_charged(t), 0);
+
+        // The in-flight window refuses the third submit and releases its
+        // slot; a flush reopens the window.
+        let roomy = svc.register_tenant("roomy");
+        for _ in 0..2 {
+            let slot = svc.checkout(roomy, lane, Direction::Forward).unwrap();
+            svc.submit(roomy, lane, Direction::Forward, slot).unwrap();
+        }
+        let slot = svc.checkout(roomy, lane, Direction::Forward).unwrap();
+        match svc.submit(roomy, lane, Direction::Forward, slot) {
+            Err(ServiceError::Backlogged { pending: 2, limit: 2 }) => {}
+            other => panic!("expected Backlogged, got {other:?}"),
+        }
+        assert_eq!(svc.pending(), 2);
+        svc.flush(&backend, Direction::Forward);
+        assert_eq!(svc.pending(), 0);
+        drop(svc.collect(roomy));
+        let slot = svc.checkout(roomy, lane, Direction::Forward).unwrap();
+        assert!(svc.submit(roomy, lane, Direction::Forward, slot).is_ok());
+    });
+}
+
+/// Steady-state contract over the sphere lane: from the second
+/// forward/inverse round on, the tenant's slot pool mints nothing, the
+/// lane's workspaces grow by zero bytes, and every flush is a plan-cache
+/// hit.
+#[test]
+fn steady_state_sphere_round_trips_are_allocation_free() {
+    let p = 2;
+    run_world(p, move |comm| {
+        let off = sphere();
+        let mut svc = service_on(p, &comm, CommTuning::default());
+        let t = svc.register_tenant("hot");
+        let lane = svc.sphere_lane(Arc::clone(&off)).unwrap();
+        let backend = RustFftBackend::new();
+        let mut after_first = 0;
+        for round in 0..4u64 {
+            // Forward two bands, then send the dense results back through
+            // the inverse — the full SCF-shaped round trip.
+            for b in 0..2u64 {
+                let mut slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+                let data = phased(slot.len(), 10 * round + b);
+                slot.data_mut().copy_from_slice(&data);
+                svc.submit(t, lane, Direction::Forward, slot).unwrap();
+            }
+            svc.flush(&backend, Direction::Forward);
+            for (_, slot) in svc.collect(t) {
+                svc.submit(t, lane, Direction::Inverse, slot).unwrap();
+            }
+            svc.flush(&backend, Direction::Inverse);
+            drop(svc.collect(t));
+            if round == 0 {
+                after_first = svc.tenant_alloc_bytes(t);
+                assert!(after_first > 0, "the first round mints the working set");
+            } else {
+                assert_eq!(
+                    svc.tenant_alloc_bytes(t),
+                    after_first,
+                    "round {round} must run out of recycled slots"
+                );
+                let recs = svc.flush_records();
+                for rec in &recs[recs.len() - 2..] {
+                    assert!(rec.plan_cache_hit, "round {round} must hit the plan cache");
+                    assert_eq!(rec.alloc_bytes, 0, "round {round} workspace must be warm");
+                }
+            }
+        }
+        assert_eq!(svc.tenant_charged(t), 0, "all leases returned");
+    });
+}
+
+/// Two SCF solvers through one service must produce, on every world size,
+/// bit-identical scalars, eigenvalues and densities to each solver
+/// running alone on a pinned plan — while the service's exchange count
+/// stays strictly below the sum of the isolated runs' (the coalescing
+/// win the layer exists for).
+#[test]
+fn service_scf_tenants_match_isolated_runs_across_world_sizes() {
+    const N: usize = 12;
+    const A: f64 = 8.0;
+    const ECUT: f64 = 2.0;
+    let iters = 3usize;
+    for p in [1usize, 2, 4] {
+        run_world(p, move |comm| {
+            let lat = Lattice::new(A, N, ECUT);
+            let backend = RustFftBackend::new();
+            let pot_a = GaussianWells::single(1.0, 1.5);
+            let pot_b = GaussianWells::single(3.0, 1.2);
+            let opts_a = ScfOptions { max_iters: iters, tol: 0.0, ..Default::default() };
+            let opts_b =
+                ScfOptions { max_iters: iters, tol: 0.0, seed: 7, ..Default::default() };
+
+            let mut driver =
+                ScfServiceDriver::new(&lat, &comm, ServiceConfig::default()).unwrap();
+            driver.add_tenant("a", lat.clone(), 2, &pot_a, &comm, opts_a.clone()).unwrap();
+            driver.add_tenant("b", lat.clone(), 3, &pot_b, &comm, opts_b.clone()).unwrap();
+            let results = driver.run(&backend).unwrap();
+            for rec in driver.service().flush_records() {
+                assert_eq!(rec.tenants, 2, "every flush must serve both tenants");
+            }
+            let coalesced_msgs = driver.service().metrics().total_messages();
+
+            // The same two problems, each alone on a pinned plan.
+            let mut isolated_msgs = 0u64;
+            let mut isolated = Vec::new();
+            for (nb, pot, opts) in [(2usize, &pot_a, &opts_a), (3, &pot_b, &opts_b)] {
+                let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+                let plan = PlaneWavePlan::new(Arc::clone(&lat.offsets), nb, grid).unwrap();
+                let plan =
+                    Arc::new(Fftb { kind: PlanKind::PlaneWave(plan), sizes: [N, N, N], nb });
+                let mut runner =
+                    ScfRunner::with_plan(lat.clone(), nb, pot, &comm, plan, opts.clone())
+                        .unwrap();
+                isolated.push(runner.run(&backend));
+                for tr in runner.drain_traces() {
+                    isolated_msgs += tr.comm_messages();
+                }
+            }
+            if p > 1 {
+                assert!(
+                    coalesced_msgs < isolated_msgs,
+                    "coalescing must cut exchanges: {coalesced_msgs} vs {isolated_msgs}"
+                );
+            }
+
+            for (which, (svc, alone)) in
+                [(&results[0], &isolated[0]), (&results[1], &isolated[1])].iter().enumerate()
+            {
+                assert_eq!(svc.history.len(), alone.history.len());
+                for (s, t) in svc.history.iter().zip(&alone.history) {
+                    for (x, y, what) in [
+                        (s.charge, t.charge, "charge"),
+                        (s.delta_rho, t.delta_rho, "delta_rho"),
+                        (s.max_residual, t.max_residual, "max_residual"),
+                    ] {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "p={p} tenant {which} iter {}: {what} differs ({x} vs {y})",
+                            s.iter
+                        );
+                    }
+                }
+                for (x, y) in svc.eigenvalues.iter().zip(&alone.eigenvalues) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "p={p} tenant {which}: eigenvalue");
+                }
+                for (i, (x, y)) in
+                    svc.density.rho.iter().zip(&alone.density.rho).enumerate()
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(), "p={p} tenant {which}: rho[{i}]");
+                }
+            }
+        });
+    }
+}
+
+/// The perturbation gauntlet through the service path: coalesced
+/// multi-tenant forward + inverse flushes must be bit-identical under
+/// seeded delivery/wait perturbation, with the exchange's helper worker
+/// both off and on.
+#[test]
+fn perturbed_service_flushes_are_bit_identical() {
+    for p in [2usize, 3, 5] {
+        let body = move |worker: bool| {
+            move |comm: Comm| {
+                let off = sphere();
+                let tuning = CommTuning::with_window(2).with_worker(worker);
+                let mut svc = service_on(p, &comm, tuning);
+                let a = svc.register_tenant("a");
+                let b = svc.register_tenant("b");
+                let lane = svc.sphere_lane(off).unwrap();
+                let backend = RustFftBackend::new();
+                let mut bits = Vec::new();
+                for round in 0..2u64 {
+                    for (t, seed) in [(a, 1u64), (b, 2), (a, 3)] {
+                        let mut slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+                        let data = phased(slot.len(), 100 * round + seed);
+                        slot.data_mut().copy_from_slice(&data);
+                        svc.submit(t, lane, Direction::Forward, slot).unwrap();
+                    }
+                    svc.flush(&backend, Direction::Forward);
+                    for t in [a, b] {
+                        for (_, slot) in svc.collect(t) {
+                            bits.extend(slot.data().iter().copied());
+                            svc.submit(t, lane, Direction::Inverse, slot).unwrap();
+                        }
+                    }
+                    svc.flush(&backend, Direction::Inverse);
+                    for t in [a, b] {
+                        for (_, slot) in svc.collect(t) {
+                            bits.extend(slot.data().iter().copied());
+                        }
+                    }
+                }
+                bits
+            }
+        };
+        let base = run_world(p, body(false));
+        let threaded = run_world(p, body(true));
+        for (r, (x, y)) in base.iter().zip(&threaded).enumerate() {
+            assert_slots_bits_eq(x, y, &format!("p={p} rank {r} worker-on unperturbed"));
+        }
+        for seed in [1u64, 23, 0xDEAD_BEEF] {
+            for worker in [false, true] {
+                let got = run_world_perturbed(p, seed, body(worker));
+                for (r, (x, y)) in base.iter().zip(&got).enumerate() {
+                    assert_slots_bits_eq(
+                        x,
+                        y,
+                        &format!("p={p} rank {r} seed={seed} worker={worker}"),
+                    );
+                }
+            }
+        }
+    }
+}

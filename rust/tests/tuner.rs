@@ -183,6 +183,105 @@ fn empirical_mode_all_ranks_agree() {
 }
 
 #[test]
+fn wisdom_v3_lifecycle_survives_a_restart() {
+    // The v3 lifecycle fields — the per-entry `loads` counter and the
+    // `measured_at` provenance stamp — must survive the on-disk round
+    // trip exactly, and the file must carry the current format version.
+    let sig = "8x8x8|nb=2|p=2|dense";
+    let path = std::env::temp_dir().join("fftb_tuner_wisdom_v3_lifecycle.json");
+    let saved: Vec<Wisdom> = run_world(2, |comm| {
+        let mut tuner = Tuner::local();
+        let first = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        assert!(!first.from_wisdom, "the first request must search");
+        for _ in 0..3 {
+            let again = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+            assert!(again.from_wisdom, "repeat requests must be wisdom-steered");
+        }
+        tuner.wisdom.clone()
+    });
+    let e = saved[0].lookup(sig).expect("the tuned request must be remembered");
+    assert_eq!(e.loads, 3, "each wisdom-steered request counts one load");
+    assert!(e.measured_at > 0.0, "recording must stamp provenance");
+    saved[0].save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let loaded = Wisdom::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(
+        text.contains("\"version\": 3") || text.contains("\"version\":3"),
+        "the file must carry the current format version: {text}"
+    );
+    let back = loaded.lookup(sig).unwrap();
+    assert_eq!(back.loads, e.loads, "loads must survive the restart");
+    assert_eq!(
+        back.measured_at.to_bits(),
+        e.measured_at.to_bits(),
+        "measured_at must survive the restart bit-exactly"
+    );
+}
+
+#[test]
+fn stale_v2_wisdom_upgrades_in_place_and_keeps_steering() {
+    // A version-2 file (pre-lifecycle format) must load with fresh
+    // lifecycle fields, steer the next request like native wisdom, count
+    // that load, and re-save at version 3 — the in-place upgrade.
+    let sig = "8x8x8|nb=2|p=2|dense";
+    let path = std::env::temp_dir().join("fftb_tuner_wisdom_v2_upgrade.json");
+    let v2 = r#"{"version": 2, "entries": {"8x8x8|nb=2|p=2|dense":
+        {"kind": "slab-pencil", "window": 2, "seconds": 0.001}}}"#;
+    std::fs::write(&path, v2).unwrap();
+    let loaded = Wisdom::load(&path).unwrap();
+    let e = loaded.lookup(sig).unwrap();
+    assert_eq!((e.loads, e.measured_at), (0, 0.0), "v2 entries get fresh lifecycle fields");
+
+    let upgraded: Vec<Wisdom> = run_world(2, move |comm| {
+        let mut tuner = Tuner::with_wisdom(fftb::model::Machine::local_cpu(), loaded.clone());
+        let t = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        assert!(t.from_wisdom, "upgraded wisdom must keep steering");
+        assert_eq!(t.choice.kind.label(), "slab-pencil");
+        assert_eq!(t.choice.window, 2);
+        tuner.wisdom.clone()
+    });
+    assert_eq!(upgraded[0].lookup(sig).unwrap().loads, 1, "the steered request counts");
+    upgraded[0].save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(
+        text.contains("\"version\": 3") || text.contains("\"version\":3"),
+        "re-saving must upgrade the file to the current version: {text}"
+    );
+}
+
+#[test]
+fn remeasure_after_retires_hot_entries_in_lockstep() {
+    // The wisdom lifecycle for long-lived services: once an entry has
+    // steered `remeasure_after` requests it is retired, and the next
+    // request runs a fresh search instead of trusting the remembered
+    // winner forever — identically on every rank, with the plan cache
+    // still serving the same plan object across the re-measure.
+    run_world(2, |comm| {
+        let mut tuner = Tuner::local();
+        tuner.remeasure_after = 2;
+        let sig = "8x8x8|nb=2|p=2|dense";
+        let first = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        assert!(!first.from_wisdom);
+        for _ in 0..2 {
+            assert!(tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap().from_wisdom);
+        }
+        assert_eq!(tuner.wisdom.lookup(sig).unwrap().loads, 2);
+        // The entry hit the threshold: the next request retires it and
+        // searches afresh (recording a new entry with a reset counter),
+        // while the re-search lands on the same cached plan object.
+        let refreshed = tuner.plan_auto([8, 8, 8], 2, None, &comm, None).unwrap();
+        assert!(!refreshed.from_wisdom, "a hot entry must be retired and re-searched");
+        assert!(
+            Arc::ptr_eq(&refreshed.plan, &first.plan),
+            "the re-search must land on the same cached plan"
+        );
+        assert_eq!(tuner.wisdom.lookup(sig).unwrap().loads, 0, "the new entry starts fresh");
+    });
+}
+
+#[test]
 fn auto_window_options_match_default_numerics() {
     // FftbOptions::auto() frees only the window; the windowed exchange is
     // bit-identical across windows, so the auto plan must agree exactly
