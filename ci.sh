@@ -34,7 +34,13 @@
 #                  multi-tenant service smoke on p=2: two SCF tenants plus
 #                  a raw batched-sphere tenant coalescing through one
 #                  service (typed quota rejection, three-tenant flushes,
-#                  steady-state zero-alloc, per-tenant percentiles)
+#                  steady-state zero-alloc, per-tenant percentiles); then
+#                  the real/k-point smoke on p=2: the r2c half-spectrum
+#                  must match the c2c plan on the unique bins to 1e-12,
+#                  the summed fused-exchange bytes must come in below
+#                  0.6x of c2c, the tuner must pick plane-wave-r2c for
+#                  the real request, and the Bloch-shifted sphere must
+#                  round-trip under its own fingerprint
 #
 # Nightly sanitizer lanes (opt-in, PALLAS_NIGHTLY=1; PALLAS_NIGHTLY=only
 # skips the stable lanes and runs just the sanitizers):
@@ -67,7 +73,8 @@ if [ "$PALLAS_NIGHTLY" != "only" ]; then
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
     cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4 --worker
     cargo run --release --quiet --example service_multi_tenant -- --p 2 --iters 3
-    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker + service smoke)"
+    cargo run --release --quiet --example real_kpoint -- --p 2
+    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker + service smoke + real/k-point smoke)"
 fi
 
 if [ -n "$PALLAS_NIGHTLY" ]; then

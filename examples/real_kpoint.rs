@@ -1,0 +1,168 @@
+//! END-TO-END: real-input (r2c/c2r) sphere transforms and k-point offset
+//! bases through the fused exchange.
+//!
+//! The scenario (CI runs this on p=2 as a smoke test):
+//!
+//! 1. the same Γ-point sphere goes through both the r2c plan
+//!    ([`RealPlaneWavePlan`]) and the c2c plan ([`PlaneWavePlan`]) with
+//!    identical coefficients — the gathered half-spectrum must match the
+//!    c2c cube on the Hermitian-unique bins `kz < nz/2 + 1` to a relative
+//!    1e-12;
+//! 2. the `ExecTrace` wire accounting must show the half-traffic exchange:
+//!    summed across ranks, the r2c forward puts strictly less than 0.6x
+//!    the c2c bytes on the wire (the exact ratio is `(nz/2 + 1)/nz`);
+//! 3. the c2r inverse must be the exact adjoint: the round trip lands back
+//!    on the real input to 1e-12;
+//! 4. the tuner, asked for a real transform (`Tuner::plan_auto_real`),
+//!    must pick the `plane-wave-r2c` candidate on its own;
+//! 5. a Bloch-shifted basis (`SphereSpec::offset(k)`) gets its own
+//!    fingerprint — its own plan/wisdom/lane identity — while `k = 0` is
+//!    bit-identical to the Γ basis; the offset sphere round-trips through
+//!    the c2c plan to the same tolerance.
+//!
+//! Run: `cargo run --release --example real_kpoint [--p N]`
+
+use std::sync::Arc;
+
+use fftb::comm::communicator::run_world;
+use fftb::fft::complex::{max_abs_diff, Complex};
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::ProcGrid;
+use fftb::fftb::plan::testutil::{gather_cube_z, phased};
+use fftb::fftb::plan::{PlaneWavePlan, RealPlaneWavePlan};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::tuner::Tuner;
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let p = arg_usize("--p", 2);
+    let n = 16usize; // FFT grid per dimension
+    let nb = 2usize; // bands per transform
+    let nh = n / 2 + 1; // Hermitian-unique z bins
+    let kappa = [0.25, 0.0, 0.0]; // the off-Γ k-point (fractional)
+
+    assert!(p <= nh, "real plan needs p <= nz/2 + 1 (p={p}, nh={nh})");
+
+    let spec = SphereSpec::new([n, n, n], 6.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+
+    println!("real-input (r2c/c2r) + k-point sphere transforms");
+    println!("{n}^3 grid, sphere of {} points, nb={nb}, {p} ranks, k = {kappa:?}", off.total());
+    println!();
+
+    let off_main = Arc::clone(&off);
+    let out = run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm.clone()).expect("1D grid must assemble");
+        let backend = RustFftBackend::new();
+
+        let r2c = RealPlaneWavePlan::new(Arc::clone(&off_main), nb, Arc::clone(&grid))
+            .expect("r2c plan must build on this world");
+        let c2c = PlaneWavePlan::new(Arc::clone(&off_main), nb, Arc::clone(&grid))
+            .expect("c2c plan must build on this world");
+
+        // Identical coefficients through both plans: the two input packings
+        // share the sphere's y-outer / local-x / z-run order, so the real
+        // vector and its zero-imaginary embedding describe the same field.
+        let x: Vec<f64> =
+            phased(r2c.input_len(), comm.rank() as u64).iter().map(|c| c.re).collect();
+        let zin: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+
+        let (hx, rt) = r2c.forward(&backend, x.clone());
+        let (zout, ct) = c2c.forward(&backend, zin);
+
+        // Gate 3: the c2r inverse is the exact adjoint of the r2c forward.
+        let (back, _) = r2c.inverse(&backend, hx.clone());
+        let rt_err = back
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+
+        // Gate 4: the tuner picks the half-spectrum family for a real
+        // request (its `|r2c`-signed entry never collides with c2c).
+        let mut tuner = Tuner::local();
+        let tuned = tuner
+            .plan_auto_real([n, n, n], nb, Arc::clone(&off_main), &comm, None)
+            .expect("the real request must resolve");
+        let label = tuned.choice.kind.label();
+
+        // Gate 5: the Bloch-shifted basis has its own identity; Γ shares.
+        let k_off = Arc::new(spec.offset(kappa));
+        assert_eq!(
+            spec.offset([0.0; 3]).fingerprint(),
+            off_main.fingerprint(),
+            "k = 0 must be bit-identical to the Γ basis"
+        );
+        assert_ne!(
+            k_off.fingerprint(),
+            off_main.fingerprint(),
+            "a shifted k-point must salt the fingerprint"
+        );
+        let k_pts = k_off.total();
+        let kplan = PlaneWavePlan::new(k_off, nb, grid)
+            .expect("the k-point plan must build on this world");
+        let kin = phased(kplan.input_len(), 7 + comm.rank() as u64);
+        let (kspec, _) = kplan.forward(&backend, kin.clone());
+        let (kback, _) = kplan.inverse(&backend, kspec);
+        let k_err = max_abs_diff(&kback, &kin);
+
+        (hx, zout, rt.comm_bytes(), ct.comm_bytes(), rt_err, label, k_err, k_pts)
+    });
+
+    // Gate 1: gathered half-spectrum == c2c cube on the unique bins. The
+    // gathered layout is kz-outermost, so the half cube is literally the
+    // full cube's prefix.
+    let halves: Vec<Vec<Complex>> = out.iter().map(|o| o.0.clone()).collect();
+    let fulls: Vec<Vec<Complex>> = out.iter().map(|o| o.1.clone()).collect();
+    let half = gather_cube_z(&halves, nb, [n, n, nh], p);
+    let full = gather_cube_z(&fulls, nb, [n, n, n], p);
+    // 1e-12 relative to the spectrum's own magnitude (the unnormalized
+    // forward reaches O(n_pw), so an absolute gate would mismeasure).
+    let scale = full.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+    let spec_err = max_abs_diff(&half, &full[..half.len()]);
+    assert!(
+        spec_err <= 1e-12 * scale,
+        "r2c diverged from c2c on the unique bins: {spec_err:.3e} (scale {scale:.1})"
+    );
+
+    // Gate 2: summed wire bytes strictly below 0.6x of c2c.
+    let r2c_bytes: u64 = out.iter().map(|o| o.2).sum();
+    let c2c_bytes: u64 = out.iter().map(|o| o.3).sum();
+    if p > 1 {
+        assert!(
+            (r2c_bytes as f64) < 0.6 * c2c_bytes as f64,
+            "r2c exchange not halved: {r2c_bytes} vs {c2c_bytes} bytes"
+        );
+    }
+
+    for (rank, o) in out.iter().enumerate() {
+        assert!(o.4 <= 1e-12, "rank {rank}: c2r round trip drifted: {:.3e}", o.4);
+        assert_eq!(o.5, "plane-wave-r2c", "rank {rank}: tuner skipped the r2c candidate");
+        assert!(o.6 <= 1e-12, "rank {rank}: k-point round trip drifted: {:.3e}", o.6);
+    }
+
+    println!("== gates ==");
+    println!("r2c vs c2c on kz < {nh}:   max |diff| = {spec_err:.3e}  (<= 1e-12 rel)");
+    println!("c2r round trip:           max |diff| = {:.3e}  (<= 1e-12)", out[0].4);
+    println!(
+        "k-point round trip:       max |diff| = {:.3e}  ({} pts at k={kappa:?})",
+        out[0].6, out[0].7
+    );
+    println!("tuner pick for the real request: {}", out[0].5);
+    if p > 1 {
+        println!(
+            "fused-exchange wire bytes: r2c {r2c_bytes} vs c2c {c2c_bytes}  (ratio {:.4}, gate < 0.6; exact {nh}/{n} = {:.4})",
+            r2c_bytes as f64 / c2c_bytes as f64, nh as f64 / n as f64
+        );
+    }
+    println!();
+    println!("real_kpoint OK");
+}

@@ -24,20 +24,34 @@
 //! of between them. Reported: slowest-rank wall time per mode and the
 //! helper's busy nanoseconds; bit-identity of the two modes is asserted.
 //!
+//! Section 4 — c2c vs r2c sphere exchange: the same plane-wave sphere
+//! forward through the complex plan and the Hermitian half-spectrum plan
+//! (`RealPlaneWavePlan`). The r2c kernels move only the `nz/2 + 1`
+//! Hermitian-unique z bins, so the fused exchange carries
+//! `(nz/2 + 1)/nz` of the c2c wire bytes — the byte columns are exact
+//! accounting (asserted < 0.6x summed across ranks), the time columns
+//! are live means.
+//!
 //! Reported per discipline: slowest-rank wall time per exchange and
 //! slowest-rank `ExecTrace::wait_ns` per exchange (time blocked in
 //! receive waits). Expected shape: the overlapped schedule shows lower
 //! time-in-wait at p >= 4, because a late rank's sends reach its partners
 //! in one burst instead of one round at a time.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fftb::comm::alltoall::{alltoallv_complex_flat_serial, alltoallv_complex_flat_tuned};
 use fftb::comm::{barrier, run_world, CommTuning};
 use fftb::fft::complex::{Complex, ZERO};
-use fftb::fftb::grid::cyclic;
+use fftb::fftb::backend::RustFftBackend;
+use fftb::fftb::grid::{cyclic, ProcGrid};
 use fftb::fftb::plan::redistribute::{merge_dim_from, split_dim_into, volume};
-use fftb::fftb::plan::{fused_exchange, A2aSchedule, ExecTrace, SplitMergeKernel};
+use fftb::fftb::plan::testutil::phased;
+use fftb::fftb::plan::{
+    fused_exchange, A2aSchedule, ExecTrace, PlaneWavePlan, RealPlaneWavePlan, SplitMergeKernel,
+};
+use fftb::fftb::sphere::{SphereKind, SphereSpec};
 
 const WARMUP: usize = 5;
 const ITERS: usize = 30;
@@ -212,6 +226,77 @@ fn worker_section() {
     }
 }
 
+/// c2c vs r2c on the plane-wave sphere: the complex plan against the
+/// Hermitian half-spectrum plan, same coefficients, same sphere. The byte
+/// columns are exact wire accounting from `ExecTrace` (summed across
+/// ranks); the ratio lands on `(nz/2 + 1)/nz` exactly.
+fn r2c_section() {
+    println!();
+    println!("c2c vs r2c sphere exchange (plane-wave forward, window 2), skew {SKEW_US}us/rank");
+    println!(
+        "{:>4} {:>7} | {:>11} {:>12} | {:>11} {:>12} {:>7} | {}",
+        "p", "n", "c2c", "c2c bytes", "r2c", "r2c bytes", "ratio", "note"
+    );
+    for p in [2usize, 4, 8] {
+        for n in [16usize, 32] {
+            let nb = 2usize;
+            let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+            let off = Arc::new(spec.offsets());
+            let rows = run_world(p, move |comm| {
+                let me = comm.rank();
+                let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+                let backend = RustFftBackend::new();
+                let c2c = PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+                let r2c = RealPlaneWavePlan::new(Arc::clone(&off), nb, grid).unwrap();
+                let zin = phased(c2c.input_len(), 11 + me as u64);
+                let xin: Vec<f64> = zin.iter().map(|c| c.re).collect();
+
+                let (mut t_c, mut t_r) = (Duration::ZERO, Duration::ZERO);
+                let (mut b_c, mut b_r) = (0u64, 0u64);
+                for it in 0..WARMUP + ITERS {
+                    barrier(&comm);
+                    busy_wait_us(me as u64 * SKEW_US);
+                    let t0 = Instant::now();
+                    let (out, tr) = c2c.forward(&backend, zin.clone());
+                    if it >= WARMUP {
+                        t_c += t0.elapsed();
+                        b_c += tr.comm_bytes();
+                    }
+                    c2c.recycle(out);
+                }
+                for it in 0..WARMUP + ITERS {
+                    barrier(&comm);
+                    busy_wait_us(me as u64 * SKEW_US);
+                    let t0 = Instant::now();
+                    let (out, tr) = r2c.forward(&backend, xin.clone());
+                    if it >= WARMUP {
+                        t_r += t0.elapsed();
+                        b_r += tr.comm_bytes();
+                    }
+                    r2c.recycle(out);
+                }
+                (t_c / ITERS as u32, t_r / ITERS as u32, b_c / ITERS as u64, b_r / ITERS as u64)
+            });
+            let t_c = rows.iter().map(|r| r.0).max().unwrap();
+            let t_r = rows.iter().map(|r| r.1).max().unwrap();
+            let b_c: u64 = rows.iter().map(|r| r.2).sum();
+            let b_r: u64 = rows.iter().map(|r| r.3).sum();
+            // Exact accounting, not timing: summed across ranks the r2c
+            // exchange must carry fewer than 0.6x the c2c bytes.
+            assert!(b_r * 10 < b_c * 6, "r2c bytes not halved at p={p}, n={n}: {b_r} vs {b_c}");
+            let note = if t_r > t_c { "r2c did not win (timing noise?)" } else { "" };
+            println!(
+                "{p:>4} {n:>6}^ | {:>11} {:>12} | {:>11} {:>12} {:>7.4} | {note}",
+                fmt_us(t_c),
+                b_c,
+                fmt_us(t_r),
+                b_r,
+                b_r as f64 / b_c as f64,
+            );
+        }
+    }
+}
+
 fn main() {
     println!("pairwise exchange: serial vs overlapped (window = p-1), skew {SKEW_US}us/rank");
     println!(
@@ -285,5 +370,6 @@ fn main() {
     }
     fused_section();
     worker_section();
+    r2c_section();
     println!("a2a_micro bench done");
 }

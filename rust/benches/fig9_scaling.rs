@@ -18,9 +18,11 @@ use fftb::comm::CommTuning;
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::grid::ProcGrid;
 use fftb::fftb::plan::testutil::phased;
-use fftb::fftb::plan::{NonBatchedLoop, PencilPlan, PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::plan::{
+    NonBatchedLoop, PencilPlan, PlaneWavePlan, RealPlaneWavePlan, SlabPencilPlan,
+};
 use fftb::fftb::sphere::{SphereKind, SphereSpec};
-use fftb::model::{fig9_row, grid_2d, Machine, Variant, Workload};
+use fftb::model::{fig9_row, grid_2d, price_stages, Machine, Variant, Workload};
 use fftb::util::stats::{bench, fmt_duration};
 
 fn live_section() {
@@ -155,6 +157,90 @@ fn overlap_section() {
     }
 }
 
+/// r2c-vs-c2c ablation on the plane-wave sphere: the same coefficients
+/// forward through the complex plan and the Hermitian half-spectrum plan.
+/// The r2c exchange carries only the `nz/2 + 1` unique z bins, so its
+/// summed wire bytes come in at `(nz/2 + 1)/nz` of c2c (17/32 here) —
+/// the bytes column is exact accounting, the time columns are live means.
+fn r2c_section() {
+    let n = 32usize;
+    let nb = 8usize;
+    let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+    let off = Arc::new(spec.offsets());
+
+    println!();
+    println!("== r2c ablation: planewave sphere d={}, cube {n}^3, nb={nb} ==", n / 2);
+    println!(
+        "{:>4} {:>14} {:>14} {:>12} {:>12} {:>7}",
+        "p", "c2c fwd", "r2c fwd", "c2c bytes", "r2c bytes", "ratio"
+    );
+    for p in [1usize, 2, 4, 8] {
+        let off2 = Arc::clone(&off);
+        let rows = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let c2c = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let r2c = RealPlaneWavePlan::new(Arc::clone(&off2), nb, grid).unwrap();
+            let zin = phased(c2c.input_len(), 9);
+            let xin: Vec<f64> = zin.iter().map(|c| c.re).collect();
+            let (_, ct) = c2c.forward(&backend, zin.clone());
+            let (_, rt) = r2c.forward(&backend, xin.clone());
+            let t_c = bench(3, 10, || {
+                let _ = c2c.forward(&backend, zin.clone());
+            });
+            let t_r = bench(3, 10, || {
+                let _ = r2c.forward(&backend, xin.clone());
+            });
+            (
+                t_c.mean().as_secs_f64(),
+                t_r.mean().as_secs_f64(),
+                ct.comm_bytes(),
+                rt.comm_bytes(),
+            )
+        });
+        let tc = rows.iter().map(|r| r.0).fold(0.0, f64::max);
+        let tr = rows.iter().map(|r| r.1).fold(0.0, f64::max);
+        let cb: u64 = rows.iter().map(|r| r.2).sum();
+        let rb: u64 = rows.iter().map(|r| r.3).sum();
+        let ratio = if cb > 0 { rb as f64 / cb as f64 } else { 1.0 };
+        println!(
+            "{p:>4} {:>14} {:>14} {:>12} {:>12} {ratio:>7.4}",
+            fmt_duration(std::time::Duration::from_secs_f64(tc)),
+            fmt_duration(std::time::Duration::from_secs_f64(tr)),
+            cb,
+            rb,
+        );
+        if p > 1 {
+            // Exact accounting, not timing: the half-spectrum exchange must
+            // put fewer than 0.6x the c2c bytes on the wire.
+            assert!(rb * 10 < cb * 6, "r2c bytes not halved at p={p}: {rb} vs {cb}");
+        }
+        if tr > tc {
+            println!("     note: r2c slower than c2c at p={p} (timing noise?)");
+        }
+    }
+
+    // Modeled at paper scale: the cost model's view of the same halving,
+    // priced on the Perlmutter description (window 2, the default).
+    let big = 256usize;
+    let bspec = SphereSpec::new([big, big, big], 64.0, SphereKind::Centered);
+    let boff = bspec.offsets();
+    let m = Machine::perlmutter_a100();
+    println!();
+    println!("== modeled r2c at paper scale: cube 256^3, nb=256, sphere d=128 ({}) ==", m.name);
+    println!("{:>5} {:>12} {:>12} {:>7}", "p", "c2c", "r2c", "ratio");
+    let mut p = 4;
+    while p <= 1024 {
+        let c2c_cost = fftb::model::cost::planewave(&boff, 256, p, true);
+        let r2c_cost = fftb::model::cost::planewave_r2c(&boff, 256, p);
+        let c = price_stages(&c2c_cost, &m, 2);
+        let r = price_stages(&r2c_cost, &m, 2);
+        println!("{p:>5} {:>11.2}ms {:>11.2}ms {:>7.4}", c * 1e3, r * 1e3, r / c);
+        assert!(r < c, "modeled r2c must beat c2c at p={p}");
+        p *= 2;
+    }
+}
+
 fn modeled_section() {
     let n = 256usize;
     let spec = SphereSpec::new([n, n, n], 64.0, SphereKind::Centered);
@@ -201,6 +287,7 @@ fn modeled_section() {
 fn main() {
     live_section();
     overlap_section();
+    r2c_section();
     modeled_section();
     println!("fig9_scaling bench done");
 }

@@ -31,7 +31,7 @@ fn measure(
     p: usize,
     sphere: Option<Arc<OffsetArray>>,
 ) -> Vec<(String, usize, f64, Duration)> {
-    let req = TuneRequest { shape, nb, p, sphere, profile: WorkloadProfile::Forward };
+    let req = TuneRequest { shape, nb, p, sphere, profile: WorkloadProfile::Forward, real: false };
     let cands = search::shortlist(&req, &Machine::local_cpu(), usize::MAX);
     assert!(!cands.is_empty(), "no feasible candidate for {shape:?} on p={p}");
     let req2 = req.clone();

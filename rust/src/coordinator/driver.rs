@@ -255,6 +255,7 @@ impl BatchingDriver {
                         p: self.grid.size(),
                         sphere: self.sphere.clone(),
                         profile: WorkloadProfile::Forward,
+                        real: false,
                     },
                     m,
                 )
@@ -358,6 +359,7 @@ impl BatchingDriver {
             sphere: sphere_fp,
             window,
             worker: self.tuning.worker,
+            r2c: false,
         };
         let (shape, grid) = (self.shape, Arc::clone(&self.grid));
         let worker = self.tuning.worker;
@@ -615,7 +617,14 @@ mod tests {
             let nb = 3usize;
             let want = search::auto_window(
                 CandidateKind::SlabPencil,
-                &TuneRequest { shape, nb, p, sphere: None, profile: WorkloadProfile::Forward },
+                &TuneRequest {
+                    shape,
+                    nb,
+                    p,
+                    sphere: None,
+                    profile: WorkloadProfile::Forward,
+                    real: false,
+                },
                 &Machine::local_cpu(),
             );
             assert_eq!(driver.window_for(nb), want);

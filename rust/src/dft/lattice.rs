@@ -77,6 +77,28 @@ impl Lattice {
         out
     }
 
+    /// The plane-wave basis at Bloch vector `k` (fractional coordinates of
+    /// the reciprocal lattice): every integer triple with
+    /// `|g + k|^2 / 2 <= E_cut`, i.e. `|m + k| <= m_max` — the k-point
+    /// sphere of paper Eq. 9 shifted off Γ. At `k = [0, 0, 0]` this is
+    /// bit-identical to [`Lattice::offsets`] (same fingerprint, so plans
+    /// and wisdom entries are shared); any other `k` reshapes the sphere's
+    /// z-runs and salts the fingerprint, so each k-point gets its own
+    /// plan-cache and wisdom identity.
+    pub fn kpoint_offsets(&self, k: [f64; 3]) -> Arc<OffsetArray> {
+        if k == [0.0; 3] {
+            return Arc::clone(&self.offsets);
+        }
+        Arc::new(self.spec.offset(k))
+    }
+
+    /// The bases for a batch of k-points, in order — the per-k sphere set
+    /// a k-point SCF loop feeds to `Fftb::plan_real` (one plan per
+    /// distinct fingerprint; duplicated k's share via the plan cache).
+    pub fn kpoint_batch(&self, ks: &[[f64; 3]]) -> Vec<Arc<OffsetArray>> {
+        ks.iter().map(|&k| self.kpoint_offsets(k)).collect()
+    }
+
     /// All kinetic energies, ascending — the analytic spectrum of the
     /// free-electron (V = 0) Hamiltonian, used to validate the eigensolver.
     pub fn kinetic_spectrum(&self) -> Vec<f64> {
@@ -139,5 +161,52 @@ mod tests {
     #[should_panic(expected = "too small")]
     fn grid_must_hold_sphere() {
         Lattice::new(20.0, 8, 10.0);
+    }
+
+    #[test]
+    fn gamma_kpoint_is_the_plain_basis() {
+        let lat = Lattice::new(8.0, 16, 4.0);
+        let gamma = lat.kpoint_offsets([0.0; 3]);
+        // Same object, not just an equal one: Γ shares the lattice's basis,
+        // so its plans and wisdom entries are shared too.
+        assert!(Arc::ptr_eq(&gamma, &lat.offsets));
+        assert_eq!(gamma.fingerprint(), lat.offsets.fingerprint());
+    }
+
+    #[test]
+    fn distinct_kpoints_get_distinct_fingerprints() {
+        let lat = Lattice::new(8.0, 16, 4.0);
+        let k1 = lat.kpoint_offsets([0.25, 0.0, 0.0]);
+        let k2 = lat.kpoint_offsets([0.0, 0.25, 0.0]);
+        let gamma = lat.kpoint_offsets([0.0; 3]);
+        assert_ne!(k1.fingerprint(), gamma.fingerprint());
+        assert_ne!(k1.fingerprint(), k2.fingerprint());
+        // The shifted sphere still respects the cutoff: every retained
+        // (m + k) sits inside m_max (the offset build's own membership).
+        let m_max = (2.0 * lat.ecut).sqrt() * lat.a / (2.0 * std::f64::consts::PI);
+        for y in 0..lat.n {
+            for x in 0..lat.n {
+                for &(z0, len) in k1.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        let (fx, fy, fz) =
+                            (lat.freq(x) as f64, lat.freq(y) as f64, lat.freq(z) as f64);
+                        let (dx, dy, dz) = (fx + 0.25, fy, fz);
+                        let r2 = dx * dx + dy * dy + dz * dz;
+                        assert!(r2.sqrt() <= m_max * 1.0001, "({x},{y},{z}): |m+k|={}", r2.sqrt());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kpoint_batch_maps_in_order() {
+        let lat = Lattice::new(8.0, 16, 4.0);
+        let ks = [[0.0; 3], [0.25, 0.0, 0.0], [0.0; 3]];
+        let batch = lat.kpoint_batch(&ks);
+        assert_eq!(batch.len(), 3);
+        assert!(Arc::ptr_eq(&batch[0], &lat.offsets));
+        assert!(Arc::ptr_eq(&batch[2], &lat.offsets));
+        assert_ne!(batch[1].fingerprint(), batch[0].fingerprint());
     }
 }

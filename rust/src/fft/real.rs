@@ -7,17 +7,27 @@
 //! using the classic two-for-one packing: a length-n real signal is folded
 //! into a length-n/2 complex signal, one complex FFT runs, and the spectrum
 //! is unpacked with a twiddle pass. Cost: one half-length complex FFT.
+//!
+//! Shape errors (odd or too-short lengths, wrong bin counts) surface as
+//! [`FftbError::Shape`] rather than panics: these functions sit on the hot
+//! path of the distributed r2c plan family, where pallas-lint's no-panic
+//! rule applies.
 
 use super::batch::Fft1d;
 use super::complex::{Complex, ZERO};
 use super::dft::Direction;
 use super::twiddle::twiddles;
+use crate::fftb::error::{FftbError, Result};
 
 /// Forward RtoC: real input of even length `n` -> `n/2 + 1` complex bins
 /// (the non-negative frequencies; the rest follow by conjugate symmetry).
-pub fn rfft(input: &[f64]) -> Vec<Complex> {
+///
+/// Odd or too-short inputs (`n < 2`) are shape errors, not panics.
+pub fn rfft(input: &[f64]) -> Result<Vec<Complex>> {
     let n = input.len();
-    assert!(n >= 2 && n % 2 == 0, "rfft requires even length >= 2, got {n}");
+    if n < 2 || n % 2 != 0 {
+        return Err(FftbError::Shape(format!("rfft requires even length >= 2, got {n}")));
+    }
     let h = n / 2;
 
     // Pack: z[k] = x[2k] + i x[2k+1].
@@ -37,14 +47,25 @@ pub fn rfft(input: &[f64]) -> Vec<Complex> {
         let w = if k == h { Complex::new(-1.0, 0.0) } else { tw[k] };
         out[k] = e + w * o;
     }
-    out
+    Ok(out)
 }
 
 /// Inverse CtoR: `n/2 + 1` spectrum bins -> real signal of length `n`.
 /// Inverse of [`rfft`] (including the 1/n normalization).
-pub fn irfft(spectrum: &[Complex], n: usize) -> Vec<f64> {
-    assert_eq!(spectrum.len(), n / 2 + 1, "irfft needs n/2+1 bins");
-    assert!(n >= 2 && n % 2 == 0);
+///
+/// Odd or too-short `n`, or a spectrum that is not exactly `n/2 + 1` bins,
+/// are shape errors, not panics.
+pub fn irfft(spectrum: &[Complex], n: usize) -> Result<Vec<f64>> {
+    if n < 2 || n % 2 != 0 {
+        return Err(FftbError::Shape(format!("irfft requires even length >= 2, got {n}")));
+    }
+    if spectrum.len() != n / 2 + 1 {
+        return Err(FftbError::Shape(format!(
+            "irfft needs n/2+1 = {} bins for n = {n}, got {}",
+            n / 2 + 1,
+            spectrum.len()
+        )));
+    }
     let h = n / 2;
 
     // Re-pack: Z[k] = E[k] + i O[k] with E/O recovered from X.
@@ -64,17 +85,25 @@ pub fn irfft(spectrum: &[Complex], n: usize) -> Vec<f64> {
         out[2 * k] = z[k].re;
         out[2 * k + 1] = z[k].im;
     }
-    out
+    Ok(out)
 }
 
 /// Batched RtoC over contiguous real lines.
-pub fn rfft_batch(input: &[f64], n: usize) -> Vec<Complex> {
-    assert_eq!(input.len() % n, 0);
+///
+/// `input.len()` must be a multiple of `n`; each length-`n` line transforms
+/// independently into `n/2 + 1` bins.
+pub fn rfft_batch(input: &[f64], n: usize) -> Result<Vec<Complex>> {
+    if n == 0 || input.len() % n != 0 {
+        return Err(FftbError::Shape(format!(
+            "rfft_batch input length {} is not a multiple of line length {n}",
+            input.len()
+        )));
+    }
     let mut out = Vec::with_capacity((input.len() / n) * (n / 2 + 1));
     for line in input.chunks_exact(n) {
-        out.extend(rfft(line));
+        out.extend(rfft(line)?);
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -92,7 +121,7 @@ mod tests {
             let x = reals(n, n as u64);
             let xc: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
             let want = naive_dft(&xc, Direction::Forward);
-            let got = rfft(&x);
+            let got = rfft(&x).unwrap();
             assert_eq!(got.len(), n / 2 + 1);
             for k in 0..=n / 2 {
                 assert!(
@@ -109,7 +138,7 @@ mod tests {
     fn round_trip() {
         for n in [4usize, 8, 32, 48] {
             let x = reals(n, 3);
-            let back = irfft(&rfft(&x), n);
+            let back = irfft(&rfft(&x).unwrap(), n).unwrap();
             for (a, b) in x.iter().zip(&back) {
                 assert!((a - b).abs() < 1e-10, "n={n}");
             }
@@ -120,7 +149,7 @@ mod tests {
     fn hermitian_symmetry_implicit() {
         // Bin 0 and bin n/2 of a real signal must be purely real.
         let x = reals(16, 7);
-        let s = rfft(&x);
+        let s = rfft(&x).unwrap();
         assert!(s[0].im.abs() < 1e-12);
         assert!(s[8].im.abs() < 1e-12);
     }
@@ -128,13 +157,38 @@ mod tests {
     #[test]
     fn batch_shape() {
         let x = reals(3 * 8, 1);
-        let s = rfft_batch(&x, 8);
+        let s = rfft_batch(&x, 8).unwrap();
         assert_eq!(s.len(), 3 * 5);
     }
 
     #[test]
-    #[should_panic(expected = "even length")]
-    fn odd_length_rejected() {
-        rfft(&[1.0, 2.0, 3.0]);
+    fn degenerate_lengths_are_shape_errors_not_panics() {
+        // Fixtures for the panic-path fix: n in {0, 1, 3} must all come back
+        // as FftbError::Shape (the previous assert! would abort the rank).
+        for bad in [vec![], vec![1.0], vec![1.0, 2.0, 3.0]] {
+            match rfft(&bad) {
+                Err(FftbError::Shape(m)) => {
+                    assert!(m.contains("even length"), "message: {m}");
+                }
+                other => panic!("rfft(len={}) returned {other:?}", bad.len()),
+            }
+        }
+    }
+
+    #[test]
+    fn irfft_rejects_bad_shapes() {
+        for n in [0usize, 1, 3] {
+            assert!(matches!(irfft(&[ZERO; 4], n), Err(FftbError::Shape(_))), "n={n}");
+        }
+        // Right parity, wrong bin count.
+        assert!(matches!(irfft(&[ZERO; 4], 8), Err(FftbError::Shape(_))));
+    }
+
+    #[test]
+    fn batch_rejects_ragged_input() {
+        assert!(matches!(rfft_batch(&reals(7, 0), 4), Err(FftbError::Shape(_))));
+        assert!(matches!(rfft_batch(&reals(8, 0), 0), Err(FftbError::Shape(_))));
+        // A valid multiple of an odd line length still fails per line.
+        assert!(matches!(rfft_batch(&reals(9, 0), 3), Err(FftbError::Shape(_))));
     }
 }

@@ -19,6 +19,7 @@
 //! | dense  `[b] x y{0} z{1}`   | `[B] X{0} Y{1} Z` | 2D | pencil |
 //! | dense, 3D grid             | same as pencil  | 3D (folded) | pencil |
 //! | sphere `[b] x{0} y z` + offsets | `[B] X Y Z{0}` | 1D | plane-wave staged padding |
+//! | sphere + [`FftbOptions::real`] | `[B] X Y Z{0}` (nz/2+1 unique bins) | 1D | plane-wave r2c (Hermitian half) |
 //!
 //! Every plan precomputes its exchange schedules ([`A2aSchedule`]) and owns
 //! a reusable [`Workspace`](workspace::Workspace); at execute time the
@@ -35,6 +36,7 @@
 pub mod batched;
 pub mod pencil;
 pub mod planewave;
+pub mod real;
 pub mod redistribute;
 pub mod slab_pencil;
 pub mod stages;
@@ -54,6 +56,7 @@ use crate::fftb::tensor::DistTensor;
 pub use batched::{NonBatchedLoop, PlaneWaveLoop};
 pub use pencil::PencilPlan;
 pub use planewave::{PaddedSpherePlan, PlaneWavePlan};
+pub use real::RealPlaneWavePlan;
 pub use redistribute::{A2aSchedule, SplitMergeKernel};
 pub use slab_pencil::SlabPencilPlan;
 pub use stages::{fused_exchange, ExecTrace, PackKernel, StageKind, StageTrace};
@@ -72,6 +75,9 @@ pub enum PlanKind {
     PlaneWaveLoop(PlaneWaveLoop),
     /// Pad-to-cube baseline for sphere inputs.
     PaddedSphere(PaddedSpherePlan),
+    /// Real-input (r2c/c2r) plane-wave sphere transform carrying only the
+    /// `nz/2 + 1` Hermitian-unique z bins through the exchange.
+    PlaneWaveR2c(RealPlaneWavePlan),
 }
 
 impl PlanKind {
@@ -84,6 +90,7 @@ impl PlanKind {
             PlanKind::PlaneWave(_) => "plane-wave staged padding (1D grid)",
             PlanKind::PlaneWaveLoop(_) => "plane-wave staged padding (1D grid, non-batched loop)",
             PlanKind::PaddedSphere(_) => "sphere padded to cube + slab-pencil",
+            PlanKind::PlaneWaveR2c(_) => "plane-wave r2c Hermitian half (1D grid)",
         }
     }
 }
@@ -114,6 +121,15 @@ pub struct FftbOptions {
     /// still pin the decomposition; use [`Fftb::plan_auto`] to free that
     /// too.
     pub auto_window: bool,
+    /// For sphere inputs whose coefficients are real (Γ-point
+    /// wavefunctions): select the r2c/c2r plan family. The forward packs
+    /// real z-lines through the two-for-one trick and the fused exchange
+    /// carries only the `nz/2 + 1` Hermitian-unique bins — roughly half
+    /// the wire bytes and z-stage flops of c2c. Through [`Fftb::execute`]
+    /// the data stays complex-embedded (imaginary parts ignored on the
+    /// way in, zero on the way out); [`RealPlaneWavePlan`] exposes the
+    /// native `Vec<f64>` entry points.
+    pub real: bool,
 }
 
 impl FftbOptions {
@@ -124,6 +140,12 @@ impl FftbOptions {
     /// (the model prices worst-rank stage counts, not this rank's).
     pub fn auto() -> Self {
         FftbOptions { auto_window: true, ..Default::default() }
+    }
+
+    /// Options selecting the real-input (r2c/c2r) plan family for sphere
+    /// inputs (see the [`FftbOptions::real`] field).
+    pub fn real() -> Self {
+        FftbOptions { real: true, ..Default::default() }
     }
 }
 
@@ -213,6 +235,31 @@ impl Fftb {
         tuner.plan_auto_scf(sizes, nb, sphere, comm, backend)
     }
 
+    /// Plan a real-input (r2c/c2r) sphere transform directly from an offset
+    /// array — the ergonomic entry for Γ-point plane-wave workloads that
+    /// don't want to spell out tensor descriptions. Equivalent to the
+    /// sphere pattern of [`Fftb::plan_opt`] with [`FftbOptions::real`] set;
+    /// honors `opts.comm` and `opts.auto_window` the same way.
+    pub fn plan_real(
+        offsets: Arc<crate::fftb::sphere::OffsetArray>,
+        nb: usize,
+        grid: Arc<ProcGrid>,
+        opts: FftbOptions,
+    ) -> Result<Fftb> {
+        let sizes = [offsets.nx, offsets.ny, offsets.nz];
+        let plan = RealPlaneWavePlan::new(offsets, nb, grid)?;
+        let mut fx = Fftb { kind: PlanKind::PlaneWaveR2c(plan), sizes, nb };
+        let tuning = if opts.auto_window {
+            let m = crate::model::Machine::local_cpu();
+            CommTuning::with_window(crate::tuner::search::auto_window_for(&fx, &m))
+                .with_worker(opts.comm.worker)
+        } else {
+            opts.comm
+        };
+        fx.set_comm_tuning(tuning);
+        Ok(fx)
+    }
+
     fn plan_inner(
         sizes: [usize; 3],
         output: &DistTensor,
@@ -288,7 +335,9 @@ impl Fftb {
             // pallas-lint: allow(no-panic) — `is_sphere()` just confirmed
             // the input carries sphere domains, so `offsets()` is `Some`.
             let off = Arc::clone(input.domains.offsets().unwrap());
-            let kind = if opts.pad_sphere_to_cube {
+            let kind = if opts.real {
+                PlanKind::PlaneWaveR2c(RealPlaneWavePlan::new(off, nb, grid)?)
+            } else if opts.pad_sphere_to_cube {
                 PlanKind::PaddedSphere(PaddedSpherePlan::new(off, nb, grid)?)
             } else if opts.force_non_batched && nb > 1 {
                 PlanKind::PlaneWaveLoop(PlaneWaveLoop::new(off, nb, grid)?)
@@ -377,6 +426,7 @@ impl Fftb {
             PlanKind::PlaneWave(p) => p.set_tuning(tuning),
             PlanKind::PlaneWaveLoop(p) => p.set_tuning(tuning),
             PlanKind::PaddedSphere(p) => p.set_tuning(tuning),
+            PlanKind::PlaneWaveR2c(p) => p.set_tuning(tuning),
         }
     }
 
@@ -400,6 +450,8 @@ impl Fftb {
             (PlanKind::PlaneWaveLoop(p), Direction::Inverse) => p.inverse(backend, data),
             (PlanKind::PaddedSphere(p), Direction::Forward) => p.forward(backend, data),
             (PlanKind::PaddedSphere(p), Direction::Inverse) => p.inverse(backend, data),
+            (PlanKind::PlaneWaveR2c(p), Direction::Forward) => p.forward_embedded(backend, data),
+            (PlanKind::PlaneWaveR2c(p), Direction::Inverse) => p.inverse_embedded(backend, data),
         }
     }
 
@@ -412,6 +464,7 @@ impl Fftb {
             PlanKind::PlaneWave(p) => p.input_len(),
             PlanKind::PlaneWaveLoop(p) => p.input_len(),
             PlanKind::PaddedSphere(p) => p.input_len(),
+            PlanKind::PlaneWaveR2c(p) => p.input_len(),
         }
     }
 
@@ -424,6 +477,7 @@ impl Fftb {
             PlanKind::PlaneWave(p) => p.output_len(),
             PlanKind::PlaneWaveLoop(p) => p.output_len(),
             PlanKind::PaddedSphere(p) => p.output_len(),
+            PlanKind::PlaneWaveR2c(p) => p.output_len(),
         }
     }
 
@@ -440,6 +494,7 @@ impl Fftb {
             PlanKind::PlaneWave(p) => p.recycle(buf),
             PlanKind::PlaneWaveLoop(p) => p.recycle(buf),
             PlanKind::PaddedSphere(p) => p.recycle(buf),
+            PlanKind::PlaneWaveR2c(p) => p.recycle(buf),
         }
     }
 }
@@ -546,6 +601,56 @@ mod tests {
             assert_eq!(fx.nb, 4);
             assert_eq!(fx.input_len(), ti.local.len());
             assert_eq!(fx.output_len(), to.local.len());
+        });
+    }
+
+    #[test]
+    fn real_option_selects_r2c_plan() {
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Centered);
+            let off = Arc::new(spec.offsets());
+            // The ergonomic entry point.
+            let fx = Fftb::plan_real(
+                Arc::clone(&off),
+                2,
+                grid.clone(),
+                FftbOptions::real(),
+            )
+            .unwrap();
+            assert!(matches!(fx.kind, PlanKind::PlaneWaveR2c(_)));
+            assert_eq!(fx.sizes, [8, 8, 8]);
+            // The tensor pattern with the `real` option routes the same way.
+            let b = Domain::new(vec![0], vec![1]).unwrap();
+            let c = Domain::with_offsets(vec![0, 0, 0], vec![7, 7, 7], Arc::clone(&off))
+                .unwrap();
+            let ti = DistTensor::zeros(
+                DomainList::new(vec![b.clone(), c]).unwrap(),
+                "b x{0} y z",
+                grid.clone(),
+            )
+            .unwrap();
+            let co = Domain::new(vec![0, 0, 0], vec![7, 7, 7]).unwrap();
+            let to = DistTensor::zeros(
+                DomainList::new(vec![b, co]).unwrap(),
+                "B X Y Z{0}",
+                grid.clone(),
+            )
+            .unwrap();
+            let fx2 = Fftb::plan_opt(
+                [8, 8, 8],
+                &to,
+                "X Y Z",
+                &ti,
+                "x y z",
+                grid,
+                FftbOptions::real(),
+            )
+            .unwrap();
+            assert!(matches!(fx2.kind, PlanKind::PlaneWaveR2c(_)));
+            assert_eq!(fx2.input_len(), ti.local.len());
+            // Output carries only the nz/2+1 Hermitian-unique z bins.
+            assert!(fx2.output_len() < to.local.len());
         });
     }
 

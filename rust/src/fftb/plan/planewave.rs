@@ -88,8 +88,10 @@ pub struct PlaneWavePlan {
 /// Pack destination `s`'s z-residues of the dense z-columns `[nb, nz,
 /// ncols]`: for each column, each `lz` with `gz = lz*p + s`, one `nb`-run.
 /// Shared by the fused forward kernel and its threaded pack half, so both
-/// engines produce identical wire bytes.
-fn pack_col_residues(
+/// engines produce identical wire bytes. The walk is parameterized on `nz`
+/// only, so the r2c plan reuses it verbatim with the Hermitian-unique bin
+/// count `nz/2 + 1` in its place.
+pub(crate) fn pack_col_residues(
     work: &[Complex],
     nb: usize,
     nz: usize,
@@ -111,7 +113,7 @@ fn pack_col_residues(
 
 /// Merge source rank's z-residue block back into the dense z-columns —
 /// the exact inverse walk of [`pack_col_residues`].
-fn unpack_col_residues(
+pub(crate) fn unpack_col_residues(
     block: &[u8],
     nb: usize,
     nz: usize,
@@ -135,7 +137,7 @@ fn unpack_col_residues(
 
 /// Land one source rank's disc columns (this rank's z-slab share) in the
 /// `[nb, nx, ny, lzc]` cube, in that rank's packing order.
-fn unpack_cols_into_cube(
+pub(crate) fn unpack_cols_into_cube(
     block: &[u8],
     cols: &[(usize, usize)],
     nb: usize,
@@ -156,7 +158,7 @@ fn unpack_cols_into_cube(
 
 /// Gather one destination rank's disc columns out of the cube — the exact
 /// inverse walk of [`unpack_cols_into_cube`].
-fn pack_cols_from_cube(
+pub(crate) fn pack_cols_from_cube(
     cube: &[Complex],
     cols: &[(usize, usize)],
     nb: usize,
@@ -332,7 +334,7 @@ impl UnpackHalf for SphereInvUnpackHalf<'_> {
 /// exactly as the single-threaded engine does internally — the sphere
 /// movers have no direct src→dst self move, so worker mode reproduces the
 /// staged bytes before handing the remote rounds to the threaded engine.
-fn stage_self_block(comm: &Comm, pack: &dyn PackHalf, unpack: &mut dyn UnpackHalf) {
+pub(crate) fn stage_self_block(comm: &Comm, pack: &dyn PackHalf, unpack: &mut dyn UnpackHalf) {
     let me = comm.rank();
     let n = pack.send_bytes(me);
     assert_eq!(n, unpack.recv_bytes(me), "alltoall: self block extents disagree");
@@ -341,6 +343,62 @@ fn stage_self_block(comm: &Comm, pack: &dyn PackHalf, unpack: &mut dyn UnpackHal
     assert_eq!(buf.len(), n, "alltoall: self pack wrote unexpected byte count");
     unpack.unpack(me, &buf);
     comm.arena().recycle(buf);
+}
+
+/// FFT along y for the disc's x-extent only, over a `[nb, nx, ny, lzc]`
+/// slab. Perf (EXPERIMENTS.md §Perf, L3 iteration 5): instead of a scalar
+/// gather per (b, y) element with stride nb*nx, copy nb-contiguous runs
+/// into an [nb, ny, n_panels] buffer and reuse the cache-tiled panel path
+/// of `backend_fft_dim_ws`. The panel and transpose buffers come from the
+/// caller's workspace. `lzc` is whatever z-depth the caller's slab carries:
+/// the c2c plan's cyclic share of `nz`, or the r2c plan's share of the
+/// `nz/2 + 1` Hermitian-unique bins.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fft_y_disc_panel(
+    backend: &dyn LocalFftBackend,
+    cube: &mut [Complex],
+    dir: Direction,
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    disc_xs: &[usize],
+    panel: &mut Vec<Complex>,
+    fft: &mut Vec<Complex>,
+    ctr: &Cell<u64>,
+) {
+    let npanels = disc_xs.len() * lzc;
+    if npanels == 0 {
+        return;
+    }
+    ensure(&mut *panel, nb * ny * npanels, ctr);
+    let mut pi = 0;
+    for lz in 0..lzc {
+        for &x in disc_xs {
+            let base = nb * (x + nx * ny * lz);
+            let dst0 = pi * nb * ny;
+            for k in 0..ny {
+                let src = base + k * nb * nx;
+                let dst = dst0 + k * nb;
+                panel[dst..dst + nb].copy_from_slice(&cube[src..src + nb]);
+            }
+            pi += 1;
+        }
+    }
+    backend_fft_dim_ws(backend, &mut *panel, &[nb, ny, npanels], 1, dir, &mut *fft, ctr);
+    let mut pi = 0;
+    for lz in 0..lzc {
+        for &x in disc_xs {
+            let base = nb * (x + nx * ny * lz);
+            let src0 = pi * nb * ny;
+            for k in 0..ny {
+                let dst = base + k * nb * nx;
+                let src = src0 + k * nb;
+                cube[dst..dst + nb].copy_from_slice(&panel[src..src + nb]);
+            }
+            pi += 1;
+        }
+    }
 }
 
 impl PlaneWavePlan {
@@ -442,11 +500,8 @@ impl PlaneWavePlan {
     }
 
     /// FFT along y for the disc's x-extent only (the staged pad/truncate
-    /// pass). Perf (EXPERIMENTS.md §Perf, L3 iteration 5): instead of a
-    /// scalar gather per (b, y) element with stride nb*nx, copy
-    /// nb-contiguous runs into an [nb, ny, n_panels] buffer and reuse the
-    /// cache-tiled panel path of `backend_fft_dim_ws`. The panel and
-    /// transpose buffers come from the workspace.
+    /// pass) — see [`fft_y_disc_panel`], which the r2c plan shares with
+    /// its half-depth (`lzc` over `nz/2+1` bins) slab.
     #[allow(clippy::too_many_arguments)]
     fn fft_y_disc(
         &self,
@@ -458,40 +513,19 @@ impl PlaneWavePlan {
         ctr: &Cell<u64>,
     ) {
         let (nx, ny) = (self.offsets.nx, self.offsets.ny);
-        let nb = self.nb;
-        let lzc = self.lzc;
-        let npanels = self.disc_xs.len() * lzc;
-        if npanels == 0 {
-            return;
-        }
-        ensure(&mut *panel, nb * ny * npanels, ctr);
-        let mut pi = 0;
-        for lz in 0..lzc {
-            for &x in &self.disc_xs {
-                let base = nb * (x + nx * ny * lz);
-                let dst0 = pi * nb * ny;
-                for k in 0..ny {
-                    let src = base + k * nb * nx;
-                    let dst = dst0 + k * nb;
-                    panel[dst..dst + nb].copy_from_slice(&cube[src..src + nb]);
-                }
-                pi += 1;
-            }
-        }
-        backend_fft_dim_ws(backend, &mut *panel, &[nb, ny, npanels], 1, dir, &mut *fft, ctr);
-        let mut pi = 0;
-        for lz in 0..lzc {
-            for &x in &self.disc_xs {
-                let base = nb * (x + nx * ny * lz);
-                let src0 = pi * nb * ny;
-                for k in 0..ny {
-                    let dst = base + k * nb * nx;
-                    let src = src0 + k * nb;
-                    cube[dst..dst + nb].copy_from_slice(&panel[src..src + nb]);
-                }
-                pi += 1;
-            }
-        }
+        fft_y_disc_panel(
+            backend,
+            cube,
+            dir,
+            self.nb,
+            nx,
+            ny,
+            self.lzc,
+            &self.disc_xs,
+            panel,
+            fft,
+            ctr,
+        );
     }
 
     /// Forward: packed sphere coefficients → dense z-distributed cube.

@@ -1,0 +1,1063 @@
+//! The distributed real-input (r2c/c2r) plane-wave sphere transform —
+//! Γ-point wavefunctions and densities are real fields, so the full complex
+//! pipeline of [`PlaneWavePlan`](super::planewave::PlaneWavePlan) wastes a
+//! factor of two everywhere: the z-spectrum of a real line obeys
+//! `X[k] == conj(X[n-k])`, meaning only the `nz/2 + 1` Hermitian-unique
+//! bins carry information. This plan keeps exactly those bins:
+//!
+//! 1. `scatter_rz`     — scatter each owned CSR column's *real* z-runs
+//!                       pair-packed into a half-length complex line
+//!                       (`z[k] = x[2k] + i·x[2k+1]`, the classic
+//!                       two-for-one trick of [`crate::fft::real::rfft`]),
+//! 2. `pad_rfft_z`     — one *half-length* batched FFT per column,
+//! 3. `herm_unpack_z`  — the twiddle pass splitting even/odd parts into the
+//!                       `nh = nz/2 + 1` Hermitian-unique bins,
+//! 4. `a2a_herm`       — the fused windowed exchange carries **only the
+//!                       half spectrum**: send/recv extents are sized on
+//!                       `nh`, so wire bytes drop to ~`(nz/2+1)/nz` ≈ 0.5×
+//!                       of the c2c exchange for the same sphere,
+//! 5. `pad_fft_y`/`fft_x` — ordinary c2c stages over the half-depth slab
+//!                       `[nb, nx, ny, lzc_h]` (z cyclic over the `nh` bins).
+//!
+//! The inverse (`c2r`) mirrors every stage: truncating y/x passes, the
+//! half-spectrum exchange reversed, the twiddle re-pack, a half-length
+//! inverse FFT and a de-interleaving gather back to packed real
+//! coefficients. Output bins `kz < nz/2 + 1` are numerically identical to
+//! the c2c plan's — the redundant `kz > nz/2` planes are implied by
+//! `X[kx,ky,kz] == conj(X[-kx,-ky,-kz])` and never materialize.
+//!
+//! The exchange walks are shared with the c2c plan (parameterized on the
+//! bin count), but the kernels handed to the fused engine are this module's
+//! own Hermitian-aware movers — [`HermFwdKernel`]/[`HermInvKernel`] for the
+//! single-threaded engine and the `Herm*Half` pack/unpack splits for the
+//! helper-worker engine — so both engines price and move the half spectrum
+//! only. All scratch routes through the plan's [`Workspace`] plus a small
+//! pool of recycled *real* coefficient buffers, keeping steady-state
+//! executions allocation-free like every other plan.
+
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
+
+use crate::comm::alltoall::{
+    alltoallv_fused_threaded, CommTuning, PackHalf, UnpackHalf,
+};
+use crate::comm::arena::WireBuf;
+use crate::fft::complex::Complex;
+use crate::fft::dft::Direction;
+use crate::fft::twiddle::twiddles;
+use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
+use crate::fftb::error::{FftbError, Result};
+use crate::fftb::grid::{cyclic, ProcGrid};
+use crate::fftb::sphere::OffsetArray;
+
+use super::planewave::{
+    fft_y_disc_panel, pack_col_residues, pack_cols_from_cube, stage_self_block,
+    unpack_col_residues, unpack_cols_into_cube,
+};
+use super::redistribute::A2aSchedule;
+use super::stages::{fused_exchange, ExecTrace, PackKernel, StageTimer};
+use super::workspace::{ensure, ensure_zeroed, Workspace};
+
+/// Bytes per complex element on the wire.
+const ELEM: usize = std::mem::size_of::<Complex>();
+/// Recycled real-coefficient buffers retained by the plan.
+const MAX_REAL_SLOTS: usize = 4;
+
+/// Batched r2c/c2r plane-wave transform plan for one sphere on a 1D grid.
+pub struct RealPlaneWavePlan {
+    /// Global offset array of the cut-off sphere.
+    pub offsets: Arc<OffsetArray>,
+    /// Batch count (transforms per execution).
+    pub nb: usize,
+    grid: Arc<ProcGrid>,
+    /// This rank's restriction of the offset array (x cyclic).
+    local_off: OffsetArray,
+    /// Sorted distinct x's of the global disc (for the staged y pass).
+    disc_xs: Vec<usize>,
+    /// Disc columns owned by each rank `q`, in q's local packing order.
+    cols_by_rank: Vec<Vec<(usize, usize)>>,
+    /// Number of disc columns this rank owns.
+    ncols: usize,
+    /// Half length of the two-for-one z FFT (`nz / 2`).
+    h: usize,
+    /// Hermitian-unique z-bin count (`nz / 2 + 1`).
+    nh: usize,
+    /// This rank's cyclic share of the `nh` unique bins.
+    lzc: usize,
+    /// Forward half-spectrum exchange (extents sized on `nh`, not `nz`).
+    fwd: A2aSchedule,
+    /// Inverse exchange (the forward schedule mirrored).
+    inv: A2aSchedule,
+    /// Overlap knobs of the windowed exchange.
+    tuning: CommTuning,
+    ws: Mutex<Workspace>,
+    /// Recycled real-coefficient buffers: forward consumes one, the inverse
+    /// gather draws one — they circulate here so the steady state of a
+    /// round-trip loop allocates no real storage either.
+    rpool: Mutex<Vec<Vec<f64>>>,
+}
+
+/// Fused movers of the forward Hermitian exchange: destination `s`'s
+/// z-residues *of the half spectrum* are packed as round `s` posts; each
+/// source rank's disc columns land in the zeroed half-depth slab as that
+/// round's wait completes. Identical walk to the c2c kernel with the bin
+/// count `nh` in place of `nz` — which is exactly what halves the wire.
+struct HermFwdKernel<'a> {
+    plan: &'a RealPlaneWavePlan,
+    /// Hermitian-unique bins `[nb, nh, ncols]` (after `herm_unpack_z`).
+    half: &'a [Complex],
+    /// Zeroed half-depth output slab `[nb, nx, ny, lzc]`.
+    cube: &'a mut [Complex],
+}
+
+impl PackKernel for HermFwdKernel<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.plan.fwd.send_counts[dest] * ELEM
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.plan.fwd.recv_counts[src] * ELEM
+    }
+
+    fn pack(&mut self, s: usize, out: &mut WireBuf) {
+        let (nb, nh) = (self.plan.nb, self.plan.nh);
+        pack_col_residues(self.half, nb, nh, self.plan.ncols, self.plan.p(), s, out);
+    }
+
+    fn unpack(&mut self, q: usize, block: &[u8]) {
+        let (nb, nx, ny) = (self.plan.nb, self.plan.offsets.nx, self.plan.offsets.ny);
+        let cols = &self.plan.cols_by_rank[q];
+        unpack_cols_into_cube(block, cols, nb, nx, ny, self.plan.lzc, self.cube);
+    }
+}
+
+/// Fused movers of the inverse Hermitian exchange (half-depth slab back to
+/// half-spectrum columns).
+struct HermInvKernel<'a> {
+    plan: &'a RealPlaneWavePlan,
+    /// The half-depth slab (after the truncating y pass).
+    cube: &'a [Complex],
+    /// Hermitian-unique bins `[nb, nh, ncols]` being reassembled.
+    half: &'a mut [Complex],
+}
+
+impl PackKernel for HermInvKernel<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.plan.inv.send_counts[dest] * ELEM
+    }
+
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.plan.inv.recv_counts[src] * ELEM
+    }
+
+    fn pack(&mut self, q: usize, out: &mut WireBuf) {
+        let (nb, nx, ny) = (self.plan.nb, self.plan.offsets.nx, self.plan.offsets.ny);
+        let cols = &self.plan.cols_by_rank[q];
+        pack_cols_from_cube(self.cube, cols, nb, nx, ny, self.plan.lzc, out);
+    }
+
+    fn unpack(&mut self, s: usize, block: &[u8]) {
+        let (nb, nh) = (self.plan.nb, self.plan.nh);
+        unpack_col_residues(block, nb, nh, self.plan.ncols, self.plan.p(), s, self.half);
+    }
+}
+
+/// Read-only pack half of the forward Hermitian exchange for the threaded
+/// engine (worker mode): shares only `Sync` slices with the helper.
+struct HermFwdPackHalf<'a> {
+    counts: &'a [usize],
+    nb: usize,
+    nh: usize,
+    ncols: usize,
+    p: usize,
+    half: &'a [Complex],
+}
+
+impl PackHalf for HermFwdPackHalf<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.counts[dest] * ELEM
+    }
+
+    fn pack(&self, s: usize, out: &mut WireBuf) {
+        pack_col_residues(self.half, self.nb, self.nh, self.ncols, self.p, s, out);
+    }
+}
+
+/// Write-only unpack half of the forward Hermitian exchange: exclusively
+/// owns the half-depth output slab.
+struct HermFwdUnpackHalf<'a> {
+    counts: &'a [usize],
+    cols_by_rank: &'a [Vec<(usize, usize)>],
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    cube: &'a mut [Complex],
+}
+
+impl UnpackHalf for HermFwdUnpackHalf<'_> {
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.counts[src] * ELEM
+    }
+
+    fn unpack(&mut self, q: usize, block: &[u8]) {
+        let cols = &self.cols_by_rank[q];
+        unpack_cols_into_cube(block, cols, self.nb, self.nx, self.ny, self.lzc, self.cube);
+    }
+}
+
+/// Read-only pack half of the inverse Hermitian exchange.
+struct HermInvPackHalf<'a> {
+    counts: &'a [usize],
+    cols_by_rank: &'a [Vec<(usize, usize)>],
+    nb: usize,
+    nx: usize,
+    ny: usize,
+    lzc: usize,
+    cube: &'a [Complex],
+}
+
+impl PackHalf for HermInvPackHalf<'_> {
+    fn send_bytes(&self, dest: usize) -> usize {
+        self.counts[dest] * ELEM
+    }
+
+    fn pack(&self, q: usize, out: &mut WireBuf) {
+        let cols = &self.cols_by_rank[q];
+        pack_cols_from_cube(self.cube, cols, self.nb, self.nx, self.ny, self.lzc, out);
+    }
+}
+
+/// Write-only unpack half of the inverse Hermitian exchange.
+struct HermInvUnpackHalf<'a> {
+    counts: &'a [usize],
+    nb: usize,
+    nh: usize,
+    ncols: usize,
+    p: usize,
+    half: &'a mut [Complex],
+}
+
+impl UnpackHalf for HermInvUnpackHalf<'_> {
+    fn recv_bytes(&self, src: usize) -> usize {
+        self.counts[src] * ELEM
+    }
+
+    fn unpack(&mut self, s: usize, block: &[u8]) {
+        unpack_col_residues(block, self.nb, self.nh, self.ncols, self.p, s, self.half);
+    }
+}
+
+impl RealPlaneWavePlan {
+    /// Plan a batched real-input plane-wave sphere transform for `offsets`
+    /// with batch `nb` on the 1D `grid`. Requires even `nz >= 2` (the
+    /// two-for-one z packing) and `p <= nx`, `p <= nz/2 + 1` (every rank
+    /// must own at least one x column and one Hermitian-unique z bin).
+    pub fn new(offsets: Arc<OffsetArray>, nb: usize, grid: Arc<ProcGrid>) -> Result<Self> {
+        assert_eq!(grid.ndim(), 1, "r2c plane-wave plan requires a 1D processing grid");
+        let nz = offsets.nz;
+        if nz < 2 || nz % 2 != 0 {
+            return Err(FftbError::Shape(format!(
+                "r2c plane-wave plan requires even nz >= 2 for the two-for-one \
+                 z packing, got nz={nz}"
+            )));
+        }
+        let h = nz / 2;
+        let nh = h + 1;
+        let p = grid.size();
+        if p > offsets.nx || p > nh {
+            return Err(FftbError::Unsupported(format!(
+                "r2c plane-wave plan needs p <= nx and p <= nz/2+1 \
+                 (p={p}, grid {}x{}x{}, {nh} Hermitian-unique bins)",
+                offsets.nx, offsets.ny, offsets.nz
+            )));
+        }
+        let r = grid.rank();
+        let local_off = offsets.restrict_x_cyclic(p, r);
+        let mut disc_xs: Vec<usize> = offsets
+            .x_runs()
+            .iter()
+            .flat_map(|&(x0, len)| x0 as usize..(x0 as usize + len as usize))
+            .collect();
+        disc_xs.sort_unstable();
+
+        let cols_by_rank: Vec<Vec<(usize, usize)>> = (0..p)
+            .map(|q| {
+                let lnx = cyclic::local_count(offsets.nx, p, q);
+                let mut cols = Vec::new();
+                for y in 0..offsets.ny {
+                    for lx in 0..lnx {
+                        let gx = cyclic::local_to_global(lx, p, q);
+                        if offsets.col_nonempty(gx, y) {
+                            cols.push((gx, y));
+                        }
+                    }
+                }
+                cols
+            })
+            .collect();
+        let ncols = cols_by_rank[r].len();
+        let lzc = cyclic::local_count(nh, p, r);
+
+        // Forward: to rank s go, for each owned column, s's residues of the
+        // nh unique bins — the c2c schedule with nz replaced by nh, which is
+        // the entire wire saving.
+        let send_counts: Vec<usize> =
+            (0..p).map(|s| nb * ncols * cyclic::local_count(nh, p, s)).collect();
+        let recv_counts: Vec<usize> =
+            (0..p).map(|q| nb * cols_by_rank[q].len() * lzc).collect();
+        let fwd = A2aSchedule::new(send_counts, recv_counts, r);
+        let inv = fwd.reversed();
+
+        Ok(RealPlaneWavePlan {
+            offsets,
+            nb,
+            grid,
+            local_off,
+            disc_xs,
+            cols_by_rank,
+            ncols,
+            h,
+            nh,
+            lzc,
+            fwd,
+            inv,
+            tuning: CommTuning::default(),
+            ws: Mutex::new(Workspace::new()),
+            rpool: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Override the exchange overlap knobs (window size, worker) for this
+    /// plan.
+    pub fn set_tuning(&mut self, tuning: CommTuning) {
+        self.tuning = tuning;
+    }
+
+    /// Return a finished complex output buffer (the half-depth slab) to the
+    /// plan's slot pool.
+    pub fn recycle(&self, buf: Vec<Complex>) {
+        self.ws.lock().unwrap().slots.recycle(buf);
+    }
+
+    /// Return a finished real coefficient buffer (an inverse output the
+    /// caller is done with) to the plan's real pool.
+    pub fn recycle_real(&self, buf: Vec<f64>) {
+        let mut pool = self.rpool.lock().unwrap();
+        if pool.len() < MAX_REAL_SLOTS && buf.capacity() > 0 {
+            pool.push(buf);
+        }
+    }
+
+    /// Check out a real buffer of exactly `len` elements from the pool,
+    /// counting capacity growth into `ctr` (the real-side analogue of
+    /// [`super::workspace::SlotPool::take`]).
+    fn take_real(&self, len: usize, ctr: &Cell<u64>) -> Vec<f64> {
+        let mut buf = self.rpool.lock().unwrap().pop().unwrap_or_default();
+        let cap0 = buf.capacity();
+        buf.resize(len, 0.0);
+        buf.truncate(len);
+        if buf.capacity() > cap0 {
+            let grown = (buf.capacity() - cap0) * std::mem::size_of::<f64>();
+            ctr.set(ctr.get() + grown as u64);
+        }
+        buf
+    }
+
+    fn p(&self) -> usize {
+        self.grid.size()
+    }
+
+    /// Rank count of the 1D processing grid this plan runs on.
+    pub fn grid_size(&self) -> usize {
+        self.grid.size()
+    }
+
+    /// Packed local input length in *real* coefficients
+    /// (`nb` x locally-owned sphere points).
+    pub fn input_len(&self) -> usize {
+        self.nb * self.local_off.total()
+    }
+
+    /// Dense local output length `[nb, nx, ny, lzc]`, z cyclic over the
+    /// `nz/2 + 1` Hermitian-unique bins.
+    pub fn output_len(&self) -> usize {
+        self.nb * self.offsets.nx * self.offsets.ny * self.lzc
+    }
+
+    /// Hermitian-unique z-bin count (`nz/2 + 1`) — the z extent of the
+    /// distributed output.
+    pub fn unique_bins(&self) -> usize {
+        self.nh
+    }
+
+    /// Scatter packed real coefficients into pair-packed half-length
+    /// complex z-lines: run element at global `z` lands in slot `z/2`,
+    /// even z's in the real part, odd z's in the imaginary part
+    /// (`z[k] = x[2k] + i·x[2k+1]`).
+    fn scatter_real_pairs(&self, input: &[f64], work: &mut [Complex]) {
+        let (nb, h) = (self.nb, self.h);
+        let loc = &self.local_off;
+        let mut ci = 0usize;
+        for y in 0..loc.ny {
+            for x in 0..loc.nx {
+                if !loc.col_nonempty(x, y) {
+                    continue;
+                }
+                let mut e = loc.col_offset(x, y);
+                let base = ci * nb * h;
+                for &(z0, len) in loc.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        let dst = base + nb * (z / 2);
+                        let src = nb * e;
+                        if z % 2 == 0 {
+                            for b in 0..nb {
+                                work[dst + b].re = input[src + b];
+                            }
+                        } else {
+                            for b in 0..nb {
+                                work[dst + b].im = input[src + b];
+                            }
+                        }
+                        e += 1;
+                    }
+                }
+                ci += 1;
+            }
+        }
+    }
+
+    /// De-interleave the half-length inverse-FFT output back into packed
+    /// real coefficients — the exact inverse walk of
+    /// [`scatter_real_pairs`](Self::scatter_real_pairs).
+    fn gather_real_pairs(&self, work: &[Complex], out: &mut [f64]) {
+        let (nb, h) = (self.nb, self.h);
+        let loc = &self.local_off;
+        let mut ci = 0usize;
+        for y in 0..loc.ny {
+            for x in 0..loc.nx {
+                if !loc.col_nonempty(x, y) {
+                    continue;
+                }
+                let mut e = loc.col_offset(x, y);
+                let base = ci * nb * h;
+                for &(z0, len) in loc.col_runs(x, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        let src = base + nb * (z / 2);
+                        let dst = nb * e;
+                        if z % 2 == 0 {
+                            for b in 0..nb {
+                                out[dst + b] = work[src + b].re;
+                            }
+                        } else {
+                            for b in 0..nb {
+                                out[dst + b] = work[src + b].im;
+                            }
+                        }
+                        e += 1;
+                    }
+                }
+                ci += 1;
+            }
+        }
+    }
+
+    /// Forward r2c: packed real sphere coefficients → half-depth complex
+    /// slab `[nb, nx, ny, lzc]`, z cyclic over the `nz/2 + 1` unique bins.
+    /// The consumed input's storage joins the plan's real pool.
+    pub fn forward(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<f64>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        assert_eq!(input.len(), self.input_len(), "r2c forward: wrong input length");
+        let comm = self.grid.axis_comm(0);
+        let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
+        let nb = self.nb;
+        let (ncols, h, nh, lzc) = (self.ncols, self.h, self.nh, self.lzc);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
+        let alloc = &*alloc;
+        let mut half = Vec::new();
+        let mut cube = Vec::new();
+        let mut trace = ExecTrace::default();
+        let mut t = StageTimer::new(&mut trace);
+
+        // steady-state: r2c plane-wave forward
+        // All storage below is workspace-pooled, plan-pooled (the real
+        // buffers) or arena-backed; `trace.alloc_bytes` audits it.
+        // 1. Pair-pack the real z-runs: [nb, h, ncols] with
+        //    z[k] = x[2k] + i·x[2k+1] per column line, zero-padded.
+        t.reshape("scatter_rz", || {
+            ensure_zeroed(&mut *work, nb * h * ncols, alloc);
+            self.scatter_real_pairs(&input, &mut *work);
+        });
+
+        // 2. One *half-length* FFT per (band, column) line — the flop half
+        //    of the two-for-one saving.
+        t.compute("pad_rfft_z", backend.flops(nb * h * ncols, h), || {
+            backend_fft_dim_ws(
+                backend,
+                &mut *work,
+                &[nb, h, ncols],
+                1,
+                Direction::Forward,
+                &mut *fft,
+                alloc,
+            );
+        });
+
+        // 3. Twiddle unpack into the nh = h+1 Hermitian-unique bins:
+        //    X[k] = E[k] + w^k·O[k] with E/O the even/odd parts recovered
+        //    from Z[k] and conj(Z[h-k]). Every element is written.
+        let tw = twiddles(nz, Direction::Forward);
+        t.reshape("stage_half", || {
+            half = slots.take(nb * nh * ncols, alloc);
+        });
+        t.compute("herm_unpack_z", 8.0 * (nb * nh * ncols) as f64, || {
+            for c in 0..ncols {
+                let zbase = c * nb * h;
+                let hbase = c * nb * nh;
+                for k in 0..=h {
+                    let src_k = zbase + nb * (if k == h { 0 } else { k });
+                    let src_c = zbase + nb * ((h - k) % h);
+                    let dst = hbase + nb * k;
+                    let w = if k == h { Complex::new(-1.0, 0.0) } else { tw[k] };
+                    for b in 0..nb {
+                        let zk = work[src_k + b];
+                        let zc = work[src_c + b].conj();
+                        let e = (zk + zc).scale(0.5);
+                        let o = (zk - zc).scale(0.5).mul_neg_i();
+                        half[dst + b] = e + w * o;
+                    }
+                }
+            }
+        });
+
+        // 4. Stage the zeroed half-depth slab the received columns land in.
+        t.reshape("stage_cube", || {
+            cube = slots.take_zeroed(nb * nx * ny * lzc, alloc);
+        });
+
+        // 5. Fused Hermitian exchange — identical discipline to the c2c
+        //    sphere exchange, but every extent is sized on nh, so the wire
+        //    carries ~(nz/2+1)/nz of the c2c bytes.
+        t.comm_a2a("a2a_herm", || {
+            let c = if self.tuning.worker {
+                let pack = HermFwdPackHalf {
+                    counts: &self.fwd.send_counts,
+                    nb,
+                    nh,
+                    ncols,
+                    p: self.p(),
+                    half: &half[..],
+                };
+                let mut unpack = HermFwdUnpackHalf {
+                    counts: &self.fwd.recv_counts,
+                    cols_by_rank: &self.cols_by_rank,
+                    nb,
+                    nx,
+                    ny,
+                    lzc,
+                    cube: &mut cube[..],
+                };
+                stage_self_block(comm, &pack, &mut unpack);
+                alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
+            } else {
+                let mut k = HermFwdKernel { plan: self, half: &half[..], cube: &mut cube[..] };
+                fused_exchange(comm, &mut k, self.tuning)
+            };
+            ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
+        });
+        slots.recycle(std::mem::take(&mut half));
+
+        // 6. y lines only where the disc has data, over the half-depth slab.
+        let y_lines: f64 =
+            (nb * self.disc_xs.len() * lzc) as f64 * crate::fft::batch::fft_flops(ny);
+        t.compute("pad_fft_y", y_lines, || {
+            fft_y_disc_panel(
+                backend,
+                &mut cube,
+                Direction::Forward,
+                nb,
+                nx,
+                ny,
+                lzc,
+                &self.disc_xs,
+                &mut *panel,
+                &mut *fft,
+                alloc,
+            );
+        });
+
+        // 7. Dense FFT along x.
+        t.compute("fft_x", backend.flops(cube.len(), nx), || {
+            backend_fft_dim_ws(
+                backend,
+                &mut cube,
+                &[nb, nx, ny, lzc],
+                1,
+                Direction::Forward,
+                &mut *fft,
+                alloc,
+            );
+        });
+        // The consumed real input's storage joins the plan's real pool.
+        self.recycle_real(input);
+        // steady-state: end
+        trace.alloc_bytes = alloc.get();
+        (cube, trace)
+    }
+
+    /// Inverse c2r: half-depth complex slab → packed real sphere
+    /// coefficients. Exact inverse of [`forward`](Self::forward) (including
+    /// the 1/n normalization); the consumed slab joins the slot pool.
+    pub fn inverse(
+        &self,
+        backend: &dyn LocalFftBackend,
+        mut cube: Vec<Complex>,
+    ) -> (Vec<f64>, ExecTrace) {
+        assert_eq!(cube.len(), self.output_len(), "c2r inverse: wrong input length");
+        let comm = self.grid.axis_comm(0);
+        let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
+        let nb = self.nb;
+        let (ncols, h, nh, lzc) = (self.ncols, self.h, self.nh, self.lzc);
+        let mut guard = self.ws.lock().unwrap();
+        let ws = &mut *guard;
+        ws.begin();
+        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
+        let alloc = &*alloc;
+        let mut half = Vec::new();
+        let mut trace = ExecTrace::default();
+        let mut t = StageTimer::new(&mut trace);
+
+        // steady-state: r2c plane-wave inverse
+        // 1. Dense inverse FFT along x.
+        t.compute("ifft_x", backend.flops(cube.len(), nx), || {
+            backend_fft_dim_ws(
+                backend,
+                &mut cube,
+                &[nb, nx, ny, lzc],
+                1,
+                Direction::Inverse,
+                &mut *fft,
+                alloc,
+            );
+        });
+
+        // 2. Inverse FFT along y, only the disc x-extent.
+        let y_lines: f64 =
+            (nb * self.disc_xs.len() * lzc) as f64 * crate::fft::batch::fft_flops(ny);
+        t.compute("trunc_ifft_y", y_lines, || {
+            fft_y_disc_panel(
+                backend,
+                &mut cube,
+                Direction::Inverse,
+                nb,
+                nx,
+                ny,
+                lzc,
+                &self.disc_xs,
+                &mut *panel,
+                &mut *fft,
+                alloc,
+            );
+        });
+
+        // 3. Stage the half-spectrum column buffer the merge lands in
+        //    (every element is overwritten by the unpacks across source
+        //    ranks — the s-residues of 0..p cover all nh bins).
+        t.reshape("stage_half", || {
+            half = slots.take(nb * nh * ncols, alloc);
+        });
+
+        // 4. Fused Hermitian exchange, reversed.
+        t.comm_a2a("a2a_herm", || {
+            let c = if self.tuning.worker {
+                let pack = HermInvPackHalf {
+                    counts: &self.inv.send_counts,
+                    cols_by_rank: &self.cols_by_rank,
+                    nb,
+                    nx,
+                    ny,
+                    lzc,
+                    cube: &cube[..],
+                };
+                let mut unpack = HermInvUnpackHalf {
+                    counts: &self.inv.recv_counts,
+                    nb,
+                    nh,
+                    ncols,
+                    p: self.p(),
+                    half: &mut half[..],
+                };
+                stage_self_block(comm, &pack, &mut unpack);
+                alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
+            } else {
+                let mut k = HermInvKernel { plan: self, cube: &cube[..], half: &mut half[..] };
+                fused_exchange(comm, &mut k, self.tuning)
+            };
+            ((), self.inv.bytes_remote(), self.inv.msgs(), c)
+        });
+
+        // 5. Twiddle re-pack: Z[k] = E[k] + i·O[k] with E/O recovered from
+        //    the half spectrum (every element of the h-line is written).
+        let tw = twiddles(nz, Direction::Inverse);
+        t.compute("herm_pack_z", 8.0 * (nb * h * ncols) as f64, || {
+            ensure(&mut *work, nb * h * ncols, alloc);
+            for c in 0..ncols {
+                let zbase = c * nb * h;
+                let hbase = c * nb * nh;
+                for k in 0..h {
+                    let src_k = hbase + nb * k;
+                    let src_c = hbase + nb * (h - k);
+                    let dst = zbase + nb * k;
+                    for b in 0..nb {
+                        let xk = half[src_k + b];
+                        let xc = half[src_c + b].conj();
+                        let e = (xk + xc).scale(0.5);
+                        let o = (xk - xc).scale(0.5) * tw[k];
+                        work[dst + b] = e + o.mul_i();
+                    }
+                }
+            }
+        });
+
+        // 6. Half-length inverse FFT per line (includes the 1/h factor; the
+        //    twiddle pass supplies the rest of the 1/nz normalization).
+        t.compute("irfft_z", backend.flops(nb * h * ncols, h), || {
+            backend_fft_dim_ws(
+                backend,
+                &mut *work,
+                &[nb, h, ncols],
+                1,
+                Direction::Inverse,
+                &mut *fft,
+                alloc,
+            );
+        });
+
+        // 7. De-interleave back to packed real coefficients.
+        let mut packed = Vec::new();
+        t.reshape("gather_rz", || {
+            packed = self.take_real(self.input_len(), alloc);
+            self.gather_real_pairs(work, &mut packed);
+        });
+        slots.recycle(cube);
+        slots.recycle(std::mem::take(&mut half));
+        // steady-state: end
+        trace.alloc_bytes = alloc.get();
+        (packed, trace)
+    }
+
+    /// Forward r2c on complex-embedded input (imaginary parts ignored) —
+    /// the adapter behind [`Fftb::execute`](crate::fftb::plan::Fftb) so the
+    /// tuner's empirical probes and the service lanes drive this plan
+    /// through the same `Vec<Complex>` interface as every other plan.
+    pub fn forward_embedded(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        assert_eq!(input.len(), self.input_len(), "r2c forward: wrong input length");
+        let ctr = Cell::new(0u64);
+        let mut reals = self.take_real(self.input_len(), &ctr);
+        for (r, c) in reals.iter_mut().zip(&input) {
+            *r = c.re;
+        }
+        self.ws.lock().unwrap().slots.recycle(input);
+        let (out, mut trace) = self.forward(backend, reals);
+        trace.alloc_bytes += ctr.get();
+        (out, trace)
+    }
+
+    /// Inverse c2r returning complex-embedded output (`re` carries the real
+    /// coefficients, `im` is zero) — the [`Fftb::execute`] adapter's mirror.
+    pub fn inverse_embedded(
+        &self,
+        backend: &dyn LocalFftBackend,
+        cube: Vec<Complex>,
+    ) -> (Vec<Complex>, ExecTrace) {
+        let (reals, mut trace) = self.inverse(backend, cube);
+        let ctr = Cell::new(0u64);
+        let mut out = self.ws.lock().unwrap().slots.take(reals.len(), &ctr);
+        for (o, &r) in out.iter_mut().zip(&reals) {
+            *o = Complex::new(r, 0.0);
+        }
+        self.recycle_real(reals);
+        trace.alloc_bytes += ctr.get();
+        (out, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::communicator::run_world;
+    use crate::fft::complex::max_abs_diff;
+    use crate::fftb::backend::RustFftBackend;
+    use crate::fftb::plan::planewave::PlaneWavePlan;
+    use crate::fftb::plan::testutil::gather_cube_z;
+    use crate::fftb::sphere::{SphereKind, SphereSpec};
+
+    /// Deterministic real sphere coefficients.
+    fn real_coeffs(n: usize, seed: u64) -> Vec<f64> {
+        (0..n).map(|i| ((i as f64 + 1.0) * 0.7341 + seed as f64 * 0.377).sin()).collect()
+    }
+
+    /// Split global packed real coefficients into rank `r`'s packed vector
+    /// (x cyclic), batch fastest — mirror of the c2c test scatter.
+    fn scatter_sphere_real(
+        off: &OffsetArray,
+        packed: &[f64],
+        nb: usize,
+        p: usize,
+        r: usize,
+    ) -> Vec<f64> {
+        let loc = off.restrict_x_cyclic(p, r);
+        let mut out = Vec::with_capacity(nb * loc.total());
+        for y in 0..off.ny {
+            for lx in 0..loc.nx {
+                let gx = cyclic::local_to_global(lx, p, r);
+                let e0 = off.col_offset(gx, y);
+                let n = off.col_len(gx, y);
+                out.extend_from_slice(&packed[nb * e0..nb * (e0 + n)]);
+            }
+        }
+        out
+    }
+
+    /// Acceptance: the distributed r2c forward agrees with the c2c plan on
+    /// every Hermitian-unique bin to <= 1e-12, the round trip restores the
+    /// real input to <= 1e-12, and the fused exchange moves strictly under
+    /// 0.6x the c2c plan's bytes — on p in {1, 2, 4}.
+    #[test]
+    fn r2c_matches_c2c_and_halves_the_wire() {
+        let n = 16;
+        let nh = n / 2 + 1;
+        let spec = SphereSpec::new([n, n, n], 4.0, SphereKind::Wrapped);
+        let off = Arc::new(spec.offsets());
+        let nb = 2;
+        let reals = real_coeffs(nb * off.total(), 11);
+        for p in [1usize, 2, 4] {
+            let off2 = Arc::clone(&off);
+            let reals2 = reals.clone();
+            let outs = run_world(p, move |comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let local = scatter_sphere_real(&off2, &reals2, nb, p, grid.rank());
+
+                let rp =
+                    RealPlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+                let (hcube, tr_r) = rp.forward(&backend, local.clone());
+
+                let cp = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+                let clocal: Vec<Complex> =
+                    local.iter().map(|&v| Complex::new(v, 0.0)).collect();
+                let (ccube, tr_c) = cp.forward(&backend, clocal);
+
+                // Round trip back to the packed real coefficients.
+                let (back, _) = rp.inverse(&backend, hcube.clone());
+                let rt_err = back
+                    .iter()
+                    .zip(&local)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                (hcube, ccube, tr_r.comm_bytes(), tr_c.comm_bytes(), rt_err)
+            });
+
+            let hcubes: Vec<Vec<Complex>> = outs.iter().map(|o| o.0.clone()).collect();
+            let ccubes: Vec<Vec<Complex>> = outs.iter().map(|o| o.1.clone()).collect();
+            let half = gather_cube_z(&hcubes, nb, [n, n, nh], p);
+            let full = gather_cube_z(&ccubes, nb, [n, n, n], p);
+            // Every Hermitian-unique bin matches the c2c transform.
+            let mut err = 0.0f64;
+            for kz in 0..nh {
+                for y in 0..n {
+                    for x in 0..n {
+                        for b in 0..nb {
+                            let hval = half[b + nb * (x + n * (y + n * kz))];
+                            let fval = full[b + nb * (x + n * (y + n * kz))];
+                            err = err.max((hval - fval).abs());
+                        }
+                    }
+                }
+            }
+            assert!(err < 1e-12, "p={p}: r2c vs c2c forward err {err}");
+
+            // Round trip and wire bytes (summed over the world: per-rank
+            // cyclic remainders of nh vs nz wobble around the ratio).
+            let rt_err = outs.iter().map(|o| o.4).fold(0.0f64, f64::max);
+            assert!(rt_err < 1e-12, "p={p}: r2c round trip err {rt_err}");
+            let r2c_bytes: u64 = outs.iter().map(|o| o.2).sum();
+            let c2c_bytes: u64 = outs.iter().map(|o| o.3).sum();
+            if p > 1 {
+                assert!(
+                    (r2c_bytes as f64) < 0.6 * c2c_bytes as f64,
+                    "p={p}: r2c moved {r2c_bytes} B, c2c {c2c_bytes} B"
+                );
+            } else {
+                assert_eq!(r2c_bytes, 0, "p=1 moves no remote bytes");
+            }
+        }
+    }
+
+    /// The redundant half of the spectrum really is implied: gathering the
+    /// distributed r2c output and mirroring it with
+    /// X[kx,ky,nz-kz] = conj(X[-kx,-ky,kz]) reproduces the full c2c cube.
+    #[test]
+    fn mirrored_half_reconstructs_full_spectrum() {
+        let n = 8;
+        let nh = n / 2 + 1;
+        let spec = SphereSpec::new([n, n, n], 3.0, SphereKind::Wrapped);
+        let off = Arc::new(spec.offsets());
+        let nb = 1;
+        let p = 2;
+        let reals = real_coeffs(off.total(), 3);
+        let off2 = Arc::clone(&off);
+        let reals2 = reals.clone();
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let local = scatter_sphere_real(&off2, &reals2, nb, p, grid.rank());
+            let rp = RealPlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let cp = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let (hcube, _) = rp.forward(&backend, local.clone());
+            let clocal: Vec<Complex> = local.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let (ccube, _) = cp.forward(&backend, clocal);
+            (hcube, ccube)
+        });
+        let hcubes: Vec<Vec<Complex>> = outs.iter().map(|o| o.0.clone()).collect();
+        let ccubes: Vec<Vec<Complex>> = outs.iter().map(|o| o.1.clone()).collect();
+        let half = gather_cube_z(&hcubes, nb, [n, n, nh], p);
+        let full = gather_cube_z(&ccubes, nb, [n, n, n], p);
+        let mut recon = vec![crate::fft::complex::ZERO; n * n * n];
+        for kz in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    recon[x + n * (y + n * kz)] = if kz < nh {
+                        half[x + n * (y + n * kz)]
+                    } else {
+                        let (mx, my, mz) = ((n - x) % n, (n - y) % n, n - kz);
+                        half[mx + n * (my + n * mz)].conj()
+                    };
+                }
+            }
+        }
+        assert!(max_abs_diff(&recon, &full) < 1e-12);
+    }
+
+    #[test]
+    fn steady_state_round_trips_do_not_allocate() {
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+        let off = Arc::new(spec.offsets());
+        let nb = 2;
+        let p = 2;
+        let reals = real_coeffs(nb * off.total(), 5);
+        let off2 = Arc::clone(&off);
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let rp = RealPlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let mut local = scatter_sphere_real(&off2, &reals, nb, p, grid.rank());
+            let mut steady = 0u64;
+            for it in 0..3 {
+                let (cube, tf) = rp.forward(&backend, local);
+                let (back, ti) = rp.inverse(&backend, cube);
+                local = back;
+                if it > 0 {
+                    steady += tf.alloc_bytes + ti.alloc_bytes;
+                }
+            }
+            steady
+        });
+        for s in outs {
+            assert_eq!(s, 0, "steady-state r2c round trips must not allocate");
+        }
+    }
+
+    #[test]
+    fn worker_mode_is_bit_identical_to_serial() {
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+        let off = Arc::new(spec.offsets());
+        let nb = 2;
+        let p = 3;
+        let reals = real_coeffs(nb * off.total(), 9);
+        let run = |worker: bool| {
+            let off2 = Arc::clone(&off);
+            let reals2 = reals.clone();
+            run_world(p, move |comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let mut rp =
+                    RealPlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+                rp.set_tuning(CommTuning::with_window(2).with_worker(worker));
+                let local = scatter_sphere_real(&off2, &reals2, nb, p, grid.rank());
+                let (cube, _) = rp.forward(&backend, local);
+                let (back, _) = rp.inverse(&backend, cube.clone());
+                (cube, back)
+            })
+        };
+        let serial = run(false);
+        let threaded = run(true);
+        for (r, (s, t)) in serial.iter().zip(&threaded).enumerate() {
+            assert!(s.0.iter().zip(&t.0).all(|(a, b)| a.re == b.re && a.im == b.im), "rank {r}");
+            assert!(s.1.iter().zip(&t.1).all(|(a, b)| a == b), "rank {r} inverse");
+        }
+    }
+
+    #[test]
+    fn embedded_adapters_round_trip() {
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+        let off = Arc::new(spec.offsets());
+        let nb = 1;
+        let p = 2;
+        let reals = real_coeffs(off.total(), 21);
+        let off2 = Arc::clone(&off);
+        let errs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let rp = RealPlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let local = scatter_sphere_real(&off2, &reals, nb, p, grid.rank());
+            let embedded: Vec<Complex> = local.iter().map(|&v| Complex::new(v, 7.5)).collect();
+            // Imaginary parts must be ignored on the way in and zero on the
+            // way out.
+            let (cube, _) = rp.forward_embedded(&backend, embedded);
+            let (back, _) = rp.inverse_embedded(&backend, cube);
+            assert!(back.iter().all(|c| c.im == 0.0));
+            back.iter()
+                .zip(&local)
+                .map(|(a, b)| (a.re - b).abs())
+                .fold(0.0f64, f64::max)
+        });
+        for e in errs {
+            assert!(e < 1e-12, "embedded round trip err {e}");
+        }
+    }
+
+    #[test]
+    fn odd_nz_is_a_shape_error() {
+        run_world(1, |comm| {
+            let grid = ProcGrid::new(&[1], comm).unwrap();
+            let spec = SphereSpec::new([8, 8, 7], 2.0, SphereKind::Wrapped);
+            let off = Arc::new(spec.offsets());
+            let e = RealPlaneWavePlan::new(off, 1, grid).err().unwrap();
+            assert!(matches!(e, FftbError::Shape(_)), "{e}");
+        });
+    }
+
+    #[test]
+    fn oversubscribed_half_spectrum_rejected() {
+        // nz = 4 has only 3 Hermitian-unique bins: p = 4 must be refused
+        // even though p <= nx and p <= nz would pass the c2c check.
+        run_world(4, |comm| {
+            let grid = ProcGrid::new(&[4], comm).unwrap();
+            let spec = SphereSpec::new([8, 8, 4], 1.5, SphereKind::Wrapped);
+            let off = Arc::new(spec.offsets());
+            let e = RealPlaneWavePlan::new(off, 1, grid).err().unwrap();
+            assert!(matches!(e, FftbError::Unsupported(_)), "{e}");
+        });
+    }
+}

@@ -148,6 +148,18 @@ impl OffsetArray {
         )
     }
 
+    /// Fold extra words into the structural fingerprint. Used by the k-point
+    /// offset spheres: two k's can carve out the *same* run structure (small
+    /// offsets move no grid point across the cutoff), yet their transforms
+    /// are distinct workloads that must not share plan-cache or wisdom
+    /// entries — so the k bits participate in the print.
+    fn salt_fingerprint(mut self, words: &[u64]) -> Self {
+        for &w in words {
+            self.print = crate::util::fnv::fnv1a_word(self.print, w);
+        }
+        self
+    }
+
     /// Restrict to the x's owned by rank `r` of a `p`-rank axis under the
     /// elemental-cyclic distribution. Column `(lx, y)` of the result is
     /// global column `(lx*p + r, y)`.
@@ -307,6 +319,45 @@ impl SphereSpec {
         // per_col is indexed c = x + nx*y: the inner loop above runs x
         // fastest, matching OffsetArray's convention.
         OffsetArray::from_runs(nx, ny, nz, per_col)
+    }
+
+    /// Is grid point `(x, y, z)` inside the sphere shifted by crystal
+    /// momentum `k` (grid frequency units): `|G + k|^2 <= radius^2`?
+    pub fn contains_offset(&self, x: usize, y: usize, z: usize, k: [f64; 3]) -> bool {
+        let fx = Self::freq(x, self.n[0], self.kind) + k[0];
+        let fy = Self::freq(y, self.n[1], self.kind) + k[1];
+        let fz = Self::freq(z, self.n[2], self.kind) + k[2];
+        fx * fx + fy * fy + fz * fz <= self.radius * self.radius + 1e-9
+    }
+
+    /// Build the offset sphere `|G + k|^2 <= radius^2` for crystal momentum
+    /// `k` in grid frequency units — the per-k-point basis mask of a real
+    /// plane-wave code (each k-point keeps its own set of G vectors).
+    ///
+    /// Two guarantees the tuner and service lanes rely on:
+    ///
+    /// * `k = Γ = [0, 0, 0]` reduces **exactly** to [`offsets`](Self::offsets)
+    ///   — same runs, same [`OffsetArray::fingerprint`], so Γ-point callers
+    ///   keep hitting the plans and wisdom they already have;
+    /// * distinct `k` always produce distinct fingerprints, even when the
+    ///   shift is too small to move any grid point across the cutoff: the k
+    ///   bits are folded into the print, so every k-point gets its own
+    ///   plan-cache / wisdom / service-lane identity.
+    pub fn offset(&self, k: [f64; 3]) -> OffsetArray {
+        if k == [0.0; 3] {
+            return self.offsets();
+        }
+        let [nx, ny, nz] = self.n;
+        let mut per_col = Vec::with_capacity(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                let mask: Vec<bool> =
+                    (0..nz).map(|z| self.contains_offset(x, y, z, k)).collect();
+                per_col.push(runs_of(&mask));
+            }
+        }
+        OffsetArray::from_runs(nx, ny, nz, per_col)
+            .salt_fingerprint(&[k[0].to_bits(), k[1].to_bits(), k[2].to_bits()])
     }
 
     /// Sphere built from an energy cutoff (Eq. 9): `|g|^2/2 <= E_cut` with
@@ -478,6 +529,65 @@ mod tests {
         let xs: usize = xr.iter().map(|r| r.1 as usize).sum();
         let disc_xs: std::collections::HashSet<usize> = disc.iter().map(|&(x, _)| x).collect();
         assert_eq!(xs, disc_xs.len());
+    }
+
+    #[test]
+    fn gamma_offset_is_bit_identical_to_plain_offsets() {
+        let s = SphereSpec::new([12, 12, 12], 4.2, SphereKind::Wrapped);
+        let plain = s.offsets();
+        let gamma = s.offset([0.0, 0.0, 0.0]);
+        assert_eq!(plain.fingerprint(), gamma.fingerprint());
+        assert_eq!(plain.total(), gamma.total());
+        for y in 0..12 {
+            for x in 0..12 {
+                assert_eq!(plain.col_runs(x, y), gamma.col_runs(x, y), "({x},{y})");
+            }
+        }
+        // -0.0 == 0.0: a signed-zero k is still Γ, not a salted variant.
+        assert_eq!(s.offset([-0.0, 0.0, -0.0]).fingerprint(), plain.fingerprint());
+    }
+
+    #[test]
+    fn offset_membership_matches_shifted_norm() {
+        let s = SphereSpec::new([10, 12, 14], 3.9, SphereKind::Wrapped);
+        let k = [0.25, -0.5, 0.125];
+        let off = s.offset(k);
+        for z in 0..14 {
+            for y in 0..12 {
+                for x in 0..10 {
+                    let in_runs = off
+                        .col_runs(x, y)
+                        .iter()
+                        .any(|&(z0, len)| (z0 as usize..(z0 + len) as usize).contains(&z));
+                    assert_eq!(s.contains_offset(x, y, z, k), in_runs, "({x},{y},{z})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_k_get_distinct_fingerprints() {
+        let s = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+        let ks = [
+            [0.0, 0.0, 0.0],
+            [0.25, 0.0, 0.0],
+            [0.0, 0.25, 0.0],
+            [0.5, 0.5, 0.5],
+            [1e-6, 0.0, 0.0],
+        ];
+        let prints: Vec<u64> = ks.iter().map(|&k| s.offset(k).fingerprint()).collect();
+        for i in 0..prints.len() {
+            for j in i + 1..prints.len() {
+                assert_ne!(prints[i], prints[j], "k {:?} vs {:?}", ks[i], ks[j]);
+            }
+        }
+        // A shift too small to move any grid point across the cutoff (radius
+        // 2.9 sits between the |G|^2 = 8 and 9 shells) keeps the run
+        // structure of Γ — only the fingerprint salt tells them apart.
+        let s2 = SphereSpec::new([8, 8, 8], 2.9, SphereKind::Wrapped);
+        let tiny = s2.offset([1e-6, 0.0, 0.0]);
+        assert_eq!(tiny.total(), s2.offsets().total());
+        assert_ne!(tiny.fingerprint(), s2.offsets().fingerprint());
     }
 
     #[test]

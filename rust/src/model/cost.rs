@@ -225,6 +225,56 @@ pub fn planewave(off: &OffsetArray, nb: usize, p: usize, batched: bool) -> PlanC
     }
 }
 
+/// Real-input (r2c) plane-wave forward on a 1D grid: the z stage runs one
+/// *half-length* FFT per column plus an O(nh) twiddle unpack, and the fused
+/// exchange carries only the `nh = nz/2 + 1` Hermitian-unique bins — so both
+/// the wire volume and the downstream y/x slab shrink by ~`nh/nz` ≈ 0.5x
+/// versus [`planewave`] on the same sphere. Always batched (the r2c family
+/// has no loop cadence).
+pub fn planewave_r2c(off: &OffsetArray, nb: usize, p: usize) -> PlanCost {
+    let (nx, ny, nz) = (off.nx, off.ny, off.nz);
+    let h = nz / 2;
+    let nh = h + 1;
+    let lzc = cyclic::local_count(nh, p, 0);
+    let local_off = off.restrict_x_cyclic(p, 0);
+    let my_cols = local_off.disc_columns().len() as f64;
+    let my_pts = local_off.total() as f64;
+    let disc_xs = off.x_runs().iter().map(|r| r.1 as usize).sum::<usize>() as f64;
+
+    let cyl_half = nb as f64 * my_cols * h as f64; // pair-packed z-columns
+    let cyl_h = nb as f64 * my_cols * nh as f64; // Hermitian-unique bins
+    let slab = (nb * nx * ny * lzc) as f64;
+
+    PlanCost {
+        stages: vec![
+            // Real scatter (8 B/elem) + half-length FFT + twiddle unpack
+            // (~8 complex flops per unique bin).
+            StageCost::compute(
+                "pad_rfft_z",
+                nb as f64 * my_cols * fft_flops(h) + 8.0 * cyl_h,
+                nb as f64 * my_pts * 8.0 + (4.0 * cyl_half + 2.0 * cyl_h) * BYTES_PER_ELEM,
+            ),
+            StageCost::comm_fused(
+                "a2a_herm",
+                cyl_h * BYTES_PER_ELEM * (p - 1) as f64 / p as f64,
+                1,
+                2.0 * cyl_h * BYTES_PER_ELEM,
+            ),
+            StageCost::compute(
+                "pad_fft_y",
+                nb as f64 * disc_xs * lzc as f64 * fft_flops(ny),
+                (2.0 * slab + 4.0 * nb as f64 * disc_xs * (ny * lzc) as f64) * BYTES_PER_ELEM,
+            ),
+            StageCost::compute(
+                "fft_x",
+                (nb * ny * lzc) as f64 * fft_flops(nx),
+                4.0 * slab * BYTES_PER_ELEM,
+            ),
+        ],
+        a2a_ranks: vec![p],
+    }
+}
+
 /// Pad-to-cube baseline for sphere inputs (paper Fig. 2): scatter the
 /// packed sphere into the full local cube slice, then run the dense batched
 /// slab-pencil transform on everything, padding included.
@@ -306,6 +356,24 @@ mod tests {
         assert_eq!(batched.stages[1].rounds, 1);
         assert_eq!(looped.stages[1].rounds, nb);
         assert_eq!(batched.stages[1].fused_bytes, looped.stages[1].fused_bytes);
+    }
+
+    #[test]
+    fn r2c_halves_wire_and_flops_vs_c2c() {
+        let n = 32;
+        let spec = SphereSpec::new([n, n, n], n as f64 / 4.0, SphereKind::Centered);
+        let off = spec.offsets();
+        let (nb, p) = (4usize, 4usize);
+        let r2c = planewave_r2c(&off, nb, p);
+        let c2c = planewave(&off, nb, p, true);
+        // Wire: exactly nh/nz of the c2c cylinder — (n/2+1)/n, under 0.6.
+        let ratio = r2c.total_a2a_bytes() / c2c.total_a2a_bytes();
+        let want = (n / 2 + 1) as f64 / n as f64;
+        assert!((ratio - want).abs() < 1e-12, "ratio {ratio} want {want}");
+        assert!(ratio < 0.6);
+        // Flops: half-length z FFT plus the half-depth y/x slab.
+        assert!(r2c.total_flops() < 0.75 * c2c.total_flops());
+        assert_eq!(r2c.stages[1].name, "a2a_herm");
     }
 
     #[test]

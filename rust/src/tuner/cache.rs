@@ -57,6 +57,11 @@ pub struct PlanKey {
     pub window: usize,
     /// Whether the plan's `CommTuning` enables the helper worker thread.
     pub worker: bool,
+    /// Transform tag: `true` for the real-input (r2c/c2r) plan family,
+    /// `false` for c2c. A real request and a complex request on the same
+    /// sphere must never share a plan — the r2c output carries only the
+    /// `nz/2 + 1` Hermitian-unique z bins.
+    pub r2c: bool,
 }
 
 /// Memoized `Fftb` plans keyed by [`PlanKey`], with hit/miss accounting.
@@ -153,6 +158,7 @@ mod tests {
             sphere: 0,
             window,
             worker: false,
+            r2c: false,
         }
     }
 
@@ -203,7 +209,10 @@ mod tests {
             let other_sphere = PlanKey { sphere: 42, ..key(2, None, 2) };
             let (_, hit) = cache.get_or_insert(other_sphere, || build_slab(2, &grid)).unwrap();
             assert!(!hit, "a different sphere fingerprint is a different plan");
-            assert_eq!(cache.len(), 7);
+            let real = PlanKey { r2c: true, ..key(2, None, 2) };
+            let (_, hit) = cache.get_or_insert(real, || build_slab(2, &grid)).unwrap();
+            assert!(!hit, "the r2c transform tag is a different plan");
+            assert_eq!(cache.len(), 8);
         });
     }
 

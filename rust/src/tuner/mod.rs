@@ -8,8 +8,8 @@
 //! described machine; this subsystem is what finally consumes those prices:
 //!
 //! * [`cache`] — [`PlanCache`]: memoized `Fftb` objects keyed by
-//!   `(shape, signature, kind, nb, direction, sphere, window, worker)`,
-//!   extending
+//!   `(shape, signature, kind, nb, direction, sphere, window, worker,
+//!   transform)`, extending
 //!   plan-once / execute-many to the layer that requests plans.
 //! * [`search`] — feasible-candidate enumeration (all decompositions ×
 //!   grid factorizations × exchange windows) and deterministic model-based
@@ -163,7 +163,32 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
     ) -> Result<TunedPlan> {
-        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::Forward)
+        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::Forward, false)
+    }
+
+    /// [`Tuner::plan_auto`] for real-input (r2c/c2r) workloads: the request
+    /// carries the `real` flag, so the search enumerates the Hermitian
+    /// half-spectrum plane-wave family alongside the c2c candidates and the
+    /// signature, wisdom and plan-cache entries (`PlanKey::r2c`) never
+    /// collide with complex requests on the same sphere. Requires a sphere:
+    /// the half-traffic exchange is a sphere-plan property.
+    pub fn plan_auto_real(
+        &mut self,
+        shape: [usize; 3],
+        nb: usize,
+        sphere: Arc<OffsetArray>,
+        comm: &Comm,
+        backend: Option<&dyn LocalFftBackend>,
+    ) -> Result<TunedPlan> {
+        self.plan_auto_profiled(
+            shape,
+            nb,
+            Some(sphere),
+            comm,
+            backend,
+            WorkloadProfile::Forward,
+            true,
+        )
     }
 
     /// [`Tuner::plan_auto`] for SCF-shaped (round-trip) workloads: the
@@ -182,12 +207,13 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
     ) -> Result<TunedPlan> {
-        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::RoundTrip)
+        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::RoundTrip, false)
     }
 
     /// Shared body of [`Tuner::plan_auto`] / [`Tuner::plan_auto_scf`]:
     /// wisdom lookup → model ranking → optional empirical probe (shaped by
     /// `profile`) → wisdom record → plan-cache fetch.
+    #[allow(clippy::too_many_arguments)]
     fn plan_auto_profiled(
         &mut self,
         shape: [usize; 3],
@@ -196,6 +222,7 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
         profile: WorkloadProfile,
+        real: bool,
     ) -> Result<TunedPlan> {
         if let Some(off) = &sphere {
             if shape != [off.nx, off.ny, off.nz] {
@@ -207,7 +234,7 @@ impl Tuner {
             }
         }
         let sphere_fp = sphere.as_ref().map_or(0, |o| o.fingerprint());
-        let req = TuneRequest { shape, nb, p: comm.size(), sphere, profile };
+        let req = TuneRequest { shape, nb, p: comm.size(), sphere, profile, real };
         let sig = req.signature();
 
         // Wisdom lifecycle: retire entries that have steered too many
@@ -291,6 +318,7 @@ impl Tuner {
                     probe,
                     loads: 0,
                     measured_at: wisdom::now_secs(),
+                    r2c: matches!(choice.kind, CandidateKind::PlaneWaveR2c),
                 },
             );
         }
@@ -306,6 +334,7 @@ impl Tuner {
             sphere: sphere_fp,
             window: choice.window,
             worker: choice.worker,
+            r2c: matches!(choice.kind, CandidateKind::PlaneWaveR2c),
         };
         let (plan, cache_hit) = match prebuilt {
             Some(plan) => {

@@ -26,7 +26,7 @@ use crate::fftb::error::{FftbError, Result};
 use crate::fftb::grid::ProcGrid;
 use crate::fftb::plan::{
     Fftb, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlaneWaveLoop, PlaneWavePlan, PlanKind,
-    SlabPencilPlan,
+    RealPlaneWavePlan, SlabPencilPlan,
 };
 use crate::fftb::sphere::OffsetArray;
 use crate::model::cost::{self, PlanCost};
@@ -51,6 +51,10 @@ pub enum CandidateKind {
     /// Non-batched loop of single plane-wave sphere transforms (1D grid):
     /// per-band exchange cadence instead of one fused batched exchange.
     PlaneWaveLoop,
+    /// Real-input (r2c/c2r) plane-wave sphere transform (1D grid): the
+    /// fused exchange carries only the `nz/2 + 1` Hermitian-unique z bins.
+    /// Enumerated only for requests flagged [`TuneRequest::real`].
+    PlaneWaveR2c,
     /// Pad-to-cube baseline for sphere inputs (1D grid).
     PaddedSphere,
 }
@@ -64,6 +68,7 @@ impl CandidateKind {
             CandidateKind::Pencil { p0, p1 } => format!("pencil:{p0}x{p1}"),
             CandidateKind::PlaneWave => "plane-wave".into(),
             CandidateKind::PlaneWaveLoop => "plane-wave-loop".into(),
+            CandidateKind::PlaneWaveR2c => "plane-wave-r2c".into(),
             CandidateKind::PaddedSphere => "padded-sphere".into(),
         }
     }
@@ -75,6 +80,7 @@ impl CandidateKind {
             "slab-pencil-loop" => Some(CandidateKind::SlabPencilLoop),
             "plane-wave" => Some(CandidateKind::PlaneWave),
             "plane-wave-loop" => Some(CandidateKind::PlaneWaveLoop),
+            "plane-wave-r2c" => Some(CandidateKind::PlaneWaveR2c),
             "padded-sphere" => Some(CandidateKind::PaddedSphere),
             _ => {
                 let rest = s.strip_prefix("pencil:")?;
@@ -116,6 +122,11 @@ pub struct TuneRequest {
     /// The cadence the plan will be driven at (empirical probes measure
     /// this shape; signatures keep the profiles' wisdom apart).
     pub profile: WorkloadProfile,
+    /// The sphere coefficients are real (Γ-point wavefunctions): enumerate
+    /// the r2c/c2r half-spectrum candidate alongside the c2c family, and
+    /// keep this request's wisdom/cache entries apart from complex ones
+    /// (the signature carries an `|r2c` suffix).
+    pub real: bool,
 }
 
 impl TuneRequest {
@@ -134,7 +145,8 @@ impl TuneRequest {
             WorkloadProfile::Forward => "",
             WorkloadProfile::RoundTrip => "|rt",
         };
-        format!("{nx}x{ny}x{nz}|nb={}|p={}|{sphere}{rt}", self.nb, self.p)
+        let r2c = if self.real { "|r2c" } else { "" };
+        format!("{nx}x{ny}x{nz}|nb={}|p={}|{sphere}{rt}{r2c}", self.nb, self.p)
     }
 }
 
@@ -199,6 +211,13 @@ pub fn enumerate(req: &TuneRequest) -> Vec<CandidateKind> {
             if req.nb > 1 {
                 out.push(CandidateKind::PlaneWaveLoop);
             }
+            // Real coefficients open the half-spectrum candidate: needs an
+            // even nz (the two-for-one z packing) and a rank per unique
+            // bin. The c2c family stays enumerated — embedding real data
+            // is always legal — so the ranking decides on price.
+            if req.real && nz % 2 == 0 && p <= nz / 2 + 1 {
+                out.push(CandidateKind::PlaneWaveR2c);
+            }
             out.push(CandidateKind::PaddedSphere);
         }
         return out;
@@ -239,6 +258,7 @@ pub fn stage_cost(kind: CandidateKind, req: &TuneRequest) -> PlanCost {
         CandidateKind::Pencil { p0, p1 } => cost::pencil(req.shape, req.nb, p0, p1, true),
         CandidateKind::PlaneWave => cost::planewave(sphere_of(req), req.nb, req.p, true),
         CandidateKind::PlaneWaveLoop => cost::planewave(sphere_of(req), req.nb, req.p, false),
+        CandidateKind::PlaneWaveR2c => cost::planewave_r2c(sphere_of(req), req.nb, req.p),
         CandidateKind::PaddedSphere => cost::padded_sphere(sphere_of(req), req.nb, req.p),
     }
 }
@@ -346,6 +366,11 @@ pub fn build(cand: &Candidate, req: &TuneRequest, comm: &Comm) -> Result<Fftb> {
             let off = Arc::clone(sphere_of(req));
             PlanKind::PlaneWaveLoop(PlaneWaveLoop::new(off, req.nb, grid)?)
         }
+        CandidateKind::PlaneWaveR2c => {
+            let grid = ProcGrid::new(&[req.p], comm.clone())?;
+            let off = Arc::clone(sphere_of(req));
+            PlanKind::PlaneWaveR2c(RealPlaneWavePlan::new(off, req.nb, grid)?)
+        }
         CandidateKind::PaddedSphere => {
             let grid = ProcGrid::new(&[req.p], comm.clone())?;
             let off = Arc::clone(sphere_of(req));
@@ -398,9 +423,18 @@ pub fn auto_window_for(fx: &Fftb, m: &Machine) -> usize {
         PlanKind::PaddedSphere(pl) => {
             (CandidateKind::PaddedSphere, pl.grid_size(), Some(Arc::clone(&pl.offsets)))
         }
+        PlanKind::PlaneWaveR2c(pl) => {
+            (CandidateKind::PlaneWaveR2c, pl.grid_size(), Some(Arc::clone(&pl.offsets)))
+        }
     };
-    let req =
-        TuneRequest { shape: fx.sizes, nb: fx.nb, p, sphere, profile: WorkloadProfile::Forward };
+    let req = TuneRequest {
+        shape: fx.sizes,
+        nb: fx.nb,
+        p,
+        sphere,
+        profile: WorkloadProfile::Forward,
+        real: matches!(kind, CandidateKind::PlaneWaveR2c),
+    };
     auto_window(kind, &req, m)
 }
 
@@ -410,7 +444,7 @@ mod tests {
     use crate::fftb::sphere::{SphereKind, SphereSpec};
 
     fn dense(shape: [usize; 3], nb: usize, p: usize) -> TuneRequest {
-        TuneRequest { shape, nb, p, sphere: None, profile: WorkloadProfile::Forward }
+        TuneRequest { shape, nb, p, sphere: None, profile: WorkloadProfile::Forward, real: false }
     }
 
     fn sphere(n: usize, nb: usize, p: usize, off: Arc<OffsetArray>) -> TuneRequest {
@@ -420,6 +454,7 @@ mod tests {
             p,
             sphere: Some(off),
             profile: WorkloadProfile::Forward,
+            real: false,
         }
     }
 
@@ -478,6 +513,7 @@ mod tests {
             p: 2,
             sphere: Some(Arc::new(spec.offsets())),
             profile: WorkloadProfile::Forward,
+            real: false,
         };
         assert!(enumerate(&req).is_empty());
         assert!(best(&req, &Machine::local_cpu()).is_err());
@@ -579,11 +615,53 @@ mod tests {
             CandidateKind::Pencil { p0: 3, p1: 5 },
             CandidateKind::PlaneWave,
             CandidateKind::PlaneWaveLoop,
+            CandidateKind::PlaneWaveR2c,
             CandidateKind::PaddedSphere,
         ] {
             assert_eq!(CandidateKind::from_label(&kind.label()), Some(kind));
         }
         assert_eq!(CandidateKind::from_label("nonsense"), None);
+    }
+
+    #[test]
+    fn r2c_candidate_beats_c2c_for_real_spheres() {
+        // Acceptance pin: a real-flagged sphere request must surface the
+        // half-spectrum candidate and its modeled cost must beat every c2c
+        // variant on local_cpu (it moves ~(nz/2+1)/nz of the bytes and
+        // runs a half-length z FFT).
+        let n = 16;
+        let spec = SphereSpec::new([n, n, n], 4.0, SphereKind::Centered);
+        let mut req = sphere(n, 4, 4, Arc::new(spec.offsets()));
+        req.real = true;
+        assert!(req.signature().ends_with("|r2c"), "{}", req.signature());
+        assert!(enumerate(&req).contains(&CandidateKind::PlaneWaveR2c));
+        let m = Machine::local_cpu();
+        let ranked = rank_candidates(&req, &m);
+        assert_eq!(ranked[0].kind, CandidateKind::PlaneWaveR2c, "r2c must win for real inputs");
+        let best_of = |k: CandidateKind| {
+            ranked.iter().find(|c| c.kind == k).map(|c| c.predicted).unwrap()
+        };
+        assert!(best_of(CandidateKind::PlaneWaveR2c) < best_of(CandidateKind::PlaneWave));
+
+        // Complex requests on the same sphere never see the r2c candidate.
+        let complex = sphere(n, 4, 4, Arc::clone(req.sphere.as_ref().unwrap()));
+        assert!(!enumerate(&complex).contains(&CandidateKind::PlaneWaveR2c));
+        assert_ne!(complex.signature(), req.signature());
+
+        // Odd nz: the two-for-one packing is infeasible, so only the c2c
+        // family is enumerated even for real requests.
+        let odd_spec = SphereSpec::new([16, 16, 15], 4.0, SphereKind::Centered);
+        let odd = TuneRequest {
+            shape: [16, 16, 15],
+            nb: 1,
+            p: 2,
+            sphere: Some(Arc::new(odd_spec.offsets())),
+            profile: WorkloadProfile::Forward,
+            real: true,
+        };
+        let cands = enumerate(&odd);
+        assert!(!cands.contains(&CandidateKind::PlaneWaveR2c));
+        assert!(cands.contains(&CandidateKind::PlaneWave));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! consults it before searching and records every fresh decision into it;
 //! [`Wisdom::save`] / [`Wisdom::load`] move it through a JSON file.
 //!
-//! The format is versioned (`"version": 3`); unknown or malformed entries
+//! The format is versioned (`"version": 4`); unknown or malformed entries
 //! — and files written by an *unknown* format version — are rejected with
 //! an `Err` at load (never a panic), so a stale file never silently steers
 //! the planner and callers can fall back to a fresh search. Version 2
@@ -23,9 +23,14 @@
 //! many requests the entry has steered — [`Wisdom::note_load`] advances
 //! it, `Tuner::remeasure_after` retires entries past a threshold) and a
 //! `measured_at` provenance stamp (seconds since the UNIX epoch when the
-//! decision was recorded). Version-2 files are **upgraded in place** at
-//! load — their entries parse with `loads = 0` and `measured_at = 0.0` —
-//! so existing wisdom keeps steering; only v1 and unknown versions are
+//! decision was recorded). Version 4 added the `transform` tag: whether
+//! the remembered winner is a real-input (`"r2c"`) or complex (`"c2c"`)
+//! plan — the Hermitian half-spectrum family prices, caches and executes
+//! differently, so a winner measured under one transform must never steer
+//! the other. Version-2 and version-3 files are **upgraded in place** at
+//! load — missing lifecycle fields parse as `loads = 0` / `measured_at =
+//! 0.0`, and the missing transform tag derives from the kind label — so
+//! existing wisdom keeps steering; only v1 and unknown versions are
 //! rejected.
 
 use std::collections::BTreeMap;
@@ -35,10 +40,10 @@ use crate::tuner::search::{Candidate, CandidateKind};
 use crate::util::json::Json;
 
 /// Current on-disk format version.
-const VERSION: f64 = 3.0;
+const VERSION: f64 = 4.0;
 
-/// Latest *previous* version still accepted at load (upgraded in place).
-const UPGRADABLE_VERSION: f64 = 2.0;
+/// Previous versions still accepted at load (upgraded in place).
+const UPGRADABLE_VERSIONS: [f64; 2] = [2.0, 3.0];
 
 /// Seconds since the UNIX epoch, or `0.0` when the system clock predates
 /// it (never a panic) — the provenance stamp for fresh wisdom entries.
@@ -119,6 +124,11 @@ pub struct WisdomEntry {
     /// ([`now_secs`]); `0.0` for entries upgraded from v2 files, which
     /// carried no provenance.
     pub measured_at: f64,
+    /// Whether the winner is a real-input (r2c/c2r) plan — serialized as
+    /// `"transform": "r2c"` / `"c2c"`. Files written before v4 carry no
+    /// tag; the upgrade path derives it from the kind label, which for
+    /// every pre-v4 kind is unambiguous (`"plane-wave-r2c"` did not exist).
+    pub r2c: bool,
 }
 
 impl WisdomEntry {
@@ -215,6 +225,10 @@ impl Wisdom {
             m.insert("probe".into(), Json::Str(e.probe.label().into()));
             m.insert("loads".into(), Json::Num(e.loads as f64));
             m.insert("measured_at".into(), Json::Num(e.measured_at));
+            m.insert(
+                "transform".into(),
+                Json::Str(if e.r2c { "r2c" } else { "c2c" }.into()),
+            );
             entries.insert(sig.clone(), Json::Obj(m));
         }
         root.insert("entries".into(), Json::Obj(entries));
@@ -227,7 +241,7 @@ impl Wisdom {
             .get("version")
             .and_then(Json::as_f64)
             .ok_or_else(|| "wisdom: missing version".to_string())?;
-        if version != VERSION && version != UPGRADABLE_VERSION {
+        if version != VERSION && !UPGRADABLE_VERSIONS.contains(&version) {
             return Err(format!("wisdom: unsupported version {version}"));
         }
         let calibration = match j.get("calibration") {
@@ -313,6 +327,27 @@ impl Wisdom {
                         format!("wisdom: entry `{sig}` measured_at must be a number")
                     })?,
                 };
+                // Transform tag (v4). Absent — the v2/v3 upgrade path —
+                // derives from the kind label (every pre-v4 kind is c2c,
+                // so the derivation is exact); an unknown string is
+                // corruption, not a default.
+                let r2c = match e.get("transform") {
+                    None => kind.contains("r2c"),
+                    Some(v) => match v.as_str() {
+                        Some("r2c") => true,
+                        Some("c2c") => false,
+                        Some(other) => {
+                            return Err(format!(
+                                "wisdom: entry `{sig}` has unknown transform `{other}`"
+                            ))
+                        }
+                        None => {
+                            return Err(format!(
+                                "wisdom: entry `{sig}` transform must be a string"
+                            ))
+                        }
+                    },
+                };
                 entries.insert(
                     sig.clone(),
                     WisdomEntry {
@@ -324,6 +359,7 @@ impl Wisdom {
                         probe,
                         loads,
                         measured_at,
+                        r2c,
                     },
                 );
             }
@@ -368,6 +404,7 @@ mod tests {
                 probe: Probe::Model,
                 loads: 0,
                 measured_at: 0.0,
+                r2c: false,
             },
         );
         w.record(
@@ -381,6 +418,7 @@ mod tests {
                 probe: Probe::Forward,
                 loads: 17,
                 measured_at: 1.7e9,
+                r2c: false,
             },
         );
         w.record(
@@ -394,6 +432,21 @@ mod tests {
                 probe: Probe::Scf,
                 loads: 3,
                 measured_at: 1.7e9 + 60.0,
+                r2c: false,
+            },
+        );
+        w.record(
+            "16x16x16|nb=4|p=4|sphere:2109|r2c".into(),
+            WisdomEntry {
+                kind: "plane-wave-r2c".into(),
+                window: 2,
+                worker: false,
+                seconds: 0.31,
+                measured: true,
+                probe: Probe::Forward,
+                loads: 5,
+                measured_at: 1.7e9 + 120.0,
+                r2c: true,
             },
         );
         w
@@ -517,8 +570,53 @@ mod tests {
         assert!(e.worker && e.measured, "v2 payload fields must survive the upgrade");
         // Saving re-serializes at the current version.
         let text = w.to_json().to_string();
-        assert!(text.contains("\"version\": 3") || text.contains("\"version\":3"), "{text}");
+        assert!(text.contains("\"version\": 4") || text.contains("\"version\":4"), "{text}");
         assert_eq!(Wisdom::from_json(&Json::parse(&text).unwrap()).unwrap(), w);
+    }
+
+    #[test]
+    fn v3_files_are_upgraded_in_place() {
+        // A version-3 file (pre-transform-tag format) must load with the
+        // transform derived from the kind label: every pre-v4 kind is c2c.
+        let v3 = r#"{"version": 3, "entries": {"8x8x8|nb=2|p=2|sphere:251":
+            {"kind": "plane-wave", "window": 2, "seconds": 0.002,
+             "worker": false, "probe": "forward", "loads": 9,
+             "measured_at": 1.6e9}}}"#;
+        let w = Wisdom::from_json(&Json::parse(v3).unwrap()).unwrap();
+        let e = w.lookup("8x8x8|nb=2|p=2|sphere:251").unwrap();
+        assert!(!e.r2c, "pre-v4 kinds are all complex transforms");
+        assert_eq!((e.loads, e.measured_at), (9, 1.6e9), "v3 lifecycle fields survive");
+        // Saving re-serializes at the current version with an explicit tag.
+        let text = w.to_json().to_string();
+        assert!(text.contains("\"version\": 4") || text.contains("\"version\":4"), "{text}");
+        assert!(text.contains("\"transform\": \"c2c\"") || text.contains("\"transform\":\"c2c\""));
+        assert_eq!(Wisdom::from_json(&Json::parse(&text).unwrap()).unwrap(), w);
+    }
+
+    #[test]
+    fn transform_tag_round_trips_and_derives_from_kind() {
+        // The explicit tag survives a round trip on both families.
+        let w = sample();
+        let back = Wisdom::from_json(&Json::parse(&w.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.lookup("16x16x16|nb=4|p=4|sphere:2109|r2c").unwrap().r2c);
+        assert!(!back.lookup("32x32x32|nb=8|p=4|sphere:4169").unwrap().r2c);
+        // A tagless entry whose kind *is* the r2c family (a hand-trimmed
+        // v4 file) still lands on the real side via the kind derivation.
+        let doc = r#"{"version": 4, "entries": {"k|r2c":
+            {"kind": "plane-wave-r2c", "window": 1, "seconds": 0.5}}}"#;
+        let w = Wisdom::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert!(w.lookup("k|r2c").unwrap().r2c);
+    }
+
+    #[test]
+    fn unknown_transform_values_are_rejected() {
+        let bad = r#"{"version": 4, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5, "transform": "quaternion"}}}"#;
+        let got = Wisdom::from_json(&Json::parse(bad).unwrap());
+        assert!(matches!(&got, Err(e) if e.contains("transform")), "{got:?}");
+        let non_string = r#"{"version": 4, "entries": {"k":
+            {"kind": "plane-wave", "window": 1, "seconds": 0.5, "transform": true}}}"#;
+        assert!(Wisdom::from_json(&Json::parse(non_string).unwrap()).is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use fftb::fft::complex::{Complex, ZERO};
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::grid::ProcGrid;
 use fftb::fftb::plan::testutil::phased;
-use fftb::fftb::plan::{Fftb, PlanKind, PlaneWavePlan, SlabPencilPlan};
+use fftb::fftb::plan::{Fftb, PlanKind, PlaneWavePlan, RealPlaneWavePlan, SlabPencilPlan};
 use fftb::fftb::sphere::{SphereKind, SphereSpec};
 
 /// Varied block extents with systematic empty blocks (extent 0 whenever
@@ -171,6 +171,93 @@ fn perturbed_planewave_is_bit_identical() {
                     &base,
                     &got,
                     &format!("plane-wave p={p} seed={seed} worker={worker}"),
+                );
+            }
+        }
+    }
+}
+
+/// The Hermitian half-spectrum (r2c/c2r) plan under perturbation: the
+/// half-traffic exchange carries different per-rank block extents than the
+/// c2c plan (nh = nz/2 + 1 z-planes, cyclically split), so it exercises
+/// its own uneven wire pattern. Forward and the full round trip must be
+/// bit-identical across seeds and worker modes.
+#[test]
+fn perturbed_r2c_round_trip_is_bit_identical() {
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    let nb = 2usize;
+    for p in [2usize, 3, 5] {
+        let off = Arc::clone(&off);
+        let body = move |worker: bool| {
+            let off = Arc::clone(&off);
+            move |comm: fftb::comm::Comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let mut plan =
+                    RealPlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+                plan.set_tuning(CommTuning::with_window(2).with_worker(worker));
+                let reals: Vec<f64> =
+                    phased(plan.input_len(), grid.rank() as u64).iter().map(|c| c.re).collect();
+                let (cube, _) = plan.forward(&backend, reals);
+                let (back, _) = plan.inverse(&backend, cube.clone());
+                cube.into_iter()
+                    .chain(back.into_iter().map(|r| Complex::new(r, 0.0)))
+                    .collect::<Vec<Complex>>()
+            }
+        };
+        let base = run_world(p, body(false));
+        let threaded = run_world(p, body(true));
+        assert_bits_eq(&base, &threaded, &format!("r2c p={p} worker-on unperturbed"));
+        for seed in 0..8u64 {
+            for worker in [false, true] {
+                let got = run_world_perturbed(p, seed, body(worker));
+                assert_bits_eq(&base, &got, &format!("r2c p={p} seed={seed} worker={worker}"));
+            }
+        }
+    }
+}
+
+/// A k-point-offset sphere (k = [0.25, 0, 0]) through the c2c plane-wave
+/// plan under perturbation: the shifted sphere's asymmetric z-runs produce
+/// per-rank extents no Γ-point test covers. Bit-identical across seeds
+/// and worker modes.
+#[test]
+fn perturbed_offset_sphere_planewave_is_bit_identical() {
+    let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offset([0.25, 0.0, 0.0]));
+    assert_ne!(
+        off.fingerprint(),
+        spec.offsets().fingerprint(),
+        "the offset sphere must be a distinct workload"
+    );
+    let nb = 2usize;
+    for p in [2usize, 3, 5] {
+        let off = Arc::clone(&off);
+        let body = move |worker: bool| {
+            let off = Arc::clone(&off);
+            move |comm: fftb::comm::Comm| {
+                let grid = ProcGrid::new(&[p], comm).unwrap();
+                let backend = RustFftBackend::new();
+                let mut plan =
+                    PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap();
+                plan.set_tuning(CommTuning::with_window(2).with_worker(worker));
+                let input = phased(plan.input_len(), grid.rank() as u64);
+                let (spec_out, _) = plan.forward(&backend, input);
+                let (back, _) = plan.inverse(&backend, spec_out.clone());
+                spec_out.into_iter().chain(back).collect::<Vec<Complex>>()
+            }
+        };
+        let base = run_world(p, body(false));
+        let threaded = run_world(p, body(true));
+        assert_bits_eq(&base, &threaded, &format!("offset-sphere p={p} worker-on unperturbed"));
+        for seed in 0..8u64 {
+            for worker in [false, true] {
+                let got = run_world_perturbed(p, seed, body(worker));
+                assert_bits_eq(
+                    &base,
+                    &got,
+                    &format!("offset-sphere p={p} seed={seed} worker={worker}"),
                 );
             }
         }

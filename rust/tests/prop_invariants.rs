@@ -14,10 +14,11 @@ use fftb::fft::complex::{max_abs_diff, Complex, ZERO};
 use fftb::fft::dft::{naive_dft, Direction};
 use fftb::fftb::grid::{cyclic, ProcGrid};
 use fftb::fftb::layout::Layout;
+use fftb::fft::real::{irfft, rfft};
 use fftb::fftb::plan::testutil::{gather_cube_z, phased, scatter_cube_x};
-use fftb::fftb::plan::SlabPencilPlan;
+use fftb::fftb::plan::{PlaneWavePlan, RealPlaneWavePlan, SlabPencilPlan};
 use fftb::fftb::backend::RustFftBackend;
-use fftb::fftb::sphere::{SphereKind, SphereSpec};
+use fftb::fftb::sphere::{OffsetArray, SphereKind, SphereSpec};
 use fftb::util::prng::Prng;
 
 const CASES: usize = 25;
@@ -331,6 +332,175 @@ fn prop_batching_driver_pipeline_depths_agree() {
                 }
             }
         }
+    }
+}
+
+/// Split global packed real sphere coefficients into rank `r`'s packed
+/// vector under the x-cyclic distribution (batch fastest) — the real
+/// mirror of `scatter_cube_x` for sphere inputs.
+fn scatter_sphere_real(
+    off: &OffsetArray,
+    packed: &[f64],
+    nb: usize,
+    p: usize,
+    r: usize,
+) -> Vec<f64> {
+    let loc = off.restrict_x_cyclic(p, r);
+    let mut out = Vec::with_capacity(nb * loc.total());
+    for y in 0..off.ny {
+        for lx in 0..loc.nx {
+            let gx = cyclic::local_to_global(lx, p, r);
+            let e0 = off.col_offset(gx, y);
+            let n = off.col_len(gx, y);
+            out.extend_from_slice(&packed[nb * e0..nb * (e0 + n)]);
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_rfft_matches_naive_and_is_hermitian() {
+    // The serial two-for-one r2c against the naive DFT of the embedded
+    // real signal: the half spectrum matches bin for bin, the discarded
+    // bins are exactly the conjugate mirror (Hermitian symmetry), and
+    // c2r ∘ r2c is the identity — for random even lengths.
+    let mut rng = Prng::new(0x2C2C);
+    for case in 0..CASES {
+        let n = 2 * (1 + rng.next_below(48)); // even, 2..96
+        let x: Vec<f64> = (0..n).map(|_| rng.next_signed()).collect();
+        let xc: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        let want = naive_dft(&xc, Direction::Forward);
+        let half = rfft(&x).unwrap();
+        assert_eq!(half.len(), n / 2 + 1);
+        for (k, h) in half.iter().enumerate() {
+            let err = (*h - want[k]).abs();
+            assert!(err < 1e-8 * n as f64, "case {case}: n={n} k={k} err={err}");
+        }
+        for k in 0..n {
+            let err = (want[k] - want[(n - k) % n].conj()).abs();
+            assert!(err < 1e-8 * n as f64, "case {case}: n={n} mirror k={k} err={err}");
+        }
+        let back = irfft(&half, n).unwrap();
+        let err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(err < 1e-9 * n as f64, "case {case}: n={n} round trip err={err}");
+    }
+}
+
+#[test]
+fn prop_distributed_r2c_gauntlet() {
+    // The distributed r2c plane-wave plan over random spheres, batch
+    // counts and world sizes. Five properties per case:
+    //   1. forward == the c2c plan on every Hermitian-unique bin;
+    //   2. the gathered output's self-conjugate planes (kz = 0 and the
+    //      Nyquist plane) satisfy H[x,y,kz] = conj(H[-x,-y,kz]);
+    //   3. linearity over real scalars: F(a x + y) = a F(x) + F(y);
+    //   4. Parseval with plane weights (1 on the self-conjugate planes,
+    //      2 elsewhere): sum w |H|^2 = n^3 * sum |x|^2;
+    //   5. c2r ∘ r2c restores the packed real input.
+    let mut rng = Prng::new(0x47C2);
+    for case in 0..6 {
+        let n = 6 + 2 * rng.next_below(6); // even, 6..16
+        let h = n / 2;
+        let nh = h + 1;
+        let radius = 2.0 + rng.next_f64() * (n as f64 / 2.0 - 2.0);
+        let kind = if rng.next_f64() < 0.5 { SphereKind::Centered } else { SphereKind::Wrapped };
+        let spec = SphereSpec::new([n, n, n], radius, kind);
+        let off = Arc::new(spec.offsets());
+        let nb = 1 + rng.next_below(3);
+        let p = 1 + rng.next_below(4.min(nh.min(n)));
+        let xs: Vec<f64> = (0..nb * off.total()).map(|_| rng.next_signed()).collect();
+        let ys: Vec<f64> = (0..nb * off.total()).map(|_| rng.next_signed()).collect();
+        let a = rng.next_signed();
+
+        let (off2, xs2, ys2) = (Arc::clone(&off), xs.clone(), ys.clone());
+        let outs = run_world(p, move |comm| {
+            let grid = ProcGrid::new(&[p], comm).unwrap();
+            let backend = RustFftBackend::new();
+            let r = grid.rank();
+            let lx = scatter_sphere_real(&off2, &xs2, nb, p, r);
+            let ly = scatter_sphere_real(&off2, &ys2, nb, p, r);
+            let rp = RealPlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+            let cp = PlaneWavePlan::new(Arc::clone(&off2), nb, Arc::clone(&grid)).unwrap();
+
+            let (hx, _) = rp.forward(&backend, lx.clone());
+            let (hy, _) = rp.forward(&backend, ly.clone());
+            let mixed: Vec<f64> = lx.iter().zip(&ly).map(|(x, y)| a * x + y).collect();
+            let (hmix, _) = rp.forward(&backend, mixed);
+            let lin_err = hmix
+                .iter()
+                .zip(hx.iter().zip(&hy))
+                .map(|(m, (x, y))| (*m - (*x * a + *y)).abs())
+                .fold(0.0f64, f64::max);
+
+            let clocal: Vec<Complex> = lx.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let (ccube, _) = cp.forward(&backend, clocal);
+
+            let (back, _) = rp.inverse(&backend, hx.clone());
+            let rt_err =
+                back.iter().zip(&lx).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+            (hx, ccube, lin_err, rt_err)
+        });
+
+        let scale = 1e-8 * (n * n * n) as f64;
+        let hcubes: Vec<Vec<Complex>> = outs.iter().map(|o| o.0.clone()).collect();
+        let ccubes: Vec<Vec<Complex>> = outs.iter().map(|o| o.1.clone()).collect();
+        let half = gather_cube_z(&hcubes, nb, [n, n, nh], p);
+        let full = gather_cube_z(&ccubes, nb, [n, n, n], p);
+
+        // 1. c2c agreement on the carried half.
+        let err = half
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let e = i / nb;
+                let b = i % nb;
+                let (x, yz) = (e % n, e / n);
+                let (y, kz) = (yz % n, yz / n);
+                (*v - full[b + nb * (x + n * (y + n * kz))]).abs()
+            })
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-11, "case {case}: n={n} nb={nb} p={p} vs c2c err={err}");
+
+        // 2. Hermitian symmetry of the self-conjugate planes.
+        for kz in [0, h] {
+            for y in 0..n {
+                for x in 0..n {
+                    for b in 0..nb {
+                        let v = half[b + nb * (x + n * (y + n * kz))];
+                        let (mx, my) = ((n - x) % n, (n - y) % n);
+                        let m = half[b + nb * (mx + n * (my + n * kz))];
+                        let e = (v - m.conj()).abs();
+                        assert!(e < scale, "case {case}: plane kz={kz} ({x},{y}) err={e}");
+                    }
+                }
+            }
+        }
+
+        // 3. Linearity (checked per rank on local outputs).
+        let lin = outs.iter().map(|o| o.2).fold(0.0f64, f64::max);
+        assert!(lin < scale, "case {case}: linearity err={lin}");
+
+        // 4. Parseval: the unnormalized forward of the zero-padded sphere,
+        //    with mirror planes counted twice.
+        let ex: f64 = xs.iter().map(|v| v * v).sum();
+        let mut ef = 0.0f64;
+        for kz in 0..nh {
+            let w = if kz == 0 || kz == h { 1.0 } else { 2.0 };
+            for e in 0..n * n {
+                for b in 0..nb {
+                    ef += w * half[b + nb * (e + n * n * kz)].norm_sqr();
+                }
+            }
+        }
+        let want = (n * n * n) as f64 * ex;
+        assert!(
+            (ef - want).abs() < 1e-8 * want.max(1.0),
+            "case {case}: Parseval ef={ef} want={want}"
+        );
+
+        // 5. Round trip.
+        let rt = outs.iter().map(|o| o.3).fold(0.0f64, f64::max);
+        assert!(rt < 1e-11, "case {case}: round trip err={rt}");
     }
 }
 

@@ -124,6 +124,74 @@ fn coalesced_flush_is_bit_identical_to_sequential_per_tenant_runs() {
     }
 }
 
+/// Two k-point lanes: distinct crystal momenta get distinct lanes (their
+/// offset spheres fingerprint apart even when the shift moves no grid
+/// point), the same k re-requested lands back in its existing lane, and
+/// one flush coalesces each k-lane's tenants separately — with every band
+/// bit-identical to a single-band plan on that k's sphere.
+#[test]
+fn two_kpoint_lanes_coalesce_separately_and_share_by_fingerprint() {
+    let p = 2usize;
+    run_world(p, move |comm| {
+        let spec = SphereSpec::new([8, 8, 8], 3.0, SphereKind::Wrapped);
+        let k1 = Arc::new(spec.offset([0.25, 0.0, 0.0]));
+        let k2 = Arc::new(spec.offset([0.0, 0.25, 0.0]));
+        let mut svc = service_on(p, &comm, CommTuning::default());
+        let a = svc.register_tenant("a");
+        let b = svc.register_tenant("b");
+        let lane1 = svc.sphere_lane(Arc::clone(&k1)).unwrap();
+        let lane2 = svc.sphere_lane(Arc::clone(&k2)).unwrap();
+        assert_ne!(lane1, lane2, "distinct k-points must get distinct lanes");
+        assert_eq!(
+            svc.sphere_lane(Arc::clone(&k1)).unwrap(),
+            lane1,
+            "the same k must land back in its lane"
+        );
+
+        let backend = RustFftBackend::new();
+        // Sequence ids are handed out in submission order, so inputs[seq]
+        // is the request a collected (seq, slot) pair answers.
+        let mut inputs = Vec::new();
+        for (t, lane, seed) in
+            [(a, lane1, 1u64), (b, lane1, 2), (a, lane2, 3), (b, lane2, 4)]
+        {
+            let mut slot = svc.checkout(t, lane, Direction::Forward).unwrap();
+            let data = phased(slot.len(), seed);
+            slot.data_mut().copy_from_slice(&data);
+            inputs.push((lane, data));
+            svc.submit(t, lane, Direction::Forward, slot).unwrap();
+        }
+        assert_eq!(svc.flush(&backend, Direction::Forward), 4);
+
+        // One coalesced record per k-lane, each serving both tenants.
+        let recs = svc.flush_records();
+        let last2 = &recs[recs.len() - 2..];
+        assert_ne!(last2[0].lane, last2[1].lane);
+        for rec in last2 {
+            assert_eq!((rec.jobs, rec.tenants), (2, 2), "lane {:#x}", rec.lane);
+        }
+
+        // Ground truth per k: a single-band plan on that k's own sphere.
+        let grid = ProcGrid::new(&[p], comm.clone()).unwrap();
+        let single1 = PlaneWavePlan::new(Arc::clone(&k1), 1, Arc::clone(&grid)).unwrap();
+        let single2 = PlaneWavePlan::new(Arc::clone(&k2), 1, grid).unwrap();
+        for t in [a, b] {
+            let got = svc.collect(t);
+            assert_eq!(got.len(), 2, "one band per lane per tenant");
+            for (seq, slot) in &got {
+                let (lane, data) = &inputs[*seq as usize];
+                let plan = if *lane == lane1 { &single1 } else { &single2 };
+                let (want, _) = plan.forward(&backend, data.clone());
+                assert_slots_bits_eq(
+                    slot.data(),
+                    &want,
+                    &format!("p={p} lane {lane:#x} seq {seq}"),
+                );
+            }
+        }
+    });
+}
+
 /// Quota exhaustion and the backlog window reject with typed errors
 /// through the public API, release the refused request's resources, and
 /// recover as soon as a slot drops / a flush runs — never a panic, never

@@ -100,6 +100,69 @@ fn distinct_spheres_never_share_plans_or_wisdom() {
 }
 
 #[test]
+fn kpoint_offset_spheres_separate_plans_and_wisdom() {
+    // Γ-offset spheres reduce exactly to the plain sphere (same
+    // fingerprint → the same wisdom entry and cached plan object), while
+    // every distinct k gets its own plan-cache and wisdom identity — even
+    // when the shift moves no grid point across the cutoff.
+    let n = 8usize;
+    let spec = SphereSpec::new([n, n, n], 3.0, SphereKind::Wrapped);
+    let gamma = Arc::new(spec.offsets());
+    let gamma_off = Arc::new(spec.offset([0.0; 3]));
+    assert_eq!(gamma.fingerprint(), gamma_off.fingerprint(), "Γ must reduce exactly");
+    let k1 = Arc::new(spec.offset([0.25, 0.0, 0.0]));
+    let k2 = Arc::new(spec.offset([0.0, 0.25, 0.0]));
+    assert_ne!(k1.fingerprint(), gamma.fingerprint());
+    assert_ne!(k1.fingerprint(), k2.fingerprint());
+    run_world(2, move |comm| {
+        let mut tuner = Tuner::local();
+        let a = tuner.plan_auto([n, n, n], 1, Some(Arc::clone(&gamma)), &comm, None).unwrap();
+        let b =
+            tuner.plan_auto([n, n, n], 1, Some(Arc::clone(&gamma_off)), &comm, None).unwrap();
+        assert!(b.cache_hit, "the Γ-offset sphere must be served the plain sphere's plan");
+        assert!(b.from_wisdom, "and its wisdom entry");
+        assert!(Arc::ptr_eq(&a.plan, &b.plan));
+        let c = tuner.plan_auto([n, n, n], 1, Some(Arc::clone(&k1)), &comm, None).unwrap();
+        assert!(!c.cache_hit && !c.from_wisdom, "a shifted k must plan afresh");
+        let d = tuner.plan_auto([n, n, n], 1, Some(Arc::clone(&k2)), &comm, None).unwrap();
+        assert!(!d.cache_hit && !d.from_wisdom, "each k separately");
+        assert!(!Arc::ptr_eq(&c.plan, &d.plan));
+        assert_eq!(tuner.cache.len(), 3, "Γ + two k-points = three cached plans");
+    });
+}
+
+#[test]
+fn real_requests_get_their_own_wisdom_and_plans() {
+    // plan_auto_real must never share plan-cache or wisdom state with a
+    // complex request on the same sphere: the signatures differ (`|r2c`),
+    // the PlanKey carries the transform tag, and the winning kind is the
+    // half-spectrum family.
+    let n = 8usize;
+    let spec = SphereSpec::new([n, n, n], 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    run_world(2, move |comm| {
+        let mut tuner = Tuner::local();
+        let c2c = tuner.plan_auto([n, n, n], 2, Some(Arc::clone(&off)), &comm, None).unwrap();
+        let r2c = tuner.plan_auto_real([n, n, n], 2, Arc::clone(&off), &comm, None).unwrap();
+        assert!(!r2c.cache_hit, "real requests must not be served the complex plan");
+        assert!(!r2c.from_wisdom, "nor the complex wisdom entry");
+        assert_eq!(r2c.choice.kind.label(), "plane-wave-r2c");
+        assert!(!Arc::ptr_eq(&c2c.plan, &r2c.plan));
+        assert_eq!(tuner.cache.len(), 2);
+        // Repeat real request: hits the r2c plan and wisdom, not the c2c.
+        let again = tuner.plan_auto_real([n, n, n], 2, Arc::clone(&off), &comm, None).unwrap();
+        assert!(again.cache_hit && again.from_wisdom);
+        assert!(Arc::ptr_eq(&again.plan, &r2c.plan));
+        // The r2c plan executes end to end through the embedded adapter.
+        let backend = RustFftBackend::new();
+        let input = vec![ZERO; r2c.plan.input_len()];
+        let (out, _) = r2c.plan.execute(&backend, input, Direction::Forward);
+        assert_eq!(out.len(), r2c.plan.output_len());
+        r2c.plan.recycle(out);
+    });
+}
+
+#[test]
 fn plan_auto_repeat_hits_cache_and_wisdom() {
     run_world(2, |comm| {
         let mut tuner = Tuner::local();
@@ -207,7 +270,7 @@ fn wisdom_v3_lifecycle_survives_a_restart() {
     let loaded = Wisdom::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
     assert!(
-        text.contains("\"version\": 3") || text.contains("\"version\":3"),
+        text.contains("\"version\": 4") || text.contains("\"version\":4"),
         "the file must carry the current format version: {text}"
     );
     let back = loaded.lookup(sig).unwrap();
@@ -246,7 +309,7 @@ fn stale_v2_wisdom_upgrades_in_place_and_keeps_steering() {
     let text = std::fs::read_to_string(&path).unwrap();
     std::fs::remove_file(&path).ok();
     assert!(
-        text.contains("\"version\": 3") || text.contains("\"version\":3"),
+        text.contains("\"version\": 4") || text.contains("\"version\":4"),
         "re-saving must upgrade the file to the current version: {text}"
     );
 }
