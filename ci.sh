@@ -26,11 +26,16 @@
 #                  tuner, coordinator and model trees
 #   smoke          actually RUN the SCF example on p=2: the end-to-end
 #                  DFT-through-the-autotuner scenario (charge conservation,
-#                  steady-state plan-cache hits, zero steady-state allocs,
+#                  steady-state plan-cache hits, zero steady-state allocs —
+#                  now including the per-iteration Hartree round trip —
 #                  wisdom round trip), plus --worker: the depth-2 pipeline
 #                  smoke — the pinned-plan SCF with the exchange helper
 #                  worker enabled must be bit-identical to worker-off, and
-#                  the coordinator's two-deep pipeline to depth 1; then the
+#                  the coordinator's two-deep pipeline to depth 1; plus
+#                  --converge: the convergence gate — a long SCF on the
+#                  smoke lattice must drive max_residual below 1e-8 with
+#                  the total energy decreasing monotonically once the
+#                  density mixing settles, bit-identical across p=2; then the
 #                  multi-tenant service smoke on p=2: two SCF tenants plus
 #                  a raw batched-sphere tenant coalescing through one
 #                  service (typed quota rejection, three-tenant flushes,
@@ -71,10 +76,10 @@ if [ "$PALLAS_NIGHTLY" != "only" ]; then
     cargo bench --no-run --quiet
     cargo build --examples --release --quiet
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
-    cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4 --worker
+    cargo run --release --quiet --example scf_distributed -- --p 2 --iters 4 --worker --converge
     cargo run --release --quiet --example service_multi_tenant -- --p 2 --iters 3
     cargo run --release --quiet --example real_kpoint -- --p 2
-    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker + service smoke + real/k-point smoke)"
+    echo "ci.sh: OK (fmt + clippy + pallas-lint + build + test + doctest + bench-compile + examples + doc + scf smoke incl. depth-2 worker + convergence gate + service smoke + real/k-point smoke)"
 fi
 
 if [ -n "$PALLAS_NIGHTLY" ]; then

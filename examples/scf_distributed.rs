@@ -21,8 +21,14 @@
 //! software pipeline pushed through batched flushes (depth 2 bit-identical
 //! to depth 1, overlap reported). CI runs this section on p=2.
 //!
+//! With `--converge` the example appends the convergence gate: a long SCF
+//! run on the small smoke lattice that must drive `max_residual` below
+//! 1e-8 and whose total energy must decrease monotonically once the
+//! density mixing has settled (`delta_rho/nb < 1e-3`). CI runs this
+//! section on p=2.
+//!
 //! Run: `cargo run --release --example scf_distributed [--p N] [--iters K]
-//!       [--empirical] [--wisdom PATH] [--worker]`
+//!       [--empirical] [--wisdom PATH] [--worker] [--converge]`
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -51,6 +57,7 @@ fn main() {
     let iters = arg_usize("--iters", 6);
     let empirical = std::env::args().any(|a| a == "--empirical");
     let worker_smoke = std::env::args().any(|a| a == "--worker");
+    let converge = std::env::args().any(|a| a == "--converge");
     let wisdom_path: PathBuf = std::env::args()
         .collect::<Vec<_>>()
         .iter()
@@ -106,15 +113,27 @@ fn main() {
         res.plan_kind, res.window, res.from_wisdom, res.measured
     );
     println!(
-        "{:>5} {:>14} {:>12} {:>12} {:>10} {:>8}",
-        "iter", "charge", "delta_rho", "residual", "cache", "alloc"
+        "{:>5} {:>14} {:>12} {:>12} {:>14} {:>10} {:>8}",
+        "iter", "charge", "delta_rho", "residual", "energy", "cache", "alloc"
     );
     for s in &res.history {
         println!(
-            "{:>5} {:>14.8} {:>12.3e} {:>12.3e} {:>10} {:>8}",
-            s.iter, s.charge, s.delta_rho, s.max_residual, s.plan_cache_hit, s.alloc_bytes
+            "{:>5} {:>14.8} {:>12.3e} {:>12.3e} {:>14.8} {:>10} {:>8}",
+            s.iter,
+            s.charge,
+            s.delta_rho,
+            s.max_residual,
+            s.energy.total,
+            s.plan_cache_hit,
+            s.alloc_bytes
         );
     }
+    let e = &res.energy;
+    println!(
+        "energy breakdown: kinetic {:.8}  external {:.8}  hartree {:.8}  mean-field {:.8}  \
+         total {:.8}",
+        e.kinetic, e.external, e.hartree, e.mean_field, e.total
+    );
     println!("plan-cache hit rate over all transforms: {hit_rate:.2}, alloc {alloc} B");
     println!();
 
@@ -251,6 +270,73 @@ fn main() {
             "worker-on SCF bit-identical to worker-off; depth-2 pipeline bit-identical \
              to depth 1 (overlap {overlap_total} ns across ranks)"
         );
+    }
+
+    // ---- convergence gate (opt-in: --converge; CI runs it on p=2).
+    if converge {
+        // The small smoke lattice (the one tests/scf_distributed.rs pins),
+        // run long enough for the residual to bottom out: the loop may
+        // early-exit on the density tolerance, and the gates below demand
+        // a genuinely converged fixed point, not just a settled mixer.
+        let cn = 12usize;
+        let ca = 8.0;
+        let cecut = 2.0;
+        let cnb = 2usize;
+        let citers = arg_usize("--converge-iters", 1200);
+        let outs = run_world(p, move |comm| {
+            let lat = Lattice::new(ca, cn, cecut);
+            let backend = RustFftBackend::new();
+            let pot = GaussianWells::single(2.0, 1.4);
+            let opts = ScfOptions {
+                max_iters: citers,
+                tol: 1e-12,
+                coupling: 0.3,
+                ..Default::default()
+            };
+            let mut runner = ScfRunner::new(lat, cnb, &pot, &comm, &backend, opts)
+                .expect("the tuner must find a feasible plan");
+            runner.run(&backend)
+        });
+        let r0 = &outs[0];
+        let last = r0.history.last().expect("the convergence run must iterate");
+        println!("== convergence gate ==");
+        println!(
+            "{cn}^3 grid, {cnb} bands: {} iterations, final residual {:.3e}, \
+             final energy {:.10}",
+            r0.iterations, last.max_residual, r0.energy.total
+        );
+        for (r, res_r) in outs.iter().enumerate() {
+            let fin = res_r.history.last().unwrap();
+            assert!(
+                fin.max_residual < 1e-8,
+                "rank {r}: residual stalled at {:.3e} after {} iterations",
+                fin.max_residual,
+                res_r.iterations
+            );
+            // Once the density mixing has settled, the total energy must
+            // walk downhill to the fixed point (tiny fp slack).
+            let settle = res_r
+                .history
+                .iter()
+                .position(|s| s.delta_rho / cnb as f64 < 1e-3)
+                .expect("the mixer must settle below 1e-3");
+            for w in res_r.history[settle..].windows(2) {
+                assert!(
+                    w[1].energy.total <= w[0].energy.total + 1e-7,
+                    "rank {r}: energy rose {:.3e} -> {:.3e} at iter {}",
+                    w[0].energy.total,
+                    w[1].energy.total,
+                    w[1].iter
+                );
+            }
+            // All ranks agree on the converged energy to the last bit.
+            assert_eq!(
+                res_r.energy.total.to_bits(),
+                r0.energy.total.to_bits(),
+                "rank {r}: converged energy differs from rank 0"
+            );
+        }
+        println!("residual < 1e-8 and energy monotone after settling on all {p} ranks");
     }
 
     println!();

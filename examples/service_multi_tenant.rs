@@ -6,7 +6,8 @@
 //!
 //! 1. an [`ScfServiceDriver`] hosts tenants "scf-a" (2 bands) and "scf-b"
 //!    (3 bands) on the same plane-wave sphere — each lockstep iteration
-//!    runs THREE coalesced flushes total, no matter how many tenants;
+//!    runs FIVE coalesced flushes total, no matter how many tenants
+//!    (three band flushes plus the Hartree inverse/forward round trip);
 //! 2. a third tenant, "aux-bands", submits raw sphere transforms through
 //!    [`TransformService`] *before* each `step`, so its jobs ride the
 //!    iteration's first forward flush — three tenants, one fused exchange;
@@ -132,14 +133,21 @@ fn main() {
         // --- audit trail: every flush coalesced, the first of each
         // iteration across all three tenants.
         let recs: Vec<_> = driver.service().flush_records().to_vec();
-        assert_eq!(recs.len(), 3 * iters, "three coalesced flushes per iteration");
+        assert_eq!(recs.len(), 5 * iters, "five coalesced flushes per iteration");
         for (i, r) in recs.iter().enumerate() {
             assert!(r.tenants >= 2, "flush {i} served a single tenant");
         }
         for it in 0..iters {
-            let first = &recs[3 * it];
-            assert_eq!(first.tenants, 3, "iteration {it}: aux missed the forward flush");
-            assert_eq!(first.jobs, 2 + 3 + aux_bands, "iteration {it}: wrong batch size");
+            let chunk = &recs[5 * it..5 * (it + 1)];
+            assert_eq!(chunk[0].tenants, 3, "iteration {it}: aux missed the forward flush");
+            assert_eq!(chunk[0].jobs, 2 + 3 + aux_bands, "iteration {it}: wrong batch size");
+            // The Hartree round trip coalesces one density job per active
+            // SCF tenant: an inverse (r->G) then a forward (G->r) flush.
+            assert_eq!(chunk[3].dir, Direction::Inverse, "iteration {it}: Hartree order");
+            assert_eq!(chunk[4].dir, Direction::Forward, "iteration {it}: Hartree order");
+            for r in &chunk[3..] {
+                assert_eq!(r.jobs, 2, "iteration {it}: one Hartree job per SCF tenant");
+            }
         }
 
         let metrics_rows: Vec<String> = driver

@@ -256,6 +256,57 @@ mod tests {
     }
 
     #[test]
+    fn ritz_rotation_preserves_orthonormality() {
+        // The Rayleigh-Ritz step rotates an orthonormal band block by the
+        // unitary eigenvector matrix of the subspace Hamiltonian; the
+        // rotated (Ritz) vectors must still have an identity Gram matrix,
+        // and their Rayleigh quotients must be the Ritz values.
+        run_world(2, |comm| {
+            let nb = 4;
+            let npts = 40;
+            let mut psi = random_bands(nb, npts, 11 + comm.rank() as u64);
+            orthonormalize(&comm, &mut psi, nb);
+            // A surrogate "H psi": any linear image of psi gives a
+            // Hermitian subspace matrix psi^H (H psi) when H is Hermitian;
+            // emulate one by mixing bands with a fixed Hermitian stencil.
+            let mut hpsi = psi.clone();
+            for chunk in hpsi.chunks_exact_mut(nb) {
+                let orig: Vec<Complex> = chunk.to_vec();
+                for (b, c) in chunk.iter_mut().enumerate() {
+                    *c = orig[b].scale(1.0 + b as f64);
+                    if b + 1 < nb {
+                        *c += orig[b + 1].scale(0.25);
+                    }
+                    if b > 0 {
+                        *c += orig[b - 1].scale(0.25);
+                    }
+                }
+            }
+            let m = subspace_matrix(&comm, &psi, &hpsi, nb);
+            assert!(m.hermiticity_err() < 1e-12, "subspace matrix must be Hermitian");
+            let (theta, u) = eigh_jacobi(&m, 30);
+            rotate_bands(&mut psi, nb, &u);
+            rotate_bands(&mut hpsi, nb, &u);
+            // Orthonormality survives the unitary rotation.
+            let s = subspace_matrix(&comm, &psi, &psi, nb);
+            let id = CMat::identity(nb);
+            assert!(s.max_abs_diff(&id) < 1e-10, "gram err {}", s.max_abs_diff(&id));
+            // The rotated subspace Hamiltonian is diag(theta).
+            let d = subspace_matrix(&comm, &psi, &hpsi, nb);
+            for j in 0..nb {
+                for i in 0..nb {
+                    let want = if i == j { theta[i] } else { 0.0 };
+                    assert!(
+                        (d[(i, j)] - Complex::new(want, 0.0)).abs() < 1e-10,
+                        "rotated H[{i},{j}] = {:?}, want {want}",
+                        d[(i, j)]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
     fn rotate_bands_is_linear() {
         let nb = 2;
         let mut a = vec![

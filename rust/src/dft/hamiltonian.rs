@@ -128,6 +128,57 @@ impl Hamiltonian {
         Hamiltonian { lattice, nb, plan, kin, vloc, grid }
     }
 
+    /// Build at Bloch vector `k` (fractional reciprocal coordinates),
+    /// planning the staged plane-wave transform over the k-point sphere
+    /// `lattice.kpoint_offsets(k)` by hand. At `k = [0, 0, 0]` this is
+    /// [`Hamiltonian::new`] exactly.
+    pub fn new_k(
+        lattice: Lattice,
+        nb: usize,
+        potential: &GaussianWells,
+        grid: Arc<ProcGrid>,
+        k: [f64; 3],
+    ) -> Self {
+        let n = lattice.n;
+        let off = lattice.kpoint_offsets(k);
+        let plan = PlaneWavePlan::new(off, nb, Arc::clone(&grid))
+            // pallas-lint: allow(no-panic) — the k-point sphere lives on the
+            // same full cubic grid as the Γ basis, so the plane-wave plan
+            // constraints hold whenever `Lattice::new` accepted the grid.
+            .expect("k-point sphere must satisfy the plane-wave plan constraints");
+        let plan = Arc::new(Fftb { kind: PlanKind::PlaneWave(plan), sizes: [n, n, n], nb });
+        Self::with_plan_k(lattice, nb, potential, grid, plan, k)
+    }
+
+    /// [`Hamiltonian::with_plan`] at Bloch vector `k`: the kinetic diagonal
+    /// becomes `1/2 |G + k|^2` walked over the k-point sphere in plan
+    /// packed order ([`Lattice::local_kinetic_k`]), and the injected plan
+    /// must map `nb` bands of `lattice.kpoint_offsets(k)`.
+    pub fn with_plan_k(
+        lattice: Lattice,
+        nb: usize,
+        potential: &GaussianWells,
+        grid: Arc<ProcGrid>,
+        plan: Arc<Fftb>,
+        k: [f64; 3],
+    ) -> Self {
+        assert_eq!(grid.ndim(), 1, "the mini DFT app runs on 1D grids");
+        let p = grid.size();
+        let r = grid.rank();
+        let n = lattice.n;
+        assert_eq!(plan.sizes, [n, n, n], "plan sizes must match the lattice grid");
+        assert_eq!(plan.nb, nb, "plan batch count must match the band count");
+        let offsets = lattice.kpoint_offsets(k);
+        let kin = lattice.local_kinetic_k(p, r, k, &offsets);
+        assert_eq!(
+            plan.input_len(),
+            nb * kin.len(),
+            "plan input layout must match the local k-point plane-wave basis"
+        );
+        let vloc = Self::external_potential(&lattice, potential, p, r);
+        Hamiltonian { lattice, nb, plan, kin, vloc, grid }
+    }
+
     /// The external potential sampled on rank `r`'s z-slab `[nx, ny, lzc]`
     /// (z cyclic over `p` ranks) — the fixed part of the SCF potential.
     pub fn external_potential(
@@ -180,6 +231,13 @@ impl Hamiltonian {
 
     /// Apply H to a band block `psi` (`[nb, n_local]`, batch fastest).
     /// Returns `H psi` and the FFT traces (for the metrics report).
+    ///
+    /// Zero-copy: the borrowed band block feeds the forward transform
+    /// directly through [`Fftb::execute_into`] — no owned copy of `psi` is
+    /// ever made — and both intermediate buffers come from the plan's
+    /// recycled slot pool. Callers that are done with the returned `H psi`
+    /// should hand it back via `plan.recycle` to keep steady-state loops
+    /// allocation-free.
     pub fn apply(
         &self,
         backend: &dyn LocalFftBackend,
@@ -188,15 +246,21 @@ impl Hamiltonian {
         let nb = self.nb;
         assert_eq!(psi.len(), nb * self.kin.len());
 
+        // steady-state: hamiltonian apply
         // Potential term through the plane-wave transform pair.
-        let (mut cube, tr_f) = self.plan.execute(backend, psi.to_vec(), Direction::Forward);
+        let (mut cube, grew_c) = self.plan.take_buffer(self.plan.output_len());
+        let mut tr_f = self.plan.execute_into(backend, psi, &mut cube, Direction::Forward);
+        tr_f.alloc_bytes += grew_c;
         for (i, chunk) in cube.chunks_exact_mut(nb).enumerate() {
             let v = self.vloc[i];
             for c in chunk {
                 *c = c.scale(v);
             }
         }
-        let (mut hpsi, tr_i) = self.plan.execute(backend, cube, Direction::Inverse);
+        let (mut hpsi, grew_s) = self.plan.take_buffer(self.plan.input_len());
+        let mut tr_i = self.plan.execute_into(backend, &cube, &mut hpsi, Direction::Inverse);
+        tr_i.alloc_bytes += grew_s;
+        self.plan.recycle(cube);
 
         // Kinetic term, diagonal in G.
         for (e, &t) in self.kin.iter().enumerate() {
@@ -205,6 +269,7 @@ impl Hamiltonian {
                 hpsi[idx] += psi[idx].scale(t);
             }
         }
+        // steady-state: end
         (hpsi, vec![tr_f, tr_i])
     }
 
@@ -229,7 +294,10 @@ impl Hamiltonian {
         rho: &mut Vec<f64>,
     ) -> ExecTrace {
         let nb = self.nb;
-        let (cube, trace) = self.plan.execute(backend, psi.to_vec(), Direction::Forward);
+        // steady-state: hamiltonian density
+        let (mut cube, grew) = self.plan.take_buffer(self.plan.output_len());
+        let mut trace = self.plan.execute_into(backend, psi, &mut cube, Direction::Forward);
+        trace.alloc_bytes += grew;
         let npts = cube.len() / nb;
         let cell_vol = self.lattice.a.powi(3);
         // |psi(r)|^2 with psi(r) = sum_G c e^{igr}: the forward transform is
@@ -244,6 +312,7 @@ impl Hamiltonian {
             rho[i] = s * scale;
         }
         self.plan.recycle(cube);
+        // steady-state: end
         trace
     }
 }
@@ -290,6 +359,38 @@ mod tests {
                     );
                 }
             }
+        });
+    }
+
+    #[test]
+    fn free_particle_at_k_is_diagonal() {
+        // V = 0 off Γ: H psi = 1/2 |G+k|^2 psi exactly, on the k-sphere.
+        run_world(2, |comm| {
+            let grid = ProcGrid::new(&[2], comm).unwrap();
+            let lat = Lattice::new(8.0, 16, 3.0);
+            let none = GaussianWells { wells: vec![] };
+            let k = [0.25, 0.0, 0.0];
+            let h = Hamiltonian::new_k(lat, 2, &none, grid, k);
+            let backend = RustFftBackend::new();
+            let npts = h.n_local();
+            let mut psi = vec![ZERO; 2 * npts];
+            for (i, v) in psi.iter_mut().enumerate() {
+                *v = Complex::new((i as f64 * 0.23).sin(), (i as f64 * 0.19).cos());
+            }
+            let (hpsi, _) = h.apply(&backend, &psi);
+            for e in 0..npts {
+                for b in 0..2 {
+                    let idx = b + 2 * e;
+                    let want = psi[idx].scale(h.kinetic()[e]);
+                    assert!(
+                        (hpsi[idx] - want).abs() < 1e-8 * (1.0 + want.abs()),
+                        "e={e} b={b}"
+                    );
+                }
+            }
+            // The k-point kinetic differs from Γ's on this basis.
+            let gamma = h.lattice.local_kinetic(2, h.grid().rank());
+            assert!(h.kinetic().iter().zip(&gamma).any(|(a, b)| a != b));
         });
     }
 

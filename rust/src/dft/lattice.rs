@@ -77,6 +77,45 @@ impl Lattice {
         out
     }
 
+    /// Kinetic energy `|g + k|^2 / 2` of the plane wave at grid point
+    /// (x, y, z) for Bloch vector `k` (fractional coordinates of the
+    /// reciprocal lattice). At `k = [0, 0, 0]` this is exactly
+    /// [`kinetic`](Self::kinetic).
+    pub fn kinetic_at(&self, k: [f64; 3], x: usize, y: usize, z: usize) -> f64 {
+        let s = 2.0 * std::f64::consts::PI / self.a;
+        let dx = self.freq(x) as f64 + k[0];
+        let dy = self.freq(y) as f64 + k[1];
+        let dz = self.freq(z) as f64 + k[2];
+        0.5 * s * s * (dx * dx + dy * dy + dz * dz)
+    }
+
+    /// Kinetic energies `|g + k|^2 / 2` of rank `r`'s local plane waves of
+    /// the k-point sphere `offsets` (from
+    /// [`kpoint_offsets`](Self::kpoint_offsets)), walking the same packed
+    /// order as [`local_kinetic`](Self::local_kinetic) — the k-point
+    /// diagonal the Hamiltonian applies on sphere coefficients.
+    pub fn local_kinetic_k(
+        &self,
+        p: usize,
+        r: usize,
+        k: [f64; 3],
+        offsets: &OffsetArray,
+    ) -> Vec<f64> {
+        let mut out = Vec::new();
+        let lnx = cyclic::local_count(self.n, p, r);
+        for y in 0..self.n {
+            for lx in 0..lnx {
+                let gx = cyclic::local_to_global(lx, p, r);
+                for &(z0, len) in offsets.col_runs(gx, y) {
+                    for z in z0 as usize..(z0 + len) as usize {
+                        out.push(self.kinetic_at(k, gx, y, z));
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// The plane-wave basis at Bloch vector `k` (fractional coordinates of
     /// the reciprocal lattice): every integer triple with
     /// `|g + k|^2 / 2 <= E_cut`, i.e. `|m + k| <= m_max` — the k-point
@@ -196,6 +235,27 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn kpoint_kinetic_reduces_to_gamma() {
+        let lat = Lattice::new(8.0, 16, 4.0);
+        for p in [1usize, 2] {
+            for r in 0..p {
+                let g = lat.local_kinetic(p, r);
+                let k = lat.local_kinetic_k(p, r, [0.0; 3], &lat.offsets);
+                assert_eq!(g, k, "p={p} r={r}: Γ k-kinetic must be bit-identical");
+            }
+        }
+        // Off Γ the diagonal follows the shifted sphere and stays within
+        // the cutoff (the sphere membership is |m + k| <= m_max).
+        let k = [0.25, 0.0, 0.0];
+        let off = lat.kpoint_offsets(k);
+        let kin = lat.local_kinetic_k(1, 0, k, &off);
+        assert_eq!(kin.len(), off.total());
+        for e in &kin {
+            assert!(*e >= 0.0 && *e <= lat.ecut * 1.0001);
         }
     }
 

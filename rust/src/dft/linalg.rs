@@ -302,6 +302,52 @@ mod tests {
     }
 
     #[test]
+    fn jacobi_matches_naive_reference() {
+        // Reference the spectrum against quantities computable without any
+        // eigensolver: trace = sum(w), Frobenius norm^2 = sum(w^2) (both
+        // exact for Hermitian A), and the extreme eigenvalues from naive
+        // power iteration on A and on (shift*I - A).
+        let n = 6;
+        let a = hermitian_test_matrix(n, 9);
+        let (w, _) = eigh_jacobi(&a, 30);
+
+        let trace: f64 = (0..n).map(|i| a[(i, i)].re).sum();
+        let frob2: f64 = a.data.iter().map(|c| c.norm_sqr()).sum();
+        let wsum: f64 = w.iter().sum();
+        let w2sum: f64 = w.iter().map(|x| x * x).sum();
+        assert!((trace - wsum).abs() < 1e-10 * trace.abs(), "trace {trace} vs {wsum}");
+        assert!((frob2 - w2sum).abs() < 1e-10 * frob2, "frob {frob2} vs {w2sum}");
+
+        // Power iteration for the dominant eigenvalue (A is PD, so the
+        // dominant one is the largest).
+        let power = |m: &CMat| -> f64 {
+            let mut x = CMat::from_fn(n, 1, |i, _| Complex::new(1.0 + i as f64, 0.3 * i as f64));
+            let mut lambda = 0.0;
+            for _ in 0..2000 {
+                let y = m.matmul(&x);
+                let norm = y.data.iter().map(|c| c.norm_sqr()).sum::<f64>().sqrt();
+                lambda = norm
+                    / x.data.iter().map(|c| c.norm_sqr()).sum::<f64>().sqrt().max(1e-300);
+                for (xi, yi) in x.data.iter_mut().zip(&y.data) {
+                    *xi = yi.scale(1.0 / norm);
+                }
+            }
+            lambda
+        };
+        let w_max = power(&a);
+        assert!((w_max - w[n - 1]).abs() < 1e-4 * w_max, "max {w_max} vs {}", w[n - 1]);
+        // Smallest eigenvalue via the shifted complement: shift*I - A has
+        // dominant eigenvalue shift - w_min.
+        let shift = 2.0 * w_max;
+        let mut comp = CMat::from_fn(n, n, |i, j| (a[(i, j)]).scale(-1.0));
+        for i in 0..n {
+            comp[(i, i)] += Complex::new(shift, 0.0);
+        }
+        let w_min = shift - power(&comp);
+        assert!((w_min - w[0]).abs() < 1e-4 * w_max, "min {w_min} vs {}", w[0]);
+    }
+
+    #[test]
     fn jacobi_known_eigenvalues() {
         // [[2, i], [-i, 2]] has eigenvalues 1 and 3.
         let mut a = CMat::zeros(2, 2);

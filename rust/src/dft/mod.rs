@@ -7,10 +7,11 @@
 //! * [`hamiltonian`] — kinetic + local potential via an injectable
 //!   (tuner-picked) transform plan.
 //! * [`eigensolver`] — all-band preconditioned steepest descent + Ritz.
-//! * [`scf`] — density build, charge checks, mixing, and [`ScfRunner`]:
-//!   the distributed self-consistency loop driven end-to-end through the
-//!   autotuner (`Fftb::plan_auto_scf`, shared wisdom, steady-state
-//!   plan-cache hits).
+//! * [`scf`] — density build, charge checks, mixing, the G-space Hartree
+//!   (Poisson) solve with per-iteration energy tracking, and
+//!   [`ScfRunner`]: the distributed self-consistency loop driven
+//!   end-to-end through the autotuner (`Fftb::plan_auto_scf`, shared
+//!   wisdom, steady-state plan-cache hits).
 
 pub mod eigensolver;
 pub mod hamiltonian;
@@ -22,6 +23,6 @@ pub use eigensolver::{solve_bands, EigenOptions, EigenResult};
 pub use hamiltonian::{GaussianWells, Hamiltonian};
 pub use lattice::Lattice;
 pub use scf::{
-    build_density, mix_density, Density, ScfIterStats, ScfOptions, ScfResult, ScfRunner,
-    ScfServiceDriver,
+    build_density, mix_density, poisson_scale, Density, EnergyBreakdown, ScfIterStats,
+    ScfOptions, ScfResult, ScfRunner, ScfServiceDriver,
 };

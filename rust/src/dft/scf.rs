@@ -5,10 +5,13 @@
 //! The paper's motivating workload is not one transform but the
 //! plane-wave DFT self-consistency loop: every iteration applies the
 //! Hamiltonian to the whole band block (one batched sphere-forward
-//! transform, a pointwise multiply, one batched inverse) and rebuilds the
-//! density (one more forward) — hundreds of times (Fig. 9's red-line
-//! workload; the batched formulation follows Popovici et al.). The runner
-//! closes the gap between that loop and the tuning stack one layer below:
+//! transform, a pointwise multiply, one batched inverse), rebuilds the
+//! density (one more forward), and solves the G-space Poisson equation
+//! for the Hartree potential (`v_H(G) = 4π ρ(G) / |G|²`, one more
+//! inverse/forward round trip on an nb = 1 plan) — hundreds of times
+//! (Fig. 9's red-line workload; the batched formulation follows Popovici
+//! et al.). The runner closes the gap between that loop and the tuning
+//! stack one layer below:
 //!
 //! * the transform plan comes from [`Fftb::plan_auto_scf`] — the tuner
 //!   picks the decomposition (plane-wave staged padding vs its per-band
@@ -82,6 +85,46 @@ pub fn mix_density(old: &mut [f64], new: &[f64], alpha: f64) {
     }
 }
 
+/// Scale packed `ρ(G)` sphere coefficients into the Hartree potential
+/// `v_H(G) = 4π ρ(G) / |G|²`, in place, walking the plan's packed order.
+/// `kin` is the matching kinetic array (`|G|²/2` per packed entry, from
+/// [`Lattice::local_kinetic`]), so `|G|² = 2·kin`. The `G = 0` bin — the
+/// entry whose kinetic energy is exactly `0.0` — is zeroed outright: the
+/// charge-neutrality convention of a periodic cell, where the divergent
+/// monopole term cancels against the uniform compensating background.
+pub fn poisson_scale(kin: &[f64], rg: &mut [Complex]) {
+    assert_eq!(kin.len(), rg.len(), "kinetic array must match the packed coefficients");
+    for (c, &t) in rg.iter_mut().zip(kin) {
+        if t == 0.0 {
+            *c = ZERO;
+        } else {
+            *c = c.scale(4.0 * std::f64::consts::PI / (2.0 * t));
+        }
+    }
+}
+
+/// Per-iteration decomposition of the total energy functional
+/// `E = E_kin + E_ext + E_H + E_mf` (hartree units), plus the band sum of
+/// the iteration's Ritz values. Every term is cell-global (allreduced);
+/// `total` is what the convergence gates in `ci.sh` and the module tests
+/// watch settle.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Kinetic energy `Σ_b Σ_G |c_bG|² |G|²/2` of the orthonormal bands.
+    pub kinetic: f64,
+    /// External-potential energy `∫ v_ext ρ dv`.
+    pub external: f64,
+    /// Hartree energy `½ ∫ v_H ρ dv` from the G-space Poisson solve.
+    pub hartree: f64,
+    /// Mean-field energy `(u/2) ∫ ρ² dv` of the model coupling.
+    pub mean_field: f64,
+    /// Band-structure sum `Σ_b θ_b` of the Ritz values (diagnostic; not a
+    /// term of `total`, which counts each interaction once).
+    pub band: f64,
+    /// `kinetic + external + hartree + mean_field`.
+    pub total: f64,
+}
+
 /// Knobs of the [`ScfRunner`] density loop.
 #[derive(Clone, Debug)]
 pub struct ScfOptions {
@@ -144,8 +187,12 @@ pub struct ScfIterStats {
     /// steady state (the plan-once / execute-many contract).
     pub alloc_bytes: u64,
     /// Distributed transform executions this iteration (forward + inverse
-    /// of the Hamiltonian application, plus the density forward).
+    /// of the Hamiltonian application, the density forward, and the
+    /// Hartree round trip's inverse + forward).
     pub transforms: usize,
+    /// Total-energy decomposition at the end of the iteration, from the
+    /// mixed density and the fresh Hartree potential.
+    pub energy: EnergyBreakdown,
 }
 
 /// Outcome of an [`ScfRunner`] run.
@@ -155,6 +202,8 @@ pub struct ScfResult {
     pub density: Density,
     /// Ritz eigenvalues of the final iteration, ascending.
     pub eigenvalues: Vec<f64>,
+    /// Total-energy breakdown of the final iteration.
+    pub energy: EnergyBreakdown,
     /// Per-iteration statistics, in order.
     pub history: Vec<ScfIterStats>,
     /// Iterations actually run.
@@ -194,6 +243,11 @@ pub struct ScfRunner {
     vext: Vec<f64>,
     rho: Vec<f64>,
     rho_new: Vec<f64>,
+    /// nb = 1 plan of the per-iteration Hartree (Poisson) round trip —
+    /// same sphere as the band plan, one "band": the density field.
+    hplan: Arc<Fftb>,
+    /// `v_H(r)` on the local slab, refreshed every iteration.
+    vh: Vec<f64>,
     opts: ScfOptions,
     traces: Vec<ExecTrace>,
     plan_kind: String,
@@ -239,12 +293,24 @@ impl ScfRunner {
         )?;
         let (plan_kind, window) = (tuned.choice.kind.label(), tuned.choice.window);
         let (from_wisdom, measured) = (tuned.from_wisdom, tuned.measured);
+        // The Hartree round trip gets its own nb = 1 request through the
+        // same tuner (its own plan-cache/wisdom identity, also re-issued
+        // every iteration so steady-state stays pure cache hits).
+        let htuned = Fftb::plan_auto_scf(
+            [n, n, n],
+            1,
+            Some(Arc::clone(&lattice.offsets)),
+            comm,
+            &mut tuner,
+            backend_opt,
+        )?;
         Self::assemble(
             lattice,
             nb,
             potential,
             comm,
             tuned.plan,
+            Some(htuned.plan),
             PlanSource::Tuned(Box::new(tuner)),
             plan_kind,
             window,
@@ -273,6 +339,7 @@ impl ScfRunner {
             potential,
             comm,
             plan,
+            None,
             PlanSource::Fixed,
             kind,
             0,
@@ -289,6 +356,7 @@ impl ScfRunner {
         potential: &GaussianWells,
         comm: &Comm,
         plan: Arc<Fftb>,
+        hplan: Option<Arc<Fftb>>,
         source: PlanSource,
         plan_kind: String,
         window: usize,
@@ -348,6 +416,16 @@ impl ScfRunner {
         }
         assert_eq!(nb * e, psi.local.len(), "packed-order enumeration mismatch");
 
+        // Pinned runners get a pinned plane-wave Hartree companion, so the
+        // service/standalone bit-identity contract extends to the Hartree
+        // term; tuned runners hand theirs in from the tuner.
+        let hplan = match hplan {
+            Some(hp) => hp,
+            None => {
+                let pw = PlaneWavePlan::new(Arc::clone(&lattice.offsets), 1, Arc::clone(&grid))?;
+                Arc::new(Fftb { kind: PlanKind::PlaneWave(pw), sizes: [n, n, n], nb: 1 })
+            }
+        };
         let vext = Hamiltonian::external_potential(&lattice, potential, p, r);
         let h = Hamiltonian::with_plan(lattice, nb, potential, grid, plan);
         let slab = vext.len();
@@ -359,6 +437,8 @@ impl ScfRunner {
             vext,
             rho: vec![0.0; slab],
             rho_new: Vec::with_capacity(slab),
+            hplan,
+            vh: vec![0.0; slab],
             opts,
             traces: Vec::new(),
             plan_kind,
@@ -384,12 +464,14 @@ impl ScfRunner {
 
     /// Run the density loop until convergence or `max_iters`.
     ///
-    /// Per iteration: re-request the plan through the tuner (a pure cache
-    /// hit in steady state), orthonormalize, apply `H` to the whole band
+    /// Per iteration: re-request both plans through the tuner (pure cache
+    /// hits in steady state), orthonormalize, apply `H` to the whole band
     /// block (batched sphere-forward, pointwise `V(r)`, batched inverse),
     /// Ritz-rotate, take one preconditioned descent step, rebuild the
-    /// density (one more batched forward), mix it, and fold it back into
-    /// the potential. Collective over the construction communicator.
+    /// density (one more batched forward), mix it, solve Poisson for the
+    /// Hartree potential (inverse + forward on the nb = 1 plan), fold
+    /// `v = v_ext + u·ρ + v_H`, and record the energy breakdown.
+    /// Collective over the construction communicator.
     pub fn run(&mut self, backend: &dyn LocalFftBackend) -> ScfResult {
         assert!(self.opts.max_iters >= 1, "an SCF run needs at least one iteration");
         let nb = self.h.nb;
@@ -423,7 +505,22 @@ impl ScfRunner {
                         Arc::ptr_eq(&tuned.plan, &self.h.plan),
                         "the tuner must serve the iteration the same plan object"
                     );
-                    tuned.cache_hit
+                    let htuned = tuner
+                        .plan_auto_scf(
+                            [n, n, n],
+                            1,
+                            Some(Arc::clone(&self.h.lattice.offsets)),
+                            &comm,
+                            None,
+                        )
+                        // pallas-lint: allow(no-panic) — same cache
+                        // invariant as the band plan above.
+                        .expect("the cached Hartree plan request cannot fail");
+                    assert!(
+                        Arc::ptr_eq(&htuned.plan, &self.hplan),
+                        "the tuner must serve the iteration the same Hartree plan object"
+                    );
+                    tuned.cache_hit && htuned.cache_hit
                 }
                 PlanSource::Fixed => false,
             };
@@ -451,16 +548,26 @@ impl ScfRunner {
             orthonormalize(&comm, &mut self.psi.local, nb);
 
             // Fresh density (one more batched forward), charge and change,
-            // mixing and potential feedback.
+            // then mixing.
             let mut rho_new = std::mem::take(&mut self.rho_new);
             let tr_d = self.h.density_into(backend, &self.psi.local, &mut rho_new);
             let (charge, delta_rho) = self.absorb_density(it, rho_new, dv);
+
+            // Hartree: one G-space Poisson solve of the mixed density —
+            // the iteration's fourth and fifth transforms — then the
+            // potential fold `v = v_ext + u·ρ + v_H` and the energy
+            // bookkeeping (both shared verbatim with the service loop).
+            let (tr_hi, tr_hf) = self.hartree_update(backend);
+            self.fold_potential();
+            let energy = self.energy_breakdown(&eigenvalues, dv);
 
             // Stamp the cache provenance onto the iteration's traces (the
             // per-execution view the steady-state tests consume) and log
             // them for `drain_traces`.
             let mut traces = traces;
             traces.push(tr_d);
+            traces.push(tr_hi);
+            traces.push(tr_hf);
             let mut alloc_bytes = 0;
             let transforms = traces.len();
             for t in &mut traces {
@@ -476,6 +583,7 @@ impl ScfRunner {
                 plan_cache_hit: cache_hit,
                 alloc_bytes,
                 transforms,
+                energy,
             });
 
             if it > 1 && delta_rho / nb as f64 < self.opts.tol {
@@ -500,6 +608,7 @@ impl ScfRunner {
                 charge: history.last().map(|h| h.charge).unwrap_or(0.0),
             },
             eigenvalues,
+            energy: history.last().map(|h| h.energy).unwrap_or_default(),
             history,
             iterations,
             converged,
@@ -510,13 +619,96 @@ impl ScfRunner {
         }
     }
 
-    /// Take every `ExecTrace` recorded since the last drain (three per
-    /// iteration: H-apply forward + inverse, density forward), each
-    /// stamped with its iteration's plan-cache provenance — the
-    /// per-execution view (`plan_cache_hit`, `alloc_bytes`) the
-    /// steady-state tests and the metrics sink consume.
+    /// Take every `ExecTrace` recorded since the last drain (five per
+    /// iteration, in order: H-apply forward + inverse, density forward,
+    /// Hartree inverse + forward), each stamped with its iteration's
+    /// plan-cache provenance — the per-execution view (`plan_cache_hit`,
+    /// `alloc_bytes`) the steady-state tests and the metrics sink consume.
     pub fn drain_traces(&mut self) -> Vec<ExecTrace> {
         std::mem::take(&mut self.traces)
+    }
+
+    /// The Hartree potential `v_H(r)` of the current mixed density on the
+    /// local slab (all zeros until the first iteration completes).
+    pub fn hartree_potential(&self) -> &[f64] {
+        &self.vh
+    }
+
+    /// One G-space Poisson solve of the mixed density: lift `ρ(r)` onto
+    /// the dense grid, inverse-transform to packed `ρ(G)`, apply
+    /// [`poisson_scale`], forward-transform back and keep the real part
+    /// as `v_H(r)`. Two more executions on the iteration's trace tape,
+    /// both through the nb = 1 Hartree plan — pure cache hits at
+    /// `alloc_bytes == 0` in steady state like every other transform of
+    /// the loop (the buffers come from and return to the plan's pool).
+    fn hartree_update(&mut self, backend: &dyn LocalFftBackend) -> (ExecTrace, ExecTrace) {
+        // steady-state: scf hartree
+        let (mut cube, grew_c) = self.hplan.take_buffer(self.hplan.output_len());
+        for (c, &r) in cube.iter_mut().zip(&self.rho) {
+            *c = Complex::new(r, 0.0);
+        }
+        let (mut rg, grew_g) = self.hplan.take_buffer(self.hplan.input_len());
+        let mut tr_i = self.hplan.execute_into(backend, &cube, &mut rg, Direction::Inverse);
+        tr_i.alloc_bytes += grew_c + grew_g;
+        poisson_scale(self.h.kinetic(), &mut rg);
+        let tr_f = self.hplan.execute_into(backend, &rg, &mut cube, Direction::Forward);
+        for (v, c) in self.vh.iter_mut().zip(&cube) {
+            *v = c.re;
+        }
+        self.hplan.recycle(cube);
+        self.hplan.recycle(rg);
+        // steady-state: end
+        (tr_i, tr_f)
+    }
+
+    /// Fold the mixed density and fresh Hartree potential into the local
+    /// potential: `v = v_ext + u·ρ + v_H`. Shared verbatim by
+    /// [`ScfRunner::run`] and the service-driven loop, so the two paths
+    /// stay bit-identical.
+    fn fold_potential(&mut self) {
+        let u = self.opts.coupling;
+        let vext = &self.vext;
+        let rho = &self.rho;
+        let vh = &self.vh;
+        let vloc = self.h.vloc_mut();
+        for (i, v) in vloc.iter_mut().enumerate() {
+            *v = vext[i] + u * rho[i] + vh[i];
+        }
+    }
+
+    /// Assemble the iteration's [`EnergyBreakdown`] from the *mixed*
+    /// density, the fresh Hartree potential and the orthonormal band
+    /// block: four local sums in one fixed order, one 4-slot allreduce.
+    /// Shared verbatim by [`ScfRunner::run`] and the service-driven loop,
+    /// so every term is bit-identical across the two paths.
+    fn energy_breakdown(&self, theta: &[f64], dv: f64) -> EnergyBreakdown {
+        let nb = self.h.nb;
+        let mut e_kin = 0.0f64;
+        for (e, &t) in self.h.kinetic().iter().enumerate() {
+            let mut s = 0.0f64;
+            for b in 0..nb {
+                s += self.psi.local[b + nb * e].norm_sqr();
+            }
+            e_kin += t * s;
+        }
+        let (mut e_ext, mut e_h, mut e_mf) = (0.0f64, 0.0f64, 0.0f64);
+        let u = self.opts.coupling;
+        for (i, &r) in self.rho.iter().enumerate() {
+            e_ext += self.vext[i] * r;
+            e_h += 0.5 * self.vh[i] * r;
+            e_mf += 0.5 * u * r * r;
+        }
+        let mut sums = [e_kin, e_ext * dv, e_h * dv, e_mf * dv];
+        allreduce_sum_f64(&self.comm, &mut sums);
+        let band: f64 = theta.iter().sum();
+        EnergyBreakdown {
+            kinetic: sums[0],
+            external: sums[1],
+            hartree: sums[2],
+            mean_field: sums[3],
+            band,
+            total: sums[0] + sums[1] + sums[2] + sums[3],
+        }
     }
 
     /// Rayleigh-Ritz rotation plus one preconditioned descent step — the
@@ -565,10 +757,11 @@ impl ScfRunner {
 
     /// Absorb a freshly built density: allreduce its charge and L1
     /// change, mix it into the running density (the first iteration
-    /// copies outright), park the storage for the next iteration, and
-    /// fold the result back into the local potential when the mean-field
-    /// coupling is on. Shared verbatim by [`ScfRunner::run`] and the
-    /// service-driven loop. Returns `(charge, delta_rho)`.
+    /// copies outright) and park the storage for the next iteration. The
+    /// potential fold happens separately in
+    /// [`fold_potential`](Self::fold_potential), after the Hartree solve
+    /// of the mixed density. Shared verbatim by [`ScfRunner::run`] and
+    /// the service-driven loop. Returns `(charge, delta_rho)`.
     fn absorb_density(&mut self, it: usize, rho_new: Vec<f64>, dv: f64) -> (f64, f64) {
         let mut sums = [
             rho_new.iter().sum::<f64>() * dv,
@@ -577,20 +770,12 @@ impl ScfRunner {
         allreduce_sum_f64(&self.comm, &mut sums);
         let (charge, delta_rho) = (sums[0], sums[1]);
 
-        // Mix, then fold the density back into the potential.
         if it == 1 {
             self.rho.copy_from_slice(&rho_new);
         } else {
             mix_density(&mut self.rho, &rho_new, self.opts.mix);
         }
         self.rho_new = rho_new;
-        if self.opts.coupling != 0.0 {
-            let u = self.opts.coupling;
-            let vloc = self.h.vloc_mut();
-            for (v, (ve, r)) in vloc.iter_mut().zip(self.vext.iter().zip(&self.rho)) {
-                *v = ve + u * r;
-            }
-        }
         (charge, delta_rho)
     }
 }
@@ -598,8 +783,9 @@ impl ScfRunner {
 /// Several SCF solvers as tenants of one [`TransformService`].
 ///
 /// Each lockstep iteration batches *every* active tenant's bands into the
-/// service's shared sphere lane and flushes them as three coalesced
-/// executions — the H-apply forward, its inverse, and the density forward
+/// service's shared sphere lane and flushes them as five coalesced
+/// executions — the H-apply forward, its inverse, the density forward,
+/// and the Hartree round trip's inverse + forward
 /// — so two solvers pay roughly one solver's worth of exchange latency
 /// instead of two (fewer, larger messages; the paper's batching argument
 /// applied across clients). Per-band transforms are arithmetically
@@ -629,6 +815,11 @@ struct ScfTenant {
     hpsi: Vec<Complex>,
     eigenvalues: Vec<f64>,
     max_residual: f64,
+    /// Charge and density change of the iteration in flight, parked
+    /// between the absorb and the history push (the Hartree flushes sit
+    /// between the two).
+    charge: f64,
+    delta_rho: f64,
     history: Vec<ScfIterStats>,
     converged: bool,
 }
@@ -691,6 +882,8 @@ impl ScfServiceDriver {
             hpsi: Vec::new(),
             eigenvalues: vec![0.0; nb],
             max_residual: 0.0,
+            charge: 0.0,
+            delta_rho: 0.0,
             history: Vec::new(),
             converged: false,
         });
@@ -716,7 +909,7 @@ impl ScfServiceDriver {
         self.lane
     }
 
-    /// Run one lockstep SCF iteration across every active tenant — three
+    /// Run one lockstep SCF iteration across every active tenant — five
     /// coalesced flushes total, regardless of tenant count. Returns
     /// whether any tenant was still active (converged tenants stop
     /// submitting; `delta_rho` is allreduced, so the decision is
@@ -827,17 +1020,10 @@ impl ScfServiceDriver {
             }
         }
         self.service.flush(backend, Direction::Forward);
-        let (hit, alloc) = {
-            let recs = &self.service.flush_records()[rec_mark..];
-            (
-                recs.iter().all(|r| r.plan_cache_hit),
-                recs.iter().map(|r| r.alloc_bytes).sum::<u64>(),
-            )
-        };
 
         // Accumulate |psi|^2 per grid point across bands in ascending
         // band order — the exact fold `Hamiltonian::density_into` runs —
-        // then the shared absorb (allreduce, mix, coupling) per tenant.
+        // then the shared absorb (allreduce, mix) per tenant.
         for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
             let nb = t.runner.h.nb;
             let collected = self.service.collect(t.id);
@@ -859,16 +1045,76 @@ impl ScfServiceDriver {
             }
             drop(collected);
             let (charge, delta_rho) = t.runner.absorb_density(it, rho_new, dv);
+            t.charge = charge;
+            t.delta_rho = delta_rho;
+        }
+
+        // Phase D: the Hartree round trip. Each tenant lifts its mixed
+        // density onto the dense grid and submits it down the same lane —
+        // one coalesced inverse to packed ρ(G), the G-space Poisson scale
+        // (the exact form `ScfRunner::hartree_update` applies), and one
+        // coalesced forward back to v_H(r).
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let mut slot = self
+                .service
+                .checkout(t.id, self.lane, Direction::Inverse)
+                .map_err(svc_err)?;
+            let dst = slot.data_mut();
+            for (c, &r) in dst.iter_mut().zip(&t.runner.rho) {
+                *c = Complex::new(r, 0.0);
+            }
+            self.service
+                .submit(t.id, self.lane, Direction::Inverse, slot)
+                .map_err(svc_err)?;
+        }
+        self.service.flush(backend, Direction::Inverse);
+
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let collected = self.service.collect(t.id);
+            debug_assert_eq!(collected.len(), 1, "one packed density per tenant");
+            for (_, mut slot) in collected {
+                poisson_scale(t.runner.h.kinetic(), slot.data_mut());
+                self.service
+                    .submit(t.id, self.lane, Direction::Forward, slot)
+                    .map_err(svc_err)?;
+            }
+        }
+        self.service.flush(backend, Direction::Forward);
+        let (hit, alloc) = {
+            let recs = &self.service.flush_records()[rec_mark..];
+            (
+                recs.iter().all(|r| r.plan_cache_hit),
+                recs.iter().map(|r| r.alloc_bytes).sum::<u64>(),
+            )
+        };
+
+        // v_H lands; the shared potential fold and energy bookkeeping
+        // close the iteration, exactly as in `ScfRunner::run`.
+        for t in self.tenants.iter_mut().filter(|t| t.active(it)) {
+            let nb = t.runner.h.nb;
+            let collected = self.service.collect(t.id);
+            debug_assert_eq!(collected.len(), 1, "one Hartree potential per tenant");
+            for (_, slot) in &collected {
+                for (v, c) in t.runner.vh.iter_mut().zip(slot.data()) {
+                    *v = c.re;
+                }
+            }
+            drop(collected);
+            t.runner.fold_potential();
+            let n = t.runner.h.lattice.n;
+            let dv = t.runner.h.lattice.a.powi(3) / (n * n * n) as f64;
+            let energy = t.runner.energy_breakdown(&t.eigenvalues, dv);
             t.history.push(ScfIterStats {
                 iter: it,
-                charge,
-                delta_rho,
+                charge: t.charge,
+                delta_rho: t.delta_rho,
                 max_residual: t.max_residual,
                 plan_cache_hit: hit,
                 alloc_bytes: alloc,
-                transforms: 3,
+                transforms: 5,
+                energy,
             });
-            if it > 1 && delta_rho / nb as f64 < t.runner.opts.tol {
+            if it > 1 && t.delta_rho / nb as f64 < t.runner.opts.tol {
                 t.converged = true;
             }
         }
@@ -892,6 +1138,7 @@ impl ScfServiceDriver {
                     charge: t.history.last().map(|h| h.charge).unwrap_or(0.0),
                 },
                 eigenvalues: t.eigenvalues.clone(),
+                energy: t.history.last().map(|h| h.energy).unwrap_or_default(),
                 history: t.history.clone(),
                 iterations: t.history.len(),
                 converged: t.converged,
@@ -1012,15 +1259,27 @@ mod tests {
             // iteration — density conservation through the tuned plan.
             for s in &res.history {
                 assert!((s.charge - nb as f64).abs() < 1e-8, "iter {}: {}", s.iter, s.charge);
-                assert_eq!(s.transforms, 3, "fwd + inv + density fwd per iteration");
+                assert_eq!(
+                    s.transforms, 5,
+                    "fwd + inv + density fwd + hartree inv/fwd per iteration"
+                );
                 assert!(s.plan_cache_hit, "iter {} re-planned", s.iter);
+                // The Hartree energy is a positive-semidefinite quadratic
+                // form of the density; the breakdown must sum coherently.
+                assert!(s.energy.hartree >= -1e-12, "iter {}: {}", s.iter, s.energy.hartree);
+                let sum = s.energy.kinetic
+                    + s.energy.external
+                    + s.energy.hartree
+                    + s.energy.mean_field;
+                assert!((s.energy.total - sum).abs() < 1e-12);
+                assert!(s.energy.total.is_finite());
             }
             // Steady state: no workspace growth anywhere past iteration 1.
             for s in res.history.iter().skip(1) {
                 assert_eq!(s.alloc_bytes, 0, "iter {} allocated", s.iter);
             }
-            assert_eq!(traces.len(), 3 * res.iterations);
-            for t in traces.iter().skip(3) {
+            assert_eq!(traces.len(), 5 * res.iterations);
+            for t in traces.iter().skip(5) {
                 assert!(t.plan_cache_hit && t.alloc_bytes == 0);
             }
         }
@@ -1029,7 +1288,7 @@ mod tests {
     #[test]
     fn scf_runner_couples_density_into_potential() {
         // With a positive mean-field coupling, the potential the loop ends
-        // on must be the external wells shifted up by exactly u * rho —
+        // on must be the external wells shifted by exactly u * rho + v_H —
         // i.e. the density genuinely feeds back, and the charge survives.
         let p = 2;
         let outs = run_world(p, |comm| {
@@ -1046,20 +1305,106 @@ mod tests {
                 comm.size(),
                 comm.rank(),
             );
+            let vh = r.hartree_potential();
             let worst = r
                 .hamiltonian()
                 .vloc()
                 .iter()
-                .zip(vext.iter().zip(&res.density.rho))
-                .map(|(v, (ve, rho))| (v - (ve + u * rho)).abs())
+                .enumerate()
+                .map(|(i, v)| (v - (vext[i] + u * res.density.rho[i] + vh[i])).abs())
                 .fold(0.0, f64::max);
             (res, worst)
         });
         for (res, worst) in outs {
             assert!((res.density.charge - 1.0).abs() < 1e-8);
-            assert!(worst < 1e-12, "vloc must equal vext + u*rho (err {worst})");
+            assert!(worst < 1e-12, "vloc must equal vext + u*rho + v_H (err {worst})");
             assert!(res.density.rho.iter().any(|&r| r > 1e-6), "density must be nonzero");
         }
+    }
+
+    #[test]
+    fn poisson_scale_zeroes_the_charge_neutrality_bin() {
+        // The G = 0 entry is the one whose kinetic energy is exactly 0.0;
+        // the Poisson scale must zero it bitwise (charge neutrality) and
+        // scale every other bin by exactly 4 pi / |G|^2 = 4 pi / (2 kin).
+        let kin = [0.0f64, 0.5, 2.0];
+        let mut rg = [
+            Complex::new(3.0, -1.0),
+            Complex::new(2.0, 0.5),
+            Complex::new(-1.0, 4.0),
+        ];
+        poisson_scale(&kin, &mut rg);
+        assert_eq!(rg[0].re.to_bits(), 0.0f64.to_bits(), "G=0 bin must be exactly zero");
+        assert_eq!(rg[0].im.to_bits(), 0.0f64.to_bits(), "G=0 bin must be exactly zero");
+        let f1 = 4.0 * std::f64::consts::PI / 1.0;
+        let f2 = 4.0 * std::f64::consts::PI / 4.0;
+        assert_eq!(rg[1].re.to_bits(), (2.0 * f1).to_bits());
+        assert_eq!(rg[1].im.to_bits(), (0.5 * f1).to_bits());
+        assert_eq!(rg[2].re.to_bits(), (-1.0 * f2).to_bits());
+        assert_eq!(rg[2].im.to_bits(), (4.0 * f2).to_bits());
+    }
+
+    #[test]
+    fn uniform_density_has_zero_hartree_potential_and_energy() {
+        // A uniform density is pure G = 0 — exactly the charge-neutrality
+        // bin the Poisson solve zeroes — so v_H must vanish and the
+        // Hartree energy with it (to FFT roundoff of the non-DC bins,
+        // which hold only cancellation noise).
+        let p = 2;
+        run_world(p, |comm| {
+            let lat = Lattice::new(8.0, 12, 2.0);
+            let backend = RustFftBackend::new();
+            let opts = ScfOptions { max_iters: 1, tol: 0.0, ..Default::default() };
+            let mut r = pinned_runner(lat, 1, &GaussianWells::single(1.0, 1.5), &comm, opts);
+            for v in r.rho.iter_mut() {
+                *v = 0.75;
+            }
+            r.hartree_update(&backend);
+            let worst = r.hartree_potential().iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            assert!(worst < 1e-12, "uniform density must give zero v_H (got {worst})");
+            let n = r.h.lattice.n;
+            let dv = r.h.lattice.a.powi(3) / (n * n * n) as f64;
+            let e = r.energy_breakdown(&[0.0], dv);
+            assert!(e.hartree.abs() < 1e-12, "uniform density must give E_H = 0 ({})", e.hartree);
+        });
+    }
+
+    #[test]
+    fn scf_total_energy_settles_and_decreases() {
+        // Once mixing settles (the density change per electron drops under
+        // 1e-3), the preconditioned descent must push the total energy
+        // monotonically down, up to roundoff — the convergence gate the
+        // smoke lane in ci.sh holds the example run to.
+        let p = 2;
+        run_world(p, |comm| {
+            let lat = Lattice::new(8.0, 12, 2.0);
+            let backend = RustFftBackend::new();
+            let opts = ScfOptions { max_iters: 40, tol: 0.0, ..Default::default() };
+            let mut r =
+                ScfRunner::new(lat, 2, &GaussianWells::single(1.0, 1.5), &comm, &backend, opts)
+                    .unwrap();
+            let res = r.run(&backend);
+            let settle = res
+                .history
+                .iter()
+                .position(|s| s.delta_rho / 2.0 < 1e-3)
+                .expect("the smoke lattice must settle within the budget");
+            let tail = &res.history[settle..];
+            assert!(tail.len() >= 2, "need settled iterations to check");
+            for w in tail.windows(2) {
+                assert!(
+                    w[1].energy.total <= w[0].energy.total + 1e-7,
+                    "iter {}: total energy rose {} -> {}",
+                    w[1].iter,
+                    w[0].energy.total,
+                    w[1].energy.total
+                );
+            }
+            // And the residual heads toward the eigenstates.
+            let first = res.history.first().unwrap().max_residual;
+            let last = res.history.last().unwrap().max_residual;
+            assert!(last < first, "residual must shrink ({first} -> {last})");
+        });
     }
 
     /// A standalone runner pinned to the same plane-wave plan the service
@@ -1081,7 +1426,7 @@ mod tests {
     #[test]
     fn service_driver_tenants_match_standalone_runs_bit_for_bit() {
         // Two SCF solvers (different band counts, potentials and seeds)
-        // share one TransformService; every iteration's three flushes
+        // share one TransformService; every iteration's five flushes
         // coalesce both tenants' bands into single batched executions,
         // yet each tenant's scalars, eigenvalues and final density are
         // bit-identical to running it alone on a pinned plan.
@@ -1106,28 +1451,38 @@ mod tests {
                 .unwrap();
             let results = driver.run(&backend).unwrap();
 
-            // Every iteration flushed both tenants' bands together: three
-            // coalesced flushes per iteration (2 + 3 = 5 jobs each), not
-            // the six separate ones two isolated loops would pay.
+            // Every iteration flushed both tenants together: five
+            // coalesced flushes per iteration — three band flushes of
+            // 2 + 3 = 5 jobs each, then the Hartree inverse/forward pair
+            // with one job per tenant — not the ten separate ones two
+            // isolated loops would pay.
             let recs = driver.service().flush_records();
-            assert_eq!(recs.len(), 3 * iters);
-            for r in recs {
-                assert_eq!(r.tenants, 2, "flush must serve both tenants");
-                assert_eq!(r.jobs, 5, "2 + 3 bands per coalesced flush");
+            assert_eq!(recs.len(), 5 * iters);
+            for chunk in recs.chunks_exact(5) {
+                for r in chunk {
+                    assert_eq!(r.tenants, 2, "flush must serve both tenants");
+                }
+                for r in &chunk[..3] {
+                    assert_eq!(r.jobs, 5, "2 + 3 bands per coalesced band flush");
+                }
+                for r in &chunk[3..] {
+                    assert_eq!(r.jobs, 2, "one Hartree job per tenant");
+                }
             }
             // Steady state through the service path: the last iteration
             // ran entirely on cached plans with zero workspace growth.
             let last = results[0].history.last().unwrap();
             assert!(last.plan_cache_hit, "steady-state iterations must be cache hits");
             assert_eq!(last.alloc_bytes, 0, "steady-state iterations must not allocate");
-            // Per-tenant telemetry grew: 3 transforms x nb bands x iters
-            // requests each, with live latency percentiles.
+            // Per-tenant telemetry grew: (3 band transforms x nb bands +
+            // 2 Hartree legs) x iters requests each, with live latency
+            // percentiles.
             let mt = &driver.service().metrics().tenant_metrics()[a.index()];
-            assert_eq!(mt.requests, (3 * 2 * iters) as u64);
+            assert_eq!(mt.requests, ((3 * 2 + 2) * iters) as u64);
             assert!(mt.p50().is_some() && mt.p95().is_some() && mt.p99().is_some());
             assert_eq!(
                 driver.service().metrics().tenant_metrics()[b.index()].requests,
-                (3 * 3 * iters) as u64
+                ((3 * 3 + 2) * iters) as u64
             );
             // All quota charges returned once the run's slots dropped.
             assert_eq!(driver.service().tenant_charged(a), 0);
@@ -1146,6 +1501,18 @@ mod tests {
                         s.max_residual.to_bits(),
                         t.max_residual.to_bits(),
                         "iter {}",
+                        s.iter
+                    );
+                    assert_eq!(
+                        s.energy.total.to_bits(),
+                        t.energy.total.to_bits(),
+                        "iter {} total energy",
+                        s.iter
+                    );
+                    assert_eq!(
+                        s.energy.hartree.to_bits(),
+                        t.energy.hartree.to_bits(),
+                        "iter {} Hartree energy",
                         s.iter
                     );
                 }

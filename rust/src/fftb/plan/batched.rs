@@ -88,6 +88,14 @@ impl NonBatchedLoop {
         self.ws.lock().unwrap().slots.recycle(buf);
     }
 
+    /// Check out a batch-wide buffer from the loop's slot pool, reporting
+    /// any fresh allocation the take caused.
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        let ctr = std::cell::Cell::new(0u64);
+        let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+        (buf, ctr.get())
+    }
+
     /// Rank count of the 1D processing grid the inner plan runs on.
     pub fn grid_size(&self) -> usize {
         self.single.grid_size()
@@ -103,18 +111,38 @@ impl NonBatchedLoop {
         self.nb * self.single.output_len()
     }
 
+    /// Owned-storage adapter over [`NonBatchedLoop::run_into`].
     fn run(
         &self,
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
         forward: bool,
     ) -> (Vec<Complex>, ExecTrace) {
+        let out_len = if forward { self.output_len() } else { self.input_len() };
+        let (mut out, grew) = self.take_pooled(out_len);
+        let mut trace = self.run_into(backend, &input, &mut out, forward);
+        trace.alloc_bytes += grew;
+        self.recycle(input);
+        (out, trace)
+    }
+
+    /// Band-looped execution into a caller-owned slice: each band is
+    /// extracted straight out of the borrowed input and every single-band
+    /// result lands in its batch-strided position of `out`.
+    pub(crate) fn run_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+        forward: bool,
+    ) -> ExecTrace {
         let (in_band, out_band) = if forward {
             (self.single.input_len(), self.single.output_len())
         } else {
             (self.single.output_len(), self.single.input_len())
         };
         assert_eq!(input.len(), self.nb * in_band);
+        assert_eq!(out.len(), self.nb * out_band);
 
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
@@ -122,26 +150,24 @@ impl NonBatchedLoop {
         // steady-state: non-batched band loop
         // Band staging buffers circulate through the loop workspace; the
         // inner single-band plan audits its own region.
-        let mut out = ws.slots.take(self.nb * out_band, &ws.alloc);
         let mut band = std::mem::take(&mut ws.work);
         let mut trace = ExecTrace::default();
         for b in 0..self.nb {
             ensure(&mut band, in_band, &ws.alloc);
-            extract_band_into(&input, self.nb, b, &mut band);
+            extract_band_into(input, self.nb, b, &mut band);
             let (res, tr) = if forward {
                 self.single.forward(backend, band)
             } else {
                 self.single.inverse(backend, band)
             };
-            insert_band(&mut out, self.nb, b, &res);
+            insert_band(out, self.nb, b, &res);
             band = res; // recycle the single plan's output as the next band
             accumulate(&mut trace, tr);
         }
         ws.work = band;
-        ws.slots.recycle(input); // the consumed input's storage joins the pool
         // steady-state: end
         trace.alloc_bytes += ws.allocated();
-        (out, trace)
+        trace
     }
 
     /// Forward transform: `nb` single-band forward passes, traces summed.
@@ -196,6 +222,14 @@ impl PlaneWaveLoop {
         self.ws.lock().unwrap().slots.recycle(buf);
     }
 
+    /// Check out a batch-wide buffer from the loop's slot pool, reporting
+    /// any fresh allocation the take caused.
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        let ctr = std::cell::Cell::new(0u64);
+        let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+        (buf, ctr.get())
+    }
+
     /// Rank count of the 1D processing grid the inner plan runs on.
     pub fn grid_size(&self) -> usize {
         self.single.grid_size()
@@ -216,18 +250,38 @@ impl PlaneWaveLoop {
         self.nb * self.single.output_len()
     }
 
+    /// Owned-storage adapter over [`PlaneWaveLoop::run_into`].
     fn run(
         &self,
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
         forward: bool,
     ) -> (Vec<Complex>, ExecTrace) {
+        let out_len = if forward { self.output_len() } else { self.input_len() };
+        let (mut out, grew) = self.take_pooled(out_len);
+        let mut trace = self.run_into(backend, &input, &mut out, forward);
+        trace.alloc_bytes += grew;
+        self.recycle(input);
+        (out, trace)
+    }
+
+    /// Band-looped execution into a caller-owned slice: each band is
+    /// extracted straight out of the borrowed input and every single-band
+    /// result lands in its batch-strided position of `out`.
+    pub(crate) fn run_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+        forward: bool,
+    ) -> ExecTrace {
         let (in_band, out_band) = if forward {
             (self.single.input_len(), self.single.output_len())
         } else {
             (self.single.output_len(), self.single.input_len())
         };
         assert_eq!(input.len(), self.nb * in_band);
+        assert_eq!(out.len(), self.nb * out_band);
 
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
@@ -235,26 +289,24 @@ impl PlaneWaveLoop {
         // steady-state: non-batched band loop
         // Band staging buffers circulate through the loop workspace; the
         // inner single-band plan audits its own region.
-        let mut out = ws.slots.take(self.nb * out_band, &ws.alloc);
         let mut band = std::mem::take(&mut ws.work);
         let mut trace = ExecTrace::default();
         for b in 0..self.nb {
             ensure(&mut band, in_band, &ws.alloc);
-            extract_band_into(&input, self.nb, b, &mut band);
+            extract_band_into(input, self.nb, b, &mut band);
             let (res, tr) = if forward {
                 self.single.forward(backend, band)
             } else {
                 self.single.inverse(backend, band)
             };
-            insert_band(&mut out, self.nb, b, &res);
+            insert_band(out, self.nb, b, &res);
             band = res; // recycle the single plan's output as the next band
             accumulate(&mut trace, tr);
         }
         ws.work = band;
-        ws.slots.recycle(input); // the consumed input's storage joins the pool
         // steady-state: end
         trace.alloc_bytes += ws.allocated();
-        (out, trace)
+        trace
     }
 
     /// Forward transform: `nb` single-band forward passes, traces summed.

@@ -206,6 +206,10 @@ impl Fftb {
     /// arguments and every rank gets the same choice (see
     /// [`Tuner::plan_auto`](crate::tuner::Tuner::plan_auto), which this
     /// forwards to, for the wisdom interplay).
+    ///
+    /// Convenience alias for the request builder:
+    /// `Fftb::request(sizes).nb(nb).sphere_opt(sphere).plan(tuner, comm,
+    /// backend)`.
     pub fn plan_auto(
         sizes: [usize; 3],
         nb: usize,
@@ -224,6 +228,10 @@ impl Fftb {
     /// one forward *plus* one inverse execution per candidate instead of
     /// the forward-only probe (see
     /// [`Tuner::plan_auto_scf`](crate::tuner::Tuner::plan_auto_scf)).
+    ///
+    /// Convenience alias for the request builder:
+    /// `Fftb::request(sizes).nb(nb).sphere_opt(sphere)
+    /// .workload(WorkloadProfile::RoundTrip).plan(tuner, comm, backend)`.
     pub fn plan_auto_scf(
         sizes: [usize; 3],
         nb: usize,
@@ -258,6 +266,33 @@ impl Fftb {
         };
         fx.set_comm_tuning(tuning);
         Ok(fx)
+    }
+
+    /// Start an auto-tuned plan request: the one builder behind every
+    /// `plan_auto*` entry point. Chain the workload description and finish
+    /// with [`PlanRequestBuilder::plan`]:
+    ///
+    /// ```text
+    /// Fftb::request(shape)
+    ///     .nb(nb)
+    ///     .sphere(offsets)
+    ///     .workload(WorkloadProfile::RoundTrip)
+    ///     .plan(&mut tuner, &comm, Some(&backend))?
+    /// ```
+    ///
+    /// The builder is the only place a
+    /// [`TuneRequest`](crate::tuner::TuneRequest) is assembled; the named
+    /// wrappers ([`Fftb::plan_auto`], [`Fftb::plan_auto_scf`],
+    /// [`Tuner::plan_auto_real`](crate::tuner::Tuner::plan_auto_real)) are
+    /// rustdoc'd convenience aliases over it.
+    pub fn request(shape: [usize; 3]) -> PlanRequestBuilder {
+        PlanRequestBuilder {
+            shape,
+            nb: 1,
+            sphere: None,
+            profile: crate::tuner::WorkloadProfile::Forward,
+            real: false,
+        }
     }
 
     fn plan_inner(
@@ -431,27 +466,86 @@ impl Fftb {
     }
 
     /// Execute the transform on this rank's local data.
+    ///
+    /// Thin owned-storage adapter over [`execute_into`](Self::execute_into):
+    /// the output is drawn from the selected plan's recycled slot pool
+    /// ([`take_buffer`](Self::take_buffer)) and the consumed input's storage
+    /// is [`recycle`](Self::recycle)d back into it, so steady-state loops
+    /// stay allocation-free through either entry point.
     pub fn execute(
         &self,
         backend: &dyn LocalFftBackend,
         data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
+        let out_len = match dir {
+            Direction::Forward => self.output_len(),
+            Direction::Inverse => self.input_len(),
+        };
+        let (mut out, grew) = self.take_buffer(out_len);
+        let mut trace = self.execute_into(backend, &data, &mut out, dir);
+        trace.alloc_bytes += grew;
+        self.recycle(data);
+        (out, trace)
+    }
+
+    /// Execute the transform reading borrowed `input` and writing the
+    /// result into caller-provided `output` — the zero-copy primitive
+    /// behind [`execute`](Self::execute). `input.len()` / `output.len()`
+    /// must match the direction's expected extents
+    /// ([`input_len`](Self::input_len) → [`output_len`](Self::output_len)
+    /// forward, swapped for `Inverse`). The result is bit-identical to the
+    /// owned-storage path; steady-state executions report
+    /// `alloc_bytes == 0` exactly like `execute` once the workspace pools
+    /// are warm.
+    pub fn execute_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        output: &mut [Complex],
+        dir: Direction,
+    ) -> ExecTrace {
         match (&self.kind, dir) {
-            (PlanKind::SlabPencil(p), Direction::Forward) => p.forward(backend, data),
-            (PlanKind::SlabPencil(p), Direction::Inverse) => p.inverse(backend, data),
-            (PlanKind::SlabPencilLoop(p), Direction::Forward) => p.forward(backend, data),
-            (PlanKind::SlabPencilLoop(p), Direction::Inverse) => p.inverse(backend, data),
-            (PlanKind::Pencil(p), Direction::Forward) => p.forward(backend, data),
-            (PlanKind::Pencil(p), Direction::Inverse) => p.inverse(backend, data),
-            (PlanKind::PlaneWave(p), Direction::Forward) => p.forward(backend, data),
-            (PlanKind::PlaneWave(p), Direction::Inverse) => p.inverse(backend, data),
-            (PlanKind::PlaneWaveLoop(p), Direction::Forward) => p.forward(backend, data),
-            (PlanKind::PlaneWaveLoop(p), Direction::Inverse) => p.inverse(backend, data),
-            (PlanKind::PaddedSphere(p), Direction::Forward) => p.forward(backend, data),
-            (PlanKind::PaddedSphere(p), Direction::Inverse) => p.inverse(backend, data),
-            (PlanKind::PlaneWaveR2c(p), Direction::Forward) => p.forward_embedded(backend, data),
-            (PlanKind::PlaneWaveR2c(p), Direction::Inverse) => p.inverse_embedded(backend, data),
+            (PlanKind::SlabPencil(p), _) => p.run_into(backend, input, output, dir),
+            (PlanKind::SlabPencilLoop(p), _) => {
+                p.run_into(backend, input, output, dir == Direction::Forward)
+            }
+            (PlanKind::Pencil(p), _) => p.run_into(backend, input, output, dir),
+            (PlanKind::PlaneWave(p), Direction::Forward) => p.forward_into(backend, input, output),
+            (PlanKind::PlaneWave(p), Direction::Inverse) => p.inverse_into(backend, input, output),
+            (PlanKind::PlaneWaveLoop(p), _) => {
+                p.run_into(backend, input, output, dir == Direction::Forward)
+            }
+            (PlanKind::PaddedSphere(p), Direction::Forward) => {
+                p.forward_into(backend, input, output)
+            }
+            (PlanKind::PaddedSphere(p), Direction::Inverse) => {
+                p.inverse_into(backend, input, output)
+            }
+            (PlanKind::PlaneWaveR2c(p), Direction::Forward) => {
+                p.forward_embedded_into(backend, input, output)
+            }
+            (PlanKind::PlaneWaveR2c(p), Direction::Inverse) => {
+                p.inverse_embedded_into(backend, input, output)
+            }
+        }
+    }
+
+    /// Check out a buffer of `len` elements from the selected plan's slot
+    /// pool, returning it with the bytes of fresh capacity the pool had to
+    /// mint (`0` once warm). This is the staging step of the owned-storage
+    /// [`execute`](Self::execute) adapter, exposed so callers pairing
+    /// [`execute_into`](Self::execute_into) with long-lived owned storage
+    /// can draw that storage from the same recycled pool.
+    pub fn take_buffer(&self, len: usize) -> (Vec<Complex>, u64) {
+        match &self.kind {
+            PlanKind::SlabPencil(p) => p.take_pooled(len),
+            PlanKind::SlabPencilLoop(p) => p.take_pooled(len),
+            PlanKind::Pencil(p) => p.take_pooled(len),
+            PlanKind::PlaneWave(p) => p.take_pooled(len),
+            PlanKind::PlaneWaveLoop(p) => p.take_pooled(len),
+            PlanKind::PaddedSphere(p) => p.take_pooled(len),
+            PlanKind::PlaneWaveR2c(p) => p.take_pooled(len),
         }
     }
 
@@ -496,6 +590,77 @@ impl Fftb {
             PlanKind::PaddedSphere(p) => p.recycle(buf),
             PlanKind::PlaneWaveR2c(p) => p.recycle(buf),
         }
+    }
+}
+
+/// Fluent description of an auto-tuned plan request (see
+/// [`Fftb::request`]). Defaults: `nb = 1`, dense cuboid (no sphere),
+/// forward-only workload, complex coefficients.
+pub struct PlanRequestBuilder {
+    shape: [usize; 3],
+    nb: usize,
+    sphere: Option<Arc<crate::fftb::sphere::OffsetArray>>,
+    profile: crate::tuner::WorkloadProfile,
+    real: bool,
+}
+
+impl PlanRequestBuilder {
+    /// Batch count (transforms per execution).
+    pub fn nb(mut self, nb: usize) -> Self {
+        self.nb = nb;
+        self
+    }
+
+    /// Transform a cut-off sphere described by `offsets` instead of the
+    /// dense cuboid — selects the plane-wave candidate families.
+    pub fn sphere(mut self, offsets: Arc<crate::fftb::sphere::OffsetArray>) -> Self {
+        self.sphere = Some(offsets);
+        self
+    }
+
+    /// [`sphere`](Self::sphere) taking an `Option` — handy for callers
+    /// whose sphere-ness is itself a parameter.
+    pub fn sphere_opt(mut self, offsets: Option<Arc<crate::fftb::sphere::OffsetArray>>) -> Self {
+        self.sphere = offsets;
+        self
+    }
+
+    /// The coefficients are real (Γ-point wavefunctions): enumerate the
+    /// r2c/c2r Hermitian half-spectrum family alongside c2c. Requires a
+    /// sphere.
+    pub fn real(mut self) -> Self {
+        self.real = true;
+        self
+    }
+
+    /// The cadence the plan will be driven at
+    /// ([`WorkloadProfile::RoundTrip`](crate::tuner::WorkloadProfile) for
+    /// SCF-shaped forward/inverse loops).
+    pub fn workload(mut self, profile: crate::tuner::WorkloadProfile) -> Self {
+        self.profile = profile;
+        self
+    }
+
+    /// Assemble the [`TuneRequest`](crate::tuner::TuneRequest) and hand it
+    /// to the tuner ([`Tuner::plan_request`](crate::tuner::Tuner)):
+    /// wisdom lookup → model ranking → optional empirical probe → plan
+    /// cache. Collective over `comm`; every rank must build an identical
+    /// request.
+    pub fn plan(
+        self,
+        tuner: &mut crate::tuner::Tuner,
+        comm: &crate::comm::communicator::Comm,
+        backend: Option<&dyn LocalFftBackend>,
+    ) -> Result<crate::tuner::TunedPlan> {
+        let req = crate::tuner::TuneRequest {
+            shape: self.shape,
+            nb: self.nb,
+            p: comm.size(),
+            sphere: self.sphere,
+            profile: self.profile,
+            real: self.real,
+        };
+        tuner.plan_request(req, comm, backend)
     }
 }
 

@@ -40,7 +40,7 @@ use crate::fftb::grid::{cyclic, ProcGrid};
 
 use super::redistribute::{volume, A2aSchedule, Shape4, SplitMergeKernel};
 use super::stages::{ExecTrace, StageTimer};
-use super::workspace::{SlotPool, Workspace};
+use super::workspace::{ensure, SlotPool, Workspace};
 
 /// Batched pencil-decomposition 3D FFT plan on a 2D grid.
 pub struct PencilPlan {
@@ -126,6 +126,14 @@ impl PencilPlan {
         self.ws.lock().unwrap().slots.recycle(buf);
     }
 
+    /// Check out a buffer from this plan's slot pool, reporting the bytes
+    /// of fresh allocation the take caused (zero once the pool is warm).
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        let ctr = Cell::new(0u64);
+        let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+        (buf, ctr.get())
+    }
+
     /// `(p0, p1)` extents of the 2D processing grid this plan runs on.
     pub fn grid_dims(&self) -> (usize, usize) {
         (self.grid.axis_len(0), self.grid.axis_len(1))
@@ -191,19 +199,46 @@ impl PencilPlan {
         });
     }
 
+    /// Owned-storage adapter over [`PencilPlan::run_into`]: checks a
+    /// destination slot out of the plan pool, runs the borrowed-slice path,
+    /// and recycles the consumed caller vector.
     fn run(
         &self,
         backend: &dyn LocalFftBackend,
-        mut data: Vec<Complex>,
+        data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
+        let out_len = match dir {
+            Direction::Forward => self.output_len(),
+            Direction::Inverse => self.input_len(),
+        };
+        let (mut out, grew) = self.take_pooled(out_len);
+        let mut trace = self.run_into(backend, &data, &mut out, dir);
+        trace.alloc_bytes += grew;
+        self.recycle(data);
+        (out, trace)
+    }
+
+    /// Execute into a caller-owned output slice. The borrowed input is
+    /// staged once into workspace scratch; the middle stages ping-pong
+    /// through the slot pool as before and the *final* fused exchange
+    /// merges its received blocks directly into `out`, so the caller's
+    /// storage is written exactly once. `out` must hold exactly
+    /// `output_len()` (forward) / `input_len()` (inverse) elements.
+    pub fn run_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+        dir: Direction,
+    ) -> ExecTrace {
         let row = self.grid.axis_comm(0);
         let col = self.grid.axis_comm(1);
         let (sh1, sh2, sh3) = (self.sh1, self.sh2, self.sh3);
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { fft, slots, alloc, .. } = ws;
+        let Workspace { fft, stage, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
@@ -215,52 +250,63 @@ impl PencilPlan {
         // audits the contract at run time.
         match dir {
             Direction::Forward => {
-                assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
-                // 1. FFT x (dense locally).
-                t.compute("fft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);
+                assert_eq!(input.len(), self.input_len(), "forward: wrong input length");
+                assert_eq!(out.len(), self.output_len(), "forward: wrong output length");
+                // 1. Stage the borrowed input, FFT x (dense locally).
+                t.compute("fft_x", lines(input.len(), self.nx), || {
+                    ensure(stage, input.len(), alloc);
+                    stage.copy_from_slice(input);
+                    backend_fft_dim_ws(backend, stage, &sh1, 1, dir, &mut *fft, alloc);
                 });
                 // 2. Fused row alltoall: split x, merge y.
                 Self::exchange(
-                    &mut t, "a2a_xy", row, &self.fwd_xy, &mut data, sh1, 1, sh2, 2, slots,
-                    alloc, self.tuning,
+                    &mut t, "a2a_xy", row, &self.fwd_xy, stage, sh1, 1, sh2, 2, slots, alloc,
+                    self.tuning,
                 );
-                t.compute("fft_y", lines(data.len(), self.ny), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
+                t.compute("fft_y", lines(stage.len(), self.ny), || {
+                    backend_fft_dim_ws(backend, stage, &sh2, 2, dir, &mut *fft, alloc);
                 });
-                // 3. Fused column alltoall: split y, merge z.
-                Self::exchange(
-                    &mut t, "a2a_yz", col, &self.fwd_yz, &mut data, sh2, 2, sh3, 3, slots,
-                    alloc, self.tuning,
-                );
-                t.compute("fft_z", lines(data.len(), self.nz), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
+                // 3. Fused column alltoall into the caller's output: split
+                //    y, merge z.
+                t.comm_a2a("a2a_yz", || {
+                    let dst = &mut out[..];
+                    let c = SplitMergeKernel::new(&self.fwd_yz, stage, sh2, 2, dst, sh3, 3)
+                        .exchange(col, self.tuning);
+                    ((), self.fwd_yz.bytes_remote(), self.fwd_yz.msgs(), c)
+                });
+                t.compute("fft_z", lines(out.len(), self.nz), || {
+                    backend_fft_dim_ws(backend, out, &sh3, 3, dir, &mut *fft, alloc);
                 });
             }
             Direction::Inverse => {
-                assert_eq!(data.len(), self.output_len(), "inverse: wrong input length");
-                t.compute("ifft_z", lines(data.len(), self.nz), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh3, 3, dir, &mut *fft, alloc);
+                assert_eq!(input.len(), self.output_len(), "inverse: wrong input length");
+                assert_eq!(out.len(), self.input_len(), "inverse: wrong output length");
+                t.compute("ifft_z", lines(input.len(), self.nz), || {
+                    ensure(stage, input.len(), alloc);
+                    stage.copy_from_slice(input);
+                    backend_fft_dim_ws(backend, stage, &sh3, 3, dir, &mut *fft, alloc);
                 });
                 Self::exchange(
-                    &mut t, "a2a_zy", col, &self.inv_zy, &mut data, sh3, 3, sh2, 2, slots,
-                    alloc, self.tuning,
+                    &mut t, "a2a_zy", col, &self.inv_zy, stage, sh3, 3, sh2, 2, slots, alloc,
+                    self.tuning,
                 );
-                t.compute("ifft_y", lines(data.len(), self.ny), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh2, 2, dir, &mut *fft, alloc);
+                t.compute("ifft_y", lines(stage.len(), self.ny), || {
+                    backend_fft_dim_ws(backend, stage, &sh2, 2, dir, &mut *fft, alloc);
                 });
-                Self::exchange(
-                    &mut t, "a2a_yx", row, &self.inv_yx, &mut data, sh2, 2, sh1, 1, slots,
-                    alloc, self.tuning,
-                );
-                t.compute("ifft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh1, 1, dir, &mut *fft, alloc);
+                t.comm_a2a("a2a_yx", || {
+                    let dst = &mut out[..];
+                    let c = SplitMergeKernel::new(&self.inv_yx, stage, sh2, 2, dst, sh1, 1)
+                        .exchange(row, self.tuning);
+                    ((), self.inv_yx.bytes_remote(), self.inv_yx.msgs(), c)
+                });
+                t.compute("ifft_x", lines(out.len(), self.nx), || {
+                    backend_fft_dim_ws(backend, out, &sh1, 1, dir, &mut *fft, alloc);
                 });
             }
         }
         // steady-state: end
         trace.alloc_bytes = alloc.get();
-        (data, trace)
+        trace
     }
 }
 

@@ -480,6 +480,14 @@ impl PlaneWavePlan {
         self.ws.lock().unwrap().slots.recycle(buf);
     }
 
+    /// Check out a buffer from this plan's slot pool, reporting the bytes
+    /// of fresh allocation the take caused (zero once the pool is warm).
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        let ctr = Cell::new(0u64);
+        let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+        (buf, ctr.get())
+    }
+
     fn p(&self) -> usize {
         self.grid.size()
     }
@@ -529,12 +537,35 @@ impl PlaneWavePlan {
     }
 
     /// Forward: packed sphere coefficients → dense z-distributed cube.
+    /// Owned-storage adapter over [`PlaneWavePlan::forward_into`]: the
+    /// output cube comes from the plan pool and the consumed input's
+    /// storage joins it for later calls.
     pub fn forward(
         &self,
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
+        let (mut out, grew) = self.take_pooled(self.output_len());
+        let mut trace = self.forward_into(backend, &input, &mut out);
+        trace.alloc_bytes += grew;
+        self.recycle(input);
+        (out, trace)
+    }
+
+    /// Forward into a caller-owned dense slab — the fully zero-copy path
+    /// of the `execute_into` surface: the borrowed packed input is read in
+    /// place by the scatter stage, the padding memset lands directly in
+    /// `out`, and the fused exchange plus both padded FFT passes run on
+    /// the caller's storage. `out` must hold exactly `output_len()`
+    /// elements.
+    pub fn forward_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+    ) -> ExecTrace {
         assert_eq!(input.len(), self.input_len(), "forward: wrong input length");
+        assert_eq!(out.len(), self.output_len(), "forward: wrong output length");
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
@@ -542,21 +573,20 @@ impl PlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
+        let Workspace { fft, work, panel, alloc, .. } = ws;
         let alloc = &*alloc;
-        let mut cube = Vec::new();
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
         // steady-state: plane-wave forward
-        // All storage below is workspace-pooled or arena-backed;
-        // pallas-lint rejects allocating calls in this region and
-        // `trace.alloc_bytes` audits it at run time.
+        // All storage below is workspace-pooled, arena-backed or owned by
+        // the caller; pallas-lint rejects allocating calls in this region
+        // and `trace.alloc_bytes` audits it at run time.
         // 1. Scatter z-runs to dense columns + FFT z.
         //    Dense layout: [nb, nz, C_loc], one zero-padded line per disc col.
         t.reshape("scatter_z", || {
             ensure_zeroed(&mut *work, nb * nz * ncols, alloc);
-            self.local_off.scatter_z_into(&input, nb, &mut *work);
+            self.local_off.scatter_z_into(input, nb, &mut *work);
         });
         t.compute("pad_fft_z", backend.flops(nb * nz * ncols, nz), || {
             backend_fft_dim_ws(
@@ -570,10 +600,10 @@ impl PlaneWavePlan {
             );
         });
 
-        // 2. Stage the zeroed slab the received columns land in (a pooled
-        //    output slot; the zero fill is the padding memset).
+        // 2. Zero the caller's slab the received columns land in (the zero
+        //    fill is the padding memset).
         t.reshape("stage_cube", || {
-            cube = slots.take_zeroed(nb * nx * ny * lzc, alloc);
+            out.fill(complex::ZERO);
         });
 
         // 3. Fused exchange: destination s's z-residue block (for each
@@ -597,12 +627,12 @@ impl PlaneWavePlan {
                     nx,
                     ny,
                     lzc,
-                    cube: &mut cube[..],
+                    cube: &mut out[..],
                 };
                 stage_self_block(comm, &pack, &mut unpack);
                 alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
             } else {
-                let mut k = SphereFwdKernel { plan: self, work: &work[..], cube: &mut cube[..] };
+                let mut k = SphereFwdKernel { plan: self, work: &work[..], cube: &mut out[..] };
                 fused_exchange(comm, &mut k, self.tuning)
             };
             ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
@@ -613,14 +643,14 @@ impl PlaneWavePlan {
         let y_lines: f64 =
             (nb * self.disc_xs.len() * lzc) as f64 * crate::fft::batch::fft_flops(ny);
         t.compute("pad_fft_y", y_lines, || {
-            self.fft_y_disc(backend, &mut cube, Direction::Forward, &mut *panel, &mut *fft, alloc);
+            self.fft_y_disc(backend, out, Direction::Forward, &mut *panel, &mut *fft, alloc);
         });
 
         // 4. Dense FFT along x.
-        t.compute("fft_x", backend.flops(cube.len(), nx), || {
+        t.compute("fft_x", backend.flops(out.len(), nx), || {
             backend_fft_dim_ws(
                 backend,
-                &mut cube,
+                out,
                 &[nb, nx, ny, lzc],
                 1,
                 Direction::Forward,
@@ -628,21 +658,39 @@ impl PlaneWavePlan {
                 alloc,
             );
         });
-        // The consumed input's storage joins the pool for later calls.
-        slots.recycle(input);
         // steady-state: end
         trace.alloc_bytes = alloc.get();
-        (cube, trace)
+        trace
     }
 
     /// Inverse: dense z-distributed cube → packed sphere coefficients
-    /// (truncation, the r→G half of a DFT step).
+    /// (truncation, the r→G half of a DFT step). Owned-storage adapter
+    /// over [`PlaneWavePlan::inverse_into`]: the packed output comes from
+    /// the plan pool and the consumed cube's storage joins it.
     pub fn inverse(
         &self,
         backend: &dyn LocalFftBackend,
-        mut cube: Vec<Complex>,
+        cube: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
-        assert_eq!(cube.len(), self.output_len(), "inverse: wrong input length");
+        let (mut packed, grew) = self.take_pooled(self.input_len());
+        let mut trace = self.inverse_into(backend, &cube, &mut packed);
+        trace.alloc_bytes += grew;
+        self.recycle(cube);
+        (packed, trace)
+    }
+
+    /// Inverse into a caller-owned packed slice: the borrowed cube is
+    /// staged once into workspace scratch (the x pass mutates in place),
+    /// and the final truncating gather writes straight into `out`. `out`
+    /// must hold exactly `input_len()` elements.
+    pub fn inverse_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+    ) -> ExecTrace {
+        assert_eq!(input.len(), self.output_len(), "inverse: wrong input length");
+        assert_eq!(out.len(), self.input_len(), "inverse: wrong output length");
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
@@ -650,18 +698,19 @@ impl PlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
+        let Workspace { fft, work, panel, stage, alloc, .. } = ws;
         let alloc = &*alloc;
-        let mut packed = Vec::new();
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
         // steady-state: plane-wave inverse
-        // 1. Dense inverse FFT along x.
-        t.compute("ifft_x", backend.flops(cube.len(), nx), || {
+        // 1. Stage the borrowed cube, dense inverse FFT along x.
+        t.compute("ifft_x", backend.flops(input.len(), nx), || {
+            ensure(stage, input.len(), alloc);
+            stage.copy_from_slice(input);
             backend_fft_dim_ws(
                 backend,
-                &mut cube,
+                stage,
                 &[nb, nx, ny, lzc],
                 1,
                 Direction::Inverse,
@@ -675,7 +724,7 @@ impl PlaneWavePlan {
         let y_lines: f64 =
             (nb * self.disc_xs.len() * lzc) as f64 * crate::fft::batch::fft_flops(ny);
         t.compute("trunc_ifft_y", y_lines, || {
-            self.fft_y_disc(backend, &mut cube, Direction::Inverse, &mut *panel, &mut *fft, alloc);
+            self.fft_y_disc(backend, stage, Direction::Inverse, &mut *panel, &mut *fft, alloc);
         });
 
         // 3. Stage the dense-column buffer the merge lands in (every
@@ -696,7 +745,7 @@ impl PlaneWavePlan {
                     nx,
                     ny,
                     lzc,
-                    cube: &cube[..],
+                    cube: &stage[..],
                 };
                 let mut unpack = SphereInvUnpackHalf {
                     counts: &self.inv.recv_counts,
@@ -709,13 +758,14 @@ impl PlaneWavePlan {
                 stage_self_block(comm, &pack, &mut unpack);
                 alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
             } else {
-                let mut k = SphereInvKernel { plan: self, cube: &cube[..], work: &mut work[..] };
+                let mut k = SphereInvKernel { plan: self, cube: &stage[..], work: &mut work[..] };
                 fused_exchange(comm, &mut k, self.tuning)
             };
             ((), self.inv.bytes_remote(), self.inv.msgs(), c)
         });
 
-        // 5. Inverse FFT along z, truncate to the sphere runs.
+        // 5. Inverse FFT along z, truncate to the sphere runs — straight
+        //    into the caller's packed slice.
         t.compute("ifft_z", backend.flops(nb * nz * ncols, nz), || {
             backend_fft_dim_ws(
                 backend,
@@ -728,13 +778,11 @@ impl PlaneWavePlan {
             );
         });
         t.reshape("gather_z", || {
-            packed = slots.take(nb * self.local_off.total(), alloc);
-            self.local_off.gather_z_into(&*work, nb, &mut packed);
+            self.local_off.gather_z_into(&*work, nb, out);
         });
-        slots.recycle(cube);
         // steady-state: end
         trace.alloc_bytes = alloc.get();
-        (packed, trace)
+        trace
     }
 }
 
@@ -798,101 +846,120 @@ impl PaddedSpherePlan {
         self.slab.output_len()
     }
 
+    /// Check out a buffer, routed by *length* exactly like
+    /// [`PaddedSpherePlan::recycle`]: dense cube-length requests draw from
+    /// the inner slab plan's pool, packed-length requests from the
+    /// wrapper's own.
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        if len == self.output_len() {
+            self.slab.take_pooled(len)
+        } else {
+            let ctr = Cell::new(0u64);
+            let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+            (buf, ctr.get())
+        }
+    }
+
     /// Forward: scatter the sphere into the local slice of the full cube,
-    /// then run the dense distributed FFT on everything (padding included).
+    /// then run the dense distributed FFT on everything (padding
+    /// included). Owned-storage adapter over
+    /// [`PaddedSpherePlan::forward_into`]; the consumed input is recycled
+    /// with the same length routing `recycle` documents.
     pub fn forward(
         &self,
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
-        assert_eq!(input.len(), self.input_len());
-        let nb = self.nb;
-        let (lxc, ny, nz) = (self.local_off.nx, self.local_off.ny, self.local_off.nz);
-        let mut trace = ExecTrace::default();
-        let cube = {
-            let mut guard = self.ws.lock().unwrap();
-            let ws = &mut *guard;
-            ws.begin();
-            let mut cube = Vec::new();
-            let mut t = StageTimer::new(&mut trace);
-            // steady-state: padded-sphere forward (pad stage)
-            // Pad up front: local dense [nb, lxc, ny, nz]. The cube comes
-            // from the *inner slab plan's* pool — that is where the
-            // consumed cube and caller-recycled outputs land, so
-            // cube-sized storage circulates through one pool.
-            t.reshape("pad_full", || {
-                let (mut c, grew) = self.slab.take_pooled(nb * lxc * ny * nz);
-                ws.alloc.set(ws.alloc.get() + grew);
-                c.fill(crate::fft::complex::ZERO);
-                cube = c;
-                for y in 0..ny {
-                    for lx in 0..lxc {
-                        let mut e = self.local_off.col_offset(lx, y);
-                        for &(z0, len) in self.local_off.col_runs(lx, y) {
-                            for z in z0 as usize..(z0 + len) as usize {
-                                let dst = nb * (lx + lxc * (y + ny * z));
-                                let src = nb * e;
-                                cube[dst..dst + nb].copy_from_slice(&input[src..src + nb]);
-                                e += 1;
-                            }
-                        }
-                    }
-                }
-            });
-            // Consumed-input routing mirrors `recycle`: a degenerate
-            // full-cube sphere's packed input is cube-length and belongs
-            // to the slab pool (where pad_full and the degenerate
-            // trunc_full draw); ordinary packed inputs refill the
-            // wrapper's pool. (`self.recycle` would re-lock `ws` — route
-            // inline.)
-            if input.len() == self.slab.output_len() {
-                self.slab.recycle(input);
-            } else {
-                ws.slots.recycle(input);
-            }
-            // steady-state: end
-            trace.alloc_bytes = ws.allocated();
-            cube
-        };
-        let (out, slab_trace) = self.slab.forward(backend, cube);
-        trace.alloc_bytes += slab_trace.alloc_bytes;
-        trace.wait_ns += slab_trace.wait_ns;
-        trace.overlap_rounds += slab_trace.overlap_rounds;
-        trace.pack_overlap_ns += slab_trace.pack_overlap_ns;
-        trace.unpack_overlap_ns += slab_trace.unpack_overlap_ns;
-        trace.worker_busy_ns += slab_trace.worker_busy_ns;
-        trace.pipeline_overlap_ns += slab_trace.pipeline_overlap_ns;
-        trace.stages.extend(slab_trace.stages);
+        let (mut out, grew) = self.take_pooled(self.output_len());
+        let mut trace = self.forward_into(backend, &input, &mut out);
+        trace.alloc_bytes += grew;
+        self.recycle(input);
         (out, trace)
     }
 
-    /// Inverse: dense distributed inverse FFT, then truncate to the sphere.
+    /// Forward into a caller-owned dense slab: the borrowed sphere is
+    /// scattered into a pooled full cube, and the inner dense plan's
+    /// borrowed-slice path runs straight into `out`.
+    pub fn forward_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+    ) -> ExecTrace {
+        assert_eq!(input.len(), self.input_len(), "forward: wrong input length");
+        let nb = self.nb;
+        let (lxc, ny, nz) = (self.local_off.nx, self.local_off.ny, self.local_off.nz);
+        let mut trace = ExecTrace::default();
+        let mut cube = Vec::new();
+        let grew = Cell::new(0u64);
+        let mut t = StageTimer::new(&mut trace);
+        // steady-state: padded-sphere forward (pad stage)
+        // Pad up front: local dense [nb, lxc, ny, nz]. The cube comes
+        // from the *inner slab plan's* pool — that is where the
+        // consumed cube and caller-recycled outputs land, so
+        // cube-sized storage circulates through one pool.
+        t.reshape("pad_full", || {
+            let (mut c, g) = self.slab.take_pooled(nb * lxc * ny * nz);
+            grew.set(grew.get() + g);
+            c.fill(crate::fft::complex::ZERO);
+            cube = c;
+            for y in 0..ny {
+                for lx in 0..lxc {
+                    let mut e = self.local_off.col_offset(lx, y);
+                    for &(z0, len) in self.local_off.col_runs(lx, y) {
+                        for z in z0 as usize..(z0 + len) as usize {
+                            let dst = nb * (lx + lxc * (y + ny * z));
+                            let src = nb * e;
+                            cube[dst..dst + nb].copy_from_slice(&input[src..src + nb]);
+                            e += 1;
+                        }
+                    }
+                }
+            }
+        });
+        // steady-state: end
+        trace.alloc_bytes = grew.get();
+        let slab_trace = self.slab.run_into(backend, &cube, out, Direction::Forward);
+        // Cube-sized storage belongs to the inner slab plan's pool.
+        self.slab.recycle(cube);
+        merge_trace(&mut trace, slab_trace);
+        trace
+    }
+
+    /// Inverse: dense distributed inverse FFT, then truncate to the
+    /// sphere. Owned-storage adapter over
+    /// [`PaddedSpherePlan::inverse_into`]; output and consumed cube are
+    /// length-routed between the slab and wrapper pools (see `recycle`).
     pub fn inverse(
         &self,
         backend: &dyn LocalFftBackend,
         cube: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
-        let (back, mut trace) = self.slab.inverse(backend, cube);
+        let (mut packed, grew) = self.take_pooled(self.input_len());
+        let mut trace = self.inverse_into(backend, &cube, &mut packed);
+        trace.alloc_bytes += grew;
+        self.recycle(cube);
+        (packed, trace)
+    }
+
+    /// Inverse into a caller-owned packed slice: the inner dense plan's
+    /// borrowed-slice inverse lands in a pooled full cube, which the
+    /// truncation stage gathers straight into `out`.
+    pub fn inverse_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+    ) -> ExecTrace {
+        assert_eq!(out.len(), self.input_len(), "inverse: wrong output length");
+        let (mut back, grew) = self.slab.take_pooled(self.slab.input_len());
+        let mut trace = self.slab.run_into(backend, input, &mut back, Direction::Inverse);
+        trace.alloc_bytes += grew;
         let nb = self.nb;
         let (lxc, ny) = (self.local_off.nx, self.local_off.ny);
-        let mut guard = self.ws.lock().unwrap();
-        let ws = &mut *guard;
-        ws.begin();
-        let mut packed = Vec::new();
         let mut t = StageTimer::new(&mut trace);
         // steady-state: padded-sphere inverse (truncate stage)
         t.reshape("trunc_full", || {
-            let packed_len = nb * self.local_off.total();
-            // Degenerate full-cube spheres: packed buffers are cube-length
-            // and live in the slab pool (see `recycle`); otherwise the
-            // wrapper's own pool serves the truncation stage.
-            packed = if packed_len == self.output_len() {
-                let (buf, grew) = self.slab.take_pooled(packed_len);
-                ws.alloc.set(ws.alloc.get() + grew);
-                buf
-            } else {
-                ws.slots.take(packed_len, &ws.alloc)
-            };
             for y in 0..ny {
                 for lx in 0..lxc {
                     let mut e = self.local_off.col_offset(lx, y);
@@ -900,7 +967,7 @@ impl PaddedSpherePlan {
                         for z in z0 as usize..(z0 + len) as usize {
                             let src = nb * (lx + lxc * (y + ny * z));
                             let dst = nb * e;
-                            packed[dst..dst + nb].copy_from_slice(&back[src..src + nb]);
+                            out[dst..dst + nb].copy_from_slice(&back[src..src + nb]);
                             e += 1;
                         }
                     }
@@ -910,9 +977,22 @@ impl PaddedSpherePlan {
         // Cube-sized storage belongs to the inner slab plan's pool.
         self.slab.recycle(back);
         // steady-state: end
-        trace.alloc_bytes += ws.allocated();
-        (packed, trace)
+        trace
     }
+}
+
+/// Fold one sub-plan's trace (stages and overlap counters) into `total` —
+/// the padded-sphere wrapper composes its pad/truncate stages with the
+/// inner dense plan's trace this way.
+fn merge_trace(total: &mut ExecTrace, piece: ExecTrace) {
+    total.alloc_bytes += piece.alloc_bytes;
+    total.wait_ns += piece.wait_ns;
+    total.overlap_rounds += piece.overlap_rounds;
+    total.pack_overlap_ns += piece.pack_overlap_ns;
+    total.unpack_overlap_ns += piece.unpack_overlap_ns;
+    total.worker_busy_ns += piece.worker_busy_ns;
+    total.pipeline_overlap_ns += piece.pipeline_overlap_ns;
+    total.stages.extend(piece.stages);
 }
 
 #[cfg(test)]

@@ -42,7 +42,7 @@ use crate::comm::alltoall::{
     alltoallv_fused_threaded, CommTuning, PackHalf, UnpackHalf,
 };
 use crate::comm::arena::WireBuf;
-use crate::fft::complex::Complex;
+use crate::fft::complex::{Complex, ZERO};
 use crate::fft::dft::Direction;
 use crate::fft::twiddle::twiddles;
 use crate::fftb::backend::{backend_fft_dim_ws, LocalFftBackend};
@@ -340,6 +340,15 @@ impl RealPlaneWavePlan {
         self.ws.lock().unwrap().slots.recycle(buf);
     }
 
+    /// Check out a complex buffer of `len` elements from the slot pool,
+    /// reporting capacity growth — the staging step of the owned-storage
+    /// adapters wrapped around the `_into` primitives.
+    pub(crate) fn take_pooled(&self, len: usize) -> (Vec<Complex>, u64) {
+        let ctr = Cell::new(0u64);
+        let buf = self.ws.lock().unwrap().slots.take(len, &ctr);
+        (buf, ctr.get())
+    }
+
     /// Return a finished real coefficient buffer (an inverse output the
     /// caller is done with) to the plan's real pool.
     pub fn recycle_real(&self, buf: Vec<f64>) {
@@ -464,13 +473,34 @@ impl RealPlaneWavePlan {
 
     /// Forward r2c: packed real sphere coefficients → half-depth complex
     /// slab `[nb, nx, ny, lzc]`, z cyclic over the `nz/2 + 1` unique bins.
-    /// The consumed input's storage joins the plan's real pool.
+    /// The consumed input's storage joins the plan's real pool. Thin
+    /// owned-storage adapter over [`forward_into`](Self::forward_into).
     pub fn forward(
         &self,
         backend: &dyn LocalFftBackend,
         input: Vec<f64>,
     ) -> (Vec<Complex>, ExecTrace) {
+        let (mut out, grew) = self.take_pooled(self.output_len());
+        let mut trace = self.forward_into(backend, &input, &mut out);
+        trace.alloc_bytes += grew;
+        // The consumed real input's storage joins the plan's real pool.
+        self.recycle_real(input);
+        (out, trace)
+    }
+
+    /// Forward r2c into caller-provided storage: borrowed packed real
+    /// coefficients in, the half-depth slab overwritten in place. The
+    /// pair-pack scatter reads the borrowed input directly and the fused
+    /// exchange lands received columns straight in `out`, so neither end of
+    /// the transform is ever copied into owned storage.
+    pub fn forward_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[f64],
+        out: &mut [Complex],
+    ) -> ExecTrace {
         assert_eq!(input.len(), self.input_len(), "r2c forward: wrong input length");
+        assert_eq!(out.len(), self.output_len(), "r2c forward: wrong output length");
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
@@ -481,18 +511,18 @@ impl RealPlaneWavePlan {
         let Workspace { fft, work, panel, slots, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut half = Vec::new();
-        let mut cube = Vec::new();
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
         // steady-state: r2c plane-wave forward
         // All storage below is workspace-pooled, plan-pooled (the real
-        // buffers) or arena-backed; `trace.alloc_bytes` audits it.
+        // buffers), caller-owned or arena-backed; `trace.alloc_bytes`
+        // audits the pooled part.
         // 1. Pair-pack the real z-runs: [nb, h, ncols] with
         //    z[k] = x[2k] + i·x[2k+1] per column line, zero-padded.
         t.reshape("scatter_rz", || {
             ensure_zeroed(&mut *work, nb * h * ncols, alloc);
-            self.scatter_real_pairs(&input, &mut *work);
+            self.scatter_real_pairs(input, &mut *work);
         });
 
         // 2. One *half-length* FFT per (band, column) line — the flop half
@@ -536,9 +566,10 @@ impl RealPlaneWavePlan {
             }
         });
 
-        // 4. Stage the zeroed half-depth slab the received columns land in.
+        // 4. Zero the half-depth slab the received columns land in — the
+        //    caller's storage, so nothing is staged from the pool here.
         t.reshape("stage_cube", || {
-            cube = slots.take_zeroed(nb * nx * ny * lzc, alloc);
+            out.fill(ZERO);
         });
 
         // 5. Fused Hermitian exchange — identical discipline to the c2c
@@ -561,12 +592,12 @@ impl RealPlaneWavePlan {
                     nx,
                     ny,
                     lzc,
-                    cube: &mut cube[..],
+                    cube: &mut out[..],
                 };
                 stage_self_block(comm, &pack, &mut unpack);
                 alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
             } else {
-                let mut k = HermFwdKernel { plan: self, half: &half[..], cube: &mut cube[..] };
+                let mut k = HermFwdKernel { plan: self, half: &half[..], cube: &mut out[..] };
                 fused_exchange(comm, &mut k, self.tuning)
             };
             ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
@@ -579,7 +610,7 @@ impl RealPlaneWavePlan {
         t.compute("pad_fft_y", y_lines, || {
             fft_y_disc_panel(
                 backend,
-                &mut cube,
+                out,
                 Direction::Forward,
                 nb,
                 nx,
@@ -593,10 +624,10 @@ impl RealPlaneWavePlan {
         });
 
         // 7. Dense FFT along x.
-        t.compute("fft_x", backend.flops(cube.len(), nx), || {
+        t.compute("fft_x", backend.flops(out.len(), nx), || {
             backend_fft_dim_ws(
                 backend,
-                &mut cube,
+                out,
                 &[nb, nx, ny, lzc],
                 1,
                 Direction::Forward,
@@ -604,22 +635,40 @@ impl RealPlaneWavePlan {
                 alloc,
             );
         });
-        // The consumed real input's storage joins the plan's real pool.
-        self.recycle_real(input);
         // steady-state: end
         trace.alloc_bytes = alloc.get();
-        (cube, trace)
+        trace
     }
 
     /// Inverse c2r: half-depth complex slab → packed real sphere
     /// coefficients. Exact inverse of [`forward`](Self::forward) (including
-    /// the 1/n normalization); the consumed slab joins the slot pool.
+    /// the 1/n normalization); the consumed slab joins the slot pool. Thin
+    /// owned-storage adapter over [`inverse_into`](Self::inverse_into).
     pub fn inverse(
         &self,
         backend: &dyn LocalFftBackend,
-        mut cube: Vec<Complex>,
+        cube: Vec<Complex>,
     ) -> (Vec<f64>, ExecTrace) {
-        assert_eq!(cube.len(), self.output_len(), "c2r inverse: wrong input length");
+        let ctr = Cell::new(0u64);
+        let mut packed = self.take_real(self.input_len(), &ctr);
+        let mut trace = self.inverse_into(backend, &cube, &mut packed);
+        trace.alloc_bytes += ctr.get();
+        self.recycle(cube);
+        (packed, trace)
+    }
+
+    /// Inverse c2r into caller-provided storage: the borrowed half-depth
+    /// slab is copied once into workspace staging (the truncating x/y
+    /// passes mutate in place), and the de-interleaving gather writes the
+    /// packed real coefficients straight into `out`.
+    pub fn inverse_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [f64],
+    ) -> ExecTrace {
+        assert_eq!(input.len(), self.output_len(), "c2r inverse: wrong input length");
+        assert_eq!(out.len(), self.input_len(), "c2r inverse: wrong output length");
         let comm = self.grid.axis_comm(0);
         let (nx, ny, nz) = (self.offsets.nx, self.offsets.ny, self.offsets.nz);
         let nb = self.nb;
@@ -627,18 +676,21 @@ impl RealPlaneWavePlan {
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { fft, work, panel, slots, alloc, .. } = ws;
+        let Workspace { fft, work, panel, slots, stage, alloc, .. } = ws;
         let alloc = &*alloc;
         let mut half = Vec::new();
         let mut trace = ExecTrace::default();
         let mut t = StageTimer::new(&mut trace);
 
         // steady-state: r2c plane-wave inverse
-        // 1. Dense inverse FFT along x.
-        t.compute("ifft_x", backend.flops(cube.len(), nx), || {
+        // 1. Copy the borrowed slab into workspace staging, then the dense
+        //    inverse FFT along x.
+        t.compute("ifft_x", backend.flops(input.len(), nx), || {
+            ensure(&mut *stage, input.len(), alloc);
+            stage.copy_from_slice(input);
             backend_fft_dim_ws(
                 backend,
-                &mut cube,
+                stage,
                 &[nb, nx, ny, lzc],
                 1,
                 Direction::Inverse,
@@ -653,7 +705,7 @@ impl RealPlaneWavePlan {
         t.compute("trunc_ifft_y", y_lines, || {
             fft_y_disc_panel(
                 backend,
-                &mut cube,
+                stage,
                 Direction::Inverse,
                 nb,
                 nx,
@@ -683,7 +735,7 @@ impl RealPlaneWavePlan {
                     nx,
                     ny,
                     lzc,
-                    cube: &cube[..],
+                    cube: &stage[..],
                 };
                 let mut unpack = HermInvUnpackHalf {
                     counts: &self.inv.recv_counts,
@@ -696,7 +748,7 @@ impl RealPlaneWavePlan {
                 stage_self_block(comm, &pack, &mut unpack);
                 alltoallv_fused_threaded(comm, &pack, &mut unpack, self.tuning)
             } else {
-                let mut k = HermInvKernel { plan: self, cube: &cube[..], half: &mut half[..] };
+                let mut k = HermInvKernel { plan: self, cube: &stage[..], half: &mut half[..] };
                 fused_exchange(comm, &mut k, self.tuning)
             };
             ((), self.inv.bytes_remote(), self.inv.msgs(), c)
@@ -739,17 +791,14 @@ impl RealPlaneWavePlan {
             );
         });
 
-        // 7. De-interleave back to packed real coefficients.
-        let mut packed = Vec::new();
+        // 7. De-interleave straight into the caller's packed real output.
         t.reshape("gather_rz", || {
-            packed = self.take_real(self.input_len(), alloc);
-            self.gather_real_pairs(work, &mut packed);
+            self.gather_real_pairs(work, out);
         });
-        slots.recycle(cube);
         slots.recycle(std::mem::take(&mut half));
         // steady-state: end
         trace.alloc_bytes = alloc.get();
-        (packed, trace)
+        trace
     }
 
     /// Forward r2c on complex-embedded input (imaginary parts ignored) —
@@ -761,16 +810,32 @@ impl RealPlaneWavePlan {
         backend: &dyn LocalFftBackend,
         input: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
+        let (mut out, grew) = self.take_pooled(self.output_len());
+        let mut trace = self.forward_embedded_into(backend, &input, &mut out);
+        trace.alloc_bytes += grew;
+        self.ws.lock().unwrap().slots.recycle(input);
+        (out, trace)
+    }
+
+    /// Borrowed-storage form of [`forward_embedded`](Self::forward_embedded):
+    /// the real parts of the borrowed complex coefficients are strided into
+    /// a pooled real buffer, and the transform lands in `out` directly.
+    pub fn forward_embedded_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+    ) -> ExecTrace {
         assert_eq!(input.len(), self.input_len(), "r2c forward: wrong input length");
         let ctr = Cell::new(0u64);
         let mut reals = self.take_real(self.input_len(), &ctr);
-        for (r, c) in reals.iter_mut().zip(&input) {
+        for (r, c) in reals.iter_mut().zip(input) {
             *r = c.re;
         }
-        self.ws.lock().unwrap().slots.recycle(input);
-        let (out, mut trace) = self.forward(backend, reals);
+        let mut trace = self.forward_into(backend, &reals, out);
+        self.recycle_real(reals);
         trace.alloc_bytes += ctr.get();
-        (out, trace)
+        trace
     }
 
     /// Inverse c2r returning complex-embedded output (`re` carries the real
@@ -780,15 +845,32 @@ impl RealPlaneWavePlan {
         backend: &dyn LocalFftBackend,
         cube: Vec<Complex>,
     ) -> (Vec<Complex>, ExecTrace) {
-        let (reals, mut trace) = self.inverse(backend, cube);
+        let (mut out, grew) = self.take_pooled(self.input_len());
+        let mut trace = self.inverse_embedded_into(backend, &cube, &mut out);
+        trace.alloc_bytes += grew;
+        self.recycle(cube);
+        (out, trace)
+    }
+
+    /// Borrowed-storage form of [`inverse_embedded`](Self::inverse_embedded):
+    /// the packed real coefficients are gathered into a pooled real buffer
+    /// and re-embedded (`im == 0`) into the caller's complex output.
+    pub fn inverse_embedded_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+    ) -> ExecTrace {
+        assert_eq!(out.len(), self.input_len(), "c2r inverse: wrong output length");
         let ctr = Cell::new(0u64);
-        let mut out = self.ws.lock().unwrap().slots.take(reals.len(), &ctr);
+        let mut reals = self.take_real(self.input_len(), &ctr);
+        let mut trace = self.inverse_into(backend, input, &mut reals);
         for (o, &r) in out.iter_mut().zip(&reals) {
             *o = Complex::new(r, 0.0);
         }
         self.recycle_real(reals);
         trace.alloc_bytes += ctr.get();
-        (out, trace)
+        trace
     }
 }
 

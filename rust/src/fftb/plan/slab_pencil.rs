@@ -38,7 +38,7 @@ use crate::fftb::grid::{cyclic, ProcGrid};
 
 use super::redistribute::{volume, A2aSchedule, Shape4, SplitMergeKernel};
 use super::stages::{ExecTrace, StageTimer};
-use super::workspace::Workspace;
+use super::workspace::{ensure, Workspace};
 
 /// Plan for a batched slab-pencil 3D FFT of global shape `(nx, ny, nz)` on a
 /// 1D grid.
@@ -158,17 +158,44 @@ impl SlabPencilPlan {
         self.run(backend, input, Direction::Inverse)
     }
 
+    /// Owned-storage adapter over [`SlabPencilPlan::run_into`]: checks a
+    /// destination slot out of the plan pool, runs the borrowed-slice path,
+    /// and recycles the consumed caller vector so buffers keep circulating.
     fn run(
         &self,
         backend: &dyn LocalFftBackend,
-        mut data: Vec<Complex>,
+        data: Vec<Complex>,
         dir: Direction,
     ) -> (Vec<Complex>, ExecTrace) {
+        let out_len = match dir {
+            Direction::Forward => self.output_len(),
+            Direction::Inverse => self.input_len(),
+        };
+        let (mut out, grew) = self.take_pooled(out_len);
+        let mut trace = self.run_into(backend, &data, &mut out, dir);
+        trace.alloc_bytes += grew;
+        self.recycle(data);
+        (out, trace)
+    }
+
+    /// Execute into a caller-owned output slice: `input` is read-only
+    /// (staged once into workspace scratch for the in-place local FFTs) and
+    /// the fused exchange merges its received blocks directly into `out` —
+    /// the copy-free surface the SCF Hamiltonian apply runs on. `out` must
+    /// hold exactly `output_len()` (forward) / `input_len()` (inverse)
+    /// elements.
+    pub fn run_into(
+        &self,
+        backend: &dyn LocalFftBackend,
+        input: &[Complex],
+        out: &mut [Complex],
+        dir: Direction,
+    ) -> ExecTrace {
         let comm = self.grid.axis_comm(0);
         let mut guard = self.ws.lock().unwrap();
         let ws = &mut *guard;
         ws.begin();
-        let Workspace { fft, slots, alloc, .. } = ws;
+        let Workspace { fft, stage, alloc, .. } = ws;
         let alloc = &*alloc;
         let (sh_in, sh_out) = (self.sh_in, self.sh_out);
         let mut trace = ExecTrace::default();
@@ -182,59 +209,62 @@ impl SlabPencilPlan {
         // time (`trace.alloc_bytes` must stay 0 after warm-up).
         match dir {
             Direction::Forward => {
-                assert_eq!(data.len(), self.input_len(), "forward: wrong input length");
-                // 1. Local FFT along y and z.
+                assert_eq!(input.len(), self.input_len(), "forward: wrong input length");
+                assert_eq!(out.len(), self.output_len(), "forward: wrong output length");
+                // 1. Stage the borrowed input, local FFT along y and z.
                 t.compute(
                     "fft_yz",
-                    lines(data.len(), self.ny) + lines(data.len(), self.nz),
+                    lines(input.len(), self.ny) + lines(input.len(), self.nz),
                     || {
-                        backend_fft_dim_ws(backend, &mut data, &sh_in, 2, dir, &mut *fft, alloc);
-                        backend_fft_dim_ws(backend, &mut data, &sh_in, 3, dir, &mut *fft, alloc);
+                        ensure(stage, input.len(), alloc);
+                        stage.copy_from_slice(input);
+                        backend_fft_dim_ws(backend, stage, &sh_in, 2, dir, &mut *fft, alloc);
+                        backend_fft_dim_ws(backend, stage, &sh_in, 3, dir, &mut *fft, alloc);
                     },
                 );
                 // 2. Fused alltoall: trade x split for z split. Each
                 //    destination's z-residue block is packed into its wire
                 //    buffer as its round posts; the block from rank q
-                //    ([nb, lxc_q, ny, lzc_me]) merges along dim 1 into a
-                //    pooled output slot as its wait completes. The consumed
-                //    caller vector joins the pool.
+                //    ([nb, lxc_q, ny, lzc_me]) merges along dim 1 straight
+                //    into the caller's output slice as its wait completes.
                 t.comm_a2a("a2a_xz", || {
-                    let mut out = slots.take(volume(sh_out), alloc);
-                    let c = SplitMergeKernel::new(&self.fwd, &data, sh_in, 3, &mut out, sh_out, 1)
+                    let dst = &mut out[..];
+                    let c = SplitMergeKernel::new(&self.fwd, stage, sh_in, 3, dst, sh_out, 1)
                         .exchange(comm, self.tuning);
-                    slots.recycle(std::mem::replace(&mut data, out));
                     ((), self.fwd.bytes_remote(), self.fwd.msgs(), c)
                 });
                 // 3. Local FFT along dense x.
-                t.compute("fft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh_out, 1, dir, &mut *fft, alloc);
+                t.compute("fft_x", lines(out.len(), self.nx), || {
+                    backend_fft_dim_ws(backend, out, &sh_out, 1, dir, &mut *fft, alloc);
                 });
             }
             Direction::Inverse => {
-                assert_eq!(data.len(), self.output_len(), "inverse: wrong input length");
-                t.compute("ifft_x", lines(data.len(), self.nx), || {
-                    backend_fft_dim_ws(backend, &mut data, &sh_out, 1, dir, &mut *fft, alloc);
+                assert_eq!(input.len(), self.output_len(), "inverse: wrong input length");
+                assert_eq!(out.len(), self.input_len(), "inverse: wrong output length");
+                t.compute("ifft_x", lines(input.len(), self.nx), || {
+                    ensure(stage, input.len(), alloc);
+                    stage.copy_from_slice(input);
+                    backend_fft_dim_ws(backend, stage, &sh_out, 1, dir, &mut *fft, alloc);
                 });
                 t.comm_a2a("a2a_zx", || {
-                    let mut out = slots.take(volume(sh_in), alloc);
-                    let c = SplitMergeKernel::new(&self.inv, &data, sh_out, 1, &mut out, sh_in, 3)
+                    let dst = &mut out[..];
+                    let c = SplitMergeKernel::new(&self.inv, stage, sh_out, 1, dst, sh_in, 3)
                         .exchange(comm, self.tuning);
-                    slots.recycle(std::mem::replace(&mut data, out));
                     ((), self.inv.bytes_remote(), self.inv.msgs(), c)
                 });
                 t.compute(
                     "ifft_yz",
-                    lines(data.len(), self.ny) + lines(data.len(), self.nz),
+                    lines(out.len(), self.ny) + lines(out.len(), self.nz),
                     || {
-                        backend_fft_dim_ws(backend, &mut data, &sh_in, 2, dir, &mut *fft, alloc);
-                        backend_fft_dim_ws(backend, &mut data, &sh_in, 3, dir, &mut *fft, alloc);
+                        backend_fft_dim_ws(backend, out, &sh_in, 2, dir, &mut *fft, alloc);
+                        backend_fft_dim_ws(backend, out, &sh_in, 3, dir, &mut *fft, alloc);
                     },
                 );
             }
         }
         // steady-state: end
         trace.alloc_bytes = alloc.get();
-        (data, trace)
+        trace
     }
 }
 

@@ -170,6 +170,11 @@ pub struct Workspace {
     pub fft: Vec<Complex>,
     /// General stage scratch (dense z-columns, band staging, ...).
     pub work: Vec<Complex>,
+    /// Borrowed-input staging for the `execute_into` paths: plans whose
+    /// pipelines mutate their first buffer in place copy the caller's
+    /// read-only slice here once, then run unchanged. Kept separate from
+    /// `work` because both can be live inside one execution.
+    pub stage: Vec<Complex>,
     /// Panel buffer of the plane-wave staged-y pass.
     pub panel: Vec<Complex>,
     /// Size-classed pool of output buffers: every vector a plan returns is

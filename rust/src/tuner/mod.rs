@@ -155,6 +155,9 @@ impl Tuner {
     /// Collective over `comm` (grid construction splits communicators; the
     /// empirical mode allreduces timings): every rank must call with
     /// identical arguments, and every rank returns the same choice.
+    ///
+    /// Convenience alias for
+    /// `Fftb::request(shape).nb(nb).sphere_opt(sphere).plan(..)`.
     pub fn plan_auto(
         &mut self,
         shape: [usize; 3],
@@ -163,7 +166,7 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
     ) -> Result<TunedPlan> {
-        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::Forward, false)
+        Fftb::request(shape).nb(nb).sphere_opt(sphere).plan(self, comm, backend)
     }
 
     /// [`Tuner::plan_auto`] for real-input (r2c/c2r) workloads: the request
@@ -172,6 +175,9 @@ impl Tuner {
     /// signature, wisdom and plan-cache entries (`PlanKey::r2c`) never
     /// collide with complex requests on the same sphere. Requires a sphere:
     /// the half-traffic exchange is a sphere-plan property.
+    ///
+    /// Convenience alias for
+    /// `Fftb::request(shape).nb(nb).sphere(sphere).real().plan(..)`.
     pub fn plan_auto_real(
         &mut self,
         shape: [usize; 3],
@@ -180,15 +186,7 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
     ) -> Result<TunedPlan> {
-        self.plan_auto_profiled(
-            shape,
-            nb,
-            Some(sphere),
-            comm,
-            backend,
-            WorkloadProfile::Forward,
-            true,
-        )
+        Fftb::request(shape).nb(nb).sphere(sphere).real().plan(self, comm, backend)
     }
 
     /// [`Tuner::plan_auto`] for SCF-shaped (round-trip) workloads: the
@@ -199,6 +197,9 @@ impl Tuner {
     /// [`calibrate::measure_candidates_scf`] instead of the forward-only
     /// probe — the critical-path seconds of one G→r / r→G pair, allreduced
     /// across ranks and persisted to wisdom with probe kind `"scf"`.
+    ///
+    /// Convenience alias for `Fftb::request(shape).nb(nb).sphere_opt(sphere)
+    /// .workload(WorkloadProfile::RoundTrip).plan(..)`.
     pub fn plan_auto_scf(
         &mut self,
         shape: [usize; 3],
@@ -207,24 +208,37 @@ impl Tuner {
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
     ) -> Result<TunedPlan> {
-        self.plan_auto_profiled(shape, nb, sphere, comm, backend, WorkloadProfile::RoundTrip, false)
+        Fftb::request(shape)
+            .nb(nb)
+            .sphere_opt(sphere)
+            .workload(WorkloadProfile::RoundTrip)
+            .plan(self, comm, backend)
     }
 
-    /// Shared body of [`Tuner::plan_auto`] / [`Tuner::plan_auto_scf`]:
-    /// wisdom lookup → model ranking → optional empirical probe (shaped by
-    /// `profile`) → wisdom record → plan-cache fetch.
-    #[allow(clippy::too_many_arguments)]
-    fn plan_auto_profiled(
+    /// Resolve an assembled [`TuneRequest`]: wisdom lookup → model ranking
+    /// → optional empirical probe (shaped by the request's profile) →
+    /// wisdom record → plan-cache fetch. The request comes from the one
+    /// builder that assembles them,
+    /// [`Fftb::request`](crate::fftb::plan::Fftb::request) — the named
+    /// `plan_auto*` entry points are aliases over that builder. Collective
+    /// over `comm`; `req.p` must equal `comm.size()`.
+    pub fn plan_request(
         &mut self,
-        shape: [usize; 3],
-        nb: usize,
-        sphere: Option<Arc<OffsetArray>>,
+        req: TuneRequest,
         comm: &Comm,
         backend: Option<&dyn LocalFftBackend>,
-        profile: WorkloadProfile,
-        real: bool,
     ) -> Result<TunedPlan> {
-        if let Some(off) = &sphere {
+        let shape = req.shape;
+        let nb = req.nb;
+        let profile = req.profile;
+        if req.p != comm.size() {
+            return Err(FftbError::Unsupported(format!(
+                "request was assembled for p={} but the communicator has {} ranks",
+                req.p,
+                comm.size()
+            )));
+        }
+        if let Some(off) = &req.sphere {
             if shape != [off.nx, off.ny, off.nz] {
                 return Err(FftbError::Unsupported(format!(
                     "sphere offsets describe a {}x{}x{} grid but the requested shape \
@@ -233,8 +247,7 @@ impl Tuner {
                 )));
             }
         }
-        let sphere_fp = sphere.as_ref().map_or(0, |o| o.fingerprint());
-        let req = TuneRequest { shape, nb, p: comm.size(), sphere, profile, real };
+        let sphere_fp = req.sphere.as_ref().map_or(0, |o| o.fingerprint());
         let sig = req.signature();
 
         // Wisdom lifecycle: retire entries that have steered too many

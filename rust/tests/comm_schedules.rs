@@ -289,6 +289,8 @@ fn perturbed_scf_is_bit_identical() {
             scalars.push(s.charge);
             scalars.push(s.delta_rho);
             scalars.push(s.max_residual);
+            scalars.push(s.energy.total);
+            scalars.push(s.energy.hartree);
         }
         (scalars, res.density.rho)
     };
@@ -353,6 +355,8 @@ fn perturbed_scf_with_worker_is_bit_identical() {
                 scalars.push(s.charge);
                 scalars.push(s.delta_rho);
                 scalars.push(s.max_residual);
+                scalars.push(s.energy.total);
+                scalars.push(s.energy.hartree);
             }
             (scalars, res.density.rho)
         }

@@ -49,6 +49,8 @@ fn run_scf(p: usize, iters: usize) -> Vec<(Vec<f64>, Vec<f64>, Vec<(bool, u64)>,
             scalars.push(s.charge);
             scalars.push(s.delta_rho);
             scalars.push(s.max_residual);
+            scalars.push(s.energy.total);
+            scalars.push(s.energy.hartree);
         }
         (scalars, res.density.rho, flags, res.plan_kind, res.window)
     })
@@ -78,7 +80,7 @@ fn density_conserved_and_bit_identical_across_ranks() {
         // the first history scalars after the eigenvalues).
         for (scalars, _, _, kind, _) in &outs {
             for it in 0..3 {
-                let charge = scalars[NB + 3 * it];
+                let charge = scalars[NB + 5 * it];
                 assert!(
                     (charge - NB as f64).abs() < 1e-8,
                     "p={p} iter {it}: charge {charge}"
@@ -133,10 +135,11 @@ fn steady_state_is_replan_free_and_allocation_free() {
     for p in [1usize, 2, 4] {
         let outs = run_scf(p, 4);
         for (r, (_, _, flags, _, _)) in outs.iter().enumerate() {
-            assert_eq!(flags.len(), 3 * 4, "three transforms per iteration");
-            // Iteration >= 2 (trace index >= 3): plan served from the
-            // tuner's cache, zero workspace growth — the acceptance pin.
-            for (i, (hit, alloc)) in flags.iter().enumerate().skip(3) {
+            assert_eq!(flags.len(), 5 * 4, "five transforms per iteration");
+            // Iteration >= 2 (trace index >= 5): plans (band and Hartree)
+            // served from the tuner's cache, zero workspace growth — the
+            // acceptance pin, now covering the Hartree round trip too.
+            for (i, (hit, alloc)) in flags.iter().enumerate().skip(5) {
                 assert!(hit, "p={p} rank {r}: transform {i} executed a re-planned plan");
                 assert_eq!(alloc, &0, "p={p} rank {r}: transform {i} grew its workspace");
             }
@@ -171,10 +174,13 @@ fn wisdom_file_seeds_the_next_life_with_the_scf_probe() {
     // The persisted record: a round-trip (`|rt`) signature carrying the
     // SCF probe kind and a positive measured time.
     let wisdom = Wisdom::load(&path).expect("rank 0 must have written the wisdom file");
-    let sig = wisdom_sig();
+    let sig = wisdom_sig(NB);
     let entry = wisdom.lookup(&sig).unwrap_or_else(|| panic!("no wisdom entry for `{sig}`"));
     assert_eq!(entry.probe, Probe::Scf, "the SCF-shaped probe must be recorded");
     assert!(entry.measured && entry.seconds > 0.0);
+    // The runner's nb = 1 Hartree plan gets its own wisdom identity.
+    let hsig = wisdom_sig(1);
+    assert!(wisdom.lookup(&hsig).is_some(), "no wisdom entry for the Hartree plan `{hsig}`");
 
     // Second life: decision comes straight from the file.
     let path3 = path.clone();
@@ -194,13 +200,13 @@ fn wisdom_file_seeds_the_next_life_with_the_scf_probe() {
     }
 }
 
-/// The round-trip request signature the runner tunes under (kept in sync
-/// with `TuneRequest::signature`).
-fn wisdom_sig() -> String {
+/// The round-trip request signature the runner tunes under for a given
+/// band count (kept in sync with `TuneRequest::signature`).
+fn wisdom_sig(nb: usize) -> String {
     let lat = Lattice::new(A, N, ECUT);
     let off = Arc::clone(&lat.offsets);
     format!(
-        "{N}x{N}x{N}|nb={NB}|p=2|sphere:{}:{:016x}|rt",
+        "{N}x{N}x{N}|nb={nb}|p=2|sphere:{}:{:016x}|rt",
         off.total(),
         off.fingerprint()
     )

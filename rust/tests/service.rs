@@ -356,6 +356,8 @@ fn service_scf_tenants_match_isolated_runs_across_world_sizes() {
                         (s.charge, t.charge, "charge"),
                         (s.delta_rho, t.delta_rho, "delta_rho"),
                         (s.max_residual, t.max_residual, "max_residual"),
+                        (s.energy.total, t.energy.total, "energy.total"),
+                        (s.energy.hartree, t.energy.hartree, "energy.hartree"),
                     ] {
                         assert_eq!(
                             x.to_bits(),

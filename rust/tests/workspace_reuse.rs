@@ -15,11 +15,13 @@
 use std::sync::Arc;
 
 use fftb::fft::complex::max_abs_diff;
+use fftb::fft::dft::Direction;
 use fftb::fftb::backend::RustFftBackend;
 use fftb::fftb::grid::ProcGrid;
 use fftb::fftb::plan::testutil::phased;
 use fftb::fftb::plan::{
-    ExecTrace, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlaneWavePlan, SlabPencilPlan,
+    ExecTrace, Fftb, NonBatchedLoop, PaddedSpherePlan, PencilPlan, PlanKind, PlaneWavePlan,
+    RealPlaneWavePlan, SlabPencilPlan,
 };
 use fftb::fftb::sphere::{SphereKind, SphereSpec};
 
@@ -298,6 +300,147 @@ fn forward_only_noncube_with_recycle_is_allocation_free() {
             }
             plan.recycle(out);
         }
+    });
+}
+
+/// The `execute_into` contract, pinned once per plan kind: results are
+/// bit-identical to the owned-storage `execute` adapter, and in steady
+/// state (workspaces warm, slot pool seeded) *both* entry points report
+/// `alloc_bytes == 0` — including `take_buffer`, the pool-staging half of
+/// the pairing callers use for long-lived output storage.
+fn pin_execute_into_matches_execute(
+    plan: &Fftb,
+    backend: &RustFftBackend,
+    seed: u64,
+    label: &str,
+) {
+    // Warm both directions once through the owned-storage adapter.
+    let inp = phased(plan.input_len(), seed);
+    let (cube, _) = plan.execute(backend, inp.clone(), Direction::Forward);
+    let (back, _) = plan.execute(backend, cube, Direction::Inverse);
+    plan.recycle(back);
+    // Seed one spare buffer per size class so the two entry points can
+    // hold checked-out storage simultaneously without minting.
+    plan.recycle(phased(plan.input_len(), 0));
+    plan.recycle(phased(plan.output_len(), 0));
+
+    let mut fwd_out: Vec<fftb::fft::complex::Complex> = Vec::new();
+    for dir in [Direction::Forward, Direction::Inverse] {
+        let out_len = match dir {
+            Direction::Forward => plan.output_len(),
+            Direction::Inverse => plan.input_len(),
+        };
+        // The inverse leg consumes the forward leg's spectrum so sphere
+        // plans see well-formed coefficients in both directions.
+        let src = if dir == Direction::Forward { inp.clone() } else { fwd_out.clone() };
+
+        let (mut out_b, grew) = plan.take_buffer(out_len);
+        assert_eq!(grew, 0, "{label} {dir:?}: take_buffer minted after warmup");
+        let tr_b = plan.execute_into(backend, &src, &mut out_b, dir);
+        assert_eq!(tr_b.alloc_bytes, 0, "{label} {dir:?}: execute_into allocated");
+
+        let (out_a, tr_a) = plan.execute(backend, src.clone(), dir);
+        assert_eq!(tr_a.alloc_bytes, 0, "{label} {dir:?}: execute allocated");
+
+        assert_eq!(out_a.len(), out_b.len(), "{label} {dir:?}: length mismatch");
+        for (i, (a, b)) in out_a.iter().zip(&out_b).enumerate() {
+            assert_eq!(
+                (a.re.to_bits(), a.im.to_bits()),
+                (b.re.to_bits(), b.im.to_bits()),
+                "{label} {dir:?}: element {i} differs ({a:?} vs {b:?})"
+            );
+        }
+        if dir == Direction::Forward {
+            fwd_out = out_a.clone();
+        }
+        plan.recycle(out_a);
+        plan.recycle(out_b);
+    }
+}
+
+#[test]
+fn execute_into_is_bit_identical_and_allocation_free_on_1d_grid_kinds() {
+    let shape = [8usize, 8, 8];
+    let (nb, p) = (2usize, 2usize);
+    let spec = SphereSpec::new(shape, 3.0, SphereKind::Wrapped);
+    let off = Arc::new(spec.offsets());
+    fftb::comm::run_world(p, move |comm| {
+        let grid = ProcGrid::new(&[p], comm).unwrap();
+        let backend = RustFftBackend::new();
+        let seed = grid.rank() as u64;
+        let kinds: Vec<(Fftb, &str)> = vec![
+            (
+                Fftb {
+                    kind: PlanKind::SlabPencil(
+                        SlabPencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap(),
+                    ),
+                    sizes: shape,
+                    nb,
+                },
+                "slab-pencil",
+            ),
+            (
+                Fftb {
+                    kind: PlanKind::SlabPencilLoop(
+                        NonBatchedLoop::new(shape, nb, Arc::clone(&grid)).unwrap(),
+                    ),
+                    sizes: shape,
+                    nb,
+                },
+                "non-batched loop",
+            ),
+            (
+                Fftb {
+                    kind: PlanKind::PlaneWave(
+                        PlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap(),
+                    ),
+                    sizes: shape,
+                    nb,
+                },
+                "plane-wave",
+            ),
+            (
+                Fftb {
+                    kind: PlanKind::PaddedSphere(
+                        PaddedSpherePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap(),
+                    ),
+                    sizes: shape,
+                    nb,
+                },
+                "padded-sphere",
+            ),
+            (
+                Fftb {
+                    kind: PlanKind::PlaneWaveR2c(
+                        RealPlaneWavePlan::new(Arc::clone(&off), nb, Arc::clone(&grid)).unwrap(),
+                    ),
+                    sizes: shape,
+                    nb,
+                },
+                "plane-wave r2c",
+            ),
+        ];
+        for (plan, label) in &kinds {
+            pin_execute_into_matches_execute(plan, &backend, seed, label);
+        }
+    });
+}
+
+#[test]
+fn execute_into_is_bit_identical_and_allocation_free_on_pencil() {
+    let shape = [8usize, 8, 8];
+    let nb = 2usize;
+    let (p0, p1) = (2usize, 2usize);
+    fftb::comm::run_world(p0 * p1, |comm| {
+        let grid = ProcGrid::new(&[p0, p1], comm).unwrap();
+        let backend = RustFftBackend::new();
+        let seed = grid.rank() as u64;
+        let plan = Fftb {
+            kind: PlanKind::Pencil(PencilPlan::new(shape, nb, Arc::clone(&grid)).unwrap()),
+            sizes: shape,
+            nb,
+        };
+        pin_execute_into_matches_execute(&plan, &backend, seed, "pencil");
     });
 }
 
